@@ -1,0 +1,99 @@
+//! Carbon & monetary cost minimization (paper §6 remark I): the same
+//! schedulers minimize g CO₂e or EUR instead of joules by weighting each
+//! device's energy cost with its grid's carbon intensity / electricity
+//! price.
+//!
+//! The headline effect (after Qiu et al. [12]): energy-optimal and
+//! carbon-optimal schedules *differ* — a slightly less energy-efficient
+//! device on a clean grid can be the carbon-optimal choice.
+//!
+//! Run with: `cargo run --release --example carbon_footprint`
+
+use fedzero::config::Policy;
+use fedzero::energy::carbon;
+use fedzero::energy::power::Behavior;
+use fedzero::energy::profiles::{BehaviorMix, Fleet};
+use fedzero::sched::instance::Instance;
+use fedzero::sched::{auto, validate};
+use fedzero::util::rng::Rng;
+use fedzero::util::table::{fmt_energy, Table};
+
+fn main() -> fedzero::Result<()> {
+    let mut rng = Rng::new(11);
+    let fleet = Fleet::sample(10, BehaviorMix::Homogeneous(Behavior::Linear), &mut rng);
+    let tasks = (fleet.capacity() / 3).max(10);
+
+    // Three cost views over the same fleet.
+    let energy_inst = fleet.instance(tasks, 0)?;
+    let carbon_costs = fleet
+        .devices
+        .iter()
+        .map(|d| carbon::carbon_cost(d.cost_fn(), d.region))
+        .collect::<Vec<_>>();
+    let money_costs = fleet
+        .devices
+        .iter()
+        .map(|d| carbon::monetary_cost(d.cost_fn(), d.region))
+        .collect::<Vec<_>>();
+    let carbon_inst = Instance::new(
+        energy_inst.tasks,
+        energy_inst.lower.clone(),
+        energy_inst.upper.clone(),
+        carbon_costs,
+    )?;
+    let money_inst = Instance::new(
+        energy_inst.tasks,
+        energy_inst.lower.clone(),
+        energy_inst.upper.clone(),
+        money_costs,
+    )?;
+
+    let mut rng2 = Rng::new(0);
+    let sched_energy = auto::solve_with(&energy_inst, Policy::Auto, &mut rng2)?;
+    let sched_carbon = auto::solve_with(&carbon_inst, Policy::Auto, &mut rng2)?;
+    let sched_money = auto::solve_with(&money_inst, Policy::Auto, &mut rng2)?;
+
+    let mut table = Table::new(
+        &format!("workload by optimization target (T = {tasks})"),
+        &["device", "region", "gCO2/kWh", "x_i (energy)", "x_i (carbon)", "x_i (money)"],
+    );
+    for (i, d) in fleet.devices.iter().enumerate() {
+        let (co2, _) = carbon::region(d.region).unwrap();
+        table.rows_str(vec![
+            format!("{} ({})", d.id, d.archetype),
+            d.region.to_string(),
+            format!("{co2:.0}"),
+            sched_energy.get(i).to_string(),
+            sched_carbon.get(i).to_string(),
+            sched_money.get(i).to_string(),
+        ]);
+    }
+    table.print();
+
+    // Cross-evaluate each schedule under each metric.
+    let mut cross = Table::new(
+        "cross-evaluation (rows: schedule optimized for; cols: measured as)",
+        &["schedule", "energy", "carbon gCO2e", "cost EUR"],
+    );
+    for (name, s) in [
+        ("energy-optimal", &sched_energy),
+        ("carbon-optimal", &sched_carbon),
+        ("money-optimal", &sched_money),
+    ] {
+        cross.rows_str(vec![
+            name.to_string(),
+            fmt_energy(validate::total_cost(&energy_inst, s)),
+            format!("{:.3}", validate::total_cost(&carbon_inst, s)),
+            format!("{:.5}", validate::total_cost(&money_inst, s)),
+        ]);
+    }
+    cross.print();
+
+    let e_carbon = validate::total_cost(&carbon_inst, &sched_energy);
+    let c_carbon = validate::total_cost(&carbon_inst, &sched_carbon);
+    println!(
+        "\ncarbon saved by carbon-aware scheduling vs energy-only: {:.1}%",
+        (1.0 - c_carbon / e_carbon) * 100.0
+    );
+    Ok(())
+}

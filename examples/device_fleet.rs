@@ -1,0 +1,61 @@
+//! Fleet inspection: archetype sampling, cost-regime classification, and
+//! limit derivation (battery + data caps → `U_i`).
+//!
+//! Run with: `cargo run --release --example device_fleet`
+
+use fedzero::energy::profiles::{BehaviorMix, Fleet, ARCHETYPES};
+use fedzero::sched::auto;
+use fedzero::sched::costs::classify;
+use fedzero::util::rng::Rng;
+use fedzero::util::table::{fmt_energy, Table};
+
+fn main() -> fedzero::Result<()> {
+    println!("Archetype catalog:\n");
+    let mut cat = Table::new(
+        "archetypes",
+        &["name", "busy W", "s/batch", "data batches", "battery"],
+    );
+    for a in &ARCHETYPES {
+        cat.rows_str(vec![
+            a.name.to_string(),
+            format!("{:.1}–{:.1}", a.busy_w.0, a.busy_w.1),
+            format!("{:.2}–{:.2}", a.batch_latency_s.0, a.batch_latency_s.1),
+            format!("{}–{}", a.data_batches.0, a.data_batches.1),
+            match a.battery_wh {
+                Some((lo, hi)) => format!("{lo:.0}–{hi:.0} Wh"),
+                None => "mains".into(),
+            },
+        ]);
+    }
+    cat.print();
+
+    let mut rng = Rng::new(7);
+    let fleet = Fleet::sample(12, BehaviorMix::Mixed, &mut rng);
+    let mut table = Table::new(
+        "sampled fleet (mixed behaviours)",
+        &["id", "archetype", "behavior", "regime over [0,U]", "U_i", "E(U_i)"],
+    );
+    for d in &fleet.devices {
+        let u = d.upper_limit();
+        let regime = classify(&d.cost_fn(), 0, u.max(2));
+        table.rows_str(vec![
+            d.id.to_string(),
+            d.archetype.to_string(),
+            format!("{:?}", d.power.behavior),
+            format!("{regime:?}"),
+            u.to_string(),
+            fmt_energy(d.power.energy_j(u)),
+        ]);
+    }
+    table.print();
+
+    let tasks = fleet.capacity() / 3;
+    let inst = fleet.instance(tasks, 0)?;
+    let scenario = auto::classify_instance(&inst);
+    println!(
+        "\ninstance: T = {tasks}, combined regime {:?}, upper limits bind: {}",
+        scenario.regime, scenario.has_upper_limits
+    );
+    println!("→ Table 2 dispatch picks: {}", auto::best_algorithm(&scenario));
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! EX-A: total-energy comparison of the paper's optimal schedulers vs
+//! baselines across the three marginal-cost regimes and fleet sizes —
+//! the evaluation the paper's §6 calls for.
+//!
+//! Run with: `cargo run --release --example energy_study`
+
+use fedzero::config::Policy;
+use fedzero::energy::power::Behavior;
+use fedzero::energy::profiles::{BehaviorMix, Fleet};
+use fedzero::sched::{auto, validate};
+use fedzero::util::csv::CsvWriter;
+use fedzero::util::rng::Rng;
+use fedzero::util::stats;
+use fedzero::util::table::Table;
+
+const POLICIES: [Policy; 6] = [
+    Policy::Auto,
+    Policy::Uniform,
+    Policy::Random,
+    Policy::Proportional,
+    Policy::Greedy,
+    Policy::Olar,
+];
+
+fn main() -> fedzero::Result<()> {
+    let regimes = [
+        ("increasing", BehaviorMix::Homogeneous(Behavior::Convex)),
+        ("constant", BehaviorMix::Homogeneous(Behavior::Linear)),
+        ("decreasing", BehaviorMix::Homogeneous(Behavior::Concave)),
+        ("arbitrary", BehaviorMix::Mixed),
+    ];
+    let fleet_sizes = [10usize, 50, 200];
+    let trials = 10u64;
+
+    let mut csv = CsvWriter::new(&[
+        "regime", "n", "policy", "mean_overhead_pct", "max_overhead_pct",
+    ]);
+
+    for (regime_name, mix) in regimes {
+        let mut table = Table::new(
+            &format!("energy overhead vs optimal — {regime_name} marginal costs"),
+            &["n", "policy", "mean +%", "max +%"],
+        );
+        for &n in &fleet_sizes {
+            // overheads[policy][trial]
+            let mut overheads: Vec<Vec<f64>> = vec![Vec::new(); POLICIES.len()];
+            for trial in 0..trials {
+                let mut rng = Rng::new(1000 * trial + n as u64);
+                let fleet = Fleet::sample(n, mix, &mut rng);
+                let tasks = (fleet.capacity() / 3).max(n);
+                let inst = fleet.instance(tasks, 0)?;
+                let opt = validate::total_cost(
+                    &inst,
+                    &auto::solve_with(&inst, Policy::Mc2mkp, &mut rng)?,
+                );
+                for (pi, &p) in POLICIES.iter().enumerate() {
+                    let sched = auto::solve_with(&inst, p, &mut rng)?;
+                    validate::check(&inst, &sched)?;
+                    let cost = validate::total_cost(&inst, &sched);
+                    overheads[pi].push((cost / opt - 1.0) * 100.0);
+                }
+            }
+            for (pi, &p) in POLICIES.iter().enumerate() {
+                let mean = stats::mean(&overheads[pi]);
+                let (_, max) = stats::min_max(&overheads[pi]);
+                table.rows_str(vec![
+                    n.to_string(),
+                    p.to_string(),
+                    format!("{mean:+.2}"),
+                    format!("{max:+.2}"),
+                ]);
+                csv.rowd(&[&regime_name, &n, &p, &mean, &max]);
+            }
+        }
+        table.print();
+        println!();
+    }
+
+    let out = std::path::Path::new("target/energy_study.csv");
+    csv.save(out)?;
+    println!("raw rows written to {}", out.display());
+    println!("Reading the tables: the paper's optimal schedulers (auto) sit at +0%;");
+    println!("baselines pay regime-dependent premiums — largest under decreasing");
+    println!("marginal costs, where spreading work is maximally wasteful.");
+    Ok(())
+}

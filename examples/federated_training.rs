@@ -1,0 +1,112 @@
+//! EX-B — the end-to-end driver: full federated training through all three
+//! layers (Rust coordinator → PJRT → AOT-lowered JAX/Pallas steps),
+//! comparing scheduler policies on loss, energy, and simulated round time.
+//!
+//! Requires artifacts: `make artifacts` first.
+//! Run with: `cargo run --release --example federated_training -- [model] [rounds]`
+//! (defaults: mlp 200; `transformer 60` exercises the LM).
+//!
+//! Results are recorded in EXPERIMENTS.md §EX-B.
+
+use fedzero::config::{Policy, TrainConfig};
+use fedzero::energy::power::Behavior;
+use fedzero::energy::profiles::BehaviorMix;
+use fedzero::fl::Server;
+use fedzero::util::csv::CsvWriter;
+use fedzero::util::table::{fmt_energy, Table};
+
+fn main() -> fedzero::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("mlp").to_string();
+    let rounds: usize = args
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if model == "mlp" { 200 } else { 60 });
+
+    let policies = [Policy::Auto, Policy::Uniform, Policy::Random, Policy::Olar];
+    // Convex energy: sustained load costs devices superlinearly — the
+    // regime where workload placement matters most per joule.
+    let mix = BehaviorMix::Homogeneous(Behavior::Convex);
+
+    let base = TrainConfig {
+        rounds,
+        devices: if model == "mlp" { 40 } else { 12 },
+        tasks_per_round: if model == "mlp" { 256 } else { 48 },
+        model: model.clone(),
+        seed: 17,
+        dirichlet_alpha: 0.5,
+        min_tasks: 0,
+        participation: 0.5,
+        ..TrainConfig::default()
+    };
+
+    println!(
+        "federated training: model={model}, {} devices, T={} mini-batches/round, {rounds} rounds\n",
+        base.devices, base.tasks_per_round
+    );
+
+    let mut summary = Table::new(
+        "end-to-end comparison (same fleet & data seed per policy)",
+        &["policy", "final loss", "total energy", "energy vs auto", "wall s"],
+    );
+    let mut csv = CsvWriter::new(&[
+        "policy", "round", "loss", "energy_j", "sched_time_s", "train_time_s",
+    ]);
+
+    let mut auto_energy = None;
+    for policy in policies {
+        let mut cfg = base.clone();
+        cfg.policy = policy;
+        let wall = std::time::Instant::now();
+        let mut server = Server::new(cfg, mix)?;
+        server.run()?;
+        let wall_s = wall.elapsed().as_secs_f64();
+
+        for row in server.log.rows() {
+            csv.rowd(&[
+                &row.policy,
+                &row.round,
+                &row.loss,
+                &row.energy_j,
+                &row.sched_time_s,
+                &row.train_time_s,
+            ]);
+        }
+        let total = server.log.total_energy();
+        if policy == Policy::Auto {
+            auto_energy = Some(total);
+        }
+        let vs = auto_energy
+            .map(|a| format!("{:+.1}%", (total / a - 1.0) * 100.0))
+            .unwrap_or_else(|| "—".into());
+        summary.rows_str(vec![
+            policy.to_string(),
+            format!("{:.4}", server.log.final_loss().unwrap_or(f64::NAN)),
+            fmt_energy(total),
+            vs,
+            format!("{wall_s:.1}"),
+        ]);
+
+        // Loss curve sketch every ~10% of rounds.
+        println!("policy {policy}: loss curve");
+        let step = (rounds / 10).max(1);
+        for row in server.log.rows().iter().step_by(step) {
+            println!(
+                "  round {:>4}  loss {:.4}  round energy {}",
+                row.round,
+                row.loss,
+                fmt_energy(row.energy_j)
+            );
+        }
+        println!(
+            "  max single-device energy share: {:.1}%\n",
+            server.ledger.max_device_share() * 100.0
+        );
+    }
+
+    summary.print();
+    let out = std::path::Path::new("target/federated_training.csv");
+    csv.save(out)?;
+    println!("\nper-round log written to {}", out.display());
+    Ok(())
+}

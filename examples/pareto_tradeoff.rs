@@ -1,0 +1,66 @@
+//! Energy/time Pareto front (cf. Khaleghzadeh et al. [28], which the paper
+//! cites as the bi-objective alternative): energy-minimal schedules subject
+//! to round-deadline (makespan) constraints, via ε-constraint solves of the
+//! Minimal Cost FL Schedule problem.
+//!
+//! Run with: `cargo run --release --example pareto_tradeoff`
+
+use fedzero::energy::power::Behavior;
+use fedzero::energy::profiles::{BehaviorMix, Fleet};
+use fedzero::sched::costs::CostFn;
+use fedzero::sched::pareto::BiInstance;
+use fedzero::util::rng::Rng;
+use fedzero::util::table::{fmt_duration, fmt_energy, Table};
+
+fn main() -> fedzero::Result<()> {
+    let mut rng = Rng::new(23);
+    let fleet = Fleet::sample(8, BehaviorMix::Homogeneous(Behavior::Linear), &mut rng);
+    let tasks = (fleet.capacity() / 4).max(8);
+
+    let energy = fleet.instance(tasks, 0)?;
+    let time: Vec<CostFn> = fleet
+        .devices
+        .iter()
+        .map(|d| CostFn::Affine { fixed: 0.0, per_task: d.power.batch_latency_s })
+        .collect();
+    let bi = BiInstance { energy, time };
+
+    let front = bi.pareto_front()?;
+    let mut table = Table::new(
+        &format!(
+            "energy/makespan Pareto front — n={}, T={tasks} ({} points, sampled)",
+            fleet.len(),
+            front.len()
+        ),
+        &["point", "deadline (makespan)", "energy", "schedule"],
+    );
+    let step = (front.len() / 14).max(1);
+    for (i, p) in front.iter().enumerate() {
+        if i % step != 0 && i != front.len() - 1 {
+            continue;
+        }
+        table.rows_str(vec![
+            i.to_string(),
+            fmt_duration(p.makespan),
+            fmt_energy(p.energy),
+            p.schedule.to_string(),
+        ]);
+    }
+    table.print();
+
+    if front.len() >= 2 {
+        let fast = &front[0];
+        let frugal = front.last().unwrap();
+        println!(
+            "\ntightest deadline costs {:.1}% more energy than the unconstrained optimum;",
+            (fast.energy / frugal.energy - 1.0) * 100.0
+        );
+        println!(
+            "relaxing the deadline {:.1}× buys that energy back ({} → {}).",
+            frugal.makespan / fast.makespan,
+            fmt_energy(fast.energy),
+            fmt_energy(frugal.energy)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: the paper's worked example (§3.1, Figs. 1–2) plus a
+//! synthetic fleet, solved with every scheduler.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use fedzero::config::Policy;
+use fedzero::energy::power::Behavior;
+use fedzero::energy::profiles::{BehaviorMix, Fleet};
+use fedzero::sched::instance::Instance;
+use fedzero::sched::{auto, validate};
+use fedzero::util::rng::Rng;
+use fedzero::util::table::{fmt_energy, Table};
+
+fn main() -> fedzero::Result<()> {
+    // ---- Part 1: the paper's own example --------------------------------
+    println!("Minimal Cost FL Schedule — paper §3.1 worked example\n");
+    for (tasks, expect) in [(5usize, "{2, 3, 0} (Fig. 1)"), (8, "{1, 2, 5} (Fig. 2)")] {
+        let inst = Instance::paper_example(tasks);
+        let sched = auto::solve_auto(&inst)?;
+        let cost = validate::checked_cost(&inst, &sched)?;
+        println!("T = {tasks}: X* = {sched}   ΣC = {cost}   — paper: {expect}");
+    }
+    println!();
+
+    // ---- Part 2: a synthetic heterogeneous fleet ------------------------
+    let mut rng = Rng::new(42);
+    let fleet = Fleet::sample(8, BehaviorMix::Homogeneous(Behavior::Convex), &mut rng);
+    let tasks = 200.min(fleet.capacity());
+    let inst = fleet.instance(tasks, 1)?;
+    println!("Synthetic fleet: n = {}, T = {tasks}, lower limit 1/device\n", fleet.len());
+
+    let policies = [
+        Policy::Auto,
+        Policy::Mc2mkp,
+        Policy::MarIn,
+        Policy::Uniform,
+        Policy::Random,
+        Policy::Proportional,
+        Policy::Greedy,
+        Policy::Olar,
+    ];
+    let mut table = Table::new(
+        "scheduler comparison (convex energy, lower is better)",
+        &["policy", "schedule", "total energy", "vs optimal"],
+    );
+    let optimal = validate::total_cost(&inst, &auto::solve_with(&inst, Policy::Mc2mkp, &mut rng)?);
+    for p in policies {
+        let sched = auto::solve_with(&inst, p, &mut rng)?;
+        validate::check(&inst, &sched)?;
+        let cost = validate::total_cost(&inst, &sched);
+        table.rows_str(vec![
+            p.to_string(),
+            sched.to_string(),
+            fmt_energy(cost),
+            format!("{:+.1}%", (cost / optimal - 1.0) * 100.0),
+        ]);
+    }
+    table.print();
+    println!("\nThe paper's optimal algorithms (auto/mc2mkp/marin) coincide at the");
+    println!("minimum; baselines pay an energy premium.");
+    Ok(())
+}

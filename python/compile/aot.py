@@ -1,0 +1,162 @@
+"""AOT pipeline: lower the Layer-2 train/eval steps to HLO **text** and
+write the artifact manifest consumed by the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs under ``--out-dir`` (default ``artifacts/``):
+
+* ``<model>_train.hlo.txt`` / ``<model>_eval.hlo.txt`` — lowered steps;
+* ``<model>_params.bin`` — initial parameters, raw little-endian f32,
+  concatenated in flat order;
+* ``manifest.json`` — shapes, dtypes, batch geometry, hyper-parameters.
+
+Python runs only here, at build time (``make artifacts``); the Rust binary
+is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_dtype(arr):
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+def build_mlp(seed: int):
+    """Specs for the MLP model: (params, x_spec, y_spec, meta)."""
+    spec = M.MLP_SPEC
+    params = M.mlp_init(jax.random.PRNGKey(seed))
+    x = jax.ShapeDtypeStruct((spec["batch"], spec["in_dim"]), jnp.float32)
+    y = jax.ShapeDtypeStruct((spec["batch"],), jnp.int32)
+    meta = {
+        "family": "mlp",
+        "batch": spec["batch"],
+        "lr": spec["lr"],
+        "input_shape": [spec["batch"], spec["in_dim"]],
+        "input_dtype": "f32",
+        "label_shape": [spec["batch"]],
+        "label_dtype": "s32",
+        "classes": spec["classes"],
+    }
+    return params, x, y, M.mlp_train_step, M.mlp_loss, meta
+
+
+def build_transformer(seed: int):
+    """Specs for the transformer LM."""
+    spec = M.TFM_SPEC
+    params = M.tfm_init(jax.random.PRNGKey(seed))
+    x = jax.ShapeDtypeStruct((spec["batch"], spec["seq"]), jnp.int32)
+    y = jax.ShapeDtypeStruct((spec["batch"], spec["seq"]), jnp.int32)
+    meta = {
+        "family": "transformer",
+        "batch": spec["batch"],
+        "seq": spec["seq"],
+        "lr": spec["lr"],
+        "input_shape": [spec["batch"], spec["seq"]],
+        "input_dtype": "s32",
+        "label_shape": [spec["batch"], spec["seq"]],
+        "label_dtype": "s32",
+        "vocab": spec["vocab"],
+    }
+    return params, x, y, M.tfm_train_step, M.tfm_loss, meta
+
+
+BUILDERS = {"mlp": build_mlp, "transformer": build_transformer}
+
+
+def lower_model(name: str, out_dir: str, seed: int) -> dict:
+    """Lower one model family; returns its manifest entry."""
+    params, x_spec, y_spec, train_step, loss_fn, meta = BUILDERS[name](seed)
+    n_params = len(params)
+    param_specs = [_shape_dtype(p) for p in params]
+
+    train_flat = M.flat_train_step(train_step, n_params)
+    eval_flat = M.flat_eval_step(loss_fn, n_params)
+
+    train_lowered = jax.jit(train_flat).lower(*param_specs, x_spec, y_spec)
+    eval_lowered = jax.jit(eval_flat).lower(*param_specs, x_spec, y_spec)
+
+    train_path = f"{name}_train.hlo.txt"
+    eval_path = f"{name}_eval.hlo.txt"
+    params_path = f"{name}_params.bin"
+
+    with open(os.path.join(out_dir, train_path), "w") as f:
+        f.write(to_hlo_text(train_lowered))
+    with open(os.path.join(out_dir, eval_path), "w") as f:
+        f.write(to_hlo_text(eval_lowered))
+
+    flat = np.concatenate(
+        [np.asarray(p, dtype=np.float32).reshape(-1) for p in params]
+    )
+    raw = flat.astype("<f4").tobytes()
+    with open(os.path.join(out_dir, params_path), "wb") as f:
+        f.write(raw)
+
+    entry = dict(meta)
+    entry.update(
+        {
+            "train_hlo": train_path,
+            "eval_hlo": eval_path,
+            "params_file": params_path,
+            "params_sha256": hashlib.sha256(raw).hexdigest(),
+            "param_shapes": [list(p.shape) for p in params],
+            "param_count": int(flat.size),
+            "n_param_tensors": n_params,
+        }
+    )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--models", default="mlp,transformer",
+                    help="comma-separated model families")
+    ap.add_argument("--seed", type=int, default=0, help="init PRNG seed")
+    # legacy alias used by the original Makefile scaffold
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "models": {}}
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        print(f"[aot] lowering {name} ...", flush=True)
+        manifest["models"][name] = lower_model(name, out_dir, args.seed)
+        print(f"[aot] {name}: {manifest['models'][name]['param_count']} params",
+              flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote manifest to {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

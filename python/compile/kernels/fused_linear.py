@@ -1,0 +1,178 @@
+"""Layer-1 Pallas kernels: tiled fused linear (matmul + bias + activation).
+
+This is the training hot-spot of the FL client's local step. The kernel is
+written TPU-style:
+
+* the grid tiles the output into ``(block_m, block_n)`` VMEM blocks
+  (MXU-native tiles are 128x128; see DESIGN.md §Hardware-Adaptation);
+* the contraction (K) dimension stays resident per tile — for the model
+  sizes used here (K <= 512) a full K-slab fits VMEM comfortably
+  (`block_m*K + K*block_n + block_m*block_n` floats ≈ 0.4 MiB at 128³);
+* matmuls use ``preferred_element_type=float32`` so the MXU accumulates in
+  f32 regardless of input precision.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode (which lowers to plain HLO) is the
+correctness path; real-TPU efficiency is estimated from the block shapes in
+DESIGN.md §Perf.
+
+The backward pass is implemented with the same tiled matmul kernel via
+``jax.custom_vjp`` (dx = g·Wᵀ, dW = xᵀ·g, db = Σg), so the *entire*
+linear-layer fwd+bwd runs through Pallas.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile. Shapes smaller than a tile use the full dim.
+BLOCK = 512
+
+
+def _choose_block(dim: int, block: int) -> int:
+    """Largest tile <= `block` that divides `dim` (tiles must tile exactly;
+    interpret mode would mask, but uniform tiles keep the TPU mapping
+    honest)."""
+    if dim <= block:
+        return dim
+    b = block
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile: full-K contraction."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x: jax.Array, y: jax.Array, *, block_m: int = BLOCK,
+           block_n: int = BLOCK) -> jax.Array:
+    """Tiled Pallas matmul ``x @ y`` for 2-D f32 operands."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _choose_block(m, block_m)
+    bn = _choose_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    """One (bm, bn) output tile of act(x @ w + b)."""
+    z = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z = z + b_ref[...]
+    if act == "relu":
+        z = jnp.maximum(z, 0.0)
+    elif act == "gelu":
+        z = jax.nn.gelu(z)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    o_ref[...] = z
+
+
+def _fused_linear_fwd_impl(x, w, b, act: str, block_m: int, block_n: int):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    assert b.shape == (n,)
+    bm = _choose_block(m, block_m)
+    bn = _choose_block(n, block_n)
+    grid = (m // bm, n // bn)
+    b2 = b.reshape(1, n)
+    return pl.pallas_call(
+        functools.partial(_fused_linear_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b2)
+
+
+def _fused_linear_gelu_z_kernel(x_ref, w_ref, b_ref, o_ref, z_ref):
+    """gelu tile that also emits the pre-activation z (saved for the VJP —
+    avoids recomputing x@w in the backward pass; see EXPERIMENTS.md §Perf)."""
+    z = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z = z + b_ref[...]
+    z_ref[...] = z
+    o_ref[...] = jax.nn.gelu(z)
+
+
+def _fused_linear_fwd_with_residual(x, w, b, act, block_m, block_n):
+    """Forward returning (out, residual-for-bwd)."""
+    m, k = x.shape
+    _, n = w.shape
+    if act != "gelu":
+        out = _fused_linear_fwd_impl(x, w, b, act, block_m, block_n)
+        # relu: out > 0 ⟺ z > 0; none: no mask needed.
+        return out, out
+    bm = _choose_block(m, block_m)
+    bn = _choose_block(n, block_n)
+    grid = (m // bm, n // bn)
+    out, z = pl.pallas_call(
+        _fused_linear_gelu_z_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, b.reshape(1, n))
+    return out, z
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def fused_linear(x, w, b, act: str = "relu", block_m: int = BLOCK,
+                 block_n: int = BLOCK):
+    """``act(x @ w + b)`` as a fused Pallas kernel with a Pallas backward."""
+    return _fused_linear_fwd_impl(x, w, b, act, block_m, block_n)
+
+
+def _fused_linear_fwd(x, w, b, act, block_m, block_n):
+    out, residual = _fused_linear_fwd_with_residual(x, w, b, act, block_m, block_n)
+    return out, (x, w, residual)
+
+
+def _fused_linear_bwd(act, block_m, block_n, res, g):
+    x, w, residual = res
+    if act == "relu":
+        g = g * (residual > 0.0).astype(g.dtype)   # residual = out
+    elif act == "gelu":
+        # residual = z (pre-activation), saved by the forward kernel.
+        g = g * jax.grad(lambda t: jnp.sum(jax.nn.gelu(t)))(residual)
+    # dx = g @ w^T ; dw = x^T @ g ; db = sum_m g — all through Pallas.
+    dx = matmul(g, w.T, block_m=block_m, block_n=block_n)
+    dw = matmul(x.T, g, block_m=block_m, block_n=block_n)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

@@ -1,0 +1,228 @@
+"""Layer-2: the FL client's local training step, in JAX, calling the
+Layer-1 Pallas kernels.
+
+Two model families are provided (both used by the end-to-end experiments):
+
+* **MLP** — a 3-layer classifier for the synthetic gaussian-mixture
+  workload. Every dense layer is a Pallas ``fused_linear`` (fwd *and* bwd),
+  and the loss is the Pallas ``softmax_xent``.
+* **Transformer** — a tiny byte-level causal LM (2 blocks, d=128, 4 heads):
+  all projections (QKV, output, MLP up/down, LM head) run through
+  ``fused_linear``; attention softmax and layernorm are plain jnp (the
+  dense layers dominate FLOPs).
+
+Each family exposes ``init(key)``, ``loss(params, x, y)`` and a
+``train_step(params, x, y) -> (new_params, loss)`` performing one SGD
+update. ``aot.py`` lowers flattened versions of these to HLO text; the
+Rust runtime then executes them per mini-batch — the schedule `x_i` decides
+*how many times* per round each simulated device runs the step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fused_linear import fused_linear
+from compile.kernels.softmax_xent import softmax_xent
+
+# ---------------------------------------------------------------------------
+# MLP classifier
+# ---------------------------------------------------------------------------
+
+MLP_SPEC = {
+    "in_dim": 32,
+    "hidden": 128,
+    "classes": 10,
+    "batch": 32,
+    "lr": 0.05,
+}
+
+
+def mlp_init(key, spec=None):
+    """He-initialized parameter list [w1, b1, w2, b2, w3, b3]."""
+    spec = spec or MLP_SPEC
+    d_in, h, c = spec["in_dim"], spec["hidden"], spec["classes"]
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def he(k, fan_in, shape):
+        return jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    return [
+        he(k1, d_in, (d_in, h)), jnp.zeros((h,), jnp.float32),
+        he(k2, h, (h, h)), jnp.zeros((h,), jnp.float32),
+        he(k3, h, (h, c)), jnp.zeros((c,), jnp.float32),
+    ]
+
+
+def mlp_logits(params, x):
+    """Forward pass through the three Pallas fused layers."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = fused_linear(x, w1, b1, "relu")
+    h2 = fused_linear(h1, w2, b2, "relu")
+    return fused_linear(h2, w3, b3, "none")
+
+
+def mlp_loss(params, x, y):
+    """Mean cross-entropy on one mini-batch."""
+    return softmax_xent(mlp_logits(params, x), y)
+
+
+def mlp_train_step(params, x, y, lr=None):
+    """One SGD step; returns (new_params, loss)."""
+    lr = MLP_SPEC["lr"] if lr is None else lr
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, y)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return new_params, loss
+
+
+# ---------------------------------------------------------------------------
+# Tiny byte-level transformer LM
+# ---------------------------------------------------------------------------
+
+TFM_SPEC = {
+    "vocab": 256,
+    "d_model": 128,
+    "n_head": 4,
+    "n_layer": 2,
+    "seq": 64,
+    "batch": 8,
+    "lr": 0.1,
+}
+
+
+def tfm_init(key, spec=None):
+    """Flat parameter list:
+    [embed, pos, (12 per block)×n_layer, lnf_g, lnf_b, w_head, b_head]."""
+    spec = spec or TFM_SPEC
+    v, d, n_layer, s = spec["vocab"], spec["d_model"], spec["n_layer"], spec["seq"]
+    keys = iter(jax.random.split(key, 4 + 4 * n_layer))
+
+    def norm(k, shape, scale):
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    params = [
+        norm(next(keys), (v, d), 0.02),          # embed
+        norm(next(keys), (s, d), 0.02),          # pos
+    ]
+    for _ in range(n_layer):
+        params += [
+            jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32),   # ln1
+            norm(next(keys), (d, 3 * d), (2.0 / d) ** 0.5),
+            jnp.zeros((3 * d,), jnp.float32),
+            norm(next(keys), (d, d), (2.0 / d) ** 0.5),
+            jnp.zeros((d,), jnp.float32),
+            jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32),   # ln2
+            norm(next(keys), (d, 4 * d), (2.0 / d) ** 0.5),
+            jnp.zeros((4 * d,), jnp.float32),
+            norm(next(keys), (4 * d, d), (2.0 / (4 * d)) ** 0.5),
+            jnp.zeros((d,), jnp.float32),
+        ]
+    params += [
+        jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32),       # lnf
+        norm(next(keys), (d, v), (2.0 / d) ** 0.5),
+        jnp.zeros((v,), jnp.float32),
+    ]
+    return params
+
+
+def tfm_param_count(spec=None):
+    """Number of parameter tensors in the flat list."""
+    spec = spec or TFM_SPEC
+    return 2 + 12 * spec["n_layer"] + 4
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x2d, w_qkv, b_qkv, w_o, b_o, batch, seq, n_head):
+    """Causal multi-head self-attention; projections via Pallas."""
+    d = x2d.shape[-1]
+    dh = d // n_head
+    qkv = fused_linear(x2d, w_qkv, b_qkv, "none")          # (B*S, 3D)
+    qkv = qkv.reshape(batch, seq, 3, n_head, dh)
+    q = qkv[:, :, 0].transpose(0, 2, 1, 3)                 # (B, H, S, dh)
+    k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+    v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((seq, seq), jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)          # (B, H, S, dh)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(batch * seq, d)
+    return fused_linear(ctx, w_o, b_o, "none")
+
+
+def tfm_logits(params, tokens, spec=None):
+    """Next-token logits, shape (B*S, vocab)."""
+    spec = spec or TFM_SPEC
+    d, n_head, n_layer = spec["d_model"], spec["n_head"], spec["n_layer"]
+    batch, seq = tokens.shape
+    embed, pos = params[0], params[1]
+    h = jnp.take(embed, tokens, axis=0) + pos[None, :seq]  # (B, S, D)
+    h = h.reshape(batch * seq, d)
+    idx = 2
+    for _ in range(n_layer):
+        (ln1_g, ln1_b, w_qkv, b_qkv, w_o, b_o,
+         ln2_g, ln2_b, w_up, b_up, w_down, b_down) = params[idx:idx + 12]
+        idx += 12
+        a = _attention(_layernorm(h, ln1_g, ln1_b), w_qkv, b_qkv, w_o, b_o,
+                       batch, seq, n_head)
+        h = h + a
+        m = fused_linear(_layernorm(h, ln2_g, ln2_b), w_up, b_up, "gelu")
+        m = fused_linear(m, w_down, b_down, "none")
+        h = h + m
+    lnf_g, lnf_b, w_head, b_head = params[idx:idx + 4]
+    h = _layernorm(h, lnf_g, lnf_b)
+    return fused_linear(h, w_head, b_head, "none")         # (B*S, V)
+
+
+def tfm_loss(params, tokens, targets, spec=None):
+    """Mean next-token cross-entropy."""
+    logits = tfm_logits(params, tokens, spec)
+    return softmax_xent(logits, targets.reshape(-1))
+
+
+def tfm_train_step(params, tokens, targets, lr=None, spec=None):
+    """One SGD step; returns (new_params, loss)."""
+    spec = spec or TFM_SPEC
+    lr = spec["lr"] if lr is None else lr
+    loss, grads = jax.value_and_grad(tfm_loss)(params, tokens, targets, spec)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return new_params, loss
+
+
+# ---------------------------------------------------------------------------
+# Flat entry points for AOT lowering (positional tensors only)
+# ---------------------------------------------------------------------------
+
+def flat_train_step(train_step, n_params):
+    """Wrap a (params, x, y) train step as f(*tensors) -> tuple of tensors.
+
+    The lowered computation's calling convention (used by the Rust runtime):
+    inputs are ``params[0..n_params), x, y``; outputs are
+    ``new_params[0..n_params), loss``.
+    """
+
+    @functools.wraps(train_step)
+    def wrapped(*args):
+        params = list(args[:n_params])
+        x, y = args[n_params], args[n_params + 1]
+        new_params, loss = train_step(params, x, y)
+        return tuple(new_params) + (loss,)
+
+    return wrapped
+
+
+def flat_eval_step(loss_fn, n_params):
+    """Wrap a (params, x, y) loss as f(*tensors) -> (loss,)."""
+
+    def wrapped(*args):
+        params = list(args[:n_params])
+        x, y = args[n_params], args[n_params + 1]
+        return (loss_fn(params, x, y),)
+
+    return wrapped

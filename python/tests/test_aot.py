@@ -1,0 +1,87 @@
+"""AOT pipeline checks: manifest consistency, HLO text validity markers,
+parameter dump integrity."""
+
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    """Lower the (fast) MLP model into a temp dir once per module."""
+    with tempfile.TemporaryDirectory() as d:
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", d,
+             "--models", "mlp", "--seed", "3"],
+            cwd=os.path.join(REPO, "python"),
+            check=True,
+            capture_output=True,
+        )
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        files = {
+            name: open(os.path.join(d, name), "rb").read()
+            for name in os.listdir(d)
+        }
+        yield manifest, files
+
+
+def test_manifest_structure(artifacts):
+    manifest, _ = artifacts
+    assert manifest["version"] == 1
+    m = manifest["models"]["mlp"]
+    for key in ["train_hlo", "eval_hlo", "params_file", "param_shapes",
+                "param_count", "n_param_tensors", "batch", "lr",
+                "input_shape", "label_shape", "params_sha256"]:
+        assert key in m, key
+    assert m["n_param_tensors"] == len(m["param_shapes"])
+
+
+def test_param_dump_matches_shapes(artifacts):
+    manifest, files = artifacts
+    m = manifest["models"]["mlp"]
+    raw = files[m["params_file"]]
+    flat = np.frombuffer(raw, dtype="<f4")
+    expected = sum(int(np.prod(s)) for s in m["param_shapes"])
+    assert flat.size == expected == m["param_count"]
+    assert np.all(np.isfinite(flat))
+    assert hashlib.sha256(raw).hexdigest() == m["params_sha256"]
+
+
+def test_hlo_text_is_parseable_shape(artifacts):
+    manifest, files = artifacts
+    m = manifest["models"]["mlp"]
+    train = files[m["train_hlo"]].decode()
+    # HLO text structural markers the Rust-side parser relies on.
+    assert train.startswith("HloModule")
+    assert "ENTRY" in train
+    assert "parameter(0)" in train
+    # 6 params + x + y = 8 inputs
+    assert "parameter(7)" in train
+    ev = files[m["eval_hlo"]].decode()
+    assert ev.startswith("HloModule")
+    assert len(ev) < len(train)  # eval (no backward) is smaller
+
+
+def test_deterministic_given_seed(artifacts):
+    manifest, _ = artifacts
+    with tempfile.TemporaryDirectory() as d2:
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", d2,
+             "--models", "mlp", "--seed", "3"],
+            cwd=os.path.join(REPO, "python"),
+            check=True,
+            capture_output=True,
+        )
+        with open(os.path.join(d2, "manifest.json")) as f:
+            manifest2 = json.load(f)
+    assert (manifest["models"]["mlp"]["params_sha256"]
+            == manifest2["models"]["mlp"]["params_sha256"])

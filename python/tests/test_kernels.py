@@ -1,0 +1,160 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes and contents of the Pallas kernels against the
+pure-jnp references in ``compile.kernels.ref``; gradients are checked
+against ``jax.grad`` of the references.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import fused_linear, matmul, _choose_block
+from compile.kernels.softmax_xent import softmax_xent
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16, 32, 64, 128, 130, 256])
+SMALL_DIMS = st.sampled_from([1, 2, 4, 8, 16, 32])
+ACTS = st.sampled_from(["relu", "gelu", "none"])
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=SMALL_DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rand(seed, (m, k))
+    y = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_large_aligned():
+    x = rand(0, (256, 128))
+    y = rand(1, (128, 384))
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_choose_block_divides():
+    for dim in [1, 7, 32, 128, 130, 384, 1000]:
+        b = _choose_block(dim, 128)
+        assert dim % b == 0
+        assert 1 <= b <= 128
+
+
+# ---------------------------------------------------------------------------
+# fused_linear forward
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=SMALL_DIMS, n=DIMS, act=ACTS, seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_matches_ref(m, k, n, act, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    b = rand(seed + 2, (n,))
+    np.testing.assert_allclose(
+        fused_linear(x, w, b, act),
+        ref.fused_linear_ref(x, w, b, act),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_fused_linear_under_jit():
+    x, w, b = rand(0, (32, 16)), rand(1, (16, 64)), rand(2, (64,))
+    out = jax.jit(lambda a, c, d: fused_linear(a, c, d, "relu"))(x, w, b)
+    np.testing.assert_allclose(
+        out, ref.fused_linear_ref(x, w, b, "relu"), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_fused_linear_rejects_unknown_act():
+    x, w, b = rand(0, (4, 4)), rand(1, (4, 4)), rand(2, (4,))
+    with pytest.raises(ValueError):
+        fused_linear(x, w, b, "swish")
+
+
+# ---------------------------------------------------------------------------
+# fused_linear backward (custom VJP through Pallas)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS, act=ACTS,
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_grads_match_ref(m, k, n, act, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    b = rand(seed + 2, (n,))
+
+    def f_kernel(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, act) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.fused_linear_ref(x, w, b, act) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gk, gr):
+        np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(rows=DIMS, classes=st.sampled_from([2, 5, 10, 17, 256]),
+       seed=st.integers(0, 2**31 - 1))
+def test_softmax_xent_matches_ref(rows, classes, seed):
+    logits = rand(seed, (rows, classes), scale=3.0)
+    labels = jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (rows,), 0, classes, jnp.int32
+    )
+    np.testing.assert_allclose(
+        softmax_xent(logits, labels),
+        ref.softmax_xent_ref(logits, labels),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=SMALL_DIMS, classes=st.sampled_from([2, 5, 10]),
+       seed=st.integers(0, 2**31 - 1))
+def test_softmax_xent_grad_matches_ref(rows, classes, seed):
+    logits = rand(seed, (rows, classes), scale=3.0)
+    labels = jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (rows,), 0, classes, jnp.int32
+    )
+    gk = jax.grad(lambda z: softmax_xent(z, labels))(logits)
+    gr = jax.grad(lambda z: ref.softmax_xent_ref(z, labels))(logits)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-6)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    logits = jnp.array([[1e4, -1e4], [-1e4, 1e4]], jnp.float32)
+    labels = jnp.array([0, 1], jnp.int32)
+    loss = softmax_xent(logits, labels)
+    assert jnp.isfinite(loss)
+    assert float(loss) < 1e-3
+
+
+def test_softmax_xent_uniform_logits():
+    logits = jnp.zeros((8, 10), jnp.float32)
+    labels = jnp.arange(8, dtype=jnp.int32) % 10
+    np.testing.assert_allclose(
+        softmax_xent(logits, labels), np.log(10.0), rtol=1e-6
+    )

@@ -1,0 +1,83 @@
+//! Shared instance generators for the benchmark suite.
+
+use fedzero::sched::costs::CostFn;
+use fedzero::sched::instance::Instance;
+use fedzero::util::rng::Rng;
+
+/// Scenario shapes matching the paper's Table 2 rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Noisy tabulated costs (only the DP is optimal).
+    Arbitrary,
+    /// Quadratic costs (MarIn's scenario).
+    Increasing,
+    /// Affine costs (MarCo's scenario).
+    Constant,
+    /// Concave costs, no effective upper limits (MarDecUn's scenario).
+    DecreasingUnlimited,
+    /// Concave costs with binding upper limits (MarDec's scenario).
+    DecreasingLimited,
+}
+
+/// Generate a valid instance of the given scenario with exactly `n`
+/// resources and workload `t`.
+pub fn generate(scenario: Scenario, n: usize, t: usize, rng: &mut Rng) -> Instance {
+    let costs: Vec<CostFn> = (0..n)
+        .map(|_| match scenario {
+            Scenario::Arbitrary => {
+                // Tabulated noisy costs over the full domain [0, t].
+                let base = rng.range_f64(0.5, 3.0);
+                let mut values = Vec::with_capacity(t + 1);
+                values.push(0.0);
+                for j in 1..=t {
+                    values.push(base * j as f64 * rng.lognormal(0.0, 0.25));
+                }
+                CostFn::Tabulated { first: 0, values }
+            }
+            Scenario::Increasing => CostFn::Quadratic {
+                fixed: rng.range_f64(0.0, 1.0),
+                a: rng.range_f64(0.005, 0.1),
+                b: rng.range_f64(0.5, 3.0),
+            },
+            Scenario::Constant => CostFn::Affine {
+                fixed: rng.range_f64(0.0, 1.0),
+                per_task: rng.range_f64(0.5, 3.0),
+            },
+            Scenario::DecreasingUnlimited | Scenario::DecreasingLimited => {
+                CostFn::PowerLaw {
+                    fixed: 0.0,
+                    scale: rng.range_f64(0.5, 3.0),
+                    exponent: rng.range_f64(0.3, 0.9),
+                }
+            }
+        })
+        .collect();
+
+    let upper: Vec<usize> = match scenario {
+        // Unlimited domains: every class spans [0, T], so the DP's
+        // Σ|N_i| = n(T+1) and the full O(T²n) shape is visible.
+        Scenario::DecreasingUnlimited | Scenario::Arbitrary => vec![t; n],
+        Scenario::DecreasingLimited | Scenario::Increasing | Scenario::Constant => {
+            // Binding limits averaging ~3T/n so ΣU ≈ 3T > T.
+            let avg = (3 * t / n).max(2);
+            (0..n)
+                .map(|_| rng.range_u64((avg / 2).max(1) as u64, (2 * avg) as u64) as usize)
+                .collect()
+        }
+    };
+    // Clamp tabulated domains to the cap (tabulated costs were built over
+    // [0, t] so any cap works).
+    let lower = vec![0; n];
+    let mut upper = upper;
+    // Guarantee feasibility.
+    loop {
+        let cap: usize = upper.iter().map(|&u| u.min(t)).sum();
+        if cap >= t {
+            break;
+        }
+        for u in upper.iter_mut() {
+            *u += (t / n).max(1);
+        }
+    }
+    Instance::new(t, lower, upper, costs).expect("generated instance valid")
+}

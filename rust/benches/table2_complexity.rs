@@ -1,0 +1,150 @@
+//! TAB2 — empirical reproduction of the paper's Table 2 ("solutions with
+//! the smallest complexity for the variations of our scheduling problem").
+//!
+//! For each scenario row we sweep the workload size `T` (at fixed `n`) and
+//! the resource count `n` (at fixed `T`), time the designated algorithm,
+//! and fit log-log slopes. Expected exponents:
+//!
+//! | algorithm | claimed            | slope vs T | slope vs n |
+//! |-----------|--------------------|-----------:|-----------:|
+//! | (MC)²MKP  | O(T² n)            |        ~2  |        ~1  |
+//! | MarIn     | Θ(n + T log n)     |        ~1  |       <~1  |
+//! | MarCo     | Θ(n log n)         |        ~0  |        ~1  |
+//! | MarDecUn  | Θ(n)               |        ~0  |        ~1  |
+//! | MarDec    | O(T n²)            |        ~1  |        ~2  |
+//!
+//! (Slopes are asymptotic; small sizes flatten them — the fit quality r²
+//! is printed so degenerate fits are visible.)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{generate, Scenario};
+use fedzero::benchkit::{bench, BenchConfig};
+use fedzero::config::Policy;
+use fedzero::sched::auto;
+use fedzero::util::rng::Rng;
+use fedzero::util::stats;
+use fedzero::util::table::{fmt_duration, Table};
+
+struct Row {
+    algo: Policy,
+    scenario: Scenario,
+    claimed: &'static str,
+    t_sweep: Vec<usize>,
+    n_sweep: Vec<usize>,
+    fixed_n: usize,
+    fixed_t: usize,
+}
+
+fn time_solve(algo: Policy, scenario: Scenario, n: usize, t: usize, cfg: &BenchConfig) -> f64 {
+    let mut rng = Rng::new((n * 1_000_003 + t) as u64);
+    let inst = generate(scenario, n, t, &mut rng);
+    let mut solve_rng = Rng::new(7);
+    let m = bench("solve", cfg, || {
+        auto::solve_with(&inst, algo, &mut solve_rng).unwrap()
+    });
+    m.median()
+}
+
+fn main() {
+    let rows = vec![
+        Row {
+            algo: Policy::Mc2mkp,
+            scenario: Scenario::Arbitrary,
+            claimed: "O(T^2 n)",
+            t_sweep: vec![128, 256, 512, 1024, 2048],
+            n_sweep: vec![4, 8, 16, 32, 64],
+            fixed_n: 8,
+            fixed_t: 512,
+        },
+        Row {
+            algo: Policy::MarIn,
+            scenario: Scenario::Increasing,
+            claimed: "Th(n + T log n)",
+            t_sweep: vec![1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18],
+            n_sweep: vec![16, 64, 256, 1024, 4096],
+            fixed_n: 64,
+            fixed_t: 1 << 14,
+        },
+        Row {
+            algo: Policy::MarCo,
+            scenario: Scenario::Constant,
+            claimed: "Th(n log n)",
+            t_sweep: vec![1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18],
+            n_sweep: vec![1 << 8, 1 << 10, 1 << 12, 1 << 14, 1 << 16],
+            fixed_n: 1 << 12,
+            fixed_t: 1 << 14,
+        },
+        Row {
+            algo: Policy::MarDecUn,
+            scenario: Scenario::DecreasingUnlimited,
+            claimed: "Th(n)",
+            t_sweep: vec![1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18],
+            n_sweep: vec![1 << 8, 1 << 10, 1 << 12, 1 << 14, 1 << 16],
+            fixed_n: 1 << 12,
+            fixed_t: 1 << 14,
+        },
+        Row {
+            algo: Policy::MarDec,
+            scenario: Scenario::DecreasingLimited,
+            claimed: "O(T n^2)",
+            t_sweep: vec![256, 512, 1024, 2048, 4096],
+            n_sweep: vec![4, 8, 16, 32, 64],
+            fixed_n: 16,
+            fixed_t: 1024,
+        },
+    ];
+
+    let cfg = BenchConfig { warmup: 1, iters: 7, min_time_s: 0.02 };
+    let mut table = Table::new(
+        "TABLE 2 (empirical): runtime scaling per scenario",
+        &["algorithm", "claimed", "slope vs T (r2)", "slope vs n (r2)",
+          "t @ (T*, n*)"],
+    );
+
+    for row in rows {
+        // T sweep at fixed n.
+        let mut ts = Vec::new();
+        let mut times_t = Vec::new();
+        for &t in &row.t_sweep {
+            let m = time_solve(row.algo, row.scenario, row.fixed_n, t, &cfg);
+            ts.push(t as f64);
+            times_t.push(m);
+        }
+        let (slope_t, r2_t) = stats::loglog_slope(&ts, &times_t);
+
+        // n sweep at fixed T.
+        let mut ns = Vec::new();
+        let mut times_n = Vec::new();
+        for &n in &row.n_sweep {
+            let m = time_solve(row.algo, row.scenario, n, row.fixed_t, &cfg);
+            ns.push(n as f64);
+            times_n.push(m);
+        }
+        let (slope_n, r2_n) = stats::loglog_slope(&ns, &times_n);
+
+        table.rows_str(vec![
+            row.algo.to_string(),
+            row.claimed.to_string(),
+            format!("{slope_t:+.2} ({r2_t:.3})"),
+            format!("{slope_n:+.2} ({r2_n:.3})"),
+            format!(
+                "{} @ (T={}, n={})",
+                fmt_duration(*times_t.last().unwrap()),
+                row.t_sweep.last().unwrap(),
+                row.fixed_n
+            ),
+        ]);
+        eprintln!(
+            "[table2] {}: T-sweep {:?} → {:?}",
+            row.algo,
+            row.t_sweep,
+            times_t.iter().map(|s| fmt_duration(*s)).collect::<Vec<_>>()
+        );
+    }
+
+    table.print();
+    println!("Expected: (MC)²MKP ≈ slope 2 vs T / 1 vs n; MarIn ≈ 1 vs T;");
+    println!("MarCo & MarDecUn ≈ 0 vs T, ≈ 1 vs n; MarDec ≈ 1 vs T, ≈ 2 vs n.");
+}

@@ -1,0 +1,169 @@
+//! Benchmark harness (the offline build has no `criterion`).
+//!
+//! Provides warmup + timed iterations with robust summaries (median / MAD /
+//! p10 / p90), black-box value sinks to defeat dead-code elimination, and a
+//! report type that renders the tables printed into `bench_output.txt`.
+//!
+//! Bench binaries are declared with `harness = false` in `Cargo.toml` and
+//! drive this module from `main()`.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use crate::util::stats;
+use crate::util::table::{fmt_duration, Table};
+
+/// One measured benchmark: name + per-iteration wall times (seconds).
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    /// Median per-iteration time in seconds.
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    /// Median absolute deviation.
+    pub fn mad(&self) -> f64 {
+        stats::mad(&self.samples)
+    }
+
+    /// p-th percentile.
+    pub fn percentile(&self, p: f64) -> f64 {
+        stats::percentile(&self.samples, p)
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Recorded iterations.
+    pub iters: usize,
+    /// Lower bound on total measured time; iterations are repeated in
+    /// batches until this much time has been observed (protects very fast
+    /// functions from timer resolution).
+    pub min_time_s: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 15, min_time_s: 0.05 }
+    }
+}
+
+impl BenchConfig {
+    /// Quick preset for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self { warmup: 1, iters: 5, min_time_s: 0.0 }
+    }
+}
+
+/// Time `f` under `cfg`, returning per-iteration samples.
+///
+/// `f` must return a value; it is routed through [`black_box`] so the
+/// optimizer cannot elide the benched computation.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..cfg.warmup {
+        black_box(f());
+    }
+    // Choose a batch size so one batch takes >= ~1ms or min_time/iters.
+    let t0 = Instant::now();
+    black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let target = (cfg.min_time_s / cfg.iters.max(1) as f64).max(1e-4);
+    let batch = ((target / once).ceil() as usize).clamp(1, 1_000_000);
+
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let t = Instant::now();
+        for _ in 0..batch {
+            black_box(f());
+        }
+        samples.push(t.elapsed().as_secs_f64() / batch as f64);
+    }
+    Measurement { name: name.to_string(), samples }
+}
+
+/// A collection of measurements rendered as one report table.
+#[derive(Debug, Default)]
+pub struct Report {
+    title: String,
+    rows: Vec<Measurement>,
+}
+
+impl Report {
+    /// New empty report.
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), rows: Vec::new() }
+    }
+
+    /// Add a measurement.
+    pub fn push(&mut self, m: Measurement) {
+        self.rows.push(m);
+    }
+
+    /// Run + record a benchmark in one call.
+    pub fn bench<T>(&mut self, name: &str, cfg: &BenchConfig, f: impl FnMut() -> T) {
+        let m = bench(name, cfg, f);
+        self.push(m);
+    }
+
+    /// Render the report table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&self.title, &["benchmark", "median", "mad", "p10", "p90"]);
+        for m in &self.rows {
+            t.rows_str(vec![
+                m.name.clone(),
+                fmt_duration(m.median()),
+                fmt_duration(m.mad()),
+                fmt_duration(m.percentile(10.0)),
+                fmt_duration(m.percentile(90.0)),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Access measurements (for slope fits etc.).
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let cfg = BenchConfig { warmup: 1, iters: 5, min_time_s: 0.0 };
+        let m = bench("spin", &cfg, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.median() > 0.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let cfg = BenchConfig { warmup: 0, iters: 3, min_time_s: 0.0 };
+        let mut r = Report::new("unit");
+        r.bench("noop", &cfg, || 1u8);
+        let s = r.render();
+        assert!(s.contains("noop"));
+        assert!(s.contains("median"));
+    }
+}

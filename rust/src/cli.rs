@@ -1,0 +1,292 @@
+//! Command-line argument parsing (the offline build has no `clap`).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! repeated flags, positional arguments, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{FedError, Result};
+
+/// Declared option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Boolean switch (no value) vs valued option.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Declared subcommand.
+#[derive(Clone, Debug)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, Vec<String>>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    /// Last value of `--name`, or its default.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeated `--name`.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Required string value.
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| FedError::Config(format!("missing required option --{name}")))
+    }
+
+    /// Typed value with FromStr.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| FedError::Config(format!("bad value for --{name}: '{s}'"))),
+        }
+    }
+
+    /// Typed value with a fallback default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    /// Boolean switch presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// Application definition: name + subcommands.
+#[derive(Clone, Debug)]
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CmdSpec>,
+}
+
+impl App {
+    /// Render usage/help text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<16} {}\n", c.name, c.about));
+        }
+        for c in &self.commands {
+            s.push_str(&format!("\n{} {}:\n", self.name, c.name));
+            for (p, h) in &c.positional {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+            for o in &c.opts {
+                let v = if o.takes_value { " <value>" } else { "" };
+                let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                s.push_str(&format!("  --{}{v}  {}{d}\n", o.name, o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse a raw argv (excluding program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        if args.is_empty() || args[0] == "--help" || args[0] == "-h" || args[0] == "help" {
+            return Err(FedError::Config(self.usage()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == args[0])
+            .ok_or_else(|| {
+                FedError::Config(format!("unknown command '{}'\n\n{}", args[0], self.usage()))
+            })?;
+
+        let mut parsed = Parsed { command: cmd.name.to_string(), ..Default::default() };
+        // Seed defaults.
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                parsed.values.insert(o.name.to_string(), vec![d.to_string()]);
+            }
+        }
+
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(FedError::Config(self.usage()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = cmd.opts.iter().find(|o| o.name == name).ok_or_else(|| {
+                    FedError::Config(format!("unknown option --{name} for '{}'", cmd.name))
+                })?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    FedError::Config(format!("--{name} requires a value"))
+                                })?
+                        }
+                    };
+                    parsed
+                        .values
+                        .entry(name.to_string())
+                        .and_modify(|v| {
+                            // Replace seeded default on first explicit use.
+                            if v.len() == 1 && Some(v[0].as_str()) == spec.default {
+                                v.clear();
+                            }
+                        })
+                        .or_default()
+                        .push(val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(FedError::Config(format!("--{name} takes no value")));
+                    }
+                    parsed.switches.insert(name.to_string(), true);
+                }
+            } else {
+                parsed.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        if parsed.positional.len() < cmd.positional.len() {
+            return Err(FedError::Config(format!(
+                "'{}' expects {} positional argument(s)",
+                cmd.name,
+                cmd.positional.len()
+            )));
+        }
+        Ok(parsed)
+    }
+}
+
+/// The fedzero CLI definition shared by `main.rs`.
+pub fn fedzero_app() -> App {
+    App {
+        name: "fedzero",
+        about: "energy-minimal FL scheduling (Lima Pilla 2022 reproduction)",
+        commands: vec![
+            CmdSpec {
+                name: "schedule",
+                about: "solve a Minimal Cost FL Schedule instance",
+                opts: vec![
+                    OptSpec { name: "tasks", help: "workload size T", takes_value: true, default: Some("256") },
+                    OptSpec { name: "devices", help: "number of resources n", takes_value: true, default: Some("10") },
+                    OptSpec { name: "seed", help: "fleet RNG seed", takes_value: true, default: Some("1") },
+                    OptSpec { name: "regime", help: "cost regime: increasing|constant|decreasing|arbitrary", takes_value: true, default: Some("increasing") },
+                    OptSpec { name: "algo", help: "auto|mc2mkp|marin|marco|mardecun|mardec|uniform|random|proportional|greedy|olar", takes_value: true, default: Some("auto") },
+                    OptSpec { name: "json", help: "print the schedule as JSON", takes_value: false, default: None },
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "train",
+                about: "run federated training with a scheduler policy",
+                opts: vec![
+                    OptSpec { name: "config", help: "experiment config file (TOML)", takes_value: true, default: None },
+                    OptSpec { name: "rounds", help: "number of FL rounds", takes_value: true, default: Some("50") },
+                    OptSpec { name: "devices", help: "fleet size", takes_value: true, default: Some("16") },
+                    OptSpec { name: "tasks", help: "mini-batches per round (T)", takes_value: true, default: Some("64") },
+                    OptSpec { name: "model", help: "model artifact name (mlp|transformer)", takes_value: true, default: Some("mlp") },
+                    OptSpec { name: "algo", help: "scheduler policy", takes_value: true, default: Some("auto") },
+                    OptSpec { name: "seed", help: "RNG seed", takes_value: true, default: Some("7") },
+                    OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
+                    OptSpec { name: "out", help: "CSV output path", takes_value: true, default: None },
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "fleet",
+                about: "sample and describe a heterogeneous device fleet",
+                opts: vec![
+                    OptSpec { name: "devices", help: "fleet size", takes_value: true, default: Some("10") },
+                    OptSpec { name: "seed", help: "RNG seed", takes_value: true, default: Some("1") },
+                ],
+                positional: vec![],
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["schedule", "--tasks", "500", "--json"])).unwrap();
+        assert_eq!(p.command, "schedule");
+        assert_eq!(p.get("tasks"), Some("500"));
+        assert_eq!(p.get("devices"), Some("10")); // default
+        assert!(p.flag("json"));
+        assert_eq!(p.get_or::<u64>("seed", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["schedule", "--tasks=42"])).unwrap();
+        assert_eq!(p.get_parse::<usize>("tasks").unwrap(), Some(42));
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        let app = fedzero_app();
+        assert!(app.parse(&args(&["nope"])).is_err());
+        assert!(app.parse(&args(&["schedule", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let app = fedzero_app();
+        assert!(app.parse(&args(&["schedule", "--tasks"])).is_err());
+    }
+
+    #[test]
+    fn help_is_config_error_with_usage() {
+        let app = fedzero_app();
+        let err = app.parse(&args(&["--help"])).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("USAGE"));
+        assert!(msg.contains("schedule"));
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["schedule", "--tasks", "xyz"])).unwrap();
+        assert!(p.get_parse::<usize>("tasks").is_err());
+    }
+}

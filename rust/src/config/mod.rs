@@ -1,0 +1,277 @@
+//! Configuration system: a TOML-subset parser plus typed experiment
+//! configuration structs (the offline build has no `serde`/`toml`).
+//!
+//! The supported TOML subset covers what experiment files need: top-level
+//! and nested `[tables]`, `key = value` with strings, integers, floats,
+//! booleans, and homogeneous arrays, plus `#` comments.
+
+pub mod toml;
+
+use crate::error::{FedError, Result};
+use toml::TomlValue;
+
+/// Scheduler policy selection (mirrors `--algo`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Classify the instance and pick the cheapest optimal algorithm
+    /// (Table 2 of the paper).
+    Auto,
+    Mc2mkp,
+    MarIn,
+    MarCo,
+    MarDecUn,
+    MarDec,
+    Uniform,
+    Random,
+    Proportional,
+    Greedy,
+    Olar,
+}
+
+impl std::str::FromStr for Policy {
+    type Err = FedError;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => Policy::Auto,
+            "mc2mkp" | "dp" => Policy::Mc2mkp,
+            "marin" => Policy::MarIn,
+            "marco" => Policy::MarCo,
+            "mardecun" => Policy::MarDecUn,
+            "mardec" => Policy::MarDec,
+            "uniform" => Policy::Uniform,
+            "random" => Policy::Random,
+            "proportional" => Policy::Proportional,
+            "greedy" => Policy::Greedy,
+            "olar" => Policy::Olar,
+            other => return Err(FedError::Config(format!("unknown policy '{other}'"))),
+        })
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Policy::Auto => "auto",
+            Policy::Mc2mkp => "mc2mkp",
+            Policy::MarIn => "marin",
+            Policy::MarCo => "marco",
+            Policy::MarDecUn => "mardecun",
+            Policy::MarDec => "mardec",
+            Policy::Uniform => "uniform",
+            Policy::Random => "random",
+            Policy::Proportional => "proportional",
+            Policy::Greedy => "greedy",
+            Policy::Olar => "olar",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Full experiment configuration for `fedzero train`.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// FL rounds to run.
+    pub rounds: usize,
+    /// Fleet size n.
+    pub devices: usize,
+    /// Mini-batches to distribute per round (T).
+    pub tasks_per_round: usize,
+    /// Scheduler policy.
+    pub policy: Policy,
+    /// Model artifact name (key into artifacts/manifest.json).
+    pub model: String,
+    /// RNG seed for fleet + data.
+    pub seed: u64,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+    /// Fraction of devices sampled per round (FedAvg's C).
+    pub participation: f64,
+    /// Dirichlet alpha for non-IID label split.
+    pub dirichlet_alpha: f64,
+    /// Minimum participation (lower limit) per selected device.
+    pub min_tasks: usize,
+    /// Over-representation guard: no device may receive more than this
+    /// fraction of a round's tasks (the upper-limit recommendation of the
+    /// paper's §6 — energy-optimal schedules otherwise concentrate work on
+    /// one device, whose non-IID shard then dominates the global model).
+    /// Relaxed automatically if the capped capacity cannot absorb `T`.
+    pub max_share: f64,
+    /// Convergence target on training loss (early stop), if any.
+    pub target_loss: Option<f64>,
+    /// Worker threads for client execution.
+    pub workers: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            rounds: 50,
+            devices: 16,
+            tasks_per_round: 64,
+            policy: Policy::Auto,
+            model: "mlp".into(),
+            seed: 7,
+            artifacts_dir: "artifacts".into(),
+            participation: 1.0,
+            dirichlet_alpha: 0.5,
+            min_tasks: 0,
+            max_share: 0.25,
+            target_loss: None,
+            workers: 1,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a TOML file (all keys optional; defaults otherwise).
+    ///
+    /// ```toml
+    /// [train]
+    /// rounds = 100
+    /// devices = 32
+    /// tasks_per_round = 128
+    /// policy = "mc2mkp"
+    /// model = "transformer"
+    /// seed = 42
+    /// participation = 0.5
+    /// dirichlet_alpha = 0.1
+    /// min_tasks = 1
+    /// target_loss = 0.5
+    /// workers = 4
+    /// ```
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml::parse(text)?;
+        let mut cfg = TrainConfig::default();
+        let t = match doc.get("train") {
+            Some(TomlValue::Table(t)) => t.clone(),
+            _ => doc.clone(),
+        };
+        if let Some(v) = t.get("rounds") {
+            cfg.rounds = v.as_usize().ok_or_else(|| bad("rounds"))?;
+        }
+        if let Some(v) = t.get("devices") {
+            cfg.devices = v.as_usize().ok_or_else(|| bad("devices"))?;
+        }
+        if let Some(v) = t.get("tasks_per_round") {
+            cfg.tasks_per_round = v.as_usize().ok_or_else(|| bad("tasks_per_round"))?;
+        }
+        if let Some(v) = t.get("policy") {
+            cfg.policy = v.as_str().ok_or_else(|| bad("policy"))?.parse()?;
+        }
+        if let Some(v) = t.get("model") {
+            cfg.model = v.as_str().ok_or_else(|| bad("model"))?.to_string();
+        }
+        if let Some(v) = t.get("seed") {
+            cfg.seed = v.as_usize().ok_or_else(|| bad("seed"))? as u64;
+        }
+        if let Some(v) = t.get("artifacts_dir") {
+            cfg.artifacts_dir = v.as_str().ok_or_else(|| bad("artifacts_dir"))?.to_string();
+        }
+        if let Some(v) = t.get("participation") {
+            cfg.participation = v.as_f64().ok_or_else(|| bad("participation"))?;
+        }
+        if let Some(v) = t.get("dirichlet_alpha") {
+            cfg.dirichlet_alpha = v.as_f64().ok_or_else(|| bad("dirichlet_alpha"))?;
+        }
+        if let Some(v) = t.get("min_tasks") {
+            cfg.min_tasks = v.as_usize().ok_or_else(|| bad("min_tasks"))?;
+        }
+        if let Some(v) = t.get("max_share") {
+            cfg.max_share = v.as_f64().ok_or_else(|| bad("max_share"))?;
+        }
+        if let Some(v) = t.get("target_loss") {
+            cfg.target_loss = Some(v.as_f64().ok_or_else(|| bad("target_loss"))?);
+        }
+        if let Some(v) = t.get("workers") {
+            cfg.workers = v.as_usize().ok_or_else(|| bad("workers"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.devices == 0 {
+            return Err(FedError::Config("devices must be > 0".into()));
+        }
+        if self.tasks_per_round == 0 {
+            return Err(FedError::Config("tasks_per_round must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.participation) || self.participation == 0.0 {
+            return Err(FedError::Config("participation must be in (0, 1]".into()));
+        }
+        if self.dirichlet_alpha <= 0.0 {
+            return Err(FedError::Config("dirichlet_alpha must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.max_share) || self.max_share == 0.0 {
+            return Err(FedError::Config("max_share must be in (0, 1]".into()));
+        }
+        if self.workers == 0 {
+            return Err(FedError::Config("workers must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+fn bad(key: &str) -> FedError {
+    FedError::Config(format!("bad type for key '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_file_parses() {
+        let text = r#"
+            # experiment
+            [train]
+            rounds = 100
+            devices = 32
+            tasks_per_round = 128
+            policy = "mc2mkp"
+            model = "transformer"
+            seed = 42
+            participation = 0.5
+            dirichlet_alpha = 0.1
+            min_tasks = 1
+            target_loss = 0.5
+            workers = 4
+        "#;
+        let cfg = TrainConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.rounds, 100);
+        assert_eq!(cfg.policy, Policy::Mc2mkp);
+        assert_eq!(cfg.model, "transformer");
+        assert_eq!(cfg.target_loss, Some(0.5));
+        assert_eq!(cfg.workers, 4);
+    }
+
+    #[test]
+    fn flat_file_without_section() {
+        let cfg = TrainConfig::from_toml("rounds = 3\ndevices = 2\n").unwrap();
+        assert_eq!(cfg.rounds, 3);
+        assert_eq!(cfg.devices, 2);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(TrainConfig::from_toml("participation = 0.0").is_err());
+        assert!(TrainConfig::from_toml("policy = \"nope\"").is_err());
+        assert!(TrainConfig::from_toml("devices = 0").is_err());
+        assert!(TrainConfig::from_toml("rounds = \"x\"").is_err());
+    }
+
+    #[test]
+    fn policy_roundtrip() {
+        for p in ["auto", "mc2mkp", "marin", "marco", "mardecun", "mardec",
+                  "uniform", "random", "proportional", "greedy", "olar"] {
+            let parsed: Policy = p.parse().unwrap();
+            assert_eq!(parsed.to_string(), p);
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! TOML-subset parser.
+//!
+//! Supports: `key = value` pairs, `[section]` / `[nested.section]` headers,
+//! strings (`"..."` with standard escapes), integers, floats, booleans,
+//! homogeneous arrays (`[1, 2, 3]`), and `#` comments. This covers the
+//! experiment configuration files in `configs/`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{FedError, Result};
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+}
+
+impl TomlValue {
+    /// As &str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As f64 (ints coerce).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As usize (non-negative int).
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As array.
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Table field lookup.
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        match self {
+            TomlValue::Table(t) => t.get(key),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a TOML document into a root table.
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut root: BTreeMap<String, TomlValue> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(hdr) = line.strip_prefix('[') {
+            let hdr = hdr
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?;
+            section = hdr.split('.').map(|s| s.trim().to_string()).collect();
+            if section.iter().any(|s| s.is_empty()) {
+                return Err(err(lineno, "empty section name"));
+            }
+            // materialize empty table
+            insert_path(&mut root, &section, None, lineno)?;
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(value.trim(), lineno)?;
+        let mut path = section.clone();
+        path.push(key.to_string());
+        insert_path(&mut root, &path, Some(value), lineno)?;
+    }
+    Ok(root)
+}
+
+fn err(lineno: usize, msg: &str) -> FedError {
+    FedError::Config(format!("TOML line {}: {msg}", lineno + 1))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn insert_path(
+    root: &mut BTreeMap<String, TomlValue>,
+    path: &[String],
+    value: Option<TomlValue>,
+    lineno: usize,
+) -> Result<()> {
+    let mut cur = root;
+    for (i, part) in path.iter().enumerate() {
+        let last = i == path.len() - 1;
+        if last {
+            match value {
+                Some(ref v) => {
+                    if cur.contains_key(part) {
+                        return Err(err(lineno, &format!("duplicate key '{part}'")));
+                    }
+                    cur.insert(part.clone(), v.clone());
+                }
+                None => {
+                    cur.entry(part.clone())
+                        .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+                }
+            }
+            return Ok(());
+        }
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        match entry {
+            TomlValue::Table(t) => cur = t,
+            _ => return Err(err(lineno, &format!("'{part}' is not a table"))),
+        }
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(TomlValue::Str(unescape(inner, lineno)?));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .unwrap()
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim(), lineno)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    // number: int if no '.', 'e', 'E'
+    let is_float = s.contains('.') || s.contains('e') || s.contains('E');
+    if is_float {
+        s.parse::<f64>()
+            .map(TomlValue::Float)
+            .map_err(|_| err(lineno, &format!("bad float '{s}'")))
+    } else {
+        s.replace('_', "")
+            .parse::<i64>()
+            .map(TomlValue::Int)
+            .map_err(|_| err(lineno, &format!("bad integer '{s}'")))
+    }
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn unescape(s: &str, lineno: usize) -> Result<String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            _ => return Err(err(lineno, "bad escape")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let doc = parse(
+            r#"
+            top = 1
+            [a]
+            s = "hi"        # comment
+            f = 2.5
+            b = true
+            [a.deep]
+            arr = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("top").unwrap().as_usize(), Some(1));
+        let a = doc.get("a").unwrap();
+        assert_eq!(a.get("s").unwrap().as_str(), Some("hi"));
+        assert_eq!(a.get("f").unwrap().as_f64(), Some(2.5));
+        assert_eq!(a.get("b").unwrap().as_bool(), Some(true));
+        let arr = a.get("deep").unwrap().get("arr").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_usize(), Some(3));
+    }
+
+    #[test]
+    fn string_with_hash_and_escape() {
+        let doc = parse(r#"k = "a#b\nc""#).unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str(), Some("a#b\nc"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse("m = [[1, 2], [3, 4]]").unwrap();
+        let m = doc.get("m").unwrap().as_array().unwrap();
+        assert_eq!(m[1].as_array().unwrap()[0].as_usize(), Some(3));
+    }
+
+    #[test]
+    fn negative_and_underscored_numbers() {
+        let doc = parse("a = -5\nb = 1_000\nc = -1.5e3").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(-5)));
+        assert_eq!(doc.get("b"), Some(&TomlValue::Int(1000)));
+        assert_eq!(doc.get("c").unwrap().as_f64(), Some(-1500.0));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+        assert!(parse("dup = 1\ndup = 2").is_err());
+        assert!(parse("just a line").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse("e = []").unwrap();
+        assert_eq!(doc.get("e").unwrap().as_array().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Battery model: turns remaining charge into a per-round task budget —
+//! one concrete source of the paper's upper limits `U_i` (§2.1 notes upper
+//! limits arise naturally from device constraints and contracts [18], [19]).
+
+use crate::energy::power::PowerModel;
+
+/// Battery state of a device.
+#[derive(Clone, Debug)]
+pub struct Battery {
+    /// Full capacity in watt-hours.
+    pub capacity_wh: f64,
+    /// Current state of charge in `[0, 1]`.
+    pub level: f64,
+    /// Fraction of the *remaining* charge a device is willing to spend on
+    /// one training round (participation incentive knob [19]).
+    pub round_budget_frac: f64,
+}
+
+impl Battery {
+    /// Remaining energy in joules.
+    pub fn remaining_j(&self) -> f64 {
+        self.capacity_wh * 3600.0 * self.level
+    }
+
+    /// Energy budget for one round in joules.
+    pub fn round_budget_j(&self) -> f64 {
+        self.remaining_j() * self.round_budget_frac
+    }
+
+    /// Largest `j` with `energy(j) <= round budget` for the given power
+    /// model (binary search over the monotone energy curve).
+    pub fn max_batches(&self, power: &PowerModel) -> usize {
+        let budget = self.round_budget_j();
+        if budget <= 0.0 || power.energy_j(1) > budget {
+            return 0;
+        }
+        // Exponential probe then binary search.
+        let mut hi = 1usize;
+        while power.energy_j(hi * 2) <= budget && hi < 1 << 20 {
+            hi *= 2;
+        }
+        let mut lo = hi; // energy(lo) <= budget
+        hi *= 2;
+        // invariant: energy(lo) <= budget < energy(hi)
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if power.energy_j(mid) <= budget {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Drain the battery by `joules`; clamps at empty.
+    pub fn drain(&mut self, joules: f64) {
+        let cap_j = self.capacity_wh * 3600.0;
+        self.level = ((self.level * cap_j - joules) / cap_j).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::power::Behavior;
+
+    fn power(behavior: Behavior) -> PowerModel {
+        PowerModel {
+            idle_w: 0.1,
+            busy_w: 2.0,
+            batch_latency_s: 0.5,
+            behavior,
+            curvature: 0.05,
+        }
+    }
+
+    fn battery(level: f64) -> Battery {
+        Battery { capacity_wh: 10.0, level, round_budget_frac: 0.1 }
+    }
+
+    #[test]
+    fn remaining_and_budget() {
+        let b = battery(0.5);
+        assert!((b.remaining_j() - 18_000.0).abs() < 1e-9);
+        assert!((b.round_budget_j() - 1_800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_batches_is_tight_linear() {
+        let b = battery(0.5); // budget 1800 J, 1 J/batch·W → e = 1 J
+        let p = power(Behavior::Linear); // 2 W * 0.5 s = 1 J per batch
+        let m = b.max_batches(&p);
+        assert_eq!(m, 1800);
+    }
+
+    #[test]
+    fn max_batches_boundary_exact() {
+        for behavior in Behavior::ALL {
+            let b = battery(0.8);
+            let p = power(behavior);
+            let m = b.max_batches(&p);
+            assert!(p.energy_j(m) <= b.round_budget_j() + 1e-9);
+            assert!(p.energy_j(m + 1) > b.round_budget_j());
+        }
+    }
+
+    #[test]
+    fn empty_battery_allows_nothing() {
+        let b = battery(0.0);
+        assert_eq!(b.max_batches(&power(Behavior::Linear)), 0);
+    }
+
+    #[test]
+    fn drain_clamps_at_zero() {
+        let mut b = battery(0.1);
+        b.drain(1e9);
+        assert_eq!(b.level, 0.0);
+        let mut b2 = battery(1.0);
+        b2.drain(3600.0); // 1 Wh out of 10 Wh
+        assert!((b2.level - 0.9).abs() < 1e-9);
+    }
+}

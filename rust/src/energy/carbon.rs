@@ -1,0 +1,105 @@
+//! Carbon-intensity and electricity-price adapters.
+//!
+//! The paper (§6, remark I) notes its algorithms minimize *any* cost, not
+//! just joules: "emissions of carbon dioxide or equivalents, financial
+//! costs, ... requiring only the cost estimates". Qiu et al. [12] showed
+//! FL's carbon footprint varies by orders of magnitude with the energy mix
+//! of participants' locations — exactly what these per-region weights
+//! capture.
+//!
+//! Intensity values are indicative annual grid averages (g CO₂e per kWh)
+//! of the kind published by electricityMap/Ember; prices are indicative
+//! household rates (EUR per kWh). Absolute accuracy is irrelevant to the
+//! scheduling behaviour — the *relative spread* across regions is what
+//! drives the schedules.
+
+use crate::sched::costs::CostFn;
+
+/// `(region, g CO₂e per kWh, EUR per kWh)`.
+pub const REGIONS: [(&str, f64, f64); 8] = [
+    ("france", 56.0, 0.23),
+    ("sweden", 41.0, 0.18),
+    ("germany", 380.0, 0.40),
+    ("uk", 225.0, 0.34),
+    ("us-east", 390.0, 0.16),
+    ("china", 550.0, 0.08),
+    ("india", 630.0, 0.07),
+    ("brazil", 100.0, 0.14),
+];
+
+/// Look up a region row.
+pub fn region(name: &str) -> Option<(f64, f64)> {
+    REGIONS
+        .iter()
+        .find(|(r, _, _)| *r == name)
+        .map(|(_, co2, eur)| (*co2, *eur))
+}
+
+/// Grams of CO₂-equivalent per joule for a region.
+pub fn co2_g_per_joule(region_name: &str) -> f64 {
+    let (g_per_kwh, _) = region(region_name).unwrap_or((400.0, 0.2));
+    g_per_kwh / 3.6e6
+}
+
+/// EUR per joule for a region.
+pub fn eur_per_joule(region_name: &str) -> f64 {
+    let (_, eur_per_kwh) = region(region_name).unwrap_or((400.0, 0.2));
+    eur_per_kwh / 3.6e6
+}
+
+/// Wrap an energy (joules) cost function so its unit becomes g CO₂e.
+pub fn carbon_cost(energy_cost: CostFn, region_name: &str) -> CostFn {
+    CostFn::Scaled {
+        weight: co2_g_per_joule(region_name),
+        inner: Box::new(energy_cost),
+    }
+}
+
+/// Wrap an energy (joules) cost function so its unit becomes EUR.
+pub fn monetary_cost(energy_cost: CostFn, region_name: &str) -> CostFn {
+    CostFn::Scaled {
+        weight: eur_per_joule(region_name),
+        inner: Box::new(energy_cost),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::{classify, MarginalRegime};
+
+    #[test]
+    fn region_lookup() {
+        let (co2, eur) = region("france").unwrap();
+        assert_eq!(co2, 56.0);
+        assert_eq!(eur, 0.23);
+        assert!(region("atlantis").is_none());
+    }
+
+    #[test]
+    fn per_joule_conversions() {
+        // 1 kWh = 3.6e6 J
+        assert!((co2_g_per_joule("sweden") * 3.6e6 - 41.0).abs() < 1e-9);
+        assert!((eur_per_joule("india") * 3.6e6 - 0.07).abs() < 1e-9);
+    }
+
+    #[test]
+    fn carbon_wrapping_preserves_regime() {
+        let energy = CostFn::Quadratic { fixed: 0.0, a: 0.3, b: 1.0 };
+        let carbon = carbon_cost(energy, "germany");
+        assert_eq!(classify(&carbon, 0, 20), MarginalRegime::Increasing);
+    }
+
+    #[test]
+    fn dirty_grid_costs_more() {
+        let energy = CostFn::Affine { fixed: 0.0, per_task: 10.0 };
+        let india = carbon_cost(energy.clone(), "india");
+        let sweden = carbon_cost(energy, "sweden");
+        assert!(india.eval(5) > 10.0 * sweden.eval(5));
+    }
+
+    #[test]
+    fn unknown_region_uses_default() {
+        assert!((co2_g_per_joule("atlantis") * 3.6e6 - 400.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,26 @@
+//! Device energy simulation: the substrate that synthesizes the cost
+//! functions `C_i` the paper's schedulers consume.
+//!
+//! The paper abstracts devices to black-box cost functions (measured in
+//! practice by profilers like I-Prof [35] or frameworks like Flower [36]).
+//! We do not have the authors' physical devices, so this module builds the
+//! closest synthetic equivalent (see DESIGN.md §2 Substitutions):
+//!
+//! * [`power`] — per-device power/latency model (idle/busy watts, DVFS
+//!   levels) and the three marginal-cost behaviours of paper Def. 3;
+//! * [`profiles`] — device archetypes with parameter ranges taken from the
+//!   measurement literature the paper cites (Kim & Wu [13], Walker et
+//!   al. [34], Qiu et al. [12]), and heterogeneous fleet sampling;
+//! * [`carbon`] — carbon-intensity and electricity-price tables turning
+//!   energy costs into g CO₂e or currency (paper §6 remark I);
+//! * [`battery`] — battery state → per-round upper limits;
+//! * [`tracegen`] — noisy tabulated cost tables (the "arbitrary cost"
+//!   scenario) and isotonic repair.
+
+pub mod battery;
+pub mod carbon;
+pub mod power;
+pub mod profiles;
+pub mod tracegen;
+
+pub use profiles::{Device, Fleet};

@@ -1,0 +1,190 @@
+//! Per-device power and energy model.
+//!
+//! A device is characterized by an idle power, a busy power at its training
+//! operating point, and a per-mini-batch training latency. Energy for `j`
+//! mini-batches is `P_busy · t_batch · j` in the ideal linear case; the
+//! marginal-cost *behaviour* knob superimposes the three regimes of the
+//! paper's Definition 3:
+//!
+//! * [`Behavior::Convex`] — sustained load pushes the device into higher
+//!   DVFS states / thermal envelopes, so each additional batch costs more
+//!   (superlinear energy; cf. the non-constant costs measured by
+//!   Khaleghzadeh et al. [28]);
+//! * [`Behavior::Linear`] — the constant-cost model most of the FL
+//!   literature assumes [16]–[22];
+//! * [`Behavior::Concave`] — fixed wake-up/setup energy (radio, model
+//!   (de)serialization, cache warm-up) amortizes over more batches
+//!   (sublinear energy).
+
+use crate::sched::costs::CostFn;
+
+/// Marginal-cost behaviour of a device's energy curve (paper Def. 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Behavior {
+    /// Increasing marginal costs (superlinear energy).
+    Convex,
+    /// Constant marginal costs (linear energy).
+    Linear,
+    /// Decreasing marginal costs (sublinear energy).
+    Concave,
+}
+
+impl Behavior {
+    /// All behaviours (for sweeps).
+    pub const ALL: [Behavior; 3] = [Behavior::Convex, Behavior::Linear, Behavior::Concave];
+}
+
+/// Physical power/latency parameters of one device.
+#[derive(Clone, Debug)]
+pub struct PowerModel {
+    /// Idle power draw in watts (display off, background).
+    pub idle_w: f64,
+    /// Busy power draw in watts at the training operating point.
+    pub busy_w: f64,
+    /// Seconds to train on one mini-batch.
+    pub batch_latency_s: f64,
+    /// Energy behaviour regime.
+    pub behavior: Behavior,
+    /// Regime strength: curvature of the convex term or exponent gap of the
+    /// concave term. 0 degenerates to linear.
+    pub curvature: f64,
+}
+
+impl PowerModel {
+    /// Ideal (linear) energy per mini-batch in joules.
+    pub fn joules_per_batch(&self) -> f64 {
+        self.busy_w * self.batch_latency_s
+    }
+
+    /// Wall-clock time to train `j` batches (seconds). Time stays linear in
+    /// `j` — only *energy* exhibits the regime curvature (frequency scaling
+    /// trades power for time at second order, which we fold into energy).
+    pub fn time_s(&self, j: usize) -> f64 {
+        self.batch_latency_s * j as f64
+    }
+
+    /// Energy in joules to train `j` mini-batches.
+    pub fn energy_j(&self, j: usize) -> f64 {
+        let e = self.joules_per_batch();
+        let x = j as f64;
+        match self.behavior {
+            // E(j) = e·j·(1 + κ·j): marginal e·(1 + κ(2j-1)) increases.
+            Behavior::Convex => e * x * (1.0 + self.curvature * x),
+            Behavior::Linear => e * x,
+            // E(j) = e_eff·j^γ with γ = 1/(1+κ) < 1: decreasing marginals.
+            // Scaled so E(1) = e (the first batch costs the ideal energy).
+            Behavior::Concave => {
+                let gamma = 1.0 / (1.0 + self.curvature);
+                e * x.powf(gamma)
+            }
+        }
+    }
+
+    /// The scheduler-facing cost function (joules as the cost unit).
+    pub fn cost_fn(&self) -> CostFn {
+        let e = self.joules_per_batch();
+        match self.behavior {
+            Behavior::Convex => CostFn::Quadratic {
+                fixed: 0.0,
+                a: e * self.curvature,
+                b: e,
+            },
+            Behavior::Linear => CostFn::Affine { fixed: 0.0, per_task: e },
+            Behavior::Concave => CostFn::PowerLaw {
+                fixed: 0.0,
+                scale: e,
+                exponent: 1.0 / (1.0 + self.curvature),
+            },
+        }
+    }
+
+    /// Idle energy over a window of `secs` seconds (used for round
+    /// accounting of non-participating devices).
+    pub fn idle_energy_j(&self, secs: f64) -> f64 {
+        self.idle_w * secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::{classify, MarginalRegime};
+
+    fn model(behavior: Behavior) -> PowerModel {
+        PowerModel {
+            idle_w: 0.5,
+            busy_w: 4.0,
+            batch_latency_s: 0.25,
+            behavior,
+            curvature: 0.05,
+        }
+    }
+
+    #[test]
+    fn linear_energy_is_proportional() {
+        let m = model(Behavior::Linear);
+        assert!((m.energy_j(10) - 10.0 * m.joules_per_batch()).abs() < 1e-12);
+        assert_eq!(m.energy_j(0), 0.0);
+    }
+
+    #[test]
+    fn convex_has_increasing_marginals() {
+        let m = model(Behavior::Convex);
+        let m1 = m.energy_j(1) - m.energy_j(0);
+        let m10 = m.energy_j(10) - m.energy_j(9);
+        assert!(m10 > m1);
+    }
+
+    #[test]
+    fn concave_has_decreasing_marginals_and_matches_first_batch() {
+        let m = model(Behavior::Concave);
+        let m1 = m.energy_j(1) - m.energy_j(0);
+        let m10 = m.energy_j(10) - m.energy_j(9);
+        assert!(m10 < m1);
+        assert!((m.energy_j(1) - m.joules_per_batch()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_fn_matches_energy() {
+        for b in Behavior::ALL {
+            let m = model(b);
+            let c = m.cost_fn();
+            for j in 0..=20 {
+                assert!(
+                    (c.eval(j) - m.energy_j(j)).abs() < 1e-9,
+                    "{b:?} mismatch at {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cost_fn_regimes_classify_correctly() {
+        assert_eq!(
+            classify(&model(Behavior::Convex).cost_fn(), 0, 30),
+            MarginalRegime::Increasing
+        );
+        assert_eq!(
+            classify(&model(Behavior::Linear).cost_fn(), 0, 30),
+            MarginalRegime::Constant
+        );
+        assert_eq!(
+            classify(&model(Behavior::Concave).cost_fn(), 0, 30),
+            MarginalRegime::Decreasing
+        );
+    }
+
+    #[test]
+    fn time_is_linear_regardless_of_behavior() {
+        for b in Behavior::ALL {
+            let m = model(b);
+            assert!((m.time_s(8) - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn idle_energy() {
+        let m = model(Behavior::Linear);
+        assert!((m.idle_energy_j(10.0) - 5.0).abs() < 1e-12);
+    }
+}

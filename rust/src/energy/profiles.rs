@@ -1,0 +1,279 @@
+//! Device archetypes and heterogeneous fleet sampling.
+//!
+//! Parameter ranges follow the orders of magnitude reported by the
+//! measurement literature the paper cites: Kim & Wu's AutoFL device
+//! clusters [13] (smartphone SoCs at single-digit watts), Walker et
+//! al. [34] (mobile CPU power modeling), Lane et al. [32] (1–3 orders of
+//! magnitude spread in per-inference energy across device classes), and
+//! Qiu et al. [12] (training-energy spread across FL devices). Absolute
+//! values are synthetic; what matters for scheduling behaviour is the
+//! *relative heterogeneity*, which these ranges preserve.
+
+use crate::energy::battery::Battery;
+use crate::energy::power::{Behavior, PowerModel};
+use crate::sched::costs::CostFn;
+use crate::sched::instance::Instance;
+use crate::util::rng::Rng;
+
+/// A device archetype: a named parameter range.
+#[derive(Clone, Debug)]
+pub struct Archetype {
+    pub name: &'static str,
+    /// Busy power range (watts).
+    pub busy_w: (f64, f64),
+    /// Idle power range (watts).
+    pub idle_w: (f64, f64),
+    /// Per-mini-batch training latency range (seconds).
+    pub batch_latency_s: (f64, f64),
+    /// Local dataset size range (number of mini-batches available).
+    pub data_batches: (usize, usize),
+    /// Battery capacity range (watt-hours); `None` = mains-powered.
+    pub battery_wh: Option<(f64, f64)>,
+}
+
+/// The built-in archetypes.
+pub const ARCHETYPES: [Archetype; 5] = [
+    Archetype {
+        name: "smartphone-low",
+        busy_w: (1.5, 3.0),
+        idle_w: (0.05, 0.3),
+        batch_latency_s: (0.8, 2.0),
+        data_batches: (20, 120),
+        battery_wh: Some((8.0, 12.0)),
+    },
+    Archetype {
+        name: "smartphone-high",
+        busy_w: (3.0, 6.5),
+        idle_w: (0.1, 0.4),
+        batch_latency_s: (0.2, 0.7),
+        data_batches: (40, 200),
+        battery_wh: Some((12.0, 20.0)),
+    },
+    Archetype {
+        name: "edge-board",
+        busy_w: (5.0, 15.0),
+        idle_w: (1.0, 3.0),
+        batch_latency_s: (0.1, 0.4),
+        data_batches: (80, 400),
+        battery_wh: None,
+    },
+    Archetype {
+        name: "laptop",
+        busy_w: (15.0, 45.0),
+        idle_w: (2.0, 6.0),
+        batch_latency_s: (0.05, 0.2),
+        data_batches: (100, 600),
+        battery_wh: Some((40.0, 70.0)),
+    },
+    Archetype {
+        name: "cloud-vm",
+        busy_w: (60.0, 150.0),
+        idle_w: (10.0, 30.0),
+        batch_latency_s: (0.01, 0.05),
+        data_batches: (500, 2000),
+        battery_wh: None,
+    },
+];
+
+/// One simulated device.
+#[derive(Clone, Debug)]
+pub struct Device {
+    /// Fleet-unique id.
+    pub id: usize,
+    /// Archetype name.
+    pub archetype: &'static str,
+    /// Power/energy model.
+    pub power: PowerModel,
+    /// Number of local mini-batches available (natural upper limit [18]).
+    pub data_batches: usize,
+    /// Battery, if battery-powered.
+    pub battery: Option<Battery>,
+    /// Grid region (key into [`crate::energy::carbon`] tables).
+    pub region: &'static str,
+}
+
+impl Device {
+    /// The device's energy cost function (joules for `j` mini-batches).
+    pub fn cost_fn(&self) -> CostFn {
+        self.power.cost_fn()
+    }
+
+    /// Effective per-round upper limit: available data, further capped by
+    /// the battery budget if the device is battery-powered.
+    pub fn upper_limit(&self) -> usize {
+        let data_cap = self.data_batches;
+        match &self.battery {
+            Some(b) => data_cap.min(b.max_batches(&self.power)),
+            None => data_cap,
+        }
+    }
+}
+
+/// A heterogeneous fleet of devices.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub devices: Vec<Device>,
+}
+
+/// How behaviours are assigned when sampling a fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BehaviorMix {
+    /// Every device gets the given behaviour (the paper's §5 scenarios
+    /// require all resources to share one regime).
+    Homogeneous(Behavior),
+    /// Behaviour drawn per device (produces "arbitrary" instances that only
+    /// the DP solves optimally).
+    Mixed,
+}
+
+impl Fleet {
+    /// Sample `n` devices with the given behaviour mix.
+    pub fn sample(n: usize, mix: BehaviorMix, rng: &mut Rng) -> Fleet {
+        let regions = crate::energy::carbon::REGIONS;
+        let devices = (0..n)
+            .map(|id| {
+                let arch = &ARCHETYPES[rng.index(ARCHETYPES.len())];
+                let behavior = match mix {
+                    BehaviorMix::Homogeneous(b) => b,
+                    BehaviorMix::Mixed => {
+                        Behavior::ALL[rng.index(Behavior::ALL.len())]
+                    }
+                };
+                let power = PowerModel {
+                    idle_w: rng.range_f64(arch.idle_w.0, arch.idle_w.1),
+                    busy_w: rng.range_f64(arch.busy_w.0, arch.busy_w.1),
+                    batch_latency_s: rng
+                        .range_f64(arch.batch_latency_s.0, arch.batch_latency_s.1),
+                    behavior,
+                    curvature: rng.range_f64(0.01, 0.15),
+                };
+                let battery = arch.battery_wh.map(|(lo, hi)| Battery {
+                    capacity_wh: rng.range_f64(lo, hi),
+                    level: rng.range_f64(0.3, 1.0),
+                    round_budget_frac: 0.05,
+                });
+                Device {
+                    id,
+                    archetype: arch.name,
+                    power,
+                    data_batches: rng.range_u64(
+                        arch.data_batches.0 as u64,
+                        arch.data_batches.1 as u64,
+                    ) as usize,
+                    battery,
+                    region: regions[rng.index(regions.len())].0,
+                }
+            })
+            .collect();
+        Fleet { devices }
+    }
+
+    /// Number of devices.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Build a Minimal Cost FL Schedule instance for this fleet:
+    /// `T = tasks`, `L_i = min_tasks` (clamped), `U_i` from data + battery,
+    /// `C_i` from the power models.
+    ///
+    /// If the fleet's total capacity cannot absorb `tasks`, upper limits are
+    /// insufficient and the instance would be invalid — callers should size
+    /// `tasks` to the fleet (the FL server samples participants until
+    /// capacity suffices).
+    pub fn instance(&self, tasks: usize, min_tasks: usize) -> crate::error::Result<Instance> {
+        let lower: Vec<usize> = self
+            .devices
+            .iter()
+            .map(|d| min_tasks.min(d.upper_limit()))
+            .collect();
+        let upper: Vec<usize> = self.devices.iter().map(|d| d.upper_limit()).collect();
+        let costs: Vec<CostFn> = self.devices.iter().map(|d| d.cost_fn()).collect();
+        Instance::new(tasks, lower, upper, costs)
+    }
+
+    /// Total capacity `Σ U_i`.
+    pub fn capacity(&self) -> usize {
+        self.devices.iter().map(|d| d.upper_limit()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::{classify, MarginalRegime};
+
+    #[test]
+    fn sample_is_deterministic() {
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        let fa = Fleet::sample(10, BehaviorMix::Mixed, &mut a);
+        let fb = Fleet::sample(10, BehaviorMix::Mixed, &mut b);
+        for (x, y) in fa.devices.iter().zip(&fb.devices) {
+            assert_eq!(x.archetype, y.archetype);
+            assert!((x.power.busy_w - y.power.busy_w).abs() < 1e-12);
+            assert_eq!(x.data_batches, y.data_batches);
+        }
+    }
+
+    #[test]
+    fn parameters_within_archetype_ranges() {
+        let mut rng = Rng::new(11);
+        let fleet = Fleet::sample(50, BehaviorMix::Mixed, &mut rng);
+        for d in &fleet.devices {
+            let arch = ARCHETYPES.iter().find(|a| a.name == d.archetype).unwrap();
+            assert!(d.power.busy_w >= arch.busy_w.0 && d.power.busy_w <= arch.busy_w.1);
+            assert!(
+                d.data_batches >= arch.data_batches.0
+                    && d.data_batches <= arch.data_batches.1
+            );
+            assert_eq!(arch.battery_wh.is_some(), d.battery.is_some());
+        }
+    }
+
+    #[test]
+    fn homogeneous_mix_yields_single_regime() {
+        let mut rng = Rng::new(3);
+        let fleet = Fleet::sample(20, BehaviorMix::Homogeneous(Behavior::Concave), &mut rng);
+        for d in &fleet.devices {
+            let u = d.upper_limit().max(3);
+            assert_eq!(
+                classify(&d.cost_fn(), 0, u),
+                MarginalRegime::Decreasing,
+                "device {}",
+                d.id
+            );
+        }
+    }
+
+    #[test]
+    fn instance_is_valid_when_capacity_suffices() {
+        let mut rng = Rng::new(7);
+        let fleet = Fleet::sample(12, BehaviorMix::Homogeneous(Behavior::Linear), &mut rng);
+        let t = fleet.capacity() / 2;
+        let inst = fleet.instance(t, 1).unwrap();
+        inst.validate().unwrap();
+        assert_eq!(inst.n(), 12);
+    }
+
+    #[test]
+    fn instance_rejects_oversized_workload() {
+        let mut rng = Rng::new(7);
+        let fleet = Fleet::sample(3, BehaviorMix::Homogeneous(Behavior::Linear), &mut rng);
+        assert!(fleet.instance(fleet.capacity() + 1, 0).is_err());
+    }
+
+    #[test]
+    fn battery_caps_upper_limit() {
+        let mut rng = Rng::new(13);
+        let fleet = Fleet::sample(40, BehaviorMix::Mixed, &mut rng);
+        for d in &fleet.devices {
+            assert!(d.upper_limit() <= d.data_batches);
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Synthetic measured-cost tables: the "arbitrary cost function" scenario.
+//!
+//! Real profilers return noisy per-load energy measurements that need not
+//! be monotone (Khaleghzadeh et al. [27], [28] observed non-constant,
+//! irregular cost curves on heterogeneous platforms). Since we have no
+//! physical testbed, [`noisy_table`] produces such tables: a smooth base
+//! curve plus multiplicative log-normal noise and occasional spikes
+//! (thermal events, background tasks). [`isotonic`] optionally repairs a
+//! table to monotone non-decreasing via the pool-adjacent-violators
+//! algorithm (PAVA) — what a profiler post-processing step would do before
+//! handing costs to MarIn/MarCo/MarDec.
+
+use crate::sched::costs::CostFn;
+use crate::util::rng::Rng;
+
+/// Parameters for synthetic cost-table generation.
+#[derive(Clone, Debug)]
+pub struct TraceParams {
+    /// Base energy per task (joules).
+    pub base_per_task: f64,
+    /// Base curve exponent (1 = linear, >1 convex, <1 concave).
+    pub exponent: f64,
+    /// Log-normal noise sigma (0 = clean).
+    pub noise_sigma: f64,
+    /// Probability of an additive spike at each load.
+    pub spike_prob: f64,
+    /// Spike magnitude relative to the local base value.
+    pub spike_scale: f64,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        Self {
+            base_per_task: 2.0,
+            exponent: 1.0,
+            noise_sigma: 0.1,
+            spike_prob: 0.05,
+            spike_scale: 0.5,
+        }
+    }
+}
+
+/// Generate a noisy cost table over loads `0..=max_tasks`
+/// (with `cost(0) = 0`).
+pub fn noisy_table(max_tasks: usize, p: &TraceParams, rng: &mut Rng) -> Vec<f64> {
+    let mut v = Vec::with_capacity(max_tasks + 1);
+    v.push(0.0);
+    for j in 1..=max_tasks {
+        let base = p.base_per_task * (j as f64).powf(p.exponent);
+        let noise = rng.lognormal(0.0, p.noise_sigma);
+        let spike = if rng.bool(p.spike_prob) {
+            base * p.spike_scale * rng.f64()
+        } else {
+            0.0
+        };
+        v.push(base * noise + spike);
+    }
+    v
+}
+
+/// Pool-adjacent-violators: least-squares projection onto non-decreasing
+/// sequences.
+pub fn isotonic(values: &[f64]) -> Vec<f64> {
+    // Blocks of (sum, count) merged while out of order.
+    let mut sums: Vec<f64> = Vec::with_capacity(values.len());
+    let mut counts: Vec<usize> = Vec::with_capacity(values.len());
+    for &v in values {
+        sums.push(v);
+        counts.push(1);
+        while sums.len() > 1 {
+            let k = sums.len();
+            let mean_last = sums[k - 1] / counts[k - 1] as f64;
+            let mean_prev = sums[k - 2] / counts[k - 2] as f64;
+            if mean_prev <= mean_last {
+                break;
+            }
+            let s = sums.pop().unwrap();
+            let c = counts.pop().unwrap();
+            *sums.last_mut().unwrap() += s;
+            *counts.last_mut().unwrap() += c;
+        }
+    }
+    let mut out = Vec::with_capacity(values.len());
+    for (s, c) in sums.iter().zip(&counts) {
+        let mean = s / *c as f64;
+        for _ in 0..*c {
+            out.push(mean);
+        }
+    }
+    out
+}
+
+/// Build a [`CostFn::Tabulated`] from a table starting at load 0.
+pub fn table_cost(values: Vec<f64>) -> CostFn {
+    CostFn::Tabulated { first: 0, values }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::{classify, MarginalRegime};
+
+    #[test]
+    fn noisy_table_shape() {
+        let mut rng = Rng::new(1);
+        let t = noisy_table(50, &TraceParams::default(), &mut rng);
+        assert_eq!(t.len(), 51);
+        assert_eq!(t[0], 0.0);
+        assert!(t[1..].iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn noise_makes_arbitrary_regime() {
+        let mut rng = Rng::new(2);
+        let p = TraceParams { noise_sigma: 0.4, ..Default::default() };
+        let t = noisy_table(60, &p, &mut rng);
+        let c = table_cost(t);
+        assert_eq!(classify(&c, 0, 60), MarginalRegime::Arbitrary);
+    }
+
+    #[test]
+    fn isotonic_is_monotone_and_preserves_sorted() {
+        let sorted = vec![0.0, 1.0, 2.0, 5.0];
+        assert_eq!(isotonic(&sorted), sorted);
+        let messy = vec![1.0, 3.0, 2.0, 4.0, 0.0, 6.0];
+        let iso = isotonic(&messy);
+        for w in iso.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+        // projection preserves the total (least-squares with equal weights)
+        let s1: f64 = messy.iter().sum();
+        let s2: f64 = iso.iter().sum();
+        assert!((s1 - s2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn isotonic_repaired_table_has_nonnegative_marginals() {
+        let mut rng = Rng::new(3);
+        let p = TraceParams { noise_sigma: 0.5, spike_prob: 0.2, ..Default::default() };
+        let t = isotonic(&noisy_table(40, &p, &mut rng));
+        let c = table_cost(t.clone());
+        // Costs are now monotonically increasing (all marginals >= 0) —
+        // eq. (6)'s precondition. The marginal *regime* can still be
+        // Arbitrary: PAVA makes values monotone, not their differences.
+        for j in 1..=40 {
+            assert!(c.marginal(j, 0) >= -1e-12);
+        }
+        for w in t.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn clean_linear_trace_is_constant_regime() {
+        let mut rng = Rng::new(4);
+        let p = TraceParams { noise_sigma: 0.0, spike_prob: 0.0, ..Default::default() };
+        let t = noisy_table(30, &p, &mut rng);
+        assert_eq!(classify(&table_cost(t), 0, 30), MarginalRegime::Constant);
+    }
+}

@@ -1,0 +1,52 @@
+//! Crate-wide error type and result alias.
+
+/// Errors produced anywhere in the fedzero stack.
+#[derive(Debug, thiserror::Error)]
+pub enum FedError {
+    /// The problem instance is malformed (violates the validity conditions
+    /// of §3: `L_i <= U_i`, `ΣL <= T <= ΣU`, empty resource set, ...).
+    #[error("invalid instance: {0}")]
+    InvalidInstance(String),
+
+    /// A scheduler was invoked on an instance outside its declared scenario
+    /// (e.g. MarIn on decreasing marginal costs).
+    #[error("scenario mismatch: {0}")]
+    ScenarioMismatch(String),
+
+    /// No feasible schedule exists (should not happen on valid instances).
+    #[error("infeasible: {0}")]
+    Infeasible(String),
+
+    /// A produced schedule failed validation.
+    #[error("invalid schedule: {0}")]
+    InvalidSchedule(String),
+
+    /// Configuration file / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Artifact manifest or HLO loading problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Federated-learning loop failures (aggregation shape mismatch, ...).
+    #[error("fl error: {0}")]
+    Fl(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for FedError {
+    fn from(e: xla::Error) -> Self {
+        FedError::Runtime(format!("{e:?}"))
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, FedError>;

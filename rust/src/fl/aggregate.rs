@@ -1,0 +1,93 @@
+//! Model aggregation: FedAvg (McMahan et al. [1]).
+//!
+//! The server combines device updates weighted by the amount of data each
+//! trained on — here the scheduler's assignment `x_i`, so the workload
+//! distribution directly drives both the energy cost *and* the aggregation
+//! weights.
+
+use crate::error::{FedError, Result};
+use crate::runtime::ParamSet;
+
+/// Weighted average of parameter sets: `Σ w_i · p_i / Σ w_i`.
+pub fn fedavg(updates: &[(ParamSet, f64)]) -> Result<ParamSet> {
+    let total: f64 = updates.iter().map(|(_, w)| *w).sum();
+    if updates.is_empty() || total <= 0.0 {
+        return Err(FedError::Fl("fedavg: no positively-weighted updates".into()));
+    }
+    let mut acc = updates[0].0.clone();
+    acc.scale((updates[0].1 / total) as f32);
+    for (p, w) in &updates[1..] {
+        acc.add_scaled(p, (*w / total) as f32)?;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Dtype, ModelSpec};
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            family: "mlp".into(),
+            train_hlo: "/tmp/a".into(),
+            eval_hlo: "/tmp/b".into(),
+            params_file: "/tmp/c".into(),
+            param_shapes: vec![vec![2], vec![2]],
+            param_count: 4,
+            n_param_tensors: 2,
+            batch: 1,
+            lr: 0.1,
+            input_shape: vec![1, 2],
+            input_dtype: Dtype::F32,
+            label_shape: vec![1],
+            label_dtype: Dtype::S32,
+            num_classes: 2,
+        }
+    }
+
+    fn params(v: f32) -> ParamSet {
+        ParamSet::from_flat(&spec(), &[v; 4]).unwrap()
+    }
+
+    #[test]
+    fn equal_weights_average() {
+        let avg = fedavg(&[(params(1.0), 1.0), (params(3.0), 1.0)]).unwrap();
+        assert_eq!(avg.tensor(0), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn weights_proportional_to_tasks() {
+        // x_1 = 3, x_2 = 1 → weights 0.75 / 0.25
+        let avg = fedavg(&[(params(0.0), 3.0), (params(4.0), 1.0)]).unwrap();
+        assert_eq!(avg.tensor(1), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn single_update_identity() {
+        let avg = fedavg(&[(params(7.0), 5.0)]).unwrap();
+        assert_eq!(avg.tensor(0), &[7.0, 7.0]);
+    }
+
+    #[test]
+    fn rejects_empty_or_zero_weight() {
+        assert!(fedavg(&[]).is_err());
+        assert!(fedavg(&[(params(1.0), 0.0)]).is_err());
+    }
+
+    #[test]
+    fn idempotent_on_identical_updates() {
+        let avg = fedavg(&[
+            (params(2.5), 1.0),
+            (params(2.5), 2.0),
+            (params(2.5), 7.0),
+        ])
+        .unwrap();
+        for t in 0..2 {
+            for &x in avg.tensor(t) {
+                assert!((x - 2.5).abs() < 1e-6);
+            }
+        }
+    }
+}

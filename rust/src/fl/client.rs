@@ -1,0 +1,83 @@
+//! Simulated FL client: a device that runs real PJRT training steps on its
+//! local shard and accounts the energy its power model predicts.
+
+use crate::energy::profiles::Device;
+use crate::error::Result;
+use crate::fl::data::{Dataset, Shard};
+use crate::runtime::{Dtype, ModelRuntime, ParamSet};
+use crate::util::rng::Rng;
+
+/// Result of one device's local training in one round.
+#[derive(Clone, Debug)]
+pub struct LocalUpdate {
+    /// Device id.
+    pub device: usize,
+    /// Tasks (mini-batches) actually trained.
+    pub tasks: usize,
+    /// Updated local parameters.
+    pub params: ParamSet,
+    /// Simulated energy drawn from the device's power model (joules).
+    pub energy_j: f64,
+    /// Simulated wall-clock training time on the device (seconds).
+    pub sim_time_s: f64,
+    /// Mean training loss over the local steps.
+    pub mean_loss: f64,
+}
+
+/// One simulated client.
+pub struct SimClient {
+    pub device: Device,
+    pub shard: Shard,
+    rng: Rng,
+}
+
+impl SimClient {
+    /// Create a client with its own RNG stream.
+    pub fn new(device: Device, shard: Shard, rng: Rng) -> Self {
+        Self { device, shard, rng }
+    }
+
+    /// Number of locally available mini-batch samples.
+    pub fn data_len(&self) -> usize {
+        self.shard.len()
+    }
+
+    /// Run `tasks` sequential training steps from `global`, returning the
+    /// local update. Energy/time come from the device's power model — the
+    /// same model the scheduler's cost function was built from, so measured
+    /// energy matches scheduled cost by construction (the "profiler is
+    /// accurate" setting; `tracegen` covers the noisy case).
+    pub fn local_train(
+        &mut self,
+        runtime: &ModelRuntime,
+        dataset: &Dataset,
+        global: &ParamSet,
+        tasks: usize,
+    ) -> Result<LocalUpdate> {
+        let mut params = global.clone();
+        let mut loss_sum = 0.0f64;
+        for _ in 0..tasks {
+            let batch = dataset.batch(runtime.spec(), &self.shard, &mut self.rng)?;
+            let x = match runtime.spec().input_dtype {
+                Dtype::F32 => runtime.input_literal_f32(&batch.x_f32)?,
+                Dtype::S32 => runtime.input_literal_i32(&batch.x_i32)?,
+            };
+            let y = runtime.label_literal(&batch.y)?;
+            let (next, loss) = runtime.train_step(&params, &x, &y)?;
+            params = next;
+            loss_sum += loss as f64;
+        }
+        let energy_j = self.device.power.energy_j(tasks);
+        if let Some(b) = self.device.battery.as_mut() {
+            b.drain(energy_j);
+        }
+        Ok(LocalUpdate {
+            device: self.device.id,
+            tasks,
+            params,
+            energy_j,
+            sim_time_s: self.device.power.time_s(tasks),
+            mean_loss: if tasks > 0 { loss_sum / tasks as f64 } else { 0.0 },
+        })
+    }
+}

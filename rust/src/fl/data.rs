@@ -1,0 +1,386 @@
+//! Synthetic datasets and non-IID partitioning.
+//!
+//! * **Gaussian mixture** (for the MLP): `classes` isotropic clusters in
+//!   `dim` dimensions with unit noise — learnable but not trivial.
+//! * **Markov bytes** (for the transformer LM): an order-1 Markov chain
+//!   over 256 symbols with a sparse transition table (each state has few
+//!   likely successors), giving a per-token entropy far below `ln 256` so
+//!   the loss curve has room to fall.
+//!
+//! Partitioning follows the FL literature's standard non-IID protocol:
+//! Dirichlet(α) label/state skew per device — small α gives each device a
+//! peaked distribution (heterogeneous data), large α approaches IID.
+
+use crate::error::{FedError, Result};
+use crate::runtime::{Dtype, ModelSpec};
+use crate::util::rng::Rng;
+
+/// A batch ready for the runtime: features XOR tokens, plus labels.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x_f32: Vec<f32>,
+    pub x_i32: Vec<i32>,
+    pub y: Vec<i32>,
+}
+
+/// A device's local data: indices into the global dataset.
+#[derive(Clone, Debug, Default)]
+pub struct Shard {
+    pub indices: Vec<usize>,
+}
+
+impl Shard {
+    /// Number of local samples.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// True if the shard is empty.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+}
+
+/// The global synthetic dataset.
+#[derive(Clone, Debug)]
+pub enum Dataset {
+    /// Gaussian-mixture classification: row-major `features[n * dim]`.
+    Mixture {
+        features: Vec<f32>,
+        labels: Vec<i32>,
+        n: usize,
+        dim: usize,
+        classes: usize,
+    },
+    /// Markov byte stream: windows of `seq + 1` tokens are training
+    /// samples (`x = w[..seq]`, `y = w[1..]`).
+    Bytes { stream: Vec<i32>, seq: usize },
+}
+
+impl Dataset {
+    /// Synthesize a dataset matching a model spec.
+    pub fn synth(spec: &ModelSpec, n_samples: usize, rng: &mut Rng) -> Dataset {
+        match spec.input_dtype {
+            Dtype::F32 => {
+                let dim = spec.input_shape[1];
+                let classes = spec.num_classes;
+                // Cluster centers at radius 2 (unit noise → Bayes error small
+                // but nonzero, features O(1) so He-init logits start tame).
+                let centers: Vec<f64> = (0..classes * dim)
+                    .map(|_| rng.normal() * 2.0)
+                    .collect();
+                let mut features = Vec::with_capacity(n_samples * dim);
+                let mut labels = Vec::with_capacity(n_samples);
+                for _ in 0..n_samples {
+                    let c = rng.index(classes);
+                    labels.push(c as i32);
+                    for d in 0..dim {
+                        features.push((centers[c * dim + d] + rng.normal()) as f32);
+                    }
+                }
+                Dataset::Mixture { features, labels, n: n_samples, dim, classes }
+            }
+            Dtype::S32 => {
+                let seq = spec.input_shape[1];
+                let vocab = spec.num_classes;
+                // Sparse Markov chain: each state transitions to one of 4
+                // preferred successors with prob 0.85, else uniform.
+                let fanout = 4;
+                let succ: Vec<usize> =
+                    (0..vocab * fanout).map(|_| rng.index(vocab)).collect();
+                let len = n_samples * (seq + 1);
+                let mut stream = Vec::with_capacity(len);
+                let mut state = rng.index(vocab);
+                for _ in 0..len {
+                    stream.push(state as i32);
+                    state = if rng.bool(0.85) {
+                        succ[state * fanout + rng.index(fanout)]
+                    } else {
+                        rng.index(vocab)
+                    };
+                }
+                Dataset::Bytes { stream, seq }
+            }
+        }
+    }
+
+    /// Number of addressable samples (mixture rows or token windows).
+    pub fn len(&self) -> usize {
+        match self {
+            Dataset::Mixture { n, .. } => *n,
+            Dataset::Bytes { stream, seq } => stream.len().saturating_sub(*seq),
+        }
+    }
+
+    /// True if no samples.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Split into a train shard and a held-out eval shard (`eval_count`
+    /// samples from the tail — same distribution, disjoint indices).
+    pub fn split(&self, eval_count: usize) -> (Shard, Shard) {
+        let n = self.len();
+        let eval_count = eval_count.min(n / 4);
+        let n_train = n - eval_count;
+        (
+            Shard { indices: (0..n_train).collect() },
+            Shard { indices: (n_train..n).collect() },
+        )
+    }
+
+    /// Dirichlet(α) non-IID partition of a shard into `n_devices` shards.
+    ///
+    /// Mixture: per-class Dirichlet proportions (label skew).
+    /// Bytes: contiguous stream segments with Dirichlet sizes (each device
+    /// sees its own region of the chain — topic skew).
+    pub fn partition(
+        &self,
+        within: &Shard,
+        n_devices: usize,
+        alpha: f64,
+        rng: &mut Rng,
+    ) -> Vec<Shard> {
+        assert!(n_devices > 0);
+        let mut shards = vec![Shard::default(); n_devices];
+        match self {
+            Dataset::Mixture { labels, classes, .. } => {
+                for c in 0..*classes {
+                    let idx: Vec<usize> = within
+                        .indices
+                        .iter()
+                        .copied()
+                        .filter(|&i| labels[i] as usize == c)
+                        .collect();
+                    let props = rng.dirichlet(alpha, n_devices);
+                    // Assign each sample of class c to a device drawn from
+                    // the class's device distribution.
+                    for &i in &idx {
+                        shards[rng.categorical(&props)].indices.push(i);
+                    }
+                }
+            }
+            Dataset::Bytes { .. } => {
+                let n = within.len();
+                let props = rng.dirichlet(alpha, n_devices);
+                let mut start = 0usize;
+                for (d, p) in props.iter().enumerate() {
+                    let take = if d == n_devices - 1 {
+                        n - start
+                    } else {
+                        ((p * n as f64) as usize).min(n - start)
+                    };
+                    shards[d].indices = within.indices[start..start + take].to_vec();
+                    start += take;
+                }
+            }
+        }
+        shards
+    }
+
+    /// Sample one mini-batch from a shard (with replacement — FL clients
+    /// commonly run multiple local epochs over small shards).
+    pub fn batch(&self, spec: &ModelSpec, shard: &Shard, rng: &mut Rng) -> Result<Batch> {
+        if shard.is_empty() {
+            return Err(FedError::Fl("cannot batch from empty shard".into()));
+        }
+        let b = spec.batch;
+        match self {
+            Dataset::Mixture { features, labels, dim, .. } => {
+                let mut x = Vec::with_capacity(b * dim);
+                let mut y = Vec::with_capacity(b);
+                for _ in 0..b {
+                    let i = shard.indices[rng.index(shard.len())];
+                    x.extend_from_slice(&features[i * dim..(i + 1) * dim]);
+                    y.push(labels[i]);
+                }
+                Ok(Batch { x_f32: x, x_i32: Vec::new(), y })
+            }
+            Dataset::Bytes { stream, seq } => {
+                let mut x = Vec::with_capacity(b * seq);
+                let mut y = Vec::with_capacity(b * seq);
+                for _ in 0..b {
+                    let w = shard.indices[rng.index(shard.len())];
+                    x.extend_from_slice(&stream[w..w + seq]);
+                    y.extend_from_slice(&stream[w + 1..w + seq + 1]);
+                }
+                Ok(Batch { x_f32: Vec::new(), x_i32: x, y })
+            }
+        }
+    }
+
+    /// A shard covering the whole dataset (held-out evaluation uses a
+    /// fresh dataset instance, IID by construction).
+    pub fn full_shard(&self) -> Shard {
+        Shard { indices: (0..self.len()).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Dtype, ModelSpec};
+
+    fn mlp_spec() -> ModelSpec {
+        ModelSpec {
+            name: "mlp".into(),
+            family: "mlp".into(),
+            train_hlo: "/tmp/a".into(),
+            eval_hlo: "/tmp/b".into(),
+            params_file: "/tmp/c".into(),
+            param_shapes: vec![vec![4, 8], vec![8]],
+            param_count: 40,
+            n_param_tensors: 2,
+            batch: 16,
+            lr: 0.1,
+            input_shape: vec![16, 4],
+            input_dtype: Dtype::F32,
+            label_shape: vec![16],
+            label_dtype: Dtype::S32,
+            num_classes: 3,
+        }
+    }
+
+    fn tfm_spec() -> ModelSpec {
+        ModelSpec {
+            input_shape: vec![4, 8],
+            input_dtype: Dtype::S32,
+            label_shape: vec![4, 8],
+            batch: 4,
+            num_classes: 32,
+            ..mlp_spec()
+        }
+    }
+
+    #[test]
+    fn mixture_shapes_and_labels() {
+        let mut rng = Rng::new(1);
+        let ds = Dataset::synth(&mlp_spec(), 500, &mut rng);
+        assert_eq!(ds.len(), 500);
+        if let Dataset::Mixture { features, labels, dim, classes, .. } = &ds {
+            assert_eq!(features.len(), 500 * dim);
+            assert!(labels.iter().all(|&l| (l as usize) < *classes));
+        } else {
+            panic!("wrong variant");
+        }
+    }
+
+    #[test]
+    fn mixture_is_learnable_structure() {
+        // Same-class points are closer to their class mean than to others
+        // (sanity that clusters actually separate).
+        let mut rng = Rng::new(2);
+        let spec = mlp_spec();
+        let ds = Dataset::synth(&spec, 2000, &mut rng);
+        if let Dataset::Mixture { features, labels, dim, classes, n } = &ds {
+            let mut means = vec![0.0f64; classes * dim];
+            let mut counts = vec![0usize; *classes];
+            for i in 0..*n {
+                let c = labels[i] as usize;
+                counts[c] += 1;
+                for d in 0..*dim {
+                    means[c * dim + d] += features[i * dim + d] as f64;
+                }
+            }
+            for c in 0..*classes {
+                for d in 0..*dim {
+                    means[c * dim + d] /= counts[c].max(1) as f64;
+                }
+            }
+            let mut correct = 0;
+            for i in 0..200 {
+                let mut best = 0;
+                let mut best_d = f64::INFINITY;
+                for c in 0..*classes {
+                    let dist: f64 = (0..*dim)
+                        .map(|d| {
+                            let diff = features[i * dim + d] as f64 - means[c * dim + d];
+                            diff * diff
+                        })
+                        .sum();
+                    if dist < best_d {
+                        best_d = dist;
+                        best = c;
+                    }
+                }
+                if best == labels[i] as usize {
+                    correct += 1;
+                }
+            }
+            assert!(correct > 150, "nearest-mean acc {correct}/200");
+        }
+    }
+
+    #[test]
+    fn bytes_windows() {
+        let mut rng = Rng::new(3);
+        let ds = Dataset::synth(&tfm_spec(), 100, &mut rng);
+        assert!(ds.len() > 0);
+        if let Dataset::Bytes { stream, seq } = &ds {
+            assert_eq!(*seq, 8);
+            assert!(stream.iter().all(|&t| (0..32).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn partition_covers_everything_once_mixture() {
+        let mut rng = Rng::new(4);
+        let ds = Dataset::synth(&mlp_spec(), 1000, &mut rng);
+        let shards = ds.partition(&ds.full_shard(), 8, 0.5, &mut rng);
+        let mut all: Vec<usize> =
+            shards.iter().flat_map(|s| s.indices.iter().copied()).collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 1000);
+        all.dedup();
+        assert_eq!(all.len(), 1000);
+    }
+
+    #[test]
+    fn low_alpha_is_skewed() {
+        let mut rng = Rng::new(5);
+        let ds = Dataset::synth(&mlp_spec(), 3000, &mut rng);
+        let shards = ds.partition(&ds.full_shard(), 6, 0.1, &mut rng);
+        // With α = 0.1 at least one device should be heavily skewed toward
+        // one class.
+        if let Dataset::Mixture { labels, classes, .. } = &ds {
+            let mut max_frac = 0.0f64;
+            for s in &shards {
+                if s.len() < 30 {
+                    continue;
+                }
+                let mut counts = vec![0usize; *classes];
+                for &i in &s.indices {
+                    counts[labels[i] as usize] += 1;
+                }
+                let m = *counts.iter().max().unwrap() as f64 / s.len() as f64;
+                max_frac = max_frac.max(m);
+            }
+            assert!(max_frac > 0.5, "no skew found: {max_frac}");
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut rng = Rng::new(6);
+        let spec = mlp_spec();
+        let ds = Dataset::synth(&spec, 200, &mut rng);
+        let shard = ds.full_shard();
+        let b = ds.batch(&spec, &shard, &mut rng).unwrap();
+        assert_eq!(b.x_f32.len(), 16 * 4);
+        assert_eq!(b.y.len(), 16);
+
+        let tspec = tfm_spec();
+        let tds = Dataset::synth(&tspec, 100, &mut rng);
+        let tb = tds.batch(&tspec, &tds.full_shard(), &mut rng).unwrap();
+        assert_eq!(tb.x_i32.len(), 4 * 8);
+        assert_eq!(tb.y.len(), 4 * 8);
+    }
+
+    #[test]
+    fn empty_shard_errors() {
+        let mut rng = Rng::new(7);
+        let spec = mlp_spec();
+        let ds = Dataset::synth(&spec, 50, &mut rng);
+        assert!(ds.batch(&spec, &Shard::default(), &mut rng).is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Dynamic fleet behaviour (paper §6 future work: "handle dynamic changes
+//! in the system — changes in the cost behavior or loss of a device").
+//!
+//! * [`Availability`] — per-device online/offline churn (a two-state
+//!   Markov chain) deciding who can be selected each round;
+//! * [`CostDrift`] — multiplicative drift of a device's energy profile
+//!   over rounds (thermal conditions, battery aging, co-running apps);
+//! * [`Dropout`] — mid-round failure: the device burns energy for the
+//!   tasks it completed but its update is lost.
+//!
+//! The server consumes these through [`DynamicsConfig`]; all effects are
+//! seeded and reproducible.
+
+use crate::util::rng::Rng;
+
+/// Two-state (online/offline) Markov availability model.
+#[derive(Clone, Debug)]
+pub struct Availability {
+    /// P(offline → online) per round.
+    pub p_join: f64,
+    /// P(online → offline) per round.
+    pub p_leave: f64,
+    online: Vec<bool>,
+}
+
+impl Availability {
+    /// All devices start online.
+    pub fn new(n: usize, p_join: f64, p_leave: f64) -> Self {
+        Self { p_join, p_leave, online: vec![true; n] }
+    }
+
+    /// Advance one round; returns the indices of online devices.
+    pub fn step(&mut self, rng: &mut Rng) -> Vec<usize> {
+        for state in self.online.iter_mut() {
+            *state = if *state {
+                !rng.bool(self.p_leave)
+            } else {
+                rng.bool(self.p_join)
+            };
+        }
+        self.onlines()
+    }
+
+    /// Currently-online device indices.
+    pub fn onlines(&self) -> Vec<usize> {
+        self.online
+            .iter()
+            .enumerate()
+            .filter(|(_, &o)| o)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Whether device `i` is online.
+    pub fn is_online(&self, i: usize) -> bool {
+        self.online[i]
+    }
+
+    /// Force a state (tests / trace replay).
+    pub fn set(&mut self, i: usize, online: bool) {
+        self.online[i] = online;
+    }
+
+    /// Stationary online probability of the chain.
+    pub fn stationary(&self) -> f64 {
+        if self.p_join + self.p_leave == 0.0 {
+            1.0
+        } else {
+            self.p_join / (self.p_join + self.p_leave)
+        }
+    }
+}
+
+/// Multiplicative random-walk drift on per-device energy scale.
+#[derive(Clone, Debug)]
+pub struct CostDrift {
+    /// Per-round log-normal drift sigma (0 disables).
+    pub sigma: f64,
+    scale: Vec<f64>,
+}
+
+impl CostDrift {
+    /// Unit scales for `n` devices.
+    pub fn new(n: usize, sigma: f64) -> Self {
+        Self { sigma, scale: vec![1.0; n] }
+    }
+
+    /// Advance one round.
+    pub fn step(&mut self, rng: &mut Rng) {
+        if self.sigma == 0.0 {
+            return;
+        }
+        for s in self.scale.iter_mut() {
+            *s = (*s * rng.lognormal(0.0, self.sigma)).clamp(0.25, 4.0);
+        }
+    }
+
+    /// Current energy multiplier of device `i`.
+    pub fn scale(&self, i: usize) -> f64 {
+        self.scale[i]
+    }
+}
+
+/// Mid-round dropout model.
+#[derive(Clone, Copy, Debug)]
+pub struct Dropout {
+    /// Probability that a participating device fails before uploading.
+    pub p_fail: f64,
+}
+
+impl Dropout {
+    /// Sample whether a device fails this round, and if so, the fraction of
+    /// its assigned work it completed before dying (energy is still burnt
+    /// for that fraction).
+    pub fn sample(&self, rng: &mut Rng) -> Option<f64> {
+        if rng.bool(self.p_fail) {
+            Some(rng.f64())
+        } else {
+            None
+        }
+    }
+}
+
+/// Bundle consumed by the server.
+#[derive(Clone, Debug)]
+pub struct DynamicsConfig {
+    pub availability: Option<Availability>,
+    pub drift: Option<CostDrift>,
+    pub dropout: Option<Dropout>,
+}
+
+impl DynamicsConfig {
+    /// Static fleet: everything disabled.
+    pub fn none() -> Self {
+        Self { availability: None, drift: None, dropout: None }
+    }
+
+    /// A realistic mobile-fleet preset.
+    pub fn mobile(n: usize) -> Self {
+        Self {
+            availability: Some(Availability::new(n, 0.3, 0.1)),
+            drift: Some(CostDrift::new(n, 0.05)),
+            dropout: Some(Dropout { p_fail: 0.05 }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn availability_stationary_fraction() {
+        let mut av = Availability::new(500, 0.3, 0.1);
+        let mut rng = Rng::new(1);
+        // Burn in, then measure.
+        for _ in 0..50 {
+            av.step(&mut rng);
+        }
+        let mut total = 0usize;
+        let rounds = 200;
+        for _ in 0..rounds {
+            total += av.step(&mut rng).len();
+        }
+        let frac = total as f64 / (rounds * 500) as f64;
+        let expect = av.stationary(); // 0.75
+        assert!((frac - expect).abs() < 0.05, "frac {frac} vs {expect}");
+    }
+
+    #[test]
+    fn availability_deterministic() {
+        let mut a = Availability::new(20, 0.5, 0.5);
+        let mut b = Availability::new(20, 0.5, 0.5);
+        let mut ra = Rng::new(9);
+        let mut rb = Rng::new(9);
+        for _ in 0..10 {
+            assert_eq!(a.step(&mut ra), b.step(&mut rb));
+        }
+    }
+
+    #[test]
+    fn zero_churn_keeps_everyone_online() {
+        let mut av = Availability::new(10, 0.0, 0.0);
+        let mut rng = Rng::new(2);
+        assert_eq!(av.step(&mut rng).len(), 10);
+        assert_eq!(av.stationary(), 1.0);
+    }
+
+    #[test]
+    fn drift_stays_in_bounds_and_moves() {
+        let mut d = CostDrift::new(10, 0.2);
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            d.step(&mut rng);
+            for i in 0..10 {
+                assert!((0.25..=4.0).contains(&d.scale(i)));
+            }
+        }
+        // After many steps scales should have diversified.
+        let distinct = (0..10)
+            .map(|i| (d.scale(i) * 1e6) as i64)
+            .collect::<std::collections::BTreeSet<_>>();
+        assert!(distinct.len() > 5);
+    }
+
+    #[test]
+    fn zero_sigma_never_moves() {
+        let mut d = CostDrift::new(4, 0.0);
+        let mut rng = Rng::new(4);
+        d.step(&mut rng);
+        assert!((0..4).all(|i| d.scale(i) == 1.0));
+    }
+
+    #[test]
+    fn dropout_rate_matches() {
+        let dropout = Dropout { p_fail: 0.3 };
+        let mut rng = Rng::new(5);
+        let fails = (0..10_000)
+            .filter(|_| dropout.sample(&mut rng).is_some())
+            .count();
+        assert!((2_700..3_300).contains(&fails), "{fails}");
+    }
+
+    #[test]
+    fn dropout_fraction_in_unit_interval() {
+        let dropout = Dropout { p_fail: 1.0 };
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let f = dropout.sample(&mut rng).unwrap();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+}

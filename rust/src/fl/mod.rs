@@ -1,0 +1,25 @@
+//! Federated learning: server, simulated clients, aggregation, and
+//! synthetic data — the experiment platform the paper's §6 envisions
+//! ("conduct experiments in FL platforms to evaluate the impact of our
+//! algorithms compared to other solutions ... in energy consumption,
+//! execution time, and accuracy").
+//!
+//! Per round (`server::Server::round`):
+//! 1. sample participating devices;
+//! 2. derive the Minimal Cost FL Schedule instance `(R, T, U, L, C)` from
+//!    their power models, data sizes and batteries;
+//! 3. run the configured scheduler policy (one of the paper's optimal
+//!    algorithms or a baseline);
+//! 4. every device with `x_i > 0` runs `x_i` real PJRT training steps on
+//!    its own (non-IID) shard, starting from the global model;
+//! 5. energy is integrated per device from its power model;
+//! 6. FedAvg aggregation weighted by `x_i`;
+//! 7. the global model is evaluated on held-out data.
+
+pub mod aggregate;
+pub mod client;
+pub mod data;
+pub mod dynamics;
+pub mod server;
+
+pub use server::Server;

@@ -1,0 +1,334 @@
+//! The FL coordinator: device registry, per-round scheduling, dispatch,
+//! aggregation, evaluation, and energy accounting.
+
+use std::path::Path;
+
+use crate::config::{Policy, TrainConfig};
+use crate::energy::power::Behavior;
+use crate::energy::profiles::{BehaviorMix, Fleet};
+use crate::error::{FedError, Result};
+use crate::fl::aggregate::fedavg;
+use crate::fl::client::SimClient;
+use crate::fl::data::Dataset;
+use crate::fl::dynamics::DynamicsConfig;
+use crate::sched::costs::CostFn;
+use crate::metrics::{EnergyLedger, MetricsHub, RoundLog, Timer, TrainingLog};
+use crate::sched::instance::Instance;
+use crate::sched::{auto, validate};
+use crate::runtime::{Dtype, ModelRuntime, ParamSet};
+use crate::util::rng::Rng;
+
+/// Behaviour mix used when the config does not pin one (kept homogeneous so
+/// the specialized algorithms apply; `Mixed` exercises the DP).
+pub const DEFAULT_MIX: BehaviorMix = BehaviorMix::Homogeneous(Behavior::Linear);
+
+/// The federated-learning server.
+pub struct Server {
+    cfg: TrainConfig,
+    runtime: ModelRuntime,
+    dataset: Dataset,
+    /// Fixed held-out batches (as PJRT literals) reused every round, so the
+    /// eval series is comparable across rounds and policies.
+    eval_batches: Vec<(xla::Literal, xla::Literal)>,
+    clients: Vec<SimClient>,
+    global: ParamSet,
+    rng: Rng,
+    dynamics: DynamicsConfig,
+    pub ledger: EnergyLedger,
+    pub metrics: MetricsHub,
+    pub log: TrainingLog,
+}
+
+impl Server {
+    /// Build a server: load artifacts, synthesize + partition data, sample
+    /// the fleet.
+    pub fn new(cfg: TrainConfig, mix: BehaviorMix) -> Result<Server> {
+        cfg.validate()?;
+        let runtime = ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.model)?;
+        let mut rng = Rng::new(cfg.seed);
+
+        let n_samples = 4000.max(cfg.devices * 64) + 512;
+        let mut data_rng = rng.fork();
+        let dataset = Dataset::synth(runtime.spec(), n_samples, &mut data_rng);
+        // Same distribution, disjoint tail indices for evaluation.
+        let (train_shard, eval_shard) = dataset.split(512);
+
+        // Freeze 8 held-out batches as literals once, so the eval series is
+        // comparable across rounds and policies.
+        let mut eval_batches = Vec::with_capacity(8);
+        for _ in 0..8 {
+            let b = dataset.batch(runtime.spec(), &eval_shard, &mut data_rng)?;
+            let x = match runtime.spec().input_dtype {
+                Dtype::F32 => runtime.input_literal_f32(&b.x_f32)?,
+                Dtype::S32 => runtime.input_literal_i32(&b.x_i32)?,
+            };
+            let y = runtime.label_literal(&b.y)?;
+            eval_batches.push((x, y));
+        }
+
+        let fleet = Fleet::sample(cfg.devices, mix, &mut rng);
+        let shards =
+            dataset.partition(&train_shard, cfg.devices, cfg.dirichlet_alpha, &mut rng);
+        let clients: Vec<SimClient> = fleet
+            .devices
+            .into_iter()
+            .zip(shards)
+            .map(|(d, s)| {
+                let crng = rng.fork();
+                SimClient::new(d, s, crng)
+            })
+            .collect();
+
+        let global = runtime.initial_params();
+        Ok(Server {
+            cfg,
+            runtime,
+            dataset,
+            eval_batches,
+            clients,
+            global,
+            rng,
+            dynamics: DynamicsConfig::none(),
+            ledger: EnergyLedger::new(),
+            metrics: MetricsHub::new(),
+            log: TrainingLog::new(),
+        })
+    }
+
+    /// Current global parameters.
+    pub fn global_params(&self) -> &ParamSet {
+        &self.global
+    }
+
+    /// The training configuration.
+    pub fn cfg(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Install dynamic fleet behaviour (availability churn, cost drift,
+    /// mid-round dropout — paper §6 future work).
+    pub fn set_dynamics(&mut self, dynamics: DynamicsConfig) {
+        self.dynamics = dynamics;
+    }
+
+    /// The runtime (for external evaluation).
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.runtime
+    }
+
+    /// Build this round's scheduling instance over the selected clients.
+    ///
+    /// `U_i` = device data/battery cap, further clamped to the device's
+    /// *shard* size (can't train on more distinct batches than it has
+    /// data for — over-representation guard [3]); `L_i` = configured
+    /// minimum participation; `T` clamped to fleet capacity.
+    fn build_instance(&self, selected: &[usize]) -> Result<(Instance, usize)> {
+        let raw_uppers: Vec<usize> = selected
+            .iter()
+            .map(|&c| {
+                let cl = &self.clients[c];
+                cl.device.upper_limit().min(cl.data_len())
+            })
+            .collect();
+        let capacity: usize = raw_uppers.iter().sum();
+        if capacity == 0 {
+            return Err(FedError::Fl("selected devices have no capacity".into()));
+        }
+        let t = self.cfg.tasks_per_round.min(capacity);
+
+        // Over-representation guard (§6): cap any device at max_share · T,
+        // doubling the cap until the capped fleet can still absorb T.
+        let mut cap = ((t as f64 * self.cfg.max_share).ceil() as usize).max(1);
+        let uppers: Vec<usize> = loop {
+            let capped: Vec<usize> = raw_uppers.iter().map(|&u| u.min(cap)).collect();
+            if capped.iter().sum::<usize>() >= t {
+                break capped;
+            }
+            cap *= 2;
+        };
+
+        // Cost drift scales the scheduler-visible cost exactly as it scales
+        // the measured energy — the profiler tracks the drift.
+        let drift_scale = |slot: usize, c: usize| -> CostFn {
+            let base = self.clients[c].device.cost_fn();
+            match &self.dynamics.drift {
+                Some(d) => {
+                    let _ = slot;
+                    CostFn::Scaled { weight: d.scale(c), inner: Box::new(base) }
+                }
+                None => base,
+            }
+        };
+        let lower: Vec<usize> = uppers
+            .iter()
+            .map(|&u| self.cfg.min_tasks.min(u))
+            .collect();
+        // ΣL must not exceed T; relax lower limits if the config overshoots.
+        let sum_l: usize = lower.iter().sum();
+        let lower = if sum_l > t { vec![0; uppers.len()] } else { lower };
+        let costs = selected
+            .iter()
+            .enumerate()
+            .map(|(slot, &c)| drift_scale(slot, c))
+            .collect();
+        Ok((Instance::new(t, lower, uppers, costs)?, t))
+    }
+
+    /// Execute one round; returns the logged row.
+    pub fn round(&mut self, round_idx: usize) -> Result<RoundLog> {
+        // 0. advance fleet dynamics.
+        if let Some(d) = self.dynamics.drift.as_mut() {
+            d.step(&mut self.rng);
+        }
+        let pool: Vec<usize> = match self.dynamics.availability.as_mut() {
+            Some(av) => av.step(&mut self.rng),
+            None => (0..self.clients.len()).collect(),
+        };
+        if pool.is_empty() {
+            // Nobody online: an empty round (no energy, model unchanged).
+            self.ledger.begin_round();
+            let eval_loss = self.evaluate()?;
+            let row = RoundLog {
+                round: round_idx,
+                policy: self.cfg.policy.to_string(),
+                loss: eval_loss,
+                energy_j: 0.0,
+                sched_time_s: 0.0,
+                train_time_s: 0.0,
+                participants: 0,
+                tasks: 0,
+            };
+            self.metrics.inc("empty_rounds", 1);
+            self.log.push(row.clone());
+            return Ok(row);
+        }
+
+        // 1. participant selection (FedAvg's client fraction C) from the
+        //    online pool.
+        let n = pool.len();
+        let k = ((self.clients.len() as f64 * self.cfg.participation).ceil() as usize)
+            .clamp(1, n);
+        let picks = self.rng.sample_indices(n, k);
+        let selected: Vec<usize> = picks.iter().map(|&i| pool[i]).collect();
+
+        // 2–3. schedule.
+        let (instance, t) = self.build_instance(&selected)?;
+        let timer = Timer::start();
+        let schedule = auto::solve_with(&instance, self.cfg.policy, &mut self.rng)?;
+        let sched_time_s = timer.elapsed_s();
+        validate::check(&instance, &schedule)?;
+        let predicted_j = validate::total_cost(&instance, &schedule);
+
+        // 4. local training on every device with x_i > 0.
+        self.ledger.begin_round();
+        let wall = Timer::start();
+        let mut updates = Vec::new();
+        let mut sim_time_s = 0.0f64;
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0usize;
+        for (slot, &c) in selected.iter().enumerate() {
+            let tasks = schedule.get(slot);
+            if tasks == 0 {
+                continue;
+            }
+            // Mid-round dropout: the device burns energy for the fraction
+            // of work it completed, but its update is lost (paper §6's
+            // "loss of a device").
+            let failed_at = self
+                .dynamics
+                .dropout
+                .as_ref()
+                .and_then(|d| d.sample(&mut self.rng));
+            let drift = self
+                .dynamics
+                .drift
+                .as_ref()
+                .map(|d| d.scale(c))
+                .unwrap_or(1.0);
+            if let Some(frac) = failed_at {
+                let done = ((tasks as f64) * frac).floor() as usize;
+                let wasted = self.clients[c].device.power.energy_j(done) * drift;
+                self.ledger.record(self.clients[c].device.id, wasted);
+                self.metrics.inc("dropouts", 1);
+                continue;
+            }
+            let mut update = {
+                let client = &mut self.clients[c];
+                client.local_train(&self.runtime, &self.dataset, &self.global, tasks)?
+            };
+            update.energy_j *= drift;
+            self.ledger.record(update.device, update.energy_j);
+            sim_time_s = sim_time_s.max(update.sim_time_s); // devices run in parallel
+            loss_sum += update.mean_loss * update.tasks as f64;
+            loss_n += update.tasks;
+            updates.push((update.params.clone(), update.tasks as f64));
+        }
+        let train_time_s = wall.elapsed_s();
+
+        // 5. aggregate.
+        if !updates.is_empty() {
+            self.global = fedavg(&updates)?;
+        }
+
+        // 6. held-out evaluation.
+        let eval_loss = self.evaluate()?;
+
+        let row = RoundLog {
+            round: round_idx,
+            policy: self.cfg.policy.to_string(),
+            loss: eval_loss,
+            energy_j: self.ledger.rounds().last().copied().unwrap_or(0.0),
+            sched_time_s,
+            train_time_s,
+            participants: updates.len(),
+            tasks: t,
+        };
+        self.metrics.inc("rounds", 1);
+        self.metrics.inc("tasks", t as u64);
+        self.metrics.set("train_loss", if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 });
+        self.metrics.set("eval_loss", eval_loss);
+        self.metrics.set("sim_round_time_s", sim_time_s);
+        self.metrics.set("predicted_energy_j", predicted_j);
+        self.log.push(row.clone());
+        Ok(row)
+    }
+
+    /// Held-out loss of the global model: mean over the frozen eval batches.
+    pub fn evaluate(&mut self) -> Result<f64> {
+        let mut sum = 0.0f64;
+        for (x, y) in &self.eval_batches {
+            sum += self.runtime.eval_step(&self.global, x, y)? as f64;
+        }
+        Ok(sum / self.eval_batches.len() as f64)
+    }
+
+    /// Run the full configured training; returns the log.
+    pub fn run(&mut self) -> Result<&TrainingLog> {
+        for r in 0..self.cfg.rounds {
+            let row = self.round(r)?;
+            if let Some(target) = self.cfg.target_loss {
+                if row.loss <= target {
+                    log::info!("target loss {target} reached at round {r}");
+                    break;
+                }
+            }
+        }
+        Ok(&self.log)
+    }
+
+    /// Convenience: run training with a given policy, returning
+    /// `(final_loss, total_energy_j)` — used by the comparison experiments.
+    pub fn train_once(
+        mut cfg: TrainConfig,
+        policy: Policy,
+        mix: BehaviorMix,
+    ) -> Result<(f64, f64)> {
+        cfg.policy = policy;
+        let mut server = Server::new(cfg, mix)?;
+        server.run()?;
+        Ok((
+            server.log.final_loss().unwrap_or(f64::NAN),
+            server.log.total_energy(),
+        ))
+    }
+}

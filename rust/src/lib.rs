@@ -1,0 +1,52 @@
+//! # fedzero
+//!
+//! Energy-minimal workload scheduling for Federated Learning.
+//!
+//! This crate reproduces the complete system from Lima Pilla (2022),
+//! *"Scheduling Algorithms for Federated Learning with Minimal Energy
+//! Consumption"*: the Minimal Cost FL Schedule problem, the (MC)²MKP
+//! knapsack formulation with its pseudo-polynomial dynamic-programming
+//! solution (Algorithm 1), and the four specialized optimal algorithms for
+//! monotone marginal-cost scenarios (MarIn, MarCo, MarDecUn, MarDec —
+//! Algorithms 2–7), embedded in a full federated-learning coordinator with
+//! a simulated heterogeneous device fleet, per-device energy models, and a
+//! PJRT runtime that executes AOT-compiled JAX/Pallas training steps.
+//!
+//! ## Layout
+//!
+//! * [`sched`] — the paper's contribution: problem model, cost functions,
+//!   optimal schedulers, baselines.
+//! * [`energy`] — device power/energy/carbon models that synthesize the
+//!   cost functions consumed by the schedulers.
+//! * [`fl`] — federated-learning server, clients, aggregation, data.
+//! * [`runtime`] — PJRT (XLA) execution of AOT-lowered training steps.
+//! * [`util`], [`config`], [`cli`], [`metrics`], [`benchkit`], [`testkit`]
+//!   — substrates (PRNG, stats, JSON/CSV/TOML, CLI, metrics, benching,
+//!   property testing) implemented in-repo because the build environment
+//!   is offline.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use fedzero::sched::{instance::Instance, mc2mkp, validate};
+//!
+//! // The worked example from the paper's §3.1 (Figs. 1 and 2).
+//! let inst = Instance::paper_example(5);
+//! let sched = mc2mkp::solve(&inst).unwrap();
+//! assert_eq!(sched.assignments(), &[2, 3, 0]);
+//! assert!((validate::total_cost(&inst, &sched) - 7.5).abs() < 1e-9);
+//! ```
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod energy;
+pub mod error;
+pub mod fl;
+pub mod metrics;
+pub mod runtime;
+pub mod sched;
+pub mod testkit;
+pub mod util;
+
+pub use error::{FedError, Result};

@@ -1,0 +1,183 @@
+//! fedzero CLI — the Layer-3 entrypoint.
+//!
+//! Subcommands:
+//! * `schedule` — build a synthetic fleet instance and solve it with any
+//!   scheduler, printing the assignment and energy;
+//! * `train` — run federated training end-to-end on the AOT artifacts;
+//! * `fleet` — sample and describe a heterogeneous fleet.
+
+use std::process::ExitCode;
+
+use fedzero::cli;
+use fedzero::config::{Policy, TrainConfig};
+use fedzero::energy::power::Behavior;
+use fedzero::energy::profiles::{BehaviorMix, Fleet};
+use fedzero::fl::Server;
+use fedzero::metrics::Timer;
+use fedzero::sched::{auto, validate};
+use fedzero::util::json::Json;
+use fedzero::util::rng::Rng;
+use fedzero::util::table::{fmt_duration, fmt_energy, Table};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> fedzero::Result<()> {
+    let app = cli::fedzero_app();
+    let parsed = app.parse(args)?;
+    match parsed.command.as_str() {
+        "schedule" => cmd_schedule(&parsed),
+        "train" => cmd_train(&parsed),
+        "fleet" => cmd_fleet(&parsed),
+        other => Err(fedzero::FedError::Config(format!("unhandled command {other}"))),
+    }
+}
+
+fn parse_mix(regime: &str) -> fedzero::Result<BehaviorMix> {
+    Ok(match regime {
+        "increasing" | "convex" => BehaviorMix::Homogeneous(Behavior::Convex),
+        "constant" | "linear" => BehaviorMix::Homogeneous(Behavior::Linear),
+        "decreasing" | "concave" => BehaviorMix::Homogeneous(Behavior::Concave),
+        "arbitrary" | "mixed" => BehaviorMix::Mixed,
+        other => {
+            return Err(fedzero::FedError::Config(format!(
+                "unknown regime '{other}' (increasing|constant|decreasing|arbitrary)"
+            )))
+        }
+    })
+}
+
+fn cmd_schedule(p: &cli::Parsed) -> fedzero::Result<()> {
+    let tasks: usize = p.get_or("tasks", 256)?;
+    let devices: usize = p.get_or("devices", 10)?;
+    let seed: u64 = p.get_or("seed", 1)?;
+    let policy: Policy = p.req("algo")?.parse()?;
+    let mix = parse_mix(p.req("regime")?)?;
+
+    let mut rng = Rng::new(seed);
+    let fleet = Fleet::sample(devices, mix, &mut rng);
+    let t = tasks.min(fleet.capacity());
+    let inst = fleet.instance(t, 0)?;
+
+    let timer = Timer::start();
+    let sched = auto::solve_with(&inst, policy, &mut rng)?;
+    let elapsed = timer.elapsed_s();
+    let cost = validate::checked_cost(&inst, &sched)?;
+
+    if p.flag("json") {
+        let x: Vec<Json> = sched
+            .assignments()
+            .iter()
+            .map(|&v| Json::Num(v as f64))
+            .collect();
+        let out = Json::obj(vec![
+            ("policy", Json::Str(policy.to_string())),
+            ("tasks", Json::Num(t as f64)),
+            ("energy_j", Json::Num(cost)),
+            ("solve_time_s", Json::Num(elapsed)),
+            ("assignments", Json::Arr(x)),
+        ]);
+        println!("{}", out.to_string());
+        return Ok(());
+    }
+
+    let mut table = Table::new(
+        &format!("schedule — policy={policy} T={t} n={devices}"),
+        &["device", "archetype", "x_i", "U_i", "energy"],
+    );
+    for (i, d) in fleet.devices.iter().enumerate() {
+        table.rows_str(vec![
+            i.to_string(),
+            d.archetype.to_string(),
+            sched.get(i).to_string(),
+            inst.upper[i].to_string(),
+            fmt_energy(inst.costs[i].eval(sched.get(i))),
+        ]);
+    }
+    table.print();
+    println!("total energy: {}   (solved in {})", fmt_energy(cost), fmt_duration(elapsed));
+    Ok(())
+}
+
+fn cmd_train(p: &cli::Parsed) -> fedzero::Result<()> {
+    let mut cfg = match p.get("config") {
+        Some(path) => TrainConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => TrainConfig::default(),
+    };
+    // CLI overrides.
+    cfg.rounds = p.get_or("rounds", cfg.rounds)?;
+    cfg.devices = p.get_or("devices", cfg.devices)?;
+    cfg.tasks_per_round = p.get_or("tasks", cfg.tasks_per_round)?;
+    cfg.model = p.get("model").unwrap_or(&cfg.model).to_string();
+    cfg.policy = p.req("algo")?.parse()?;
+    cfg.seed = p.get_or("seed", cfg.seed)?;
+    cfg.artifacts_dir = p.get("artifacts").unwrap_or(&cfg.artifacts_dir).to_string();
+    cfg.validate()?;
+
+    let out = p.get("out").map(|s| s.to_string());
+    let policy = cfg.policy;
+    let rounds = cfg.rounds;
+    let mut server = Server::new(cfg, fedzero::fl::server::DEFAULT_MIX)?;
+    println!("round,policy,loss,energy_j,sched_ms,train_s");
+    for r in 0..rounds {
+        let row = server.round(r)?;
+        println!(
+            "{},{},{:.4},{:.2},{:.3},{:.2}",
+            row.round,
+            row.policy,
+            row.loss,
+            row.energy_j,
+            row.sched_time_s * 1e3,
+            row.train_time_s
+        );
+        if let Some(target) = server.cfg().target_loss {
+            if row.loss <= target {
+                println!("target loss reached at round {r}");
+                break;
+            }
+        }
+    }
+    println!(
+        "done: policy={policy}, total energy {}",
+        fmt_energy(server.ledger.total())
+    );
+    if let Some(path) = out {
+        server.log.to_csv().save(std::path::Path::new(&path))?;
+        println!("log written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fleet(p: &cli::Parsed) -> fedzero::Result<()> {
+    let devices: usize = p.get_or("devices", 10)?;
+    let seed: u64 = p.get_or("seed", 1)?;
+    let mut rng = Rng::new(seed);
+    let fleet = Fleet::sample(devices, BehaviorMix::Mixed, &mut rng);
+    let mut table = Table::new(
+        &format!("fleet — n={devices} seed={seed}"),
+        &["id", "archetype", "busy W", "s/batch", "data", "U_i", "region", "behavior"],
+    );
+    for d in &fleet.devices {
+        table.rows_str(vec![
+            d.id.to_string(),
+            d.archetype.to_string(),
+            format!("{:.1}", d.power.busy_w),
+            format!("{:.2}", d.power.batch_latency_s),
+            d.data_batches.to_string(),
+            d.upper_limit().to_string(),
+            d.region.to_string(),
+            format!("{:?}", d.power.behavior),
+        ]);
+    }
+    table.print();
+    println!("total capacity: {} mini-batches/round", fleet.capacity());
+    Ok(())
+}

@@ -1,0 +1,254 @@
+//! Metrics: counters, timers, the per-device energy ledger, and round logs.
+//!
+//! The FL server threads a [`MetricsHub`] through every round; examples and
+//! benches export the collected series as CSV for EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::csv::CsvWriter;
+
+/// Monotonic counters + gauges keyed by name.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsHub {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsHub {
+    /// New empty hub.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter.
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set a gauge.
+    pub fn set(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Read a counter (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Read a gauge.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Render a compact one-line summary.
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<String> =
+            self.counters.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        parts.extend(self.gauges.iter().map(|(k, v)| format!("{k}={v:.4}")));
+        parts.join(" ")
+    }
+}
+
+/// Scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Energy ledger: accumulates joules per device and per round.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyLedger {
+    /// joules per device id.
+    per_device: BTreeMap<usize, f64>,
+    /// (round, joules) series.
+    per_round: Vec<f64>,
+}
+
+impl EnergyLedger {
+    /// New empty ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record energy for `device` in the current (last) round.
+    pub fn record(&mut self, device: usize, joules: f64) {
+        debug_assert!(joules >= 0.0, "negative energy");
+        *self.per_device.entry(device).or_insert(0.0) += joules;
+        if let Some(last) = self.per_round.last_mut() {
+            *last += joules;
+        }
+    }
+
+    /// Open a new round bucket.
+    pub fn begin_round(&mut self) {
+        self.per_round.push(0.0);
+    }
+
+    /// Total joules across all devices.
+    pub fn total(&self) -> f64 {
+        self.per_device.values().sum()
+    }
+
+    /// Energy consumed by one device.
+    pub fn device_total(&self, device: usize) -> f64 {
+        self.per_device.get(&device).copied().unwrap_or(0.0)
+    }
+
+    /// Per-round series.
+    pub fn rounds(&self) -> &[f64] {
+        &self.per_round
+    }
+
+    /// Largest per-device share of total energy, in [0, 1]. A high value
+    /// indicates over-reliance on one device — the over-representation risk
+    /// the paper's §6 warns about.
+    pub fn max_device_share(&self) -> f64 {
+        let total = self.total();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.per_device.values().fold(0.0f64, |a, &b| a.max(b)) / total
+    }
+}
+
+/// One row of the per-round training log.
+#[derive(Clone, Debug)]
+pub struct RoundLog {
+    pub round: usize,
+    pub policy: String,
+    pub loss: f64,
+    pub energy_j: f64,
+    pub sched_time_s: f64,
+    pub train_time_s: f64,
+    pub participants: usize,
+    pub tasks: usize,
+}
+
+/// Accumulates [`RoundLog`]s and exports them as CSV.
+#[derive(Clone, Debug, Default)]
+pub struct TrainingLog {
+    rows: Vec<RoundLog>,
+}
+
+impl TrainingLog {
+    /// New empty log.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one round.
+    pub fn push(&mut self, row: RoundLog) {
+        self.rows.push(row);
+    }
+
+    /// All rows.
+    pub fn rows(&self) -> &[RoundLog] {
+        &self.rows
+    }
+
+    /// Final loss, if any rounds were logged.
+    pub fn final_loss(&self) -> Option<f64> {
+        self.rows.last().map(|r| r.loss)
+    }
+
+    /// Sum of per-round energy.
+    pub fn total_energy(&self) -> f64 {
+        self.rows.iter().map(|r| r.energy_j).sum()
+    }
+
+    /// Export to CSV.
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(&[
+            "round", "policy", "loss", "energy_j", "sched_time_s", "train_time_s",
+            "participants", "tasks",
+        ]);
+        for r in &self.rows {
+            w.rowd(&[
+                &r.round,
+                &r.policy,
+                &r.loss,
+                &r.energy_j,
+                &r.sched_time_s,
+                &r.train_time_s,
+                &r.participants,
+                &r.tasks,
+            ]);
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut m = MetricsHub::new();
+        m.inc("rounds", 1);
+        m.inc("rounds", 2);
+        m.set("loss", 0.5);
+        assert_eq!(m.counter("rounds"), 3);
+        assert_eq!(m.gauge("loss"), Some(0.5));
+        assert_eq!(m.counter("absent"), 0);
+        assert!(m.summary().contains("rounds=3"));
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = EnergyLedger::new();
+        l.begin_round();
+        l.record(0, 5.0);
+        l.record(1, 3.0);
+        l.begin_round();
+        l.record(0, 2.0);
+        assert_eq!(l.total(), 10.0);
+        assert_eq!(l.device_total(0), 7.0);
+        assert_eq!(l.rounds(), &[8.0, 2.0]);
+        assert!((l.max_device_share() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_share_empty() {
+        assert_eq!(EnergyLedger::new().max_device_share(), 0.0);
+    }
+
+    #[test]
+    fn training_log_csv() {
+        let mut log = TrainingLog::new();
+        log.push(RoundLog {
+            round: 1,
+            policy: "mc2mkp".into(),
+            loss: 1.25,
+            energy_j: 10.0,
+            sched_time_s: 0.001,
+            train_time_s: 0.5,
+            participants: 4,
+            tasks: 64,
+        });
+        let csv = log.to_csv().to_string();
+        assert!(csv.starts_with("round,policy,loss"));
+        assert!(csv.contains("mc2mkp"));
+        assert_eq!(log.final_loss(), Some(1.25));
+        assert_eq!(log.total_energy(), 10.0);
+    }
+
+    #[test]
+    fn timer_runs() {
+        let t = Timer::start();
+        std::hint::black_box((0..10_000).sum::<u64>());
+        assert!(t.elapsed_s() >= 0.0);
+    }
+}

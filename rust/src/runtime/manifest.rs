@@ -1,0 +1,276 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{FedError, Result};
+use crate::util::json::Json;
+
+/// Element type of a model input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" => Ok(Dtype::S32),
+            other => Err(FedError::Artifact(format!("unknown dtype '{other}'"))),
+        }
+    }
+}
+
+/// One model family's artifact entry.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub family: String,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub params_file: PathBuf,
+    /// Shape of each parameter tensor, in flat order.
+    pub param_shapes: Vec<Vec<usize>>,
+    /// Total scalar parameter count.
+    pub param_count: usize,
+    /// Number of parameter tensors.
+    pub n_param_tensors: usize,
+    /// Mini-batch rows.
+    pub batch: usize,
+    /// SGD learning rate baked into the lowered step.
+    pub lr: f64,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: Dtype,
+    pub label_shape: Vec<usize>,
+    pub label_dtype: Dtype,
+    /// MLP: number of classes; transformer: vocab size.
+    pub num_classes: usize,
+}
+
+impl ModelSpec {
+    /// Scalars per input batch.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Scalars per label batch.
+    pub fn label_len(&self) -> usize {
+        self.label_shape.iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelSpec>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            FedError::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let root = Json::parse(&text)?;
+        let version = root.req("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            return Err(FedError::Artifact(format!(
+                "unsupported manifest version {version}"
+            )));
+        }
+        let models_obj = root
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| FedError::Artifact("'models' is not an object".into()))?;
+
+        let mut models = Vec::new();
+        for (name, m) in models_obj {
+            let shapes = m
+                .req("param_shapes")?
+                .as_arr()
+                .ok_or_else(|| FedError::Artifact("param_shapes not array".into()))?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|dims| {
+                            dims.iter().filter_map(|d| d.as_usize()).collect::<Vec<_>>()
+                        })
+                        .ok_or_else(|| FedError::Artifact("bad shape entry".into()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+
+            let get_usize = |key: &str| -> Result<usize> {
+                m.req(key)?
+                    .as_usize()
+                    .ok_or_else(|| FedError::Artifact(format!("bad '{key}'")))
+            };
+            let get_str = |key: &str| -> Result<String> {
+                Ok(m.req(key)?
+                    .as_str()
+                    .ok_or_else(|| FedError::Artifact(format!("bad '{key}'")))?
+                    .to_string())
+            };
+            let get_shape = |key: &str| -> Result<Vec<usize>> {
+                Ok(m.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| FedError::Artifact(format!("bad '{key}'")))?
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect())
+            };
+
+            let family = get_str("family")?;
+            let num_classes = if family == "transformer" {
+                get_usize("vocab")?
+            } else {
+                get_usize("classes")?
+            };
+
+            let spec = ModelSpec {
+                name: name.clone(),
+                family,
+                train_hlo: dir.join(get_str("train_hlo")?),
+                eval_hlo: dir.join(get_str("eval_hlo")?),
+                params_file: dir.join(get_str("params_file")?),
+                param_shapes: shapes,
+                param_count: get_usize("param_count")?,
+                n_param_tensors: get_usize("n_param_tensors")?,
+                batch: get_usize("batch")?,
+                lr: m
+                    .req("lr")?
+                    .as_f64()
+                    .ok_or_else(|| FedError::Artifact("bad 'lr'".into()))?,
+                input_shape: get_shape("input_shape")?,
+                input_dtype: Dtype::parse(&get_str("input_dtype")?)?,
+                label_shape: get_shape("label_shape")?,
+                label_dtype: Dtype::parse(&get_str("label_dtype")?)?,
+                num_classes,
+            };
+
+            // Cross-checks: shapes must account for every scalar.
+            let total: usize = spec
+                .param_shapes
+                .iter()
+                .map(|s| s.iter().product::<usize>())
+                .sum();
+            if total != spec.param_count {
+                return Err(FedError::Artifact(format!(
+                    "model '{name}': param_shapes sum {total} != param_count {}",
+                    spec.param_count
+                )));
+            }
+            if spec.param_shapes.len() != spec.n_param_tensors {
+                return Err(FedError::Artifact(format!(
+                    "model '{name}': {} shapes != n_param_tensors {}",
+                    spec.param_shapes.len(),
+                    spec.n_param_tensors
+                )));
+            }
+            models.push(spec);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    /// Find a model by name.
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                let names: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
+                FedError::Artifact(format!(
+                    "model '{name}' not in manifest (available: {names:?})"
+                ))
+            })
+    }
+
+    /// Load a model's initial parameters (flat little-endian f32 dump).
+    pub fn load_params(&self, spec: &ModelSpec) -> Result<Vec<f32>> {
+        let raw = std::fs::read(&spec.params_file)?;
+        if raw.len() != spec.param_count * 4 {
+            return Err(FedError::Artifact(format!(
+                "params file {} has {} bytes, expected {}",
+                spec.params_file.display(),
+                raw.len(),
+                spec.param_count * 4
+            )));
+        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        let manifest = r#"{
+          "version": 1,
+          "models": {
+            "toy": {
+              "family": "mlp", "classes": 2,
+              "train_hlo": "toy_train.hlo.txt",
+              "eval_hlo": "toy_eval.hlo.txt",
+              "params_file": "toy_params.bin",
+              "param_shapes": [[2, 3], [3]],
+              "param_count": 9, "n_param_tensors": 2,
+              "batch": 4, "lr": 0.1,
+              "input_shape": [4, 2], "input_dtype": "f32",
+              "label_shape": [4], "label_dtype": "s32"
+            }
+          }
+        }"#;
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let params: Vec<u8> = (0..9i32)
+            .flat_map(|i| (i as f32 * 0.5).to_le_bytes())
+            .collect();
+        std::fs::write(dir.join("toy_params.bin"), params).unwrap();
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = std::env::temp_dir().join("fedzero_manifest_test");
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.model("toy").unwrap();
+        assert_eq!(spec.param_count, 9);
+        assert_eq!(spec.batch, 4);
+        assert_eq!(spec.input_dtype, Dtype::F32);
+        assert_eq!(spec.input_len(), 8);
+        assert_eq!(spec.label_len(), 4);
+        let params = m.load_params(spec).unwrap();
+        assert_eq!(params.len(), 9);
+        assert_eq!(params[2], 1.0);
+        assert!(m.model("nope").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_bad_param_count() {
+        let dir = std::env::temp_dir().join("fedzero_manifest_bad");
+        fake_manifest(&dir);
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .unwrap()
+            .replace("\"param_count\": 9", "\"param_count\": 10");
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_is_clear_error() {
+        let err = Manifest::load(Path::new("/nonexistent/fedzero")).unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+}

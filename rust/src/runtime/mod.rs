@@ -1,0 +1,347 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes training/eval steps from the Rust
+//! request path — Python is never involved at run time.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Compilation happens once per model;
+//! every simulated device then reuses the same executable.
+//!
+//! Calling convention (fixed by `model.flat_train_step`):
+//! * train: inputs `params[0..P), x, y` → tuple `(new_params[0..P), loss)`
+//! * eval:  inputs `params[0..P), x, y` → tuple `(loss,)`
+
+pub mod manifest;
+
+pub use manifest::{Dtype, Manifest, ModelSpec};
+
+use std::path::Path;
+
+use crate::error::{FedError, Result};
+
+/// Model parameters as flat host vectors (one per parameter tensor).
+///
+/// Kept on the host because FedAvg aggregation is a host-side weighted sum;
+/// conversion to PJRT literals happens at step boundaries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    tensors: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Split a flat dump according to the manifest shapes.
+    pub fn from_flat(spec: &ModelSpec, flat: &[f32]) -> Result<ParamSet> {
+        if flat.len() != spec.param_count {
+            return Err(FedError::Artifact(format!(
+                "flat params len {} != param_count {}",
+                flat.len(),
+                spec.param_count
+            )));
+        }
+        let mut tensors = Vec::with_capacity(spec.param_shapes.len());
+        let mut off = 0;
+        for shape in &spec.param_shapes {
+            let len: usize = shape.iter().product();
+            tensors.push(flat[off..off + len].to_vec());
+            off += len;
+        }
+        Ok(ParamSet { tensors })
+    }
+
+    /// Zero-initialized parameter set with the manifest's shapes.
+    pub fn zeros(spec: &ModelSpec) -> ParamSet {
+        ParamSet {
+            tensors: spec
+                .param_shapes
+                .iter()
+                .map(|s| vec![0.0; s.iter().product()])
+                .collect(),
+        }
+    }
+
+    /// Number of tensors.
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// True if no tensors.
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Tensor accessor.
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        &self.tensors[i]
+    }
+
+    /// All tensors.
+    pub fn tensors(&self) -> &[Vec<f32>] {
+        &self.tensors
+    }
+
+    /// Total scalar count.
+    pub fn scalar_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// `self += other * w` (for FedAvg accumulation).
+    pub fn add_scaled(&mut self, other: &ParamSet, w: f32) -> Result<()> {
+        if self.tensors.len() != other.tensors.len() {
+            return Err(FedError::Fl("param tensor count mismatch".into()));
+        }
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            if a.len() != b.len() {
+                return Err(FedError::Fl("param tensor shape mismatch".into()));
+            }
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += w * y;
+            }
+        }
+        Ok(())
+    }
+
+    /// Multiply every scalar by `w`.
+    pub fn scale(&mut self, w: f32) {
+        for t in self.tensors.iter_mut() {
+            for x in t.iter_mut() {
+                *x *= w;
+            }
+        }
+    }
+
+    /// L2 norm over all scalars (divergence diagnostics).
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// A compiled model: PJRT executables plus the manifest entry.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    spec: ModelSpec,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    initial: ParamSet,
+}
+
+impl ModelRuntime {
+    /// Load and compile a model from an artifacts directory.
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let spec = manifest.model(model)?.clone();
+        let flat = manifest.load_params(&spec)?;
+        let initial = ParamSet::from_flat(&spec, &flat)?;
+        let client = xla::PjRtClient::cpu()?;
+        let train_exe = compile_hlo(&client, &spec.train_hlo)?;
+        let eval_exe = compile_hlo(&client, &spec.eval_hlo)?;
+        Ok(ModelRuntime { client, spec, train_exe, eval_exe, initial })
+    }
+
+    /// Manifest entry.
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Underlying PJRT client (for diagnostics).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Initial parameters from the artifact dump.
+    pub fn initial_params(&self) -> ParamSet {
+        self.initial.clone()
+    }
+
+    fn param_literals(&self, params: &ParamSet) -> Result<Vec<xla::Literal>> {
+        if params.len() != self.spec.n_param_tensors {
+            return Err(FedError::Fl(format!(
+                "expected {} param tensors, got {}",
+                self.spec.n_param_tensors,
+                params.len()
+            )));
+        }
+        params
+            .tensors()
+            .iter()
+            .zip(&self.spec.param_shapes)
+            .map(|(t, shape)| literal_f32(t, shape))
+            .collect()
+    }
+
+    /// Build the input literal for a batch of features (f32 models).
+    pub fn input_literal_f32(&self, x: &[f32]) -> Result<xla::Literal> {
+        if self.spec.input_dtype != Dtype::F32 {
+            return Err(FedError::Fl("model expects s32 inputs".into()));
+        }
+        literal_f32(x, &self.spec.input_shape)
+    }
+
+    /// Build the input literal for token models.
+    pub fn input_literal_i32(&self, x: &[i32]) -> Result<xla::Literal> {
+        if self.spec.input_dtype != Dtype::S32 {
+            return Err(FedError::Fl("model expects f32 inputs".into()));
+        }
+        literal_i32(x, &self.spec.input_shape)
+    }
+
+    /// Build the label literal.
+    pub fn label_literal(&self, y: &[i32]) -> Result<xla::Literal> {
+        literal_i32(y, &self.spec.label_shape)
+    }
+
+    /// Run one training step: `params, x, y → (new_params, loss)`.
+    pub fn train_step(
+        &self,
+        params: &ParamSet,
+        x: &xla::Literal,
+        y: &xla::Literal,
+    ) -> Result<(ParamSet, f32)> {
+        let mut args = self.param_literals(params)?;
+        args.push(clone_literal(x)?);
+        args.push(clone_literal(y)?);
+        let result =
+            self.train_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        if outs.len() != self.spec.n_param_tensors + 1 {
+            return Err(FedError::Runtime(format!(
+                "train step returned {} outputs, expected {}",
+                outs.len(),
+                self.spec.n_param_tensors + 1
+            )));
+        }
+        let loss = outs.pop().unwrap().get_first_element::<f32>()?;
+        let tensors = outs
+            .iter()
+            .map(|l| l.to_vec::<f32>())
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        Ok((ParamSet { tensors }, loss))
+    }
+
+    /// Evaluate the loss of `params` on a batch without updating.
+    pub fn eval_step(
+        &self,
+        params: &ParamSet,
+        x: &xla::Literal,
+        y: &xla::Literal,
+    ) -> Result<f32> {
+        let mut args = self.param_literals(params)?;
+        args.push(clone_literal(x)?);
+        args.push(clone_literal(y)?);
+        let result =
+            self.eval_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.get_first_element::<f32>()?)
+    }
+}
+
+/// The `xla` crate's `Literal` has no public `Clone`; a same-shape reshape
+/// performs the copy.
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    Ok(l.reshape(&dims)?)
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| FedError::Artifact(format!("loading HLO {}: {e:?}", path.display())))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let expected: usize = shape.iter().product();
+    if data.len() != expected {
+        return Err(FedError::Fl(format!(
+            "data len {} != shape {:?} ({expected})",
+            data.len(),
+            shape
+        )));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let expected: usize = shape.iter().product();
+    if data.len() != expected {
+        return Err(FedError::Fl(format!(
+            "data len {} != shape {:?} ({expected})",
+            data.len(),
+            shape
+        )));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            family: "mlp".into(),
+            train_hlo: "/tmp/x".into(),
+            eval_hlo: "/tmp/y".into(),
+            params_file: "/tmp/z".into(),
+            param_shapes: vec![vec![2, 3], vec![3]],
+            param_count: 9,
+            n_param_tensors: 2,
+            batch: 4,
+            lr: 0.1,
+            input_shape: vec![4, 2],
+            input_dtype: Dtype::F32,
+            label_shape: vec![4],
+            label_dtype: Dtype::S32,
+            num_classes: 2,
+        }
+    }
+
+    #[test]
+    fn paramset_split_and_accessors() {
+        let spec = toy_spec();
+        let flat: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let p = ParamSet::from_flat(&spec, &flat).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.tensor(0), &[0., 1., 2., 3., 4., 5.]);
+        assert_eq!(p.tensor(1), &[6., 7., 8.]);
+        assert_eq!(p.scalar_count(), 9);
+        assert!(ParamSet::from_flat(&spec, &flat[..8]).is_err());
+    }
+
+    #[test]
+    fn paramset_arithmetic() {
+        let spec = toy_spec();
+        let mut acc = ParamSet::zeros(&spec);
+        let ones = ParamSet::from_flat(&spec, &[1.0; 9]).unwrap();
+        acc.add_scaled(&ones, 0.25).unwrap();
+        acc.add_scaled(&ones, 0.75).unwrap();
+        assert_eq!(acc.tensor(0), &[1.0; 6]);
+        acc.scale(2.0);
+        assert_eq!(acc.tensor(1), &[2.0; 3]);
+        assert!((acc.l2_norm() - (9.0f64 * 4.0).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paramset_mismatch_errors() {
+        let spec = toy_spec();
+        let mut a = ParamSet::zeros(&spec);
+        let b = ParamSet { tensors: vec![vec![0.0; 6]] };
+        assert!(a.add_scaled(&b, 1.0).is_err());
+    }
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(literal_f32(&[1.0; 6], &[2, 3]).is_ok());
+        assert!(literal_f32(&[1.0; 5], &[2, 3]).is_err());
+        assert!(literal_i32(&[1; 4], &[4]).is_ok());
+        assert!(literal_i32(&[1; 3], &[4]).is_err());
+    }
+}

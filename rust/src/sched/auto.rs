@@ -1,0 +1,211 @@
+//! Scenario classification and algorithm dispatch — the executable form of
+//! the paper's **Table 2** ("solutions with the smallest complexity for the
+//! variations of our scheduling problem").
+//!
+//! | scenario                    | algorithm  | complexity       |
+//! |-----------------------------|------------|------------------|
+//! | arbitrary costs             | (MC)²MKP   | `O(T² n)`        |
+//! | increasing marginal costs   | MarIn      | `Θ(n + T log n)` |
+//! | constant marginal costs     | MarCo      | `Θ(n log n)`     |
+//! | decreasing, no upper limits | MarDecUn   | `Θ(n)`           |
+//! | decreasing, upper limits    | MarDec     | `O(T n²)`        |
+
+use crate::config::Policy;
+use crate::error::Result;
+use crate::sched::costs::{classify, combine, MarginalRegime};
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::limits;
+use crate::sched::{baselines, marco, mardec, mardecun, marin, mc2mkp};
+use crate::util::rng::Rng;
+
+/// The scenario of an instance: its combined marginal regime plus whether
+/// any resource has an effective upper limit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scenario {
+    pub regime: MarginalRegime,
+    pub has_upper_limits: bool,
+}
+
+/// Classify an instance. Classification samples every resource's domain, so
+/// it is `O(Σ(U_i - L_i))` — cheap next to any solver except MarDecUn/MarCo
+/// on huge domains; [`solve_auto`] therefore also accepts a caller-supplied
+/// scenario to skip re-classification in hot loops.
+pub fn classify_instance(inst: &Instance) -> Scenario {
+    let tr = limits::remove_lower_limits(inst);
+    let ti = &tr.instance;
+    let regimes: Vec<MarginalRegime> = (0..ti.n())
+        .map(|i| classify(&ti.costs[i], 0, ti.cap(i)))
+        .collect();
+    Scenario {
+        regime: combine(&regimes),
+        has_upper_limits: (0..ti.n()).any(|i| ti.cap(i) < ti.tasks),
+    }
+}
+
+/// Pick the cheapest optimal algorithm for a scenario (Table 2).
+pub fn best_algorithm(s: &Scenario) -> Policy {
+    match (s.regime, s.has_upper_limits) {
+        (MarginalRegime::Constant, false) => Policy::MarDecUn, // Table 2: Θ(n)
+        (MarginalRegime::Constant, true) => Policy::MarCo,
+        (MarginalRegime::Increasing, _) => Policy::MarIn,
+        (MarginalRegime::Decreasing, false) => Policy::MarDecUn,
+        (MarginalRegime::Decreasing, true) => Policy::MarDec,
+        (MarginalRegime::Arbitrary, _) => Policy::Mc2mkp,
+    }
+}
+
+/// Classify + dispatch (the `auto` policy).
+pub fn solve_auto(inst: &Instance) -> Result<Schedule> {
+    let scenario = classify_instance(inst);
+    solve_with(inst, best_algorithm(&scenario), &mut Rng::new(0))
+}
+
+/// Run a specific policy on an instance. `rng` is only used by
+/// [`Policy::Random`].
+pub fn solve_with(inst: &Instance, policy: Policy, rng: &mut Rng) -> Result<Schedule> {
+    match policy {
+        Policy::Auto => solve_auto(inst),
+        Policy::Mc2mkp => mc2mkp::solve(inst),
+        Policy::MarIn => marin::solve(inst),
+        Policy::MarCo => marco::solve(inst),
+        Policy::MarDecUn => mardecun::solve(inst),
+        Policy::MarDec => mardec::solve(inst),
+        Policy::Uniform => baselines::uniform(inst),
+        Policy::Random => baselines::random(inst, rng),
+        Policy::Proportional => baselines::proportional(inst),
+        Policy::Greedy => baselines::greedy_cost(inst),
+        Policy::Olar => baselines::olar(inst),
+    }
+}
+
+/// True when the policy is one of the paper's optimal algorithms (vs a
+/// baseline heuristic).
+pub fn is_optimal_policy(policy: Policy) -> bool {
+    matches!(
+        policy,
+        Policy::Auto
+            | Policy::Mc2mkp
+            | Policy::MarIn
+            | Policy::MarCo
+            | Policy::MarDecUn
+            | Policy::MarDec
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::CostFn;
+    use crate::sched::validate;
+
+    fn instance_with(costs: Vec<CostFn>, t: usize, upper: Vec<usize>) -> Instance {
+        let n = costs.len();
+        Instance::new(t, vec![0; n], upper, costs).unwrap()
+    }
+
+    #[test]
+    fn classifies_paper_example_as_arbitrary() {
+        let s = classify_instance(&Instance::paper_example(5));
+        assert_eq!(s.regime, MarginalRegime::Arbitrary);
+        // After lower-limit removal T' = 4 and every U'_i >= 4, so no limit
+        // binds in the transformed space — but the arbitrary regime routes
+        // to the DP regardless.
+        assert!(!s.has_upper_limits);
+        assert_eq!(best_algorithm(&s), Policy::Mc2mkp);
+        // With T = 8 the limits do bind.
+        let s8 = classify_instance(&Instance::paper_example(8));
+        assert!(s8.has_upper_limits);
+    }
+
+    #[test]
+    fn classifies_affine_constant() {
+        let c = CostFn::Affine { fixed: 1.0, per_task: 2.0 };
+        let inst = instance_with(vec![c.clone(), c], 10, vec![8, 8]);
+        let s = classify_instance(&inst);
+        assert_eq!(s.regime, MarginalRegime::Constant);
+        assert!(s.has_upper_limits);
+        assert_eq!(best_algorithm(&s), Policy::MarCo);
+    }
+
+    #[test]
+    fn constant_without_limits_uses_mardecun() {
+        let c = CostFn::Affine { fixed: 0.0, per_task: 2.0 };
+        let inst = instance_with(vec![c.clone(), c], 10, vec![20, 20]);
+        let s = classify_instance(&inst);
+        assert_eq!(best_algorithm(&s), Policy::MarDecUn);
+        // and it is exact: all tasks on either resource cost the same
+        let x = solve_auto(&inst).unwrap();
+        validate::check(&inst, &x).unwrap();
+    }
+
+    #[test]
+    fn classifies_quadratic_increasing() {
+        let c = CostFn::Quadratic { fixed: 0.0, a: 1.0, b: 0.0 };
+        let inst = instance_with(vec![c.clone(), c], 10, vec![10, 10]);
+        assert_eq!(classify_instance(&inst).regime, MarginalRegime::Increasing);
+        assert_eq!(best_algorithm(&classify_instance(&inst)), Policy::MarIn);
+    }
+
+    #[test]
+    fn classifies_decreasing_with_and_without_limits() {
+        let c = CostFn::PowerLaw { fixed: 0.0, scale: 1.0, exponent: 0.5 };
+        let unl = instance_with(vec![c.clone(), c.clone()], 10, vec![30, 30]);
+        let lim = instance_with(vec![c.clone(), c], 10, vec![6, 6]);
+        assert_eq!(best_algorithm(&classify_instance(&unl)), Policy::MarDecUn);
+        assert_eq!(best_algorithm(&classify_instance(&lim)), Policy::MarDec);
+    }
+
+    #[test]
+    fn mixed_regimes_fall_back_to_dp() {
+        let inc = CostFn::Quadratic { fixed: 0.0, a: 1.0, b: 0.0 };
+        let dec = CostFn::PowerLaw { fixed: 0.0, scale: 1.0, exponent: 0.5 };
+        let inst = instance_with(vec![inc, dec], 10, vec![10, 10]);
+        assert_eq!(best_algorithm(&classify_instance(&inst)), Policy::Mc2mkp);
+    }
+
+    #[test]
+    fn auto_matches_dp_across_regimes() {
+        let cases: Vec<Instance> = vec![
+            Instance::paper_example(5),
+            Instance::paper_example(8),
+            instance_with(
+                vec![
+                    CostFn::Quadratic { fixed: 0.0, a: 0.5, b: 1.0 },
+                    CostFn::Quadratic { fixed: 1.0, a: 0.2, b: 2.0 },
+                ],
+                12,
+                vec![12, 12],
+            ),
+            instance_with(
+                vec![
+                    CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                    CostFn::Affine { fixed: 0.0, per_task: 3.0 },
+                ],
+                12,
+                vec![8, 8],
+            ),
+            instance_with(
+                vec![
+                    CostFn::Logarithmic { fixed: 0.0, scale: 3.0 },
+                    CostFn::Logarithmic { fixed: 0.0, scale: 1.0 },
+                ],
+                12,
+                vec![7, 12],
+            ),
+        ];
+        for inst in cases {
+            let a = validate::checked_cost(&inst, &solve_auto(&inst).unwrap()).unwrap();
+            let d =
+                validate::checked_cost(&inst, &mc2mkp::solve(&inst).unwrap()).unwrap();
+            assert!((a - d).abs() < 1e-9, "auto {a} != dp {d}");
+        }
+    }
+
+    #[test]
+    fn optimal_policy_predicate() {
+        assert!(is_optimal_policy(Policy::MarIn));
+        assert!(is_optimal_policy(Policy::Mc2mkp));
+        assert!(!is_optimal_policy(Policy::Uniform));
+        assert!(!is_optimal_policy(Policy::Olar));
+    }
+}

@@ -1,0 +1,306 @@
+//! Baseline scheduling policies used in the comparison experiments.
+//!
+//! None of these minimize the total cost in general — they are the
+//! comparison points the paper's algorithms are evaluated against
+//! (EXPERIMENTS.md §EX-A):
+//!
+//! * [`uniform`] — even split (what vanilla FedAvg [1] does implicitly when
+//!   every device trains on all its data for the same number of epochs);
+//! * [`random`] — random feasible assignment;
+//! * [`proportional`] — workload proportional to each device's energy
+//!   efficiency at unit load (a common heuristic);
+//! * [`greedy_cost`] — incremental greedy on marginal costs *without* regime
+//!   awareness: identical to MarIn, but applied blindly. Optimal for
+//!   increasing marginals, arbitrarily bad for decreasing ones — the paper's
+//!   §3.1 insight made executable;
+//! * [`olar`] — OLAR [26]: optimal for **minimizing the maximum** cost
+//!   (makespan/round duration). Included to quantify how much total energy a
+//!   time-optimal schedule wastes.
+//!
+//! All baselines respect the instance's lower and upper limits (they are
+//! feasible policies, just not total-cost-optimal).
+
+use crate::error::Result;
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::limits;
+use crate::util::heap::MinHeap;
+use crate::util::rng::Rng;
+
+/// Even split: start from the lower limits and hand out remaining tasks
+/// round-robin to resources below their caps.
+pub fn uniform(inst: &Instance) -> Result<Schedule> {
+    inst.validate()?;
+    let n = inst.n();
+    let mut x = inst.lower.clone();
+    let mut remaining = inst.tasks - x.iter().sum::<usize>();
+    while remaining > 0 {
+        let mut progressed = false;
+        for i in 0..n {
+            if remaining == 0 {
+                break;
+            }
+            if x[i] < inst.cap(i) {
+                x[i] += 1;
+                remaining -= 1;
+                progressed = true;
+            }
+        }
+        debug_assert!(progressed, "valid instance: capacity must remain");
+        if !progressed {
+            break;
+        }
+    }
+    Ok(Schedule::new(x))
+}
+
+/// Random feasible assignment: distribute the free tasks one by one to
+/// uniformly random resources with remaining capacity.
+pub fn random(inst: &Instance, rng: &mut Rng) -> Result<Schedule> {
+    inst.validate()?;
+    let n = inst.n();
+    let mut x = inst.lower.clone();
+    let mut open: Vec<usize> = (0..n).filter(|&i| x[i] < inst.cap(i)).collect();
+    let mut remaining = inst.tasks - x.iter().sum::<usize>();
+    while remaining > 0 {
+        let pick = rng.index(open.len());
+        let i = open[pick];
+        x[i] += 1;
+        remaining -= 1;
+        if x[i] == inst.cap(i) {
+            open.swap_remove(pick);
+        }
+    }
+    Ok(Schedule::new(x))
+}
+
+/// Workload proportional to energy efficiency at unit load: weight
+/// `1 / M_i(L_i + 1)` (cheaper-per-task devices get more), then repair to
+/// meet `Σ x_i = T` within limits.
+pub fn proportional(inst: &Instance) -> Result<Schedule> {
+    inst.validate()?;
+    let n = inst.n();
+    let free = inst.tasks - inst.lower.iter().sum::<usize>();
+
+    // Per-task cost at the first free task; guard zero marginals.
+    let weights: Vec<f64> = (0..n)
+        .map(|i| {
+            if inst.cap(i) <= inst.lower[i] {
+                return 0.0;
+            }
+            let m = inst.costs[i].eval(inst.lower[i] + 1) - inst.costs[i].eval(inst.lower[i]);
+            1.0 / m.max(1e-12)
+        })
+        .collect();
+    let wsum: f64 = weights.iter().sum();
+
+    let mut x = inst.lower.clone();
+    if wsum > 0.0 {
+        // Largest-remainder apportionment of `free` tasks.
+        let shares: Vec<f64> = weights.iter().map(|w| w / wsum * free as f64).collect();
+        let mut given = 0usize;
+        let mut rema: Vec<(f64, usize)> = Vec::with_capacity(n);
+        for i in 0..n {
+            let slack = inst.cap(i) - x[i];
+            let give = (shares[i].floor() as usize).min(slack);
+            x[i] += give;
+            given += give;
+            rema.push((shares[i] - shares[i].floor(), i));
+        }
+        rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut idx = 0;
+        while given < free && idx < rema.len() * 2 {
+            let i = rema[idx % rema.len()].1;
+            if x[i] < inst.cap(i) {
+                x[i] += 1;
+                given += 1;
+            }
+            idx += 1;
+        }
+        // Final repair sweep if rounding still left tasks unassigned.
+        let mut i = 0;
+        while given < free {
+            if x[i] < inst.cap(i) {
+                x[i] += 1;
+                given += 1;
+            } else {
+                i = (i + 1) % n;
+                continue;
+            }
+        }
+    }
+    Ok(Schedule::new(x))
+}
+
+/// Regime-blind incremental greedy on marginal costs (the paper's Fig. 2
+/// counterexample shows this is not optimal in general — optimal only when
+/// marginals are increasing, where it coincides with MarIn).
+pub fn greedy_cost(inst: &Instance) -> Result<Schedule> {
+    // Identical machinery to MarIn, intentionally applied regardless of the
+    // marginal regime.
+    crate::sched::marin::solve(inst)
+}
+
+/// OLAR [26]: assigns each of the `T` tasks to the resource whose
+/// *resulting* cost `C_i(x_i + 1)` is smallest — the greedy that minimizes
+/// the **maximum** per-resource cost (round makespan), not the total.
+pub fn olar(inst: &Instance) -> Result<Schedule> {
+    inst.validate()?;
+    let tr = limits::remove_lower_limits(inst);
+    let ti = &tr.instance;
+    let n = ti.n();
+    let mut x = vec![0usize; n];
+
+    let mut heap: MinHeap<usize> = MinHeap::with_capacity(n);
+    for i in 0..n {
+        if ti.cap(i) > 0 {
+            heap.push(ti.costs[i].eval(1), i as u64, i);
+        }
+    }
+    for _ in 0..ti.tasks {
+        let e = heap.pop().expect("capacity remains");
+        let i = e.value;
+        x[i] += 1;
+        if x[i] < ti.cap(i) {
+            heap.push(ti.costs[i].eval(x[i] + 1), i as u64, i);
+        }
+    }
+    Ok(tr.restore(&Schedule::new(x)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::CostFn;
+    use crate::sched::{mc2mkp, validate};
+    use crate::util::rng::Rng;
+
+    fn paper5() -> Instance {
+        Instance::paper_example(5)
+    }
+
+    #[test]
+    fn all_baselines_feasible_on_paper_example() {
+        let inst = paper5();
+        let mut rng = Rng::new(1);
+        for s in [
+            uniform(&inst).unwrap(),
+            random(&inst, &mut rng).unwrap(),
+            proportional(&inst).unwrap(),
+            greedy_cost(&inst).unwrap(),
+            olar(&inst).unwrap(),
+        ] {
+            validate::check(&inst, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn baselines_never_beat_optimal() {
+        let mut rng = Rng::new(0xBA5E);
+        for seed in 0..30u64 {
+            let mut r = Rng::new(seed);
+            let n = 2 + r.index(4);
+            let t = 8 + r.index(40);
+            let mut lower = Vec::new();
+            let mut upper = Vec::new();
+            let mut costs = Vec::new();
+            for _ in 0..n {
+                lower.push(r.index(2));
+                upper.push(4 + r.index(t));
+                costs.push(CostFn::Quadratic {
+                    fixed: r.range_f64(0.0, 1.0),
+                    a: r.range_f64(0.0, 1.0),
+                    b: r.range_f64(0.1, 3.0),
+                });
+            }
+            let sum_l: usize = lower.iter().sum();
+            let sum_u: usize = upper.iter().map(|&u| u.min(t)).sum();
+            if sum_l > t || sum_u < t {
+                continue;
+            }
+            let inst = Instance::new(t, lower, upper, costs).unwrap();
+            let opt = validate::checked_cost(&inst, &mc2mkp::solve(&inst).unwrap()).unwrap();
+            for s in [
+                uniform(&inst).unwrap(),
+                random(&inst, &mut rng).unwrap(),
+                proportional(&inst).unwrap(),
+                olar(&inst).unwrap(),
+            ] {
+                let c = validate::checked_cost(&inst, &s).unwrap();
+                assert!(c >= opt - 1e-9, "baseline beat optimal: {c} < {opt}");
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_suboptimal_on_decreasing() {
+        // Marginal-greedy follows the locally cheapest marginal: resource 0
+        // (constant 0.9/task) always beats resource 1's *first* marginal
+        // (1.0), so greedy never discovers that concentrating on the
+        // concave resource 1 costs only √T. This is the paper's §3.1
+        // insight ("simple greedy algorithms will not find optimal
+        // schedules") made executable.
+        let a = CostFn::Affine { fixed: 0.0, per_task: 0.9 };
+        let b = CostFn::PowerLaw { fixed: 0.0, scale: 1.0, exponent: 0.5 };
+        let inst = Instance::new(16, vec![0, 0], vec![16, 16], vec![a, b]).unwrap();
+        let g = validate::checked_cost(&inst, &greedy_cost(&inst).unwrap()).unwrap();
+        let opt = validate::checked_cost(&inst, &mc2mkp::solve(&inst).unwrap()).unwrap();
+        assert!(g > opt + 0.1, "greedy {g} should be worse than optimal {opt}");
+    }
+
+    #[test]
+    fn olar_minimizes_makespan_not_total() {
+        // Identical affine resources: OLAR balances (min makespan), while
+        // total-cost optimum is any full assignment; both totals equal here,
+        // but the max differs from a concentrated schedule.
+        let c = CostFn::Affine { fixed: 0.0, per_task: 1.0 };
+        let inst = Instance::new(8, vec![0, 0], vec![8, 8], vec![c.clone(), c]).unwrap();
+        let s = olar(&inst).unwrap();
+        assert_eq!(s.assignments(), &[4, 4]);
+        let conc = Schedule::new(vec![8, 0]);
+        assert!(validate::max_cost(&inst, &s) < validate::max_cost(&inst, &conc));
+    }
+
+    #[test]
+    fn uniform_respects_unequal_caps() {
+        let inst = Instance::new(
+            10,
+            vec![0, 0, 0],
+            vec![2, 3, 100],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+            ],
+        )
+        .unwrap();
+        let s = uniform(&inst).unwrap();
+        validate::check(&inst, &s).unwrap();
+        assert_eq!(s.assignments(), &[2, 3, 5]);
+    }
+
+    #[test]
+    fn proportional_weights_by_efficiency() {
+        let inst = Instance::new(
+            12,
+            vec![0, 0],
+            vec![12, 12],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 3.0 },
+            ],
+        )
+        .unwrap();
+        let s = proportional(&inst).unwrap();
+        validate::check(&inst, &s).unwrap();
+        // weights 1 : 1/3 → 9 : 3
+        assert_eq!(s.assignments(), &[9, 3]);
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let inst = paper5();
+        let a = random(&inst, &mut Rng::new(9)).unwrap();
+        let b = random(&inst, &mut Rng::new(9)).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,136 @@
+//! Exhaustive search oracle.
+//!
+//! Enumerates every feasible schedule and returns a global optimum. Used by
+//! the property-based test-suite to certify the optimality claims of the
+//! paper's algorithms on small instances ("proof by exhaustion" as an
+//! executable check of Theorems 1–5). Exponential — intended for
+//! `n <= ~6`, `T <= ~40`.
+
+use crate::error::{FedError, Result};
+use crate::sched::instance::{Instance, Schedule};
+
+/// Find an optimal schedule by exhaustive enumeration (with branch-and-bound
+/// pruning on remaining-capacity feasibility).
+pub fn solve(inst: &Instance) -> Result<Schedule> {
+    inst.validate()?;
+    let n = inst.n();
+    // Suffix sums of lower and effective-upper limits for pruning.
+    let mut suffix_l = vec![0usize; n + 1];
+    let mut suffix_u = vec![0usize; n + 1];
+    for i in (0..n).rev() {
+        suffix_l[i] = suffix_l[i + 1] + inst.lower[i];
+        suffix_u[i] = suffix_u[i + 1] + inst.cap(i);
+    }
+
+    let mut best_cost = f64::INFINITY;
+    let mut best: Option<Vec<usize>> = None;
+    let mut cur = vec![0usize; n];
+
+    fn rec(
+        inst: &Instance,
+        suffix_l: &[usize],
+        suffix_u: &[usize],
+        i: usize,
+        remaining: usize,
+        cost_so_far: f64,
+        cur: &mut Vec<usize>,
+        best_cost: &mut f64,
+        best: &mut Option<Vec<usize>>,
+    ) {
+        if i == inst.n() {
+            if remaining == 0 && cost_so_far < *best_cost {
+                *best_cost = cost_so_far;
+                *best = Some(cur.clone());
+            }
+            return;
+        }
+        // x_i must leave a feasible remainder for resources i+1..n.
+        let lo = inst.lower[i].max(remaining.saturating_sub(suffix_u[i + 1]));
+        let hi = inst.cap(i).min(remaining.saturating_sub(suffix_l[i + 1]));
+        if lo > hi {
+            return;
+        }
+        for x in lo..=hi {
+            let c = cost_so_far + inst.costs[i].eval(x);
+            if c >= *best_cost {
+                // all costs are non-negative → prune
+                continue;
+            }
+            cur[i] = x;
+            rec(inst, suffix_l, suffix_u, i + 1, remaining - x, c, cur, best_cost, best);
+        }
+        cur[i] = 0;
+    }
+
+    rec(
+        inst,
+        &suffix_l,
+        &suffix_u,
+        0,
+        inst.tasks,
+        0.0,
+        &mut cur,
+        &mut best_cost,
+        &mut best,
+    );
+
+    best.map(Schedule::new)
+        .ok_or_else(|| FedError::Infeasible("brute force found no schedule".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{mc2mkp, validate};
+
+    #[test]
+    fn paper_examples_agree_with_dp() {
+        for t in [5usize, 8] {
+            let inst = Instance::paper_example(t);
+            let bf = solve(&inst).unwrap();
+            let dp = mc2mkp::solve(&inst).unwrap();
+            let cb = validate::checked_cost(&inst, &bf).unwrap();
+            let cd = validate::checked_cost(&inst, &dp).unwrap();
+            assert!((cb - cd).abs() < 1e-12, "T={t}: bf {cb} != dp {cd}");
+        }
+    }
+
+    #[test]
+    fn exact_on_tiny_instance() {
+        use crate::sched::costs::CostFn;
+        let inst = Instance::new(
+            3,
+            vec![0, 0],
+            vec![3, 3],
+            vec![
+                CostFn::from_table(&[(0, 0.0), (1, 10.0), (2, 11.0), (3, 12.0)]),
+                CostFn::from_table(&[(0, 0.0), (1, 1.0), (2, 9.0), (3, 30.0)]),
+            ],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        // best: x = {2, 1} → 11 + 1 = 12  (vs {3,0}=12? C1(3)=12 — tie)
+        let c = validate::checked_cost(&inst, &s).unwrap();
+        assert!((c - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prunes_but_stays_exact_with_lower_limits() {
+        use crate::sched::costs::CostFn;
+        let inst = Instance::new(
+            6,
+            vec![2, 1, 0],
+            vec![4, 5, 6],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 3.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 2.0 },
+            ],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        validate::check(&inst, &s).unwrap();
+        // lower limits force {2,1,0}; the 3 free tasks go to resource 1.
+        assert_eq!(s.assignments(), &[2, 4, 0]);
+    }
+}

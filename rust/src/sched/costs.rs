@@ -1,0 +1,272 @@
+//! Cost functions `C_i : [L_i, U_i] → R≥0` and marginal costs (paper §5.1).
+//!
+//! The paper treats each resource's energy consumption as a black-box cost
+//! function of the number of assigned tasks. This module provides the
+//! families used throughout the reproduction:
+//!
+//! * **Affine** — constant marginal costs (the common literature model
+//!   [16]–[22]: energy linear in work);
+//! * **Quadratic** / **PowerLaw(e>1)** — increasing (convex) marginal costs
+//!   (e.g. DVFS ramping up under sustained load, thermal throttling
+//!   overheads);
+//! * **PowerLaw(e<1)** / **Logarithmic** — decreasing (concave) marginal
+//!   costs (fixed wake-up/communication energy amortized over more work,
+//!   caches warming up);
+//! * **Tabulated** — arbitrary measured values (what a profiler like I-Prof
+//!   [35] would produce); the only family that can be non-monotone.
+//!
+//! [`MarginalRegime`] classifies a cost function over a domain according to
+//! Definition 3 of the paper (eqs. 7a–7c).
+
+/// A cost function over task counts.
+#[derive(Clone, Debug)]
+pub enum CostFn {
+    /// `fixed + per_task * j` — constant marginal cost (7b).
+    Affine { fixed: f64, per_task: f64 },
+    /// `fixed + a*j² + b*j`, `a > 0` — increasing marginal cost (7a).
+    Quadratic { fixed: f64, a: f64, b: f64 },
+    /// `fixed + scale * j^exponent` — increasing marginal for `exponent > 1`,
+    /// decreasing for `0 < exponent < 1`.
+    PowerLaw { fixed: f64, scale: f64, exponent: f64 },
+    /// `fixed + scale * ln(1 + j)` — decreasing marginal cost (7c).
+    Logarithmic { fixed: f64, scale: f64 },
+    /// Arbitrary per-count values: `values[j - first]` is the cost of `j`
+    /// tasks for `j ∈ [first, first + values.len())`.
+    Tabulated { first: usize, values: Vec<f64> },
+    /// `weight * inner(j)` — weighted cost (carbon / money adapters,
+    /// paper §6 remark I).
+    Scaled { weight: f64, inner: Box<CostFn> },
+    /// `inner(j + shift) - inner(shift)` — the §5.2 lower-limit removal
+    /// transformation (eq. 10).
+    Shifted { shift: usize, inner: Box<CostFn> },
+}
+
+impl CostFn {
+    /// Evaluate the cost of assigning `j` tasks.
+    ///
+    /// Callers are responsible for staying within `[L_i, U_i]`; `Tabulated`
+    /// panics outside its stored domain (this is a programming error, not a
+    /// data error).
+    pub fn eval(&self, j: usize) -> f64 {
+        match self {
+            CostFn::Affine { fixed, per_task } => fixed + per_task * j as f64,
+            CostFn::Quadratic { fixed, a, b } => {
+                let x = j as f64;
+                fixed + a * x * x + b * x
+            }
+            CostFn::PowerLaw { fixed, scale, exponent } => {
+                fixed + scale * (j as f64).powf(*exponent)
+            }
+            CostFn::Logarithmic { fixed, scale } => fixed + scale * (1.0 + j as f64).ln(),
+            CostFn::Tabulated { first, values } => {
+                assert!(
+                    j >= *first && j - first < values.len(),
+                    "tabulated cost queried at {j}, domain [{first}, {})",
+                    first + values.len()
+                );
+                values[j - first]
+            }
+            CostFn::Scaled { weight, inner } => weight * inner.eval(j),
+            CostFn::Shifted { shift, inner } => inner.eval(j + shift) - inner.eval(*shift),
+        }
+    }
+
+    /// Marginal cost `M_i(j)` per eq. (6): the cost of the `j`-th task given
+    /// the domain starts at `lower` (`M_i(lower) := 0`).
+    pub fn marginal(&self, j: usize, lower: usize) -> f64 {
+        if j <= lower {
+            0.0
+        } else {
+            self.eval(j) - self.eval(j - 1)
+        }
+    }
+
+    /// Convenience: build a tabulated cost from `(count, cost)` pairs that
+    /// must form a contiguous range.
+    pub fn from_table(pairs: &[(usize, f64)]) -> CostFn {
+        assert!(!pairs.is_empty());
+        let first = pairs[0].0;
+        for (k, (j, _)) in pairs.iter().enumerate() {
+            assert_eq!(*j, first + k, "table must be contiguous");
+        }
+        CostFn::Tabulated { first, values: pairs.iter().map(|p| p.1).collect() }
+    }
+}
+
+/// Marginal-cost regime of a cost function over a domain (paper Def. 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MarginalRegime {
+    /// (7a) `M(j) <= M(j+1)` (convex costs). NOTE: constant is a special
+    /// case of increasing; [`classify`] reports `Constant` only when *all*
+    /// marginals are equal within tolerance.
+    Increasing,
+    /// (7b) all marginals equal.
+    Constant,
+    /// (7c) `M(j) >= M(j+1)` (concave costs).
+    Decreasing,
+    /// None of the above (only possible for tabulated/measured data).
+    Arbitrary,
+}
+
+/// Relative tolerance used when comparing marginal costs.
+pub const REGIME_TOL: f64 = 1e-9;
+
+/// Classify one cost function over `[lower, upper]`.
+///
+/// Follows Definition 3: compares consecutive marginal costs `M(j)` vs
+/// `M(j+1)` for `j ∈ ]lower, upper[`. Domains with fewer than two marginal
+/// values are vacuously `Constant`.
+pub fn classify(cost: &CostFn, lower: usize, upper: usize) -> MarginalRegime {
+    assert!(lower <= upper);
+    // Marginals exist for j in [lower+1, upper].
+    if upper - lower < 2 {
+        return MarginalRegime::Constant;
+    }
+    let mut incr = true;
+    let mut decr = true;
+    let mut cons = true;
+    let mut prev = cost.marginal(lower + 1, lower);
+    for j in lower + 2..=upper {
+        let cur = cost.marginal(j, lower);
+        let scale = prev.abs().max(cur.abs()).max(1.0);
+        let tol = REGIME_TOL * scale;
+        if cur < prev - tol {
+            incr = false;
+        }
+        if cur > prev + tol {
+            decr = false;
+        }
+        if (cur - prev).abs() > tol {
+            cons = false;
+        }
+        prev = cur;
+    }
+    match (cons, incr, decr) {
+        (true, _, _) => MarginalRegime::Constant,
+        (false, true, false) => MarginalRegime::Increasing,
+        (false, false, true) => MarginalRegime::Decreasing,
+        (false, true, true) => MarginalRegime::Constant, // unreachable, kept total
+        (false, false, false) => MarginalRegime::Arbitrary,
+    }
+}
+
+/// Combine per-resource regimes into the instance-wide scenario: the
+/// specialized algorithms require *all* resources to follow the same
+/// behavior (paper §5 intro); any mixture degrades to `Arbitrary`.
+pub fn combine(regimes: &[MarginalRegime]) -> MarginalRegime {
+    use MarginalRegime::*;
+    let mut acc = Constant;
+    for &r in regimes {
+        acc = match (acc, r) {
+            (Arbitrary, _) | (_, Arbitrary) => Arbitrary,
+            (Constant, x) => x,
+            (x, Constant) => x,
+            (Increasing, Increasing) => Increasing,
+            (Decreasing, Decreasing) => Decreasing,
+            (Increasing, Decreasing) | (Decreasing, Increasing) => Arbitrary,
+        };
+        if acc == Arbitrary {
+            return Arbitrary;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affine_eval_and_marginal() {
+        let c = CostFn::Affine { fixed: 2.0, per_task: 3.0 };
+        assert_eq!(c.eval(0), 2.0);
+        assert_eq!(c.eval(4), 14.0);
+        assert_eq!(c.marginal(1, 0), 3.0);
+        assert_eq!(c.marginal(0, 0), 0.0); // M(lower) := 0
+        assert_eq!(classify(&c, 0, 10), MarginalRegime::Constant);
+    }
+
+    #[test]
+    fn quadratic_is_increasing() {
+        let c = CostFn::Quadratic { fixed: 0.0, a: 0.5, b: 1.0 };
+        assert_eq!(classify(&c, 0, 10), MarginalRegime::Increasing);
+        // marginals: C(j)-C(j-1) = 0.5(2j-1) + 1, strictly increasing
+        assert!(c.marginal(2, 0) > c.marginal(1, 0));
+    }
+
+    #[test]
+    fn sqrt_and_log_are_decreasing() {
+        let s = CostFn::PowerLaw { fixed: 1.0, scale: 2.0, exponent: 0.5 };
+        let l = CostFn::Logarithmic { fixed: 0.0, scale: 5.0 };
+        assert_eq!(classify(&s, 0, 20), MarginalRegime::Decreasing);
+        assert_eq!(classify(&l, 0, 20), MarginalRegime::Decreasing);
+    }
+
+    #[test]
+    fn powerlaw_super_linear_increasing() {
+        let c = CostFn::PowerLaw { fixed: 0.0, scale: 1.0, exponent: 1.5 };
+        assert_eq!(classify(&c, 0, 20), MarginalRegime::Increasing);
+    }
+
+    #[test]
+    fn tabulated_domain_and_arbitrary() {
+        let c = CostFn::from_table(&[(0, 0.0), (1, 5.0), (2, 6.0), (3, 10.0)]);
+        assert_eq!(c.eval(2), 6.0);
+        // marginals 5, 1, 4 → neither monotone direction
+        assert_eq!(classify(&c, 0, 3), MarginalRegime::Arbitrary);
+    }
+
+    #[test]
+    #[should_panic(expected = "tabulated cost queried")]
+    fn tabulated_out_of_domain_panics() {
+        let c = CostFn::from_table(&[(1, 1.0), (2, 2.0)]);
+        c.eval(0);
+    }
+
+    #[test]
+    fn scaled_weights_cost() {
+        let c = CostFn::Scaled {
+            weight: 2.0,
+            inner: Box::new(CostFn::Affine { fixed: 1.0, per_task: 1.0 }),
+        };
+        assert_eq!(c.eval(3), 8.0);
+    }
+
+    #[test]
+    fn shifted_implements_eq10() {
+        // C'(j) = C(j + L) - C(L)
+        let base = CostFn::Quadratic { fixed: 3.0, a: 1.0, b: 0.0 };
+        let shifted = CostFn::Shifted { shift: 2, inner: Box::new(base.clone()) };
+        assert_eq!(shifted.eval(0), 0.0);
+        assert_eq!(shifted.eval(1), base.eval(3) - base.eval(2));
+        assert_eq!(shifted.eval(3), base.eval(5) - base.eval(2));
+    }
+
+    #[test]
+    fn paper_example_resource1_regime() {
+        // Resource 1 of §3.1: {1:2, 2:3.5, 3:5.5, 4:8, 5:10, 6:12}
+        // marginals: 1.5, 2, 2.5, 2, 2 → arbitrary (not monotone)
+        let c = CostFn::from_table(&[
+            (1, 2.0), (2, 3.5), (3, 5.5), (4, 8.0), (5, 10.0), (6, 12.0),
+        ]);
+        assert_eq!(classify(&c, 1, 6), MarginalRegime::Arbitrary);
+    }
+
+    #[test]
+    fn tiny_domain_is_constant() {
+        let c = CostFn::from_table(&[(0, 0.0), (1, 7.0)]);
+        assert_eq!(classify(&c, 0, 1), MarginalRegime::Constant);
+    }
+
+    #[test]
+    fn combine_rules() {
+        use MarginalRegime::*;
+        assert_eq!(combine(&[Increasing, Increasing]), Increasing);
+        assert_eq!(combine(&[Constant, Increasing]), Increasing);
+        assert_eq!(combine(&[Constant, Constant]), Constant);
+        assert_eq!(combine(&[Decreasing, Constant]), Decreasing);
+        assert_eq!(combine(&[Increasing, Decreasing]), Arbitrary);
+        assert_eq!(combine(&[Arbitrary, Constant]), Arbitrary);
+        assert_eq!(combine(&[]), Constant);
+    }
+}

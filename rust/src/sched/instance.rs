@@ -1,0 +1,271 @@
+//! Problem model: the Minimal Cost FL Schedule instance `(R, T, U, L, C)`
+//! (paper §3, Definition 1) and the schedule type.
+
+use crate::error::{FedError, Result};
+use crate::sched::costs::CostFn;
+
+/// A Minimal Cost FL Schedule problem instance.
+///
+/// `n` heterogeneous resources must together train on `T` identical,
+/// independent, atomic tasks (mini-batches). Resource `i` must receive
+/// between `lower[i]` and `upper[i]` tasks, paying `costs[i].eval(x_i)`
+/// energy. The objective is to minimize the **total** cost `Σ_i C_i(x_i)`
+/// subject to `Σ_i x_i = T`.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    /// Workload size `T`.
+    pub tasks: usize,
+    /// Lower limits `L_i`.
+    pub lower: Vec<usize>,
+    /// Upper limits `U_i`. A resource "without upper limit" (paper §5.5)
+    /// is encoded as `U_i >= T` (no assignment can exceed `T` anyway).
+    pub upper: Vec<usize>,
+    /// Cost functions `C_i`.
+    pub costs: Vec<CostFn>,
+}
+
+impl Instance {
+    /// Build and validate an instance.
+    pub fn new(
+        tasks: usize,
+        lower: Vec<usize>,
+        upper: Vec<usize>,
+        costs: Vec<CostFn>,
+    ) -> Result<Self> {
+        let inst = Self { tasks, lower, upper, costs };
+        inst.validate()?;
+        Ok(inst)
+    }
+
+    /// Number of resources `n`.
+    pub fn n(&self) -> usize {
+        self.costs.len()
+    }
+
+    /// Validity conditions from §3: consistent vector lengths, `L_i <= U_i`,
+    /// and `ΣL <= T <= ΣU` (otherwise no feasible schedule exists).
+    pub fn validate(&self) -> Result<()> {
+        let n = self.costs.len();
+        if n == 0 {
+            return Err(FedError::InvalidInstance("no resources".into()));
+        }
+        if self.lower.len() != n || self.upper.len() != n {
+            return Err(FedError::InvalidInstance(format!(
+                "length mismatch: costs={n} lower={} upper={}",
+                self.lower.len(),
+                self.upper.len()
+            )));
+        }
+        for i in 0..n {
+            if self.lower[i] > self.upper[i] {
+                return Err(FedError::InvalidInstance(format!(
+                    "resource {i}: L={} > U={}",
+                    self.lower[i], self.upper[i]
+                )));
+            }
+        }
+        let sum_l: usize = self.lower.iter().sum();
+        let sum_u: usize = self.upper.iter().map(|&u| u.min(self.tasks)).sum();
+        if sum_l > self.tasks {
+            return Err(FedError::InvalidInstance(format!(
+                "ΣL = {sum_l} > T = {}",
+                self.tasks
+            )));
+        }
+        if sum_u < self.tasks {
+            return Err(FedError::InvalidInstance(format!(
+                "ΣU = {sum_u} < T = {}",
+                self.tasks
+            )));
+        }
+        Ok(())
+    }
+
+    /// Effective upper limit of resource `i`, clamped to `T` (an assignment
+    /// can never exceed the workload).
+    #[inline]
+    pub fn cap(&self, i: usize) -> usize {
+        self.upper[i].min(self.tasks)
+    }
+
+    /// True if resource `i` has no effective upper limit (`U_i >= T`,
+    /// paper §5.5's "without upper limits").
+    #[inline]
+    pub fn unlimited(&self, i: usize) -> bool {
+        self.upper[i] >= self.tasks
+    }
+
+    /// The worked example of paper §3.1 (Figs. 1 and 2):
+    /// `R = {1,2,3}`, `U = {6,6,5}`, `L = {1,0,0}`, tabulated costs.
+    ///
+    /// With `T = 5` the optimum is `X* = {2,3,0}`, `ΣC = 7.5` (Fig. 1);
+    /// with `T = 8` it is `X* = {1,2,5}`, `ΣC = 11.5` (Fig. 2).
+    pub fn paper_example(tasks: usize) -> Instance {
+        let c1 = CostFn::from_table(&[
+            (1, 2.0), (2, 3.5), (3, 5.5), (4, 8.0), (5, 10.0), (6, 12.0),
+        ]);
+        let c2 = CostFn::from_table(&[
+            (0, 0.0), (1, 1.5), (2, 2.5), (3, 4.0), (4, 7.0), (5, 9.0), (6, 11.0),
+        ]);
+        let c3 = CostFn::from_table(&[
+            (0, 0.0), (1, 3.0), (2, 4.0), (3, 5.0), (4, 6.0), (5, 7.0),
+        ]);
+        Instance::new(tasks, vec![1, 0, 0], vec![6, 6, 5], vec![c1, c2, c3])
+            .expect("paper example is valid")
+    }
+}
+
+/// A schedule `X = {x_1, ..., x_n}` assigning tasks to resources.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    x: Vec<usize>,
+}
+
+impl Schedule {
+    /// Wrap raw assignments.
+    pub fn new(x: Vec<usize>) -> Self {
+        Self { x }
+    }
+
+    /// All-zero schedule for `n` resources.
+    pub fn zeros(n: usize) -> Self {
+        Self { x: vec![0; n] }
+    }
+
+    /// Assignment vector.
+    pub fn assignments(&self) -> &[usize] {
+        &self.x
+    }
+
+    /// Mutable access (used by solvers).
+    pub fn assignments_mut(&mut self) -> &mut [usize] {
+        &mut self.x
+    }
+
+    /// Tasks assigned to resource `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> usize {
+        self.x[i]
+    }
+
+    /// Set resource `i`'s assignment.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: usize) {
+        self.x[i] = v;
+    }
+
+    /// Total assigned tasks.
+    pub fn total(&self) -> usize {
+        self.x.iter().sum()
+    }
+
+    /// Number of resources.
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{{")?;
+        for (i, v) in self.x.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_is_valid() {
+        let inst = Instance::paper_example(5);
+        assert_eq!(inst.n(), 3);
+        assert_eq!(inst.tasks, 5);
+        inst.validate().unwrap();
+        let inst8 = Instance::paper_example(8);
+        inst8.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_example_costs_match_figures() {
+        let inst = Instance::paper_example(5);
+        assert_eq!(inst.costs[0].eval(2), 3.5);
+        assert_eq!(inst.costs[1].eval(3), 4.0);
+        assert_eq!(inst.costs[2].eval(5), 7.0);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        // L > U
+        assert!(Instance::new(
+            3,
+            vec![2],
+            vec![1],
+            vec![CostFn::Affine { fixed: 0.0, per_task: 1.0 }]
+        )
+        .is_err());
+        // ΣL > T
+        assert!(Instance::new(
+            1,
+            vec![1, 1],
+            vec![5, 5],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 }
+            ]
+        )
+        .is_err());
+        // ΣU < T
+        assert!(Instance::new(
+            10,
+            vec![0, 0],
+            vec![3, 3],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 }
+            ]
+        )
+        .is_err());
+        // no resources
+        assert!(Instance::new(1, vec![], vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn cap_and_unlimited() {
+        let inst = Instance::new(
+            5,
+            vec![0, 0],
+            vec![3, 100],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 2.0 },
+            ],
+        )
+        .unwrap();
+        assert_eq!(inst.cap(0), 3);
+        assert_eq!(inst.cap(1), 5);
+        assert!(!inst.unlimited(0));
+        assert!(inst.unlimited(1));
+    }
+
+    #[test]
+    fn schedule_basics() {
+        let mut s = Schedule::zeros(3);
+        s.set(1, 4);
+        assert_eq!(s.total(), 4);
+        assert_eq!(s.get(1), 4);
+        assert_eq!(format!("{s}"), "{0, 4, 0}");
+        assert_eq!(s.len(), 3);
+    }
+}

@@ -1,0 +1,126 @@
+//! Lower-limit removal (paper §5.2, eqs. 8–11).
+//!
+//! Any instance `(R, T, U, L, C)` is transformed into an equivalent
+//! zero-lower-limit instance:
+//!
+//! * `T' = T - Σ L_i`            (eq. 8)
+//! * `U'_i = U_i - L_i`          (eq. 9)
+//! * `C'_i(j) = C_i(j + L_i) - C_i(L_i)`  (eq. 10)
+//!
+//! and a solution `X'` maps back via `x_i = x'_i + L_i` (eq. 11). The
+//! transformation is O(n); the shifted cost functions are lazy
+//! ([`CostFn::Shifted`]), evaluated only where a solver needs them.
+
+use crate::sched::costs::CostFn;
+use crate::sched::instance::{Instance, Schedule};
+
+/// The transformation record: the equivalent instance plus what is needed
+/// to map schedules back.
+#[derive(Clone, Debug)]
+pub struct Transformed {
+    /// Equivalent instance with all lower limits at zero.
+    pub instance: Instance,
+    /// Original lower limits (for [`Transformed::restore`]).
+    lower: Vec<usize>,
+}
+
+/// Apply eqs. (8)–(10).
+pub fn remove_lower_limits(inst: &Instance) -> Transformed {
+    let sum_l: usize = inst.lower.iter().sum();
+    let n = inst.n();
+    let mut costs = Vec::with_capacity(n);
+    let mut upper = Vec::with_capacity(n);
+    let t_prime = inst.tasks - sum_l;
+    for i in 0..n {
+        let l = inst.lower[i];
+        upper.push(inst.upper[i] - l);
+        if l == 0 {
+            costs.push(inst.costs[i].clone());
+        } else {
+            costs.push(CostFn::Shifted { shift: l, inner: Box::new(inst.costs[i].clone()) });
+        }
+    }
+    // Note: C'_i(0) = 0 for shifted costs, but original zero-lower-limit
+    // resources keep their (possibly non-zero) C_i(0). Solvers only compare
+    // cost *differences*, so a constant offset per resource never changes
+    // the argmin; totals are always recomputed on the original instance.
+    let instance = Instance {
+        tasks: t_prime,
+        lower: vec![0; n],
+        upper,
+        costs,
+    };
+    Transformed { instance, lower: inst.lower.clone() }
+}
+
+impl Transformed {
+    /// Map a schedule of the transformed instance back (eq. 11).
+    pub fn restore(&self, sched: &Schedule) -> Schedule {
+        let x: Vec<usize> = sched
+            .assignments()
+            .iter()
+            .zip(&self.lower)
+            .map(|(&xp, &l)| xp + l)
+            .collect();
+        Schedule::new(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::validate;
+
+    #[test]
+    fn transform_shapes() {
+        let inst = Instance::paper_example(8);
+        let tr = remove_lower_limits(&inst);
+        assert_eq!(tr.instance.tasks, 7); // 8 - (1+0+0)
+        assert_eq!(tr.instance.lower, vec![0, 0, 0]);
+        assert_eq!(tr.instance.upper, vec![5, 6, 5]);
+        tr.instance.validate().unwrap();
+    }
+
+    #[test]
+    fn shifted_costs_match_eq10() {
+        let inst = Instance::paper_example(8);
+        let tr = remove_lower_limits(&inst);
+        // C'_1(j) = C_1(j+1) - C_1(1)
+        for j in 0..=5 {
+            let expect = inst.costs[0].eval(j + 1) - inst.costs[0].eval(1);
+            assert!((tr.instance.costs[0].eval(j) - expect).abs() < 1e-12);
+        }
+        // resource 2 had L=0: unchanged
+        for j in 0..=6 {
+            assert_eq!(tr.instance.costs[1].eval(j), inst.costs[1].eval(j));
+        }
+    }
+
+    #[test]
+    fn restore_adds_lower_limits() {
+        let inst = Instance::paper_example(8);
+        let tr = remove_lower_limits(&inst);
+        let restored = tr.restore(&Schedule::new(vec![0, 2, 5]));
+        assert_eq!(restored.assignments(), &[1, 2, 5]);
+        validate::check(&inst, &restored).unwrap();
+    }
+
+    #[test]
+    fn feasible_schedules_map_bijectively() {
+        let inst = Instance::paper_example(5);
+        let tr = remove_lower_limits(&inst);
+        // any feasible X' of the transformed instance restores to feasible X
+        let xp = Schedule::new(vec![1, 3, 0]);
+        validate::check(&tr.instance, &xp).unwrap();
+        let x = tr.restore(&xp);
+        validate::check(&inst, &x).unwrap();
+        // and total costs differ by the constant Σ C_i(L_i) - Σ C_i(0)... —
+        // cost *differences* between feasible schedules are preserved:
+        let yp = Schedule::new(vec![0, 4, 0]);
+        validate::check(&tr.instance, &yp).unwrap();
+        let y = tr.restore(&yp);
+        let d_orig = validate::total_cost(&inst, &x) - validate::total_cost(&inst, &y);
+        let d_tr = validate::total_cost(&tr.instance, &xp) - validate::total_cost(&tr.instance, &yp);
+        assert!((d_orig - d_tr).abs() < 1e-12);
+    }
+}

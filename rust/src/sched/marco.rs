@@ -1,0 +1,125 @@
+//! Algorithm 3 — **MarCo**: optimal scheduling under *constant* marginal
+//! costs (paper §5.4).
+//!
+//! With constant marginals, whole blocks of tasks can be assigned at once:
+//! sort resources by their (single) marginal cost `M_i(1)` and fill each to
+//! its upper limit (or to the remaining workload) in order (Lemma 5,
+//! Theorem 3).
+//!
+//! Complexity: `Θ(n log n)` (the sort dominates), `O(n)` space.
+
+use crate::error::Result;
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::limits;
+
+/// Run MarCo. Optimal when all resources have constant marginal costs;
+/// feasible (but possibly suboptimal) otherwise.
+pub fn solve(inst: &Instance) -> Result<Schedule> {
+    inst.validate()?;
+    let tr = limits::remove_lower_limits(inst);
+    let ti = &tr.instance;
+    let n = ti.n();
+    let mut x = vec![0usize; n];
+
+    // Sorted list of (marginal cost, resource); deterministic tie-break.
+    let mut order: Vec<(f64, usize)> = (0..n)
+        .filter(|&i| ti.cap(i) > 0)
+        .map(|i| (ti.costs[i].marginal(1, 0), i))
+        .collect();
+    order.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut remaining = ti.tasks;
+    for (_m, i) in order {
+        if remaining == 0 {
+            break;
+        }
+        // Assign the most tasks possible (line 7 of Algorithm 3).
+        let take = ti.cap(i).min(remaining);
+        x[i] = take;
+        remaining -= take;
+    }
+    debug_assert_eq!(remaining, 0, "valid instance must absorb all tasks");
+
+    Ok(tr.restore(&Schedule::new(x)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::CostFn;
+    use crate::sched::{marin, mc2mkp, validate};
+    use crate::util::rng::Rng;
+
+    fn affine(fixed: f64, per_task: f64) -> CostFn {
+        CostFn::Affine { fixed, per_task }
+    }
+
+    #[test]
+    fn fills_cheapest_first() {
+        let inst = Instance::new(
+            10,
+            vec![0, 0, 0],
+            vec![4, 4, 4],
+            vec![affine(0.0, 3.0), affine(0.0, 1.0), affine(0.0, 2.0)],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[2, 4, 4]);
+        validate::check(&inst, &s).unwrap();
+    }
+
+    #[test]
+    fn partial_last_resource() {
+        let inst = Instance::new(
+            5,
+            vec![0, 0],
+            vec![4, 4],
+            vec![affine(0.0, 1.0), affine(0.0, 2.0)],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[4, 1]);
+    }
+
+    #[test]
+    fn matches_marin_and_dp_on_constant_instances() {
+        let mut rng = Rng::new(0xC0C0);
+        for _case in 0..50 {
+            let n = 2 + rng.index(4);
+            let t = 10 + rng.index(50);
+            let mut lower = Vec::new();
+            let mut upper = Vec::new();
+            let mut costs = Vec::new();
+            for _ in 0..n {
+                lower.push(rng.index(3));
+                upper.push(3 + rng.index(t));
+                costs.push(affine(rng.range_f64(0.0, 1.0), rng.range_f64(0.1, 5.0)));
+            }
+            let sum_l: usize = lower.iter().sum();
+            let sum_u: usize = upper.iter().map(|&u| u.min(t)).sum();
+            if sum_l > t || sum_u < t {
+                continue;
+            }
+            let inst = Instance::new(t, lower, upper, costs).unwrap();
+            let a = validate::checked_cost(&inst, &solve(&inst).unwrap()).unwrap();
+            let b = validate::checked_cost(&inst, &marin::solve(&inst).unwrap()).unwrap();
+            let c = validate::checked_cost(&inst, &mc2mkp::solve(&inst).unwrap()).unwrap();
+            assert!((a - c).abs() < 1e-9, "MarCo {a} != DP {c}");
+            assert!((b - c).abs() < 1e-9, "MarIn {b} != DP {c}");
+        }
+    }
+
+    #[test]
+    fn lower_limits_reserved_before_sorting() {
+        // Expensive resource has a lower limit that must be honored.
+        let inst = Instance::new(
+            6,
+            vec![0, 3],
+            vec![10, 10],
+            vec![affine(0.0, 1.0), affine(0.0, 50.0)],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[3, 3]);
+    }
+}

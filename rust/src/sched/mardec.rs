@@ -1,0 +1,303 @@
+//! Algorithms 5–7 — **MarDec**: optimal scheduling under *decreasing*
+//! marginal costs in the presence of upper limits (paper §5.6).
+//!
+//! Lemma 6 implies an optimal schedule exists in one of two shapes:
+//!
+//! * **(I)** all tasks on a single resource without upper limits, or
+//! * **(II)** tasks only on resources at **maximum capacity**, plus at most
+//!   one resource at intermediary capacity.
+//!
+//! MarDec enumerates both shapes exhaustively using the (MC)²MKP DP
+//! matrices over two-item classes `N_i = {0, U_i}` (Algorithm 6
+//! "Prepare"), scanning every possible intermediary load `t` for (a) the
+//! best unlimited resource and (b) each limited resource in turn, and
+//! translating the winning DP solution back to a schedule (Algorithm 7
+//! "Translate"). Optimality is Theorem 5.
+//!
+//! Complexity: `O(T n²)` (the DP over two-item classes is `O(T n)` and is
+//! recomputed once per limited resource), `O(T n)` space.
+//!
+//! Implementation note on fixed costs: the paper's Prepare sets
+//! `c_{i0} = 0`, implicitly assuming `C_i(0) = 0` (true after its §5.2
+//! transformation). We normalize explicitly — all comparisons use
+//! `C̃_i(j) = C_i(j) − C_i(0)` — so instances whose zero-lower-limit
+//! resources still have a non-zero idle cost are handled correctly (the
+//! `Σ C_i(0)` offset is common to every candidate, so the argmin is
+//! unchanged).
+
+use crate::error::{FedError, Result};
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::limits;
+use crate::sched::mc2mkp::{dp, Classes, DpMatrices, Item};
+
+/// Run MarDec. Optimal for decreasing marginal costs with (or without)
+/// upper limits; also exact without upper limits (it degenerates to
+/// MarDecUn's scenario via the `t = T` candidate).
+pub fn solve(inst: &Instance) -> Result<Schedule> {
+    inst.validate()?;
+    let tr = limits::remove_lower_limits(inst);
+    let ti = &tr.instance;
+    let t_total = ti.tasks;
+    let n = ti.n();
+
+    // Normalized cost: C̃_i(j) = C_i(j) − C_i(0).
+    let c0: Vec<f64> = (0..n).map(|i| ti.costs[i].eval(0)).collect();
+    let cost = |i: usize, j: usize| ti.costs[i].eval(j) - c0[i];
+
+    // Lines 1–3: split resources by the presence of an effective limit.
+    let r_lim: Vec<usize> = (0..n).filter(|&i| ti.cap(i) < t_total).collect();
+    let r_unl: Vec<usize> = (0..n).filter(|&i| ti.cap(i) >= t_total).collect();
+    let n_lim = r_lim.len();
+
+    // Algorithm 6 (Prepare): two-item classes {0, U_r} for limited
+    // resources; γ(class index) = r_lim[class index].
+    let classes = Classes {
+        classes: r_lim
+            .iter()
+            .map(|&r| {
+                vec![
+                    Item { weight: 0, cost: 0.0 },
+                    Item { weight: ti.cap(r), cost: cost(r, ti.cap(r)) },
+                ]
+            })
+            .collect(),
+    };
+
+    let mut best_cost = f64::INFINITY;
+    let mut best: Option<Schedule> = None;
+
+    // DP over the full limited set — used by phase 1 and by the
+    // "no intermediary resource" candidate.
+    let m_full = dp(&classes, t_total);
+
+    // Candidate: scenario (II) with *no* intermediary resource at all
+    // (every used resource at max capacity, exact fill). The paper's loops
+    // cover this via t = 0 whenever an intermediary candidate exists, but
+    // when `R^unl = ∅` and `Σ U_r = T` it is the only feasible shape.
+    if m_full.z(n_lim, t_total).is_finite() {
+        let c = m_full.z(n_lim, t_total);
+        if c < best_cost {
+            best_cost = c;
+            best = Some(translate(&m_full, &classes, &r_lim, n, t_total)?);
+        }
+    }
+
+    // Lines 5–16: one resource from R^unl at intermediary capacity t,
+    // limited resources at max capacity filling exactly T − t.
+    if !r_unl.is_empty() {
+        for t in 0..=t_total {
+            let rest = m_full.z(n_lim, t_total - t);
+            if !rest.is_finite() {
+                continue;
+            }
+            // k ← argmin_{i ∈ R^unl} C̃_i(t)   (line 9)
+            let mut k = r_unl[0];
+            let mut ck = cost(k, t);
+            for &i in &r_unl[1..] {
+                let ci = cost(i, t);
+                if ci < ck {
+                    ck = ci;
+                    k = i;
+                }
+            }
+            let total = ck + rest;
+            if total < best_cost {
+                best_cost = total;
+                let mut x = translate(&m_full, &classes, &r_lim, n, t_total - t)?;
+                x.set(k, t);
+                best = Some(x);
+            }
+        }
+    }
+
+    // Lines 17–28: one resource from R^lim at intermediary capacity.
+    for (ci, &r) in r_lim.iter().enumerate() {
+        // N' ← (N \ N_i) ∪ {N_i = {0}}   (line 18)
+        let mut reduced = classes.clone();
+        reduced.classes[ci] = vec![Item { weight: 0, cost: 0.0 }];
+        let m_red = dp(&reduced, t_total);
+        for t in 0..ti.cap(r) {
+            let rest = m_red.z(n_lim, t_total - t);
+            if !rest.is_finite() {
+                continue;
+            }
+            let total = cost(r, t) + rest;
+            if total < best_cost {
+                best_cost = total;
+                let mut x = translate(&m_red, &reduced, &r_lim, n, t_total - t)?;
+                x.set(r, t);
+                best = Some(x);
+            }
+        }
+    }
+
+    let x = best.ok_or_else(|| {
+        FedError::Infeasible("MarDec found no candidate on a valid instance".into())
+    })?;
+    Ok(tr.restore(&x))
+}
+
+/// Algorithm 7 (Translate): backtrack the DP solution filling exactly
+/// `tau` into a partial schedule over all `n` resources (unlisted
+/// resources get 0).
+fn translate(
+    m: &DpMatrices,
+    classes: &Classes,
+    gamma: &[usize],
+    n: usize,
+    tau: usize,
+) -> Result<Schedule> {
+    let chosen = m.backtrack(classes, tau)?;
+    let mut x = Schedule::zeros(n);
+    for (ci, &item_idx) in chosen.iter().enumerate() {
+        x.set(gamma[ci], classes.classes[ci][item_idx].weight);
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::CostFn;
+    use crate::sched::{mardecun, mc2mkp, validate};
+    use crate::util::rng::Rng;
+
+    fn concave(rng: &mut Rng) -> CostFn {
+        if rng.bool(0.5) {
+            CostFn::PowerLaw {
+                fixed: rng.range_f64(0.0, 1.0),
+                scale: rng.range_f64(0.5, 4.0),
+                exponent: rng.range_f64(0.2, 0.95),
+            }
+        } else {
+            CostFn::Logarithmic {
+                fixed: rng.range_f64(0.0, 1.0),
+                scale: rng.range_f64(0.5, 4.0),
+            }
+        }
+    }
+
+    #[test]
+    fn concentrates_up_to_limits() {
+        // Cheapest concave resource is capped at 4; next-cheapest absorbs
+        // the remainder.
+        let inst = Instance::new(
+            10,
+            vec![0, 0, 0],
+            vec![4, 10, 10],
+            vec![
+                CostFn::PowerLaw { fixed: 0.0, scale: 1.0, exponent: 0.5 },
+                CostFn::PowerLaw { fixed: 0.0, scale: 3.0, exponent: 0.5 },
+                CostFn::PowerLaw { fixed: 0.0, scale: 10.0, exponent: 0.5 },
+            ],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        validate::check(&inst, &s).unwrap();
+        let c = validate::total_cost(&inst, &s);
+        let c_dp = validate::total_cost(&inst, &mc2mkp::solve(&inst).unwrap());
+        assert!((c - c_dp).abs() < 1e-9, "MarDec {c} != DP {c_dp}");
+    }
+
+    #[test]
+    fn matches_mardecun_when_unlimited() {
+        let mut rng = Rng::new(77);
+        for _ in 0..20 {
+            let n = 2 + rng.index(4);
+            let t = 5 + rng.index(30);
+            let costs: Vec<CostFn> = (0..n).map(|_| concave(&mut rng)).collect();
+            let inst = Instance::new(t, vec![0; n], vec![t + 5; n], costs).unwrap();
+            let a = validate::checked_cost(&inst, &solve(&inst).unwrap()).unwrap();
+            let b =
+                validate::checked_cost(&inst, &mardecun::solve(&inst).unwrap()).unwrap();
+            assert!((a - b).abs() < 1e-9, "MarDec {a} != MarDecUn {b}");
+        }
+    }
+
+    #[test]
+    fn matches_dp_on_random_concave_instances() {
+        let mut rng = Rng::new(0x3A3);
+        let mut tested = 0;
+        while tested < 60 {
+            let n = 2 + rng.index(4);
+            let t = 5 + rng.index(40);
+            let mut lower = Vec::new();
+            let mut upper = Vec::new();
+            let mut costs = Vec::new();
+            for _ in 0..n {
+                lower.push(rng.index(3));
+                upper.push(2 + rng.index(t + 4));
+                costs.push(concave(&mut rng));
+            }
+            let sum_l: usize = lower.iter().sum();
+            let sum_u: usize = upper.iter().map(|&u| u.min(t)).sum();
+            if sum_l > t || sum_u < t || lower.iter().zip(&upper).any(|(l, u)| l > u) {
+                continue;
+            }
+            tested += 1;
+            let inst = Instance::new(t, lower, upper, costs).unwrap();
+            let a = validate::checked_cost(&inst, &solve(&inst).unwrap()).unwrap();
+            let b = validate::checked_cost(&inst, &mc2mkp::solve(&inst).unwrap()).unwrap();
+            assert!((a - b).abs() < 1e-9, "MarDec {a} != DP {b} on {inst:?}");
+        }
+    }
+
+    #[test]
+    fn all_resources_at_exact_max() {
+        // ΣU == T and no unlimited resources: the only feasible schedule is
+        // everyone at max (the shape the paper's loops reach only via the
+        // explicit no-intermediary candidate).
+        let inst = Instance::new(
+            9,
+            vec![0, 0, 0],
+            vec![2, 3, 4],
+            vec![
+                CostFn::PowerLaw { fixed: 0.0, scale: 1.0, exponent: 0.5 },
+                CostFn::PowerLaw { fixed: 0.0, scale: 2.0, exponent: 0.5 },
+                CostFn::PowerLaw { fixed: 0.0, scale: 3.0, exponent: 0.5 },
+            ],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[2, 3, 4]);
+    }
+
+    #[test]
+    fn nonzero_idle_cost_handled() {
+        // Resources with C(0) > 0 (idle energy): normalization must keep
+        // the argmin correct vs the DP.
+        let inst = Instance::new(
+            6,
+            vec![0, 0],
+            vec![4, 6],
+            vec![
+                CostFn::PowerLaw { fixed: 5.0, scale: 1.0, exponent: 0.5 },
+                CostFn::PowerLaw { fixed: 0.5, scale: 2.0, exponent: 0.5 },
+            ],
+        )
+        .unwrap();
+        let a = validate::checked_cost(&inst, &solve(&inst).unwrap()).unwrap();
+        let b = validate::checked_cost(&inst, &mc2mkp::solve(&inst).unwrap()).unwrap();
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lower_limits_respected() {
+        let inst = Instance::new(
+            12,
+            vec![3, 0, 1],
+            vec![5, 8, 12],
+            vec![
+                CostFn::Logarithmic { fixed: 0.0, scale: 8.0 },
+                CostFn::Logarithmic { fixed: 0.0, scale: 1.0 },
+                CostFn::Logarithmic { fixed: 0.0, scale: 4.0 },
+            ],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        validate::check(&inst, &s).unwrap();
+        let b = validate::checked_cost(&inst, &mc2mkp::solve(&inst).unwrap()).unwrap();
+        let a = validate::total_cost(&inst, &s);
+        assert!((a - b).abs() < 1e-9);
+    }
+}

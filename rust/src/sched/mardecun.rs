@@ -1,0 +1,132 @@
+//! Algorithm 4 — **MarDecUn**: optimal scheduling under *decreasing*
+//! marginal costs when no resource has an effective upper limit
+//! (paper §5.5).
+//!
+//! With concave costs, splitting work across resources can never beat
+//! concentrating it (Lemma 6 — sums of contiguous intervals of decreasing
+//! functions), so the optimum assigns **all** tasks to the single resource
+//! with minimal `C_i(T)` (Theorem 4).
+//!
+//! Complexity: `Θ(n)`, `O(n)` space (the output schedule itself).
+
+use crate::error::{FedError, Result};
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::limits;
+
+/// Run MarDecUn. Requires every resource to be unlimited
+/// (`U'_i >= T'` after lower-limit removal); returns
+/// [`FedError::ScenarioMismatch`] otherwise — use [`crate::sched::mardec`]
+/// in that case.
+pub fn solve(inst: &Instance) -> Result<Schedule> {
+    inst.validate()?;
+    let tr = limits::remove_lower_limits(inst);
+    let ti = &tr.instance;
+    let t = ti.tasks;
+
+    if !(0..ti.n()).all(|i| ti.cap(i) >= t) {
+        return Err(FedError::ScenarioMismatch(
+            "MarDecUn requires all resources unlimited (use MarDec)".into(),
+        ));
+    }
+
+    // k ← argmin_i C_i(T) (line 4 of Algorithm 4). The paper's costs are
+    // normalized (C_i(0) = 0 after its §5.2 transform); ours may carry an
+    // idle offset, so compare the *increase* C_i(T) − C_i(0) — the
+    // Σ C_i(0) baseline is paid by every candidate alike.
+    let mut best = 0usize;
+    let mut best_cost = f64::INFINITY;
+    for i in 0..ti.n() {
+        let c = ti.costs[i].eval(t) - ti.costs[i].eval(0);
+        if c < best_cost {
+            best_cost = c;
+            best = i;
+        }
+    }
+
+    let mut x = vec![0usize; ti.n()];
+    x[best] = t;
+    Ok(tr.restore(&Schedule::new(x)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::CostFn;
+    use crate::sched::{mc2mkp, validate};
+    use crate::util::rng::Rng;
+
+    fn sqrt_cost(scale: f64) -> CostFn {
+        CostFn::PowerLaw { fixed: 0.0, scale, exponent: 0.5 }
+    }
+
+    #[test]
+    fn concentrates_all_tasks() {
+        let inst = Instance::new(
+            9,
+            vec![0, 0, 0],
+            vec![9, 9, 9],
+            vec![sqrt_cost(3.0), sqrt_cost(1.0), sqrt_cost(2.0)],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[0, 9, 0]);
+        validate::check(&inst, &s).unwrap();
+    }
+
+    #[test]
+    fn rejects_limited_instances() {
+        let inst = Instance::new(
+            9,
+            vec![0, 0],
+            vec![4, 9],
+            vec![sqrt_cost(1.0), sqrt_cost(2.0)],
+        )
+        .unwrap();
+        assert!(matches!(solve(&inst), Err(FedError::ScenarioMismatch(_))));
+    }
+
+    #[test]
+    fn lower_limits_still_respected() {
+        // Resource 0 must take at least 2 even though resource 1 is cheaper.
+        let inst = Instance::new(
+            10,
+            vec![2, 0],
+            vec![100, 100],
+            vec![sqrt_cost(5.0), sqrt_cost(1.0)],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[2, 8]);
+        validate::check(&inst, &s).unwrap();
+    }
+
+    #[test]
+    fn matches_dp_on_concave_unlimited_instances() {
+        let mut rng = Rng::new(0xDEC0);
+        for _case in 0..50 {
+            let n = 2 + rng.index(4);
+            let t = 5 + rng.index(40);
+            let costs: Vec<CostFn> = (0..n)
+                .map(|_| {
+                    if rng.bool(0.5) {
+                        CostFn::PowerLaw {
+                            fixed: rng.range_f64(0.0, 1.0),
+                            scale: rng.range_f64(0.5, 4.0),
+                            exponent: rng.range_f64(0.2, 0.9),
+                        }
+                    } else {
+                        CostFn::Logarithmic {
+                            fixed: rng.range_f64(0.0, 1.0),
+                            scale: rng.range_f64(0.5, 4.0),
+                        }
+                    }
+                })
+                .collect();
+            let inst =
+                Instance::new(t, vec![0; n], vec![t; n], costs).unwrap();
+            let a = validate::checked_cost(&inst, &solve(&inst).unwrap()).unwrap();
+            let b = validate::checked_cost(&inst, &mc2mkp::solve(&inst).unwrap()).unwrap();
+            assert!((a - b).abs() < 1e-9, "MarDecUn {a} != DP {b}");
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Algorithm 2 — **MarIn**: optimal scheduling under monotonically
+//! *increasing* marginal costs (paper §5.3), adapted from OLAR [26].
+//!
+//! After lower-limit removal, tasks are assigned one at a time to the
+//! resource whose *next marginal cost* `M_i(x_i + 1)` is minimal and whose
+//! upper limit is not yet reached. Because marginal costs only grow, every
+//! prefix schedule is optimal (Lemma 4), hence so is the result
+//! (Theorem 2).
+//!
+//! Complexity: `Θ(n + T log n)` with a binary min-heap, `O(n)` space.
+
+use crate::error::Result;
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::limits;
+use crate::util::heap::MinHeap;
+
+/// Run MarIn. The caller is responsible for the instance actually having
+/// increasing marginal costs (checked by [`crate::sched::auto`]); on other
+/// instances the result is feasible but may be suboptimal.
+pub fn solve(inst: &Instance) -> Result<Schedule> {
+    inst.validate()?;
+    let tr = limits::remove_lower_limits(inst);
+    let ti = &tr.instance;
+    let n = ti.n();
+    let mut x = vec![0usize; n];
+
+    // Heap of (next marginal cost, resource). Tie-break on resource index
+    // for determinism.
+    let mut heap: MinHeap<usize> = MinHeap::with_capacity(n);
+    for i in 0..n {
+        if ti.cap(i) > 0 {
+            heap.push(ti.costs[i].marginal(1, 0), i as u64, i);
+        }
+    }
+
+    for _t in 0..ti.tasks {
+        let e = heap
+            .pop()
+            .expect("valid instance: capacity remains while tasks remain");
+        let i = e.value;
+        x[i] += 1;
+        if x[i] < ti.cap(i) {
+            heap.push(ti.costs[i].marginal(x[i] + 1, 0), i as u64, i);
+        }
+    }
+
+    Ok(tr.restore(&Schedule::new(x)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::CostFn;
+    use crate::sched::{mc2mkp, validate};
+
+    fn affine(per_task: f64) -> CostFn {
+        CostFn::Affine { fixed: 0.0, per_task }
+    }
+
+    #[test]
+    fn prefers_cheapest_linear_resource() {
+        let inst = Instance::new(
+            6,
+            vec![0, 0],
+            vec![10, 10],
+            vec![affine(1.0), affine(5.0)],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[6, 0]);
+    }
+
+    #[test]
+    fn splits_convex_costs() {
+        // C(j) = j², marginals 1,3,5,...: two identical resources share
+        // evenly.
+        let q = CostFn::Quadratic { fixed: 0.0, a: 1.0, b: 0.0 };
+        let inst = Instance::new(8, vec![0, 0], vec![8, 8], vec![q.clone(), q]).unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[4, 4]);
+    }
+
+    #[test]
+    fn respects_upper_limits() {
+        let inst = Instance::new(
+            10,
+            vec![0, 0],
+            vec![3, 10],
+            vec![affine(1.0), affine(100.0)],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[3, 7]);
+        validate::check(&inst, &s).unwrap();
+    }
+
+    #[test]
+    fn respects_lower_limits() {
+        let inst = Instance::new(
+            5,
+            vec![0, 4],
+            vec![10, 10],
+            vec![affine(1.0), affine(100.0)],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[1, 4]);
+    }
+
+    #[test]
+    fn matches_dp_on_convex_instances() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xA11);
+        for _case in 0..50 {
+            let n = 2 + rng.index(4);
+            let t = 5 + rng.index(40);
+            let mut lower = Vec::new();
+            let mut upper = Vec::new();
+            let mut costs = Vec::new();
+            for _ in 0..n {
+                lower.push(rng.index(3));
+                upper.push(t); // unlimited
+                costs.push(CostFn::Quadratic {
+                    fixed: rng.range_f64(0.0, 2.0),
+                    a: rng.range_f64(0.01, 2.0),
+                    b: rng.range_f64(0.0, 3.0),
+                });
+            }
+            let sum_l: usize = lower.iter().sum();
+            if sum_l > t {
+                continue;
+            }
+            let inst = Instance::new(t, lower, upper, costs).unwrap();
+            let a = solve(&inst).unwrap();
+            let b = mc2mkp::solve(&inst).unwrap();
+            let ca = validate::checked_cost(&inst, &a).unwrap();
+            let cb = validate::checked_cost(&inst, &b).unwrap();
+            assert!(
+                (ca - cb).abs() < 1e-9,
+                "MarIn {ca} != DP {cb} on {inst:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,365 @@
+//! Algorithm 1: dynamic-programming solution to the Multiple-Choice
+//! Minimum-Cost Maximal Knapsack Packing Problem, (MC)²MKP (paper §4).
+//!
+//! The problem (Definition 2): choose exactly one item from each disjoint
+//! class so the chosen weights fit a knapsack of capacity `T`, occupancy is
+//! **maximal**, and among maximal packings the cost sum is **minimal**.
+//!
+//! The recurrence (eqs. 3–5):
+//!
+//! ```text
+//! Z_r(τ) = min_{j ∈ N_r, w_rj <= τ} ( Z_{r-1}(τ - w_rj) + c_rj )
+//! X(T)   = Z_n(T) if finite, else X(T-1)
+//! ```
+//!
+//! The minimal-cost tables `K` and chosen-item tables `I` are kept in flat
+//! row-major storage (`(n+1) × (cap+1)`) — row `r` only reads row `r-1`, so
+//! the inner `t` loop is a sequential scan (see EXPERIMENTS.md §Perf for
+//! the layout ablation).
+//!
+//! The Minimal Cost FL Schedule problem maps onto (MC)²MKP by taking
+//! `N_i = {L_i, ..., U_i}`, `w_ij = j`, `c_ij = C_i(j)` (paper §4.1.1);
+//! [`solve`] implements that end-to-end (with the §5.2 lower-limit removal
+//! applied first so class weights start at zero).
+
+use crate::error::{FedError, Result};
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::limits;
+
+/// A knapsack item: `weight` units of capacity at `cost`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Item {
+    pub weight: usize,
+    pub cost: f64,
+}
+
+/// Disjoint item classes (`N_1, ..., N_n`).
+#[derive(Clone, Debug, Default)]
+pub struct Classes {
+    pub classes: Vec<Vec<Item>>,
+}
+
+impl Classes {
+    /// Total number of items `Σ |N_i|`.
+    pub fn item_count(&self) -> usize {
+        self.classes.iter().map(|c| c.len()).sum()
+    }
+}
+
+/// Sentinel for "no item chosen / infeasible" in the items table.
+const NO_ITEM: u32 = u32::MAX;
+
+/// The DP support matrices `K` (minimal costs) and `I` (chosen items),
+/// reusable by MarDec (paper Algorithm 5 calls "(MC)²MKP-matrices").
+#[derive(Clone, Debug)]
+pub struct DpMatrices {
+    /// Number of classes.
+    pub n: usize,
+    /// Knapsack capacity.
+    pub cap: usize,
+    /// Flat `(n+1) × (cap+1)` minimal-cost table; row 0 is the base case
+    /// `Z_0(0) = 0`, `Z_0(τ>0) = ∞`.
+    k: Vec<f64>,
+    /// Flat `(n+1) × (cap+1)` chosen-item table (index of the item within
+    /// its class), `NO_ITEM` where infeasible.
+    item: Vec<u32>,
+}
+
+impl DpMatrices {
+    /// `Z_r(τ)` — minimal cost filling exactly `τ` with the first `r`
+    /// classes (∞ if infeasible).
+    #[inline]
+    pub fn z(&self, r: usize, tau: usize) -> f64 {
+        self.k[r * (self.cap + 1) + tau]
+    }
+
+    /// Index (within class `r-1`) of the item chosen at `Z_r(τ)`.
+    #[inline]
+    fn chosen(&self, r: usize, tau: usize) -> u32 {
+        self.item[r * (self.cap + 1) + tau]
+    }
+
+    /// Largest `τ* <= cap_limit` with `Z_n(τ*)` finite, plus its cost —
+    /// the maximal-packing selection of eq. (5).
+    pub fn best_capacity(&self, cap_limit: usize) -> Option<(usize, f64)> {
+        let mut t = cap_limit.min(self.cap);
+        loop {
+            let v = self.z(self.n, t);
+            if v.is_finite() {
+                return Some((t, v));
+            }
+            if t == 0 {
+                return None;
+            }
+            t -= 1;
+        }
+    }
+
+    /// Backtrack the chosen item index per class for the solution that
+    /// fills exactly `tau` (must be finite). Returns item indices aligned
+    /// with `classes.classes`.
+    pub fn backtrack(&self, classes: &Classes, mut tau: usize) -> Result<Vec<usize>> {
+        if !self.z(self.n, tau).is_finite() {
+            return Err(FedError::Infeasible(format!("Z_n({tau}) = ∞")));
+        }
+        let mut chosen = vec![0usize; self.n];
+        for r in (1..=self.n).rev() {
+            let j = self.chosen(r, tau);
+            if j == NO_ITEM {
+                return Err(FedError::Infeasible(format!(
+                    "no item recorded at class {r}, τ={tau}"
+                )));
+            }
+            let item = classes.classes[r - 1][j as usize];
+            chosen[r - 1] = j as usize;
+            tau -= item.weight;
+        }
+        debug_assert_eq!(tau, 0, "backtrack must consume the full capacity");
+        Ok(chosen)
+    }
+}
+
+/// Compute the DP matrices for `classes` over capacity `cap`
+/// (lines 1–19 of Algorithm 1, generalized to a row-0 base case).
+///
+/// `O(cap · Σ|N_i|)` time, `O(cap · n)` space.
+///
+/// Loop order (§Perf, EXPERIMENTS.md): τ-outer / item-inner on flat
+/// row-major storage. Each cell `(r, τ)` is written exactly once (the
+/// paper's item-outer order re-writes cells per improving item, tripling
+/// memory traffic), the item scan reads `prev[τ-w]` as a contiguous
+/// backward slice for the dense weight classes the scheduling reduction
+/// produces, and the min-tracking stays in registers.
+pub fn dp(classes: &Classes, cap: usize) -> DpMatrices {
+    let n = classes.classes.len();
+    let width = cap + 1;
+    let mut k = vec![f64::INFINITY; (n + 1) * width];
+    let mut item = vec![NO_ITEM; (n + 1) * width];
+    k[0] = 0.0; // Z_0(0) = 0
+
+    for (r, class) in classes.classes.iter().enumerate() {
+        let (prev_rows, cur_rows) = k.split_at_mut((r + 1) * width);
+        let prev = &prev_rows[r * width..(r + 1) * width];
+        let cur = &mut cur_rows[..width];
+        let cur_items = &mut item[(r + 1) * width..(r + 2) * width];
+        for t in 0..=cap {
+            let mut best = f64::INFINITY;
+            let mut best_j = NO_ITEM;
+            for (ji, it) in class.iter().enumerate() {
+                if it.weight <= t {
+                    let cand = prev[t - it.weight] + it.cost;
+                    if cand < best {
+                        best = cand;
+                        best_j = ji as u32;
+                    }
+                }
+            }
+            cur[t] = best;
+            cur_items[t] = best_j;
+        }
+    }
+    DpMatrices { n, cap, k, item }
+}
+
+/// Solution of the knapsack problem itself.
+#[derive(Clone, Debug)]
+pub struct KnapsackSolution {
+    /// Total cost of chosen items.
+    pub cost: f64,
+    /// Capacity actually used (`T*`).
+    pub used_capacity: usize,
+    /// Chosen item index per class.
+    pub chosen: Vec<usize>,
+}
+
+/// Solve (MC)²MKP directly on item classes (Algorithm 1 end-to-end).
+pub fn solve_classes(classes: &Classes, cap: usize) -> Result<KnapsackSolution> {
+    let m = dp(classes, cap);
+    let (t_star, cost) = m
+        .best_capacity(cap)
+        .ok_or_else(|| FedError::Infeasible("no feasible packing".into()))?;
+    let chosen = m.backtrack(classes, t_star)?;
+    Ok(KnapsackSolution { cost, used_capacity: t_star, chosen })
+}
+
+/// Build the knapsack classes for a (lower-limit-free) scheduling instance:
+/// `N_i = {0, 1, ..., min(U_i, T)}`, `w_ij = j`, `c_ij = C_i(j)`
+/// (paper §4.1.1).
+pub fn classes_from_instance(inst: &Instance) -> Classes {
+    debug_assert!(inst.lower.iter().all(|&l| l == 0));
+    let classes = (0..inst.n())
+        .map(|i| {
+            (0..=inst.cap(i))
+                .map(|j| Item { weight: j, cost: inst.costs[i].eval(j) })
+                .collect()
+        })
+        .collect();
+    Classes { classes }
+}
+
+/// Solve the Minimal Cost FL Schedule problem optimally via (MC)²MKP
+/// (paper Theorem 1). Works for **arbitrary** cost functions.
+///
+/// Worst-case `O(T² n)` time, `O(T n)` space.
+pub fn solve(inst: &Instance) -> Result<Schedule> {
+    inst.validate()?;
+    let tr = limits::remove_lower_limits(inst);
+    let ti = &tr.instance;
+    // Specialized DP: weights of class i are exactly 0..=cap(i), so the
+    // chosen item index *is* the assignment — no Item materialization in
+    // the backtrack.
+    let classes = classes_from_instance(ti);
+    let sol = solve_classes(&classes, ti.tasks)?;
+    // Valid scheduling instances always admit a full packing (§4.1.1).
+    if sol.used_capacity != ti.tasks {
+        return Err(FedError::Infeasible(format!(
+            "maximal packing {} < T' = {} on a valid instance",
+            sol.used_capacity, ti.tasks
+        )));
+    }
+    let x: Vec<usize> = sol
+        .chosen
+        .iter()
+        .enumerate()
+        .map(|(i, &ji)| classes.classes[i][ji].weight)
+        .collect();
+    Ok(tr.restore(&Schedule::new(x)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::validate;
+
+    #[test]
+    fn paper_fig1() {
+        let inst = Instance::paper_example(5);
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[2, 3, 0]);
+        assert!((validate::checked_cost(&inst, &s).unwrap() - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_fig2() {
+        let inst = Instance::paper_example(8);
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[1, 2, 5]);
+        assert!((validate::checked_cost(&inst, &s).unwrap() - 11.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig2_shows_greedy_nonoptimality() {
+        // The T=8 optimum {1,2,5} does NOT contain the T=5 optimum {2,3,0}:
+        // the paper's insight that incremental greedy fails in general.
+        let s5 = solve(&Instance::paper_example(5)).unwrap();
+        let s8 = solve(&Instance::paper_example(8)).unwrap();
+        assert!(s8.get(0) < s5.get(0));
+    }
+
+    #[test]
+    fn knapsack_prefers_maximal_packing_over_cheap_partial() {
+        // One class: items weight 0 (cost 0) or weight 3 (cost 10).
+        // Capacity 4: maximal packing uses weight 3 despite cost.
+        let classes = Classes {
+            classes: vec![vec![
+                Item { weight: 0, cost: 0.0 },
+                Item { weight: 3, cost: 10.0 },
+            ]],
+        };
+        let sol = solve_classes(&classes, 4).unwrap();
+        assert_eq!(sol.used_capacity, 3);
+        assert_eq!(sol.cost, 10.0);
+    }
+
+    #[test]
+    fn knapsack_min_cost_among_maximal() {
+        // Two classes; several ways to reach capacity 4; must pick cheapest.
+        let classes = Classes {
+            classes: vec![
+                vec![Item { weight: 1, cost: 1.0 }, Item { weight: 3, cost: 9.0 }],
+                vec![Item { weight: 1, cost: 4.0 }, Item { weight: 3, cost: 5.0 }],
+            ],
+        };
+        // combos: (1,1)→w2 c5; (1,3)→w4 c6; (3,1)→w4 c13; (3,3)→w6 >cap
+        let sol = solve_classes(&classes, 4).unwrap();
+        assert_eq!(sol.used_capacity, 4);
+        assert!((sol.cost - 6.0).abs() < 1e-12);
+        assert_eq!(sol.chosen, vec![0, 1]);
+    }
+
+    #[test]
+    fn infeasible_when_min_weights_exceed_cap() {
+        let classes = Classes {
+            classes: vec![vec![Item { weight: 5, cost: 1.0 }]],
+        };
+        assert!(solve_classes(&classes, 4).is_err());
+    }
+
+    #[test]
+    fn single_resource_takes_all() {
+        let inst = Instance::new(
+            7,
+            vec![0],
+            vec![10],
+            vec![crate::sched::costs::CostFn::Affine { fixed: 1.0, per_task: 2.0 }],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[7]);
+    }
+
+    #[test]
+    fn respects_tight_limits() {
+        use crate::sched::costs::CostFn;
+        // Two resources, both forced to exactly half.
+        let inst = Instance::new(
+            10,
+            vec![5, 5],
+            vec![5, 5],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 100.0 },
+            ],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[5, 5]);
+    }
+
+    #[test]
+    fn zero_weight_items_allowed() {
+        // All resources may take zero; T=0 edge.
+        use crate::sched::costs::CostFn;
+        let inst = Instance::new(
+            0,
+            vec![0, 0],
+            vec![3, 3],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+            ],
+        )
+        .unwrap();
+        let s = solve(&inst).unwrap();
+        assert_eq!(s.assignments(), &[0, 0]);
+    }
+
+    #[test]
+    fn dp_z_values_match_manual() {
+        // Classes {w0 c0, w1 c2} and {w0 c0, w1 c3}:
+        let classes = Classes {
+            classes: vec![
+                vec![Item { weight: 0, cost: 0.0 }, Item { weight: 1, cost: 2.0 }],
+                vec![Item { weight: 0, cost: 0.0 }, Item { weight: 1, cost: 3.0 }],
+            ],
+        };
+        let m = dp(&classes, 2);
+        assert_eq!(m.z(0, 0), 0.0);
+        assert!(m.z(0, 1).is_infinite());
+        assert_eq!(m.z(1, 0), 0.0);
+        assert_eq!(m.z(1, 1), 2.0);
+        assert_eq!(m.z(2, 0), 0.0);
+        assert_eq!(m.z(2, 1), 2.0); // cheaper: take class-1's w1
+        assert_eq!(m.z(2, 2), 5.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! The paper's contribution: the **Minimal Cost FL Schedule** problem and
+//! its optimal solvers.
+//!
+//! * [`instance`] — problem model `(R, T, U, L, C)` (paper §3, Def. 1).
+//! * [`costs`] — cost-function library + marginal costs (paper §5.1, Def. 3).
+//! * [`limits`] — lower-limit removal transformation (paper §5.2, eqs. 8–11).
+//! * [`mc2mkp`] — Algorithm 1: the (MC)²MKP dynamic program (paper §4).
+//! * [`marin`] — Algorithm 2: increasing marginal costs (paper §5.3).
+//! * [`marco`] — Algorithm 3: constant marginal costs (paper §5.4).
+//! * [`mardecun`] — Algorithm 4: decreasing marginal costs, no upper limits
+//!   (paper §5.5).
+//! * [`mardec`] — Algorithms 5–7: decreasing marginal costs with upper
+//!   limits (paper §5.6).
+//! * [`auto`] — Table 2 dispatch: classify the instance, run the cheapest
+//!   optimal algorithm.
+//! * [`baselines`] — non-optimal comparison policies (uniform, random,
+//!   proportional, greedy) and OLAR (makespan-optimal, [26]).
+//! * [`bruteforce`] — exhaustive oracle used by the test-suite.
+//! * [`validate`] — feasibility checks and total-cost evaluation.
+
+pub mod auto;
+pub mod baselines;
+pub mod bruteforce;
+pub mod costs;
+pub mod instance;
+pub mod limits;
+pub mod marco;
+pub mod mardec;
+pub mod pareto;
+pub mod mardecun;
+pub mod marin;
+pub mod mc2mkp;
+pub mod validate;
+
+pub use instance::{Instance, Schedule};

@@ -1,0 +1,227 @@
+//! Bi-objective energy/time trade-off: the Pareto front between total
+//! energy (`ΣC`, this paper's objective) and round makespan (`max t_i`,
+//! OLAR's [26] objective).
+//!
+//! The paper positions itself against Khaleghzadeh et al. [28], who compute
+//! the full time/energy Pareto front in `O(n³T³ log(nT))`. Here we exploit
+//! the problem's structure with an **ε-constraint scalarization**: for a
+//! candidate makespan cap `τ`, the constraint `time_i(x_i) <= τ` is exactly
+//! an upper limit `U_i(τ)` per resource (times are monotone in the number
+//! of tasks), so each front point is one Minimal Cost FL Schedule solve —
+//! `O(P · T² n)` for `P` distinct candidate makespans, far below the
+//! general-case bound.
+//!
+//! Candidate makespans are the distinct per-resource times `time_i(j)`,
+//! `j ∈ [L_i, U_i]` — the makespan of *any* schedule is one of these, so
+//! the enumeration is exact, and dominated points are filtered at the end.
+
+use crate::error::Result;
+use crate::sched::costs::CostFn;
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::{mc2mkp, validate};
+
+/// A bi-objective instance: energy costs (the [`Instance`]) plus a
+/// monotone time function per resource.
+#[derive(Clone, Debug)]
+pub struct BiInstance {
+    /// The energy-minimization instance.
+    pub energy: Instance,
+    /// `time[i].eval(j)` = seconds resource `i` needs for `j` tasks
+    /// (monotone non-decreasing in `j`).
+    pub time: Vec<CostFn>,
+}
+
+/// One point on the Pareto front.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub schedule: Schedule,
+    pub energy: f64,
+    pub makespan: f64,
+}
+
+impl BiInstance {
+    /// Makespan of a schedule under this instance's time functions.
+    pub fn makespan(&self, sched: &Schedule) -> f64 {
+        sched
+            .assignments()
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| self.time[i].eval(x))
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Largest assignment of resource `i` whose time fits within `tau`
+    /// (monotone → binary search), clamped to `[L_i, U_i]`. Returns `None`
+    /// if even `L_i` tasks exceed `tau`.
+    fn cap_for(&self, i: usize, tau: f64) -> Option<usize> {
+        let lo = self.energy.lower[i];
+        let hi = self.energy.cap(i);
+        if self.time[i].eval(lo) > tau {
+            return None;
+        }
+        let (mut lo_ok, mut hi_bad) = (lo, hi + 1);
+        while hi_bad - lo_ok > 1 {
+            let mid = lo_ok + (hi_bad - lo_ok) / 2;
+            if self.time[i].eval(mid) <= tau {
+                lo_ok = mid;
+            } else {
+                hi_bad = mid;
+            }
+        }
+        Some(lo_ok)
+    }
+
+    /// Energy-minimal schedule subject to `makespan <= tau`, if feasible.
+    pub fn solve_constrained(&self, tau: f64) -> Result<Option<ParetoPoint>> {
+        let n = self.energy.n();
+        let mut upper = Vec::with_capacity(n);
+        for i in 0..n {
+            match self.cap_for(i, tau) {
+                Some(u) => upper.push(u),
+                None => return Ok(None), // lower limit alone busts the cap
+            }
+        }
+        let capped = Instance {
+            tasks: self.energy.tasks,
+            lower: self.energy.lower.clone(),
+            upper,
+            costs: self.energy.costs.clone(),
+        };
+        if capped.validate().is_err() {
+            return Ok(None); // not enough capacity under this makespan
+        }
+        let sched = mc2mkp::solve(&capped)?;
+        let energy = validate::total_cost(&self.energy, &sched);
+        let makespan = self.makespan(&sched);
+        Ok(Some(ParetoPoint { schedule: sched, energy, makespan }))
+    }
+
+    /// Compute the energy/makespan Pareto front.
+    pub fn pareto_front(&self) -> Result<Vec<ParetoPoint>> {
+        // Candidate makespans: all distinct reachable per-resource times.
+        let mut candidates: Vec<f64> = Vec::new();
+        for i in 0..self.energy.n() {
+            for j in self.energy.lower[i]..=self.energy.cap(i) {
+                candidates.push(self.time[i].eval(j));
+            }
+        }
+        candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        candidates.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+
+        let mut points: Vec<ParetoPoint> = Vec::new();
+        let mut best_energy = f64::INFINITY;
+        // Scan caps from tightest to loosest; energy is non-increasing in τ,
+        // so a point enters the front iff it strictly improves energy.
+        for &tau in candidates.iter() {
+            if let Some(p) = self.solve_constrained(tau)? {
+                if p.energy < best_energy - 1e-12 {
+                    best_energy = p.energy;
+                    points.push(p);
+                }
+            }
+        }
+        // Filter any residual dominated points (defensive; candidates with
+        // equal makespan can slip in out of order).
+        let mut front: Vec<ParetoPoint> = Vec::new();
+        for p in points {
+            front.retain(|q| !(p.makespan <= q.makespan && p.energy <= q.energy));
+            if !front
+                .iter()
+                .any(|q| q.makespan <= p.makespan && q.energy <= p.energy)
+            {
+                front.push(p);
+            }
+        }
+        front.sort_by(|a, b| a.makespan.partial_cmp(&b.makespan).unwrap());
+        Ok(front)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::baselines;
+    use crate::util::rng::Rng;
+
+    /// Fleet where fast devices are energy-hungry (a real trade-off).
+    fn tradeoff_instance(n: usize, t: usize, seed: u64) -> BiInstance {
+        let mut rng = Rng::new(seed);
+        let mut costs = Vec::new();
+        let mut time = Vec::new();
+        for _ in 0..n {
+            let speed = rng.range_f64(0.1, 2.0); // s per task
+            // faster → more power-hungry (superlinear coupling)
+            let energy_per_task = 2.0 / speed * rng.range_f64(0.8, 1.2);
+            costs.push(CostFn::Affine { fixed: 0.0, per_task: energy_per_task });
+            time.push(CostFn::Affine { fixed: 0.0, per_task: speed });
+        }
+        let energy = Instance::new(t, vec![0; n], vec![t; n], costs).unwrap();
+        BiInstance { energy, time }
+    }
+
+    #[test]
+    fn front_is_nondominated_and_sorted() {
+        let bi = tradeoff_instance(4, 30, 1);
+        let front = bi.pareto_front().unwrap();
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[0].makespan < w[1].makespan);
+            assert!(w[0].energy > w[1].energy, "energy must strictly improve");
+        }
+        for p in &front {
+            validate::check(&bi.energy, &p.schedule).unwrap();
+        }
+    }
+
+    #[test]
+    fn loosest_point_matches_unconstrained_energy_optimum() {
+        let bi = tradeoff_instance(4, 30, 2);
+        let front = bi.pareto_front().unwrap();
+        let unconstrained = mc2mkp::solve(&bi.energy).unwrap();
+        let e_opt = validate::total_cost(&bi.energy, &unconstrained);
+        let last = front.last().unwrap();
+        assert!((last.energy - e_opt).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tightest_point_at_most_olar_makespan() {
+        // OLAR greedily minimizes max cost; with time as the cost it gives
+        // a (near-)minimal makespan. The front's tightest point must be at
+        // least as good.
+        let bi = tradeoff_instance(4, 30, 3);
+        let time_inst = Instance {
+            tasks: bi.energy.tasks,
+            lower: bi.energy.lower.clone(),
+            upper: bi.energy.upper.clone(),
+            costs: bi.time.clone(),
+        };
+        let olar = baselines::olar(&time_inst).unwrap();
+        let olar_ms = bi.makespan(&olar);
+        let front = bi.pareto_front().unwrap();
+        assert!(front[0].makespan <= olar_ms + 1e-9);
+    }
+
+    #[test]
+    fn constrained_solve_respects_cap() {
+        let bi = tradeoff_instance(5, 40, 4);
+        let front = bi.pareto_front().unwrap();
+        let mid = &front[front.len() / 2];
+        let p = bi.solve_constrained(mid.makespan).unwrap().unwrap();
+        assert!(p.makespan <= mid.makespan + 1e-9);
+        assert!((p.energy - mid.energy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_cap_returns_none() {
+        let bi = tradeoff_instance(3, 30, 5);
+        assert!(bi.solve_constrained(1e-6).unwrap().is_none());
+    }
+
+    #[test]
+    fn single_resource_front_is_single_point() {
+        let bi = tradeoff_instance(1, 10, 6);
+        let front = bi.pareto_front().unwrap();
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].schedule.assignments(), &[10]);
+    }
+}

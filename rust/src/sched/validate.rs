@@ -1,0 +1,100 @@
+//! Schedule feasibility checks and total-cost evaluation.
+
+use crate::error::{FedError, Result};
+use crate::sched::instance::{Instance, Schedule};
+
+/// Total cost `ΣC = Σ_i C_i(x_i)` of a schedule (paper eq. 1a).
+pub fn total_cost(inst: &Instance, sched: &Schedule) -> f64 {
+    debug_assert_eq!(inst.n(), sched.len());
+    sched
+        .assignments()
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| inst.costs[i].eval(x))
+        .sum()
+}
+
+/// Maximum per-resource cost (the makespan objective of OLAR [26]; used to
+/// contrast total-cost vs max-cost optimization in the benches).
+pub fn max_cost(inst: &Instance, sched: &Schedule) -> f64 {
+    sched
+        .assignments()
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| inst.costs[i].eval(x))
+        .fold(0.0f64, f64::max)
+}
+
+/// Check feasibility: `Σ x_i = T` (eq. 1b) and `L_i <= x_i <= U_i` (eq. 1c).
+pub fn check(inst: &Instance, sched: &Schedule) -> Result<()> {
+    if sched.len() != inst.n() {
+        return Err(FedError::InvalidSchedule(format!(
+            "schedule has {} entries for {} resources",
+            sched.len(),
+            inst.n()
+        )));
+    }
+    for (i, &x) in sched.assignments().iter().enumerate() {
+        if x < inst.lower[i] || x > inst.upper[i] {
+            return Err(FedError::InvalidSchedule(format!(
+                "resource {i}: x={x} outside [{}, {}]",
+                inst.lower[i], inst.upper[i]
+            )));
+        }
+    }
+    let total = sched.total();
+    if total != inst.tasks {
+        return Err(FedError::InvalidSchedule(format!(
+            "assigned {total} != T = {}",
+            inst.tasks
+        )));
+    }
+    Ok(())
+}
+
+/// `check` + return the total cost: the standard post-solve assertion.
+pub fn checked_cost(inst: &Instance, sched: &Schedule) -> Result<f64> {
+    check(inst, sched)?;
+    Ok(total_cost(inst, sched))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig1_cost() {
+        let inst = Instance::paper_example(5);
+        let s = Schedule::new(vec![2, 3, 0]);
+        check(&inst, &s).unwrap();
+        assert!((total_cost(&inst, &s) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_fig2_cost() {
+        let inst = Instance::paper_example(8);
+        let s = Schedule::new(vec![1, 2, 5]);
+        check(&inst, &s).unwrap();
+        assert!((total_cost(&inst, &s) - 11.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_limit_violations() {
+        let inst = Instance::paper_example(5);
+        // resource 1 below L_1 = 1
+        assert!(check(&inst, &Schedule::new(vec![0, 5, 0])).is_err());
+        // resource 3 above U_3 = 5
+        assert!(check(&inst, &Schedule::new(vec![1, 0, 6])).is_err());
+        // wrong total
+        assert!(check(&inst, &Schedule::new(vec![1, 1, 1])).is_err());
+        // wrong arity
+        assert!(check(&inst, &Schedule::new(vec![5])).is_err());
+    }
+
+    #[test]
+    fn max_cost_differs_from_total() {
+        let inst = Instance::paper_example(5);
+        let s = Schedule::new(vec![2, 3, 0]);
+        assert!((max_cost(&inst, &s) - 4.0).abs() < 1e-12); // C2(3)=4 dominates
+    }
+}

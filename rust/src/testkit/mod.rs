@@ -1,0 +1,169 @@
+//! Property-based testing kit (the offline build has no `proptest`).
+//!
+//! Supplies seeded random *generators* and a `forall` runner that executes a
+//! property over many generated cases, reporting the seed and a shrunk
+//! counterexample on failure. Shrinking is size-directed: generators expose
+//! a `shrink` hook producing structurally smaller candidates, and the runner
+//! greedily descends while the property keeps failing.
+//!
+//! The scheduler test-suite uses this to check, over thousands of random
+//! instances, that every specialized algorithm matches the (MC)²MKP DP and
+//! the brute-force oracle.
+
+use crate::util::rng::Rng;
+
+/// A generator of values of type `T` plus a shrinking strategy.
+pub trait Gen<T> {
+    /// Generate one value.
+    fn generate(&self, rng: &mut Rng) -> T;
+    /// Produce smaller candidate values (default: none).
+    fn shrink(&self, _value: &T) -> Vec<T> {
+        Vec::new()
+    }
+}
+
+/// Generator from plain closures (no shrinking).
+pub struct FnGen<F>(pub F);
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for FnGen<F> {
+    fn generate(&self, rng: &mut Rng) -> T {
+        (self.0)(rng)
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+    /// Maximum shrink steps.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 200, seed: 0xFED0, max_shrink: 200 }
+    }
+}
+
+/// Outcome of a single property check.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cfg.cases` generated values; panic with diagnostics on
+/// the first (shrunk) failure.
+pub fn forall<T: Clone + std::fmt::Debug>(
+    cfg: &Config,
+    gen: &dyn Gen<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Shrink: repeatedly take any failing shrink candidate.
+            let mut cur = value;
+            let mut cur_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink {
+                for cand in gen.shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        steps += 1;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed:#x}, {steps} shrink steps):\n\
+                 value: {cur:?}\nerror: {cur_msg}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two f64 values are within `tol`.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct VecGen {
+        max_len: usize,
+    }
+
+    impl Gen<Vec<u32>> for VecGen {
+        fn generate(&self, rng: &mut Rng) -> Vec<u32> {
+            let n = rng.index(self.max_len + 1);
+            (0..n).map(|_| rng.below(100) as u32).collect()
+        }
+        fn shrink(&self, v: &Vec<u32>) -> Vec<Vec<u32>> {
+            let mut out = Vec::new();
+            if !v.is_empty() {
+                out.push(v[..v.len() / 2].to_vec());
+                out.push(v[1..].to_vec());
+                let mut smaller = v.clone();
+                for x in smaller.iter_mut() {
+                    *x /= 2;
+                }
+                out.push(smaller);
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn passing_property() {
+        let cfg = Config { cases: 100, ..Default::default() };
+        forall(&cfg, &VecGen { max_len: 20 }, |v| {
+            let s: u32 = v.iter().sum();
+            ensure(s as usize <= v.len() * 99, "sum bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        let cfg = Config { cases: 100, ..Default::default() };
+        forall(&cfg, &VecGen { max_len: 20 }, |v| {
+            ensure(v.len() < 5, "too long")
+        });
+    }
+
+    #[test]
+    fn shrinks_toward_small() {
+        let cfg = Config { cases: 50, ..Default::default() };
+        let result = std::panic::catch_unwind(|| {
+            forall(&cfg, &VecGen { max_len: 30 }, |v| ensure(v.len() < 10, "len"))
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>().unwrap());
+        // The shrunk counterexample should be exactly at the boundary (len 10).
+        assert!(msg.contains("value:"));
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-9, "x").is_err());
+    }
+}

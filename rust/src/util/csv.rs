@@ -1,0 +1,126 @@
+//! Tiny CSV writer for experiment logs.
+//!
+//! RFC-4180-style quoting; every experiment (energy study, FL training,
+//! complexity sweeps) appends rows through this writer so results can be
+//! post-processed with standard tooling.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// In-memory CSV document with a fixed header.
+#[derive(Clone, Debug)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    /// New document with the given column names.
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Append a row (must match header width).
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(
+            fields.len(),
+            self.header.len(),
+            "CSV row width {} != header width {}",
+            fields.len(),
+            self.header.len()
+        );
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Append a row of display-able values.
+    pub fn rowd(&mut self, fields: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&v);
+    }
+
+    /// Serialize the document.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&encode_row(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&encode_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+fn encode_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+fn encode_row(fields: &[String]) -> String {
+    fields
+        .iter()
+        .map(|f| encode_field(f))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_rows() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.rowd(&[&1, &2.5]);
+        w.rowd(&[&"x,y", &"q\"z"]);
+        let s = w.to_string();
+        assert_eq!(s, "a,b\n1,2.5\n\"x,y\",\"q\"\"z\"\n");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn save_and_read_back() {
+        let mut w = CsvWriter::new(&["col"]);
+        w.rowd(&[&42]);
+        let p = std::env::temp_dir().join("fedzero_csv_test/out.csv");
+        w.save(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "col\n42\n");
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,193 @@
+//! A binary min-heap over `(f64 key, payload)` pairs.
+//!
+//! MarIn (Algorithm 2 of the paper) maintains the next marginal cost of
+//! every resource in a priority queue; the paper suggests a binomial heap
+//! for its Θ(1) insert, but a binary heap achieves the same
+//! Θ(n + T log n) total bound for MarIn's insert/pop pattern and has far
+//! better constants. `std::collections::BinaryHeap` requires `Ord` keys;
+//! our keys are `f64` marginal costs, so we implement the heap directly
+//! with a total order on (key, tiebreak) pairs.
+
+/// Min-heap entry: `key` is the priority (smaller pops first), `tiebreak`
+/// makes ordering total and deterministic, `value` is the payload.
+#[derive(Clone, Copy, Debug)]
+pub struct Entry<T> {
+    pub key: f64,
+    pub tiebreak: u64,
+    pub value: T,
+}
+
+impl<T> Entry<T> {
+    #[inline]
+    fn less(&self, other: &Self) -> bool {
+        match self.key.partial_cmp(&other.key) {
+            Some(std::cmp::Ordering::Less) => true,
+            Some(std::cmp::Ordering::Greater) => false,
+            _ => self.tiebreak < other.tiebreak,
+        }
+    }
+}
+
+/// Binary min-heap. Keys must not be NaN (marginal costs never are;
+/// asserted in debug builds).
+#[derive(Clone, Debug, Default)]
+pub struct MinHeap<T> {
+    items: Vec<Entry<T>>,
+}
+
+impl<T> MinHeap<T> {
+    /// Empty heap.
+    pub fn new() -> Self {
+        Self { items: Vec::new() }
+    }
+
+    /// Empty heap with reserved capacity.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { items: Vec::with_capacity(cap) }
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Push an entry.
+    pub fn push(&mut self, key: f64, tiebreak: u64, value: T) {
+        debug_assert!(!key.is_nan(), "NaN key");
+        self.items.push(Entry { key, tiebreak, value });
+        self.sift_up(self.items.len() - 1);
+    }
+
+    /// Smallest entry, if any.
+    pub fn peek(&self) -> Option<&Entry<T>> {
+        self.items.first()
+    }
+
+    /// Pop the smallest entry.
+    pub fn pop(&mut self) -> Option<Entry<T>> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let last = self.items.len() - 1;
+        self.items.swap(0, last);
+        let top = self.items.pop();
+        if !self.items.is_empty() {
+            self.sift_down(0);
+        }
+        top
+    }
+
+    /// Build a heap from a vector in O(n) (Floyd's heapify).
+    pub fn heapify(entries: Vec<Entry<T>>) -> Self {
+        let mut h = Self { items: entries };
+        if h.items.len() > 1 {
+            for i in (0..h.items.len() / 2).rev() {
+                h.sift_down(i);
+            }
+        }
+        h
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.items[i].less(&self.items[parent]) {
+                self.items.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.items.len();
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut smallest = i;
+            if l < n && self.items[l].less(&self.items[smallest]) {
+                smallest = l;
+            }
+            if r < n && self.items[r].less(&self.items[smallest]) {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.items.swap(i, smallest);
+            i = smallest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pops_in_key_order() {
+        let mut h = MinHeap::new();
+        for (i, k) in [5.0, 1.0, 3.0, 2.0, 4.0].iter().enumerate() {
+            h.push(*k, i as u64, i);
+        }
+        let keys: Vec<f64> = std::iter::from_fn(|| h.pop().map(|e| e.key)).collect();
+        assert_eq!(keys, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn ties_break_deterministically() {
+        let mut h = MinHeap::new();
+        h.push(1.0, 2, "b");
+        h.push(1.0, 1, "a");
+        h.push(1.0, 3, "c");
+        assert_eq!(h.pop().unwrap().value, "a");
+        assert_eq!(h.pop().unwrap().value, "b");
+        assert_eq!(h.pop().unwrap().value, "c");
+    }
+
+    #[test]
+    fn heapify_matches_push() {
+        let mut r = Rng::new(1);
+        let entries: Vec<Entry<usize>> = (0..200)
+            .map(|i| Entry { key: r.f64(), tiebreak: i as u64, value: i })
+            .collect();
+        let mut a = MinHeap::heapify(entries.clone());
+        let mut b = MinHeap::new();
+        for e in entries {
+            b.push(e.key, e.tiebreak, e.value);
+        }
+        while let (Some(x), Some(y)) = (a.pop(), b.pop()) {
+            assert_eq!(x.value, y.value);
+        }
+        assert!(a.is_empty() && b.is_empty());
+    }
+
+    #[test]
+    fn random_order_sorted_output() {
+        let mut r = Rng::new(2);
+        let mut h = MinHeap::new();
+        for i in 0..1000u64 {
+            h.push(r.f64(), i, i);
+        }
+        let mut prev = f64::NEG_INFINITY;
+        while let Some(e) = h.pop() {
+            assert!(e.key >= prev);
+            prev = e.key;
+        }
+    }
+
+    #[test]
+    fn empty_behaviour() {
+        let mut h: MinHeap<u8> = MinHeap::new();
+        assert!(h.is_empty());
+        assert!(h.pop().is_none());
+        assert!(h.peek().is_none());
+    }
+}

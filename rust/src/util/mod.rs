@@ -1,0 +1,9 @@
+//! Substrate utilities implemented in-repo (the build environment has no
+//! network access, so `rand`, `serde`, `csv`, ... are unavailable).
+
+pub mod csv;
+pub mod heap;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,140 @@
+//! ASCII table rendering for bench reports and example output.
+//!
+//! All benchmark binaries print their reproduction of the paper's tables
+//! and figures through this renderer so `bench_output.txt` is readable.
+
+/// A simple column-aligned ASCII table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column names.
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of display-able cells.
+    pub fn row(&mut self, cells: &[&dyn std::fmt::Display]) {
+        assert_eq!(cells.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    /// Append a row of pre-formatted strings.
+    pub fn rows_str(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push(' ');
+                s.push_str(&format!("{:<width$}", cells[i], width = widths[i]));
+                s.push_str(" |");
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Format an energy value in joules with an adaptive unit.
+pub fn fmt_energy(joules: f64) -> String {
+    if joules.abs() >= 3.6e6 {
+        format!("{:.3} kWh", joules / 3.6e6)
+    } else if joules.abs() >= 1e3 {
+        format!("{:.2} kJ", joules / 1e3)
+    } else {
+        format!("{:.2} J", joules)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["name", "v"]);
+        t.row(&[&"a", &1]);
+        t.row(&[&"longer", &23]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("| name   | v  |"));
+        assert!(s.contains("| longer | 23 |"));
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(2.5e-9), "2.5 ns");
+        assert_eq!(fmt_duration(2.5e-6), "2.50 µs");
+        assert_eq!(fmt_duration(2.5e-3), "2.50 ms");
+        assert_eq!(fmt_duration(2.5), "2.500 s");
+    }
+
+    #[test]
+    fn energy_units() {
+        assert_eq!(fmt_energy(5.0), "5.00 J");
+        assert_eq!(fmt_energy(5400.0), "5.40 kJ");
+        assert_eq!(fmt_energy(7.2e6), "2.000 kWh");
+    }
+}

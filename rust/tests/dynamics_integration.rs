@@ -1,0 +1,107 @@
+//! Integration tests for dynamic fleet behaviour (availability churn,
+//! cost drift, dropout) end-to-end through the FL server.
+//! Require artifacts (skipped otherwise).
+
+use std::path::Path;
+
+use fedzero::config::TrainConfig;
+use fedzero::energy::power::Behavior;
+use fedzero::energy::profiles::BehaviorMix;
+use fedzero::fl::dynamics::{Availability, CostDrift, Dropout, DynamicsConfig};
+use fedzero::fl::Server;
+
+fn artifacts_present() -> bool {
+    let ok = Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("dynamics_integration: artifacts missing, skipping");
+    }
+    ok
+}
+
+fn cfg(rounds: usize) -> TrainConfig {
+    TrainConfig {
+        rounds,
+        devices: 10,
+        tasks_per_round: 40,
+        model: "mlp".into(),
+        seed: 31,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn dropout_wastes_energy_but_training_survives() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut server =
+        Server::new(cfg(8), BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
+    server.set_dynamics(DynamicsConfig {
+        availability: None,
+        drift: None,
+        dropout: Some(Dropout { p_fail: 0.4 }),
+    });
+    server.run().unwrap();
+    assert!(server.metrics.counter("dropouts") > 0, "no dropouts sampled");
+    // Training still completes and the loss is finite.
+    assert!(server.log.final_loss().unwrap().is_finite());
+}
+
+#[test]
+fn churn_produces_empty_and_partial_rounds() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut server =
+        Server::new(cfg(20), BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
+    server.set_dynamics(DynamicsConfig {
+        availability: Some(Availability::new(10, 0.05, 0.6)), // mostly offline
+        drift: None,
+        dropout: None,
+    });
+    server.run().unwrap();
+    let rows = server.log.rows();
+    assert_eq!(rows.len(), 20);
+    // With heavy churn some rounds should have few participants.
+    let min_participants = rows.iter().map(|r| r.participants).min().unwrap();
+    assert!(min_participants <= 3, "churn had no visible effect");
+}
+
+#[test]
+fn drift_changes_round_energy_over_time() {
+    if !artifacts_present() {
+        return;
+    }
+    let run_total = |drift: Option<CostDrift>| -> Vec<f64> {
+        let mut server =
+            Server::new(cfg(12), BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
+        server.set_dynamics(DynamicsConfig {
+            availability: None,
+            drift,
+            dropout: None,
+        });
+        server.run().unwrap();
+        server.log.rows().iter().map(|r| r.energy_j).collect()
+    };
+    let stable = run_total(None);
+    let drifted = run_total(Some(CostDrift::new(10, 0.3)));
+    // Without drift the round energy is constant (same fleet, same T);
+    // with drift it varies.
+    let var = |v: &[f64]| {
+        let m = v.iter().sum::<f64>() / v.len() as f64;
+        v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64
+    };
+    assert!(var(&stable) < 1e-6, "stable energy should not vary: {stable:?}");
+    assert!(var(&drifted) > 1e-6, "drift had no effect: {drifted:?}");
+}
+
+#[test]
+fn mobile_preset_runs() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut server = Server::new(cfg(6), BehaviorMix::Mixed).unwrap();
+    server.set_dynamics(DynamicsConfig::mobile(10));
+    server.run().unwrap();
+    assert_eq!(server.log.rows().len(), 6);
+}

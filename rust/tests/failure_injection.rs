@@ -1,0 +1,170 @@
+//! Failure injection: malformed instances, corrupted artifacts, degenerate
+//! fleets, and configuration errors must fail loudly and cleanly (typed
+//! errors, no panics).
+
+use std::path::Path;
+
+use fedzero::config::TrainConfig;
+use fedzero::energy::battery::Battery;
+use fedzero::energy::power::{Behavior, PowerModel};
+use fedzero::error::FedError;
+use fedzero::runtime::Manifest;
+use fedzero::sched::costs::CostFn;
+use fedzero::sched::instance::Instance;
+use fedzero::sched::{marco, mardec, mardecun, marin, mc2mkp};
+
+fn affine() -> CostFn {
+    CostFn::Affine { fixed: 0.0, per_task: 1.0 }
+}
+
+#[test]
+fn solvers_reject_invalid_instances() {
+    // ΣU < T — no feasible schedule.
+    let bad = Instance {
+        tasks: 10,
+        lower: vec![0, 0],
+        upper: vec![3, 3],
+        costs: vec![affine(), affine()],
+    };
+    assert!(matches!(mc2mkp::solve(&bad), Err(FedError::InvalidInstance(_))));
+    assert!(matches!(marin::solve(&bad), Err(FedError::InvalidInstance(_))));
+    assert!(matches!(marco::solve(&bad), Err(FedError::InvalidInstance(_))));
+    assert!(matches!(mardecun::solve(&bad), Err(FedError::InvalidInstance(_))));
+    assert!(matches!(mardec::solve(&bad), Err(FedError::InvalidInstance(_))));
+}
+
+#[test]
+fn solvers_reject_lower_above_upper() {
+    let bad = Instance {
+        tasks: 5,
+        lower: vec![4, 0],
+        upper: vec![2, 8],
+        costs: vec![affine(), affine()],
+    };
+    for result in [mc2mkp::solve(&bad), marin::solve(&bad), marco::solve(&bad)] {
+        assert!(matches!(result, Err(FedError::InvalidInstance(_))));
+    }
+}
+
+#[test]
+fn mardecun_refuses_limited_instances() {
+    let inst = Instance::new(
+        10,
+        vec![0, 0],
+        vec![4, 10],
+        vec![
+            CostFn::PowerLaw { fixed: 0.0, scale: 1.0, exponent: 0.5 },
+            CostFn::PowerLaw { fixed: 0.0, scale: 2.0, exponent: 0.5 },
+        ],
+    )
+    .unwrap();
+    assert!(matches!(
+        mardecun::solve(&inst),
+        Err(FedError::ScenarioMismatch(_))
+    ));
+}
+
+#[test]
+fn dead_battery_device_contributes_zero_capacity() {
+    let power = PowerModel {
+        idle_w: 0.1,
+        busy_w: 2.0,
+        batch_latency_s: 0.5,
+        behavior: Behavior::Linear,
+        curvature: 0.0,
+    };
+    let dead = Battery { capacity_wh: 10.0, level: 0.0, round_budget_frac: 0.1 };
+    assert_eq!(dead.max_batches(&power), 0);
+}
+
+#[test]
+fn config_rejections() {
+    for toml in [
+        "devices = 0",
+        "tasks_per_round = 0",
+        "participation = 1.5",
+        "participation = 0.0",
+        "dirichlet_alpha = 0.0",
+        "max_share = 0.0",
+        "max_share = 1.5",
+        "workers = 0",
+        "policy = \"nope\"",
+    ] {
+        assert!(
+            TrainConfig::from_toml(toml).is_err(),
+            "config '{toml}' should be rejected"
+        );
+    }
+}
+
+#[test]
+fn corrupted_manifest_variants() {
+    let dir = std::env::temp_dir().join("fedzero_failinj");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Not JSON at all.
+    std::fs::write(dir.join("manifest.json"), "garbage{{").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+
+    // Wrong version.
+    std::fs::write(dir.join("manifest.json"), r#"{"version": 9, "models": {}}"#).unwrap();
+    assert!(matches!(Manifest::load(&dir), Err(FedError::Artifact(_))));
+
+    // Missing models key.
+    std::fs::write(dir.join("manifest.json"), r#"{"version": 1}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+
+    // Model with inconsistent shapes.
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "models": {"m": {
+            "family": "mlp", "classes": 2,
+            "train_hlo": "a", "eval_hlo": "b", "params_file": "c",
+            "param_shapes": [[2,2]], "param_count": 5, "n_param_tensors": 1,
+            "batch": 1, "lr": 0.1,
+            "input_shape": [1,2], "input_dtype": "f32",
+            "label_shape": [1], "label_dtype": "s32"}}}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err}").contains("param_shapes sum"));
+
+    // Truncated params file.
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "models": {"m": {
+            "family": "mlp", "classes": 2,
+            "train_hlo": "a", "eval_hlo": "b", "params_file": "m_params.bin",
+            "param_shapes": [[2,2]], "param_count": 4, "n_param_tensors": 1,
+            "batch": 1, "lr": 0.1,
+            "input_shape": [1,2], "input_dtype": "f32",
+            "label_shape": [1], "label_dtype": "s32"}}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("m_params.bin"), [0u8; 7]).unwrap(); // needs 16
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.model("m").unwrap();
+    assert!(manifest.load_params(spec).is_err());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_artifacts_dir_guides_user() {
+    let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn tabulated_cost_domain_violation_panics_not_corrupts() {
+    let c = CostFn::from_table(&[(0, 0.0), (1, 1.0)]);
+    let result = std::panic::catch_unwind(|| c.eval(5));
+    assert!(result.is_err());
+}
+
+#[test]
+fn zero_capacity_instance_rejected_at_build() {
+    assert!(Instance::new(1, vec![0], vec![0], vec![affine()]).is_err());
+}

@@ -1,0 +1,184 @@
+//! End-to-end FL integration tests over the real PJRT runtime.
+//!
+//! These require `artifacts/` (run `make artifacts`); they are skipped with
+//! a notice when artifacts are absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use std::path::Path;
+
+use fedzero::config::{Policy, TrainConfig};
+use fedzero::energy::power::Behavior;
+use fedzero::energy::profiles::BehaviorMix;
+use fedzero::fl::data::Dataset;
+use fedzero::fl::Server;
+use fedzero::runtime::{Dtype, ModelRuntime};
+use fedzero::util::rng::Rng;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("fl_integration: artifacts/ missing, skipping (run `make artifacts`)");
+        None
+    }
+}
+
+fn mlp_cfg() -> TrainConfig {
+    TrainConfig {
+        rounds: 6,
+        devices: 8,
+        tasks_per_round: 48,
+        model: "mlp".into(),
+        seed: 11,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn runtime_loads_and_steps() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(dir, "mlp").unwrap();
+    let spec = rt.spec().clone();
+    assert_eq!(spec.input_dtype, Dtype::F32);
+
+    let mut rng = Rng::new(3);
+    let ds = Dataset::synth(&spec, 128, &mut rng);
+    let shard = ds.full_shard();
+    let b = ds.batch(&spec, &shard, &mut rng).unwrap();
+    let x = rt.input_literal_f32(&b.x_f32).unwrap();
+    let y = rt.label_literal(&b.y).unwrap();
+
+    let p0 = rt.initial_params();
+    let loss0 = rt.eval_step(&p0, &x, &y).unwrap();
+    assert!(loss0.is_finite() && loss0 > 0.0);
+
+    // A train step on the same batch must lower the loss on that batch.
+    let (p1, train_loss) = rt.train_step(&p0, &x, &y).unwrap();
+    assert!((train_loss - loss0).abs() < 1e-4, "{train_loss} vs {loss0}");
+    let loss1 = rt.eval_step(&p1, &x, &y).unwrap();
+    assert!(loss1 < loss0, "one SGD step should reduce batch loss: {loss1} !< {loss0}");
+    // Params actually changed.
+    assert_ne!(p0, p1);
+}
+
+#[test]
+fn train_step_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(dir, "mlp").unwrap();
+    let mut rng = Rng::new(5);
+    let ds = Dataset::synth(rt.spec(), 64, &mut rng);
+    let b = ds.batch(rt.spec(), &ds.full_shard(), &mut rng).unwrap();
+    let x = rt.input_literal_f32(&b.x_f32).unwrap();
+    let y = rt.label_literal(&b.y).unwrap();
+    let p = rt.initial_params();
+    let (a, la) = rt.train_step(&p, &x, &y).unwrap();
+    let (b2, lb) = rt.train_step(&p, &x, &y).unwrap();
+    assert_eq!(la, lb);
+    assert_eq!(a, b2);
+}
+
+#[test]
+fn server_converges_on_mlp() {
+    let Some(_) = artifacts() else { return };
+    let mut cfg = mlp_cfg();
+    cfg.rounds = 10;
+    let mut server = Server::new(cfg, BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
+    server.run().unwrap();
+    let rows = server.log.rows();
+    assert_eq!(rows.len(), 10);
+    let first = rows[0].loss;
+    let last = rows.last().unwrap().loss;
+    assert!(
+        last < first * 0.5,
+        "training did not converge: {first} → {last}"
+    );
+    assert!(server.ledger.total() > 0.0);
+}
+
+#[test]
+fn same_seed_same_trajectory() {
+    let Some(_) = artifacts() else { return };
+    let run = || {
+        let mut server =
+            Server::new(mlp_cfg(), BehaviorMix::Homogeneous(Behavior::Convex)).unwrap();
+        server.run().unwrap();
+        server
+            .log
+            .rows()
+            .iter()
+            .map(|r| (r.loss, r.energy_j))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn optimal_policy_uses_less_energy_than_uniform() {
+    let Some(_) = artifacts() else { return };
+    let mix = BehaviorMix::Homogeneous(Behavior::Convex);
+    let (_, e_opt) = Server::train_once(mlp_cfg(), Policy::Auto, mix).unwrap();
+    let (_, e_uni) = Server::train_once(mlp_cfg(), Policy::Uniform, mix).unwrap();
+    assert!(
+        e_opt < e_uni,
+        "optimal {e_opt} J should beat uniform {e_uni} J under convex costs"
+    );
+}
+
+#[test]
+fn energy_ledger_matches_round_logs() {
+    let Some(_) = artifacts() else { return };
+    let mut server =
+        Server::new(mlp_cfg(), BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
+    server.run().unwrap();
+    let from_rounds: f64 = server.log.rows().iter().map(|r| r.energy_j).sum();
+    assert!((from_rounds - server.ledger.total()).abs() < 1e-6);
+}
+
+#[test]
+fn max_share_caps_concentration() {
+    let Some(_) = artifacts() else { return };
+    let mut cfg = mlp_cfg();
+    cfg.rounds = 3;
+    cfg.max_share = 0.2;
+    // Linear costs: unconstrained optimum would put everything on one
+    // device; max_share must prevent that.
+    let mut server = Server::new(cfg, BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
+    server.run().unwrap();
+    assert!(
+        server.ledger.max_device_share() < 0.9,
+        "share {}",
+        server.ledger.max_device_share()
+    );
+}
+
+#[test]
+fn transformer_round_runs() {
+    let Some(dir) = artifacts() else { return };
+    if let Err(e) = ModelRuntime::load(dir, "transformer") {
+        eprintln!("transformer artifact missing ({e}), skipping");
+        return;
+    }
+    let cfg = TrainConfig {
+        rounds: 2,
+        devices: 4,
+        tasks_per_round: 8,
+        model: "transformer".into(),
+        seed: 2,
+        ..TrainConfig::default()
+    };
+    let mut server = Server::new(cfg, BehaviorMix::Mixed).unwrap();
+    server.run().unwrap();
+    let rows = server.log.rows();
+    assert_eq!(rows.len(), 2);
+    assert!(rows.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn missing_model_is_clean_error() {
+    let Some(dir) = artifacts() else { return };
+    let Err(err) = ModelRuntime::load(dir, "nonexistent") else {
+        panic!("loading a nonexistent model must fail");
+    };
+    assert!(format!("{err}").contains("not in manifest"));
+}

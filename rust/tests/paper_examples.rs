@@ -1,0 +1,107 @@
+//! Integration tests pinned to the paper's own numbers (§3.1, Figs. 1–2)
+//! and to cross-algorithm agreement on the worked example.
+
+use fedzero::config::Policy;
+use fedzero::sched::instance::{Instance, Schedule};
+use fedzero::sched::{auto, baselines, bruteforce, mc2mkp, validate};
+use fedzero::util::rng::Rng;
+
+#[test]
+fn fig1_optimal_schedule() {
+    let inst = Instance::paper_example(5);
+    let s = mc2mkp::solve(&inst).unwrap();
+    assert_eq!(s.assignments(), &[2, 3, 0]);
+    assert!((validate::checked_cost(&inst, &s).unwrap() - 7.5).abs() < 1e-12);
+}
+
+#[test]
+fn fig2_optimal_schedule() {
+    let inst = Instance::paper_example(8);
+    let s = mc2mkp::solve(&inst).unwrap();
+    assert_eq!(s.assignments(), &[1, 2, 5]);
+    assert!((validate::checked_cost(&inst, &s).unwrap() - 11.5).abs() < 1e-12);
+}
+
+#[test]
+fn fig1_lower_limit_matters() {
+    // Without L_1 = 1 the optimum would put everything on resource 3
+    // (C3(5) = 7 vs 7.5) — the paper's §3.1 commentary. Resource 1's
+    // tabulated cost must be extended to j = 0 for the relaxed domain.
+    let mut inst = Instance::paper_example(5);
+    inst.lower[0] = 0;
+    inst.costs[0] = fedzero::sched::costs::CostFn::from_table(&[
+        (0, 0.0), (1, 2.0), (2, 3.5), (3, 5.5), (4, 8.0), (5, 10.0), (6, 12.0),
+    ]);
+    let s = mc2mkp::solve(&inst).unwrap();
+    assert_eq!(s.assignments(), &[0, 0, 5]);
+    assert!((validate::total_cost(&inst, &s) - 7.0).abs() < 1e-12);
+}
+
+#[test]
+fn fig2_hits_both_limits() {
+    // X* = {1, 2, 5} reaches L_1 = 1 and U_3 = 5 (paper's observation).
+    let inst = Instance::paper_example(8);
+    let s = mc2mkp::solve(&inst).unwrap();
+    assert_eq!(s.get(0), inst.lower[0]);
+    assert_eq!(s.get(2), inst.upper[2]);
+}
+
+#[test]
+fn brute_force_confirms_both_figures() {
+    for (t, cost) in [(5usize, 7.5), (8, 11.5)] {
+        let inst = Instance::paper_example(t);
+        let s = bruteforce::solve(&inst).unwrap();
+        assert!((validate::checked_cost(&inst, &s).unwrap() - cost).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn every_t_from_1_to_17_solvable_and_oracle_optimal() {
+    // ΣL = 1, ΣU = 17 on the example — all feasible T values.
+    for t in 1..=17 {
+        let inst = Instance::paper_example(t);
+        let dp = mc2mkp::solve(&inst).unwrap();
+        let bf = bruteforce::solve(&inst).unwrap();
+        let cd = validate::checked_cost(&inst, &dp).unwrap();
+        let cb = validate::checked_cost(&inst, &bf).unwrap();
+        assert!((cd - cb).abs() < 1e-9, "T={t}: dp {cd} != brute {cb}");
+    }
+}
+
+#[test]
+fn all_baselines_feasible_on_example() {
+    let inst = Instance::paper_example(8);
+    let mut rng = Rng::new(1);
+    for policy in [
+        Policy::Uniform,
+        Policy::Random,
+        Policy::Proportional,
+        Policy::Greedy,
+        Policy::Olar,
+    ] {
+        let s = auto::solve_with(&inst, policy, &mut rng).unwrap();
+        validate::check(&inst, &s)
+            .unwrap_or_else(|e| panic!("{policy} infeasible: {e}"));
+        let c = validate::total_cost(&inst, &s);
+        assert!(c >= 11.5 - 1e-9, "{policy} beat the optimum: {c}");
+    }
+}
+
+#[test]
+fn olar_on_example_minimizes_max_cost() {
+    let inst = Instance::paper_example(8);
+    let olar = baselines::olar(&inst).unwrap();
+    let opt_total = mc2mkp::solve(&inst).unwrap();
+    // OLAR's max per-resource cost is no worse than the total-optimal
+    // schedule's max cost (it optimizes the other objective).
+    assert!(
+        validate::max_cost(&inst, &olar) <= validate::max_cost(&inst, &opt_total) + 1e-9
+    );
+}
+
+#[test]
+fn schedule_display_roundtrip() {
+    let s = Schedule::new(vec![1, 2, 5]);
+    assert_eq!(s.to_string(), "{1, 2, 5}");
+    assert_eq!(s.total(), 8);
+}

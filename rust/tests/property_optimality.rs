@@ -1,0 +1,355 @@
+//! Property-based certification of the paper's optimality theorems
+//! (Theorems 1–5) against executable oracles:
+//!
+//! * every specialized algorithm matches the (MC)²MKP DP on its scenario;
+//! * the DP matches brute-force enumeration on small instances;
+//! * every produced schedule is feasible (eq. 1b–1c invariants);
+//! * the §5.2 lower-limit transformation preserves optima.
+
+use fedzero::config::Policy;
+use fedzero::sched::costs::CostFn;
+use fedzero::sched::instance::Instance;
+use fedzero::sched::{auto, bruteforce, limits, marco, mardec, mardecun, marin, mc2mkp, validate};
+use fedzero::testkit::{close, ensure, forall, Config, Gen};
+use fedzero::util::rng::Rng;
+
+/// Which cost family a generated instance draws from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Family {
+    Convex,
+    Affine,
+    Concave,
+    Tabulated,
+}
+
+/// Random-instance generator with shrinking toward fewer resources /
+/// smaller workloads.
+#[derive(Clone, Debug)]
+struct InstGen {
+    family: Family,
+    max_n: usize,
+    max_t: usize,
+    unlimited: bool,
+    with_lower: bool,
+}
+
+/// The generated case: the instance plus its provenance (for debug output).
+#[derive(Clone, Debug)]
+struct Case {
+    seed: u64,
+    n: usize,
+    t: usize,
+    family: Family,
+    unlimited: bool,
+    with_lower: bool,
+}
+
+impl Case {
+    fn build(&self) -> Instance {
+        let mut rng = Rng::new(self.seed);
+        let n = self.n;
+        let t = self.t;
+        let costs: Vec<CostFn> = (0..n)
+            .map(|_| match self.family {
+                Family::Convex => CostFn::Quadratic {
+                    fixed: rng.range_f64(0.0, 2.0),
+                    a: rng.range_f64(0.01, 1.0),
+                    b: rng.range_f64(0.0, 3.0),
+                },
+                Family::Affine => CostFn::Affine {
+                    fixed: rng.range_f64(0.0, 2.0),
+                    per_task: rng.range_f64(0.1, 4.0),
+                },
+                Family::Concave => {
+                    if rng.bool(0.5) {
+                        CostFn::PowerLaw {
+                            fixed: rng.range_f64(0.0, 1.0),
+                            scale: rng.range_f64(0.3, 4.0),
+                            exponent: rng.range_f64(0.2, 0.95),
+                        }
+                    } else {
+                        CostFn::Logarithmic {
+                            fixed: rng.range_f64(0.0, 1.0),
+                            scale: rng.range_f64(0.3, 4.0),
+                        }
+                    }
+                }
+                Family::Tabulated => {
+                    let mut values = vec![0.0];
+                    let mut acc = 0.0;
+                    for _ in 1..=t {
+                        acc += rng.range_f64(0.0, 3.0);
+                        // non-monotone wiggle allowed
+                        values.push((acc + rng.normal() * 0.5).max(0.0));
+                    }
+                    CostFn::Tabulated { first: 0, values }
+                }
+            })
+            .collect();
+
+        let upper: Vec<usize> = if self.unlimited {
+            vec![t; n]
+        } else {
+            let mut rng2 = Rng::new(self.seed ^ 0xFF);
+            (0..n)
+                .map(|_| 1 + rng2.index(t.max(1)))
+                .collect()
+        };
+        let lower: Vec<usize> = if self.with_lower {
+            let mut rng3 = Rng::new(self.seed ^ 0xAA);
+            upper.iter().map(|&u| rng3.index((u / 2).max(1))).collect()
+        } else {
+            vec![0; n]
+        };
+        // Repair feasibility: shrink lower limits until ΣL <= T, then grow
+        // upper limits until Σ min(U, T) >= T.
+        let mut lower = lower;
+        let mut i = 0;
+        while lower.iter().sum::<usize>() > t {
+            if lower[i % n] > 0 {
+                lower[i % n] -= 1;
+            }
+            i += 1;
+        }
+        let mut upper = upper;
+        while upper.iter().map(|&u| u.min(t)).sum::<usize>() < t {
+            for u in upper.iter_mut() {
+                *u += 1;
+            }
+        }
+        Instance::new(t, lower, upper, costs).expect("generated valid")
+    }
+}
+
+impl Gen<Case> for InstGen {
+    fn generate(&self, rng: &mut Rng) -> Case {
+        Case {
+            seed: rng.next_u64(),
+            n: 1 + rng.index(self.max_n),
+            t: 2 + rng.index(self.max_t - 1),
+            family: self.family,
+            unlimited: self.unlimited,
+            with_lower: self.with_lower,
+        }
+    }
+
+    fn shrink(&self, c: &Case) -> Vec<Case> {
+        let mut out = Vec::new();
+        if c.n > 1 {
+            out.push(Case { n: c.n - 1, ..c.clone() });
+        }
+        if c.t > 2 {
+            out.push(Case { t: c.t / 2, ..c.clone() });
+            out.push(Case { t: c.t - 1, ..c.clone() });
+        }
+        if c.with_lower {
+            out.push(Case { with_lower: false, ..c.clone() });
+        }
+        out
+    }
+}
+
+fn check_matches_dp(case: &Case, solver: fn(&Instance) -> fedzero::Result<Instance2Sched>) -> Result<(), String> {
+    let inst = case.build();
+    let s = solver(&inst).map_err(|e| format!("solver failed: {e}"))?;
+    validate::check(&inst, &s).map_err(|e| format!("infeasible: {e}"))?;
+    let c = validate::total_cost(&inst, &s);
+    let dp = mc2mkp::solve(&inst).map_err(|e| format!("dp failed: {e}"))?;
+    let cd = validate::total_cost(&inst, &dp);
+    close(c, cd, 1e-6 * cd.abs().max(1.0), "cost vs DP")
+}
+
+type Instance2Sched = fedzero::sched::Schedule;
+
+#[test]
+fn dp_matches_bruteforce_on_small_arbitrary_instances() {
+    let gen = InstGen {
+        family: Family::Tabulated,
+        max_n: 4,
+        max_t: 14,
+        unlimited: false,
+        with_lower: true,
+    };
+    let cfg = Config { cases: 150, seed: 0x5EED_0001, ..Default::default() };
+    forall(&cfg, &gen, |case| {
+        let inst = case.build();
+        let dp = mc2mkp::solve(&inst).map_err(|e| e.to_string())?;
+        let bf = bruteforce::solve(&inst).map_err(|e| e.to_string())?;
+        validate::check(&inst, &dp).map_err(|e| e.to_string())?;
+        close(
+            validate::total_cost(&inst, &dp),
+            validate::total_cost(&inst, &bf),
+            1e-9,
+            "dp vs brute force",
+        )
+    });
+}
+
+#[test]
+fn marin_optimal_on_convex() {
+    let gen = InstGen {
+        family: Family::Convex,
+        max_n: 6,
+        max_t: 60,
+        unlimited: false,
+        with_lower: true,
+    };
+    let cfg = Config { cases: 120, seed: 0x5EED_0002, ..Default::default() };
+    forall(&cfg, &gen, |case| check_matches_dp(case, marin::solve));
+}
+
+#[test]
+fn marco_optimal_on_affine() {
+    let gen = InstGen {
+        family: Family::Affine,
+        max_n: 6,
+        max_t: 60,
+        unlimited: false,
+        with_lower: true,
+    };
+    let cfg = Config { cases: 120, seed: 0x5EED_0003, ..Default::default() };
+    forall(&cfg, &gen, |case| check_matches_dp(case, marco::solve));
+}
+
+#[test]
+fn mardecun_optimal_on_concave_unlimited() {
+    let gen = InstGen {
+        family: Family::Concave,
+        max_n: 6,
+        max_t: 50,
+        unlimited: true,
+        with_lower: true,
+    };
+    let cfg = Config { cases: 120, seed: 0x5EED_0004, ..Default::default() };
+    forall(&cfg, &gen, |case| check_matches_dp(case, mardecun::solve));
+}
+
+#[test]
+fn mardec_optimal_on_concave_limited() {
+    let gen = InstGen {
+        family: Family::Concave,
+        max_n: 5,
+        max_t: 40,
+        unlimited: false,
+        with_lower: true,
+    };
+    let cfg = Config { cases: 120, seed: 0x5EED_0005, ..Default::default() };
+    forall(&cfg, &gen, |case| check_matches_dp(case, mardec::solve));
+}
+
+#[test]
+fn auto_always_feasible_and_optimal() {
+    // auto must classify correctly and return an optimum for every family.
+    for (family, seed) in [
+        (Family::Convex, 0x5EED_0006u64),
+        (Family::Affine, 0x5EED_0007),
+        (Family::Concave, 0x5EED_0008),
+        (Family::Tabulated, 0x5EED_0009),
+    ] {
+        let gen = InstGen {
+            family,
+            max_n: 5,
+            max_t: 30,
+            unlimited: false,
+            with_lower: true,
+        };
+        let cfg = Config { cases: 60, seed, ..Default::default() };
+        forall(&cfg, &gen, |case| check_matches_dp(case, auto::solve_auto));
+    }
+}
+
+#[test]
+fn baselines_always_feasible_never_below_optimal() {
+    let gen = InstGen {
+        family: Family::Tabulated,
+        max_n: 5,
+        max_t: 25,
+        unlimited: false,
+        with_lower: true,
+    };
+    let cfg = Config { cases: 80, seed: 0x5EED_000A, ..Default::default() };
+    forall(&cfg, &gen, |case| {
+        let inst = case.build();
+        let opt = validate::total_cost(
+            &inst,
+            &mc2mkp::solve(&inst).map_err(|e| e.to_string())?,
+        );
+        let mut rng = Rng::new(case.seed);
+        for policy in [
+            Policy::Uniform,
+            Policy::Random,
+            Policy::Proportional,
+            Policy::Greedy,
+            Policy::Olar,
+        ] {
+            let s = auto::solve_with(&inst, policy, &mut rng)
+                .map_err(|e| format!("{policy}: {e}"))?;
+            validate::check(&inst, &s).map_err(|e| format!("{policy}: {e}"))?;
+            let c = validate::total_cost(&inst, &s);
+            ensure(
+                c >= opt - 1e-6 * opt.abs().max(1.0),
+                format!("{policy} beat the optimum: {c} < {opt}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lower_limit_transform_preserves_optimum() {
+    let gen = InstGen {
+        family: Family::Tabulated,
+        max_n: 4,
+        max_t: 16,
+        unlimited: false,
+        with_lower: true,
+    };
+    let cfg = Config { cases: 100, seed: 0x5EED_000B, ..Default::default() };
+    forall(&cfg, &gen, |case| {
+        let inst = case.build();
+        let tr = limits::remove_lower_limits(&inst);
+        tr.instance.validate().map_err(|e| e.to_string())?;
+        // Solve transformed, restore, compare to solving directly.
+        let st = mc2mkp::solve(&tr.instance).map_err(|e| e.to_string())?;
+        let restored = tr.restore(&st);
+        validate::check(&inst, &restored).map_err(|e| e.to_string())?;
+        let direct = mc2mkp::solve(&inst).map_err(|e| e.to_string())?;
+        close(
+            validate::total_cost(&inst, &restored),
+            validate::total_cost(&inst, &direct),
+            1e-6,
+            "restored vs direct optimum",
+        )
+    });
+}
+
+#[test]
+fn optimal_cost_monotone_in_t() {
+    // With monotone costs, the optimal ΣC is non-decreasing in T.
+    let gen = InstGen {
+        family: Family::Convex,
+        max_n: 4,
+        max_t: 20,
+        unlimited: false,
+        with_lower: false,
+    };
+    let cfg = Config { cases: 60, seed: 0x5EED_000C, ..Default::default() };
+    forall(&cfg, &gen, |case| {
+        if case.t < 3 {
+            return Ok(());
+        }
+        let inst_big = case.build();
+        let mut inst_small = inst_big.clone();
+        inst_small.tasks -= 1;
+        inst_small.validate().map_err(|e| e.to_string())?;
+        let cb = validate::total_cost(
+            &inst_big,
+            &mc2mkp::solve(&inst_big).map_err(|e| e.to_string())?,
+        );
+        let cs = validate::total_cost(
+            &inst_small,
+            &mc2mkp::solve(&inst_small).map_err(|e| e.to_string())?,
+        );
+        ensure(cb >= cs - 1e-9, format!("ΣC*({}) = {cb} < ΣC*({}) = {cs}", case.t, case.t - 1))
+    });
+}
