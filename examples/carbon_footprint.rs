@@ -9,12 +9,11 @@
 //!
 //! Run with: `cargo run --release --example carbon_footprint`
 
-use fedzero::config::Policy;
 use fedzero::energy::carbon;
 use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::{BehaviorMix, Fleet};
 use fedzero::sched::instance::Instance;
-use fedzero::sched::{auto, validate};
+use fedzero::sched::{validate, SolverRegistry};
 use fedzero::util::rng::Rng;
 use fedzero::util::table::{fmt_energy, Table};
 
@@ -49,9 +48,10 @@ fn main() -> fedzero::Result<()> {
     )?;
 
     let mut rng2 = Rng::new(0);
-    let sched_energy = auto::solve_with(&energy_inst, Policy::Auto, &mut rng2)?;
-    let sched_carbon = auto::solve_with(&carbon_inst, Policy::Auto, &mut rng2)?;
-    let sched_money = auto::solve_with(&money_inst, Policy::Auto, &mut rng2)?;
+    let registry = SolverRegistry::with_defaults(0);
+    let sched_energy = registry.solve_seeded("auto", &energy_inst, &mut rng2)?;
+    let sched_carbon = registry.solve_seeded("auto", &carbon_inst, &mut rng2)?;
+    let sched_money = registry.solve_seeded("auto", &money_inst, &mut rng2)?;
 
     let mut table = Table::new(
         &format!("workload by optimization target (T = {tasks})"),

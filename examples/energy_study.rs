@@ -4,23 +4,16 @@
 //!
 //! Run with: `cargo run --release --example energy_study`
 
-use fedzero::config::Policy;
 use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::{BehaviorMix, Fleet};
-use fedzero::sched::{auto, validate};
+use fedzero::sched::{validate, SolverRegistry};
 use fedzero::util::csv::CsvWriter;
 use fedzero::util::rng::Rng;
 use fedzero::util::stats;
 use fedzero::util::table::Table;
 
-const POLICIES: [Policy; 6] = [
-    Policy::Auto,
-    Policy::Uniform,
-    Policy::Random,
-    Policy::Proportional,
-    Policy::Greedy,
-    Policy::Olar,
-];
+const POLICIES: [&str; 6] =
+    ["auto", "uniform", "random", "proportional", "greedy", "olar"];
 
 fn main() -> fedzero::Result<()> {
     let regimes = [
@@ -31,6 +24,7 @@ fn main() -> fedzero::Result<()> {
     ];
     let fleet_sizes = [10usize, 50, 200];
     let trials = 10u64;
+    let registry = SolverRegistry::with_defaults(99);
 
     let mut csv = CsvWriter::new(&[
         "regime", "n", "policy", "mean_overhead_pct", "max_overhead_pct",
@@ -51,10 +45,10 @@ fn main() -> fedzero::Result<()> {
                 let inst = fleet.instance(tasks, 0)?;
                 let opt = validate::total_cost(
                     &inst,
-                    &auto::solve_with(&inst, Policy::Mc2mkp, &mut rng)?,
+                    &registry.solve_seeded("mc2mkp", &inst, &mut rng)?,
                 );
                 for (pi, &p) in POLICIES.iter().enumerate() {
-                    let sched = auto::solve_with(&inst, p, &mut rng)?;
+                    let sched = registry.solve_seeded(p, &inst, &mut rng)?;
                     validate::check(&inst, &sched)?;
                     let cost = validate::total_cost(&inst, &sched);
                     overheads[pi].push((cost / opt - 1.0) * 100.0);

@@ -62,7 +62,7 @@ fn main() -> fedzero::Result<()> {
         server.run()?;
         let wall_s = wall.elapsed().as_secs_f64();
 
-        for row in server.log.rows() {
+        for row in server.log().rows() {
             csv.rowd(&[
                 &row.policy,
                 &row.round,
@@ -72,7 +72,7 @@ fn main() -> fedzero::Result<()> {
                 &row.train_time_s,
             ]);
         }
-        let total = server.log.total_energy();
+        let total = server.log().total_energy();
         if policy == Policy::Auto {
             auto_energy = Some(total);
         }
@@ -81,7 +81,7 @@ fn main() -> fedzero::Result<()> {
             .unwrap_or_else(|| "—".into());
         summary.rows_str(vec![
             policy.to_string(),
-            format!("{:.4}", server.log.final_loss().unwrap_or(f64::NAN)),
+            format!("{:.4}", server.log().final_loss().unwrap_or(f64::NAN)),
             fmt_energy(total),
             vs,
             format!("{wall_s:.1}"),
@@ -90,7 +90,7 @@ fn main() -> fedzero::Result<()> {
         // Loss curve sketch every ~10% of rounds.
         println!("policy {policy}: loss curve");
         let step = (rounds / 10).max(1);
-        for row in server.log.rows().iter().step_by(step) {
+        for row in server.log().rows().iter().step_by(step) {
             println!(
                 "  round {:>4}  loss {:.4}  round energy {}",
                 row.round,
@@ -100,7 +100,7 @@ fn main() -> fedzero::Result<()> {
         }
         println!(
             "  max single-device energy share: {:.1}%\n",
-            server.ledger.max_device_share() * 100.0
+            server.ledger().max_device_share() * 100.0
         );
     }
 

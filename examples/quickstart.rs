@@ -3,11 +3,10 @@
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use fedzero::config::Policy;
 use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::{BehaviorMix, Fleet};
 use fedzero::sched::instance::Instance;
-use fedzero::sched::{auto, validate};
+use fedzero::sched::{auto, validate, SolverRegistry};
 use fedzero::util::rng::Rng;
 use fedzero::util::table::{fmt_energy, Table};
 
@@ -29,23 +28,19 @@ fn main() -> fedzero::Result<()> {
     let inst = fleet.instance(tasks, 1)?;
     println!("Synthetic fleet: n = {}, T = {tasks}, lower limit 1/device\n", fleet.len());
 
+    let registry = SolverRegistry::with_defaults(42);
     let policies = [
-        Policy::Auto,
-        Policy::Mc2mkp,
-        Policy::MarIn,
-        Policy::Uniform,
-        Policy::Random,
-        Policy::Proportional,
-        Policy::Greedy,
-        Policy::Olar,
+        "auto", "mc2mkp", "marin", "uniform", "random", "proportional",
+        "greedy", "olar",
     ];
     let mut table = Table::new(
         "scheduler comparison (convex energy, lower is better)",
         &["policy", "schedule", "total energy", "vs optimal"],
     );
-    let optimal = validate::total_cost(&inst, &auto::solve_with(&inst, Policy::Mc2mkp, &mut rng)?);
+    let optimal =
+        validate::total_cost(&inst, &registry.solve_seeded("mc2mkp", &inst, &mut rng)?);
     for p in policies {
-        let sched = auto::solve_with(&inst, p, &mut rng)?;
+        let sched = registry.solve_seeded(p, &inst, &mut rng)?;
         validate::check(&inst, &sched)?;
         let cost = validate::total_cost(&inst, &sched);
         table.rows_str(vec![

@@ -72,10 +72,8 @@ fn main() {
         };
         let mut server =
             Server::new(cfg_train, BehaviorMix::Homogeneous(Behavior::Convex)).unwrap();
-        let mut r = 0usize;
         report.bench(&format!("round policy={policy}"), &round_cfg, || {
-            r += 1;
-            server.round(r).unwrap()
+            server.round().unwrap()
         });
     }
     report.print();

@@ -11,20 +11,13 @@ mod common;
 
 use common::{generate, Scenario};
 use fedzero::benchkit::{bench, BenchConfig};
-use fedzero::config::Policy;
-use fedzero::sched::{auto, validate};
+use fedzero::sched::{validate, SolverRegistry};
 use fedzero::util::rng::Rng;
 use fedzero::util::stats;
 use fedzero::util::table::{fmt_duration, Table};
 
-const POLICIES: [Policy; 6] = [
-    Policy::Auto,
-    Policy::Uniform,
-    Policy::Random,
-    Policy::Proportional,
-    Policy::Greedy,
-    Policy::Olar,
-];
+const POLICIES: [&str; 6] =
+    ["auto", "uniform", "random", "proportional", "greedy", "olar"];
 
 fn main() {
     let scenarios = [
@@ -38,6 +31,7 @@ fn main() {
     let t = 500usize;
     let trials = 8u64;
     let cfg = BenchConfig { warmup: 1, iters: 5, min_time_s: 0.01 };
+    let registry = SolverRegistry::with_defaults(13);
 
     for (scenario, name) in scenarios {
         let mut table = Table::new(
@@ -52,16 +46,18 @@ fn main() {
                 let inst = generate(scenario, n, t, &mut rng);
                 let opt = validate::total_cost(
                     &inst,
-                    &auto::solve_with(&inst, Policy::Mc2mkp, &mut rng).unwrap(),
+                    &registry.solve_seeded("mc2mkp", &inst, &mut rng).unwrap(),
                 );
                 let mut solve_rng = Rng::new(trial);
-                let sched = auto::solve_with(&inst, policy, &mut solve_rng).unwrap();
+                let sched = registry
+                    .solve_seeded(policy, &inst, &mut solve_rng)
+                    .unwrap();
                 validate::check(&inst, &sched).unwrap();
                 let cost = validate::total_cost(&inst, &sched);
                 overheads.push((cost / opt - 1.0) * 100.0);
                 if trial == 0 {
                     let m = bench("solve", &cfg, || {
-                        auto::solve_with(&inst, policy, &mut solve_rng).unwrap()
+                        registry.solve_seeded(policy, &inst, &mut solve_rng).unwrap()
                     });
                     solve_times.push(m.median());
                 }

@@ -3,9 +3,8 @@
 //! charts, plus solve-time measurements for every algorithm on the example.
 
 use fedzero::benchkit::{BenchConfig, Report};
-use fedzero::config::Policy;
 use fedzero::sched::instance::Instance;
-use fedzero::sched::{auto, validate};
+use fedzero::sched::{validate, SolverRegistry};
 use fedzero::util::rng::Rng;
 
 fn gantt(inst: &Instance, sched: &fedzero::sched::Schedule) {
@@ -42,18 +41,14 @@ fn main() {
 
     // Solve-time microbenchmarks on the example instance.
     let cfg = BenchConfig::default();
+    let registry = SolverRegistry::with_defaults(0);
     let mut report = Report::new("solve time on the §3.1 example (n=3)");
-    for policy in [
-        Policy::Mc2mkp,
-        Policy::Uniform,
-        Policy::Proportional,
-        Policy::Olar,
-    ] {
+    for policy in ["mc2mkp", "uniform", "proportional", "olar"] {
         for t in [5usize, 8] {
             let inst = Instance::paper_example(t);
             let mut rng = Rng::new(0);
             report.bench(&format!("{policy} T={t}"), &cfg, || {
-                auto::solve_with(&inst, policy, &mut rng).unwrap()
+                registry.solve_seeded(policy, &inst, &mut rng).unwrap()
             });
         }
     }

@@ -21,14 +21,13 @@ mod common;
 
 use common::{generate, Scenario};
 use fedzero::benchkit::{bench, BenchConfig};
-use fedzero::config::Policy;
-use fedzero::sched::auto;
+use fedzero::sched::SolverRegistry;
 use fedzero::util::rng::Rng;
 use fedzero::util::stats;
 use fedzero::util::table::{fmt_duration, Table};
 
 struct Row {
-    algo: Policy,
+    algo: &'static str,
     scenario: Scenario,
     claimed: &'static str,
     t_sweep: Vec<usize>,
@@ -37,12 +36,19 @@ struct Row {
     fixed_t: usize,
 }
 
-fn time_solve(algo: Policy, scenario: Scenario, n: usize, t: usize, cfg: &BenchConfig) -> f64 {
+fn time_solve(
+    registry: &SolverRegistry,
+    algo: &str,
+    scenario: Scenario,
+    n: usize,
+    t: usize,
+    cfg: &BenchConfig,
+) -> f64 {
     let mut rng = Rng::new((n * 1_000_003 + t) as u64);
     let inst = generate(scenario, n, t, &mut rng);
     let mut solve_rng = Rng::new(7);
     let m = bench("solve", cfg, || {
-        auto::solve_with(&inst, algo, &mut solve_rng).unwrap()
+        registry.solve_seeded(algo, &inst, &mut solve_rng).unwrap()
     });
     m.median()
 }
@@ -50,7 +56,7 @@ fn time_solve(algo: Policy, scenario: Scenario, n: usize, t: usize, cfg: &BenchC
 fn main() {
     let rows = vec![
         Row {
-            algo: Policy::Mc2mkp,
+            algo: "mc2mkp",
             scenario: Scenario::Arbitrary,
             claimed: "O(T^2 n)",
             t_sweep: vec![128, 256, 512, 1024, 2048],
@@ -59,7 +65,7 @@ fn main() {
             fixed_t: 512,
         },
         Row {
-            algo: Policy::MarIn,
+            algo: "marin",
             scenario: Scenario::Increasing,
             claimed: "Th(n + T log n)",
             t_sweep: vec![1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18],
@@ -68,7 +74,7 @@ fn main() {
             fixed_t: 1 << 14,
         },
         Row {
-            algo: Policy::MarCo,
+            algo: "marco",
             scenario: Scenario::Constant,
             claimed: "Th(n log n)",
             t_sweep: vec![1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18],
@@ -77,7 +83,7 @@ fn main() {
             fixed_t: 1 << 14,
         },
         Row {
-            algo: Policy::MarDecUn,
+            algo: "mardecun",
             scenario: Scenario::DecreasingUnlimited,
             claimed: "Th(n)",
             t_sweep: vec![1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18],
@@ -86,7 +92,7 @@ fn main() {
             fixed_t: 1 << 14,
         },
         Row {
-            algo: Policy::MarDec,
+            algo: "mardec",
             scenario: Scenario::DecreasingLimited,
             claimed: "O(T n^2)",
             t_sweep: vec![256, 512, 1024, 2048, 4096],
@@ -97,6 +103,7 @@ fn main() {
     ];
 
     let cfg = BenchConfig { warmup: 1, iters: 7, min_time_s: 0.02 };
+    let registry = SolverRegistry::with_defaults(7);
     let mut table = Table::new(
         "TABLE 2 (empirical): runtime scaling per scenario",
         &["algorithm", "claimed", "slope vs T (r2)", "slope vs n (r2)",
@@ -108,7 +115,7 @@ fn main() {
         let mut ts = Vec::new();
         let mut times_t = Vec::new();
         for &t in &row.t_sweep {
-            let m = time_solve(row.algo, row.scenario, row.fixed_n, t, &cfg);
+            let m = time_solve(&registry, row.algo, row.scenario, row.fixed_n, t, &cfg);
             ts.push(t as f64);
             times_t.push(m);
         }
@@ -118,7 +125,7 @@ fn main() {
         let mut ns = Vec::new();
         let mut times_n = Vec::new();
         for &n in &row.n_sweep {
-            let m = time_solve(row.algo, row.scenario, n, row.fixed_t, &cfg);
+            let m = time_solve(&registry, row.algo, row.scenario, n, row.fixed_t, &cfg);
             ns.push(n as f64);
             times_n.push(m);
         }

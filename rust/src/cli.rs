@@ -201,7 +201,7 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "devices", help: "number of resources n", takes_value: true, default: Some("10") },
                     OptSpec { name: "seed", help: "fleet RNG seed", takes_value: true, default: Some("1") },
                     OptSpec { name: "regime", help: "cost regime: increasing|constant|decreasing|arbitrary", takes_value: true, default: Some("increasing") },
-                    OptSpec { name: "algo", help: "auto|mc2mkp|marin|marco|mardecun|mardec|uniform|random|proportional|greedy|olar", takes_value: true, default: Some("auto") },
+                    OptSpec { name: "algo", help: "solver name (see `fedzero solvers`; errors list the registry)", takes_value: true, default: Some("auto") },
                     OptSpec { name: "json", help: "print the schedule as JSON", takes_value: false, default: None },
                 ],
                 positional: vec![],
@@ -215,7 +215,7 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "devices", help: "fleet size", takes_value: true, default: Some("16") },
                     OptSpec { name: "tasks", help: "mini-batches per round (T)", takes_value: true, default: Some("64") },
                     OptSpec { name: "model", help: "model artifact name (mlp|transformer)", takes_value: true, default: Some("mlp") },
-                    OptSpec { name: "algo", help: "scheduler policy", takes_value: true, default: Some("auto") },
+                    OptSpec { name: "algo", help: "scheduler policy (any registered solver name)", takes_value: true, default: Some("auto") },
                     OptSpec { name: "seed", help: "RNG seed", takes_value: true, default: Some("7") },
                     OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
                     OptSpec { name: "out", help: "CSV output path", takes_value: true, default: None },
@@ -229,6 +229,12 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "devices", help: "fleet size", takes_value: true, default: Some("10") },
                     OptSpec { name: "seed", help: "RNG seed", takes_value: true, default: Some("1") },
                 ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "solvers",
+                about: "list registered solvers and their Table 2 optimality",
+                opts: vec![],
                 positional: vec![],
             },
         ],

@@ -1,0 +1,168 @@
+//! The training seam of the coordinator: the state machine plans rounds;
+//! a [`RoundBackend`] executes them. Two backends ship in-repo — the FL
+//! server's PJRT-backed backend (`fl::server`) and the pure-simulation
+//! [`SimBackend`] here (schedules and energy only, no ML) — and external
+//! runtimes plug in the same way.
+
+use crate::error::Result;
+use crate::sched::instance::{Instance, Schedule};
+
+/// One surviving task assignment of a round (dropout victims are removed
+/// before the plan reaches the backend; the coordinator accounts their
+/// partial energy itself).
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    /// Slot index into the round's `Instance`/`Schedule`.
+    pub slot: usize,
+    /// Coordinator device index (into its `ManagedDevice` list).
+    pub device: usize,
+    /// Stable device id (ledger key).
+    pub device_id: usize,
+    /// Tasks to train (`x_i > 0`).
+    pub tasks: usize,
+    /// Multiplier the backend must apply to its measured energy (the
+    /// coordinator's current drift for this device).
+    pub energy_scale: f64,
+}
+
+/// The coordinator's plan for one round's Training phase.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    /// Round index.
+    pub round: usize,
+    /// The solved scheduling instance (slot-indexed).
+    pub instance: Instance,
+    /// The schedule (slot-indexed, validated).
+    pub schedule: Schedule,
+    /// Surviving assignments with `tasks > 0`.
+    pub assignments: Vec<Assignment>,
+}
+
+/// What one device reports back from local training.
+#[derive(Clone, Debug)]
+pub struct DeviceOutcome {
+    /// Stable device id.
+    pub device_id: usize,
+    /// Coordinator device index.
+    pub device: usize,
+    /// Tasks trained.
+    pub tasks: usize,
+    /// Measured energy (joules, drift already applied).
+    pub energy_j: f64,
+    /// Simulated on-device wall time (seconds).
+    pub sim_time_s: f64,
+    /// Mean local training loss.
+    pub mean_loss: f64,
+}
+
+/// Executes the Training/Aggregating phases the coordinator plans.
+pub trait RoundBackend {
+    /// Train every assignment of the plan; return one outcome per
+    /// assignment. The backend holds resulting model updates internally
+    /// until [`RoundBackend::aggregate`].
+    fn train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>>;
+
+    /// Fold the updates from the last `train` call into the global model.
+    fn aggregate(&mut self) -> Result<()>;
+
+    /// Held-out loss of the current global model.
+    fn evaluate(&mut self) -> Result<f64>;
+}
+
+/// Pure-simulation backend: energy comes from the plan's own cost
+/// functions (the "profiler is accurate" setting), there is no model, and
+/// the evaluation loss is a deterministic decaying proxy. This is what
+/// lets the coordinator's multi-round loop — including the §3.1 worked
+/// example — run end-to-end without PJRT artifacts.
+#[derive(Debug, Default)]
+pub struct SimBackend {
+    rounds_aggregated: usize,
+    pending: usize,
+}
+
+impl SimBackend {
+    /// Fresh simulation backend.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rounds aggregated so far.
+    pub fn rounds_aggregated(&self) -> usize {
+        self.rounds_aggregated
+    }
+}
+
+impl RoundBackend for SimBackend {
+    fn train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+        let outcomes = plan
+            .assignments
+            .iter()
+            .map(|a| {
+                // The instance's slot cost already includes drift (the
+                // coordinator builds it from `current_cost`), so it IS the
+                // measured energy here; `energy_scale` must not be applied
+                // twice.
+                let energy_j = plan.instance.costs[a.slot].eval(a.tasks);
+                DeviceOutcome {
+                    device_id: a.device_id,
+                    device: a.device,
+                    tasks: a.tasks,
+                    energy_j,
+                    sim_time_s: 0.0,
+                    mean_loss: 1.0 / (1.0 + self.rounds_aggregated as f64),
+                }
+            })
+            .collect();
+        self.pending = plan.assignments.len();
+        Ok(outcomes)
+    }
+
+    fn aggregate(&mut self) -> Result<()> {
+        if self.pending > 0 {
+            self.rounds_aggregated += 1;
+            self.pending = 0;
+        }
+        Ok(())
+    }
+
+    fn evaluate(&mut self) -> Result<f64> {
+        Ok(1.0 / (1.0 + self.rounds_aggregated as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::CostFn;
+
+    #[test]
+    fn sim_backend_reads_energy_off_the_instance() {
+        let inst = Instance::new(
+            3,
+            vec![0, 0],
+            vec![3, 3],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 2.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 5.0 },
+            ],
+        )
+        .unwrap();
+        let plan = RoundPlan {
+            round: 0,
+            schedule: Schedule::new(vec![2, 1]),
+            assignments: vec![
+                Assignment { slot: 0, device: 0, device_id: 10, tasks: 2, energy_scale: 1.0 },
+                Assignment { slot: 1, device: 1, device_id: 11, tasks: 1, energy_scale: 1.0 },
+            ],
+            instance: inst,
+        };
+        let mut b = SimBackend::new();
+        let out = b.train(&plan).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!((out[0].energy_j - 4.0).abs() < 1e-12);
+        assert!((out[1].energy_j - 5.0).abs() < 1e-12);
+        let l0 = b.evaluate().unwrap();
+        b.aggregate().unwrap();
+        assert!(b.evaluate().unwrap() < l0, "proxy loss decays per round");
+    }
+}

@@ -1,0 +1,182 @@
+//! The coordinator's view of a device: exactly what re-deriving each
+//! round's scheduling instance needs — a base cost function, static limits,
+//! and the *evolving* state (battery charge, drift multiplier) that makes
+//! round `r+1`'s instance differ from round `r`'s.
+
+use crate::energy::battery::Battery;
+use crate::energy::power::PowerModel;
+use crate::energy::profiles::Device;
+use crate::sched::costs::CostFn;
+
+/// A device as managed by the coordinator across rounds.
+#[derive(Clone, Debug)]
+pub struct ManagedDevice {
+    /// Fleet-unique id (ledger key).
+    pub id: usize,
+    /// Base energy cost function `C_i` (joules for `j` tasks). Drift is
+    /// applied on top per round.
+    pub cost: CostFn,
+    /// Per-round lower limit `L_i` intrinsic to the device (contractual
+    /// minimum participation; the §3.1 example's `L = {1, 0, 0}`).
+    pub lower: usize,
+    /// Static capacity cap (available data / contract) before battery.
+    pub data_cap: usize,
+    /// Battery state, drained by measured energy each round (`None` =
+    /// mains-powered).
+    pub battery: Option<Battery>,
+    /// Power model, when the device has one (fleet devices do; abstract
+    /// paper-style resources need not). Used for battery budgets and
+    /// partial-work energy on dropout.
+    pub power: Option<PowerModel>,
+    /// Current multiplicative drift on the energy profile (1.0 = nominal).
+    pub drift: f64,
+}
+
+impl ManagedDevice {
+    /// A paper-style abstract resource: a cost function plus limits, no
+    /// physical power/battery model.
+    pub fn abstract_resource(id: usize, cost: CostFn, lower: usize, upper: usize) -> Self {
+        Self {
+            id,
+            cost,
+            lower,
+            data_cap: upper,
+            battery: None,
+            power: None,
+            drift: 1.0,
+        }
+    }
+
+    /// Adopt a sampled fleet device, capping its capacity at `data_len`
+    /// (it cannot train on more distinct mini-batches than its shard
+    /// holds).
+    pub fn from_device(d: &Device, data_len: usize) -> Self {
+        Self {
+            id: d.id,
+            cost: d.cost_fn(),
+            lower: 0,
+            data_cap: d.data_batches.min(data_len),
+            battery: d.battery.clone(),
+            power: Some(d.power.clone()),
+            drift: 1.0,
+        }
+    }
+
+    /// This round's effective upper limit: static cap, further clamped by
+    /// the current battery budget. Re-evaluated every round — this is the
+    /// "re-cost" input that makes schedules adapt to battery drain.
+    pub fn effective_upper(&self) -> usize {
+        match (&self.battery, &self.power) {
+            (Some(b), Some(p)) => self.data_cap.min(b.max_batches(p)),
+            _ => self.data_cap,
+        }
+    }
+
+    /// This round's scheduler-visible cost function: the base cost under
+    /// the current drift. Drift scales the scheduled cost exactly as it
+    /// scales measured energy, so the profiler stays truthful.
+    pub fn current_cost(&self) -> CostFn {
+        if self.drift == 1.0 {
+            self.cost.clone()
+        } else {
+            CostFn::Scaled { weight: self.drift, inner: Box::new(self.cost.clone()) }
+        }
+    }
+
+    /// Energy burnt by `done` tasks under current drift — used for partial
+    /// work on mid-round dropout. Prefers the physical power model; falls
+    /// back to the cost function over its valid domain, prorating linearly
+    /// below `lower` (tabulated costs may be undefined there, and a victim
+    /// must never be charged for tasks it did not start).
+    pub fn partial_energy_j(&self, done: usize) -> f64 {
+        match &self.power {
+            Some(p) => p.energy_j(done) * self.drift,
+            None if done == 0 => 0.0,
+            None if done < self.lower => {
+                self.current_cost().eval(self.lower) * done as f64 / self.lower as f64
+            }
+            None => self.current_cost().eval(done.min(self.data_cap)),
+        }
+    }
+
+    /// Drain the battery by measured joules (no-op when mains-powered).
+    pub fn drain(&mut self, joules: f64) {
+        if let Some(b) = self.battery.as_mut() {
+            b.drain(joules);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::power::Behavior;
+
+    fn powered() -> ManagedDevice {
+        ManagedDevice {
+            id: 0,
+            cost: CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+            lower: 0,
+            data_cap: 100,
+            battery: Some(Battery {
+                capacity_wh: 1.0,
+                level: 1.0,
+                round_budget_frac: 0.01,
+            }),
+            power: Some(PowerModel {
+                idle_w: 0.1,
+                busy_w: 2.0,
+                batch_latency_s: 0.5,
+                behavior: Behavior::Linear,
+                curvature: 0.0,
+            }),
+            drift: 1.0,
+        }
+    }
+
+    #[test]
+    fn battery_drain_shrinks_effective_upper() {
+        let mut d = powered();
+        // budget = 3600 J * 0.01 = 36 J at 1 J/batch → 36 batches.
+        assert_eq!(d.effective_upper(), 36);
+        d.drain(1800.0); // half the charge
+        assert_eq!(d.effective_upper(), 18);
+        d.drain(1e9);
+        assert_eq!(d.effective_upper(), 0);
+    }
+
+    #[test]
+    fn abstract_resource_uses_cost_fn_for_partial_energy() {
+        let d = ManagedDevice::abstract_resource(
+            3,
+            CostFn::Affine { fixed: 0.0, per_task: 2.0 },
+            0,
+            10,
+        );
+        assert_eq!(d.effective_upper(), 10);
+        assert!((d.partial_energy_j(4) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_energy_below_lower_is_prorated_not_rounded_up() {
+        // Tabulated cost only defined on [2, 4] (mirrors a lower limit).
+        let d = ManagedDevice::abstract_resource(
+            4,
+            CostFn::from_table(&[(2, 6.0), (3, 8.0), (4, 9.0)]),
+            2,
+            4,
+        );
+        assert_eq!(d.partial_energy_j(0), 0.0, "no work, no charge");
+        assert!((d.partial_energy_j(1) - 3.0).abs() < 1e-12, "half of C(2)");
+        assert!((d.partial_energy_j(3) - 8.0).abs() < 1e-12);
+        assert!((d.partial_energy_j(9) - 9.0).abs() < 1e-12, "clamped to cap");
+    }
+
+    #[test]
+    fn drift_scales_cost_and_partial_energy() {
+        let mut d = powered();
+        d.drift = 2.0;
+        assert!((d.current_cost().eval(3) - 6.0).abs() < 1e-12);
+        assert!((d.partial_energy_j(3) - 6.0).abs() < 1e-12); // 3 J * 2
+    }
+}

@@ -1,1 +1,834 @@
-// paper's L3 coordination contribution
+//! The coordination layer (L3): a state-machine [`Coordinator`] that owns
+//! the multi-round federated-learning loop the paper's §6 envisions —
+//!
+//! ```text
+//! Configuring → ( Scheduling → Training → Aggregating → Recosting )*
+//! ```
+//!
+//! Each round the coordinator **re-derives** the Minimal Cost FL Schedule
+//! instance from the fleet's *current* state — battery charge, cost drift,
+//! availability churn ([`crate::fl::dynamics`]) — solves it through the
+//! [`SolverRegistry`], dispatches training to a pluggable
+//! [`RoundBackend`], aggregates, then re-costs the fleet for the next
+//! round. When the configured solver is the (MC)²MKP DP (directly or via
+//! `auto` dispatch), consecutive rounds reuse DP rows for the unchanged
+//! prefix of cost tables ([`WarmMc2mkp`]) — warm-started re-solves are
+//! bit-for-bit identical to cold solves.
+//!
+//! The design follows the explicit-phase coordinators of production FL
+//! systems (cf. xaynet's state-machine `Coordinator`): every transition is
+//! checked, every round emits an energy/cost metrics row, and the
+//! training side is a seam (`RoundBackend`) so the same loop drives the
+//! PJRT-backed FL server and the dependency-free [`SimBackend`].
+
+pub mod backend;
+pub mod device;
+
+pub use backend::{Assignment, DeviceOutcome, RoundBackend, RoundPlan, SimBackend};
+pub use device::ManagedDevice;
+
+use crate::config::TrainConfig;
+use crate::error::{FedError, Result};
+use crate::fl::dynamics::DynamicsConfig;
+use crate::metrics::{EnergyLedger, MetricsHub, RoundLog, Timer, TrainingLog};
+use crate::sched::auto::{best_algorithm, classify_instance};
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::mc2mkp::WarmMc2mkp;
+use crate::sched::solver::SolverRegistry;
+use crate::sched::validate;
+use crate::util::rng::Rng;
+
+/// Coordinator life-cycle phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Validating configuration and fleet; no round has run.
+    Configuring,
+    /// Deriving and solving this round's scheduling instance.
+    Scheduling,
+    /// Devices are training their assignments.
+    Training,
+    /// Folding updates into the global model and evaluating.
+    Aggregating,
+    /// Updating device profiles (battery, drift, availability) for the
+    /// next round.
+    Recosting,
+}
+
+impl Phase {
+    fn can_transition_to(self, next: Phase) -> bool {
+        matches!(
+            (self, next),
+            (Phase::Configuring, Phase::Scheduling)
+                | (Phase::Scheduling, Phase::Training)
+                // Empty rounds (nobody online / nothing scheduled) skip
+                // straight to re-costing.
+                | (Phase::Scheduling, Phase::Recosting)
+                | (Phase::Training, Phase::Aggregating)
+                | (Phase::Aggregating, Phase::Recosting)
+                | (Phase::Recosting, Phase::Scheduling)
+        )
+    }
+}
+
+/// What the coordinator needs to know to drive rounds (the scheduling
+/// subset of [`TrainConfig`], minus the ML-side knobs).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Rounds to run in [`Coordinator::run`].
+    pub rounds: usize,
+    /// Mini-batches to distribute per round (`T`).
+    pub tasks_per_round: usize,
+    /// Solver name resolved through the [`SolverRegistry`].
+    pub algo: String,
+    /// Fraction of the fleet selected per round (FedAvg's `C`).
+    pub participation: f64,
+    /// Config-level minimum participation per selected device (combined
+    /// with each device's intrinsic lower limit).
+    pub min_tasks: usize,
+    /// Over-representation guard: no device may receive more than this
+    /// fraction of a round's tasks (paper §6). Relaxed automatically if
+    /// the capped capacity cannot absorb `T`.
+    pub max_share: f64,
+    /// Seed for selection/dynamics randomness.
+    pub seed: u64,
+    /// Early-stop target on evaluation loss.
+    pub target_loss: Option<f64>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            rounds: 50,
+            tasks_per_round: 64,
+            algo: "auto".into(),
+            participation: 1.0,
+            min_tasks: 0,
+            max_share: 0.25,
+            seed: 7,
+            target_loss: None,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Extract the coordination knobs from a full training config.
+    pub fn from_train(cfg: &TrainConfig) -> Self {
+        Self {
+            rounds: cfg.rounds,
+            tasks_per_round: cfg.tasks_per_round,
+            algo: cfg.policy.to_string(),
+            participation: cfg.participation,
+            min_tasks: cfg.min_tasks,
+            max_share: cfg.max_share,
+            seed: cfg.seed,
+            target_loss: cfg.target_loss,
+        }
+    }
+}
+
+/// The multi-round FL coordinator (see module docs).
+pub struct Coordinator<B: RoundBackend> {
+    cfg: CoordinatorConfig,
+    devices: Vec<ManagedDevice>,
+    dynamics: DynamicsConfig,
+    registry: SolverRegistry,
+    warm: WarmMc2mkp,
+    rng: Rng,
+    phase: Phase,
+    /// Online device indices entering the next Scheduling phase.
+    pool: Vec<usize>,
+    next_round: usize,
+    backend: B,
+    ledger: EnergyLedger,
+    metrics: MetricsHub,
+    log: TrainingLog,
+}
+
+impl<B: RoundBackend> Coordinator<B> {
+    /// Configure a coordinator over a managed fleet. Fails (still in
+    /// `Configuring`) if the solver name is unknown or the fleet is empty.
+    pub fn new(
+        cfg: CoordinatorConfig,
+        devices: Vec<ManagedDevice>,
+        backend: B,
+    ) -> Result<Self> {
+        if devices.is_empty() {
+            return Err(FedError::Coordinator("empty fleet".into()));
+        }
+        if cfg.tasks_per_round == 0 {
+            return Err(FedError::Coordinator("tasks_per_round must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&cfg.participation) || cfg.participation == 0.0 {
+            return Err(FedError::Coordinator("participation must be in (0, 1]".into()));
+        }
+        if !(0.0..=1.0).contains(&cfg.max_share) || cfg.max_share == 0.0 {
+            return Err(FedError::Coordinator("max_share must be in (0, 1]".into()));
+        }
+        let registry = SolverRegistry::with_defaults(cfg.seed);
+        registry.resolve(&cfg.algo)?;
+        let rng = Rng::new(cfg.seed);
+        let pool = (0..devices.len()).collect();
+        Ok(Self {
+            cfg,
+            devices,
+            dynamics: DynamicsConfig::none(),
+            registry,
+            warm: WarmMc2mkp::new(),
+            rng,
+            phase: Phase::Configuring,
+            pool,
+            next_round: 0,
+            backend,
+            ledger: EnergyLedger::new(),
+            metrics: MetricsHub::new(),
+            log: TrainingLog::new(),
+        })
+    }
+
+    /// Install dynamic fleet behaviour (availability churn, cost drift,
+    /// mid-round dropout).
+    pub fn set_dynamics(&mut self, dynamics: DynamicsConfig) {
+        self.dynamics = dynamics;
+    }
+
+    /// Current phase.
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// The solver registry (e.g. to register custom solvers before
+    /// running).
+    pub fn registry_mut(&mut self) -> &mut SolverRegistry {
+        &mut self.registry
+    }
+
+    /// Managed devices (current, re-costed state).
+    pub fn devices(&self) -> &[ManagedDevice] {
+        &self.devices
+    }
+
+    /// The training backend.
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// Mutable training backend.
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
+    /// Per-device / per-round energy ledger.
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+
+    /// Counters and gauges.
+    pub fn metrics(&self) -> &MetricsHub {
+        &self.metrics
+    }
+
+    /// Per-round training log.
+    pub fn log(&self) -> &TrainingLog {
+        &self.log
+    }
+
+    /// The coordinator configuration.
+    pub fn cfg(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    fn transition(&mut self, next: Phase) -> Result<()> {
+        if !self.phase.can_transition_to(next) {
+            return Err(FedError::Coordinator(format!(
+                "illegal transition {:?} → {next:?}",
+                self.phase
+            )));
+        }
+        self.phase = next;
+        Ok(())
+    }
+
+    /// Build this round's instance over `selected` device indices (with
+    /// their already-computed `raw_uppers`, which the caller derived from
+    /// current device state and checked to be non-empty in total).
+    fn build_instance(
+        &mut self,
+        selected: &[usize],
+        raw_uppers: &[usize],
+    ) -> Result<(Instance, usize)> {
+        // Overflow-safe capacity: "unlimited" devices may carry
+        // `usize::MAX` uppers (same encoding Instance::validate hardens
+        // against), so clamp each term to T before a saturating fold.
+        let t_req = self.cfg.tasks_per_round;
+        let capacity: usize = raw_uppers
+            .iter()
+            .fold(0usize, |a, &u| a.saturating_add(u.min(t_req)));
+        debug_assert!(capacity > 0, "caller degrades zero capacity to an empty round");
+        let t = t_req.min(capacity);
+
+        // Over-representation guard (§6): cap any device at max_share · T,
+        // doubling the cap until the capped fleet can still absorb T.
+        let mut cap = ((t as f64 * self.cfg.max_share).ceil() as usize).max(1);
+        let uppers: Vec<usize> = loop {
+            let capped: Vec<usize> = raw_uppers.iter().map(|&u| u.min(cap)).collect();
+            if capped
+                .iter()
+                .fold(0usize, |a, &c| a.saturating_add(c))
+                >= t
+            {
+                break capped;
+            }
+            cap *= 2;
+        };
+
+        // Lower limits: config-level minimum joined with each device's
+        // intrinsic minimum, clamped to the (possibly share-capped) upper.
+        let lower: Vec<usize> = selected
+            .iter()
+            .zip(&uppers)
+            .map(|(&d, &u)| self.cfg.min_tasks.max(self.devices[d].lower).min(u))
+            .collect();
+        // Relax in two stages when ΣL overshoots T: first drop the
+        // config-level minimum and keep only the intrinsic device minima;
+        // if even those sum above T (a small round over a demanding
+        // fleet), drop all lower limits rather than failing every round —
+        // metered so the relaxation is observable.
+        let lower = if lower.iter().sum::<usize>() > t {
+            let intrinsic: Vec<usize> = selected
+                .iter()
+                .zip(&uppers)
+                .map(|(&d, &u)| self.devices[d].lower.min(u))
+                .collect();
+            if intrinsic.iter().sum::<usize>() > t {
+                self.metrics.inc("lower_limits_relaxed", 1);
+                vec![0; uppers.len()]
+            } else {
+                intrinsic
+            }
+        } else {
+            lower
+        };
+        let costs = selected
+            .iter()
+            .map(|&d| self.devices[d].current_cost())
+            .collect();
+        Ok((Instance::new(t, lower, uppers, costs)?, t))
+    }
+
+    /// Solve the instance with the configured algorithm, warm-starting the
+    /// (MC)²MKP DP whenever the DP is what runs (configured directly or
+    /// chosen by `auto` dispatch).
+    fn solve(&mut self, instance: &Instance) -> Result<Schedule> {
+        let canonical = self.registry.resolve(&self.cfg.algo)?.name();
+        // Resolve `auto` to its concrete Table 2 pick here, once: the
+        // classification is not repeated inside the solver, and registry
+        // overrides of the concrete solvers are honored by the dispatch.
+        let effective = if canonical == "auto" && !self.registry.is_overridden("auto")
+        {
+            best_algorithm(&classify_instance(instance))
+        } else {
+            canonical
+        };
+        // The warm fast path only stands in for the *built-in* DP; a
+        // caller-registered "mc2mkp" must win over it.
+        if effective == "mc2mkp" && !self.registry.is_overridden("mc2mkp") {
+            let (schedule, info) = self.warm.solve(instance)?;
+            self.metrics.inc("dp_solves", 1);
+            self.metrics.inc("dp_rows_reused", info.reused_rows as u64);
+            self.metrics.inc("dp_rows_total", info.total_rows as u64);
+            Ok(schedule)
+        } else {
+            self.registry
+                .solve_seeded(effective, instance, &mut self.rng)
+        }
+    }
+
+    /// Drive one full round through the state machine; returns the logged
+    /// row. On an error mid-round the machine is returned to the ready
+    /// (`Scheduling`) state, so a caller that handles the error can keep
+    /// driving rounds.
+    pub fn round(&mut self) -> Result<RoundLog> {
+        match self.phase {
+            Phase::Configuring => self.transition(Phase::Scheduling)?,
+            Phase::Scheduling => {}
+            other => {
+                return Err(FedError::Coordinator(format!(
+                    "round() may not start from {other:?}"
+                )))
+            }
+        }
+        let round_idx = self.next_round;
+        self.next_round += 1;
+        let result = self.round_inner(round_idx);
+        if result.is_err() {
+            self.phase = Phase::Scheduling;
+            // The aborted round still consumed its index, and dropout
+            // victims may already have burned real energy into an open
+            // ledger bucket. Log an explicit aborted row (opening an empty
+            // bucket if none was) so `Σ log energy == ledger total` and
+            // one-row-per-round hold for callers that handle the error
+            // and keep driving rounds.
+            if self.ledger.rounds().len() <= self.log.rows().len() {
+                self.ledger.begin_round();
+            }
+            let energy_j = self.ledger.rounds().last().copied().unwrap_or(0.0);
+            let loss = self.log.rows().last().map(|r| r.loss).unwrap_or(f64::NAN);
+            self.log.push(RoundLog {
+                round: round_idx,
+                policy: self.cfg.algo.clone(),
+                loss,
+                energy_j,
+                sched_time_s: 0.0,
+                train_time_s: 0.0,
+                participants: 0,
+                tasks: 0,
+            });
+            self.metrics.inc("aborted_rounds", 1);
+        }
+        result
+    }
+
+    fn round_inner(&mut self, round_idx: usize) -> Result<RoundLog> {
+        // ---- Scheduling ------------------------------------------------
+        if self.pool.is_empty() {
+            // Nobody online: an empty round (no energy, model unchanged).
+            self.ledger.begin_round();
+            let loss = self.backend.evaluate()?;
+            self.metrics.inc("empty_rounds", 1);
+            let row = self.finish_round(round_idx, loss, 0.0, 0.0, 0.0, 0, 0)?;
+            return Ok(row);
+        }
+
+        let n_online = self.pool.len();
+        let k = ((self.devices.len() as f64 * self.cfg.participation).ceil()
+            as usize)
+            .clamp(1, n_online);
+        let picks = self.rng.sample_indices(n_online, k);
+        let mut selected: Vec<usize> = picks.iter().map(|&i| self.pool[i]).collect();
+        // Stable slot order: keeps slot→device mapping canonical and
+        // maximizes the unchanged class prefix the warm DP can reuse.
+        selected.sort_unstable();
+
+        // Exhausted fleet (e.g. every selected battery drained to zero):
+        // degrade to an empty round instead of aborting the run.
+        let raw_uppers: Vec<usize> = selected
+            .iter()
+            .map(|&d| self.devices[d].effective_upper())
+            .collect();
+        if raw_uppers.iter().all(|&u| u == 0) {
+            self.ledger.begin_round();
+            let loss = self.backend.evaluate()?;
+            self.metrics.inc("empty_rounds", 1);
+            self.metrics.inc("exhausted_rounds", 1);
+            return self.finish_round(round_idx, loss, 0.0, 0.0, 0.0, 0, 0);
+        }
+
+        let (instance, t) = self.build_instance(&selected, &raw_uppers)?;
+        let timer = Timer::start();
+        let schedule = self.solve(&instance)?;
+        let sched_time_s = timer.elapsed_s();
+        validate::check(&instance, &schedule)?;
+        let predicted_j = validate::total_cost(&instance, &schedule);
+
+        // ---- Training --------------------------------------------------
+        self.transition(Phase::Training)?;
+        self.ledger.begin_round();
+        let wall = Timer::start();
+        let mut assignments = Vec::new();
+        for (slot, &d) in selected.iter().enumerate() {
+            let tasks = schedule.get(slot);
+            if tasks == 0 {
+                continue;
+            }
+            // Mid-round dropout: the device burns energy for the fraction
+            // of work it completed, but its update is lost (§6 "loss of a
+            // device").
+            let failed_at = self
+                .dynamics
+                .dropout
+                .as_ref()
+                .and_then(|dr| dr.sample(&mut self.rng));
+            if let Some(frac) = failed_at {
+                let done = ((tasks as f64) * frac).floor() as usize;
+                let wasted = self.devices[d].partial_energy_j(done);
+                self.ledger.record(self.devices[d].id, wasted);
+                self.devices[d].drain(wasted);
+                self.metrics.inc("dropouts", 1);
+                continue;
+            }
+            assignments.push(Assignment {
+                slot,
+                device: d,
+                device_id: self.devices[d].id,
+                tasks,
+                energy_scale: self.devices[d].drift,
+            });
+        }
+        let plan = RoundPlan {
+            round: round_idx,
+            instance,
+            schedule,
+            assignments,
+        };
+        let outcomes = self.backend.train(&plan)?;
+        let mut sim_time_s = 0.0f64;
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0usize;
+        for o in &outcomes {
+            self.ledger.record(o.device_id, o.energy_j);
+            self.devices[o.device].drain(o.energy_j);
+            sim_time_s = sim_time_s.max(o.sim_time_s); // devices run in parallel
+            loss_sum += o.mean_loss * o.tasks as f64;
+            loss_n += o.tasks;
+        }
+        let train_time_s = wall.elapsed_s();
+        self.metrics.set("sim_round_time_s", sim_time_s);
+        self.metrics.set(
+            "train_loss",
+            if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 },
+        );
+
+        // ---- Aggregating -----------------------------------------------
+        self.transition(Phase::Aggregating)?;
+        self.backend.aggregate()?;
+        let eval_loss = self.backend.evaluate()?;
+
+        self.finish_round(
+            round_idx,
+            eval_loss,
+            sched_time_s,
+            train_time_s,
+            predicted_j,
+            outcomes.len(),
+            t,
+        )
+    }
+
+    /// Recosting phase + metrics row shared by normal and empty rounds.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_round(
+        &mut self,
+        round_idx: usize,
+        loss: f64,
+        sched_time_s: f64,
+        train_time_s: f64,
+        predicted_j: f64,
+        participants: usize,
+        tasks: usize,
+    ) -> Result<RoundLog> {
+        self.transition(Phase::Recosting)?;
+        // Advance fleet dynamics for the NEXT round: drift the energy
+        // profiles and churn availability. Battery state was already
+        // re-costed in place as energy was recorded.
+        if let Some(drift) = self.dynamics.drift.as_mut() {
+            drift.step(&mut self.rng);
+            for (i, dev) in self.devices.iter_mut().enumerate() {
+                dev.drift = drift.scale(i);
+            }
+        }
+        self.pool = match self.dynamics.availability.as_mut() {
+            Some(av) => av.step(&mut self.rng),
+            None => (0..self.devices.len()).collect(),
+        };
+
+        let energy_j = self.ledger.rounds().last().copied().unwrap_or(0.0);
+        let row = RoundLog {
+            round: round_idx,
+            policy: self.cfg.algo.clone(),
+            loss,
+            energy_j,
+            sched_time_s,
+            train_time_s,
+            participants,
+            tasks,
+        };
+        self.metrics.inc("rounds", 1);
+        self.metrics.inc("tasks", tasks as u64);
+        self.metrics.set("eval_loss", loss);
+        self.metrics.set("predicted_energy_j", predicted_j);
+        self.log.push(row.clone());
+        // Ready for the next round.
+        self.phase = Phase::Scheduling;
+        Ok(row)
+    }
+
+    /// Run the configured number of rounds (early-stopping on
+    /// `target_loss`); returns the accumulated log.
+    pub fn run(&mut self) -> Result<&TrainingLog> {
+        for _ in 0..self.cfg.rounds {
+            let row = self.round()?;
+            if let Some(target) = self.cfg.target_loss {
+                if row.loss <= target {
+                    self.metrics.inc("early_stops", 1);
+                    break;
+                }
+            }
+        }
+        Ok(&self.log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::CostFn;
+
+    fn paper_fleet() -> Vec<ManagedDevice> {
+        let inst = Instance::paper_example(5);
+        (0..inst.n())
+            .map(|i| {
+                ManagedDevice::abstract_resource(
+                    i,
+                    inst.costs[i].clone(),
+                    inst.lower[i],
+                    inst.upper[i],
+                )
+            })
+            .collect()
+    }
+
+    fn paper_cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            rounds: 3,
+            tasks_per_round: 5,
+            algo: "mc2mkp".into(),
+            max_share: 1.0,
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    #[test]
+    fn reproduces_the_section31_optimum_on_round_one() {
+        let mut c = Coordinator::new(paper_cfg(), paper_fleet(), SimBackend::new())
+            .unwrap();
+        let row = c.round().unwrap();
+        assert_eq!(row.tasks, 5);
+        // X* = {2, 3, 0}: resource 3 sits idle, so 2 devices participate.
+        assert_eq!(row.participants, 2);
+        assert!((row.energy_j - 7.5).abs() < 1e-9, "ΣC = {}", row.energy_j);
+        assert!((c.ledger().total() - 7.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_machine_rejects_illegal_transitions() {
+        let mut c = Coordinator::new(paper_cfg(), paper_fleet(), SimBackend::new())
+            .unwrap();
+        assert_eq!(c.phase(), Phase::Configuring);
+        assert!(c.transition(Phase::Training).is_err());
+        assert!(c.transition(Phase::Aggregating).is_err());
+        c.round().unwrap();
+        assert_eq!(c.phase(), Phase::Scheduling);
+        assert!(c.transition(Phase::Recosting).is_ok(), "empty-round edge");
+    }
+
+    #[test]
+    fn rejects_bad_configuration() {
+        assert!(Coordinator::new(paper_cfg(), vec![], SimBackend::new()).is_err());
+        let mut cfg = paper_cfg();
+        cfg.algo = "not-a-solver".into();
+        assert!(Coordinator::new(cfg, paper_fleet(), SimBackend::new()).is_err());
+        let mut cfg = paper_cfg();
+        cfg.participation = 0.0;
+        assert!(Coordinator::new(cfg, paper_fleet(), SimBackend::new()).is_err());
+    }
+
+    #[test]
+    fn warm_start_metrics_accumulate_across_rounds() {
+        let mut c = Coordinator::new(paper_cfg(), paper_fleet(), SimBackend::new())
+            .unwrap();
+        c.run().unwrap();
+        assert_eq!(c.metrics().counter("dp_solves"), 3);
+        // Static fleet, static costs: rounds 2 and 3 reuse every DP row.
+        assert_eq!(c.metrics().counter("dp_rows_reused"), 6);
+        assert_eq!(c.metrics().counter("dp_rows_total"), 9);
+    }
+
+    #[test]
+    fn battery_drain_recosts_subsequent_rounds() {
+        use crate::energy::battery::Battery;
+        use crate::energy::power::{Behavior, PowerModel};
+        // One battery device that can afford 4 tasks in round 1, and one
+        // expensive mains device. Draining the battery must shift work.
+        let cheap_power = PowerModel {
+            idle_w: 0.0,
+            busy_w: 2.0,
+            batch_latency_s: 0.5,
+            behavior: Behavior::Linear,
+            curvature: 0.0,
+        }; // 1 J per task
+        let devices = vec![
+            ManagedDevice {
+                id: 0,
+                cost: cheap_power.cost_fn(),
+                lower: 0,
+                data_cap: 10,
+                battery: Some(Battery {
+                    // 8 J remaining at 50% budget → 4 tasks in round 1.
+                    capacity_wh: 8.0 / 3600.0,
+                    level: 1.0,
+                    round_budget_frac: 0.5,
+                }),
+                power: Some(cheap_power),
+                drift: 1.0,
+            },
+            ManagedDevice::abstract_resource(
+                1,
+                CostFn::Affine { fixed: 0.0, per_task: 100.0 },
+                0,
+                10,
+            ),
+        ];
+        let cfg = CoordinatorConfig {
+            rounds: 2,
+            tasks_per_round: 4,
+            algo: "auto".into(),
+            max_share: 1.0,
+            ..CoordinatorConfig::default()
+        };
+        let mut c = Coordinator::new(cfg, devices, SimBackend::new()).unwrap();
+        let r1 = c.round().unwrap();
+        assert!((r1.energy_j - 4.0).abs() < 1e-9, "round 1 all on battery dev");
+        // 4 J drained → 4 J remain → budget 2 J → U_0 = 2 next round.
+        let r2 = c.round().unwrap();
+        assert!(
+            (r2.energy_j - (2.0 + 200.0)).abs() < 1e-9,
+            "round 2 must overflow to the expensive device: {}",
+            r2.energy_j
+        );
+    }
+
+    #[test]
+    fn exhausted_fleet_degrades_to_empty_rounds() {
+        use crate::energy::battery::Battery;
+        use crate::energy::power::{Behavior, PowerModel};
+        let power = PowerModel {
+            idle_w: 0.0,
+            busy_w: 2.0,
+            batch_latency_s: 0.5,
+            behavior: Behavior::Linear,
+            curvature: 0.0,
+        }; // 1 J per task
+        let devices = vec![ManagedDevice {
+            id: 0,
+            cost: power.cost_fn(),
+            lower: 0,
+            data_cap: 10,
+            battery: Some(Battery {
+                capacity_wh: 2.0 / 3600.0, // 2 J total
+                level: 1.0,
+                round_budget_frac: 1.0,
+            }),
+            power: Some(power),
+            drift: 1.0,
+        }];
+        let cfg = CoordinatorConfig {
+            rounds: 3,
+            tasks_per_round: 4,
+            algo: "auto".into(),
+            max_share: 1.0,
+            ..CoordinatorConfig::default()
+        };
+        let mut c = Coordinator::new(cfg, devices, SimBackend::new()).unwrap();
+        c.run().unwrap();
+        let rows = c.log().rows();
+        assert_eq!(rows.len(), 3, "run must survive battery exhaustion");
+        assert!((rows[0].energy_j - 2.0).abs() < 1e-9);
+        assert_eq!(rows[1].energy_j, 0.0);
+        assert_eq!(rows[2].energy_j, 0.0);
+        assert_eq!(c.metrics().counter("exhausted_rounds"), 2);
+    }
+
+    #[test]
+    fn round_errors_leave_the_machine_ready() {
+        struct FailingBackend;
+        impl RoundBackend for FailingBackend {
+            fn train(&mut self, _plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+                Err(FedError::Fl("injected training failure".into()))
+            }
+            fn aggregate(&mut self) -> Result<()> {
+                Ok(())
+            }
+            fn evaluate(&mut self) -> Result<f64> {
+                Ok(0.0)
+            }
+        }
+        let mut c =
+            Coordinator::new(paper_cfg(), paper_fleet(), FailingBackend).unwrap();
+        let e1 = c.round().unwrap_err().to_string();
+        assert!(e1.contains("injected"), "{e1}");
+        // The failure must not wedge the phase machine: the next round
+        // reports the same backend error, not an illegal transition.
+        let e2 = c.round().unwrap_err().to_string();
+        assert!(e2.contains("injected"), "{e2}");
+        assert_eq!(c.phase(), Phase::Scheduling);
+        // Aborted rounds are still accounted: one row + one ledger bucket
+        // each, so log and ledger stay in lockstep across failures.
+        assert_eq!(c.metrics().counter("aborted_rounds"), 2);
+        assert_eq!(c.log().rows().len(), 2);
+        assert_eq!(c.ledger().rounds().len(), 2);
+        let logged: f64 = c.log().rows().iter().map(|r| r.energy_j).sum();
+        assert!((logged - c.ledger().total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_override_of_mc2mkp_disables_the_warm_fast_path() {
+        use crate::sched::solver::Solver;
+        struct UniformAsDp;
+        impl Solver for UniformAsDp {
+            fn name(&self) -> &'static str {
+                "mc2mkp"
+            }
+            fn solve(&self, inst: &Instance) -> Result<Schedule> {
+                crate::sched::baselines::uniform(inst)
+            }
+        }
+        let mut c = Coordinator::new(paper_cfg(), paper_fleet(), SimBackend::new())
+            .unwrap();
+        c.registry_mut().register(Box::new(UniformAsDp));
+        let row = c.round().unwrap();
+        // Uniform on the §3.1 example is feasible but NOT optimal, and the
+        // warm DP must not have run.
+        assert!(row.energy_j > 7.5 + 1e-9, "override ignored: {}", row.energy_j);
+        assert_eq!(c.metrics().counter("dp_solves"), 0);
+    }
+
+    #[test]
+    fn unlimited_uppers_do_not_overflow_capacity_sums() {
+        let c = CostFn::Affine { fixed: 0.0, per_task: 1.0 };
+        let devices = vec![
+            ManagedDevice::abstract_resource(0, c.clone(), 0, usize::MAX),
+            ManagedDevice::abstract_resource(1, c, 0, usize::MAX),
+        ];
+        let cfg = CoordinatorConfig {
+            rounds: 1,
+            tasks_per_round: 40,
+            algo: "auto".into(),
+            max_share: 1.0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg, devices, SimBackend::new()).unwrap();
+        let row = coord.round().unwrap();
+        assert_eq!(row.tasks, 40);
+        assert!((row.energy_j - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_is_deterministic_for_a_seed() {
+        let go = || {
+            let cfg = CoordinatorConfig {
+                rounds: 5,
+                algo: "random".into(),
+                ..paper_cfg()
+            };
+            let mut c =
+                Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+            c.run().unwrap();
+            c.log()
+                .rows()
+                .iter()
+                .map(|r| (r.loss, r.energy_j))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(go(), go());
+    }
+}

@@ -1,45 +1,77 @@
 //! Crate-wide error type and result alias.
+//!
+//! Hand-implemented `Display`/`Error` (the offline build has no
+//! `thiserror`).
+
+use std::fmt;
 
 /// Errors produced anywhere in the fedzero stack.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FedError {
     /// The problem instance is malformed (violates the validity conditions
     /// of §3: `L_i <= U_i`, `ΣL <= T <= ΣU`, empty resource set, ...).
-    #[error("invalid instance: {0}")]
     InvalidInstance(String),
 
     /// A scheduler was invoked on an instance outside its declared scenario
     /// (e.g. MarIn on decreasing marginal costs).
-    #[error("scenario mismatch: {0}")]
     ScenarioMismatch(String),
 
     /// No feasible schedule exists (should not happen on valid instances).
-    #[error("infeasible: {0}")]
     Infeasible(String),
 
     /// A produced schedule failed validation.
-    #[error("invalid schedule: {0}")]
     InvalidSchedule(String),
 
     /// Configuration file / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Artifact manifest or HLO loading problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT / XLA runtime failures.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Federated-learning loop failures (aggregation shape mismatch, ...).
-    #[error("fl error: {0}")]
     Fl(String),
 
+    /// Coordinator state-machine violations (illegal phase transition,
+    /// round driven from a non-ready state).
+    Coordinator(String),
+
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for FedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FedError::InvalidInstance(m) => write!(f, "invalid instance: {m}"),
+            FedError::ScenarioMismatch(m) => write!(f, "scenario mismatch: {m}"),
+            FedError::Infeasible(m) => write!(f, "infeasible: {m}"),
+            FedError::InvalidSchedule(m) => write!(f, "invalid schedule: {m}"),
+            FedError::Config(m) => write!(f, "config error: {m}"),
+            FedError::Artifact(m) => write!(f, "artifact error: {m}"),
+            FedError::Runtime(m) => write!(f, "runtime error: {m}"),
+            FedError::Fl(m) => write!(f, "fl error: {m}"),
+            FedError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            FedError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FedError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FedError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FedError {
+    fn from(e: std::io::Error) -> Self {
+        FedError::Io(e)
+    }
 }
 
 impl From<xla::Error> for FedError {
@@ -50,3 +82,28 @@ impl From<xla::Error> for FedError {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, FedError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(
+            FedError::InvalidInstance("x".into()).to_string(),
+            "invalid instance: x"
+        );
+        assert_eq!(FedError::Config("y".into()).to_string(), "config error: y");
+        assert_eq!(
+            FedError::Coordinator("bad phase".into()).to_string(),
+            "coordinator error: bad phase"
+        );
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let e: FedError =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -67,10 +67,10 @@ impl SimClient {
             params = next;
             loss_sum += loss as f64;
         }
+        // Battery accounting lives in the coordinator's `ManagedDevice`
+        // view (one source of truth for re-costing); the client only
+        // reports measured energy.
         let energy_j = self.device.power.energy_j(tasks);
-        if let Some(b) = self.device.battery.as_mut() {
-            b.drain(energy_j);
-        }
         Ok(LocalUpdate {
             device: self.device.id,
             tasks,

@@ -4,17 +4,13 @@
 //! algorithms compared to other solutions ... in energy consumption,
 //! execution time, and accuracy").
 //!
-//! Per round (`server::Server::round`):
-//! 1. sample participating devices;
-//! 2. derive the Minimal Cost FL Schedule instance `(R, T, U, L, C)` from
-//!    their power models, data sizes and batteries;
-//! 3. run the configured scheduler policy (one of the paper's optimal
-//!    algorithms or a baseline);
-//! 4. every device with `x_i > 0` runs `x_i` real PJRT training steps on
-//!    its own (non-IID) shard, starting from the global model;
-//! 5. energy is integrated per device from its power model;
-//! 6. FedAvg aggregation weighted by `x_i`;
-//! 7. the global model is evaluated on held-out data.
+//! The round loop itself lives in [`crate::coordinator`]; this module
+//! contributes the ML half — [`server::FlBackend`], a
+//! [`crate::coordinator::RoundBackend`] where every device with `x_i > 0`
+//! runs `x_i` real PJRT training steps on its own (non-IID) shard from the
+//! global model, followed by FedAvg aggregation weighted by `x_i` and
+//! held-out evaluation — plus [`server::Server`], the façade that wires
+//! artifacts, data, and a sampled fleet into a coordinator.
 
 pub mod aggregate;
 pub mod client;

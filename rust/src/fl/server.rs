@@ -1,20 +1,27 @@
-//! The FL coordinator: device registry, per-round scheduling, dispatch,
-//! aggregation, evaluation, and energy accounting.
+//! The FL server: the PJRT-backed [`RoundBackend`] plus a thin façade over
+//! the [`Coordinator`] state machine.
+//!
+//! The server no longer owns the round loop — scheduling, dropout,
+//! energy accounting, battery re-costing, and per-round metrics all live
+//! in [`crate::coordinator`]. What remains here is the ML side:
+//! loading artifacts, partitioning data, running real PJRT training steps
+//! on simulated clients, FedAvg aggregation, and held-out evaluation.
 
 use std::path::Path;
 
 use crate::config::{Policy, TrainConfig};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, DeviceOutcome, ManagedDevice, RoundBackend,
+    RoundPlan,
+};
 use crate::energy::power::Behavior;
 use crate::energy::profiles::{BehaviorMix, Fleet};
-use crate::error::{FedError, Result};
+use crate::error::Result;
 use crate::fl::aggregate::fedavg;
 use crate::fl::client::SimClient;
 use crate::fl::data::Dataset;
 use crate::fl::dynamics::DynamicsConfig;
-use crate::sched::costs::CostFn;
-use crate::metrics::{EnergyLedger, MetricsHub, RoundLog, Timer, TrainingLog};
-use crate::sched::instance::Instance;
-use crate::sched::{auto, validate};
+use crate::metrics::{EnergyLedger, MetricsHub, RoundLog, TrainingLog};
 use crate::runtime::{Dtype, ModelRuntime, ParamSet};
 use crate::util::rng::Rng;
 
@@ -22,9 +29,10 @@ use crate::util::rng::Rng;
 /// the specialized algorithms apply; `Mixed` exercises the DP).
 pub const DEFAULT_MIX: BehaviorMix = BehaviorMix::Homogeneous(Behavior::Linear);
 
-/// The federated-learning server.
-pub struct Server {
-    cfg: TrainConfig,
+/// The PJRT-backed training backend: simulated clients running real
+/// AOT-compiled training steps, FedAvg aggregation, frozen-eval-batch
+/// evaluation.
+pub struct FlBackend {
     runtime: ModelRuntime,
     dataset: Dataset,
     /// Fixed held-out batches (as PJRT literals) reused every round, so the
@@ -32,16 +40,62 @@ pub struct Server {
     eval_batches: Vec<(xla::Literal, xla::Literal)>,
     clients: Vec<SimClient>,
     global: ParamSet,
-    rng: Rng,
-    dynamics: DynamicsConfig,
-    pub ledger: EnergyLedger,
-    pub metrics: MetricsHub,
-    pub log: TrainingLog,
+    /// Updates from the last Training phase, consumed by `aggregate`.
+    pending: Vec<(ParamSet, f64)>,
+}
+
+impl RoundBackend for FlBackend {
+    fn train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+        // A failed previous round may have left partial updates behind;
+        // they must never leak into this round's aggregation.
+        self.pending.clear();
+        let mut outcomes = Vec::with_capacity(plan.assignments.len());
+        for a in &plan.assignments {
+            let update = {
+                let client = &mut self.clients[a.device];
+                client.local_train(&self.runtime, &self.dataset, &self.global, a.tasks)?
+            };
+            let energy_j = update.energy_j * a.energy_scale;
+            self.pending.push((update.params, update.tasks as f64));
+            outcomes.push(DeviceOutcome {
+                device_id: a.device_id,
+                device: a.device,
+                tasks: update.tasks,
+                energy_j,
+                sim_time_s: update.sim_time_s,
+                mean_loss: update.mean_loss,
+            });
+        }
+        Ok(outcomes)
+    }
+
+    fn aggregate(&mut self) -> Result<()> {
+        if !self.pending.is_empty() {
+            self.global = fedavg(&self.pending)?;
+            self.pending.clear();
+        }
+        Ok(())
+    }
+
+    fn evaluate(&mut self) -> Result<f64> {
+        let mut sum = 0.0f64;
+        for (x, y) in &self.eval_batches {
+            sum += self.runtime.eval_step(&self.global, x, y)? as f64;
+        }
+        Ok(sum / self.eval_batches.len() as f64)
+    }
+}
+
+/// The federated-learning server: artifacts + data + fleet wired into a
+/// [`Coordinator`].
+pub struct Server {
+    cfg: TrainConfig,
+    coord: Coordinator<FlBackend>,
 }
 
 impl Server {
     /// Build a server: load artifacts, synthesize + partition data, sample
-    /// the fleet.
+    /// the fleet, and hand everything to a coordinator.
     pub fn new(cfg: TrainConfig, mix: BehaviorMix) -> Result<Server> {
         cfg.validate()?;
         let runtime = ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.model)?;
@@ -79,25 +133,34 @@ impl Server {
             })
             .collect();
 
+        // The coordinator's fleet view: same devices, capacity further
+        // clamped to each client's shard (can't train on more distinct
+        // batches than it has data for).
+        let managed: Vec<ManagedDevice> = clients
+            .iter()
+            .map(|c| ManagedDevice::from_device(&c.device, c.data_len()))
+            .collect();
+
         let global = runtime.initial_params();
-        Ok(Server {
-            cfg,
+        let backend = FlBackend {
             runtime,
             dataset,
             eval_batches,
             clients,
             global,
-            rng,
-            dynamics: DynamicsConfig::none(),
-            ledger: EnergyLedger::new(),
-            metrics: MetricsHub::new(),
-            log: TrainingLog::new(),
-        })
+            pending: Vec::new(),
+        };
+        let mut coord_cfg = CoordinatorConfig::from_train(&cfg);
+        // Decorrelate coordination randomness from the fleet/data streams
+        // already drawn from `cfg.seed`.
+        coord_cfg.seed = rng.next_u64();
+        let coord = Coordinator::new(coord_cfg, managed, backend)?;
+        Ok(Server { cfg, coord })
     }
 
     /// Current global parameters.
     pub fn global_params(&self) -> &ParamSet {
-        &self.global
+        &self.coord.backend().global
     }
 
     /// The training configuration.
@@ -108,212 +171,48 @@ impl Server {
     /// Install dynamic fleet behaviour (availability churn, cost drift,
     /// mid-round dropout — paper §6 future work).
     pub fn set_dynamics(&mut self, dynamics: DynamicsConfig) {
-        self.dynamics = dynamics;
+        self.coord.set_dynamics(dynamics);
     }
 
     /// The runtime (for external evaluation).
     pub fn runtime(&self) -> &ModelRuntime {
-        &self.runtime
+        &self.coord.backend().runtime
     }
 
-    /// Build this round's scheduling instance over the selected clients.
-    ///
-    /// `U_i` = device data/battery cap, further clamped to the device's
-    /// *shard* size (can't train on more distinct batches than it has
-    /// data for — over-representation guard [3]); `L_i` = configured
-    /// minimum participation; `T` clamped to fleet capacity.
-    fn build_instance(&self, selected: &[usize]) -> Result<(Instance, usize)> {
-        let raw_uppers: Vec<usize> = selected
-            .iter()
-            .map(|&c| {
-                let cl = &self.clients[c];
-                cl.device.upper_limit().min(cl.data_len())
-            })
-            .collect();
-        let capacity: usize = raw_uppers.iter().sum();
-        if capacity == 0 {
-            return Err(FedError::Fl("selected devices have no capacity".into()));
-        }
-        let t = self.cfg.tasks_per_round.min(capacity);
-
-        // Over-representation guard (§6): cap any device at max_share · T,
-        // doubling the cap until the capped fleet can still absorb T.
-        let mut cap = ((t as f64 * self.cfg.max_share).ceil() as usize).max(1);
-        let uppers: Vec<usize> = loop {
-            let capped: Vec<usize> = raw_uppers.iter().map(|&u| u.min(cap)).collect();
-            if capped.iter().sum::<usize>() >= t {
-                break capped;
-            }
-            cap *= 2;
-        };
-
-        // Cost drift scales the scheduler-visible cost exactly as it scales
-        // the measured energy — the profiler tracks the drift.
-        let drift_scale = |slot: usize, c: usize| -> CostFn {
-            let base = self.clients[c].device.cost_fn();
-            match &self.dynamics.drift {
-                Some(d) => {
-                    let _ = slot;
-                    CostFn::Scaled { weight: d.scale(c), inner: Box::new(base) }
-                }
-                None => base,
-            }
-        };
-        let lower: Vec<usize> = uppers
-            .iter()
-            .map(|&u| self.cfg.min_tasks.min(u))
-            .collect();
-        // ΣL must not exceed T; relax lower limits if the config overshoots.
-        let sum_l: usize = lower.iter().sum();
-        let lower = if sum_l > t { vec![0; uppers.len()] } else { lower };
-        let costs = selected
-            .iter()
-            .enumerate()
-            .map(|(slot, &c)| drift_scale(slot, c))
-            .collect();
-        Ok((Instance::new(t, lower, uppers, costs)?, t))
+    /// The underlying coordinator (phase, devices, registry).
+    pub fn coordinator(&self) -> &Coordinator<FlBackend> {
+        &self.coord
     }
 
-    /// Execute one round; returns the logged row.
-    pub fn round(&mut self, round_idx: usize) -> Result<RoundLog> {
-        // 0. advance fleet dynamics.
-        if let Some(d) = self.dynamics.drift.as_mut() {
-            d.step(&mut self.rng);
-        }
-        let pool: Vec<usize> = match self.dynamics.availability.as_mut() {
-            Some(av) => av.step(&mut self.rng),
-            None => (0..self.clients.len()).collect(),
-        };
-        if pool.is_empty() {
-            // Nobody online: an empty round (no energy, model unchanged).
-            self.ledger.begin_round();
-            let eval_loss = self.evaluate()?;
-            let row = RoundLog {
-                round: round_idx,
-                policy: self.cfg.policy.to_string(),
-                loss: eval_loss,
-                energy_j: 0.0,
-                sched_time_s: 0.0,
-                train_time_s: 0.0,
-                participants: 0,
-                tasks: 0,
-            };
-            self.metrics.inc("empty_rounds", 1);
-            self.log.push(row.clone());
-            return Ok(row);
-        }
-
-        // 1. participant selection (FedAvg's client fraction C) from the
-        //    online pool.
-        let n = pool.len();
-        let k = ((self.clients.len() as f64 * self.cfg.participation).ceil() as usize)
-            .clamp(1, n);
-        let picks = self.rng.sample_indices(n, k);
-        let selected: Vec<usize> = picks.iter().map(|&i| pool[i]).collect();
-
-        // 2–3. schedule.
-        let (instance, t) = self.build_instance(&selected)?;
-        let timer = Timer::start();
-        let schedule = auto::solve_with(&instance, self.cfg.policy, &mut self.rng)?;
-        let sched_time_s = timer.elapsed_s();
-        validate::check(&instance, &schedule)?;
-        let predicted_j = validate::total_cost(&instance, &schedule);
-
-        // 4. local training on every device with x_i > 0.
-        self.ledger.begin_round();
-        let wall = Timer::start();
-        let mut updates = Vec::new();
-        let mut sim_time_s = 0.0f64;
-        let mut loss_sum = 0.0;
-        let mut loss_n = 0usize;
-        for (slot, &c) in selected.iter().enumerate() {
-            let tasks = schedule.get(slot);
-            if tasks == 0 {
-                continue;
-            }
-            // Mid-round dropout: the device burns energy for the fraction
-            // of work it completed, but its update is lost (paper §6's
-            // "loss of a device").
-            let failed_at = self
-                .dynamics
-                .dropout
-                .as_ref()
-                .and_then(|d| d.sample(&mut self.rng));
-            let drift = self
-                .dynamics
-                .drift
-                .as_ref()
-                .map(|d| d.scale(c))
-                .unwrap_or(1.0);
-            if let Some(frac) = failed_at {
-                let done = ((tasks as f64) * frac).floor() as usize;
-                let wasted = self.clients[c].device.power.energy_j(done) * drift;
-                self.ledger.record(self.clients[c].device.id, wasted);
-                self.metrics.inc("dropouts", 1);
-                continue;
-            }
-            let mut update = {
-                let client = &mut self.clients[c];
-                client.local_train(&self.runtime, &self.dataset, &self.global, tasks)?
-            };
-            update.energy_j *= drift;
-            self.ledger.record(update.device, update.energy_j);
-            sim_time_s = sim_time_s.max(update.sim_time_s); // devices run in parallel
-            loss_sum += update.mean_loss * update.tasks as f64;
-            loss_n += update.tasks;
-            updates.push((update.params.clone(), update.tasks as f64));
-        }
-        let train_time_s = wall.elapsed_s();
-
-        // 5. aggregate.
-        if !updates.is_empty() {
-            self.global = fedavg(&updates)?;
-        }
-
-        // 6. held-out evaluation.
-        let eval_loss = self.evaluate()?;
-
-        let row = RoundLog {
-            round: round_idx,
-            policy: self.cfg.policy.to_string(),
-            loss: eval_loss,
-            energy_j: self.ledger.rounds().last().copied().unwrap_or(0.0),
-            sched_time_s,
-            train_time_s,
-            participants: updates.len(),
-            tasks: t,
-        };
-        self.metrics.inc("rounds", 1);
-        self.metrics.inc("tasks", t as u64);
-        self.metrics.set("train_loss", if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 });
-        self.metrics.set("eval_loss", eval_loss);
-        self.metrics.set("sim_round_time_s", sim_time_s);
-        self.metrics.set("predicted_energy_j", predicted_j);
-        self.log.push(row.clone());
-        Ok(row)
+    /// Per-device / per-round energy ledger.
+    pub fn ledger(&self) -> &EnergyLedger {
+        self.coord.ledger()
     }
 
-    /// Held-out loss of the global model: mean over the frozen eval batches.
+    /// Counters and gauges collected across rounds.
+    pub fn metrics(&self) -> &MetricsHub {
+        self.coord.metrics()
+    }
+
+    /// Per-round training log.
+    pub fn log(&self) -> &TrainingLog {
+        self.coord.log()
+    }
+
+    /// Execute one round through the coordinator; returns the logged row.
+    pub fn round(&mut self) -> Result<RoundLog> {
+        self.coord.round()
+    }
+
+    /// Held-out loss of the global model: mean over the frozen eval
+    /// batches.
     pub fn evaluate(&mut self) -> Result<f64> {
-        let mut sum = 0.0f64;
-        for (x, y) in &self.eval_batches {
-            sum += self.runtime.eval_step(&self.global, x, y)? as f64;
-        }
-        Ok(sum / self.eval_batches.len() as f64)
+        self.coord.backend_mut().evaluate()
     }
 
     /// Run the full configured training; returns the log.
     pub fn run(&mut self) -> Result<&TrainingLog> {
-        for r in 0..self.cfg.rounds {
-            let row = self.round(r)?;
-            if let Some(target) = self.cfg.target_loss {
-                if row.loss <= target {
-                    log::info!("target loss {target} reached at round {r}");
-                    break;
-                }
-            }
-        }
-        Ok(&self.log)
+        self.coord.run()
     }
 
     /// Convenience: run training with a given policy, returning
@@ -327,8 +226,8 @@ impl Server {
         let mut server = Server::new(cfg, mix)?;
         server.run()?;
         Ok((
-            server.log.final_loss().unwrap_or(f64::NAN),
-            server.log.total_energy(),
+            server.log().final_loss().unwrap_or(f64::NAN),
+            server.log().total_energy(),
         ))
     }
 }

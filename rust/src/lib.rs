@@ -15,10 +15,18 @@
 //! ## Layout
 //!
 //! * [`sched`] — the paper's contribution: problem model, cost functions,
-//!   optimal schedulers, baselines.
+//!   optimal schedulers, baselines — all reachable through the
+//!   [`sched::solver::Solver`] trait and [`sched::solver::SolverRegistry`].
+//! * [`coordinator`] — the top layer: a state-machine coordinator
+//!   (Configuring → Scheduling → Training → Aggregating → Recosting) that
+//!   owns the multi-round loop, re-derives each round's instance from
+//!   evolving device profiles, warm-starts (MC)²MKP re-solves, and emits
+//!   per-round energy/cost metrics. Training plugs in via
+//!   [`coordinator::RoundBackend`].
 //! * [`energy`] — device power/energy/carbon models that synthesize the
 //!   cost functions consumed by the schedulers.
-//! * [`fl`] — federated-learning server, clients, aggregation, data.
+//! * [`fl`] — federated-learning server (a PJRT-backed coordinator
+//!   backend), clients, aggregation, data.
 //! * [`runtime`] — PJRT (XLA) execution of AOT-lowered training steps.
 //! * [`util`], [`config`], [`cli`], [`metrics`], [`benchkit`], [`testkit`]
 //!   — substrates (PRNG, stats, JSON/CSV/TOML, CLI, metrics, benching,
@@ -40,6 +48,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod coordinator;
 pub mod energy;
 pub mod error;
 pub mod fl;

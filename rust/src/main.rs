@@ -2,9 +2,11 @@
 //!
 //! Subcommands:
 //! * `schedule` — build a synthetic fleet instance and solve it with any
-//!   scheduler, printing the assignment and energy;
-//! * `train` — run federated training end-to-end on the AOT artifacts;
-//! * `fleet` — sample and describe a heterogeneous fleet.
+//!   registered solver, printing the assignment and energy;
+//! * `train` — run federated training end-to-end on the AOT artifacts
+//!   (the coordinator round loop over the PJRT backend);
+//! * `fleet` — sample and describe a heterogeneous fleet;
+//! * `solvers` — list every solver in the registry.
 
 use std::process::ExitCode;
 
@@ -14,7 +16,9 @@ use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::{BehaviorMix, Fleet};
 use fedzero::fl::Server;
 use fedzero::metrics::Timer;
-use fedzero::sched::{auto, validate};
+use fedzero::sched::auto::best_algorithm;
+use fedzero::sched::solver::{Solver, SolverRegistry};
+use fedzero::sched::validate;
 use fedzero::util::json::Json;
 use fedzero::util::rng::Rng;
 use fedzero::util::table::{fmt_duration, fmt_energy, Table};
@@ -37,6 +41,7 @@ fn run(args: &[String]) -> fedzero::Result<()> {
         "schedule" => cmd_schedule(&parsed),
         "train" => cmd_train(&parsed),
         "fleet" => cmd_fleet(&parsed),
+        "solvers" => cmd_solvers(),
         other => Err(fedzero::FedError::Config(format!("unhandled command {other}"))),
     }
 }
@@ -59,8 +64,12 @@ fn cmd_schedule(p: &cli::Parsed) -> fedzero::Result<()> {
     let tasks: usize = p.get_or("tasks", 256)?;
     let devices: usize = p.get_or("devices", 10)?;
     let seed: u64 = p.get_or("seed", 1)?;
-    let policy: Policy = p.req("algo")?.parse()?;
     let mix = parse_mix(p.req("regime")?)?;
+
+    // Resolving through the registry makes `--algo` errors list every
+    // valid solver name.
+    let registry = SolverRegistry::with_defaults(seed);
+    let solver = registry.resolve(p.req("algo")?)?;
 
     let mut rng = Rng::new(seed);
     let fleet = Fleet::sample(devices, mix, &mut rng);
@@ -68,7 +77,7 @@ fn cmd_schedule(p: &cli::Parsed) -> fedzero::Result<()> {
     let inst = fleet.instance(t, 0)?;
 
     let timer = Timer::start();
-    let sched = auto::solve_with(&inst, policy, &mut rng)?;
+    let sched = solver.solve_with_rng(&inst, &mut rng)?;
     let elapsed = timer.elapsed_s();
     let cost = validate::checked_cost(&inst, &sched)?;
 
@@ -79,7 +88,7 @@ fn cmd_schedule(p: &cli::Parsed) -> fedzero::Result<()> {
             .map(|&v| Json::Num(v as f64))
             .collect();
         let out = Json::obj(vec![
-            ("policy", Json::Str(policy.to_string())),
+            ("policy", Json::Str(solver.name().to_string())),
             ("tasks", Json::Num(t as f64)),
             ("energy_j", Json::Num(cost)),
             ("solve_time_s", Json::Num(elapsed)),
@@ -90,7 +99,7 @@ fn cmd_schedule(p: &cli::Parsed) -> fedzero::Result<()> {
     }
 
     let mut table = Table::new(
-        &format!("schedule — policy={policy} T={t} n={devices}"),
+        &format!("schedule — policy={} T={t} n={devices}", solver.name()),
         &["device", "archetype", "x_i", "U_i", "energy"],
     );
     for (i, d) in fleet.devices.iter().enumerate() {
@@ -117,7 +126,7 @@ fn cmd_train(p: &cli::Parsed) -> fedzero::Result<()> {
     cfg.devices = p.get_or("devices", cfg.devices)?;
     cfg.tasks_per_round = p.get_or("tasks", cfg.tasks_per_round)?;
     cfg.model = p.get("model").unwrap_or(&cfg.model).to_string();
-    cfg.policy = p.req("algo")?.parse()?;
+    cfg.policy = parse_algo(p.req("algo")?, cfg.seed)?;
     cfg.seed = p.get_or("seed", cfg.seed)?;
     cfg.artifacts_dir = p.get("artifacts").unwrap_or(&cfg.artifacts_dir).to_string();
     cfg.validate()?;
@@ -128,7 +137,7 @@ fn cmd_train(p: &cli::Parsed) -> fedzero::Result<()> {
     let mut server = Server::new(cfg, fedzero::fl::server::DEFAULT_MIX)?;
     println!("round,policy,loss,energy_j,sched_ms,train_s");
     for r in 0..rounds {
-        let row = server.round(r)?;
+        let row = server.round()?;
         println!(
             "{},{},{:.4},{:.2},{:.3},{:.2}",
             row.round,
@@ -147,13 +156,32 @@ fn cmd_train(p: &cli::Parsed) -> fedzero::Result<()> {
     }
     println!(
         "done: policy={policy}, total energy {}",
-        fmt_energy(server.ledger.total())
+        fmt_energy(server.ledger().total())
     );
     if let Some(path) = out {
-        server.log.to_csv().save(std::path::Path::new(&path))?;
+        server.log().to_csv().save(std::path::Path::new(&path))?;
         println!("log written to {path}");
     }
     Ok(())
+}
+
+/// Parse `--algo` through the registry, so unknown names fail with the
+/// full list of valid solvers, then narrow to a training policy.
+fn parse_algo(name: &str, seed: u64) -> fedzero::Result<Policy> {
+    let registry = SolverRegistry::with_defaults(seed);
+    let solver = registry.resolve(name)?;
+    solver.name().parse::<Policy>().map_err(|_| {
+        fedzero::FedError::Config(format!(
+            "solver '{}' cannot drive training (pick one of: {})",
+            solver.name(),
+            registry
+                .names()
+                .into_iter()
+                .filter(|n| n.parse::<Policy>().is_ok())
+                .collect::<Vec<_>>()
+                .join("|")
+        ))
+    })
 }
 
 fn cmd_fleet(p: &cli::Parsed) -> fedzero::Result<()> {
@@ -179,5 +207,36 @@ fn cmd_fleet(p: &cli::Parsed) -> fedzero::Result<()> {
     }
     table.print();
     println!("total capacity: {} mini-batches/round", fleet.capacity());
+    Ok(())
+}
+
+fn cmd_solvers() -> fedzero::Result<()> {
+    use fedzero::sched::auto::Scenario;
+    use fedzero::sched::costs::MarginalRegime;
+    let registry = SolverRegistry::with_defaults(0);
+    let scenarios: [(&str, Scenario); 5] = [
+        ("arb", Scenario { regime: MarginalRegime::Arbitrary, has_upper_limits: true }),
+        ("inc", Scenario { regime: MarginalRegime::Increasing, has_upper_limits: true }),
+        ("con", Scenario { regime: MarginalRegime::Constant, has_upper_limits: true }),
+        ("dec", Scenario { regime: MarginalRegime::Decreasing, has_upper_limits: true }),
+        ("dec∞", Scenario { regime: MarginalRegime::Decreasing, has_upper_limits: false }),
+    ];
+    let mut table = Table::new(
+        "registered solvers (✓ = provably optimal for the scenario)",
+        &["solver", "arb", "inc", "con", "dec", "dec∞"],
+    );
+    for name in registry.names() {
+        let s = registry.resolve(name)?;
+        let mut row = vec![name.to_string()];
+        for (_, sc) in &scenarios {
+            row.push(if s.is_optimal_for(sc) { "✓".into() } else { "·".into() });
+        }
+        table.rows_str(row);
+    }
+    table.print();
+    // Show what Table 2 dispatch would pick per scenario.
+    for (label, sc) in &scenarios {
+        println!("auto dispatch [{label}] → {}", best_algorithm(sc));
+    }
     Ok(())
 }

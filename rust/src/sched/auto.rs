@@ -9,14 +9,17 @@
 //! | constant marginal costs     | MarCo      | `Θ(n log n)`     |
 //! | decreasing, no upper limits | MarDecUn   | `Θ(n)`           |
 //! | decreasing, upper limits    | MarDec     | `O(T n²)`        |
+//!
+//! Dispatch itself lives behind the [`crate::sched::solver`] seam: this
+//! module classifies instances ([`classify_instance`]) and names the
+//! cheapest optimal algorithm ([`best_algorithm`]); the
+//! [`crate::sched::solver::SolverRegistry`] (or the registered `auto`
+//! solver) turns that name into a solve.
 
-use crate::config::Policy;
 use crate::error::Result;
 use crate::sched::costs::{classify, combine, MarginalRegime};
 use crate::sched::instance::{Instance, Schedule};
 use crate::sched::limits;
-use crate::sched::{baselines, marco, mardec, mardecun, marin, mc2mkp};
-use crate::util::rng::Rng;
 
 /// The scenario of an instance: its combined marginal regime plus whether
 /// any resource has an effective upper limit.
@@ -28,8 +31,8 @@ pub struct Scenario {
 
 /// Classify an instance. Classification samples every resource's domain, so
 /// it is `O(Σ(U_i - L_i))` — cheap next to any solver except MarDecUn/MarCo
-/// on huge domains; [`solve_auto`] therefore also accepts a caller-supplied
-/// scenario to skip re-classification in hot loops.
+/// on huge domains; callers in hot loops can classify once and reuse the
+/// scenario via [`best_algorithm`].
 pub fn classify_instance(inst: &Instance) -> Scenario {
     let tr = limits::remove_lower_limits(inst);
     let ti = &tr.instance;
@@ -42,61 +45,36 @@ pub fn classify_instance(inst: &Instance) -> Scenario {
     }
 }
 
-/// Pick the cheapest optimal algorithm for a scenario (Table 2).
-pub fn best_algorithm(s: &Scenario) -> Policy {
+/// Name of the cheapest optimal algorithm for a scenario (Table 2). The
+/// name resolves through the
+/// [`SolverRegistry`](crate::sched::solver::SolverRegistry).
+pub fn best_algorithm(s: &Scenario) -> &'static str {
     match (s.regime, s.has_upper_limits) {
-        (MarginalRegime::Constant, false) => Policy::MarDecUn, // Table 2: Θ(n)
-        (MarginalRegime::Constant, true) => Policy::MarCo,
-        (MarginalRegime::Increasing, _) => Policy::MarIn,
-        (MarginalRegime::Decreasing, false) => Policy::MarDecUn,
-        (MarginalRegime::Decreasing, true) => Policy::MarDec,
-        (MarginalRegime::Arbitrary, _) => Policy::Mc2mkp,
+        (MarginalRegime::Constant, false) => "mardecun", // Table 2: Θ(n)
+        (MarginalRegime::Constant, true) => "marco",
+        (MarginalRegime::Increasing, _) => "marin",
+        (MarginalRegime::Decreasing, false) => "mardecun",
+        (MarginalRegime::Decreasing, true) => "mardec",
+        (MarginalRegime::Arbitrary, _) => "mc2mkp",
     }
 }
 
-/// Classify + dispatch (the `auto` policy).
+/// Classify + dispatch (the `auto` policy) as a plain function — usable as
+/// a `fn(&Instance) -> Result<Schedule>` pointer. Identical to solving
+/// through the registry's `auto` entry.
 pub fn solve_auto(inst: &Instance) -> Result<Schedule> {
-    let scenario = classify_instance(inst);
-    solve_with(inst, best_algorithm(&scenario), &mut Rng::new(0))
+    crate::sched::solver::AutoSolver.solve(inst)
 }
 
-/// Run a specific policy on an instance. `rng` is only used by
-/// [`Policy::Random`].
-pub fn solve_with(inst: &Instance, policy: Policy, rng: &mut Rng) -> Result<Schedule> {
-    match policy {
-        Policy::Auto => solve_auto(inst),
-        Policy::Mc2mkp => mc2mkp::solve(inst),
-        Policy::MarIn => marin::solve(inst),
-        Policy::MarCo => marco::solve(inst),
-        Policy::MarDecUn => mardecun::solve(inst),
-        Policy::MarDec => mardec::solve(inst),
-        Policy::Uniform => baselines::uniform(inst),
-        Policy::Random => baselines::random(inst, rng),
-        Policy::Proportional => baselines::proportional(inst),
-        Policy::Greedy => baselines::greedy_cost(inst),
-        Policy::Olar => baselines::olar(inst),
-    }
-}
-
-/// True when the policy is one of the paper's optimal algorithms (vs a
-/// baseline heuristic).
-pub fn is_optimal_policy(policy: Policy) -> bool {
-    matches!(
-        policy,
-        Policy::Auto
-            | Policy::Mc2mkp
-            | Policy::MarIn
-            | Policy::MarCo
-            | Policy::MarDecUn
-            | Policy::MarDec
-    )
-}
+// Re-exported so `use crate::sched::auto::...` call sites keep compiling
+// while the trait lives in `solver`.
+pub use crate::sched::solver::Solver;
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sched::costs::CostFn;
-    use crate::sched::validate;
+    use crate::sched::{mc2mkp, validate};
 
     fn instance_with(costs: Vec<CostFn>, t: usize, upper: Vec<usize>) -> Instance {
         let n = costs.len();
@@ -111,7 +89,7 @@ mod tests {
         // binds in the transformed space — but the arbitrary regime routes
         // to the DP regardless.
         assert!(!s.has_upper_limits);
-        assert_eq!(best_algorithm(&s), Policy::Mc2mkp);
+        assert_eq!(best_algorithm(&s), "mc2mkp");
         // With T = 8 the limits do bind.
         let s8 = classify_instance(&Instance::paper_example(8));
         assert!(s8.has_upper_limits);
@@ -124,7 +102,7 @@ mod tests {
         let s = classify_instance(&inst);
         assert_eq!(s.regime, MarginalRegime::Constant);
         assert!(s.has_upper_limits);
-        assert_eq!(best_algorithm(&s), Policy::MarCo);
+        assert_eq!(best_algorithm(&s), "marco");
     }
 
     #[test]
@@ -132,7 +110,7 @@ mod tests {
         let c = CostFn::Affine { fixed: 0.0, per_task: 2.0 };
         let inst = instance_with(vec![c.clone(), c], 10, vec![20, 20]);
         let s = classify_instance(&inst);
-        assert_eq!(best_algorithm(&s), Policy::MarDecUn);
+        assert_eq!(best_algorithm(&s), "mardecun");
         // and it is exact: all tasks on either resource cost the same
         let x = solve_auto(&inst).unwrap();
         validate::check(&inst, &x).unwrap();
@@ -143,7 +121,7 @@ mod tests {
         let c = CostFn::Quadratic { fixed: 0.0, a: 1.0, b: 0.0 };
         let inst = instance_with(vec![c.clone(), c], 10, vec![10, 10]);
         assert_eq!(classify_instance(&inst).regime, MarginalRegime::Increasing);
-        assert_eq!(best_algorithm(&classify_instance(&inst)), Policy::MarIn);
+        assert_eq!(best_algorithm(&classify_instance(&inst)), "marin");
     }
 
     #[test]
@@ -151,8 +129,8 @@ mod tests {
         let c = CostFn::PowerLaw { fixed: 0.0, scale: 1.0, exponent: 0.5 };
         let unl = instance_with(vec![c.clone(), c.clone()], 10, vec![30, 30]);
         let lim = instance_with(vec![c.clone(), c], 10, vec![6, 6]);
-        assert_eq!(best_algorithm(&classify_instance(&unl)), Policy::MarDecUn);
-        assert_eq!(best_algorithm(&classify_instance(&lim)), Policy::MarDec);
+        assert_eq!(best_algorithm(&classify_instance(&unl)), "mardecun");
+        assert_eq!(best_algorithm(&classify_instance(&lim)), "mardec");
     }
 
     #[test]
@@ -160,7 +138,7 @@ mod tests {
         let inc = CostFn::Quadratic { fixed: 0.0, a: 1.0, b: 0.0 };
         let dec = CostFn::PowerLaw { fixed: 0.0, scale: 1.0, exponent: 0.5 };
         let inst = instance_with(vec![inc, dec], 10, vec![10, 10]);
-        assert_eq!(best_algorithm(&classify_instance(&inst)), Policy::Mc2mkp);
+        assert_eq!(best_algorithm(&classify_instance(&inst)), "mc2mkp");
     }
 
     #[test]
@@ -199,13 +177,5 @@ mod tests {
                 validate::checked_cost(&inst, &mc2mkp::solve(&inst).unwrap()).unwrap();
             assert!((a - d).abs() < 1e-9, "auto {a} != dp {d}");
         }
-    }
-
-    #[test]
-    fn optimal_policy_predicate() {
-        assert!(is_optimal_policy(Policy::MarIn));
-        assert!(is_optimal_policy(Policy::Mc2mkp));
-        assert!(!is_optimal_policy(Policy::Uniform));
-        assert!(!is_optimal_policy(Policy::Olar));
     }
 }

@@ -64,8 +64,21 @@ impl Instance {
                 )));
             }
         }
-        let sum_l: usize = self.lower.iter().sum();
-        let sum_u: usize = self.upper.iter().map(|&u| u.min(self.tasks)).sum();
+        // Overflow-safe bound sums: "unlimited" resources are routinely
+        // encoded as `U_i = usize::MAX`, so clamp each term to `T` first
+        // (an assignment can never exceed the workload) and saturate the
+        // fold. Saturation keeps both comparisons conservative: a saturated
+        // ΣL is still `> T`, and a saturated ΣU is still `>= T`. Lower
+        // limits are NOT clamped — a single `L_i > T` must keep the whole
+        // sum above `T` (the instance is genuinely infeasible).
+        let sum_l: usize = self
+            .lower
+            .iter()
+            .fold(0usize, |acc, &l| acc.saturating_add(l));
+        let sum_u: usize = self
+            .upper
+            .iter()
+            .fold(0usize, |acc, &u| acc.saturating_add(u.min(self.tasks)));
         if sum_l > self.tasks {
             return Err(FedError::InvalidInstance(format!(
                 "ΣL = {sum_l} > T = {}",
@@ -239,6 +252,31 @@ mod tests {
         .is_err());
         // no resources
         assert!(Instance::new(1, vec![], vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn huge_limits_do_not_overflow_validation() {
+        // Unlimited resources encoded as usize::MAX must not overflow the
+        // ΣU fold; the instance is perfectly valid.
+        let c = CostFn::Affine { fixed: 0.0, per_task: 1.0 };
+        let inst = Instance::new(
+            10,
+            vec![0, 0, 0],
+            vec![usize::MAX, usize::MAX, usize::MAX],
+            vec![c.clone(), c.clone(), c.clone()],
+        )
+        .unwrap();
+        assert!(inst.unlimited(0));
+        assert_eq!(inst.cap(0), 10);
+        // A single huge lower limit must be rejected (ΣL saturates, which
+        // still compares > T) rather than wrapping around to "feasible".
+        assert!(Instance::new(
+            10,
+            vec![usize::MAX, usize::MAX],
+            vec![usize::MAX, usize::MAX],
+            vec![c.clone(), c],
+        )
+        .is_err());
     }
 
     #[test]

@@ -136,8 +136,23 @@ pub fn dp(classes: &Classes, cap: usize) -> DpMatrices {
     let mut k = vec![f64::INFINITY; (n + 1) * width];
     let mut item = vec![NO_ITEM; (n + 1) * width];
     k[0] = 0.0; // Z_0(0) = 0
+    fill_rows(&mut k, &mut item, classes, cap, 0);
+    DpMatrices { n, cap, k, item }
+}
 
-    for (r, class) in classes.classes.iter().enumerate() {
+/// Fill DP rows `from_class+1..=n` (row `r+1` is derived from class `r`),
+/// assuming rows `0..=from_class` already hold valid `Z` values. Shared by
+/// the cold [`dp`] (`from_class = 0`) and the warm-start
+/// [`DpMatrices::resume`].
+fn fill_rows(
+    k: &mut [f64],
+    item: &mut [u32],
+    classes: &Classes,
+    cap: usize,
+    from_class: usize,
+) {
+    let width = cap + 1;
+    for (r, class) in classes.classes.iter().enumerate().skip(from_class) {
         let (prev_rows, cur_rows) = k.split_at_mut((r + 1) * width);
         let prev = &prev_rows[r * width..(r + 1) * width];
         let cur = &mut cur_rows[..width];
@@ -158,7 +173,131 @@ pub fn dp(classes: &Classes, cap: usize) -> DpMatrices {
             cur_items[t] = best_j;
         }
     }
-    DpMatrices { n, cap, k, item }
+}
+
+impl DpMatrices {
+    /// Warm-start: recompute only the rows invalidated by a change to
+    /// classes `first_changed..` (rows `0..=first_changed` depend solely on
+    /// classes `0..first_changed` and stay valid). `classes` must have the
+    /// same class count and the same capacity as the original computation;
+    /// the result is bit-for-bit identical to a cold [`dp`] on `classes`
+    /// because the per-row arithmetic is the same code in the same order.
+    pub fn resume(&mut self, classes: &Classes, first_changed: usize) {
+        debug_assert_eq!(classes.classes.len(), self.n);
+        fill_rows(&mut self.k, &mut self.item, classes, self.cap, first_changed);
+    }
+}
+
+/// Incremental (MC)²MKP solver for the coordinator's round loop: when only
+/// a *suffix* of the fleet's cost tables changed between rounds (battery
+/// drain or drift touching the later devices, earlier devices stable), the
+/// DP rows covering the unchanged prefix are reused instead of recomputed
+/// — Algorithm 1's `O(T² n)` drops to `O(T² · changed)`.
+///
+/// Results are **bit-for-bit identical** to [`solve`]: the warm path runs
+/// the exact same row-filling code on the exact same inputs, merely
+/// skipping rows whose inputs are unchanged.
+#[derive(Default)]
+pub struct WarmMc2mkp {
+    cache: Option<WarmState>,
+}
+
+struct WarmState {
+    classes: Classes,
+    matrices: DpMatrices,
+}
+
+/// What the warm solver did for one solve (observability for the
+/// coordinator's metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WarmInfo {
+    /// DP rows reused from the previous round (0 on a cold solve).
+    pub reused_rows: usize,
+    /// Total DP rows for this instance (`n`).
+    pub total_rows: usize,
+}
+
+impl WarmMc2mkp {
+    /// Empty cache: the first solve is always cold.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop the cache (e.g. when the fleet line-up changes).
+    pub fn invalidate(&mut self) {
+        self.cache = None;
+    }
+
+    /// Solve optimally, reusing cached DP rows where the transformed item
+    /// classes match the previous solve's prefix.
+    pub fn solve(&mut self, inst: &Instance) -> Result<(Schedule, WarmInfo)> {
+        inst.validate()?;
+        let tr = limits::remove_lower_limits(inst);
+        let t_prime = tr.instance.tasks;
+        let classes = classes_from_instance(&tr.instance);
+        let n = classes.classes.len();
+
+        // The fresh `classes` moves into the cache either way — no per-round
+        // copy, which matters on the steady-state rounds where `resume`
+        // does zero row work.
+        let reused = match self.cache.as_mut() {
+            Some(state)
+                if state.matrices.cap == t_prime
+                    && state.classes.classes.len() == n =>
+            {
+                // Longest unchanged class prefix = number of reusable rows.
+                let prefix = state
+                    .classes
+                    .classes
+                    .iter()
+                    .zip(&classes.classes)
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                state.matrices.resume(&classes, prefix);
+                state.classes = classes;
+                prefix
+            }
+            _ => {
+                self.cache = Some(WarmState {
+                    matrices: dp(&classes, t_prime),
+                    classes,
+                });
+                0
+            }
+        };
+
+        let state = self.cache.as_ref().unwrap();
+        let schedule =
+            extract_schedule(&state.matrices, &state.classes, &tr, t_prime)?;
+        Ok((schedule, WarmInfo { reused_rows: reused, total_rows: n }))
+    }
+}
+
+/// Shared solve tail: select the maximal packing, require a full packing
+/// (valid scheduling instances always admit one, §4.1.1), backtrack, and
+/// map back through the lower-limit transformation. Used by both the cold
+/// [`solve`] and [`WarmMc2mkp`], so the two paths cannot drift apart.
+fn extract_schedule(
+    m: &DpMatrices,
+    classes: &Classes,
+    tr: &limits::Transformed,
+    t_prime: usize,
+) -> Result<Schedule> {
+    let (t_star, _) = m
+        .best_capacity(t_prime)
+        .ok_or_else(|| FedError::Infeasible("no feasible packing".into()))?;
+    if t_star != t_prime {
+        return Err(FedError::Infeasible(format!(
+            "maximal packing {t_star} < T' = {t_prime} on a valid instance"
+        )));
+    }
+    let chosen = m.backtrack(classes, t_star)?;
+    let x: Vec<usize> = chosen
+        .iter()
+        .enumerate()
+        .map(|(i, &ji)| classes.classes[i][ji].weight)
+        .collect();
+    Ok(tr.restore(&Schedule::new(x)))
 }
 
 /// Solution of the knapsack problem itself.
@@ -209,21 +348,8 @@ pub fn solve(inst: &Instance) -> Result<Schedule> {
     // chosen item index *is* the assignment — no Item materialization in
     // the backtrack.
     let classes = classes_from_instance(ti);
-    let sol = solve_classes(&classes, ti.tasks)?;
-    // Valid scheduling instances always admit a full packing (§4.1.1).
-    if sol.used_capacity != ti.tasks {
-        return Err(FedError::Infeasible(format!(
-            "maximal packing {} < T' = {} on a valid instance",
-            sol.used_capacity, ti.tasks
-        )));
-    }
-    let x: Vec<usize> = sol
-        .chosen
-        .iter()
-        .enumerate()
-        .map(|(i, &ji)| classes.classes[i][ji].weight)
-        .collect();
-    Ok(tr.restore(&Schedule::new(x)))
+    let m = dp(&classes, ti.tasks);
+    extract_schedule(&m, &classes, &tr, ti.tasks)
 }
 
 #[cfg(test)]
@@ -342,6 +468,61 @@ mod tests {
         .unwrap();
         let s = solve(&inst).unwrap();
         assert_eq!(s.assignments(), &[0, 0]);
+    }
+
+    #[test]
+    fn warm_first_solve_is_cold_and_matches() {
+        let inst = Instance::paper_example(5);
+        let mut warm = WarmMc2mkp::new();
+        let (s, info) = warm.solve(&inst).unwrap();
+        assert_eq!(s, solve(&inst).unwrap());
+        assert_eq!(info.reused_rows, 0);
+        assert_eq!(info.total_rows, 3);
+    }
+
+    #[test]
+    fn warm_resolve_with_unchanged_costs_reuses_all_rows() {
+        let inst = Instance::paper_example(5);
+        let mut warm = WarmMc2mkp::new();
+        warm.solve(&inst).unwrap();
+        let (s, info) = warm.solve(&inst).unwrap();
+        assert_eq!(s, solve(&inst).unwrap());
+        assert_eq!(info.reused_rows, 3);
+    }
+
+    #[test]
+    fn warm_suffix_change_reuses_prefix_and_matches_cold_exactly() {
+        use crate::sched::costs::CostFn;
+        let base = Instance::paper_example(5);
+        let mut warm = WarmMc2mkp::new();
+        warm.solve(&base).unwrap();
+
+        // Change only the LAST resource's cost table (a drifted device).
+        let mut drifted = base.clone();
+        drifted.costs[2] =
+            CostFn::Scaled { weight: 1.5, inner: Box::new(base.costs[2].clone()) };
+        let (s, info) = warm.solve(&drifted).unwrap();
+        assert_eq!(info.reused_rows, 2, "prefix rows for resources 0,1");
+        let cold = solve(&drifted).unwrap();
+        assert_eq!(s, cold, "warm and cold schedules must be identical");
+        // And the costs are bit-for-bit equal, not merely within tolerance.
+        assert_eq!(
+            validate::checked_cost(&drifted, &s).unwrap(),
+            validate::checked_cost(&drifted, &cold).unwrap()
+        );
+    }
+
+    #[test]
+    fn warm_cache_invalidated_by_shape_change() {
+        let mut warm = WarmMc2mkp::new();
+        warm.solve(&Instance::paper_example(5)).unwrap();
+        // Different T → different capacity → cold solve.
+        let (s8, info) = warm.solve(&Instance::paper_example(8)).unwrap();
+        assert_eq!(info.reused_rows, 0);
+        assert_eq!(s8.assignments(), &[1, 2, 5]);
+        warm.invalidate();
+        let (_, info2) = warm.solve(&Instance::paper_example(8)).unwrap();
+        assert_eq!(info2.reused_rows, 0);
     }
 
     #[test]

@@ -11,14 +11,18 @@
 //!   (paper §5.5).
 //! * [`mardec`] — Algorithms 5–7: decreasing marginal costs with upper
 //!   limits (paper §5.6).
-//! * [`auto`] — Table 2 dispatch: classify the instance, run the cheapest
-//!   optimal algorithm.
+//! * [`auto`] — Table 2 classification: scenario of an instance and the
+//!   name of the cheapest optimal algorithm for it.
+//! * [`solver`] — the [`solver::Solver`] trait and
+//!   [`solver::SolverRegistry`]: the single dispatch seam through which
+//!   every algorithm (optimal, oracle, baseline) is reached.
 //! * [`baselines`] — non-optimal comparison policies (uniform, random,
 //!   proportional, greedy) and OLAR (makespan-optimal, [26]).
 //! * [`bruteforce`] — exhaustive oracle used by the test-suite.
 //! * [`validate`] — feasibility checks and total-cost evaluation.
 
 pub mod auto;
+pub mod solver;
 pub mod baselines;
 pub mod bruteforce;
 pub mod costs;
@@ -33,3 +37,4 @@ pub mod mc2mkp;
 pub mod validate;
 
 pub use instance::{Instance, Schedule};
+pub use solver::{Solver, SolverRegistry};

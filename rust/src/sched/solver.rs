@@ -1,0 +1,394 @@
+//! The `Solver` trait and `SolverRegistry`: every scheduler in the crate —
+//! the paper's seven optimal algorithms (Algorithms 1–7: the (MC)²MKP DP,
+//! MarIn, MarCo, MarDecUn, and the three MarDec procedures behind
+//! [`mardec::solve`]) plus the five baselines and the brute-force oracle —
+//! is reachable through one seam.
+//!
+//! The registry replaces the old `Policy`-enum `match` dispatch: callers
+//! resolve a solver by name (`registry.resolve("mardec")`), ask the
+//! Table 2 question (`solver.is_optimal_for(&scenario)`), or let the
+//! `auto` solver classify-and-dispatch. New solvers (and external
+//! backends) register without touching any call site.
+
+use std::cell::RefCell;
+
+use crate::error::{FedError, Result};
+use crate::sched::auto::{best_algorithm, classify_instance, Scenario};
+use crate::sched::costs::MarginalRegime;
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::{baselines, bruteforce, marco, mardec, mardecun, marin, mc2mkp};
+use crate::util::rng::Rng;
+
+/// A scheduling algorithm for the Minimal Cost FL Schedule problem.
+pub trait Solver {
+    /// Stable lower-case identifier (what `--algo` accepts).
+    fn name(&self) -> &'static str;
+
+    /// Solve an instance.
+    fn solve(&self, inst: &Instance) -> Result<Schedule>;
+
+    /// Whether this solver is *provably optimal* for the given scenario
+    /// (the paper's Table 2 applicability column). Baselines return
+    /// `false` everywhere.
+    fn is_optimal_for(&self, _scenario: &Scenario) -> bool {
+        false
+    }
+
+    /// Solve threading an external RNG. Deterministic solvers ignore it;
+    /// the `random` baseline consumes it (so coordinator runs replay
+    /// bit-for-bit from one seed).
+    fn solve_with_rng(&self, inst: &Instance, _rng: &mut Rng) -> Result<Schedule> {
+        self.solve(inst)
+    }
+}
+
+macro_rules! fn_solver {
+    ($ty:ident, $name:literal, $solve:path, optimal: |$s:ident| $opt:expr) => {
+        /// Registry adapter for the identically-named module solver.
+        pub struct $ty;
+
+        impl Solver for $ty {
+            fn name(&self) -> &'static str {
+                $name
+            }
+            fn solve(&self, inst: &Instance) -> Result<Schedule> {
+                $solve(inst)
+            }
+            fn is_optimal_for(&self, $s: &Scenario) -> bool {
+                $opt
+            }
+        }
+    };
+}
+
+fn_solver!(Mc2mkpSolver, "mc2mkp", mc2mkp::solve, optimal: |_s| true);
+fn_solver!(MarInSolver, "marin", marin::solve, optimal: |s| matches!(
+    s.regime,
+    MarginalRegime::Increasing | MarginalRegime::Constant
+));
+fn_solver!(MarCoSolver, "marco", marco::solve, optimal: |s| matches!(
+    s.regime,
+    MarginalRegime::Constant
+));
+fn_solver!(MarDecUnSolver, "mardecun", mardecun::solve, optimal: |s| {
+    !s.has_upper_limits
+        && matches!(
+            s.regime,
+            MarginalRegime::Decreasing | MarginalRegime::Constant
+        )
+});
+fn_solver!(MarDecSolver, "mardec", mardec::solve, optimal: |s| matches!(
+    s.regime,
+    MarginalRegime::Decreasing | MarginalRegime::Constant
+));
+fn_solver!(BruteforceSolver, "bruteforce", bruteforce::solve, optimal: |_s| true);
+fn_solver!(UniformSolver, "uniform", baselines::uniform, optimal: |_s| false);
+fn_solver!(ProportionalSolver, "proportional", baselines::proportional,
+    optimal: |_s| false);
+fn_solver!(GreedySolver, "greedy", baselines::greedy_cost, optimal: |_s| false);
+fn_solver!(OlarSolver, "olar", baselines::olar, optimal: |_s| false);
+
+/// The Table 2 dispatcher: classify the instance, run the cheapest optimal
+/// algorithm for its scenario.
+pub struct AutoSolver;
+
+impl AutoSolver {
+    /// Dispatch to the *built-in* implementation of a Table 2 algorithm.
+    /// `AutoSolver` is registry-independent by design (it can be used
+    /// standalone), so registry shadowing of a concrete solver does not
+    /// reach this path; the coordinator resolves `auto` to its concrete
+    /// Table 2 name first and dispatches that through its registry, which
+    /// does honor overrides.
+    fn dispatch(name: &str, inst: &Instance) -> Result<Schedule> {
+        match name {
+            "mc2mkp" => mc2mkp::solve(inst),
+            "marin" => marin::solve(inst),
+            "marco" => marco::solve(inst),
+            "mardecun" => mardecun::solve(inst),
+            "mardec" => mardec::solve(inst),
+            other => Err(FedError::Config(format!(
+                "auto dispatched to unknown solver '{other}'"
+            ))),
+        }
+    }
+}
+
+impl Solver for AutoSolver {
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+    fn solve(&self, inst: &Instance) -> Result<Schedule> {
+        let scenario = classify_instance(inst);
+        Self::dispatch(best_algorithm(&scenario), inst)
+    }
+    fn is_optimal_for(&self, _scenario: &Scenario) -> bool {
+        true
+    }
+}
+
+/// The seeded `random` baseline. `solve` draws from an interior RNG (so the
+/// registry's plain entry points stay usable); `solve_with_rng` consumes
+/// the caller's stream instead, which is what the coordinator uses for
+/// reproducible rounds.
+pub struct RandomSolver {
+    rng: RefCell<Rng>,
+}
+
+impl RandomSolver {
+    /// Seeded random baseline.
+    pub fn new(seed: u64) -> Self {
+        Self { rng: RefCell::new(Rng::new(seed)) }
+    }
+}
+
+impl Solver for RandomSolver {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+    fn solve(&self, inst: &Instance) -> Result<Schedule> {
+        baselines::random(inst, &mut self.rng.borrow_mut())
+    }
+    fn solve_with_rng(&self, inst: &Instance, rng: &mut Rng) -> Result<Schedule> {
+        baselines::random(inst, rng)
+    }
+}
+
+/// Name aliases accepted by [`SolverRegistry::resolve`].
+const ALIASES: [(&str, &str); 1] = [("dp", "mc2mkp")];
+
+/// Registry of all available solvers, keyed by [`Solver::name`].
+pub struct SolverRegistry {
+    solvers: Vec<Box<dyn Solver>>,
+    /// How many entries were installed by [`SolverRegistry::with_defaults`];
+    /// anything at or past this index is a caller registration (possibly
+    /// shadowing a default — see [`SolverRegistry::is_overridden`]).
+    default_count: usize,
+}
+
+impl SolverRegistry {
+    /// Empty registry (for fully custom line-ups).
+    pub fn empty() -> Self {
+        Self { solvers: Vec::new(), default_count: 0 }
+    }
+
+    /// Registry with the paper's algorithms, the brute-force oracle, and
+    /// all baselines. `seed` feeds the `random` baseline's interior RNG.
+    pub fn with_defaults(seed: u64) -> Self {
+        let mut r = Self::empty();
+        r.register(Box::new(AutoSolver));
+        r.register(Box::new(Mc2mkpSolver));
+        r.register(Box::new(MarInSolver));
+        r.register(Box::new(MarCoSolver));
+        r.register(Box::new(MarDecUnSolver));
+        r.register(Box::new(MarDecSolver));
+        r.register(Box::new(BruteforceSolver));
+        r.register(Box::new(UniformSolver));
+        r.register(Box::new(RandomSolver::new(seed)));
+        r.register(Box::new(ProportionalSolver));
+        r.register(Box::new(GreedySolver));
+        r.register(Box::new(OlarSolver));
+        r.default_count = r.solvers.len();
+        r
+    }
+
+    /// Register a solver. A later registration with the same name shadows
+    /// the earlier one (lookup scans back-to-front), so callers can
+    /// override defaults.
+    pub fn register(&mut self, solver: Box<dyn Solver>) {
+        self.solvers.push(solver);
+    }
+
+    fn find_index(&self, name: &str) -> Option<usize> {
+        let canonical = ALIASES
+            .iter()
+            .find(|(a, _)| *a == name)
+            .map(|(_, c)| *c)
+            .unwrap_or(name);
+        self.solvers.iter().rposition(|s| s.name() == canonical)
+    }
+
+    /// Look up a solver by exact name or alias.
+    pub fn get(&self, name: &str) -> Option<&dyn Solver> {
+        self.find_index(name).map(|i| self.solvers[i].as_ref())
+    }
+
+    /// True when `name` currently resolves to a caller-registered solver
+    /// rather than the built-in default — i.e. a default was shadowed, or
+    /// the registry never had defaults. Callers with solver-specific fast
+    /// paths (the coordinator's warm DP) use this to stand down when the
+    /// name no longer means the implementation they optimize.
+    pub fn is_overridden(&self, name: &str) -> bool {
+        self.find_index(name)
+            .map_or(false, |i| i >= self.default_count)
+    }
+
+    /// Registered solver names, registration order, shadowed names once.
+    pub fn names(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::with_capacity(self.solvers.len());
+        for s in &self.solvers {
+            if !out.contains(&s.name()) {
+                out.push(s.name());
+            }
+        }
+        out
+    }
+
+    /// Resolve a name or fail with a message listing every valid solver —
+    /// the single source of truth for `--algo` errors.
+    pub fn resolve(&self, name: &str) -> Result<&dyn Solver> {
+        self.get(name).ok_or_else(|| {
+            FedError::Config(format!(
+                "unknown solver '{name}' (valid: {})",
+                self.names().join("|")
+            ))
+        })
+    }
+
+    /// Resolve + solve.
+    pub fn solve(&self, name: &str, inst: &Instance) -> Result<Schedule> {
+        self.resolve(name)?.solve(inst)
+    }
+
+    /// Resolve + solve threading the caller's RNG (reproducible `random`).
+    pub fn solve_seeded(
+        &self,
+        name: &str,
+        inst: &Instance,
+        rng: &mut Rng,
+    ) -> Result<Schedule> {
+        self.resolve(name)?.solve_with_rng(inst, rng)
+    }
+
+    /// Solvers that are provably optimal for `scenario`.
+    pub fn optimal_for(&self, scenario: &Scenario) -> Vec<&dyn Solver> {
+        let names = self.names();
+        names
+            .into_iter()
+            .filter_map(|n| self.get(n))
+            .filter(|s| s.is_optimal_for(scenario))
+            .collect()
+    }
+}
+
+impl Default for SolverRegistry {
+    fn default() -> Self {
+        Self::with_defaults(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::validate;
+
+    #[test]
+    fn defaults_cover_all_twelve_solvers() {
+        let r = SolverRegistry::with_defaults(1);
+        let names = r.names();
+        for expect in [
+            "auto", "mc2mkp", "marin", "marco", "mardecun", "mardec",
+            "bruteforce", "uniform", "random", "proportional", "greedy",
+            "olar",
+        ] {
+            assert!(names.contains(&expect), "missing {expect}");
+        }
+        assert_eq!(names.len(), 12);
+    }
+
+    #[test]
+    fn alias_dp_resolves_to_mc2mkp() {
+        let r = SolverRegistry::with_defaults(1);
+        assert_eq!(r.resolve("dp").unwrap().name(), "mc2mkp");
+    }
+
+    #[test]
+    fn unknown_name_lists_valid_solvers() {
+        let r = SolverRegistry::with_defaults(1);
+        let err = r.resolve("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"));
+        assert!(err.contains("mc2mkp") && err.contains("olar"), "{err}");
+    }
+
+    #[test]
+    fn every_solver_is_feasible_on_the_paper_example() {
+        let r = SolverRegistry::with_defaults(7);
+        let inst = Instance::paper_example(8);
+        let mut rng = Rng::new(3);
+        for name in r.names() {
+            let s = r.solve_seeded(name, &inst, &mut rng).unwrap();
+            validate::check(&inst, &s)
+                .unwrap_or_else(|e| panic!("{name} infeasible: {e}"));
+        }
+    }
+
+    #[test]
+    fn optimal_solvers_hit_the_fig1_optimum() {
+        let r = SolverRegistry::with_defaults(7);
+        let inst = Instance::paper_example(5);
+        for name in ["auto", "mc2mkp", "bruteforce", "dp"] {
+            let s = r.solve(name, &inst).unwrap();
+            let c = validate::checked_cost(&inst, &s).unwrap();
+            assert!((c - 7.5).abs() < 1e-9, "{name}: {c}");
+        }
+    }
+
+    #[test]
+    fn is_optimal_for_matches_table2() {
+        let r = SolverRegistry::with_defaults(1);
+        let dec_lim = Scenario {
+            regime: MarginalRegime::Decreasing,
+            has_upper_limits: true,
+        };
+        assert!(r.get("mc2mkp").unwrap().is_optimal_for(&dec_lim));
+        assert!(r.get("mardec").unwrap().is_optimal_for(&dec_lim));
+        assert!(!r.get("mardecun").unwrap().is_optimal_for(&dec_lim));
+        assert!(!r.get("marin").unwrap().is_optimal_for(&dec_lim));
+        assert!(!r.get("uniform").unwrap().is_optimal_for(&dec_lim));
+
+        let con_unl = Scenario {
+            regime: MarginalRegime::Constant,
+            has_upper_limits: false,
+        };
+        let optimal: Vec<&str> =
+            r.optimal_for(&con_unl).iter().map(|s| s.name()).collect();
+        assert!(optimal.contains(&"marco") && optimal.contains(&"mardecun"));
+        assert!(!optimal.contains(&"greedy"));
+    }
+
+    #[test]
+    fn random_threads_external_rng_deterministically() {
+        let r = SolverRegistry::with_defaults(1);
+        let inst = Instance::paper_example(8);
+        let a = r
+            .solve_seeded("random", &inst, &mut Rng::new(9))
+            .unwrap();
+        let b = r
+            .solve_seeded("random", &inst, &mut Rng::new(9))
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn registration_shadows_by_name() {
+        struct Fake;
+        impl Solver for Fake {
+            fn name(&self) -> &'static str {
+                "uniform"
+            }
+            fn solve(&self, inst: &Instance) -> Result<Schedule> {
+                bruteforce::solve(inst)
+            }
+        }
+        let mut r = SolverRegistry::with_defaults(1);
+        r.register(Box::new(Fake));
+        let inst = Instance::paper_example(5);
+        let c = validate::checked_cost(&inst, &r.solve("uniform", &inst).unwrap())
+            .unwrap();
+        assert!((c - 7.5).abs() < 1e-9, "shadowed uniform should be optimal");
+        assert_eq!(r.names().len(), 12, "names() must dedupe shadowed entries");
+        assert!(r.is_overridden("uniform"));
+        assert!(!r.is_overridden("mc2mkp"));
+        assert!(!r.is_overridden("dp"), "alias follows its target");
+        assert!(!r.is_overridden("no-such-solver"));
+    }
+}

@@ -1,0 +1,246 @@
+//! Integration tests for the coordinator round loop: multi-round runs over
+//! the simulation backend (no PJRT artifacts needed), feasibility and
+//! energy invariants, the §3.1 worked example through the full state
+//! machine, and warm-start-vs-cold-solve equivalence.
+
+use fedzero::coordinator::{
+    Coordinator, CoordinatorConfig, ManagedDevice, Phase, SimBackend,
+};
+use fedzero::fl::dynamics::{Availability, CostDrift, Dropout, DynamicsConfig};
+use fedzero::sched::costs::CostFn;
+use fedzero::sched::instance::Instance;
+use fedzero::sched::mc2mkp::{self, WarmMc2mkp};
+use fedzero::sched::validate;
+use fedzero::util::rng::Rng;
+
+/// A deterministic synthetic fleet with convex (increasing-marginal)
+/// energy profiles — the regime where scheduling matters most per joule.
+fn convex_fleet(n: usize, seed: u64) -> Vec<ManagedDevice> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            ManagedDevice::abstract_resource(
+                i,
+                CostFn::Quadratic {
+                    fixed: 0.0,
+                    a: rng.range_f64(0.05, 0.5),
+                    b: rng.range_f64(0.5, 3.0),
+                },
+                0,
+                8 + rng.index(24),
+            )
+        })
+        .collect()
+}
+
+fn cfg(algo: &str, rounds: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        rounds,
+        tasks_per_round: 40,
+        algo: algo.into(),
+        max_share: 1.0,
+        seed: 1234,
+        ..CoordinatorConfig::default()
+    }
+}
+
+#[test]
+fn paper_example_through_the_full_state_machine() {
+    // The §3.1 worked example driven by the coordinator: round 1 must land
+    // exactly on X* = {2, 3, 0} with ΣC = 7.5 at T = 5.
+    let inst = Instance::paper_example(5);
+    let devices: Vec<ManagedDevice> = (0..inst.n())
+        .map(|i| {
+            ManagedDevice::abstract_resource(
+                i,
+                inst.costs[i].clone(),
+                inst.lower[i],
+                inst.upper[i],
+            )
+        })
+        .collect();
+    let cfg = CoordinatorConfig {
+        rounds: 2,
+        tasks_per_round: 5,
+        algo: "mc2mkp".into(),
+        max_share: 1.0,
+        ..CoordinatorConfig::default()
+    };
+    let mut coord = Coordinator::new(cfg, devices, SimBackend::new()).unwrap();
+    assert_eq!(coord.phase(), Phase::Configuring);
+    let r1 = coord.round().unwrap();
+    assert_eq!(r1.tasks, 5);
+    assert!((r1.energy_j - 7.5).abs() < 1e-9, "ΣC = {}", r1.energy_j);
+    // Round 2 re-solves warm (static costs → every DP row reused) and must
+    // land on the identical optimum.
+    let r2 = coord.round().unwrap();
+    assert_eq!(r2.energy_j, r1.energy_j, "warm re-solve differs from round 1");
+    assert_eq!(coord.metrics().counter("dp_rows_reused"), 3);
+}
+
+#[test]
+fn multi_round_schedules_stay_feasible_under_dynamics() {
+    // A seeded fleet with churn + drift + dropout: every round the
+    // coordinator-internal validation must hold (round() errors if a
+    // schedule is infeasible), rounds must all be logged, and energy must
+    // stay non-negative and finite.
+    let n = 12;
+    let mut coord =
+        Coordinator::new(cfg("auto", 25), convex_fleet(n, 9), SimBackend::new())
+            .unwrap();
+    coord.set_dynamics(DynamicsConfig {
+        availability: Some(Availability::new(n, 0.4, 0.2)),
+        drift: Some(CostDrift::new(n, 0.1)),
+        dropout: Some(Dropout { p_fail: 0.1 }),
+    });
+    let log = coord.run().unwrap();
+    assert_eq!(log.rows().len(), 25);
+    for row in log.rows() {
+        assert!(row.energy_j.is_finite() && row.energy_j >= 0.0);
+        assert!(row.participants <= n);
+    }
+    // Ledger and per-round log agree.
+    let from_rows: f64 = coord.log().rows().iter().map(|r| r.energy_j).sum();
+    assert!((from_rows - coord.ledger().total()).abs() < 1e-6);
+}
+
+#[test]
+fn optimal_total_energy_is_no_worse_than_uniform_every_round() {
+    // Same fleet, same seed, convex costs: the auto-dispatched optimal
+    // schedule must use at most the uniform baseline's energy in EVERY
+    // round, hence also in total.
+    let run = |algo: &str| {
+        let mut coord =
+            Coordinator::new(cfg(algo, 10), convex_fleet(16, 77), SimBackend::new())
+                .unwrap();
+        coord.run().unwrap();
+        coord
+            .log()
+            .rows()
+            .iter()
+            .map(|r| r.energy_j)
+            .collect::<Vec<f64>>()
+    };
+    let opt = run("auto");
+    let uni = run("uniform");
+    assert_eq!(opt.len(), uni.len());
+    for (r, (o, u)) in opt.iter().zip(&uni).enumerate() {
+        assert!(o <= &(u + 1e-9), "round {r}: optimal {o} J > uniform {u} J");
+    }
+    assert!(opt.iter().sum::<f64>() <= uni.iter().sum::<f64>() + 1e-9);
+}
+
+#[test]
+fn deterministic_trajectory_for_a_seed() {
+    let run = || {
+        let n = 10;
+        let mut coord =
+            Coordinator::new(cfg("auto", 12), convex_fleet(n, 5), SimBackend::new())
+                .unwrap();
+        coord.set_dynamics(DynamicsConfig {
+            availability: Some(Availability::new(n, 0.5, 0.3)),
+            drift: Some(CostDrift::new(n, 0.2)),
+            dropout: Some(Dropout { p_fail: 0.2 }),
+        });
+        coord.run().unwrap();
+        coord
+            .log()
+            .rows()
+            .iter()
+            .map(|r| (r.energy_j, r.participants, r.tasks))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+/// Property test: warm-started (MC)²MKP re-solves are bit-for-bit equal to
+/// cold solves across randomized drift sequences that mutate a random
+/// suffix of the cost tables each round (including the empty suffix — a
+/// full-reuse re-solve — and the full fleet — an effectively cold one).
+#[test]
+fn warm_resolve_equals_cold_solve_property() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..40 {
+        let n = 2 + rng.index(5);
+        let t = 5 + rng.index(30);
+        let base: Vec<CostFn> = (0..n)
+            .map(|_| {
+                // Tabulated (arbitrary-regime) costs so the DP is the only
+                // optimal solver and every round really exercises it.
+                let mut acc = 0.0;
+                let values: Vec<f64> = (0..=t)
+                    .map(|j| {
+                        if j > 0 {
+                            acc += rng.range_f64(0.1, 2.0);
+                        }
+                        acc + rng.f64()
+                    })
+                    .collect();
+                CostFn::Tabulated { first: 0, values }
+            })
+            .collect();
+        let uppers: Vec<usize> = (0..n).map(|_| 1 + rng.index(t)).collect();
+        let mut uppers = uppers;
+        while uppers.iter().map(|&u| u.min(t)).sum::<usize>() < t {
+            for u in uppers.iter_mut() {
+                *u += 1;
+            }
+        }
+
+        let mut warm = WarmMc2mkp::new();
+        let mut scales = vec![1.0f64; n];
+        for round in 0..6 {
+            // Drift a random suffix (or nothing) between rounds.
+            if round > 0 {
+                let from = rng.index(n + 1);
+                for s in scales.iter_mut().skip(from) {
+                    *s *= rng.range_f64(0.8, 1.25);
+                }
+            }
+            let costs: Vec<CostFn> = base
+                .iter()
+                .zip(&scales)
+                .map(|(c, &w)| CostFn::Scaled { weight: w, inner: Box::new(c.clone()) })
+                .collect();
+            let inst = Instance::new(t, vec![0; n], uppers.clone(), costs).unwrap();
+            let (warm_sched, _info) = warm.solve(&inst).unwrap();
+            let cold_sched = mc2mkp::solve(&inst).unwrap();
+            assert_eq!(
+                warm_sched, cold_sched,
+                "case {case} round {round}: warm != cold"
+            );
+            // Costs agree exactly (==, not within tolerance): identical
+            // arithmetic must produce identical bits.
+            assert_eq!(
+                validate::checked_cost(&inst, &warm_sched).unwrap(),
+                validate::checked_cost(&inst, &cold_sched).unwrap(),
+            );
+        }
+    }
+}
+
+#[test]
+fn empty_pool_rounds_are_logged_without_energy() {
+    let n = 6;
+    let mut coord =
+        Coordinator::new(cfg("auto", 8), convex_fleet(n, 3), SimBackend::new())
+            .unwrap();
+    // Everyone leaves and never rejoins: after the first round the pool is
+    // empty, so later rounds must be empty rounds.
+    coord.set_dynamics(DynamicsConfig {
+        availability: Some(Availability::new(n, 0.0, 1.0)),
+        drift: None,
+        dropout: None,
+    });
+    coord.run().unwrap();
+    assert_eq!(coord.log().rows().len(), 8);
+    assert!(coord.metrics().counter("empty_rounds") >= 7);
+    let tail_energy: f64 = coord
+        .log()
+        .rows()
+        .iter()
+        .skip(1)
+        .map(|r| r.energy_j)
+        .sum();
+    assert_eq!(tail_energy, 0.0);
+}

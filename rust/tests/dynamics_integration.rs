@@ -42,9 +42,9 @@ fn dropout_wastes_energy_but_training_survives() {
         dropout: Some(Dropout { p_fail: 0.4 }),
     });
     server.run().unwrap();
-    assert!(server.metrics.counter("dropouts") > 0, "no dropouts sampled");
+    assert!(server.metrics().counter("dropouts") > 0, "no dropouts sampled");
     // Training still completes and the loss is finite.
-    assert!(server.log.final_loss().unwrap().is_finite());
+    assert!(server.log().final_loss().unwrap().is_finite());
 }
 
 #[test]
@@ -60,7 +60,7 @@ fn churn_produces_empty_and_partial_rounds() {
         dropout: None,
     });
     server.run().unwrap();
-    let rows = server.log.rows();
+    let rows = server.log().rows();
     assert_eq!(rows.len(), 20);
     // With heavy churn some rounds should have few participants.
     let min_participants = rows.iter().map(|r| r.participants).min().unwrap();
@@ -81,7 +81,7 @@ fn drift_changes_round_energy_over_time() {
             dropout: None,
         });
         server.run().unwrap();
-        server.log.rows().iter().map(|r| r.energy_j).collect()
+        server.log().rows().iter().map(|r| r.energy_j).collect()
     };
     let stable = run_total(None);
     let drifted = run_total(Some(CostDrift::new(10, 0.3)));
@@ -103,5 +103,5 @@ fn mobile_preset_runs() {
     let mut server = Server::new(cfg(6), BehaviorMix::Mixed).unwrap();
     server.set_dynamics(DynamicsConfig::mobile(10));
     server.run().unwrap();
-    assert_eq!(server.log.rows().len(), 6);
+    assert_eq!(server.log().rows().len(), 6);
 }

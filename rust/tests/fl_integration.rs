@@ -85,7 +85,7 @@ fn server_converges_on_mlp() {
     cfg.rounds = 10;
     let mut server = Server::new(cfg, BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
     server.run().unwrap();
-    let rows = server.log.rows();
+    let rows = server.log().rows();
     assert_eq!(rows.len(), 10);
     let first = rows[0].loss;
     let last = rows.last().unwrap().loss;
@@ -93,7 +93,7 @@ fn server_converges_on_mlp() {
         last < first * 0.5,
         "training did not converge: {first} → {last}"
     );
-    assert!(server.ledger.total() > 0.0);
+    assert!(server.ledger().total() > 0.0);
 }
 
 #[test]
@@ -104,7 +104,7 @@ fn same_seed_same_trajectory() {
             Server::new(mlp_cfg(), BehaviorMix::Homogeneous(Behavior::Convex)).unwrap();
         server.run().unwrap();
         server
-            .log
+            .log()
             .rows()
             .iter()
             .map(|r| (r.loss, r.energy_j))
@@ -131,8 +131,8 @@ fn energy_ledger_matches_round_logs() {
     let mut server =
         Server::new(mlp_cfg(), BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
     server.run().unwrap();
-    let from_rounds: f64 = server.log.rows().iter().map(|r| r.energy_j).sum();
-    assert!((from_rounds - server.ledger.total()).abs() < 1e-6);
+    let from_rounds: f64 = server.log().rows().iter().map(|r| r.energy_j).sum();
+    assert!((from_rounds - server.ledger().total()).abs() < 1e-6);
 }
 
 #[test]
@@ -146,9 +146,9 @@ fn max_share_caps_concentration() {
     let mut server = Server::new(cfg, BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
     server.run().unwrap();
     assert!(
-        server.ledger.max_device_share() < 0.9,
+        server.ledger().max_device_share() < 0.9,
         "share {}",
-        server.ledger.max_device_share()
+        server.ledger().max_device_share()
     );
 }
 
@@ -169,7 +169,7 @@ fn transformer_round_runs() {
     };
     let mut server = Server::new(cfg, BehaviorMix::Mixed).unwrap();
     server.run().unwrap();
-    let rows = server.log.rows();
+    let rows = server.log().rows();
     assert_eq!(rows.len(), 2);
     assert!(rows.iter().all(|r| r.loss.is_finite()));
 }

@@ -1,9 +1,8 @@
 //! Integration tests pinned to the paper's own numbers (§3.1, Figs. 1–2)
 //! and to cross-algorithm agreement on the worked example.
 
-use fedzero::config::Policy;
 use fedzero::sched::instance::{Instance, Schedule};
-use fedzero::sched::{auto, baselines, bruteforce, mc2mkp, validate};
+use fedzero::sched::{baselines, bruteforce, mc2mkp, validate, SolverRegistry};
 use fedzero::util::rng::Rng;
 
 #[test]
@@ -72,14 +71,9 @@ fn every_t_from_1_to_17_solvable_and_oracle_optimal() {
 fn all_baselines_feasible_on_example() {
     let inst = Instance::paper_example(8);
     let mut rng = Rng::new(1);
-    for policy in [
-        Policy::Uniform,
-        Policy::Random,
-        Policy::Proportional,
-        Policy::Greedy,
-        Policy::Olar,
-    ] {
-        let s = auto::solve_with(&inst, policy, &mut rng).unwrap();
+    let registry = SolverRegistry::with_defaults(1);
+    for policy in ["uniform", "random", "proportional", "greedy", "olar"] {
+        let s = registry.solve_seeded(policy, &inst, &mut rng).unwrap();
         validate::check(&inst, &s)
             .unwrap_or_else(|e| panic!("{policy} infeasible: {e}"));
         let c = validate::total_cost(&inst, &s);

@@ -6,10 +6,9 @@
 //! * every produced schedule is feasible (eq. 1b–1c invariants);
 //! * the §5.2 lower-limit transformation preserves optima.
 
-use fedzero::config::Policy;
 use fedzero::sched::costs::CostFn;
 use fedzero::sched::instance::Instance;
-use fedzero::sched::{auto, bruteforce, limits, marco, mardec, mardecun, marin, mc2mkp, validate};
+use fedzero::sched::{auto, bruteforce, limits, marco, mardec, mardecun, marin, mc2mkp, validate, SolverRegistry};
 use fedzero::testkit::{close, ensure, forall, Config, Gen};
 use fedzero::util::rng::Rng;
 
@@ -275,14 +274,10 @@ fn baselines_always_feasible_never_below_optimal() {
             &mc2mkp::solve(&inst).map_err(|e| e.to_string())?,
         );
         let mut rng = Rng::new(case.seed);
-        for policy in [
-            Policy::Uniform,
-            Policy::Random,
-            Policy::Proportional,
-            Policy::Greedy,
-            Policy::Olar,
-        ] {
-            let s = auto::solve_with(&inst, policy, &mut rng)
+        let registry = SolverRegistry::with_defaults(case.seed);
+        for policy in ["uniform", "random", "proportional", "greedy", "olar"] {
+            let s = registry
+                .solve_seeded(policy, &inst, &mut rng)
                 .map_err(|e| format!("{policy}: {e}"))?;
             validate::check(&inst, &s).map_err(|e| format!("{policy}: {e}"))?;
             let c = validate::total_cost(&inst, &s);

@@ -1,0 +1,319 @@
+//! Offline stub of the PJRT/XLA Rust bindings.
+//!
+//! The build environment has no network access and no PJRT plugin, so this
+//! crate vendors the *API surface* fedzero's `runtime` layer compiles
+//! against: host-side [`Literal`] tensors (fully functional), HLO artifact
+//! loading (functional: reads and retains the text), and PJRT
+//! client/executable types whose `execute` path fails with a descriptive
+//! [`Error`] instead of running XLA.
+//!
+//! Swapping in the real bindings is a Cargo.toml change only; nothing in
+//! fedzero references stub-only items.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` — an opaque message.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-local result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires a PJRT plugin, but fedzero was built against the \
+         vendored offline `xla` stub (rust/vendor/xla). Link the real xla \
+         crate to execute compiled HLO."
+    ))
+}
+
+/// Element types a [`Literal`] can hold. Sealed: only `f32`/`i32` are used
+/// by fedzero's calling convention.
+pub trait NativeType: Copy + private::Sealed {
+    #[doc(hidden)]
+    fn from_elem(e: &Elem) -> Option<Self>;
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Storage;
+    #[doc(hidden)]
+    fn unwrap(s: &Storage) -> Option<&[Self]>;
+}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// One scalar element (used by `get_first_element`).
+#[derive(Debug, Clone, Copy)]
+pub enum Elem {
+    F32(f32),
+    I32(i32),
+}
+
+/// Backing storage of a literal.
+#[derive(Debug, Clone)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    /// Tuple literals (what executables return).
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn from_elem(e: &Elem) -> Option<f32> {
+        match e {
+            Elem::F32(v) => Some(*v),
+            Elem::I32(_) => None,
+        }
+    }
+    fn wrap(v: Vec<f32>) -> Storage {
+        Storage::F32(v)
+    }
+    fn unwrap(s: &Storage) -> Option<&[f32]> {
+        match s {
+            Storage::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn from_elem(e: &Elem) -> Option<i32> {
+        match e {
+            Elem::I32(v) => Some(*v),
+            Elem::F32(_) => None,
+        }
+    }
+    fn wrap(v: Vec<i32>) -> Storage {
+        Storage::I32(v)
+    }
+    fn unwrap(s: &Storage) -> Option<&[i32]> {
+        match s {
+            Storage::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side tensor, matching the subset of `xla::Literal` fedzero uses.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            storage: T::wrap(data.to_vec()),
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret under new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elements) from {have} elements"
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Array shape (error for tuple literals).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return Err(Error("tuple literal has no array shape".into()));
+        }
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+
+    /// Decompose a 1-tuple.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut v = self.to_tuple()?;
+        if v.len() != 1 {
+            return Err(Error(format!("expected 1-tuple, got {}", v.len())));
+        }
+        Ok(v.pop().unwrap())
+    }
+
+    /// First scalar of the literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let elem = match &self.storage {
+            Storage::F32(v) => v.first().copied().map(Elem::F32),
+            Storage::I32(v) => v.first().copied().map(Elem::I32),
+            Storage::Tuple(_) => None,
+        }
+        .ok_or_else(|| Error("empty or tuple literal".into()))?;
+        T::from_elem(&elem).ok_or_else(|| Error("element type mismatch".into()))
+    }
+
+    /// Copy out the flat host data.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("literal type mismatch in to_vec".into()))
+    }
+}
+
+/// Parsed HLO module artifact. The stub validates the file exists and keeps
+/// its text; it cannot verify or execute the program.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text artifact from disk.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("reading {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { text })
+    }
+
+    /// Raw HLO text.
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// PJRT client handle. Construction fails in the stub: there is no plugin
+/// to back it, and failing here gives callers one clean early error instead
+/// of a surprise at execute time.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// CPU client — unavailable in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu()"))
+    }
+
+    /// Compile a computation — unreachable while `cpu()` errors, kept for
+    /// API parity.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile()"))
+    }
+}
+
+/// A device buffer returned by `execute`.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Synchronously copy the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync()"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments (one replica, one partition).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute()"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = Literal::vec1(&[7i32, 8]);
+        assert_eq!(l.get_first_element::<i32>().unwrap(), 7);
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn client_unavailable_is_descriptive() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn hlo_from_missing_file_errors() {
+        assert!(HloModuleProto::from_text_file("/no/such/file.hlo").is_err());
+    }
+}
