@@ -5,6 +5,8 @@
 
 use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::{BehaviorMix, Fleet};
+use fedzero::sched::costs::CostFn;
+use fedzero::sched::fleet::FleetInstance;
 use fedzero::sched::instance::Instance;
 use fedzero::sched::{auto, validate, SolverRegistry};
 use fedzero::util::rng::Rng;
@@ -53,5 +55,26 @@ fn main() -> fedzero::Result<()> {
     table.print();
     println!("\nThe paper's optimal algorithms (auto/mc2mkp/marin) coincide at the");
     println!("minimum; baselines pay an energy premium.");
+
+    // ---- Part 3: fleet-scale scheduling via device classes --------------
+    // Real fleets repeat hardware archetypes; building a FleetInstance
+    // deduplicates interchangeable devices so solvers run per *class*.
+    let fleet_inst = FleetInstance::builder()
+        .tasks(5_000)
+        .device_class(CostFn::Affine { fixed: 0.2, per_task: 1.0 }, 0, 8, 400)
+        .device_class(CostFn::Affine { fixed: 0.1, per_task: 2.5 }, 0, 8, 400)
+        .device_class(CostFn::Affine { fixed: 0.5, per_task: 4.0 }, 0, 16, 200)
+        .build()?;
+    let assignment = registry.solve_fleet("auto", &fleet_inst)?;
+    assignment.check(&fleet_inst)?;
+    println!(
+        "\nFleet-scale: {} devices in {} classes, T = {} → total energy {} \
+         (expand() recovers all {} per-device loads on demand)",
+        fleet_inst.n_devices(),
+        fleet_inst.n_classes(),
+        fleet_inst.tasks,
+        fmt_energy(assignment.total_cost(&fleet_inst)),
+        assignment.expand(&fleet_inst).len(),
+    );
     Ok(())
 }

@@ -1,0 +1,168 @@
+//! FLEET — flat per-device vs class-deduplicated solve times.
+//!
+//! A fleet of `n` devices in `k = 100` classes (multiplicity `n/k` each)
+//! is solved twice per marginal algorithm: through the legacy flat path
+//! (`O(n)`-ish) and through the class-aware `solve_fleet` path
+//! (`O(k)`-ish). The acceptance bar for the redesign is a **≥ 10×**
+//! speedup at `n = 10⁵` on at least one marginal algorithm; in practice
+//! MarIn/MarCo/MarDecUn all clear it by orders of magnitude.
+//!
+//! The (MC)²MKP DP is included at the smallest size as a *parity* row:
+//! arbitrary costs admit no intra-class shortcut, so the class DP matches
+//! the flat DP's arithmetic (the win there is memory — rolling f64 rows,
+//! only `u32` backtrack tables at `O(n·T)`), and its speedup is expected
+//! to be ~1×.
+//!
+//! `FEDZERO_BENCH_SMOKE=1` shrinks the sweep to `n = 10³` with quick
+//! timing — the CI regression gate.
+
+use fedzero::benchkit::{bench, BenchConfig};
+use fedzero::sched::costs::CostFn;
+use fedzero::sched::fleet::FleetInstance;
+use fedzero::sched::instance::Instance;
+use fedzero::sched::{marco, mardecun, marin, mc2mkp};
+use fedzero::util::rng::Rng;
+use fedzero::util::table::{fmt_duration, Table};
+
+const K: usize = 100;
+
+fn build(algo: &str, n: usize, t: usize) -> (FleetInstance, Instance) {
+    let mut rng = Rng::new((n as u64).wrapping_mul(0xF1EE7) ^ algo.len() as u64);
+    let mut b = FleetInstance::builder().tasks(t);
+    for _ in 0..K {
+        let (cost, upper) = match algo {
+            "marin" => (
+                CostFn::Quadratic {
+                    fixed: rng.range_f64(0.0, 1.0),
+                    a: rng.range_f64(0.005, 0.1),
+                    b: rng.range_f64(0.5, 3.0),
+                },
+                8,
+            ),
+            "marco" => (
+                CostFn::Affine {
+                    fixed: rng.range_f64(0.0, 1.0),
+                    per_task: rng.range_f64(0.5, 3.0),
+                },
+                8,
+            ),
+            "mardecun" => (
+                CostFn::PowerLaw {
+                    fixed: 0.0,
+                    scale: rng.range_f64(0.5, 3.0),
+                    exponent: rng.range_f64(0.3, 0.9),
+                },
+                t,
+            ),
+            "mc2mkp" => (
+                CostFn::Quadratic {
+                    fixed: rng.range_f64(0.0, 1.0),
+                    a: rng.range_f64(0.005, 0.1),
+                    b: rng.range_f64(0.5, 3.0),
+                },
+                8,
+            ),
+            other => panic!("unknown algo {other}"),
+        };
+        b = b.device_class(cost, 0, upper, n / K);
+    }
+    let fleet = b.build().expect("bench fleet valid");
+    let flat = fleet.to_flat();
+    (fleet, flat)
+}
+
+fn main() {
+    let smoke = std::env::var("FEDZERO_BENCH_SMOKE").is_ok();
+    let sizes: &[usize] = if smoke {
+        &[1_000]
+    } else {
+        &[1_000, 10_000, 100_000]
+    };
+    // Smoke still batches each sample to ≥ ~0.5 ms (the class path solves
+    // in microseconds; unbatched medians would be scheduler-noise).
+    let cfg = if smoke {
+        BenchConfig { warmup: 1, iters: 9, min_time_s: 0.005 }
+    } else {
+        BenchConfig { warmup: 1, iters: 7, min_time_s: 0.02 }
+    };
+
+    let mut table = Table::new(
+        &format!("FLEET SCALE: flat vs class-deduplicated solves (k = {K} classes)"),
+        &["algorithm", "n", "T", "flat", "class", "dedup", "speedup"],
+    );
+    let mut worst_marginal_speedup = f64::INFINITY;
+
+    for &n in sizes {
+        let t = 2 * n;
+        for algo in ["marin", "marco", "mardecun"] {
+            let (fleet, flat) = build(algo, n, t);
+            let m_flat = match algo {
+                "marin" => bench("flat", &cfg, || marin::solve(&flat).unwrap()),
+                "marco" => bench("flat", &cfg, || marco::solve(&flat).unwrap()),
+                "mardecun" => {
+                    bench("flat", &cfg, || mardecun::solve(&flat).unwrap())
+                }
+                _ => unreachable!(),
+            };
+            let m_class = match algo {
+                "marin" => bench("class", &cfg, || marin::solve_fleet(&fleet).unwrap()),
+                "marco" => bench("class", &cfg, || marco::solve_fleet(&fleet).unwrap()),
+                "mardecun" => {
+                    bench("class", &cfg, || mardecun::solve_fleet(&fleet).unwrap())
+                }
+                _ => unreachable!(),
+            };
+            // Cost of deduplicating a flat instance from scratch — what a
+            // caller pays when it does NOT maintain a FleetInstance.
+            let m_dedup = bench("dedup", &cfg, || {
+                FleetInstance::from_flat(&flat).unwrap()
+            });
+            let speedup = m_flat.median() / m_class.median().max(1e-12);
+            worst_marginal_speedup = worst_marginal_speedup.min(speedup);
+            table.rows_str(vec![
+                algo.to_string(),
+                n.to_string(),
+                t.to_string(),
+                fmt_duration(m_flat.median()),
+                fmt_duration(m_class.median()),
+                fmt_duration(m_dedup.median()),
+                format!("{speedup:.0}x"),
+            ]);
+        }
+    }
+
+    // Parity row: the DP has no intra-class shortcut for arbitrary costs.
+    {
+        let n = sizes[0];
+        let t = 2 * n;
+        let (fleet, flat) = build("mc2mkp", n, t);
+        let m_flat = bench("flat", &cfg, || mc2mkp::solve(&flat).unwrap());
+        let m_class = bench("class", &cfg, || mc2mkp::solve_fleet(&fleet).unwrap());
+        let speedup = m_flat.median() / m_class.median().max(1e-12);
+        table.rows_str(vec![
+            "mc2mkp (parity)".to_string(),
+            n.to_string(),
+            t.to_string(),
+            fmt_duration(m_flat.median()),
+            fmt_duration(m_class.median()),
+            "—".to_string(),
+            format!("{speedup:.1}x"),
+        ]);
+    }
+
+    table.print();
+    // Full sweep enforces the acceptance bar; smoke (n = 10³, batched
+    // timing) enforces a looser gate that still catches the failure mode
+    // CI exists for — a class-aware solver silently regressing to the
+    // flat path shows up as ~1x, far below any plausible noise band.
+    let gate = if smoke { 2.0 } else { 10.0 };
+    println!(
+        "acceptance: every marginal algorithm ≥ {gate}x — worst observed {:.0}x ({})",
+        worst_marginal_speedup,
+        if worst_marginal_speedup >= gate { "PASS" } else { "FAIL" }
+    );
+    assert!(
+        worst_marginal_speedup >= gate,
+        "class-path speedup regressed below {gate}x"
+    );
+}

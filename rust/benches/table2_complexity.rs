@@ -54,6 +54,9 @@ fn time_solve(
 }
 
 fn main() {
+    // FEDZERO_BENCH_SMOKE=1: tiny sweeps, quick timing — the CI gate that
+    // catches API-level perf regressions without paying the full matrix.
+    let smoke = std::env::var("FEDZERO_BENCH_SMOKE").is_ok();
     let rows = vec![
         Row {
             algo: "mc2mkp",
@@ -102,7 +105,24 @@ fn main() {
         },
     ];
 
-    let cfg = BenchConfig { warmup: 1, iters: 7, min_time_s: 0.02 };
+    let rows: Vec<Row> = if smoke {
+        rows.into_iter()
+            .map(|mut r| {
+                r.t_sweep.truncate(2);
+                r.n_sweep.truncate(2);
+                r.fixed_n = r.n_sweep[0];
+                r.fixed_t = r.t_sweep[0];
+                r
+            })
+            .collect()
+    } else {
+        rows
+    };
+    let cfg = if smoke {
+        BenchConfig::quick()
+    } else {
+        BenchConfig { warmup: 1, iters: 7, min_time_s: 0.02 }
+    };
     let registry = SolverRegistry::with_defaults(7);
     let mut table = Table::new(
         "TABLE 2 (empirical): runtime scaling per scenario",

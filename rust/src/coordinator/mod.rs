@@ -7,8 +7,12 @@
 //!
 //! Each round the coordinator **re-derives** the Minimal Cost FL Schedule
 //! instance from the fleet's *current* state — battery charge, cost drift,
-//! availability churn ([`crate::fl::dynamics`]) — solves it through the
-//! [`SolverRegistry`], dispatches training to a pluggable
+//! availability churn ([`crate::fl::dynamics`]) — as a class-deduplicated
+//! [`FleetInstance`] (interchangeable devices collapse into one class, so
+//! class-aware solvers run in the number of classes `k ≪ n`; the
+//! `fleet_classes` / `fleet_devices` metrics expose the dedup ratio),
+//! solves it through the [`SolverRegistry`], dispatches training to a
+//! pluggable
 //! [`RoundBackend`], aggregates, then re-costs the fleet for the next
 //! round. When the configured solver is the (MC)²MKP DP (directly or via
 //! `auto` dispatch), consecutive rounds reuse DP rows for the unchanged
@@ -31,7 +35,8 @@ use crate::config::TrainConfig;
 use crate::error::{FedError, Result};
 use crate::fl::dynamics::DynamicsConfig;
 use crate::metrics::{EnergyLedger, MetricsHub, RoundLog, Timer, TrainingLog};
-use crate::sched::auto::{best_algorithm, classify_instance};
+use crate::sched::auto::{best_algorithm, classify_fleet};
+use crate::sched::fleet::FleetInstance;
 use crate::sched::instance::{Instance, Schedule};
 use crate::sched::mc2mkp::WarmMc2mkp;
 use crate::sched::solver::SolverRegistry;
@@ -248,14 +253,17 @@ impl<B: RoundBackend> Coordinator<B> {
         Ok(())
     }
 
-    /// Build this round's instance over `selected` device indices (with
-    /// their already-computed `raw_uppers`, which the caller derived from
-    /// current device state and checked to be non-empty in total).
+    /// Build this round's **fleet instance** over `selected` device
+    /// indices (with their already-computed `raw_uppers`, which the caller
+    /// derived from current device state and checked to be non-empty in
+    /// total). Devices sharing a cost signature and limits collapse into
+    /// classes — on real fleets `k ≪ n`, which is what the class-aware
+    /// solvers exploit.
     fn build_instance(
         &mut self,
         selected: &[usize],
         raw_uppers: &[usize],
-    ) -> Result<(Instance, usize)> {
+    ) -> Result<(FleetInstance, usize)> {
         // Overflow-safe capacity: "unlimited" devices may carry
         // `usize::MAX` uppers (same encoding Instance::validate hardens
         // against), so clamp each term to T before a saturating fold.
@@ -308,38 +316,43 @@ impl<B: RoundBackend> Coordinator<B> {
         } else {
             lower
         };
-        let costs = selected
-            .iter()
-            .map(|&d| self.devices[d].current_cost())
-            .collect();
-        Ok((Instance::new(t, lower, uppers, costs)?, t))
+        let mut b = FleetInstance::builder().tasks(t);
+        for ((&d, &u), &l) in selected.iter().zip(&uppers).zip(&lower) {
+            b = b.device(self.devices[d].current_cost(), l, u);
+        }
+        Ok((b.build()?, t))
     }
 
-    /// Solve the instance with the configured algorithm, warm-starting the
-    /// (MC)²MKP DP whenever the DP is what runs (configured directly or
-    /// chosen by `auto` dispatch).
-    fn solve(&mut self, instance: &Instance) -> Result<Schedule> {
+    /// Solve the fleet instance with the configured algorithm,
+    /// warm-starting the (MC)²MKP DP whenever the DP is what runs
+    /// (configured directly or chosen by `auto` dispatch). `flat` is the
+    /// slot-expanded view of `fleet` (the caller needs it for the round
+    /// plan anyway); the warm DP row cache keys on it.
+    fn solve(&mut self, fleet: &FleetInstance, flat: &Instance) -> Result<Schedule> {
         let canonical = self.registry.resolve(&self.cfg.algo)?.name();
         // Resolve `auto` to its concrete Table 2 pick here, once: the
-        // classification is not repeated inside the solver, and registry
-        // overrides of the concrete solvers are honored by the dispatch.
+        // classification is per *class* (cheap on deduplicated fleets),
+        // and registry overrides of the concrete solvers are honored by
+        // the dispatch.
         let effective = if canonical == "auto" && !self.registry.is_overridden("auto")
         {
-            best_algorithm(&classify_instance(instance))
+            best_algorithm(&classify_fleet(fleet))
         } else {
             canonical
         };
         // The warm fast path only stands in for the *built-in* DP; a
         // caller-registered "mc2mkp" must win over it.
         if effective == "mc2mkp" && !self.registry.is_overridden("mc2mkp") {
-            let (schedule, info) = self.warm.solve(instance)?;
+            let (schedule, info) = self.warm.solve(flat)?;
             self.metrics.inc("dp_solves", 1);
             self.metrics.inc("dp_rows_reused", info.reused_rows as u64);
             self.metrics.inc("dp_rows_total", info.total_rows as u64);
             Ok(schedule)
         } else {
-            self.registry
-                .solve_seeded(effective, instance, &mut self.rng)
+            Ok(self
+                .registry
+                .solve_fleet_seeded(effective, fleet, &mut self.rng)?
+                .expand(fleet))
         }
     }
 
@@ -423,9 +436,12 @@ impl<B: RoundBackend> Coordinator<B> {
             return self.finish_round(round_idx, loss, 0.0, 0.0, 0.0, 0, 0);
         }
 
-        let (instance, t) = self.build_instance(&selected, &raw_uppers)?;
+        let (fleet, t) = self.build_instance(&selected, &raw_uppers)?;
+        self.metrics.inc("fleet_devices", fleet.n_devices() as u64);
+        self.metrics.inc("fleet_classes", fleet.n_classes() as u64);
+        let instance = fleet.to_flat();
         let timer = Timer::start();
-        let schedule = self.solve(&instance)?;
+        let schedule = self.solve(&fleet, &instance)?;
         let sched_time_s = timer.elapsed_s();
         validate::check(&instance, &schedule)?;
         let predicted_j = validate::total_cost(&instance, &schedule);
@@ -778,7 +794,7 @@ mod tests {
             fn name(&self) -> &'static str {
                 "mc2mkp"
             }
-            fn solve(&self, inst: &Instance) -> Result<Schedule> {
+            fn solve_flat(&self, inst: &Instance) -> Result<Schedule> {
                 crate::sched::baselines::uniform(inst)
             }
         }
@@ -810,6 +826,28 @@ mod tests {
         let row = coord.round().unwrap();
         assert_eq!(row.tasks, 40);
         assert!((row.energy_j - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_devices_collapse_into_classes() {
+        let c = CostFn::Affine { fixed: 0.0, per_task: 1.0 };
+        let devices: Vec<ManagedDevice> = (0..6)
+            .map(|i| ManagedDevice::abstract_resource(i, c.clone(), 0, 4))
+            .collect();
+        let cfg = CoordinatorConfig {
+            rounds: 1,
+            tasks_per_round: 12,
+            algo: "auto".into(),
+            max_share: 1.0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg, devices, SimBackend::new()).unwrap();
+        let row = coord.round().unwrap();
+        assert_eq!(row.tasks, 12);
+        assert!((row.energy_j - 12.0).abs() < 1e-9);
+        // Six interchangeable devices → one scheduling class.
+        assert_eq!(coord.metrics().counter("fleet_devices"), 6);
+        assert_eq!(coord.metrics().counter("fleet_classes"), 1);
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //!
 //! The server no longer owns the round loop — scheduling, dropout,
 //! energy accounting, battery re-costing, and per-round metrics all live
-//! in [`crate::coordinator`]. What remains here is the ML side:
+//! in [`crate::coordinator`], which derives each round's instance as a
+//! class-deduplicated [`crate::sched::fleet::FleetInstance`] (identical
+//! simulated clients collapse into classes; see [`Server::fleet_dedup`]).
+//! What remains here is the ML side:
 //! loading artifacts, partitioning data, running real PJRT training steps
 //! on simulated clients, FedAvg aggregation, and held-out evaluation.
 
@@ -192,6 +195,17 @@ impl Server {
     /// Counters and gauges collected across rounds.
     pub fn metrics(&self) -> &MetricsHub {
         self.coord.metrics()
+    }
+
+    /// Scheduling dedup accumulated across rounds:
+    /// `(devices scheduled, classes solved)`. Classes ≪ devices is the
+    /// ratio the class-aware solvers exploit; equal values mean the fleet
+    /// had no interchangeable devices.
+    pub fn fleet_dedup(&self) -> (u64, u64) {
+        (
+            self.coord.metrics().counter("fleet_devices"),
+            self.coord.metrics().counter("fleet_classes"),
+        )
     }
 
     /// Per-round training log.

@@ -17,6 +17,13 @@
 //! * [`sched`] — the paper's contribution: problem model, cost functions,
 //!   optimal schedulers, baselines — all reachable through the
 //!   [`sched::solver::Solver`] trait and [`sched::solver::SolverRegistry`].
+//!   The primary problem type is the class-deduplicated
+//!   [`sched::fleet::FleetInstance`] (interchangeable devices collapse
+//!   into classes with multiplicities; solvers evaluate costs lazily via
+//!   [`sched::fleet::CostView`] and return class-level
+//!   [`sched::fleet::Assignment`]s that expand to per-device schedules on
+//!   demand); the flat per-device [`sched::instance::Instance`] adapts in
+//!   both directions.
 //! * [`coordinator`] — the top layer: a state-machine coordinator
 //!   (Configuring → Scheduling → Training → Aggregating → Recosting) that
 //!   owns the multi-round loop, re-derives each round's instance from

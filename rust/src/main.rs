@@ -16,7 +16,8 @@ use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::{BehaviorMix, Fleet};
 use fedzero::fl::Server;
 use fedzero::metrics::Timer;
-use fedzero::sched::auto::best_algorithm;
+use fedzero::sched::auto::{best_algorithm, TABLE2_SCENARIOS};
+use fedzero::sched::fleet::FleetInstance;
 use fedzero::sched::solver::{Solver, SolverRegistry};
 use fedzero::sched::validate;
 use fedzero::util::json::Json;
@@ -67,7 +68,7 @@ fn cmd_schedule(p: &cli::Parsed) -> fedzero::Result<()> {
     let mix = parse_mix(p.req("regime")?)?;
 
     // Resolving through the registry makes `--algo` errors list every
-    // valid solver name.
+    // valid solver name with its Table 2 applicability.
     let registry = SolverRegistry::with_defaults(seed);
     let solver = registry.resolve(p.req("algo")?)?;
 
@@ -75,9 +76,13 @@ fn cmd_schedule(p: &cli::Parsed) -> fedzero::Result<()> {
     let fleet = Fleet::sample(devices, mix, &mut rng);
     let t = tasks.min(fleet.capacity());
     let inst = fleet.instance(t, 0)?;
+    // Class-deduplicate before solving: interchangeable devices collapse,
+    // so class-aware solvers run in the number of classes, not devices.
+    let fleet_inst = FleetInstance::from_flat(&inst)?;
 
     let timer = Timer::start();
-    let sched = solver.solve_with_rng(&inst, &mut rng)?;
+    let assignment = solver.solve_with_rng(&fleet_inst, &mut rng)?;
+    let sched = assignment.expand(&fleet_inst);
     let elapsed = timer.elapsed_s();
     let cost = validate::checked_cost(&inst, &sched)?;
 
@@ -112,7 +117,13 @@ fn cmd_schedule(p: &cli::Parsed) -> fedzero::Result<()> {
         ]);
     }
     table.print();
-    println!("total energy: {}   (solved in {})", fmt_energy(cost), fmt_duration(elapsed));
+    println!(
+        "total energy: {}   (solved in {}; {} devices in {} classes)",
+        fmt_energy(cost),
+        fmt_duration(elapsed),
+        fleet_inst.n_devices(),
+        fleet_inst.n_classes()
+    );
     Ok(())
 }
 
@@ -121,13 +132,16 @@ fn cmd_train(p: &cli::Parsed) -> fedzero::Result<()> {
         Some(path) => TrainConfig::from_toml(&std::fs::read_to_string(path)?)?,
         None => TrainConfig::default(),
     };
-    // CLI overrides.
+    // CLI overrides. `--seed` first: it threads end-to-end (fleet
+    // sampling, data partitioning, selection, and the coordinator RNG the
+    // `random` baseline consumes), so runs are reproducible from the
+    // command line.
+    cfg.seed = p.get_or("seed", cfg.seed)?;
     cfg.rounds = p.get_or("rounds", cfg.rounds)?;
     cfg.devices = p.get_or("devices", cfg.devices)?;
     cfg.tasks_per_round = p.get_or("tasks", cfg.tasks_per_round)?;
     cfg.model = p.get("model").unwrap_or(&cfg.model).to_string();
     cfg.policy = parse_algo(p.req("algo")?, cfg.seed)?;
-    cfg.seed = p.get_or("seed", cfg.seed)?;
     cfg.artifacts_dir = p.get("artifacts").unwrap_or(&cfg.artifacts_dir).to_string();
     cfg.validate()?;
 
@@ -211,16 +225,7 @@ fn cmd_fleet(p: &cli::Parsed) -> fedzero::Result<()> {
 }
 
 fn cmd_solvers() -> fedzero::Result<()> {
-    use fedzero::sched::auto::Scenario;
-    use fedzero::sched::costs::MarginalRegime;
     let registry = SolverRegistry::with_defaults(0);
-    let scenarios: [(&str, Scenario); 5] = [
-        ("arb", Scenario { regime: MarginalRegime::Arbitrary, has_upper_limits: true }),
-        ("inc", Scenario { regime: MarginalRegime::Increasing, has_upper_limits: true }),
-        ("con", Scenario { regime: MarginalRegime::Constant, has_upper_limits: true }),
-        ("dec", Scenario { regime: MarginalRegime::Decreasing, has_upper_limits: true }),
-        ("dec∞", Scenario { regime: MarginalRegime::Decreasing, has_upper_limits: false }),
-    ];
     let mut table = Table::new(
         "registered solvers (✓ = provably optimal for the scenario)",
         &["solver", "arb", "inc", "con", "dec", "dec∞"],
@@ -228,14 +233,17 @@ fn cmd_solvers() -> fedzero::Result<()> {
     for name in registry.names() {
         let s = registry.resolve(name)?;
         let mut row = vec![name.to_string()];
-        for (_, sc) in &scenarios {
+        for (_, sc) in &TABLE2_SCENARIOS {
             row.push(if s.is_optimal_for(sc) { "✓".into() } else { "·".into() });
         }
         table.rows_str(row);
     }
     table.print();
+    // The same applicability, one line per solver (what `--algo` errors
+    // print).
+    println!("applicability: {}", registry.describe().join(" "));
     // Show what Table 2 dispatch would pick per scenario.
-    for (label, sc) in &scenarios {
+    for (label, sc) in &TABLE2_SCENARIOS {
         println!("auto dispatch [{label}] → {}", best_algorithm(sc));
     }
     Ok(())

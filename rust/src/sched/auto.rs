@@ -17,7 +17,8 @@
 //! solver) turns that name into a solve.
 
 use crate::error::Result;
-use crate::sched::costs::{classify, combine, MarginalRegime};
+use crate::sched::costs::{classify, classify_marginals, combine, MarginalRegime};
+use crate::sched::fleet::{CostView, FleetInstance, LowerFree};
 use crate::sched::instance::{Instance, Schedule};
 use crate::sched::limits;
 
@@ -45,6 +46,39 @@ pub fn classify_instance(inst: &Instance) -> Scenario {
     }
 }
 
+/// The five canonical Table 2 scenario rows with short labels — shared by
+/// the `solvers` CLI matrix and the registry's `--algo` error text.
+pub const TABLE2_SCENARIOS: [(&str, Scenario); 5] = [
+    ("arb", Scenario { regime: MarginalRegime::Arbitrary, has_upper_limits: true }),
+    ("inc", Scenario { regime: MarginalRegime::Increasing, has_upper_limits: true }),
+    ("con", Scenario { regime: MarginalRegime::Constant, has_upper_limits: true }),
+    ("dec", Scenario { regime: MarginalRegime::Decreasing, has_upper_limits: true }),
+    ("dec∞", Scenario { regime: MarginalRegime::Decreasing, has_upper_limits: false }),
+];
+
+/// Classify one class of a (lower-limit-free) view over `[0, cap]` —
+/// Definition 3 evaluated lazily through [`CostView`], sharing the
+/// tolerance core ([`classify_marginals`]) with [`classify`].
+fn classify_class<V: CostView + ?Sized>(view: &V, c: usize) -> MarginalRegime {
+    let upper = view.cap(c);
+    classify_marginals((1..=upper).map(|j| view.eval(c, j) - view.eval(c, j - 1)))
+}
+
+/// Classify a class-deduplicated fleet: one regime sample per **class**
+/// (`O(Σ_c (U_c − L_c))` — independent of multiplicities), combined
+/// exactly like [`classify_instance`].
+pub fn classify_fleet(fleet: &FleetInstance) -> Scenario {
+    let view = LowerFree::of(fleet);
+    let regimes: Vec<MarginalRegime> = (0..view.n_classes())
+        .map(|c| classify_class(&view, c))
+        .collect();
+    Scenario {
+        regime: combine(&regimes),
+        has_upper_limits: (0..view.n_classes())
+            .any(|c| view.cap(c) < view.tasks()),
+    }
+}
+
 /// Name of the cheapest optimal algorithm for a scenario (Table 2). The
 /// name resolves through the
 /// [`SolverRegistry`](crate::sched::solver::SolverRegistry).
@@ -61,9 +95,9 @@ pub fn best_algorithm(s: &Scenario) -> &'static str {
 
 /// Classify + dispatch (the `auto` policy) as a plain function — usable as
 /// a `fn(&Instance) -> Result<Schedule>` pointer. Identical to solving
-/// through the registry's `auto` entry.
+/// through the registry's `auto` entry on a flat instance.
 pub fn solve_auto(inst: &Instance) -> Result<Schedule> {
-    crate::sched::solver::AutoSolver.solve(inst)
+    crate::sched::solver::AutoSolver.solve_flat(inst)
 }
 
 // Re-exported so `use crate::sched::auto::...` call sites keep compiling

@@ -19,7 +19,14 @@
 //! Definition 3 of the paper (eqs. 7a–7c).
 
 /// A cost function over task counts.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` is *structural* value equality (same family, same
+/// parameters) — it is what [`crate::sched::fleet::FleetBuilder`] uses to
+/// deduplicate interchangeable devices into classes. Two functions that
+/// are pointwise equal but structurally different (e.g. an `Affine` and an
+/// equivalent `Tabulated`) compare unequal; that only costs dedup
+/// opportunities, never correctness.
+#[derive(Clone, Debug, PartialEq)]
 pub enum CostFn {
     /// `fixed + per_task * j` — constant marginal cost (7b).
     Affine { fixed: f64, per_task: f64 },
@@ -81,6 +88,68 @@ impl CostFn {
         }
     }
 
+    /// Structural fingerprint for class bucketing: equal functions hash
+    /// equal (`f64`s hashed by bit pattern, so `0.0`/`-0.0` or NaN params
+    /// may split a bucket — the follow-up `PartialEq` check keeps classes
+    /// correct either way).
+    pub fn structural_hash(&self) -> u64 {
+        // FNV-1a, hand-rolled (the offline build has no hash crates).
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: u64, word: u64) -> u64 {
+            let mut h = h;
+            for b in word.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(PRIME);
+            }
+            h
+        }
+        fn go(c: &CostFn, mut h: u64) -> u64 {
+            match c {
+                CostFn::Affine { fixed, per_task } => {
+                    h = mix(h, 1);
+                    h = mix(h, fixed.to_bits());
+                    mix(h, per_task.to_bits())
+                }
+                CostFn::Quadratic { fixed, a, b } => {
+                    h = mix(h, 2);
+                    h = mix(h, fixed.to_bits());
+                    h = mix(h, a.to_bits());
+                    mix(h, b.to_bits())
+                }
+                CostFn::PowerLaw { fixed, scale, exponent } => {
+                    h = mix(h, 3);
+                    h = mix(h, fixed.to_bits());
+                    h = mix(h, scale.to_bits());
+                    mix(h, exponent.to_bits())
+                }
+                CostFn::Logarithmic { fixed, scale } => {
+                    h = mix(h, 4);
+                    h = mix(h, fixed.to_bits());
+                    mix(h, scale.to_bits())
+                }
+                CostFn::Tabulated { first, values } => {
+                    h = mix(h, 5);
+                    h = mix(h, *first as u64);
+                    for v in values {
+                        h = mix(h, v.to_bits());
+                    }
+                    h
+                }
+                CostFn::Scaled { weight, inner } => {
+                    h = mix(h, 6);
+                    h = mix(h, weight.to_bits());
+                    go(inner, h)
+                }
+                CostFn::Shifted { shift, inner } => {
+                    h = mix(h, 7);
+                    h = mix(h, *shift as u64);
+                    go(inner, h)
+                }
+            }
+        }
+        go(self, OFFSET)
+    }
+
     /// Convenience: build a tabulated cost from `(count, cost)` pairs that
     /// must form a contiguous range.
     pub fn from_table(pairs: &[(usize, f64)]) -> CostFn {
@@ -111,23 +180,22 @@ pub enum MarginalRegime {
 /// Relative tolerance used when comparing marginal costs.
 pub const REGIME_TOL: f64 = 1e-9;
 
-/// Classify one cost function over `[lower, upper]`.
-///
-/// Follows Definition 3: compares consecutive marginal costs `M(j)` vs
-/// `M(j+1)` for `j ∈ ]lower, upper[`. Domains with fewer than two marginal
-/// values are vacuously `Constant`.
-pub fn classify(cost: &CostFn, lower: usize, upper: usize) -> MarginalRegime {
-    assert!(lower <= upper);
-    // Marginals exist for j in [lower+1, upper].
-    if upper - lower < 2 {
-        return MarginalRegime::Constant;
-    }
+/// Classify a sequence of successive marginal costs `M(L+1), ..., M(U)`
+/// per Definition 3 — the comparison core shared by [`classify`] (flat
+/// cost functions) and the fleet-view classifier
+/// ([`crate::sched::auto::classify_fleet`]), so the tolerance rules can
+/// never drift apart. Sequences with fewer than two marginals are
+/// vacuously `Constant`.
+pub fn classify_marginals(marginals: impl IntoIterator<Item = f64>) -> MarginalRegime {
+    let mut it = marginals.into_iter();
+    let mut prev = match it.next() {
+        Some(m) => m,
+        None => return MarginalRegime::Constant,
+    };
     let mut incr = true;
     let mut decr = true;
     let mut cons = true;
-    let mut prev = cost.marginal(lower + 1, lower);
-    for j in lower + 2..=upper {
-        let cur = cost.marginal(j, lower);
+    for cur in it {
         let scale = prev.abs().max(cur.abs()).max(1.0);
         let tol = REGIME_TOL * scale;
         if cur < prev - tol {
@@ -148,6 +216,17 @@ pub fn classify(cost: &CostFn, lower: usize, upper: usize) -> MarginalRegime {
         (false, true, true) => MarginalRegime::Constant, // unreachable, kept total
         (false, false, false) => MarginalRegime::Arbitrary,
     }
+}
+
+/// Classify one cost function over `[lower, upper]`.
+///
+/// Follows Definition 3: compares consecutive marginal costs `M(j)` vs
+/// `M(j+1)` for `j ∈ ]lower, upper[`. Domains with fewer than two marginal
+/// values are vacuously `Constant`.
+pub fn classify(cost: &CostFn, lower: usize, upper: usize) -> MarginalRegime {
+    assert!(lower <= upper);
+    // Marginals exist for j in [lower+1, upper].
+    classify_marginals((lower + 1..=upper).map(|j| cost.marginal(j, lower)))
 }
 
 /// Combine per-resource regimes into the instance-wide scenario: the

@@ -1,0 +1,702 @@
+//! Fleet-scale problem model: device **classes** instead of per-device
+//! vectors.
+//!
+//! The paper's tasks are identical and atomic, so two devices with the
+//! same cost function and the same limits are *interchangeable*: any
+//! schedule can permute their assignments without changing the total cost
+//! (paper §3, Definition 1 is symmetric in equal resources). Real fleets
+//! exploit this heavily — 10⁵ phones fall into a few hundred hardware/
+//! battery archetypes — and related work on mobile-edge FL (Luo et al.,
+//! arXiv:2109.05411; Gao et al., arXiv:2211.00481) schedules device
+//! *populations*, not individuals.
+//!
+//! This module provides:
+//!
+//! * [`DeviceClass`] — one `(C, L, U)` signature plus the member devices;
+//! * [`FleetInstance`] — a builder-constructed, validated instance whose
+//!   size is the number of classes `k`, not the number of devices `n`;
+//! * [`CostView`] — the lazy cost seam solvers evaluate through (no
+//!   `O(n·T)` pre-materialized tables), including [`LowerFree`], the §5.2
+//!   lower-limit removal as a zero-allocation view;
+//! * [`Assignment`] — class-level decisions (run-length encoded loads)
+//!   that expand to per-device [`Schedule`]s on demand.
+//!
+//! [`FleetInstance::from_flat`] / [`FleetInstance::to_flat`] adapt to the
+//! legacy per-device [`Instance`]; the round-trip is exact (same slot
+//! order, same limits, value-equal cost functions), which is what keeps
+//! the seed solvers bit-for-bit equivalent through the new
+//! [`crate::sched::solver::Solver`] seam.
+
+use std::collections::HashMap;
+
+use crate::error::{FedError, Result};
+use crate::sched::costs::CostFn;
+use crate::sched::instance::{Instance, Schedule};
+
+/// A class of interchangeable devices: one cost signature, many members.
+#[derive(Clone, Debug)]
+pub struct DeviceClass {
+    /// Shared cost function `C` of every member.
+    pub cost: CostFn,
+    /// Shared lower limit `L`.
+    pub lower: usize,
+    /// Shared upper limit `U` (`>= T` encodes "unlimited", as in
+    /// [`Instance`]).
+    pub upper: usize,
+    /// Device slots belonging to this class, in ascending slot order.
+    pub members: Vec<usize>,
+}
+
+impl DeviceClass {
+    /// Multiplicity `m` of the class.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.members.len()
+    }
+}
+
+/// A class-deduplicated Minimal Cost FL Schedule instance.
+///
+/// Constructed through [`FleetInstance::builder`] (or
+/// [`FleetInstance::from_flat`]); always validated. Device *slots*
+/// `0..n_devices()` are the order devices were added in — the order
+/// [`Assignment::expand`] and [`FleetInstance::to_flat`] reproduce.
+#[derive(Clone, Debug)]
+pub struct FleetInstance {
+    /// Workload size `T`.
+    pub tasks: usize,
+    classes: Vec<DeviceClass>,
+    /// Class index of each device slot.
+    slot_class: Vec<usize>,
+}
+
+impl FleetInstance {
+    /// Start building a fleet instance.
+    pub fn builder() -> FleetBuilder {
+        FleetBuilder::new()
+    }
+
+    /// The device classes (ascending first-member order).
+    pub fn classes(&self) -> &[DeviceClass] {
+        &self.classes
+    }
+
+    /// Number of device classes `k` (inherent so callers need not import
+    /// [`CostView`]).
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Total devices `n = Σ m_c`.
+    pub fn n_devices(&self) -> usize {
+        self.slot_class.len()
+    }
+
+    /// Class of a device slot.
+    #[inline]
+    pub fn class_of(&self, slot: usize) -> usize {
+        self.slot_class[slot]
+    }
+
+    /// Adapt a flat per-device instance: group equal `(C, L, U)` devices
+    /// into classes (`O(n)` expected via structural hashing), preserving
+    /// slot order. The round-trip through [`FleetInstance::to_flat`] is
+    /// exact.
+    pub fn from_flat(inst: &Instance) -> Result<FleetInstance> {
+        inst.validate()?;
+        let mut b = FleetBuilder::new().tasks(inst.tasks);
+        for i in 0..inst.n() {
+            b = b.device(inst.costs[i].clone(), inst.lower[i], inst.upper[i]);
+        }
+        b.build()
+    }
+
+    /// Expand back to the flat per-device instance (slot order).
+    pub fn to_flat(&self) -> Instance {
+        let n = self.n_devices();
+        let mut lower = Vec::with_capacity(n);
+        let mut upper = Vec::with_capacity(n);
+        let mut costs = Vec::with_capacity(n);
+        for &c in &self.slot_class {
+            let class = &self.classes[c];
+            lower.push(class.lower);
+            upper.push(class.upper);
+            costs.push(class.cost.clone());
+        }
+        // Invariants guaranteed by the builder; skip re-validation.
+        Instance { tasks: self.tasks, lower, upper, costs }
+    }
+
+    /// Validity conditions of §3 at class granularity: `L <= U` per class
+    /// and `ΣL <= T <= ΣU` over all members (overflow-safe, mirroring
+    /// [`Instance::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.classes.is_empty() {
+            return Err(FedError::InvalidInstance("no device classes".into()));
+        }
+        let mut sum_l = 0usize;
+        let mut sum_u = 0usize;
+        for (c, class) in self.classes.iter().enumerate() {
+            if class.members.is_empty() {
+                return Err(FedError::InvalidInstance(format!(
+                    "class {c}: empty member list"
+                )));
+            }
+            if class.lower > class.upper {
+                return Err(FedError::InvalidInstance(format!(
+                    "class {c}: L={} > U={}",
+                    class.lower, class.upper
+                )));
+            }
+            // Per-member fold keeps saturation semantics identical to the
+            // flat validator (a single huge L must stay > T).
+            for _ in 0..class.count() {
+                sum_l = sum_l.saturating_add(class.lower);
+                sum_u = sum_u.saturating_add(class.upper.min(self.tasks));
+            }
+        }
+        if sum_l > self.tasks {
+            return Err(FedError::InvalidInstance(format!(
+                "ΣL = {sum_l} > T = {}",
+                self.tasks
+            )));
+        }
+        if sum_u < self.tasks {
+            return Err(FedError::InvalidInstance(format!(
+                "ΣU = {sum_u} < T = {}",
+                self.tasks
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`FleetInstance`]: push devices (or whole classes), then
+/// [`FleetBuilder::build`]. Devices with equal `(C, L, U)` signatures are
+/// deduplicated into one class regardless of push order.
+#[derive(Debug, Default)]
+pub struct FleetBuilder {
+    tasks: usize,
+    classes: Vec<DeviceClass>,
+    /// structural hash → candidate class indices (collision chain).
+    buckets: HashMap<u64, Vec<usize>>,
+    n_devices: usize,
+}
+
+impl FleetBuilder {
+    /// Empty builder (`T = 0` until [`FleetBuilder::tasks`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the workload size `T`.
+    pub fn tasks(mut self, t: usize) -> Self {
+        self.tasks = t;
+        self
+    }
+
+    /// Add one device; returns the builder (slots are assigned in push
+    /// order).
+    pub fn device(self, cost: CostFn, lower: usize, upper: usize) -> Self {
+        self.device_class(cost, lower, upper, 1)
+    }
+
+    /// Add `count` interchangeable devices at once (consecutive slots).
+    pub fn device_class(
+        mut self,
+        cost: CostFn,
+        lower: usize,
+        upper: usize,
+        count: usize,
+    ) -> Self {
+        if count == 0 {
+            return self;
+        }
+        let key = cost
+            .structural_hash()
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            ^ (lower as u64).wrapping_mul(0x517c_c1b7_2722_0a95)
+            ^ (upper as u64);
+        let slots: Vec<usize> = (self.n_devices..self.n_devices + count).collect();
+        self.n_devices += count;
+        let found = self.buckets.get(&key).and_then(|chain| {
+            chain.iter().copied().find(|&ci| {
+                let class = &self.classes[ci];
+                class.lower == lower && class.upper == upper && class.cost == cost
+            })
+        });
+        match found {
+            Some(ci) => self.classes[ci].members.extend_from_slice(&slots),
+            None => {
+                self.buckets
+                    .entry(key)
+                    .or_default()
+                    .push(self.classes.len());
+                self.classes
+                    .push(DeviceClass { cost, lower, upper, members: slots });
+            }
+        }
+        self
+    }
+
+    /// Validate and finish.
+    pub fn build(self) -> Result<FleetInstance> {
+        let mut slot_class = vec![0usize; self.n_devices];
+        for (ci, class) in self.classes.iter().enumerate() {
+            for &s in &class.members {
+                slot_class[s] = ci;
+            }
+        }
+        let fleet = FleetInstance { tasks: self.tasks, classes: self.classes, slot_class };
+        fleet.validate()?;
+        Ok(fleet)
+    }
+}
+
+/// Lazy cost access at class granularity — the seam solvers evaluate
+/// through instead of receiving `O(n·T)` pre-materialized tables.
+///
+/// Implementors: [`FleetInstance`] (the instance itself) and
+/// [`LowerFree`] (the §5.2 transformation as a view). Solver cores are
+/// generic over `V: CostView + ?Sized`, so they never know (or care)
+/// whether limits were already removed.
+pub trait CostView {
+    /// Workload size `T`.
+    fn tasks(&self) -> usize;
+    /// Number of device classes `k`.
+    fn n_classes(&self) -> usize;
+    /// Multiplicity of class `c`.
+    fn count(&self, c: usize) -> usize;
+    /// Lower limit of each member of class `c`.
+    fn lower(&self, c: usize) -> usize;
+    /// Upper limit of each member of class `c`.
+    fn upper(&self, c: usize) -> usize;
+    /// Cost of one member of class `c` running `j` tasks.
+    fn eval(&self, c: usize, j: usize) -> f64;
+
+    /// Effective per-member cap of class `c`, clamped to `T`.
+    #[inline]
+    fn cap(&self, c: usize) -> usize {
+        self.upper(c).min(self.tasks())
+    }
+
+    /// Marginal cost `M(j)` of the `j`-th task on a member of class `c`
+    /// (eq. 6; `M(j <= L) := 0`).
+    #[inline]
+    fn marginal(&self, c: usize, j: usize) -> f64 {
+        if j <= self.lower(c) {
+            0.0
+        } else {
+            self.eval(c, j) - self.eval(c, j - 1)
+        }
+    }
+
+    /// Total devices `n = Σ m_c`.
+    fn n_devices(&self) -> usize {
+        (0..self.n_classes()).map(|c| self.count(c)).sum()
+    }
+}
+
+impl CostView for FleetInstance {
+    fn tasks(&self) -> usize {
+        self.tasks
+    }
+    fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+    fn count(&self, c: usize) -> usize {
+        self.classes[c].count()
+    }
+    fn lower(&self, c: usize) -> usize {
+        self.classes[c].lower
+    }
+    fn upper(&self, c: usize) -> usize {
+        self.classes[c].upper
+    }
+    fn eval(&self, c: usize, j: usize) -> f64 {
+        self.classes[c].cost.eval(j)
+    }
+}
+
+/// The §5.2 lower-limit removal (eqs. 8–10) as a **lazy view**: no cost
+/// clones, no boxed [`CostFn::Shifted`] wrappers — `T' = T − Σ m·L`,
+/// `U' = U − L`, `C'(j) = C(j + L) − C(L)`, computed per query.
+#[derive(Clone, Copy, Debug)]
+pub struct LowerFree<'a> {
+    fleet: &'a FleetInstance,
+    t_prime: usize,
+}
+
+impl<'a> LowerFree<'a> {
+    /// View `fleet` with all lower limits removed.
+    pub fn of(fleet: &'a FleetInstance) -> Self {
+        let sum_l: usize = fleet
+            .classes
+            .iter()
+            .map(|cl| cl.lower * cl.count())
+            .sum();
+        Self { fleet, t_prime: fleet.tasks - sum_l }
+    }
+
+    /// Map transformed class loads back to original loads (eq. 11:
+    /// `x = x' + L`).
+    pub fn restore(&self, mut groups: ClassLoads) -> ClassLoads {
+        for (c, g) in groups.iter_mut().enumerate() {
+            let l = self.fleet.classes[c].lower;
+            if l > 0 {
+                for (load, _) in g.iter_mut() {
+                    *load += l;
+                }
+            }
+        }
+        groups
+    }
+}
+
+impl CostView for LowerFree<'_> {
+    fn tasks(&self) -> usize {
+        self.t_prime
+    }
+    fn n_classes(&self) -> usize {
+        self.fleet.classes.len()
+    }
+    fn count(&self, c: usize) -> usize {
+        self.fleet.classes[c].count()
+    }
+    fn lower(&self, _c: usize) -> usize {
+        0
+    }
+    fn upper(&self, c: usize) -> usize {
+        let cl = &self.fleet.classes[c];
+        cl.upper - cl.lower
+    }
+    fn eval(&self, c: usize, j: usize) -> f64 {
+        let cl = &self.fleet.classes[c];
+        if cl.lower == 0 {
+            cl.cost.eval(j)
+        } else {
+            cl.cost.eval(j + cl.lower) - cl.cost.eval(cl.lower)
+        }
+    }
+}
+
+/// Class-level loads: for each class, `(load, n_devices)` runs in member
+/// order. `Σ n_devices` per class must equal the class multiplicity.
+pub type ClassLoads = Vec<Vec<(usize, usize)>>;
+
+/// A class-level scheduling decision, expandable to a per-device
+/// [`Schedule`] on demand.
+///
+/// Stored run-length encoded: class `c`'s members receive the loads of
+/// `groups()[c]` in member order, so an `Assignment` built from a flat
+/// schedule ([`Assignment::from_schedule`]) expands back to exactly that
+/// schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    groups: ClassLoads,
+}
+
+impl Assignment {
+    /// Wrap solver-produced class loads, merging adjacent equal runs.
+    pub fn from_groups(groups: ClassLoads) -> Self {
+        let groups = groups
+            .into_iter()
+            .map(|g| {
+                let mut out: Vec<(usize, usize)> = Vec::with_capacity(g.len());
+                for (load, n) in g {
+                    if n == 0 {
+                        continue;
+                    }
+                    match out.last_mut() {
+                        Some((last, ln)) if *last == load => *ln += n,
+                        _ => out.push((load, n)),
+                    }
+                }
+                out
+            })
+            .collect();
+        Self { groups }
+    }
+
+    /// Group a flat schedule's per-device loads by class (member order
+    /// preserved, so [`Assignment::expand`] round-trips exactly).
+    pub fn from_schedule(fleet: &FleetInstance, sched: &Schedule) -> Self {
+        let groups = fleet
+            .classes
+            .iter()
+            .map(|cl| {
+                cl.members
+                    .iter()
+                    .map(|&s| (sched.get(s), 1))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        Self::from_groups(groups)
+    }
+
+    /// The per-class load runs.
+    pub fn groups(&self) -> &ClassLoads {
+        &self.groups
+    }
+
+    /// Total assigned tasks.
+    pub fn total_tasks(&self) -> usize {
+        self.groups
+            .iter()
+            .flatten()
+            .map(|&(load, n)| load * n)
+            .sum()
+    }
+
+    /// Total cost `Σ_c Σ_runs n · C_c(load)` under a view.
+    pub fn total_cost<V: CostView + ?Sized>(&self, view: &V) -> f64 {
+        self.groups
+            .iter()
+            .enumerate()
+            .flat_map(|(c, g)| {
+                g.iter().map(move |&(load, n)| n as f64 * view.eval(c, load))
+            })
+            .sum()
+    }
+
+    /// Feasibility at class level: run counts match multiplicities, loads
+    /// within `[L, U]`, totals sum to `T` (mirrors
+    /// [`crate::sched::validate::check`]).
+    pub fn check(&self, fleet: &FleetInstance) -> Result<()> {
+        if self.groups.len() != fleet.n_classes() {
+            return Err(FedError::InvalidSchedule(format!(
+                "assignment has {} classes for {}",
+                self.groups.len(),
+                fleet.n_classes()
+            )));
+        }
+        for (c, g) in self.groups.iter().enumerate() {
+            let class = &fleet.classes()[c];
+            let devs: usize = g.iter().map(|&(_, n)| n).sum();
+            if devs != class.count() {
+                return Err(FedError::InvalidSchedule(format!(
+                    "class {c}: {devs} loads for {} members",
+                    class.count()
+                )));
+            }
+            for &(load, _) in g {
+                if load < class.lower || load > class.upper {
+                    return Err(FedError::InvalidSchedule(format!(
+                        "class {c}: load {load} outside [{}, {}]",
+                        class.lower, class.upper
+                    )));
+                }
+            }
+        }
+        let total = self.total_tasks();
+        if total != fleet.tasks {
+            return Err(FedError::InvalidSchedule(format!(
+                "assigned {total} != T = {}",
+                fleet.tasks
+            )));
+        }
+        Ok(())
+    }
+
+    /// Expand to a per-device schedule in slot order.
+    pub fn expand(&self, fleet: &FleetInstance) -> Schedule {
+        let mut x = vec![0usize; fleet.n_devices()];
+        for (c, g) in self.groups.iter().enumerate() {
+            let members = &fleet.classes()[c].members;
+            let mut m = 0usize;
+            for &(load, n) in g {
+                for _ in 0..n {
+                    x[members[m]] = load;
+                    m += 1;
+                }
+            }
+        }
+        Schedule::new(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::validate;
+
+    fn affine(per_task: f64) -> CostFn {
+        CostFn::Affine { fixed: 0.0, per_task }
+    }
+
+    #[test]
+    fn builder_dedups_equal_devices() {
+        let fleet = FleetInstance::builder()
+            .tasks(10)
+            .device(affine(1.0), 0, 5)
+            .device(affine(2.0), 0, 5)
+            .device(affine(1.0), 0, 5)
+            .device_class(affine(2.0), 0, 5, 3)
+            .build()
+            .unwrap();
+        assert_eq!(fleet.n_classes(), 2);
+        assert_eq!(fleet.n_devices(), 6);
+        assert_eq!(fleet.classes()[0].members, vec![0, 2]);
+        assert_eq!(fleet.classes()[1].members, vec![1, 3, 4, 5]);
+        assert_eq!(fleet.class_of(4), 1);
+    }
+
+    #[test]
+    fn different_limits_split_classes() {
+        let fleet = FleetInstance::builder()
+            .tasks(4)
+            .device(affine(1.0), 0, 5)
+            .device(affine(1.0), 1, 5)
+            .device(affine(1.0), 0, 6)
+            .build()
+            .unwrap();
+        assert_eq!(fleet.n_classes(), 3);
+    }
+
+    #[test]
+    fn builder_validates() {
+        // L > U
+        assert!(FleetInstance::builder()
+            .tasks(3)
+            .device(affine(1.0), 2, 1)
+            .build()
+            .is_err());
+        // ΣU < T
+        assert!(FleetInstance::builder()
+            .tasks(30)
+            .device_class(affine(1.0), 0, 2, 3)
+            .build()
+            .is_err());
+        // ΣL > T
+        assert!(FleetInstance::builder()
+            .tasks(3)
+            .device_class(affine(1.0), 2, 4, 2)
+            .build()
+            .is_err());
+        // empty
+        assert!(FleetInstance::builder().tasks(1).build().is_err());
+    }
+
+    #[test]
+    fn huge_limits_do_not_overflow() {
+        let fleet = FleetInstance::builder()
+            .tasks(10)
+            .device_class(affine(1.0), 0, usize::MAX, 3)
+            .build()
+            .unwrap();
+        assert_eq!(fleet.cap(0), 10);
+        assert!(FleetInstance::builder()
+            .tasks(10)
+            .device_class(affine(1.0), usize::MAX, usize::MAX, 2)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn from_flat_to_flat_roundtrips_exactly() {
+        let inst = Instance::paper_example(8);
+        let fleet = FleetInstance::from_flat(&inst).unwrap();
+        assert_eq!(fleet.n_classes(), 3, "distinct tables → one class each");
+        let back = fleet.to_flat();
+        assert_eq!(back.tasks, inst.tasks);
+        assert_eq!(back.lower, inst.lower);
+        assert_eq!(back.upper, inst.upper);
+        for i in 0..inst.n() {
+            assert_eq!(back.costs[i], inst.costs[i]);
+        }
+    }
+
+    #[test]
+    fn from_flat_groups_duplicates_and_preserves_slots() {
+        let inst = Instance::new(
+            6,
+            vec![0, 0, 0, 0],
+            vec![3, 3, 3, 3],
+            vec![affine(1.0), affine(5.0), affine(1.0), affine(5.0)],
+        )
+        .unwrap();
+        let fleet = FleetInstance::from_flat(&inst).unwrap();
+        assert_eq!(fleet.n_classes(), 2);
+        let back = fleet.to_flat();
+        assert_eq!(back.costs[2], affine(1.0));
+        assert_eq!(back.costs[3], affine(5.0));
+    }
+
+    #[test]
+    fn lower_free_view_matches_eq10() {
+        let inst = Instance::paper_example(8);
+        let fleet = FleetInstance::from_flat(&inst).unwrap();
+        let view = LowerFree::of(&fleet);
+        assert_eq!(view.tasks(), 7); // 8 - (1+0+0)
+        assert_eq!(view.lower(0), 0);
+        assert_eq!(view.upper(0), 5);
+        for j in 0..=5 {
+            let expect = inst.costs[0].eval(j + 1) - inst.costs[0].eval(1);
+            assert!((view.eval(0, j) - expect).abs() < 1e-12);
+        }
+        // zero-lower classes are untouched
+        for j in 0..=6 {
+            assert_eq!(view.eval(1, j), inst.costs[1].eval(j));
+        }
+    }
+
+    #[test]
+    fn assignment_expand_roundtrips_a_schedule() {
+        let inst = Instance::new(
+            6,
+            vec![0; 4],
+            vec![3; 4],
+            vec![affine(1.0), affine(5.0), affine(1.0), affine(5.0)],
+        )
+        .unwrap();
+        let fleet = FleetInstance::from_flat(&inst).unwrap();
+        let sched = Schedule::new(vec![3, 0, 1, 2]);
+        let asg = Assignment::from_schedule(&fleet, &sched);
+        asg.check(&fleet).unwrap();
+        assert_eq!(asg.expand(&fleet), sched);
+        assert_eq!(asg.total_tasks(), 6);
+        let cost = asg.total_cost(&fleet);
+        assert!((cost - validate::total_cost(&inst, &sched)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn assignment_check_rejects_bad_loads() {
+        let fleet = FleetInstance::builder()
+            .tasks(4)
+            .device_class(affine(1.0), 1, 3, 2)
+            .build()
+            .unwrap();
+        // load above U
+        let bad = Assignment::from_groups(vec![vec![(4, 1), (0, 1)]]);
+        assert!(bad.check(&fleet).is_err());
+        // wrong member count
+        let bad = Assignment::from_groups(vec![vec![(2, 1)]]);
+        assert!(bad.check(&fleet).is_err());
+        // wrong total
+        let bad = Assignment::from_groups(vec![vec![(1, 2)]]);
+        assert!(bad.check(&fleet).is_err());
+        // valid
+        let ok = Assignment::from_groups(vec![vec![(3, 1), (1, 1)]]);
+        ok.check(&fleet).unwrap();
+        assert_eq!(ok.expand(&fleet).assignments(), &[3, 1]);
+    }
+
+    #[test]
+    fn from_groups_merges_adjacent_runs() {
+        let a = Assignment::from_groups(vec![vec![(2, 1), (2, 3), (0, 1), (2, 1)]]);
+        assert_eq!(a.groups()[0], vec![(2, 4), (0, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn cost_view_marginals_match_costfn() {
+        let fleet = FleetInstance::builder()
+            .tasks(6)
+            .device_class(CostFn::Quadratic { fixed: 1.0, a: 0.5, b: 0.0 }, 1, 6, 2)
+            .build()
+            .unwrap();
+        let c = &fleet.classes()[0].cost;
+        assert_eq!(fleet.marginal(0, 1), 0.0, "M(L) := 0");
+        assert!((fleet.marginal(0, 3) - c.marginal(3, 1)).abs() < 1e-12);
+        assert_eq!(fleet.n_devices(), 2);
+    }
+}

@@ -26,6 +26,7 @@
 //! unchanged).
 
 use crate::error::{FedError, Result};
+use crate::sched::fleet::{Assignment, CostView, FleetInstance, LowerFree};
 use crate::sched::instance::{Instance, Schedule};
 use crate::sched::limits;
 use crate::sched::mc2mkp::{dp, Classes, DpMatrices, Item};
@@ -137,6 +138,158 @@ pub fn solve(inst: &Instance) -> Result<Schedule> {
     Ok(tr.restore(&x))
 }
 
+/// Class-aware MarDec over a lazy [`CostView`].
+///
+/// Lemma 6's two optimal shapes survive class deduplication unchanged,
+/// but every enumeration shrinks from devices to classes:
+///
+/// * the (MC)²MKP "Prepare" classes become **multiplicity items**: a
+///   limited class of `m` members with per-member cap `u` contributes
+///   items `q·u` at cost `q·C̃(u)` for `q ∈ [0, min(m, ⌊T/u⌋)]` (choosing
+///   `q` members at max capacity — which members is irrelevant, they are
+///   interchangeable);
+/// * the intermediary scan over `R^lim` needs one representative per
+///   class (identical devices yield identical candidates): `k_lim` DP
+///   recomputations instead of `n_lim`;
+/// * the `argmin` over `R^unl` runs over `k_unl` classes.
+///
+/// `O(k_lim · T · Σ_c q_max)` time versus the flat `O(T n²)`.
+pub fn solve_view<V: CostView + ?Sized>(
+    view: &V,
+) -> Result<Vec<Vec<(usize, usize)>>> {
+    let t_total = view.tasks();
+    let k = view.n_classes();
+
+    // Normalized cost C̃_c(j) = C_c(j) − C_c(0) (see the module note on
+    // fixed costs).
+    let c0: Vec<f64> = (0..k).map(|c| view.eval(c, 0)).collect();
+    let cost = |c: usize, j: usize| view.eval(c, j) - c0[c];
+
+    let lim: Vec<usize> = (0..k).filter(|&c| view.cap(c) < t_total).collect();
+    let unl: Vec<usize> = (0..k).filter(|&c| view.cap(c) >= t_total).collect();
+    let k_lim = lim.len();
+
+    // Multiplicity items: q members of class c at max capacity. `reserve`
+    // holds back one member (the intermediary) for the reduced DPs.
+    let items_for = |c: usize, reserve: usize| -> Vec<Item> {
+        let u = view.cap(c);
+        let m = view.count(c) - reserve;
+        let q_max = if u == 0 { 0 } else { m.min(t_total / u) };
+        (0..=q_max)
+            .map(|q| Item { weight: q * u, cost: q as f64 * cost(c, u) })
+            .collect()
+    };
+    let classes = Classes {
+        classes: lim.iter().map(|&c| items_for(c, 0)).collect(),
+    };
+
+    let mut best_cost = f64::INFINITY;
+    let mut best: Option<Vec<Vec<(usize, usize)>>> = None;
+
+    // Backtrack a DP solution filling exactly `tau` into class groups
+    // (chosen item index == q because items are enumerated by q).
+    let translate = |m: &DpMatrices,
+                     cls: &Classes,
+                     intermediary: Option<(usize, usize)>,
+                     tau: usize|
+     -> Result<Vec<Vec<(usize, usize)>>> {
+        let chosen = m.backtrack(cls, tau)?;
+        let mut groups: Vec<Vec<(usize, usize)>> =
+            (0..k).map(|c| vec![(0, view.count(c))]).collect();
+        for (ci, &q) in chosen.iter().enumerate() {
+            let c = lim[ci];
+            let u = view.cap(c);
+            groups[c] = vec![(u, q), (0, view.count(c) - q)];
+        }
+        if let Some((c, t)) = intermediary {
+            // One reserved/unlimited member at load `t`; the full-capacity
+            // count `q` of that class never exceeds `count − 1` here.
+            let g = &mut groups[c];
+            let (_, idle) = g.pop().expect("groups always end with the idle run");
+            g.push((t, 1));
+            g.push((0, idle - 1));
+        }
+        Ok(groups)
+    };
+
+    // DP over the full limited set — phase 1 and the "no intermediary"
+    // candidate.
+    let m_full = dp(&classes, t_total);
+    if m_full.z(k_lim, t_total).is_finite() {
+        let c = m_full.z(k_lim, t_total);
+        if c < best_cost {
+            best_cost = c;
+            best = Some(translate(&m_full, &classes, None, t_total)?);
+        }
+    }
+
+    // One member of an unlimited class at intermediary capacity t.
+    if !unl.is_empty() {
+        for t in 0..=t_total {
+            let rest = m_full.z(k_lim, t_total - t);
+            if !rest.is_finite() {
+                continue;
+            }
+            let mut kc = unl[0];
+            let mut ck = cost(kc, t);
+            for &c in &unl[1..] {
+                let cc = cost(c, t);
+                if cc < ck {
+                    ck = cc;
+                    kc = c;
+                }
+            }
+            let total = ck + rest;
+            if total < best_cost {
+                best_cost = total;
+                best = Some(translate(
+                    &m_full,
+                    &classes,
+                    Some((kc, t)),
+                    t_total - t,
+                )?);
+            }
+        }
+    }
+
+    // One member of a limited class at intermediary capacity — one DP per
+    // *class* (members are interchangeable), reserving the intermediary.
+    for (ci, &c) in lim.iter().enumerate() {
+        let mut reduced = classes.clone();
+        reduced.classes[ci] = items_for(c, 1);
+        let m_red = dp(&reduced, t_total);
+        for t in 0..view.cap(c) {
+            let rest = m_red.z(k_lim, t_total - t);
+            if !rest.is_finite() {
+                continue;
+            }
+            let total = cost(c, t) + rest;
+            if total < best_cost {
+                best_cost = total;
+                best = Some(translate(
+                    &m_red,
+                    &reduced,
+                    Some((c, t)),
+                    t_total - t,
+                )?);
+            }
+        }
+    }
+
+    best.ok_or_else(|| {
+        FedError::Infeasible("MarDec found no candidate on a valid instance".into())
+    })
+}
+
+/// Run MarDec on a class-deduplicated fleet (same optimality contract as
+/// [`solve`]).
+pub fn solve_fleet(fleet: &FleetInstance) -> Result<Assignment> {
+    fleet.validate()?;
+    let view = LowerFree::of(fleet);
+    let groups = solve_view(&view)?;
+    Ok(Assignment::from_groups(view.restore(groups)))
+}
+
 /// Algorithm 7 (Translate): backtrack the DP solution filling exactly
 /// `tau` into a partial schedule over all `n` resources (unlisted
 /// resources get 0).
@@ -211,6 +364,41 @@ mod tests {
             let b =
                 validate::checked_cost(&inst, &mardecun::solve(&inst).unwrap()).unwrap();
             assert!((a - b).abs() < 1e-9, "MarDec {a} != MarDecUn {b}");
+        }
+    }
+
+    #[test]
+    fn fleet_matches_flat_on_multiplicity_classes() {
+        use crate::sched::fleet::FleetInstance;
+        let mut rng = Rng::new(0xF1DE);
+        for _case in 0..15 {
+            let t = 8 + rng.index(20);
+            let c1 = concave(&mut rng);
+            let c2 = concave(&mut rng);
+            let u1 = 2 + rng.index(t / 2 + 1);
+            let fleet = FleetInstance::builder()
+                .tasks(t)
+                .device_class(c1, 0, u1, 3)
+                .device_class(c2, 0, t + 3, 2)
+                .build()
+                .unwrap();
+            let asg = solve_fleet(&fleet).unwrap();
+            asg.check(&fleet).unwrap();
+            let flat = fleet.to_flat();
+            let c_flat =
+                validate::checked_cost(&flat, &solve(&flat).unwrap()).unwrap();
+            let c_dp =
+                validate::checked_cost(&flat, &mc2mkp::solve(&flat).unwrap())
+                    .unwrap();
+            let c_fleet = asg.total_cost(&fleet);
+            assert!(
+                (c_fleet - c_flat).abs() < 1e-9,
+                "fleet {c_fleet} != flat {c_flat}"
+            );
+            assert!(
+                (c_fleet - c_dp).abs() < 1e-9,
+                "fleet {c_fleet} != dp {c_dp}"
+            );
         }
     }
 

@@ -10,6 +10,7 @@
 //! Complexity: `Θ(n)`, `O(n)` space (the output schedule itself).
 
 use crate::error::{FedError, Result};
+use crate::sched::fleet::{Assignment, CostView, FleetInstance, LowerFree};
 use crate::sched::instance::{Instance, Schedule};
 use crate::sched::limits;
 
@@ -46,6 +47,51 @@ pub fn solve(inst: &Instance) -> Result<Schedule> {
     let mut x = vec![0usize; ti.n()];
     x[best] = t;
     Ok(tr.restore(&Schedule::new(x)))
+}
+
+/// Class-aware MarDecUn over a lazy [`CostView`]: Theorem 4's argmin runs
+/// over `k` classes instead of `n` devices — `Θ(k)` — and one member of
+/// the winning class takes everything.
+///
+/// Returns `Err` exactly like [`solve`] when any class has an effective
+/// upper limit.
+pub fn solve_view<V: CostView + ?Sized>(
+    view: &V,
+) -> Result<Vec<Vec<(usize, usize)>>> {
+    let t = view.tasks();
+    let k = view.n_classes();
+    if (0..k).any(|c| view.cap(c) < t) {
+        return Err(FedError::ScenarioMismatch(
+            "MarDecUn requires all resources unlimited (use MarDec)".into(),
+        ));
+    }
+    let mut best = 0usize;
+    let mut best_cost = f64::INFINITY;
+    for c in 0..k {
+        let inc = view.eval(c, t) - view.eval(c, 0);
+        if inc < best_cost {
+            best_cost = inc;
+            best = c;
+        }
+    }
+    Ok((0..k)
+        .map(|c| {
+            if c == best {
+                vec![(t, 1), (0, view.count(c) - 1)]
+            } else {
+                vec![(0, view.count(c))]
+            }
+        })
+        .collect())
+}
+
+/// Run MarDecUn on a class-deduplicated fleet (same contract as
+/// [`solve`]).
+pub fn solve_fleet(fleet: &FleetInstance) -> Result<Assignment> {
+    fleet.validate()?;
+    let view = LowerFree::of(fleet);
+    let groups = solve_view(&view)?;
+    Ok(Assignment::from_groups(view.restore(groups)))
 }
 
 #[cfg(test)]
@@ -98,6 +144,33 @@ mod tests {
         let s = solve(&inst).unwrap();
         assert_eq!(s.assignments(), &[2, 8]);
         validate::check(&inst, &s).unwrap();
+    }
+
+    #[test]
+    fn fleet_concentrates_on_one_member_of_the_cheapest_class() {
+        use crate::sched::fleet::FleetInstance;
+        let fleet = FleetInstance::builder()
+            .tasks(9)
+            .device_class(sqrt_cost(3.0), 0, 9, 2)
+            .device_class(sqrt_cost(1.0), 0, 9, 3)
+            .build()
+            .unwrap();
+        let asg = solve_fleet(&fleet).unwrap();
+        asg.check(&fleet).unwrap();
+        assert_eq!(asg.groups()[0], vec![(0, 2)]);
+        assert_eq!(asg.groups()[1], vec![(9, 1), (0, 2)]);
+        assert_eq!(asg.expand(&fleet).assignments(), &[0, 0, 9, 0, 0]);
+        // Limited classes must be rejected, like the flat solver.
+        let limited = FleetInstance::builder()
+            .tasks(9)
+            .device_class(sqrt_cost(1.0), 0, 4, 2)
+            .device_class(sqrt_cost(2.0), 0, 9, 1)
+            .build()
+            .unwrap();
+        assert!(matches!(
+            solve_fleet(&limited),
+            Err(FedError::ScenarioMismatch(_))
+        ));
     }
 
     #[test]

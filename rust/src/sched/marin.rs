@@ -10,6 +10,7 @@
 //! Complexity: `Θ(n + T log n)` with a binary min-heap, `O(n)` space.
 
 use crate::error::Result;
+use crate::sched::fleet::{Assignment, CostView, FleetInstance, LowerFree};
 use crate::sched::instance::{Instance, Schedule};
 use crate::sched::limits;
 use crate::util::heap::MinHeap;
@@ -45,6 +46,72 @@ pub fn solve(inst: &Instance) -> Result<Schedule> {
     }
 
     Ok(tr.restore(&Schedule::new(x)))
+}
+
+/// Class-aware MarIn over a lazy [`CostView`]: the heap is keyed by
+/// **class × level** instead of device. Every member of a class at fill
+/// level `ℓ` shares the same next marginal `M(ℓ+1)`, and with increasing
+/// marginals those equal-valued tasks can be assigned as one block — the
+/// chosen marginal multiset (hence the total cost) is identical to the
+/// per-device greedy, which is optimal by Theorem 2.
+///
+/// Heap operations: one per `(class, level)` pair actually filled, so
+/// `O(k + (T/m̄) log k)` for `k` classes of mean multiplicity `m̄` —
+/// versus `Θ(n + T log n)` for the flat path.
+///
+/// Returns per-class `(load, n_devices)` runs in the *view's* domain
+/// (callers owning a [`LowerFree`] view restore lower limits).
+pub fn solve_view<V: CostView + ?Sized>(view: &V) -> Vec<Vec<(usize, usize)>> {
+    let k = view.n_classes();
+    // Per class: (level ℓ, devices already raised to ℓ+1).
+    let mut level = vec![0usize; k];
+    let mut raised = vec![0usize; k];
+    let mut heap: MinHeap<usize> = MinHeap::with_capacity(k);
+    for c in 0..k {
+        if view.cap(c) > 0 {
+            heap.push(view.eval(c, 1) - view.eval(c, 0), c as u64, c);
+        }
+    }
+
+    let mut remaining = view.tasks();
+    while remaining > 0 {
+        let e = heap
+            .pop()
+            .expect("valid instance: capacity remains while tasks remain");
+        let c = e.value;
+        let m = view.count(c);
+        // All `m - raised` members still at `level` share marginal `e.key`.
+        let take = (m - raised[c]).min(remaining);
+        raised[c] += take;
+        remaining -= take;
+        if raised[c] == m {
+            level[c] += 1;
+            raised[c] = 0;
+        }
+        // Next block for this class (members still at `level`, or the whole
+        // class at the incremented level) costs `M(level + 1)` each.
+        if level[c] < view.cap(c) {
+            let next = level[c] + 1;
+            heap.push(view.eval(c, next) - view.eval(c, next - 1), c as u64, c);
+        }
+    }
+
+    (0..k)
+        .map(|c| {
+            // `raised` members sit at level+1, the rest at level.
+            let m = view.count(c);
+            vec![(level[c] + 1, raised[c]), (level[c], m - raised[c])]
+        })
+        .collect()
+}
+
+/// Run MarIn on a class-deduplicated fleet (same optimality contract as
+/// [`solve`]).
+pub fn solve_fleet(fleet: &FleetInstance) -> Result<Assignment> {
+    fleet.validate()?;
+    let view = LowerFree::of(fleet);
+    let groups = solve_view(&view);
+    Ok(Assignment::from_groups(view.restore(groups)))
 }
 
 #[cfg(test)]
@@ -105,6 +172,36 @@ mod tests {
         .unwrap();
         let s = solve(&inst).unwrap();
         assert_eq!(s.assignments(), &[1, 4]);
+    }
+
+    #[test]
+    fn fleet_blocks_match_flat_on_multiplicity_classes() {
+        use crate::sched::fleet::FleetInstance;
+        // 3 + 2 identical convex devices: class path must hit the same
+        // optimal cost as the flat per-device greedy.
+        let q1 = CostFn::Quadratic { fixed: 0.0, a: 1.0, b: 0.0 };
+        let q2 = CostFn::Quadratic { fixed: 0.0, a: 2.0, b: 1.0 };
+        let fleet = FleetInstance::builder()
+            .tasks(17)
+            .device_class(q1, 1, 10, 3)
+            .device_class(q2, 0, 10, 2)
+            .build()
+            .unwrap();
+        let asg = solve_fleet(&fleet).unwrap();
+        asg.check(&fleet).unwrap();
+        let flat = fleet.to_flat();
+        let s = solve(&flat).unwrap();
+        let c_flat = validate::checked_cost(&flat, &s).unwrap();
+        assert!((asg.total_cost(&fleet) - c_flat).abs() < 1e-9);
+        // Within a class, loads are balanced to within one task.
+        for g in asg.groups() {
+            let loads: Vec<usize> = g.iter().map(|&(l, _)| l).collect();
+            let (min, max) = (
+                *loads.iter().min().unwrap(),
+                *loads.iter().max().unwrap(),
+            );
+            assert!(max - min <= 1, "unbalanced class loads {loads:?}");
+        }
     }
 
     #[test]

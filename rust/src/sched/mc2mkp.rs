@@ -23,6 +23,7 @@
 //! applied first so class weights start at zero).
 
 use crate::error::{FedError, Result};
+use crate::sched::fleet::{Assignment, CostView, FleetInstance, LowerFree};
 use crate::sched::instance::{Instance, Schedule};
 use crate::sched::limits;
 
@@ -300,6 +301,135 @@ fn extract_schedule(
     Ok(tr.restore(&Schedule::new(x)))
 }
 
+/// One device class's aggregate-load table: the cheapest way to split `y`
+/// tasks among the class's `m` interchangeable members, for every
+/// `y ∈ [0, min(m·U, T)]` — computed by an inner DP over members, with
+/// per-member choices recorded for on-demand backtracking.
+struct ClassAggregate {
+    /// Members `m`.
+    m: usize,
+    /// Aggregate domain width: `min(m·u, T) + 1`.
+    width: usize,
+    /// Final DP row `F_m(y)` (intermediate cost rows are rolled — only
+    /// two are ever live during [`ClassAggregate::build`]).
+    last: Vec<f64>,
+    /// Chosen per-member load at each `(d, y)` cell — the only full
+    /// `(m+1) × Y` table kept, and it is `u32` (the backtrack needs it;
+    /// without it [`ClassAggregate::split`] would re-run the DP).
+    choice: Vec<u32>,
+}
+
+impl ClassAggregate {
+    /// Inner bounded-multiplicity DP: `O(m · Y · u)` time for aggregate
+    /// domain `Y` — the same arithmetic the flat DP spends on this class's
+    /// `m` rows, but kept local to the class (and clamped to `Y <= T`).
+    fn build<V: CostView + ?Sized>(view: &V, c: usize, cap_total: usize) -> Self {
+        let u = view.cap(c);
+        let m = view.count(c);
+        let width = m.saturating_mul(u).min(cap_total) + 1;
+        // One lazy evaluation per needed point — the inner loops below
+        // would otherwise re-query the view `m·Y` times per point.
+        let point_cost: Vec<f64> = (0..=u).map(|j| view.eval(c, j)).collect();
+        let mut choice = vec![0u32; (m + 1) * width];
+        let mut prev = vec![f64::INFINITY; width];
+        let mut cur = vec![f64::INFINITY; width];
+        prev[0] = 0.0;
+        for d in 1..=m {
+            cur.fill(f64::INFINITY);
+            let cur_choice = &mut choice[d * width..(d + 1) * width];
+            let y_hi = (d.saturating_mul(u)).min(width - 1);
+            for (y, cell) in cur.iter_mut().enumerate().take(y_hi + 1) {
+                let mut best = f64::INFINITY;
+                let mut best_j = 0u32;
+                for j in 0..=u.min(y) {
+                    let base = prev[y - j];
+                    if !base.is_finite() {
+                        continue;
+                    }
+                    let cand = base + point_cost[j];
+                    if cand < best {
+                        best = cand;
+                        best_j = j as u32;
+                    }
+                }
+                *cell = best;
+                cur_choice[y] = best_j;
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        Self { m, width, last: prev, choice }
+    }
+
+    /// The outer knapsack's multiple-choice items for this class:
+    /// aggregate load `y` at cost `F_m(y)`.
+    fn items(&self) -> Vec<Item> {
+        (0..self.width)
+            .filter(|&y| self.last[y].is_finite())
+            .map(|y| Item { weight: y, cost: self.last[y] })
+            .collect()
+    }
+
+    /// Split an aggregate load back into per-member loads (member order).
+    fn split(&self, mut y: usize) -> Vec<(usize, usize)> {
+        let mut loads = Vec::with_capacity(self.m);
+        for d in (1..=self.m).rev() {
+            let j = self.choice[d * self.width + y] as usize;
+            loads.push((j, 1));
+            y -= j;
+        }
+        debug_assert_eq!(y, 0, "inner backtrack must consume the aggregate");
+        loads
+    }
+}
+
+/// Class-aware (MC)²MKP over a lazy [`CostView`]: the outer DP runs over
+/// `k` **classes with bounded multiplicities** instead of `n` devices —
+/// each class contributes aggregate items `(y, F_m(y))` produced by an
+/// inner per-class DP. Arbitrary cost functions admit no shortcut inside a
+/// class (any member may take any load), so total arithmetic matches the
+/// flat `O(T² n)` bound. What shrinks is the **f64 cost state**: the
+/// inner DP rolls two rows and the outer keeps `k + 1` rows, i.e.
+/// `O((k + max_c m_c)·T)` floats versus the flat DP's `O(n·T)`. The
+/// per-member backtracking (`choice`) tables remain `O(Σ_c m_c·Y_c)`
+/// (≤ `O(n·T)`) — but as 4-byte `u32`s, about a third of the flat DP's
+/// combined 12-byte/cell footprint. With `m = 1` everywhere this
+/// degenerates to exactly the flat DP.
+pub fn solve_view<V: CostView + ?Sized>(
+    view: &V,
+) -> Result<Vec<Vec<(usize, usize)>>> {
+    let t = view.tasks();
+    let k = view.n_classes();
+    let aggregates: Vec<ClassAggregate> =
+        (0..k).map(|c| ClassAggregate::build(view, c, t)).collect();
+    let classes = Classes {
+        classes: aggregates.iter().map(|a| a.items()).collect(),
+    };
+    let m = dp(&classes, t);
+    let (t_star, _) = m
+        .best_capacity(t)
+        .ok_or_else(|| FedError::Infeasible("no feasible packing".into()))?;
+    if t_star != t {
+        return Err(FedError::Infeasible(format!(
+            "maximal packing {t_star} < T' = {t} on a valid instance"
+        )));
+    }
+    let chosen = m.backtrack(&classes, t_star)?;
+    Ok(chosen
+        .iter()
+        .enumerate()
+        .map(|(c, &ji)| aggregates[c].split(classes.classes[c][ji].weight))
+        .collect())
+}
+
+/// Solve a class-deduplicated fleet optimally (paper Theorem 1 — works
+/// for arbitrary cost functions).
+pub fn solve_fleet(fleet: &FleetInstance) -> Result<Assignment> {
+    fleet.validate()?;
+    let view = LowerFree::of(fleet);
+    let groups = solve_view(&view)?;
+    Ok(Assignment::from_groups(view.restore(groups)))
+}
+
 /// Solution of the knapsack problem itself.
 #[derive(Clone, Debug)]
 pub struct KnapsackSolution {
@@ -468,6 +598,45 @@ mod tests {
         .unwrap();
         let s = solve(&inst).unwrap();
         assert_eq!(s.assignments(), &[0, 0]);
+    }
+
+    #[test]
+    fn fleet_class_dp_matches_flat_dp() {
+        use crate::sched::costs::CostFn;
+        use crate::sched::fleet::FleetInstance;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xD0D0);
+        for _case in 0..20 {
+            // t <= 10 keeps the worst-case ΣU (both classes at minimum
+            // caps) feasible.
+            let t = 5 + rng.index(6);
+            // Arbitrary (non-monotone) tabulated costs, duplicated.
+            let table = |rng: &mut Rng| {
+                let mut values = vec![0.0];
+                let mut acc = 0.0;
+                for _ in 1..=t {
+                    acc += rng.range_f64(0.1, 2.0);
+                    values.push(acc + rng.range_f64(-0.4, 0.4));
+                }
+                CostFn::Tabulated { first: 0, values }
+            };
+            let fleet = FleetInstance::builder()
+                .tasks(t)
+                .device_class(table(&mut rng), 1, 2 + rng.index(t), 3)
+                .device_class(table(&mut rng), 0, 2 + rng.index(t), 2)
+                .build()
+                .unwrap();
+            let asg = solve_fleet(&fleet).unwrap();
+            asg.check(&fleet).unwrap();
+            let flat = fleet.to_flat();
+            let c_flat =
+                validate::checked_cost(&flat, &solve(&flat).unwrap()).unwrap();
+            let c_fleet = asg.total_cost(&fleet);
+            assert!(
+                (c_fleet - c_flat).abs() < 1e-9,
+                "class DP {c_fleet} != flat DP {c_flat} on {flat:?}"
+            );
+        }
     }
 
     #[test]

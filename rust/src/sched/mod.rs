@@ -1,7 +1,11 @@
 //! The paper's contribution: the **Minimal Cost FL Schedule** problem and
 //! its optimal solvers.
 //!
-//! * [`instance`] — problem model `(R, T, U, L, C)` (paper §3, Def. 1).
+//! * [`instance`] — flat problem model `(R, T, U, L, C)` (paper §3, Def. 1).
+//! * [`fleet`] — fleet-scale model: device classes with multiplicities
+//!   ([`fleet::FleetInstance`]), lazy cost evaluation
+//!   ([`fleet::CostView`]), and class-level decisions
+//!   ([`fleet::Assignment`]) — the primary [`solver::Solver`] input.
 //! * [`costs`] — cost-function library + marginal costs (paper §5.1, Def. 3).
 //! * [`limits`] — lower-limit removal transformation (paper §5.2, eqs. 8–11).
 //! * [`mc2mkp`] — Algorithm 1: the (MC)²MKP dynamic program (paper §4).
@@ -26,6 +30,7 @@ pub mod solver;
 pub mod baselines;
 pub mod bruteforce;
 pub mod costs;
+pub mod fleet;
 pub mod instance;
 pub mod limits;
 pub mod marco;
@@ -36,5 +41,6 @@ pub mod marin;
 pub mod mc2mkp;
 pub mod validate;
 
+pub use fleet::{Assignment, CostView, FleetInstance};
 pub use instance::{Instance, Schedule};
 pub use solver::{Solver, SolverRegistry};

@@ -4,6 +4,16 @@
 //! [`mardec::solve`]) plus the five baselines and the brute-force oracle —
 //! is reachable through one seam.
 //!
+//! Since the fleet-scale redesign the seam's **primary input is the
+//! class-deduplicated [`FleetInstance`]** and its output a class-level
+//! [`Assignment`]: solvers that can exploit device classes (MarIn, MarCo,
+//! MarDecUn, MarDec, the DP) override [`Solver::solve`] with their
+//! `solve_fleet` cores and run in the number of *classes* `k`, not
+//! devices `n`. Everything else — baselines, the oracle, external
+//! registrations — implements only the flat [`Solver::solve_flat`] seam
+//! and is adapted automatically (flatten, solve, regroup), which keeps
+//! all twelve seed solvers bit-for-bit equivalent on flat instances.
+//!
 //! The registry replaces the old `Policy`-enum `match` dispatch: callers
 //! resolve a solver by name (`registry.resolve("mardec")`), ask the
 //! Table 2 question (`solver.is_optimal_for(&scenario)`), or let the
@@ -13,8 +23,11 @@
 use std::cell::RefCell;
 
 use crate::error::{FedError, Result};
-use crate::sched::auto::{best_algorithm, classify_instance, Scenario};
+use crate::sched::auto::{
+    best_algorithm, classify_fleet, classify_instance, Scenario, TABLE2_SCENARIOS,
+};
 use crate::sched::costs::MarginalRegime;
+use crate::sched::fleet::{Assignment, FleetInstance};
 use crate::sched::instance::{Instance, Schedule};
 use crate::sched::{baselines, bruteforce, marco, mardec, mardecun, marin, mc2mkp};
 use crate::util::rng::Rng;
@@ -24,8 +37,25 @@ pub trait Solver {
     /// Stable lower-case identifier (what `--algo` accepts).
     fn name(&self) -> &'static str;
 
-    /// Solve an instance.
-    fn solve(&self, inst: &Instance) -> Result<Schedule>;
+    /// Solve a class-deduplicated fleet instance — the primary entry
+    /// point. The default flattens to a per-device [`Instance`], runs
+    /// [`Solver::solve_flat`], and regroups the schedule; class-aware
+    /// solvers override it to run in `O(k)`-ish instead of `O(n)`-ish.
+    fn solve(&self, fleet: &FleetInstance) -> Result<Assignment> {
+        let sched = self.solve_flat(&fleet.to_flat())?;
+        Ok(Assignment::from_schedule(fleet, &sched))
+    }
+
+    /// Solve a flat per-device instance (the legacy seam every solver
+    /// implements; [`FleetInstance::from_flat`] adapts callers upward).
+    fn solve_flat(&self, inst: &Instance) -> Result<Schedule>;
+
+    /// True when [`Solver::solve`] is overridden with a class-aware core.
+    /// The registry's flat entry points use this to skip the
+    /// `from_flat`/`to_flat` round-trip for flat-only solvers.
+    fn class_aware(&self) -> bool {
+        false
+    }
 
     /// Whether this solver is *provably optimal* for the given scenario
     /// (the paper's Table 2 applicability column). Baselines return
@@ -34,25 +64,75 @@ pub trait Solver {
         false
     }
 
-    /// Solve threading an external RNG. Deterministic solvers ignore it;
-    /// the `random` baseline consumes it (so coordinator runs replay
-    /// bit-for-bit from one seed).
-    fn solve_with_rng(&self, inst: &Instance, _rng: &mut Rng) -> Result<Schedule> {
-        self.solve(inst)
+    /// Fleet solve threading an external RNG. The default flattens and
+    /// delegates to [`Solver::solve_flat_with_rng`], so a seeded solver
+    /// that only implements the flat seam still consumes the caller's
+    /// stream (reproducible runs). Class-aware deterministic solvers
+    /// override this to keep their class core on the seeded path.
+    fn solve_with_rng(
+        &self,
+        fleet: &FleetInstance,
+        rng: &mut Rng,
+    ) -> Result<Assignment> {
+        let sched = self.solve_flat_with_rng(&fleet.to_flat(), rng)?;
+        Ok(Assignment::from_schedule(fleet, &sched))
+    }
+
+    /// Flat solve threading an external RNG.
+    fn solve_flat_with_rng(
+        &self,
+        inst: &Instance,
+        _rng: &mut Rng,
+    ) -> Result<Schedule> {
+        self.solve_flat(inst)
     }
 }
 
 macro_rules! fn_solver {
-    ($ty:ident, $name:literal, $solve:path, optimal: |$s:ident| $opt:expr) => {
-        /// Registry adapter for the identically-named module solver.
+    ($ty:ident, $name:literal, $solve:path,
+     optimal: |$s:ident| $opt:expr) => {
+        /// Registry adapter for the identically-named module solver
+        /// (flat-only: fleet solves flatten through the default path).
         pub struct $ty;
 
         impl Solver for $ty {
             fn name(&self) -> &'static str {
                 $name
             }
-            fn solve(&self, inst: &Instance) -> Result<Schedule> {
+            fn solve_flat(&self, inst: &Instance) -> Result<Schedule> {
                 $solve(inst)
+            }
+            fn is_optimal_for(&self, $s: &Scenario) -> bool {
+                $opt
+            }
+        }
+    };
+    ($ty:ident, $name:literal, $solve:path, fleet: $fleet:path,
+     optimal: |$s:ident| $opt:expr) => {
+        /// Registry adapter for the identically-named module solver,
+        /// class-aware: fleet solves run the `solve_fleet` core.
+        pub struct $ty;
+
+        impl Solver for $ty {
+            fn name(&self) -> &'static str {
+                $name
+            }
+            fn solve(&self, fleet: &FleetInstance) -> Result<Assignment> {
+                $fleet(fleet)
+            }
+            fn solve_with_rng(
+                &self,
+                fleet: &FleetInstance,
+                _rng: &mut Rng,
+            ) -> Result<Assignment> {
+                // Deterministic class-aware core: stay on the class path.
+                $fleet(fleet)
+            }
+            fn solve_flat(&self, inst: &Instance) -> Result<Schedule> {
+                $solve(inst)
+            }
+            fn class_aware(&self) -> bool {
+                true
             }
             fn is_optimal_for(&self, $s: &Scenario) -> bool {
                 $opt
@@ -61,26 +141,29 @@ macro_rules! fn_solver {
     };
 }
 
-fn_solver!(Mc2mkpSolver, "mc2mkp", mc2mkp::solve, optimal: |_s| true);
-fn_solver!(MarInSolver, "marin", marin::solve, optimal: |s| matches!(
-    s.regime,
-    MarginalRegime::Increasing | MarginalRegime::Constant
-));
-fn_solver!(MarCoSolver, "marco", marco::solve, optimal: |s| matches!(
-    s.regime,
-    MarginalRegime::Constant
-));
-fn_solver!(MarDecUnSolver, "mardecun", mardecun::solve, optimal: |s| {
-    !s.has_upper_limits
-        && matches!(
-            s.regime,
-            MarginalRegime::Decreasing | MarginalRegime::Constant
-        )
-});
-fn_solver!(MarDecSolver, "mardec", mardec::solve, optimal: |s| matches!(
-    s.regime,
-    MarginalRegime::Decreasing | MarginalRegime::Constant
-));
+fn_solver!(Mc2mkpSolver, "mc2mkp", mc2mkp::solve, fleet: mc2mkp::solve_fleet,
+    optimal: |_s| true);
+fn_solver!(MarInSolver, "marin", marin::solve, fleet: marin::solve_fleet,
+    optimal: |s| matches!(
+        s.regime,
+        MarginalRegime::Increasing | MarginalRegime::Constant
+    ));
+fn_solver!(MarCoSolver, "marco", marco::solve, fleet: marco::solve_fleet,
+    optimal: |s| matches!(s.regime, MarginalRegime::Constant));
+fn_solver!(MarDecUnSolver, "mardecun", mardecun::solve,
+    fleet: mardecun::solve_fleet,
+    optimal: |s| {
+        !s.has_upper_limits
+            && matches!(
+                s.regime,
+                MarginalRegime::Decreasing | MarginalRegime::Constant
+            )
+    });
+fn_solver!(MarDecSolver, "mardec", mardec::solve, fleet: mardec::solve_fleet,
+    optimal: |s| matches!(
+        s.regime,
+        MarginalRegime::Decreasing | MarginalRegime::Constant
+    ));
 fn_solver!(BruteforceSolver, "bruteforce", bruteforce::solve, optimal: |_s| true);
 fn_solver!(UniformSolver, "uniform", baselines::uniform, optimal: |_s| false);
 fn_solver!(ProportionalSolver, "proportional", baselines::proportional,
@@ -111,15 +194,44 @@ impl AutoSolver {
             ))),
         }
     }
+
+    /// Fleet-side dispatch to the built-in class-aware cores.
+    fn dispatch_fleet(name: &str, fleet: &FleetInstance) -> Result<Assignment> {
+        match name {
+            "mc2mkp" => mc2mkp::solve_fleet(fleet),
+            "marin" => marin::solve_fleet(fleet),
+            "marco" => marco::solve_fleet(fleet),
+            "mardecun" => mardecun::solve_fleet(fleet),
+            "mardec" => mardec::solve_fleet(fleet),
+            other => Err(FedError::Config(format!(
+                "auto dispatched to unknown solver '{other}'"
+            ))),
+        }
+    }
 }
 
 impl Solver for AutoSolver {
     fn name(&self) -> &'static str {
         "auto"
     }
-    fn solve(&self, inst: &Instance) -> Result<Schedule> {
+    fn solve(&self, fleet: &FleetInstance) -> Result<Assignment> {
+        let scenario = classify_fleet(fleet);
+        Self::dispatch_fleet(best_algorithm(&scenario), fleet)
+    }
+    fn solve_with_rng(
+        &self,
+        fleet: &FleetInstance,
+        _rng: &mut Rng,
+    ) -> Result<Assignment> {
+        // Table 2 dispatch is deterministic: stay on the class path.
+        self.solve(fleet)
+    }
+    fn solve_flat(&self, inst: &Instance) -> Result<Schedule> {
         let scenario = classify_instance(inst);
         Self::dispatch(best_algorithm(&scenario), inst)
+    }
+    fn class_aware(&self) -> bool {
+        true
     }
     fn is_optimal_for(&self, _scenario: &Scenario) -> bool {
         true
@@ -127,9 +239,10 @@ impl Solver for AutoSolver {
 }
 
 /// The seeded `random` baseline. `solve` draws from an interior RNG (so the
-/// registry's plain entry points stay usable); `solve_with_rng` consumes
-/// the caller's stream instead, which is what the coordinator uses for
-/// reproducible rounds.
+/// registry's plain entry points stay usable); the `*_with_rng` variants
+/// consume the caller's stream instead — the trait's default fleet
+/// `solve_with_rng` already flattens into [`Solver::solve_flat_with_rng`],
+/// which is exactly right for a per-device randomizer.
 pub struct RandomSolver {
     rng: RefCell<Rng>,
 }
@@ -145,10 +258,10 @@ impl Solver for RandomSolver {
     fn name(&self) -> &'static str {
         "random"
     }
-    fn solve(&self, inst: &Instance) -> Result<Schedule> {
+    fn solve_flat(&self, inst: &Instance) -> Result<Schedule> {
         baselines::random(inst, &mut self.rng.borrow_mut())
     }
-    fn solve_with_rng(&self, inst: &Instance, rng: &mut Rng) -> Result<Schedule> {
+    fn solve_flat_with_rng(&self, inst: &Instance, rng: &mut Rng) -> Result<Schedule> {
         baselines::random(inst, rng)
     }
 }
@@ -233,30 +346,90 @@ impl SolverRegistry {
         out
     }
 
-    /// Resolve a name or fail with a message listing every valid solver —
-    /// the single source of truth for `--algo` errors.
+    /// One line per registered solver: name plus the Table 2 scenarios it
+    /// is provably optimal for (`—` for pure heuristics). This is what
+    /// `--algo` errors and the `solvers` subcommand print.
+    pub fn describe(&self) -> Vec<String> {
+        self.names()
+            .into_iter()
+            .filter_map(|n| self.get(n).map(|s| (n, s)))
+            .map(|(n, s)| {
+                let tags: Vec<&str> = TABLE2_SCENARIOS
+                    .iter()
+                    .filter(|(_, sc)| s.is_optimal_for(sc))
+                    .map(|(label, _)| *label)
+                    .collect();
+                if tags.is_empty() {
+                    format!("{n}[—]")
+                } else {
+                    format!("{n}[{}]", tags.join(","))
+                }
+            })
+            .collect()
+    }
+
+    /// Resolve a name or fail with a message listing every valid solver
+    /// and its Table 2 applicability — the single source of truth for
+    /// `--algo` errors.
     pub fn resolve(&self, name: &str) -> Result<&dyn Solver> {
         self.get(name).ok_or_else(|| {
             FedError::Config(format!(
-                "unknown solver '{name}' (valid: {})",
-                self.names().join("|")
+                "unknown solver '{name}' (valid, with Table 2 optimality \
+                 scenarios: {})",
+                self.describe().join(" ")
             ))
         })
     }
 
-    /// Resolve + solve.
+    /// Resolve + flat solve. Class-aware solvers are adapted through the
+    /// fleet seam **when deduplication found anything** (`k < n`) — on
+    /// all-distinct instances, and for flat-only solvers always, the
+    /// solver runs directly on `inst` with no round-trip overhead (only
+    /// the `O(n)` dedup probe itself).
     pub fn solve(&self, name: &str, inst: &Instance) -> Result<Schedule> {
-        self.resolve(name)?.solve(inst)
+        let solver = self.resolve(name)?;
+        if !solver.class_aware() {
+            return solver.solve_flat(inst);
+        }
+        let fleet = FleetInstance::from_flat(inst)?;
+        if fleet.n_classes() == fleet.n_devices() {
+            return solver.solve_flat(inst);
+        }
+        Ok(solver.solve(&fleet)?.expand(&fleet))
     }
 
-    /// Resolve + solve threading the caller's RNG (reproducible `random`).
+    /// Resolve + flat solve threading the caller's RNG (reproducible
+    /// `random`). Same adaptation rule as [`SolverRegistry::solve`].
     pub fn solve_seeded(
         &self,
         name: &str,
         inst: &Instance,
         rng: &mut Rng,
     ) -> Result<Schedule> {
-        self.resolve(name)?.solve_with_rng(inst, rng)
+        let solver = self.resolve(name)?;
+        if !solver.class_aware() {
+            return solver.solve_flat_with_rng(inst, rng);
+        }
+        let fleet = FleetInstance::from_flat(inst)?;
+        if fleet.n_classes() == fleet.n_devices() {
+            return solver.solve_flat_with_rng(inst, rng);
+        }
+        Ok(solver.solve_with_rng(&fleet, rng)?.expand(&fleet))
+    }
+
+    /// Resolve + fleet solve.
+    pub fn solve_fleet(&self, name: &str, fleet: &FleetInstance) -> Result<Assignment> {
+        self.resolve(name)?.solve(fleet)
+    }
+
+    /// Resolve + fleet solve threading the caller's RNG.
+    pub fn solve_fleet_seeded(
+        &self,
+        name: &str,
+        fleet: &FleetInstance,
+        rng: &mut Rng,
+    ) -> Result<Assignment> {
+        self.resolve(name)?.solve_with_rng(fleet, rng)
     }
 
     /// Solvers that are provably optimal for `scenario`.
@@ -279,6 +452,7 @@ impl Default for SolverRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::costs::CostFn;
     use crate::sched::validate;
 
     #[test]
@@ -302,11 +476,13 @@ mod tests {
     }
 
     #[test]
-    fn unknown_name_lists_valid_solvers() {
+    fn unknown_name_lists_valid_solvers_with_applicability() {
         let r = SolverRegistry::with_defaults(1);
         let err = r.resolve("nope").unwrap_err().to_string();
         assert!(err.contains("nope"));
-        assert!(err.contains("mc2mkp") && err.contains("olar"), "{err}");
+        assert!(err.contains("mc2mkp[arb,inc,con,dec,dec∞]"), "{err}");
+        assert!(err.contains("marin[inc,con]"), "{err}");
+        assert!(err.contains("olar[—]"), "{err}");
     }
 
     #[test]
@@ -329,6 +505,27 @@ mod tests {
             let s = r.solve(name, &inst).unwrap();
             let c = validate::checked_cost(&inst, &s).unwrap();
             assert!((c - 7.5).abs() < 1e-9, "{name}: {c}");
+        }
+    }
+
+    #[test]
+    fn fleet_entry_points_solve_class_instances() {
+        // 6 devices in 2 classes; constant marginals → marco block-fills.
+        let fleet = FleetInstance::builder()
+            .tasks(10)
+            .device_class(CostFn::Affine { fixed: 0.0, per_task: 1.0 }, 0, 3, 3)
+            .device_class(CostFn::Affine { fixed: 0.0, per_task: 5.0 }, 0, 3, 3)
+            .build()
+            .unwrap();
+        let r = SolverRegistry::with_defaults(1);
+        for name in ["auto", "marco", "marin", "mc2mkp"] {
+            let asg = r.solve_fleet(name, &fleet).unwrap();
+            asg.check(&fleet).unwrap();
+            let cost = asg.total_cost(&fleet);
+            // 9 tasks on the cheap class, 1 on the expensive one.
+            assert!((cost - 14.0).abs() < 1e-9, "{name}: {cost}");
+            let sched = asg.expand(&fleet);
+            assert_eq!(sched.total(), 10);
         }
     }
 
@@ -369,13 +566,51 @@ mod tests {
     }
 
     #[test]
+    fn default_fleet_seeded_path_threads_rng_through_flat_seam() {
+        // A custom seeded solver implementing only the flat seam must
+        // consume the caller's stream on the fleet entry points too — the
+        // default solve_with_rng flattens into solve_flat_with_rng.
+        struct SeededFlat;
+        impl Solver for SeededFlat {
+            fn name(&self) -> &'static str {
+                "seeded-flat"
+            }
+            fn solve_flat(&self, inst: &Instance) -> Result<Schedule> {
+                baselines::uniform(inst)
+            }
+            fn solve_flat_with_rng(
+                &self,
+                inst: &Instance,
+                rng: &mut Rng,
+            ) -> Result<Schedule> {
+                baselines::random(inst, rng)
+            }
+        }
+        let mut r = SolverRegistry::with_defaults(1);
+        r.register(Box::new(SeededFlat));
+        let inst = Instance::paper_example(8);
+        let fleet = FleetInstance::from_flat(&inst).unwrap();
+        let a = r
+            .solve_fleet_seeded("seeded-flat", &fleet, &mut Rng::new(5))
+            .unwrap();
+        let b = r
+            .solve_fleet_seeded("seeded-flat", &fleet, &mut Rng::new(5))
+            .unwrap();
+        assert_eq!(a, b);
+        // ...and it is genuinely the seeded path, not the rng-less
+        // interior fallback.
+        let c = baselines::random(&inst, &mut Rng::new(5)).unwrap();
+        assert_eq!(a.expand(&fleet), c);
+    }
+
+    #[test]
     fn registration_shadows_by_name() {
         struct Fake;
         impl Solver for Fake {
             fn name(&self) -> &'static str {
                 "uniform"
             }
-            fn solve(&self, inst: &Instance) -> Result<Schedule> {
+            fn solve_flat(&self, inst: &Instance) -> Result<Schedule> {
                 bruteforce::solve(inst)
             }
         }

@@ -1,0 +1,92 @@
+//! End-to-end CLI reproducibility and error-path checks, driving the
+//! compiled `fedzero` binary:
+//!
+//! * `--seed` threads through fleet sampling and the solver RNG, so
+//!   `random`-baseline runs replay bit-for-bit from the command line;
+//! * `--algo` errors and the `solvers` subcommand print each solver's
+//!   Table 2 applicability, not just the registry names.
+
+use std::process::{Command, Output};
+
+fn fedzero(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_fedzero"))
+        .args(args)
+        .output()
+        .expect("failed to spawn the fedzero binary")
+}
+
+fn stdout_ok(args: &[&str]) -> String {
+    let out = fedzero(args);
+    assert!(
+        out.status.success(),
+        "fedzero {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).unwrap()
+}
+
+/// The schedule JSON minus its (nondeterministic) solve-time field.
+fn stable_schedule_part(json: &str) -> (String, String) {
+    let energy = json
+        .split("\"energy_j\":")
+        .nth(1)
+        .expect("energy_j in JSON output")
+        .split(',')
+        .next()
+        .unwrap()
+        .to_string();
+    let assignments = json
+        .split("\"assignments\":")
+        .nth(1)
+        .expect("assignments in JSON output")
+        .to_string();
+    (energy, assignments)
+}
+
+#[test]
+fn random_baseline_is_reproducible_per_seed() {
+    let args = [
+        "schedule", "--algo", "random", "--regime", "arbitrary", "--tasks",
+        "60", "--devices", "8", "--seed", "11", "--json",
+    ];
+    let a = stable_schedule_part(&stdout_ok(&args));
+    let b = stable_schedule_part(&stdout_ok(&args));
+    assert_eq!(a, b, "same seed must reproduce the same random schedule");
+
+    let mut other = args;
+    other[10] = "12";
+    let c = stable_schedule_part(&stdout_ok(&other));
+    assert_ne!(a, c, "different seeds must explore different runs");
+}
+
+#[test]
+fn deterministic_solver_is_seed_stable_too() {
+    let args = [
+        "schedule", "--algo", "auto", "--regime", "increasing", "--tasks",
+        "40", "--devices", "6", "--seed", "3", "--json",
+    ];
+    assert_eq!(
+        stable_schedule_part(&stdout_ok(&args)),
+        stable_schedule_part(&stdout_ok(&args))
+    );
+}
+
+#[test]
+fn solvers_subcommand_prints_table2_applicability() {
+    let out = stdout_ok(&["solvers"]);
+    assert!(out.contains("mc2mkp"), "{out}");
+    assert!(out.contains("dec∞"), "{out}");
+    assert!(out.contains("applicability:"), "{out}");
+    assert!(out.contains("marin[inc,con]"), "{out}");
+    assert!(out.contains("auto dispatch"), "{out}");
+}
+
+#[test]
+fn unknown_algo_error_lists_applicability() {
+    let out = fedzero(&["schedule", "--algo", "not-a-solver"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("not-a-solver"), "{err}");
+    assert!(err.contains("mc2mkp[arb,inc,con,dec,dec∞]"), "{err}");
+    assert!(err.contains("olar[—]"), "{err}");
+}

@@ -1,0 +1,234 @@
+//! Property test for the fleet-scale redesign: **class-grouped solves are
+//! equivalent to flat per-device solves** — same total cost, feasible
+//! class assignment, feasible per-device expansion — across randomized
+//! instances with *forced device duplication* (so `k < n` and the
+//! class-aware code paths genuinely differ from the flat ones), for every
+//! registered solver.
+//!
+//! Regime-specialized solvers are compared on instances inside their
+//! Table 2 scenario (outside it both paths are merely "feasible", with no
+//! cost contract to compare); arbitrary-regime solvers and all baselines
+//! are compared everywhere.
+
+use fedzero::sched::costs::CostFn;
+use fedzero::sched::fleet::FleetInstance;
+use fedzero::sched::instance::Instance;
+use fedzero::sched::{validate, Solver, SolverRegistry};
+use fedzero::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+enum Family {
+    Convex,
+    Affine,
+    Concave,
+    Tabulated,
+}
+
+fn sample_cost(family: Family, t: usize, rng: &mut Rng) -> CostFn {
+    match family {
+        Family::Convex => CostFn::Quadratic {
+            fixed: rng.range_f64(0.0, 2.0),
+            a: rng.range_f64(0.01, 1.0),
+            b: rng.range_f64(0.0, 3.0),
+        },
+        Family::Affine => CostFn::Affine {
+            fixed: rng.range_f64(0.0, 2.0),
+            per_task: rng.range_f64(0.1, 4.0),
+        },
+        Family::Concave => {
+            if rng.bool(0.5) {
+                CostFn::PowerLaw {
+                    fixed: rng.range_f64(0.0, 1.0),
+                    scale: rng.range_f64(0.3, 4.0),
+                    exponent: rng.range_f64(0.2, 0.95),
+                }
+            } else {
+                CostFn::Logarithmic {
+                    fixed: rng.range_f64(0.0, 1.0),
+                    scale: rng.range_f64(0.3, 4.0),
+                }
+            }
+        }
+        Family::Tabulated => {
+            let mut values = vec![0.0];
+            let mut acc = 0.0;
+            for _ in 1..=t {
+                acc += rng.range_f64(0.0, 3.0);
+                values.push((acc + rng.normal() * 0.5).max(0.0));
+            }
+            CostFn::Tabulated { first: 0, values }
+        }
+    }
+}
+
+/// Build an instance of `distinct` device specs, each replicated up to
+/// `max_dup` times (identical `(C, L, U)` triples ⇒ classes with
+/// multiplicity), repaired to feasibility.
+fn duplicated_instance(
+    seed: u64,
+    family: Family,
+    distinct: usize,
+    max_dup: usize,
+    max_t: usize,
+    unlimited: bool,
+) -> Instance {
+    let mut rng = Rng::new(seed);
+    let t = 6 + rng.index(max_t.saturating_sub(5).max(1));
+    let mut costs = Vec::new();
+    let mut lower = Vec::new();
+    let mut upper = Vec::new();
+    for _ in 0..1 + rng.index(distinct) {
+        let cost = sample_cost(family, t, &mut rng);
+        let u = if unlimited { t } else { 1 + rng.index(t) };
+        let l = rng.index((u / 2).max(1));
+        for _ in 0..1 + rng.index(max_dup) {
+            costs.push(cost.clone());
+            lower.push(l);
+            upper.push(u);
+        }
+    }
+    // Repair: shrink lowers until ΣL <= T, grow uppers until ΣU >= T.
+    // (Uniform growth keeps duplicated specs identical, preserving dedup.)
+    let n = costs.len();
+    let mut i = 0;
+    while lower.iter().sum::<usize>() > t {
+        if lower[i % n] > 0 {
+            lower[i % n] -= 1;
+        }
+        i += 1;
+    }
+    while upper.iter().map(|&u| u.min(t)).sum::<usize>() < t {
+        for u in upper.iter_mut() {
+            *u += 1;
+        }
+    }
+    Instance::new(t, lower, upper, costs).expect("generated instance valid")
+}
+
+/// Assert flat-path and class-path solves agree for every named solver.
+fn assert_equivalent(inst: &Instance, names: &[&str], seed: u64) {
+    let fleet = FleetInstance::from_flat(inst).unwrap();
+    let registry = SolverRegistry::with_defaults(seed);
+    for &name in names {
+        let solver = registry.resolve(name).unwrap();
+        // Same RNG stream on both sides: the `random` baseline must
+        // reproduce bit-for-bit through the fleet adapter.
+        let flat = solver
+            .solve_flat_with_rng(inst, &mut Rng::new(seed ^ 0x5EED))
+            .unwrap_or_else(|e| panic!("{name} flat failed: {e}"));
+        validate::check(inst, &flat)
+            .unwrap_or_else(|e| panic!("{name} flat infeasible: {e}"));
+
+        let asg = solver
+            .solve_with_rng(&fleet, &mut Rng::new(seed ^ 0x5EED))
+            .unwrap_or_else(|e| panic!("{name} fleet failed: {e}"));
+        asg.check(&fleet)
+            .unwrap_or_else(|e| panic!("{name} class-infeasible: {e}"));
+        let expanded = asg.expand(&fleet);
+        validate::check(inst, &expanded)
+            .unwrap_or_else(|e| panic!("{name} expansion infeasible: {e}"));
+
+        let c_flat = validate::total_cost(inst, &flat);
+        let c_fleet = validate::total_cost(inst, &expanded);
+        let c_asg = asg.total_cost(&fleet);
+        let tol = 1e-9 * c_flat.abs().max(1.0);
+        assert!(
+            (c_flat - c_fleet).abs() <= tol,
+            "{name}: class-grouped {c_fleet} != flat {c_flat} on {inst:?}"
+        );
+        assert!(
+            (c_asg - c_fleet).abs() <= tol,
+            "{name}: Assignment::total_cost {c_asg} != expanded {c_fleet}"
+        );
+    }
+}
+
+/// Solvers with no regime requirement: the arbitrary-capable optima and
+/// every baseline (flat-delegating adapters included).
+const REGIME_FREE: [&str; 8] = [
+    "mc2mkp", "auto", "uniform", "random", "proportional", "greedy", "olar",
+    "dp",
+];
+
+#[test]
+fn convex_instances_marin() {
+    for seed in 0..12u64 {
+        let inst = duplicated_instance(seed, Family::Convex, 3, 4, 30, false);
+        assert_equivalent(&inst, &REGIME_FREE, seed);
+        assert_equivalent(&inst, &["marin"], seed);
+    }
+}
+
+#[test]
+fn affine_instances_marin_marco() {
+    for seed in 20..32u64 {
+        let inst = duplicated_instance(seed, Family::Affine, 3, 4, 30, false);
+        assert_equivalent(&inst, &REGIME_FREE, seed);
+        assert_equivalent(&inst, &["marin", "marco"], seed);
+    }
+}
+
+#[test]
+fn concave_unlimited_instances_mardecun_mardec() {
+    for seed in 40..52u64 {
+        let inst = duplicated_instance(seed, Family::Concave, 3, 4, 24, true);
+        assert_equivalent(&inst, &REGIME_FREE, seed);
+        assert_equivalent(&inst, &["mardecun", "mardec"], seed);
+    }
+}
+
+#[test]
+fn concave_limited_instances_mardec() {
+    for seed in 60..72u64 {
+        let inst = duplicated_instance(seed, Family::Concave, 3, 4, 24, false);
+        assert_equivalent(&inst, &REGIME_FREE, seed);
+        assert_equivalent(&inst, &["mardec"], seed);
+    }
+}
+
+#[test]
+fn arbitrary_instances_with_bruteforce_oracle() {
+    for seed in 80..88u64 {
+        // Tiny sizes: the oracle is exponential.
+        let inst = duplicated_instance(seed, Family::Tabulated, 2, 2, 9, false);
+        assert_equivalent(&inst, &REGIME_FREE, seed);
+        assert_equivalent(&inst, &["bruteforce"], seed);
+    }
+}
+
+#[test]
+fn duplication_actually_produces_multiplicity_classes() {
+    // Sanity on the generator itself: at least one instance in the sweep
+    // must dedup below its device count, or the whole suite tests nothing.
+    let mut seen_dedup = false;
+    for seed in 0..12u64 {
+        let inst = duplicated_instance(seed, Family::Affine, 3, 4, 30, false);
+        let fleet = FleetInstance::from_flat(&inst).unwrap();
+        assert!(fleet.n_classes() <= fleet.n_devices());
+        if fleet.n_classes() < fleet.n_devices() {
+            seen_dedup = true;
+        }
+    }
+    assert!(seen_dedup, "generator never produced a duplicated device");
+}
+
+#[test]
+fn mardecun_error_parity_on_limited_instances() {
+    // Flat MarDecUn rejects effectively-limited instances; the class path
+    // must reject them identically instead of silently "solving".
+    let inst = Instance::new(
+        9,
+        vec![0, 0],
+        vec![4, 9],
+        vec![
+            CostFn::PowerLaw { fixed: 0.0, scale: 1.0, exponent: 0.5 },
+            CostFn::PowerLaw { fixed: 0.0, scale: 2.0, exponent: 0.5 },
+        ],
+    )
+    .unwrap();
+    let registry = SolverRegistry::with_defaults(1);
+    let solver = registry.resolve("mardecun").unwrap();
+    assert!(solver.solve_flat(&inst).is_err());
+    let fleet = FleetInstance::from_flat(&inst).unwrap();
+    assert!(solver.solve(&fleet).is_err());
+}
