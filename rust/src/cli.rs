@@ -3,7 +3,7 @@
 //! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
 //! repeated flags, positional arguments, and auto-generated usage text.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::error::{FedError, Result};
 
@@ -32,6 +32,9 @@ pub struct Parsed {
     pub command: String,
     values: BTreeMap<String, Vec<String>>,
     switches: BTreeMap<String, bool>,
+    /// Options the user actually passed (vs seeded spec defaults) — what
+    /// lets config-file values lose only to *explicit* flags.
+    explicit: BTreeSet<String>,
     pub positional: Vec<String>,
 }
 
@@ -69,6 +72,29 @@ impl Parsed {
     /// Typed value with a fallback default.
     pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
         Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    /// Last value of `--name` only when it was explicitly passed on the
+    /// command line (`None` when absent or merely seeded from the spec
+    /// default) — so config-file values survive unless the user overrode
+    /// them.
+    pub fn get_explicit(&self, name: &str) -> Option<&str> {
+        if self.explicit.contains(name) {
+            self.get(name)
+        } else {
+            None
+        }
+    }
+
+    /// Typed variant of [`Parsed::get_explicit`].
+    pub fn get_parse_explicit<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> Result<Option<T>> {
+        if !self.explicit.contains(name) {
+            return Ok(None);
+        }
+        self.get_parse(name)
     }
 
     /// Boolean switch presence.
@@ -154,6 +180,7 @@ impl App {
                                 })?
                         }
                     };
+                    parsed.explicit.insert(name.to_string());
                     parsed
                         .values
                         .entry(name.to_string())
@@ -219,8 +246,29 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "seed", help: "RNG seed", takes_value: true, default: Some("7") },
                     OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
                     OptSpec { name: "out", help: "CSV output path", takes_value: true, default: None },
+                    OptSpec { name: "backend", help: "round backend: fl (PJRT training) | sim (schedules + energy only)", takes_value: true, default: Some("fl") },
+                    OptSpec { name: "store", help: "durable campaign directory (journal + snapshots; sim backend only)", takes_value: true, default: None },
+                    OptSpec { name: "snapshot-every", help: "snapshot cadence in rounds (with --store)", takes_value: true, default: Some("16") },
+                    OptSpec { name: "metrics-jsonl", help: "stream per-round rows to this JSONL file", takes_value: true, default: None },
+                    OptSpec { name: "log-ring", help: "bound the in-memory round log to this many rows (0 = unbounded)", takes_value: true, default: None },
+                    OptSpec { name: "dynamics", help: "fleet dynamics: none | mobile (churn, drift, dropout)", takes_value: true, default: Some("none") },
+                    OptSpec { name: "round-sleep-ms", help: "sleep between rounds (crash-recovery testing; sim only)", takes_value: true, default: Some("0") },
                 ],
                 positional: vec![],
+            },
+            CmdSpec {
+                name: "resume",
+                about: "continue a crashed or stopped campaign from its store",
+                opts: vec![
+                    OptSpec { name: "round-sleep-ms", help: "sleep between rounds (crash-recovery testing)", takes_value: true, default: Some("0") },
+                ],
+                positional: vec![("dir", "campaign store directory")],
+            },
+            CmdSpec {
+                name: "replay",
+                about: "re-derive every journaled round and verify digests (deterministic audit)",
+                opts: vec![],
+                positional: vec![("dir", "campaign store directory")],
             },
             CmdSpec {
                 name: "fleet",
@@ -261,6 +309,21 @@ mod tests {
     }
 
     #[test]
+    fn explicit_flags_are_distinguished_from_seeded_defaults() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["train", "--rounds", "9"])).unwrap();
+        // --rounds was passed; --seed merely carries its spec default.
+        assert_eq!(p.get_explicit("rounds"), Some("9"));
+        assert_eq!(p.get_explicit("seed"), None);
+        assert_eq!(p.get("seed"), Some("7"), "default still readable");
+        assert_eq!(p.get_parse_explicit::<usize>("rounds").unwrap(), Some(9));
+        assert_eq!(p.get_parse_explicit::<u64>("seed").unwrap(), None);
+        // Passing the default's exact value still counts as explicit.
+        let p = app.parse(&args(&["train", "--seed=7"])).unwrap();
+        assert_eq!(p.get_explicit("seed"), Some("7"));
+    }
+
+    #[test]
     fn equals_syntax() {
         let app = fedzero_app();
         let p = app.parse(&args(&["schedule", "--tasks=42"])).unwrap();
@@ -287,6 +350,25 @@ mod tests {
         let msg = format!("{err}");
         assert!(msg.contains("USAGE"));
         assert!(msg.contains("schedule"));
+    }
+
+    #[test]
+    fn store_subcommands_parse() {
+        let app = fedzero_app();
+        let p = app
+            .parse(&args(&[
+                "train", "--backend", "sim", "--store", "/tmp/x",
+                "--snapshot-every", "8",
+            ]))
+            .unwrap();
+        assert_eq!(p.get("backend"), Some("sim"));
+        assert_eq!(p.get("store"), Some("/tmp/x"));
+        assert_eq!(p.get_or::<usize>("snapshot-every", 0).unwrap(), 8);
+        let p = app.parse(&args(&["resume", "/tmp/x"])).unwrap();
+        assert_eq!(p.positional, vec!["/tmp/x".to_string()]);
+        let p = app.parse(&args(&["replay", "/tmp/x"])).unwrap();
+        assert_eq!(p.command, "replay");
+        assert!(app.parse(&args(&["resume"])).is_err(), "dir is required");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 use crate::error::Result;
 use crate::sched::instance::{Instance, Schedule};
+use crate::util::json::Json;
 
 /// One surviving task assignment of a round (dropout victims are removed
 /// before the plan reaches the backend; the coordinator accounts their
@@ -69,6 +70,20 @@ pub trait RoundBackend {
     fn evaluate(&mut self) -> Result<f64>;
 }
 
+/// Durable backend state for the coordinator store: what a snapshot must
+/// capture beyond the coordinator's own fields so
+/// `Coordinator::restore` + journal replay is bit-for-bit. Backends whose
+/// state cannot be persisted yet (the PJRT model runtime) return an error
+/// from [`BackendState::load_state`] and are simply not resumable.
+pub trait BackendState {
+    /// Serialize durable state (round-boundary invariants only; transient
+    /// per-round buffers need not survive).
+    fn save_state(&self) -> Json;
+
+    /// Restore state written by [`BackendState::save_state`].
+    fn load_state(&mut self, state: &Json) -> Result<()>;
+}
+
 /// Pure-simulation backend: energy comes from the plan's own cost
 /// functions (the "profiler is accurate" setting), there is no model, and
 /// the evaluation loss is a deterministic decaying proxy. This is what
@@ -130,6 +145,22 @@ impl RoundBackend for SimBackend {
     }
 }
 
+impl BackendState for SimBackend {
+    fn save_state(&self) -> Json {
+        Json::obj(vec![(
+            "rounds_aggregated",
+            Json::Num(self.rounds_aggregated as f64),
+        )])
+    }
+
+    fn load_state(&mut self, state: &Json) -> Result<()> {
+        self.rounds_aggregated = crate::store::get_usize(state, "rounds_aggregated")?;
+        // Snapshots happen at round boundaries; no updates are in flight.
+        self.pending = 0;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,5 +195,16 @@ mod tests {
         let l0 = b.evaluate().unwrap();
         b.aggregate().unwrap();
         assert!(b.evaluate().unwrap() < l0, "proxy loss decays per round");
+    }
+
+    #[test]
+    fn sim_backend_state_roundtrips() {
+        let mut b = SimBackend::new();
+        b.rounds_aggregated = 7;
+        let state = b.save_state();
+        let mut b2 = SimBackend::new();
+        b2.load_state(&Json::parse(&state.to_string()).unwrap()).unwrap();
+        assert_eq!(b2.rounds_aggregated(), 7);
+        assert_eq!(b2.evaluate().unwrap(), b.evaluate().unwrap());
     }
 }

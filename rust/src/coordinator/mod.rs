@@ -28,7 +28,9 @@
 pub mod backend;
 pub mod device;
 
-pub use backend::{Assignment, DeviceOutcome, RoundBackend, RoundPlan, SimBackend};
+pub use backend::{
+    Assignment, BackendState, DeviceOutcome, RoundBackend, RoundPlan, SimBackend,
+};
 pub use device::ManagedDevice;
 
 use crate::config::TrainConfig;
@@ -41,6 +43,10 @@ use crate::sched::instance::{Instance, Schedule};
 use crate::sched::mc2mkp::WarmMc2mkp;
 use crate::sched::solver::SolverRegistry;
 use crate::sched::validate;
+use crate::store::journal::{round_digest, JournalEntry, ABORTED_SOLVER};
+use crate::store::snapshot as snap;
+use crate::store::{get, get_arr, get_f64, get_usize, jf, CampaignStore, MetricSink};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Coordinator life-cycle phases.
@@ -131,6 +137,18 @@ impl CoordinatorConfig {
     }
 }
 
+/// What the last round actually ran — journaled by the store and
+/// verified entry-by-entry on restore/replay.
+#[derive(Clone, Debug, Default)]
+pub struct RoundTrace {
+    /// Effective solver that produced the schedule (`""` for empty
+    /// rounds, [`ABORTED_SOLVER`] for rounds that errored mid-flight).
+    pub solver: String,
+    /// [`round_digest`] of the derived fleet instance + schedule (0 when
+    /// no schedule was produced).
+    pub digest: u64,
+}
+
 /// The multi-round FL coordinator (see module docs).
 pub struct Coordinator<B: RoundBackend> {
     cfg: CoordinatorConfig,
@@ -147,6 +165,22 @@ pub struct Coordinator<B: RoundBackend> {
     ledger: EnergyLedger,
     metrics: MetricsHub,
     log: TrainingLog,
+    /// Loss of the most recent completed round (NaN before the first).
+    /// Kept as its own field — not read back from `log` — so aborted-round
+    /// rows are identical whether or not the log was reset by a restore.
+    last_loss: f64,
+    /// Streaming per-round row consumers (JSONL/CSV/custom).
+    sinks: Vec<Box<dyn MetricSink>>,
+    /// Durable campaign store, when attached (journal + snapshots).
+    store: Option<CampaignStore>,
+    /// Set when a store commit failed: the journal no longer matches the
+    /// rounds driven, so further rounds must refuse to run rather than
+    /// silently diverge from the store.
+    store_failed: Option<String>,
+    /// Trace of the last round (kept for journaling and replay checks).
+    trace: Option<RoundTrace>,
+    /// Compute traces even without a store (restore/replay verification).
+    record_trace: bool,
 }
 
 impl<B: RoundBackend> Coordinator<B> {
@@ -187,6 +221,12 @@ impl<B: RoundBackend> Coordinator<B> {
             ledger: EnergyLedger::new(),
             metrics: MetricsHub::new(),
             log: TrainingLog::new(),
+            last_loss: f64::NAN,
+            sinks: Vec::new(),
+            store: None,
+            store_failed: None,
+            trace: None,
+            record_trace: false,
         })
     }
 
@@ -240,6 +280,45 @@ impl<B: RoundBackend> Coordinator<B> {
     /// The coordinator configuration.
     pub fn cfg(&self) -> &CoordinatorConfig {
         &self.cfg
+    }
+
+    /// Rounds driven so far (== the next round index).
+    pub fn rounds_run(&self) -> usize {
+        self.next_round
+    }
+
+    /// Trace of the most recent round (solver + digest), when tracing is
+    /// on (a store is attached, or the coordinator was restored).
+    pub fn last_trace(&self) -> Option<&RoundTrace> {
+        self.trace.as_ref()
+    }
+
+    /// The attached campaign store, if any.
+    pub fn campaign_store(&self) -> Option<&CampaignStore> {
+        self.store.as_ref()
+    }
+
+    /// Stream every committed round's row into `sink` (in addition to the
+    /// in-memory log and any attached store).
+    pub fn add_sink(&mut self, sink: Box<dyn MetricSink>) {
+        self.sinks.push(sink);
+    }
+
+    /// Bound in-memory per-round retention (log rows and ledger series) to
+    /// (at least) the most recent `bound` entries — constant memory over
+    /// arbitrarily long campaigns when rows stream to a sink/store.
+    /// Totals and counters stay exact. `None` restores unbounded growth.
+    pub fn set_log_bound(&mut self, bound: Option<usize>) {
+        self.log.set_bound(bound);
+        self.ledger.set_round_bound(bound);
+    }
+
+    /// Flush all attached sinks.
+    pub fn flush_sinks(&mut self) -> Result<()> {
+        for sink in &mut self.sinks {
+            sink.flush()?;
+        }
+        Ok(())
     }
 
     fn transition(&mut self, next: Phase) -> Result<()> {
@@ -327,8 +406,14 @@ impl<B: RoundBackend> Coordinator<B> {
     /// warm-starting the (MC)²MKP DP whenever the DP is what runs
     /// (configured directly or chosen by `auto` dispatch). `flat` is the
     /// slot-expanded view of `fleet` (the caller needs it for the round
-    /// plan anyway); the warm DP row cache keys on it.
-    fn solve(&mut self, fleet: &FleetInstance, flat: &Instance) -> Result<Schedule> {
+    /// plan anyway); the warm DP row cache keys on it. Returns the
+    /// schedule together with the *effective* solver name (what the store
+    /// journals).
+    fn solve(
+        &mut self,
+        fleet: &FleetInstance,
+        flat: &Instance,
+    ) -> Result<(Schedule, &'static str)> {
         let canonical = self.registry.resolve(&self.cfg.algo)?.name();
         // Resolve `auto` to its concrete Table 2 pick here, once: the
         // classification is per *class* (cheap on deduplicated fleets),
@@ -347,12 +432,13 @@ impl<B: RoundBackend> Coordinator<B> {
             self.metrics.inc("dp_solves", 1);
             self.metrics.inc("dp_rows_reused", info.reused_rows as u64);
             self.metrics.inc("dp_rows_total", info.total_rows as u64);
-            Ok(schedule)
+            Ok((schedule, "mc2mkp"))
         } else {
-            Ok(self
+            let schedule = self
                 .registry
                 .solve_fleet_seeded(effective, fleet, &mut self.rng)?
-                .expand(fleet))
+                .expand(fleet);
+            Ok((schedule, effective))
         }
     }
 
@@ -370,35 +456,96 @@ impl<B: RoundBackend> Coordinator<B> {
                 )))
             }
         }
+        if let Some(why) = &self.store_failed {
+            // A previous commit failed: the journal is behind the rounds
+            // driven. Running more rounds would burn energy and advance
+            // RNG state that can never be recovered — fail fast instead.
+            return Err(FedError::Store(format!(
+                "campaign store failed earlier ({why}); refusing to run \
+                 further un-journaled rounds"
+            )));
+        }
         let round_idx = self.next_round;
         self.next_round += 1;
-        let result = self.round_inner(round_idx);
-        if result.is_err() {
-            self.phase = Phase::Scheduling;
-            // The aborted round still consumed its index, and dropout
-            // victims may already have burned real energy into an open
-            // ledger bucket. Log an explicit aborted row (opening an empty
-            // bucket if none was) so `Σ log energy == ledger total` and
-            // one-row-per-round hold for callers that handle the error
-            // and keep driving rounds.
-            if self.ledger.rounds().len() <= self.log.rows().len() {
-                self.ledger.begin_round();
+        self.trace = None;
+        match self.round_inner(round_idx) {
+            Ok(row) => {
+                self.record_round(&row)?;
+                Ok(row)
             }
-            let energy_j = self.ledger.rounds().last().copied().unwrap_or(0.0);
-            let loss = self.log.rows().last().map(|r| r.loss).unwrap_or(f64::NAN);
-            self.log.push(RoundLog {
-                round: round_idx,
-                policy: self.cfg.algo.clone(),
-                loss,
-                energy_j,
-                sched_time_s: 0.0,
-                train_time_s: 0.0,
-                participants: 0,
-                tasks: 0,
-            });
-            self.metrics.inc("aborted_rounds", 1);
+            Err(e) => {
+                self.phase = Phase::Scheduling;
+                // The aborted round still consumed its index, and dropout
+                // victims may already have burned real energy into an open
+                // ledger bucket. Log an explicit aborted row (opening an
+                // empty bucket if none was: every completed round opens
+                // exactly one bucket, so `rounds_opened <= round_idx`
+                // means this round's bucket is missing — a comparison
+                // that stays correct after a restore resets the log) so
+                // `Σ log energy == ledger total` and one-row-per-round
+                // hold for callers that handle the error and keep driving
+                // rounds.
+                if self.ledger.rounds_opened() <= round_idx {
+                    self.ledger.begin_round();
+                }
+                let energy_j = self.ledger.rounds().last().copied().unwrap_or(0.0);
+                let loss = self.last_loss;
+                let row = RoundLog {
+                    round: round_idx,
+                    policy: self.cfg.algo.clone(),
+                    loss,
+                    energy_j,
+                    sched_time_s: 0.0,
+                    train_time_s: 0.0,
+                    participants: 0,
+                    tasks: 0,
+                };
+                self.log.push(row.clone());
+                self.metrics.inc("aborted_rounds", 1);
+                self.trace = Some(RoundTrace {
+                    solver: ABORTED_SOLVER.into(),
+                    digest: 0,
+                });
+                // Journal the aborted row too (one journal line per round
+                // index). A secondary store error must not shadow the
+                // round's own failure — record_round already poisons the
+                // coordinator on a failed store commit, so the divergence
+                // still fails fast on the next round.
+                let _ = self.record_round(&row);
+                Err(e)
+            }
         }
-        result
+    }
+
+    /// Persist one committed row: journal-first into the attached store,
+    /// then into every streaming sink. A failed *store* commit poisons
+    /// the coordinator (the journal is now behind the rounds driven — an
+    /// unrecoverable divergence); a failed sink merely surfaces its error
+    /// (the stream loses a row, the campaign itself is intact).
+    fn record_round(&mut self, row: &RoundLog) -> Result<()> {
+        if let Some(store) = self.store.as_mut() {
+            let trace = self.trace.clone().unwrap_or_default();
+            let commit = store.commit(&JournalEntry {
+                round: row.round,
+                solver: trace.solver,
+                digest: trace.digest,
+                rng_after: self.rng.state(),
+                row: row.clone(),
+            });
+            if let Err(se) = commit {
+                self.store_failed = Some(se.to_string());
+                return Err(se);
+            }
+        }
+        for sink in &mut self.sinks {
+            sink.record(row)?;
+        }
+        Ok(())
+    }
+
+    /// True when round traces (instance/schedule digests) are computed.
+    fn tracing(&self) -> bool {
+        self.record_trace || self.store.is_some()
     }
 
     fn round_inner(&mut self, round_idx: usize) -> Result<RoundLog> {
@@ -441,10 +588,16 @@ impl<B: RoundBackend> Coordinator<B> {
         self.metrics.inc("fleet_classes", fleet.n_classes() as u64);
         let instance = fleet.to_flat();
         let timer = Timer::start();
-        let schedule = self.solve(&fleet, &instance)?;
+        let (schedule, effective) = self.solve(&fleet, &instance)?;
         let sched_time_s = timer.elapsed_s();
         validate::check(&instance, &schedule)?;
         let predicted_j = validate::total_cost(&instance, &schedule);
+        if self.tracing() {
+            self.trace = Some(RoundTrace {
+                solver: effective.to_string(),
+                digest: round_digest(&fleet, &schedule),
+            });
+        }
 
         // ---- Training --------------------------------------------------
         self.transition(Phase::Training)?;
@@ -562,16 +715,19 @@ impl<B: RoundBackend> Coordinator<B> {
         self.metrics.inc("tasks", tasks as u64);
         self.metrics.set("eval_loss", loss);
         self.metrics.set("predicted_energy_j", predicted_j);
+        self.last_loss = loss;
         self.log.push(row.clone());
         // Ready for the next round.
         self.phase = Phase::Scheduling;
         Ok(row)
     }
 
-    /// Run the configured number of rounds (early-stopping on
-    /// `target_loss`); returns the accumulated log.
+    /// Run the campaign up to the configured round count (early-stopping
+    /// on `target_loss`); returns the accumulated log. Counts rounds
+    /// already driven — a restored coordinator finishes its campaign, it
+    /// does not start a fresh `cfg.rounds` on top.
     pub fn run(&mut self) -> Result<&TrainingLog> {
-        for _ in 0..self.cfg.rounds {
+        while self.next_round < self.cfg.rounds {
             let row = self.round()?;
             if let Some(target) = self.cfg.target_loss {
                 if row.loss <= target {
@@ -580,7 +736,223 @@ impl<B: RoundBackend> Coordinator<B> {
                 }
             }
         }
+        self.flush_sinks()?;
         Ok(&self.log)
+    }
+}
+
+// ---- durable campaigns (store attach / snapshot / restore) -------------
+//
+// Everything below needs the backend to expose durable state
+// ([`BackendState`]); the plain round loop above does not.
+
+impl<B: RoundBackend + BackendState> Coordinator<B> {
+    /// Attach a campaign store. From here on every round is journaled
+    /// (fsync'd before `round()` returns) and [`Coordinator::round_stored`]
+    /// writes periodic snapshots. The store's committed count must equal
+    /// the rounds already driven, so journal indices stay contiguous.
+    pub fn attach_store(&mut self, store: CampaignStore) -> Result<()> {
+        if store.committed() != self.next_round {
+            return Err(FedError::Store(format!(
+                "store holds {} committed rounds but the coordinator is at \
+                 round {}",
+                store.committed(),
+                self.next_round
+            )));
+        }
+        self.store = Some(store);
+        Ok(())
+    }
+
+    /// Drive one round and write the periodic snapshot when due —
+    /// [`Coordinator::round`] plus durability.
+    pub fn round_stored(&mut self) -> Result<RoundLog> {
+        let row = self.round()?;
+        if self.store.as_ref().map_or(false, |s| s.due_snapshot()) {
+            let state = self.snapshot_json();
+            if let Some(store) = self.store.as_mut() {
+                store.write_snapshot(state)?;
+            }
+        }
+        Ok(row)
+    }
+
+    /// Serialize the full coordinator state (round-boundary invariants:
+    /// the phase machine is between rounds). The warm DP cache is not
+    /// persisted — warm re-solves are bit-for-bit equal to cold ones, so
+    /// a restored run merely pays one cold solve.
+    pub fn snapshot_json(&self) -> Json {
+        Json::obj(vec![
+            ("next_round", Json::Num(self.next_round as f64)),
+            ("last_loss", jf(self.last_loss)),
+            // Whole-campaign log totals survive the log ring AND restore.
+            ("log_rows", Json::Num(self.log.total_rows() as f64)),
+            ("log_energy", jf(self.log.total_energy())),
+            ("rng", snap::rng_to_json(&self.rng)),
+            (
+                "pool",
+                Json::Arr(
+                    self.pool.iter().map(|&i| Json::Num(i as f64)).collect(),
+                ),
+            ),
+            (
+                "devices",
+                Json::Arr(self.devices.iter().map(snap::device_to_json).collect()),
+            ),
+            ("dynamics", snap::dynamics_to_json(&self.dynamics)),
+            ("ledger", snap::ledger_to_json(&self.ledger)),
+            ("metrics", snap::metrics_to_json(&self.metrics)),
+            ("backend", self.backend.save_state()),
+        ])
+    }
+
+    /// Rebuild a coordinator from a snapshot and replay the journal tail
+    /// (every entry with `round >= snapshot.next_round`), **verifying**
+    /// each replayed round against its journal entry — solver, instance +
+    /// schedule digest, post-round RNG state, energy, loss, participants.
+    /// Success therefore proves the restored coordinator is bit-for-bit
+    /// at the pre-crash state: its next round will derive the same
+    /// instance, produce the same schedule, and spend the same energy as
+    /// the uninterrupted run.
+    ///
+    /// The store itself is *not* attached here; attach the writer half
+    /// (from [`CampaignStore::resume`]) afterwards to continue the
+    /// campaign.
+    pub fn restore(
+        cfg: CoordinatorConfig,
+        state: &Json,
+        entries: &[JournalEntry],
+        backend: B,
+        log_bound: Option<usize>,
+    ) -> Result<Self> {
+        let devices = get_arr(state, "devices")?
+            .iter()
+            .map(snap::device_from_json)
+            .collect::<Result<Vec<ManagedDevice>>>()?;
+        let mut c = Coordinator::new(cfg, devices, backend)?;
+        c.backend.load_state(get(state, "backend")?)?;
+        c.rng = snap::rng_from_json(get(state, "rng")?)?;
+        c.pool = get_arr(state, "pool")?
+            .iter()
+            .map(|v| {
+                v.as_usize().ok_or_else(|| {
+                    FedError::Store("pool entries must be indices".into())
+                })
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        c.next_round = get_usize(state, "next_round")?;
+        c.last_loss = get_f64(state, "last_loss")?;
+        c.dynamics = snap::dynamics_from_json(get(state, "dynamics")?)?;
+        c.ledger = snap::ledger_from_json(get(state, "ledger")?)?;
+        c.metrics = snap::metrics_from_json(get(state, "metrics")?)?;
+        c.log = TrainingLog::new();
+        c.log
+            .resume_from(get_usize(state, "log_rows")?, get_f64(state, "log_energy")?);
+        c.set_log_bound(log_bound);
+        c.phase = if c.next_round == 0 {
+            Phase::Configuring
+        } else {
+            Phase::Scheduling
+        };
+        c.record_trace = true;
+
+        let start = c.next_round;
+        for e in entries {
+            if e.round < start {
+                continue;
+            }
+            if e.round != c.next_round {
+                return Err(FedError::Store(format!(
+                    "journal gap: entry for round {} while replay is at {}",
+                    e.round, c.next_round
+                )));
+            }
+            c.replay_entry(e)?;
+        }
+        Ok(c)
+    }
+
+    /// Re-execute one journaled round and check it against the entry.
+    fn replay_entry(&mut self, e: &JournalEntry) -> Result<()> {
+        let mismatch = |what: String| {
+            FedError::Store(format!("replay mismatch at round {}: {what}", e.round))
+        };
+        if e.solver == ABORTED_SOLVER {
+            // The original run's backend failed this round. Deterministic
+            // backends fail again on replay; a round that now *succeeds*
+            // contradicts the journal. The aborted row the replay logged
+            // is verified too — a forged aborted entry must not pass the
+            // audit.
+            return match self.round() {
+                Err(_) => {
+                    if self.rng.state() != e.rng_after {
+                        return Err(mismatch("post-abort RNG state".into()));
+                    }
+                    if e.digest != 0 {
+                        return Err(mismatch(
+                            "aborted entry carries a schedule digest".into(),
+                        ));
+                    }
+                    let row = self.log.rows().last().cloned().ok_or_else(|| {
+                        mismatch("no aborted row was logged".into())
+                    })?;
+                    Self::check_row(&row, e)
+                }
+                Ok(_) => Err(mismatch(
+                    "journaled aborted round replayed successfully".into(),
+                )),
+            };
+        }
+        let row = self.round().map_err(|err| {
+            FedError::Store(format!("replay of round {} failed: {err}", e.round))
+        })?;
+        let trace = self.trace.clone().unwrap_or_default();
+        if trace.solver != e.solver {
+            return Err(mismatch(format!(
+                "solver '{}' != journaled '{}'",
+                trace.solver, e.solver
+            )));
+        }
+        if trace.digest != e.digest {
+            return Err(mismatch(format!(
+                "instance/schedule digest {:x} != journaled {:x}",
+                trace.digest, e.digest
+            )));
+        }
+        if self.rng.state() != e.rng_after {
+            return Err(mismatch("post-round RNG state".into()));
+        }
+        Self::check_row(&row, e)
+    }
+
+    /// Compare a replayed row against its journal entry (bit-exact energy
+    /// and loss — NaN-tolerant — plus participants/tasks; timings are
+    /// wall-clock noise and excluded).
+    fn check_row(row: &RoundLog, e: &JournalEntry) -> Result<()> {
+        let mismatch = |what: String| {
+            FedError::Store(format!("replay mismatch at round {}: {what}", e.round))
+        };
+        if row.energy_j.to_bits() != e.row.energy_j.to_bits() {
+            return Err(mismatch(format!(
+                "energy {} != journaled {}",
+                row.energy_j, e.row.energy_j
+            )));
+        }
+        let loss_equal = row.loss.to_bits() == e.row.loss.to_bits()
+            || (row.loss.is_nan() && e.row.loss.is_nan());
+        if !loss_equal {
+            return Err(mismatch(format!(
+                "loss {} != journaled {}",
+                row.loss, e.row.loss
+            )));
+        }
+        if row.participants != e.row.participants || row.tasks != e.row.tasks {
+            return Err(mismatch(format!(
+                "participants/tasks {}/{} != journaled {}/{}",
+                row.participants, row.tasks, e.row.participants, e.row.tasks
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -848,6 +1220,54 @@ mod tests {
         // Six interchangeable devices → one scheduling class.
         assert_eq!(coord.metrics().counter("fleet_devices"), 6);
         assert_eq!(coord.metrics().counter("fleet_classes"), 1);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_for_bit() {
+        // Two rounds in (with churn, drift, dropout, and the warm DP all
+        // engaged), snapshot, rebuild through the JSON round-trip, and
+        // drive both coordinators three more rounds: every row and the
+        // final RNG state must match exactly. The restored side solves
+        // cold where the original is warm — bit-for-bit by design.
+        let cfg = CoordinatorConfig { rounds: 5, ..paper_cfg() };
+        let mut a =
+            Coordinator::new(cfg.clone(), paper_fleet(), SimBackend::new())
+                .unwrap();
+        a.set_dynamics(DynamicsConfig::mobile(3));
+        a.round().unwrap();
+        a.round().unwrap();
+        let state = Json::parse(&a.snapshot_json().to_string()).unwrap();
+        let mut b =
+            Coordinator::restore(cfg, &state, &[], SimBackend::new(), None)
+                .unwrap();
+        assert_eq!(b.rounds_run(), 2);
+        for _ in 0..3 {
+            let ra = a.round().unwrap();
+            let rb = b.round().unwrap();
+            assert_eq!(ra.round, rb.round);
+            assert_eq!(ra.energy_j.to_bits(), rb.energy_j.to_bits());
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+            assert_eq!(ra.participants, rb.participants);
+            assert_eq!(ra.tasks, rb.tasks);
+        }
+        assert_eq!(a.rng.state(), b.rng.state(), "streams must stay in lockstep");
+        assert_eq!(a.ledger().total().to_bits(), b.ledger().total().to_bits());
+    }
+
+    #[test]
+    fn bounded_log_with_sink_receives_every_row() {
+        use crate::store::NullSink;
+        let cfg = CoordinatorConfig { rounds: 40, ..paper_cfg() };
+        let mut c =
+            Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+        c.add_sink(Box::new(NullSink));
+        c.set_log_bound(Some(4));
+        c.run().unwrap();
+        assert_eq!(c.log().total_rows(), 40);
+        assert!(c.log().rows().len() < 8, "retention must stay bounded");
+        assert_eq!(c.metrics().counter("rounds"), 40);
+        assert!(c.ledger().rounds().len() < 8);
+        assert_eq!(c.ledger().rounds_opened(), 40);
     }
 
     #[test]

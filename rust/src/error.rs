@@ -38,6 +38,10 @@ pub enum FedError {
     /// round driven from a non-ready state).
     Coordinator(String),
 
+    /// Durable-store failures: journal/snapshot corruption, checksum
+    /// mismatches, or a replay that diverged from the journaled campaign.
+    Store(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -54,6 +58,7 @@ impl fmt::Display for FedError {
             FedError::Runtime(m) => write!(f, "runtime error: {m}"),
             FedError::Fl(m) => write!(f, "fl error: {m}"),
             FedError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            FedError::Store(m) => write!(f, "store error: {m}"),
             FedError::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -29,6 +29,16 @@ impl Availability {
         Self { p_join, p_leave, online: vec![true; n] }
     }
 
+    /// Rebuild from persisted per-device states (store snapshot restore).
+    pub fn from_states(p_join: f64, p_leave: f64, online: Vec<bool>) -> Self {
+        Self { p_join, p_leave, online }
+    }
+
+    /// Current per-device online flags (what store snapshots persist).
+    pub fn states(&self) -> &[bool] {
+        &self.online
+    }
+
     /// Advance one round; returns the indices of online devices.
     pub fn step(&mut self, rng: &mut Rng) -> Vec<usize> {
         for state in self.online.iter_mut() {
@@ -83,6 +93,16 @@ impl CostDrift {
     /// Unit scales for `n` devices.
     pub fn new(n: usize, sigma: f64) -> Self {
         Self { sigma, scale: vec![1.0; n] }
+    }
+
+    /// Rebuild from persisted per-device scales (store snapshot restore).
+    pub fn from_scales(sigma: f64, scale: Vec<f64>) -> Self {
+        Self { sigma, scale }
+    }
+
+    /// Current per-device scales (what store snapshots persist).
+    pub fn scales(&self) -> &[f64] {
+        &self.scale
     }
 
     /// Advance one round.
@@ -209,6 +229,29 @@ mod tests {
         let mut rng = Rng::new(4);
         d.step(&mut rng);
         assert!((0..4).all(|i| d.scale(i) == 1.0));
+    }
+
+    #[test]
+    fn state_roundtrip_continues_identically() {
+        // Persist-and-rebuild mid-run must continue the exact trajectory —
+        // the property coordinator snapshot/restore relies on.
+        let mut av = Availability::new(16, 0.4, 0.2);
+        let mut dr = CostDrift::new(16, 0.1);
+        let mut rng = Rng::new(8);
+        for _ in 0..7 {
+            av.step(&mut rng);
+            dr.step(&mut rng);
+        }
+        let mut av2 =
+            Availability::from_states(av.p_join, av.p_leave, av.states().to_vec());
+        let mut dr2 = CostDrift::from_scales(dr.sigma, dr.scales().to_vec());
+        let mut rng2 = Rng::from_state(rng.state());
+        for _ in 0..7 {
+            assert_eq!(av.step(&mut rng), av2.step(&mut rng2));
+            dr.step(&mut rng);
+            dr2.step(&mut rng2);
+            assert_eq!(dr.scales(), dr2.scales());
+        }
     }
 
     #[test]

@@ -14,18 +14,20 @@ use std::path::Path;
 
 use crate::config::{Policy, TrainConfig};
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, DeviceOutcome, ManagedDevice, RoundBackend,
-    RoundPlan,
+    BackendState, Coordinator, CoordinatorConfig, DeviceOutcome, ManagedDevice,
+    RoundBackend, RoundPlan,
 };
 use crate::energy::power::Behavior;
 use crate::energy::profiles::{BehaviorMix, Fleet};
-use crate::error::Result;
+use crate::error::{FedError, Result};
 use crate::fl::aggregate::fedavg;
 use crate::fl::client::SimClient;
 use crate::fl::data::Dataset;
 use crate::fl::dynamics::DynamicsConfig;
 use crate::metrics::{EnergyLedger, MetricsHub, RoundLog, TrainingLog};
 use crate::runtime::{Dtype, ModelRuntime, ParamSet};
+use crate::store::MetricSink;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Behaviour mix used when the config does not pin one (kept homogeneous so
@@ -86,6 +88,24 @@ impl RoundBackend for FlBackend {
             sum += self.runtime.eval_step(&self.global, x, y)? as f64;
         }
         Ok(sum / self.eval_batches.len() as f64)
+    }
+}
+
+impl BackendState for FlBackend {
+    fn save_state(&self) -> Json {
+        // Model parameters and client RNGs are not persisted yet; a
+        // snapshot of an FL-backed campaign records the coordinator side
+        // only (see ROADMAP: PJRT state persistence).
+        Json::Null
+    }
+
+    fn load_state(&mut self, _state: &Json) -> Result<()> {
+        Err(FedError::Store(
+            "the PJRT FL backend cannot restore from a snapshot yet \
+             (model parameters are not persisted); use the sim backend \
+             for durable campaigns"
+                .into(),
+        ))
     }
 }
 
@@ -211,6 +231,24 @@ impl Server {
     /// Per-round training log.
     pub fn log(&self) -> &TrainingLog {
         self.coord.log()
+    }
+
+    /// Stream every round's row into `sink` (JSONL/CSV/custom) as it
+    /// commits.
+    pub fn add_sink(&mut self, sink: Box<dyn MetricSink>) {
+        self.coord.add_sink(sink);
+    }
+
+    /// Bound in-memory per-round retention (see
+    /// [`Coordinator::set_log_bound`]) — pair with a sink so long
+    /// campaigns stop growing memory with the round count.
+    pub fn set_log_bound(&mut self, bound: Option<usize>) {
+        self.coord.set_log_bound(bound);
+    }
+
+    /// Flush all attached sinks.
+    pub fn flush_sinks(&mut self) -> Result<()> {
+        self.coord.flush_sinks()
     }
 
     /// Execute one round through the coordinator; returns the logged row.

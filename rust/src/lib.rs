@@ -30,6 +30,10 @@
 //!   evolving device profiles, warm-starts (MC)²MKP re-solves, and emits
 //!   per-round energy/cost metrics. Training plugs in via
 //!   [`coordinator::RoundBackend`].
+//! * [`store`] — durable campaign state: a write-ahead round journal,
+//!   checksummed snapshot/restore (crash recovery is bit-for-bit), and
+//!   streaming metric sinks that keep coordinator memory bounded over
+//!   long campaigns.
 //! * [`energy`] — device power/energy/carbon models that synthesize the
 //!   cost functions consumed by the schedulers.
 //! * [`fl`] — federated-learning server (a PJRT-backed coordinator
@@ -62,7 +66,9 @@ pub mod fl;
 pub mod metrics;
 pub mod runtime;
 pub mod sched;
+pub mod store;
 pub mod testkit;
 pub mod util;
 
 pub use error::{FedError, Result};
+pub use store::CampaignStore;

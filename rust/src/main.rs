@@ -3,23 +3,36 @@
 //! Subcommands:
 //! * `schedule` — build a synthetic fleet instance and solve it with any
 //!   registered solver, printing the assignment and energy;
-//! * `train` — run federated training end-to-end on the AOT artifacts
-//!   (the coordinator round loop over the PJRT backend);
+//! * `train` — run federated training end-to-end: the coordinator round
+//!   loop over the PJRT backend (`--backend fl`) or the artifact-free
+//!   simulation backend (`--backend sim`), optionally journaled into a
+//!   durable campaign store (`--store DIR`);
+//! * `resume` — continue a crashed/stopped campaign from its store,
+//!   bit-for-bit (snapshot + verified journal replay);
+//! * `replay` — re-derive every journaled round from the initial snapshot
+//!   and verify digests: a deterministic audit of a finished campaign;
 //! * `fleet` — sample and describe a heterogeneous fleet;
 //! * `solvers` — list every solver in the registry.
 
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use fedzero::cli;
 use fedzero::config::{Policy, TrainConfig};
+use fedzero::coordinator::{Coordinator, CoordinatorConfig, ManagedDevice, SimBackend};
 use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::{BehaviorMix, Fleet};
+use fedzero::fl::dynamics::DynamicsConfig;
 use fedzero::fl::Server;
 use fedzero::metrics::Timer;
 use fedzero::sched::auto::{best_algorithm, TABLE2_SCENARIOS};
 use fedzero::sched::fleet::FleetInstance;
 use fedzero::sched::solver::{Solver, SolverRegistry};
 use fedzero::sched::validate;
+use fedzero::store::journal::campaign_digest;
+use fedzero::store::{
+    self, snapshot as snap, CampaignStore, CsvSink, JsonlSink, MetricSink,
+};
 use fedzero::util::json::Json;
 use fedzero::util::rng::Rng;
 use fedzero::util::table::{fmt_duration, fmt_energy, Table};
@@ -41,6 +54,8 @@ fn run(args: &[String]) -> fedzero::Result<()> {
     match parsed.command.as_str() {
         "schedule" => cmd_schedule(&parsed),
         "train" => cmd_train(&parsed),
+        "resume" => cmd_resume(&parsed),
+        "replay" => cmd_replay(&parsed),
         "fleet" => cmd_fleet(&parsed),
         "solvers" => cmd_solvers(),
         other => Err(fedzero::FedError::Config(format!("unhandled command {other}"))),
@@ -128,27 +143,69 @@ fn cmd_schedule(p: &cli::Parsed) -> fedzero::Result<()> {
 }
 
 fn cmd_train(p: &cli::Parsed) -> fedzero::Result<()> {
+    match p.req("backend")? {
+        "fl" => cmd_train_fl(p),
+        "sim" => cmd_train_sim(p),
+        other => Err(fedzero::FedError::Config(format!(
+            "unknown backend '{other}' (fl|sim)"
+        ))),
+    }
+}
+
+fn cmd_train_fl(p: &cli::Parsed) -> fedzero::Result<()> {
+    if p.get("store").is_some() {
+        return Err(fedzero::FedError::Config(
+            "--store requires --backend sim (the PJRT backend cannot restore \
+             model state from a snapshot yet)"
+                .into(),
+        ));
+    }
     let mut cfg = match p.get("config") {
         Some(path) => TrainConfig::from_toml(&std::fs::read_to_string(path)?)?,
         None => TrainConfig::default(),
     };
-    // CLI overrides. `--seed` first: it threads end-to-end (fleet
-    // sampling, data partitioning, selection, and the coordinator RNG the
-    // `random` baseline consumes), so runs are reproducible from the
-    // command line.
-    cfg.seed = p.get_or("seed", cfg.seed)?;
-    cfg.rounds = p.get_or("rounds", cfg.rounds)?;
-    cfg.devices = p.get_or("devices", cfg.devices)?;
-    cfg.tasks_per_round = p.get_or("tasks", cfg.tasks_per_round)?;
-    cfg.model = p.get("model").unwrap_or(&cfg.model).to_string();
-    cfg.policy = parse_algo(p.req("algo")?, cfg.seed)?;
-    cfg.artifacts_dir = p.get("artifacts").unwrap_or(&cfg.artifacts_dir).to_string();
+    // Explicit CLI flags override the config file; seeded CLI defaults do
+    // not (otherwise `--config` values would silently lose to them).
+    // `--seed` first: it threads end-to-end (fleet sampling, data
+    // partitioning, selection, and the coordinator RNG the `random`
+    // baseline consumes), so runs are reproducible from the command line.
+    cfg.seed = p.get_parse_explicit("seed")?.unwrap_or(cfg.seed);
+    cfg.rounds = p.get_parse_explicit("rounds")?.unwrap_or(cfg.rounds);
+    cfg.devices = p.get_parse_explicit("devices")?.unwrap_or(cfg.devices);
+    cfg.tasks_per_round =
+        p.get_parse_explicit("tasks")?.unwrap_or(cfg.tasks_per_round);
+    if let Some(model) = p.get_explicit("model") {
+        cfg.model = model.to_string();
+    }
+    if let Some(algo) = p.get_explicit("algo") {
+        cfg.policy = parse_algo(algo, cfg.seed)?;
+    }
+    if let Some(dir) = p.get_explicit("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
     cfg.validate()?;
 
     let out = p.get("out").map(|s| s.to_string());
     let policy = cfg.policy;
     let rounds = cfg.rounds;
+    let devices_n = cfg.devices;
     let mut server = Server::new(cfg, fedzero::fl::server::DEFAULT_MIX)?;
+    if let Some(d) = parse_dynamics(p.req("dynamics")?, devices_n)? {
+        server.set_dynamics(d);
+    }
+    if let Some(path) = p.get("metrics-jsonl") {
+        server.add_sink(Box::new(JsonlSink::create(Path::new(path))?));
+    }
+    if let Some(path) = &out {
+        // Streamed, not materialized at the end — so `--out` stays
+        // complete even when `--log-ring` bounds the in-memory log.
+        server.add_sink(Box::new(CsvSink::create(Path::new(path))?));
+    }
+    if let Some(ring) = p.get_parse::<usize>("log-ring")? {
+        if ring > 0 {
+            server.set_log_bound(Some(ring));
+        }
+    }
     println!("round,policy,loss,energy_j,sched_ms,train_s");
     for r in 0..rounds {
         let row = server.round()?;
@@ -168,14 +225,291 @@ fn cmd_train(p: &cli::Parsed) -> fedzero::Result<()> {
             }
         }
     }
+    server.flush_sinks()?;
     println!(
         "done: policy={policy}, total energy {}",
         fmt_energy(server.ledger().total())
     );
     if let Some(path) = out {
-        server.log().to_csv().save(std::path::Path::new(&path))?;
         println!("log written to {path}");
     }
+    Ok(())
+}
+
+fn parse_dynamics(name: &str, n: usize) -> fedzero::Result<Option<DynamicsConfig>> {
+    match name {
+        "none" => Ok(None),
+        "mobile" => Ok(Some(DynamicsConfig::mobile(n))),
+        other => Err(fedzero::FedError::Config(format!(
+            "unknown dynamics '{other}' (none|mobile)"
+        ))),
+    }
+}
+
+/// Drive a sim-backed coordinator to `rounds`, printing one CSV-ish line
+/// per round and honoring periodic snapshots when a store is attached.
+fn drive_sim(
+    coord: &mut Coordinator<SimBackend>,
+    rounds: usize,
+    sleep_ms: u64,
+) -> fedzero::Result<()> {
+    while coord.rounds_run() < rounds {
+        let row = coord.round_stored()?;
+        println!(
+            "{},{},{:.4},{:.2},{:.3},{:.2}",
+            row.round,
+            row.policy,
+            row.loss,
+            row.energy_j,
+            row.sched_time_s * 1e3,
+            row.train_time_s
+        );
+        if let Some(target) = coord.cfg().target_loss {
+            if row.loss <= target {
+                println!("target loss reached at round {}", row.round);
+                break;
+            }
+        }
+        if sleep_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(sleep_ms));
+        }
+    }
+    coord.flush_sinks()?;
+    Ok(())
+}
+
+/// `train --backend sim`: the coordinator round loop over the
+/// artifact-free simulation backend — schedules, energy, dynamics, and
+/// (with `--store`) a durable journaled campaign.
+fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
+    // `--config` supplies the scheduling-side knobs (participation,
+    // min_tasks, max_share, target_loss, ...); the ML-side keys (model,
+    // artifacts, dirichlet_alpha, workers) have no sim equivalent and are
+    // ignored here. CLI flags override, exactly as on the fl path.
+    let base = match p.get("config") {
+        Some(path) => TrainConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => TrainConfig::default(),
+    };
+    let rounds: usize = p.get_parse_explicit("rounds")?.unwrap_or(base.rounds);
+    let devices_n: usize = p.get_parse_explicit("devices")?.unwrap_or(base.devices);
+    let tasks: usize =
+        p.get_parse_explicit("tasks")?.unwrap_or(base.tasks_per_round);
+    let seed: u64 = p.get_parse_explicit("seed")?.unwrap_or(base.seed);
+    let algo = match p.get_explicit("algo") {
+        Some(a) => a.to_string(),
+        None => base.policy.to_string(),
+    };
+    // Resolve early so `--algo` errors list the registry. Any registered
+    // solver works here (the sim backend is not limited to `Policy`).
+    SolverRegistry::with_defaults(seed).resolve(&algo)?;
+    let cfg = CoordinatorConfig {
+        rounds,
+        tasks_per_round: tasks,
+        algo,
+        participation: base.participation,
+        min_tasks: base.min_tasks,
+        max_share: base.max_share,
+        seed,
+        target_loss: base.target_loss,
+    };
+    let snapshot_every: usize = p.get_or("snapshot-every", 16)?;
+    let sleep_ms: u64 = p.get_or("round-sleep-ms", 0)?;
+    let dynamics_name = p.req("dynamics")?.to_string();
+    let dynamics = parse_dynamics(&dynamics_name, devices_n)?;
+
+    // The fleet is sampled from the seed; its full evolving state lives in
+    // the snapshots thereafter, so `resume` never needs to resample.
+    let mut rng = Rng::new(seed);
+    let fleet = Fleet::sample(devices_n, BehaviorMix::Mixed, &mut rng);
+    let managed: Vec<ManagedDevice> = fleet
+        .devices
+        .iter()
+        .map(|d| ManagedDevice::from_device(d, usize::MAX))
+        .collect();
+    let mut coord = Coordinator::new(cfg.clone(), managed, SimBackend::new())?;
+    if let Some(d) = dynamics {
+        coord.set_dynamics(d);
+    }
+
+    let ring = p.get_parse::<usize>("log-ring")?;
+    if let Some(path) = p.get("metrics-jsonl") {
+        coord.add_sink(Box::new(JsonlSink::create(Path::new(path))?));
+    }
+    if let Some(path) = p.get("out") {
+        // The sim path streams the CSV instead of materializing the full
+        // log at the end — same columns as TrainingLog::to_csv.
+        coord.add_sink(Box::new(CsvSink::create(Path::new(path))?));
+    }
+    let store_dir = p.get("store").map(PathBuf::from);
+    if let Some(dir) = &store_dir {
+        // Storing streams every row to disk; default the in-memory log to
+        // a small ring so campaign memory is flat in the round count.
+        let ring = ring.unwrap_or(64);
+        coord.set_log_bound(if ring == 0 { None } else { Some(ring) });
+        // Absolutized: `resume` may run from a different cwd, and must
+        // re-attach the *same* files the crashed process was streaming.
+        let opt_path = |key: &str| match p.get(key) {
+            Some(s) => {
+                let pb = PathBuf::from(s);
+                let abs = if pb.is_absolute() {
+                    pb
+                } else {
+                    std::env::current_dir()
+                        .map(|cwd| cwd.join(&pb))
+                        .unwrap_or(pb)
+                };
+                Json::Str(abs.to_string_lossy().into_owned())
+            }
+            None => Json::Null,
+        };
+        let meta = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("kind", Json::Str("sim".into())),
+            ("devices", Json::Num(devices_n as f64)),
+            ("dynamics", Json::Str(dynamics_name.clone())),
+            ("snapshot_every", Json::Num(snapshot_every as f64)),
+            ("log_ring", Json::Num(ring as f64)),
+            // Sink paths are part of the campaign: `resume` re-attaches
+            // them so streamed outputs stay complete across crashes.
+            ("metrics_jsonl", opt_path("metrics-jsonl")),
+            ("out", opt_path("out")),
+            ("cfg", snap::cfg_to_json(&cfg)),
+        ]);
+        let store = CampaignStore::create(dir, meta, coord.snapshot_json())?;
+        coord.attach_store(store)?;
+    } else if let Some(ring) = ring {
+        if ring > 0 {
+            coord.set_log_bound(Some(ring));
+        }
+    }
+
+    println!("round,policy,loss,energy_j,sched_ms,train_s");
+    drive_sim(&mut coord, rounds, sleep_ms)?;
+    println!(
+        "done: policy={}, total energy {}",
+        cfg.algo,
+        fmt_energy(coord.ledger().total())
+    );
+    if let Some(dir) = &store_dir {
+        println!("campaign store: {}", dir.display());
+    }
+    Ok(())
+}
+
+/// Rebuild the campaign's streamed sink files from the journal (their
+/// derived content is fully journaled, timings included) and re-attach
+/// them, so a resumed campaign keeps producing the outputs the crashed
+/// process was streaming.
+fn reattach_sinks(
+    coord: &mut Coordinator<SimBackend>,
+    meta: &Json,
+    entries: &[fedzero::store::JournalEntry],
+) -> fedzero::Result<()> {
+    if let Some(path) = meta.get("metrics_jsonl").and_then(|v| v.as_str()) {
+        let mut sink = JsonlSink::create(Path::new(path))?;
+        for e in entries {
+            sink.record(&e.row)?;
+        }
+        coord.add_sink(Box::new(sink));
+    }
+    if let Some(path) = meta.get("out").and_then(|v| v.as_str()) {
+        let mut sink = CsvSink::create(Path::new(path))?;
+        for e in entries {
+            sink.record(&e.row)?;
+        }
+        coord.add_sink(Box::new(sink));
+    }
+    Ok(())
+}
+
+/// `resume DIR`: rebuild the coordinator from the latest snapshot, replay
+/// and verify the journal tail, and continue the remaining rounds.
+fn cmd_resume(p: &cli::Parsed) -> fedzero::Result<()> {
+    let dir = PathBuf::from(&p.positional[0]);
+    let sleep_ms: u64 = p.get_or("round-sleep-ms", 0)?;
+    let (campaign, contents) = CampaignStore::resume(&dir)?;
+    let cfg = snap::cfg_from_json(store::get(&contents.meta, "cfg")?)?;
+    let ring = contents
+        .meta
+        .get("log_ring")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(64);
+    let log_bound = if ring == 0 { None } else { Some(ring) };
+    let committed = contents.entries.len();
+    println!(
+        "resuming {}: {} of {} rounds journaled, replaying from round {}",
+        dir.display(),
+        committed,
+        cfg.rounds,
+        contents
+            .snapshot
+            .get("next_round")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0)
+    );
+    let rounds = cfg.rounds;
+    let target_reached = cfg
+        .target_loss
+        .map_or(false, |t| {
+            contents.entries.last().map_or(false, |e| e.row.loss <= t)
+        });
+    let mut coord = Coordinator::restore(
+        cfg,
+        &contents.snapshot,
+        &contents.entries,
+        SimBackend::new(),
+        log_bound,
+    )?;
+    coord.attach_store(campaign)?;
+    reattach_sinks(&mut coord, &contents.meta, &contents.entries)?;
+    if coord.rounds_run() >= rounds || target_reached {
+        println!("campaign already complete ({committed} rounds)");
+        return Ok(());
+    }
+    println!("round,policy,loss,energy_j,sched_ms,train_s");
+    drive_sim(&mut coord, rounds, sleep_ms)?;
+    println!(
+        "done: policy={}, total energy {}",
+        coord.cfg().algo,
+        fmt_energy(coord.ledger().total())
+    );
+    Ok(())
+}
+
+/// `replay DIR`: re-derive every journaled round from the *initial*
+/// snapshot, verifying solver, instance/schedule digests, RNG states, and
+/// energy per round — a deterministic audit of the whole campaign.
+fn cmd_replay(p: &cli::Parsed) -> fedzero::Result<()> {
+    let dir = PathBuf::from(&p.positional[0]);
+    let contents = CampaignStore::read(&dir)?;
+    let cfg = snap::cfg_from_json(store::get(&contents.meta, "cfg")?)?;
+    let n = contents.entries.len();
+    // `restore` re-executes and checks every entry; reaching Ok *is* the
+    // audit passing.
+    let coord = Coordinator::restore(
+        cfg,
+        &contents.init_snapshot,
+        &contents.entries,
+        SimBackend::new(),
+        None,
+    )?;
+    let total_energy: f64 = contents.entries.iter().map(|e| e.row.energy_j).sum();
+    let final_loss = contents
+        .entries
+        .last()
+        .map(|e| e.row.loss.to_string())
+        .unwrap_or_else(|| "none".into());
+    println!(
+        "replayed {n} rounds from {}: every solver, instance/schedule digest, \
+         RNG state, and energy value matched the journal",
+        dir.display()
+    );
+    println!(
+        "campaign digest {:016x} rounds {n} energy_j {total_energy} \
+         final_loss {final_loss}",
+        campaign_digest(&contents.entries)
+    );
+    debug_assert_eq!(coord.rounds_run(), n);
     Ok(())
 }
 

@@ -41,6 +41,21 @@ impl MetricsHub {
         self.gauges.get(name).copied()
     }
 
+    /// All counters, name-sorted (what store snapshots persist).
+    pub fn counters_map(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    /// All gauges, name-sorted (what store snapshots persist).
+    pub fn gauges_map(&self) -> &BTreeMap<String, f64> {
+        &self.gauges
+    }
+
+    /// Overwrite a counter (store snapshot restore).
+    pub fn set_counter(&mut self, name: &str, value: u64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
     /// Render a compact one-line summary.
     pub fn summary(&self) -> String {
         let mut parts: Vec<String> =
@@ -68,18 +83,60 @@ impl Timer {
 }
 
 /// Energy ledger: accumulates joules per device and per round.
+///
+/// The per-round series is unbounded by default; long campaigns that
+/// stream rows to a [`crate::store::MetricSink`] bound it with
+/// [`EnergyLedger::set_round_bound`] so ledger memory stays constant in
+/// the round count ([`EnergyLedger::rounds`] then returns only the
+/// retained tail, while [`EnergyLedger::rounds_opened`] keeps the true
+/// count).
 #[derive(Clone, Debug, Default)]
 pub struct EnergyLedger {
     /// joules per device id.
     per_device: BTreeMap<usize, f64>,
-    /// (round, joules) series.
+    /// (round, joules) series — possibly only the retained tail.
     per_round: Vec<f64>,
+    /// Total `begin_round` calls ever (≥ `per_round.len()`).
+    opened: usize,
+    /// Retention bound on the per-round series (`None` = keep all).
+    bound: Option<usize>,
 }
 
 impl EnergyLedger {
     /// New empty ledger.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Rebuild from persisted parts (store snapshot restore). `opened` is
+    /// the true number of rounds ever opened; `per_round` may be only the
+    /// retained tail of a bounded ledger.
+    pub fn from_parts(
+        per_device: BTreeMap<usize, f64>,
+        per_round: Vec<f64>,
+        opened: usize,
+    ) -> Self {
+        debug_assert!(opened >= per_round.len());
+        Self { per_device, per_round, opened, bound: None }
+    }
+
+    /// Bound the retained per-round series to (at least) the most recent
+    /// `bound` entries; `None` restores unbounded retention. Totals and
+    /// [`EnergyLedger::rounds_opened`] are unaffected.
+    pub fn set_round_bound(&mut self, bound: Option<usize>) {
+        self.bound = bound.map(|b| b.max(1));
+        self.trim();
+    }
+
+    fn trim(&mut self) {
+        if let Some(b) = self.bound {
+            // Amortized O(1): let the vec grow to 2·b, then drop the
+            // oldest half in one move.
+            if self.per_round.len() >= b * 2 {
+                let excess = self.per_round.len() - b;
+                self.per_round.drain(..excess);
+            }
+        }
     }
 
     /// Record energy for `device` in the current (last) round.
@@ -93,7 +150,9 @@ impl EnergyLedger {
 
     /// Open a new round bucket.
     pub fn begin_round(&mut self) {
+        self.opened += 1;
         self.per_round.push(0.0);
+        self.trim();
     }
 
     /// Total joules across all devices.
@@ -106,9 +165,20 @@ impl EnergyLedger {
         self.per_device.get(&device).copied().unwrap_or(0.0)
     }
 
-    /// Per-round series.
+    /// Per-round series (the retained tail, if a bound is set).
     pub fn rounds(&self) -> &[f64] {
         &self.per_round
+    }
+
+    /// Number of round buckets ever opened (immune to the retention
+    /// bound).
+    pub fn rounds_opened(&self) -> usize {
+        self.opened
+    }
+
+    /// Per-device totals, id-sorted (what store snapshots persist).
+    pub fn per_device_map(&self) -> &BTreeMap<usize, f64> {
+        &self.per_device
     }
 
     /// Largest per-device share of total energy, in [0, 1]. A high value
@@ -123,6 +193,21 @@ impl EnergyLedger {
     }
 }
 
+/// Column order shared by every CSV emitter of [`RoundLog`] rows
+/// ([`TrainingLog::to_csv`] and the streaming
+/// [`crate::store::CsvSink`]) — one definition, so the buffered and
+/// streamed schemas cannot drift.
+pub const ROUND_LOG_COLUMNS: [&str; 8] = [
+    "round",
+    "policy",
+    "loss",
+    "energy_j",
+    "sched_time_s",
+    "train_time_s",
+    "participants",
+    "tasks",
+];
+
 /// One row of the per-round training log.
 #[derive(Clone, Debug)]
 pub struct RoundLog {
@@ -136,10 +221,38 @@ pub struct RoundLog {
     pub tasks: usize,
 }
 
+impl RoundLog {
+    /// Field values in [`ROUND_LOG_COLUMNS`] order.
+    pub fn csv_fields(&self) -> [String; 8] {
+        [
+            self.round.to_string(),
+            self.policy.clone(),
+            self.loss.to_string(),
+            self.energy_j.to_string(),
+            self.sched_time_s.to_string(),
+            self.train_time_s.to_string(),
+            self.participants.to_string(),
+            self.tasks.to_string(),
+        ]
+    }
+}
+
 /// Accumulates [`RoundLog`]s and exports them as CSV.
+///
+/// Unbounded by default. When per-round rows stream to a
+/// [`crate::store::MetricSink`] instead, [`TrainingLog::set_bound`] turns
+/// this into a ring of the most recent rows — peak memory stops growing
+/// with the round count while [`TrainingLog::total_rows`] and
+/// [`TrainingLog::total_energy`] stay exact over the whole campaign.
 #[derive(Clone, Debug, Default)]
 pub struct TrainingLog {
     rows: Vec<RoundLog>,
+    /// Retention bound (`None` = keep all rows).
+    bound: Option<usize>,
+    /// Rows dropped by the bound.
+    dropped: usize,
+    /// Running Σ energy over *all* pushed rows (drop-immune).
+    energy_acc: f64,
 }
 
 impl TrainingLog {
@@ -148,14 +261,63 @@ impl TrainingLog {
         Self::default()
     }
 
-    /// Append one round.
-    pub fn push(&mut self, row: RoundLog) {
-        self.rows.push(row);
+    /// New empty log retaining (at least) the most recent `bound` rows.
+    pub fn bounded(bound: usize) -> Self {
+        let mut log = Self::default();
+        log.set_bound(Some(bound));
+        log
     }
 
-    /// All rows.
+    /// Bound the retained rows to (at least) the most recent `bound`
+    /// entries; `None` restores unbounded retention.
+    pub fn set_bound(&mut self, bound: Option<usize>) {
+        self.bound = bound.map(|b| b.max(1));
+        self.trim();
+    }
+
+    fn trim(&mut self) {
+        if let Some(b) = self.bound {
+            // Amortized O(1): grow to 2·b, then drop the oldest half.
+            if self.rows.len() >= b * 2 {
+                let excess = self.rows.len() - b;
+                self.rows.drain(..excess);
+                self.dropped += excess;
+            }
+        }
+    }
+
+    /// Resume accounting from a prior campaign segment (store restore):
+    /// `prior_rows` rows totalling `prior_energy` joules were logged
+    /// before this process. They count toward
+    /// [`TrainingLog::total_rows`]/[`TrainingLog::total_energy`] but are
+    /// not retained (the store's journal holds them).
+    pub fn resume_from(&mut self, prior_rows: usize, prior_energy: f64) {
+        debug_assert!(self.rows.is_empty(), "resume_from on a used log");
+        self.dropped = prior_rows;
+        self.energy_acc = prior_energy;
+    }
+
+    /// Append one round.
+    pub fn push(&mut self, row: RoundLog) {
+        self.energy_acc += row.energy_j;
+        self.rows.push(row);
+        self.trim();
+    }
+
+    /// Retained rows (all of them when unbounded; at least the most
+    /// recent `bound` otherwise).
     pub fn rows(&self) -> &[RoundLog] {
         &self.rows
+    }
+
+    /// Rows ever pushed, including those dropped by the bound.
+    pub fn total_rows(&self) -> usize {
+        self.dropped + self.rows.len()
+    }
+
+    /// Rows dropped by the retention bound.
+    pub fn dropped_rows(&self) -> usize {
+        self.dropped
     }
 
     /// Final loss, if any rounds were logged.
@@ -163,28 +325,16 @@ impl TrainingLog {
         self.rows.last().map(|r| r.loss)
     }
 
-    /// Sum of per-round energy.
+    /// Sum of per-round energy over the whole campaign (drop-immune).
     pub fn total_energy(&self) -> f64 {
-        self.rows.iter().map(|r| r.energy_j).sum()
+        self.energy_acc
     }
 
-    /// Export to CSV.
+    /// Export the retained rows to CSV ([`ROUND_LOG_COLUMNS`] schema).
     pub fn to_csv(&self) -> CsvWriter {
-        let mut w = CsvWriter::new(&[
-            "round", "policy", "loss", "energy_j", "sched_time_s", "train_time_s",
-            "participants", "tasks",
-        ]);
+        let mut w = CsvWriter::new(&ROUND_LOG_COLUMNS);
         for r in &self.rows {
-            w.rowd(&[
-                &r.round,
-                &r.policy,
-                &r.loss,
-                &r.energy_j,
-                &r.sched_time_s,
-                &r.train_time_s,
-                &r.participants,
-                &r.tasks,
-            ]);
+            w.row(&r.csv_fields());
         }
         w
     }
@@ -243,6 +393,68 @@ mod tests {
         assert!(csv.contains("mc2mkp"));
         assert_eq!(log.final_loss(), Some(1.25));
         assert_eq!(log.total_energy(), 10.0);
+    }
+
+    fn row(round: usize, energy_j: f64) -> RoundLog {
+        RoundLog {
+            round,
+            policy: "auto".into(),
+            loss: 0.5,
+            energy_j,
+            sched_time_s: 0.0,
+            train_time_s: 0.0,
+            participants: 1,
+            tasks: 1,
+        }
+    }
+
+    #[test]
+    fn bounded_log_keeps_totals_exact() {
+        let mut log = TrainingLog::bounded(8);
+        for r in 0..100 {
+            log.push(row(r, 1.0));
+            assert!(log.rows().len() < 16, "retention must stay bounded");
+        }
+        assert_eq!(log.total_rows(), 100);
+        assert_eq!(log.dropped_rows() + log.rows().len(), 100);
+        assert!((log.total_energy() - 100.0).abs() < 1e-12);
+        assert_eq!(log.rows().last().unwrap().round, 99);
+        // The retained tail is contiguous and most-recent.
+        let first = log.rows().first().unwrap().round;
+        for (i, r) in log.rows().iter().enumerate() {
+            assert_eq!(r.round, first + i);
+        }
+    }
+
+    #[test]
+    fn bounded_ledger_keeps_counts_and_totals() {
+        let mut l = EnergyLedger::new();
+        l.set_round_bound(Some(4));
+        for r in 0..50 {
+            l.begin_round();
+            l.record(0, r as f64);
+            assert!(l.rounds().len() < 8);
+        }
+        assert_eq!(l.rounds_opened(), 50);
+        assert_eq!(l.total(), (0..50).sum::<usize>() as f64);
+        assert_eq!(*l.rounds().last().unwrap(), 49.0);
+    }
+
+    #[test]
+    fn ledger_from_parts_roundtrips() {
+        let mut l = EnergyLedger::new();
+        l.begin_round();
+        l.record(3, 2.5);
+        l.begin_round();
+        l.record(1, 1.5);
+        let back = EnergyLedger::from_parts(
+            l.per_device_map().clone(),
+            l.rounds().to_vec(),
+            l.rounds_opened(),
+        );
+        assert_eq!(back.total(), l.total());
+        assert_eq!(back.rounds(), l.rounds());
+        assert_eq!(back.rounds_opened(), 2);
     }
 
     #[test]

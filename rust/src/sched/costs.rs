@@ -93,16 +93,9 @@ impl CostFn {
     /// may split a bucket — the follow-up `PartialEq` check keeps classes
     /// correct either way).
     pub fn structural_hash(&self) -> u64 {
-        // FNV-1a, hand-rolled (the offline build has no hash crates).
-        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-        const PRIME: u64 = 0x0000_0100_0000_01b3;
-        fn mix(h: u64, word: u64) -> u64 {
-            let mut h = h;
-            for b in word.to_le_bytes() {
-                h = (h ^ b as u64).wrapping_mul(PRIME);
-            }
-            h
-        }
+        // FNV-1a via the shared primitive: persisted journal digests mix
+        // this hash, so it must never drift from `util::hash`.
+        use crate::util::hash::{mix_u64 as mix, FNV_OFFSET as OFFSET};
         fn go(c: &CostFn, mut h: u64) -> u64 {
             match c {
                 CostFn::Affine { fixed, per_task } => {

@@ -127,6 +127,28 @@ impl FleetInstance {
         Instance { tasks: self.tasks, lower, upper, costs }
     }
 
+    /// Order-sensitive structural digest (FNV-1a over `T`, every class's
+    /// cost fingerprint, limits, and membership). Two fleets digest equal
+    /// iff they were built from the same device sequence with
+    /// structurally-equal cost functions — what the coordinator store's
+    /// journal records per round so `replay`/`restore` can prove a resumed
+    /// campaign re-derived the exact same instances.
+    pub fn digest(&self) -> u64 {
+        use crate::util::hash::{mix_u64, FNV_OFFSET};
+        let mut h = mix_u64(FNV_OFFSET, self.tasks as u64);
+        h = mix_u64(h, self.classes.len() as u64);
+        for class in &self.classes {
+            h = mix_u64(h, class.cost.structural_hash());
+            h = mix_u64(h, class.lower as u64);
+            h = mix_u64(h, class.upper as u64);
+            h = mix_u64(h, class.members.len() as u64);
+            for &m in &class.members {
+                h = mix_u64(h, m as u64);
+            }
+        }
+        h
+    }
+
     /// Validity conditions of §3 at class granularity: `L <= U` per class
     /// and `ΣL <= T <= ΣU` over all members (overflow-safe, mirroring
     /// [`Instance::validate`]).
@@ -679,6 +701,53 @@ mod tests {
         let ok = Assignment::from_groups(vec![vec![(3, 1), (1, 1)]]);
         ok.check(&fleet).unwrap();
         assert_eq!(ok.expand(&fleet).assignments(), &[3, 1]);
+    }
+
+    #[test]
+    fn digest_separates_structurally_different_fleets() {
+        let base = FleetInstance::builder()
+            .tasks(10)
+            .device_class(affine(1.0), 0, 5, 2)
+            .device(affine(2.0), 1, 6)
+            .build()
+            .unwrap();
+        assert_eq!(base.digest(), base.digest(), "digest is deterministic");
+        let same = FleetInstance::builder()
+            .tasks(10)
+            .device(affine(1.0), 0, 5)
+            .device(affine(1.0), 0, 5)
+            .device(affine(2.0), 1, 6)
+            .build()
+            .unwrap();
+        assert_eq!(base.digest(), same.digest(), "same device sequence");
+        for other in [
+            FleetInstance::builder() // different T
+                .tasks(9)
+                .device_class(affine(1.0), 0, 5, 2)
+                .device(affine(2.0), 1, 6)
+                .build()
+                .unwrap(),
+            FleetInstance::builder() // different cost
+                .tasks(10)
+                .device_class(affine(1.5), 0, 5, 2)
+                .device(affine(2.0), 1, 6)
+                .build()
+                .unwrap(),
+            FleetInstance::builder() // different upper
+                .tasks(10)
+                .device_class(affine(1.0), 0, 6, 2)
+                .device(affine(2.0), 1, 6)
+                .build()
+                .unwrap(),
+            FleetInstance::builder() // different multiplicity
+                .tasks(10)
+                .device_class(affine(1.0), 0, 5, 3)
+                .device(affine(2.0), 1, 6)
+                .build()
+                .unwrap(),
+        ] {
+            assert_ne!(base.digest(), other.digest());
+        }
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! The write-ahead round journal: one fsync'd JSONL line per committed
+//! round.
+//!
+//! Each entry records what the round *did* — the structural digest of the
+//! derived [`FleetInstance`] + schedule, the effective solver, the RNG
+//! state after the round, and the full metrics row. That is enough to
+//!
+//! * **recover**: `Coordinator::restore` replays the journal tail from a
+//!   snapshot by re-executing rounds and checking every entry, reaching
+//!   the exact pre-crash state;
+//! * **audit**: `fedzero replay` re-derives the whole campaign from the
+//!   initial snapshot and proves (digest-by-digest, RNG-state-by-state)
+//!   that the journal is an honest record.
+//!
+//! Crash tolerance: appends are fsync'd (`sync_data`) per round, and a
+//! torn trailing line — the only damage a mid-append crash can cause — is
+//! discarded on read.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::error::{FedError, Result};
+use crate::metrics::RoundLog;
+use crate::sched::fleet::FleetInstance;
+use crate::sched::instance::Schedule;
+use crate::store::sink::{row_from_json, row_to_json};
+use crate::store::{get, get_str, get_u64, get_usize, ju};
+use crate::util::hash::{fold, mix_u64, FNV_OFFSET};
+use crate::util::json::Json;
+
+/// Trace solver name recorded for rounds that errored mid-flight.
+pub const ABORTED_SOLVER: &str = "!aborted";
+
+/// One committed round.
+#[derive(Clone, Debug)]
+pub struct JournalEntry {
+    /// Round index (journal lines are contiguous from 0).
+    pub round: usize,
+    /// Effective solver that produced the schedule (`""` for empty
+    /// rounds, [`ABORTED_SOLVER`] for rounds that errored).
+    pub solver: String,
+    /// [`round_digest`] of the derived instance + schedule (0 when no
+    /// schedule was produced).
+    pub digest: u64,
+    /// Coordinator RNG state after the round — the strongest replay
+    /// check: equal state means every stochastic decision matched.
+    pub rng_after: [u64; 4],
+    /// The round's full metrics row (timings included; they are excluded
+    /// from digests).
+    pub row: RoundLog,
+}
+
+impl JournalEntry {
+    /// Canonical JSON encoding (key-sorted, value-exact).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::Num(self.round as f64)),
+            ("solver", Json::Str(self.solver.clone())),
+            ("digest", ju(self.digest)),
+            (
+                "rng",
+                Json::Arr(self.rng_after.iter().map(|&w| ju(w)).collect()),
+            ),
+            ("row", row_to_json(&self.row)),
+        ])
+    }
+
+    /// Decode [`JournalEntry::to_json`].
+    pub fn from_json(v: &Json) -> Result<JournalEntry> {
+        let rng_arr = get(v, "rng")?
+            .as_arr()
+            .ok_or_else(|| FedError::Store("field 'rng' is not an array".into()))?;
+        if rng_arr.len() != 4 {
+            return Err(FedError::Store("field 'rng' must have 4 words".into()));
+        }
+        let mut rng_after = [0u64; 4];
+        for (i, w) in rng_arr.iter().enumerate() {
+            rng_after[i] = crate::store::as_u64(w, "rng")?;
+        }
+        Ok(JournalEntry {
+            round: get_usize(v, "round")?,
+            solver: get_str(v, "solver")?.to_string(),
+            digest: get_u64(v, "digest")?,
+            rng_after,
+            row: row_from_json(get(v, "row")?)?,
+        })
+    }
+
+    /// Fold this entry's *deterministic* content into a digest state
+    /// (timings excluded — they are wall-clock noise; NaN losses fold as
+    /// one canonical bit pattern).
+    fn fold_key(&self, h: u64) -> u64 {
+        let mut h = mix_u64(h, self.round as u64);
+        h = fold(h, self.solver.as_bytes());
+        h = fold(h, &[0]);
+        h = mix_u64(h, self.digest);
+        for w in self.rng_after {
+            h = mix_u64(h, w);
+        }
+        let loss_bits = if self.row.loss.is_nan() {
+            0x7ff8_0000_0000_0000u64
+        } else {
+            self.row.loss.to_bits()
+        };
+        h = mix_u64(h, loss_bits);
+        h = mix_u64(h, self.row.energy_j.to_bits());
+        h = mix_u64(h, self.row.participants as u64);
+        mix_u64(h, self.row.tasks as u64)
+    }
+}
+
+/// Structural digest of one round's scheduling decision: the
+/// [`FleetInstance::digest`] mixed with every slot's assigned load.
+pub fn round_digest(fleet: &FleetInstance, schedule: &Schedule) -> u64 {
+    schedule
+        .assignments()
+        .iter()
+        .fold(fleet.digest(), |h, &x| mix_u64(h, x as u64))
+}
+
+/// Deterministic digest of a whole journaled campaign (timings excluded).
+/// Two campaigns digest equal iff every round made the same decisions —
+/// what the CI recovery-smoke job diffs between a clean and a
+/// killed-and-resumed run.
+pub fn campaign_digest(entries: &[JournalEntry]) -> u64 {
+    entries.iter().fold(FNV_OFFSET, |h, e| e.fold_key(h))
+}
+
+/// Appending side of the journal (fsync per entry).
+pub struct JournalWriter {
+    file: File,
+}
+
+impl JournalWriter {
+    /// Create/truncate the journal.
+    pub fn create(path: &Path) -> Result<Self> {
+        Ok(Self { file: File::create(path)? })
+    }
+
+    /// Open the journal for appending, first truncating any torn trailing
+    /// fragment (crash mid-append) so the next entry starts on a fresh
+    /// line — appending after partial bytes would fuse into one
+    /// unparseable line and permanently corrupt the journal.
+    pub fn open_append(path: &Path) -> Result<Self> {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let keep = text.rfind('\n').map(|i| i + 1).unwrap_or(0);
+            if keep < text.len() {
+                let f = OpenOptions::new().write(true).open(path)?;
+                f.set_len(keep as u64)?;
+                f.sync_data()?;
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Self { file })
+    }
+
+    /// Append one entry and fsync — the round's commit point.
+    pub fn append(&mut self, entry: &JournalEntry) -> Result<()> {
+        let mut line = entry.to_json().to_string();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+/// Read a journal back: every complete line in order, rounds checked
+/// contiguous from 0. A torn trailing line (crash mid-append) is
+/// discarded; torn or corrupt *interior* lines are an error — the journal
+/// is the source of truth and silent gaps would forge history.
+pub fn read_journal(path: &Path) -> Result<Vec<JournalEntry>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Err(FedError::Store(format!(
+                "no journal at {}",
+                path.display()
+            )))
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let complete = match text.rfind('\n') {
+        Some(last) => &text[..=last],
+        None => "",
+    };
+    let mut entries = Vec::new();
+    for (i, line) in complete.lines().enumerate() {
+        let v = Json::parse(line).map_err(|e| {
+            FedError::Store(format!("journal line {}: {e}", i + 1))
+        })?;
+        let entry = JournalEntry::from_json(&v)
+            .map_err(|e| FedError::Store(format!("journal line {}: {e}", i + 1)))?;
+        if entry.round != i {
+            return Err(FedError::Store(format!(
+                "journal line {} carries round {} (expected {})",
+                i + 1,
+                entry.round,
+                i
+            )));
+        }
+        entries.push(entry);
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::CostFn;
+
+    fn entry(round: usize) -> JournalEntry {
+        JournalEntry {
+            round,
+            solver: "marin".into(),
+            digest: 0xDEAD_BEEF ^ round as u64,
+            rng_after: [1, 2, 3, 4 + round as u64],
+            row: RoundLog {
+                round,
+                policy: "auto".into(),
+                loss: 0.5 / (round + 1) as f64,
+                energy_j: 10.0 + round as f64,
+                sched_time_s: 0.001,
+                train_time_s: 0.1,
+                participants: 4,
+                tasks: 32,
+            },
+        }
+    }
+
+    #[test]
+    fn entry_json_roundtrip() {
+        let e = entry(3);
+        let v = Json::parse(&e.to_json().to_string()).unwrap();
+        let back = JournalEntry::from_json(&v).unwrap();
+        assert_eq!(back.round, e.round);
+        assert_eq!(back.solver, e.solver);
+        assert_eq!(back.digest, e.digest);
+        assert_eq!(back.rng_after, e.rng_after);
+        assert_eq!(back.row.energy_j.to_bits(), e.row.energy_j.to_bits());
+    }
+
+    #[test]
+    fn torn_trailing_line_is_discarded() {
+        let dir = std::env::temp_dir().join("fedzero_journal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("journal.jsonl");
+        {
+            let mut w = JournalWriter::create(&p).unwrap();
+            w.append(&entry(0)).unwrap();
+            w.append(&entry(1)).unwrap();
+        }
+        // Simulate a crash mid-append: half a line, no newline.
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(b"{\"round\":2,\"solver\":\"mar").unwrap();
+        }
+        let entries = read_journal(&p).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[1].round, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_append_truncates_torn_fragment_before_writing() {
+        let dir = std::env::temp_dir().join("fedzero_journal_truncate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("journal.jsonl");
+        {
+            let mut w = JournalWriter::create(&p).unwrap();
+            w.append(&entry(0)).unwrap();
+        }
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(b"{\"round\":1,\"solv").unwrap();
+        }
+        // Reopening for append must drop the fragment, so the next entry
+        // parses — the resume-after-torn-crash path.
+        {
+            let mut w = JournalWriter::open_append(&p).unwrap();
+            w.append(&entry(1)).unwrap();
+        }
+        let entries = read_journal(&p).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[1].round, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interior_corruption_is_an_error() {
+        let dir = std::env::temp_dir().join("fedzero_journal_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("journal.jsonl");
+        std::fs::write(&p, "garbage\n").unwrap();
+        assert!(read_journal(&p).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn non_contiguous_rounds_are_an_error() {
+        let dir = std::env::temp_dir().join("fedzero_journal_gap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("journal.jsonl");
+        {
+            let mut w = JournalWriter::create(&p).unwrap();
+            w.append(&entry(0)).unwrap();
+            w.append(&entry(2)).unwrap();
+        }
+        assert!(read_journal(&p).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn campaign_digest_ignores_timings_but_not_decisions() {
+        let a = vec![entry(0), entry(1)];
+        let mut b = vec![entry(0), entry(1)];
+        b[1].row.sched_time_s = 99.0;
+        b[1].row.train_time_s = 99.0;
+        assert_eq!(campaign_digest(&a), campaign_digest(&b));
+        b[1].row.energy_j += 1.0;
+        assert_ne!(campaign_digest(&a), campaign_digest(&b));
+    }
+
+    #[test]
+    fn round_digest_depends_on_schedule_and_fleet() {
+        let fleet = FleetInstance::builder()
+            .tasks(4)
+            .device_class(CostFn::Affine { fixed: 0.0, per_task: 1.0 }, 0, 4, 2)
+            .build()
+            .unwrap();
+        let a = round_digest(&fleet, &Schedule::new(vec![3, 1]));
+        let b = round_digest(&fleet, &Schedule::new(vec![1, 3]));
+        assert_ne!(a, b);
+        assert_eq!(a, round_digest(&fleet, &Schedule::new(vec![3, 1])));
+    }
+}

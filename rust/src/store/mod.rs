@@ -1,0 +1,393 @@
+//! The durable coordinator store (L3.5): crash-safe persistence for
+//! long-horizon FL campaigns.
+//!
+//! The paper's schedules only pay off over campaigns that outlive any
+//! single process — batteries drain, costs drift, availability churns for
+//! thousands of rounds — so coordinator state must survive crashes and
+//! memory must not grow with the round count. Production FL coordinators
+//! (cf. xaynet) treat state persistence as a first-class service concern;
+//! this module is that concern for the [`crate::coordinator`]:
+//!
+//! * [`journal`] — a write-ahead **round journal** (JSONL, fsync'd per
+//!   round): per round the derived [`crate::sched::fleet::FleetInstance`]
+//!   + schedule digest, the effective solver, the post-round RNG state,
+//!   and the full metrics row;
+//! * [`snapshot`] — versioned, checksummed **snapshots** of the full
+//!   coordinator state (devices, ledger, metrics, dynamics, RNG, backend)
+//!   written every N rounds; `Coordinator::restore` replays the journal
+//!   tail from the latest snapshot to reach the exact pre-crash state —
+//!   bit-for-bit: the same next-round schedule, energy, and RNG stream as
+//!   an uninterrupted run;
+//! * [`sink`] — streaming **metric sinks** ([`MetricSink`]: JSONL, CSV,
+//!   null) that receive every [`crate::metrics::RoundLog`] row, so the
+//!   in-memory [`crate::metrics::TrainingLog`] can be bounded to a ring.
+//!
+//! [`CampaignStore`] ties the three together under one directory:
+//!
+//! ```text
+//! DIR/
+//!   meta.json           campaign configuration (written once)
+//!   snapshot.init.json  state before round 0 (replay anchor)
+//!   snapshot.json       latest periodic snapshot (atomic replace)
+//!   journal.jsonl       one fsync'd line per committed round
+//!   rounds.jsonl        streamed metric rows (repaired from the journal)
+//! ```
+
+pub mod journal;
+pub mod sink;
+pub mod snapshot;
+
+use std::path::{Path, PathBuf};
+
+pub use journal::{campaign_digest, round_digest, JournalEntry};
+pub use sink::{CsvSink, JsonlSink, MetricSink, NullSink};
+
+use crate::error::{FedError, Result};
+use crate::util::json::Json;
+use journal::JournalWriter;
+
+/// Campaign configuration, written once at store creation.
+pub const META_FILE: &str = "meta.json";
+/// State before round 0 — the anchor `replay` verifies from.
+pub const INIT_SNAPSHOT_FILE: &str = "snapshot.init.json";
+/// Latest periodic snapshot (atomically replaced).
+pub const SNAPSHOT_FILE: &str = "snapshot.json";
+/// The write-ahead round journal.
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+/// Streamed per-round metric rows.
+pub const ROUNDS_FILE: &str = "rounds.jsonl";
+
+// ---- shared JSON codec helpers ----------------------------------------
+//
+// The store's round-trips must be *value-exact*. Finite floats round-trip
+// exactly through `Json` (shortest-representation printing); the helpers
+// below add the two encodings `Json` alone cannot carry: non-finite
+// floats (as tagged strings) and full-width `u64`s (as hex strings —
+// `f64` only holds 53 bits exactly).
+
+/// FNV-1a over raw bytes — the store's checksum/digest primitive (the
+/// shared implementation lives in [`crate::util::hash`]).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    crate::util::hash::fnv1a(bytes)
+}
+
+/// Encode an `f64`, including non-finite values.
+pub fn jf(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("NaN".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+/// Encode a `u64` exactly (hex string).
+pub fn ju(v: u64) -> Json {
+    Json::Str(format!("{v:x}"))
+}
+
+/// Typed-error field lookup.
+pub fn get<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key)
+        .ok_or_else(|| FedError::Store(format!("missing field '{key}'")))
+}
+
+/// Decode [`jf`].
+pub fn as_f64(v: &Json, key: &str) -> Result<f64> {
+    match v {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) if s == "NaN" => Ok(f64::NAN),
+        Json::Str(s) if s == "inf" => Ok(f64::INFINITY),
+        Json::Str(s) if s == "-inf" => Ok(f64::NEG_INFINITY),
+        _ => Err(FedError::Store(format!("field '{key}' is not a number"))),
+    }
+}
+
+/// Decode [`jf`] from an object field.
+pub fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    as_f64(get(v, key)?, key)
+}
+
+/// Decode [`ju`].
+pub fn as_u64(v: &Json, key: &str) -> Result<u64> {
+    match v {
+        Json::Str(s) => u64::from_str_radix(s, 16)
+            .map_err(|_| FedError::Store(format!("field '{key}': bad hex u64"))),
+        _ => Err(FedError::Store(format!("field '{key}' is not a hex u64"))),
+    }
+}
+
+/// Decode [`ju`] from an object field.
+pub fn get_u64(v: &Json, key: &str) -> Result<u64> {
+    as_u64(get(v, key)?, key)
+}
+
+/// Decode a small non-negative integer field.
+pub fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    get(v, key)?
+        .as_usize()
+        .ok_or_else(|| FedError::Store(format!("field '{key}' is not a usize")))
+}
+
+/// Decode a string field.
+pub fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    get(v, key)?
+        .as_str()
+        .ok_or_else(|| FedError::Store(format!("field '{key}' is not a string")))
+}
+
+/// Decode an array field.
+pub fn get_arr<'a>(v: &'a Json, key: &str) -> Result<&'a [Json]> {
+    get(v, key)?
+        .as_arr()
+        .ok_or_else(|| FedError::Store(format!("field '{key}' is not an array")))
+}
+
+/// Best-effort fsync of a directory, making renames/creations inside it
+/// durable (POSIX requires the parent fsync; on platforms where
+/// directories cannot be opened, this silently degrades).
+pub fn sync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Atomically replace `path` with `contents` (tmp + fsync + rename +
+/// parent-dir fsync), so a crash mid-write can never leave a torn file
+/// behind and the rename itself is durable.
+pub fn atomic_write(path: &Path, contents: &str) -> Result<()> {
+    use std::io::Write as _;
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(parent) = path.parent() {
+        sync_dir(parent);
+    }
+    Ok(())
+}
+
+/// Everything read back from a store directory.
+#[derive(Clone, Debug)]
+pub struct StoreContents {
+    /// Campaign configuration ([`META_FILE`]).
+    pub meta: Json,
+    /// State before round 0 (checksum-verified).
+    pub init_snapshot: Json,
+    /// Latest valid periodic snapshot state, falling back to the initial
+    /// state when [`SNAPSHOT_FILE`] is absent or fails its checksum.
+    pub snapshot: Json,
+    /// Every committed round, in order (a torn trailing line from a crash
+    /// mid-append is discarded).
+    pub entries: Vec<JournalEntry>,
+}
+
+/// One campaign's durable state under a single directory (see module
+/// docs for the layout). Writing is strictly journal-first: a round is
+/// *committed* once its journal line is fsync'd; the streamed
+/// [`ROUNDS_FILE`] is derived data that [`CampaignStore::resume`] repairs
+/// from the journal after a crash.
+pub struct CampaignStore {
+    dir: PathBuf,
+    snapshot_every: usize,
+    journal: JournalWriter,
+    rounds: JsonlSink,
+    committed: usize,
+}
+
+impl CampaignStore {
+    /// Create a fresh store: write `meta` and the initial snapshot, open
+    /// an empty journal. Refuses a directory that already holds a journal
+    /// (use [`CampaignStore::resume`]). `meta` may carry a
+    /// `snapshot_every` field (default 16) controlling the periodic
+    /// snapshot cadence.
+    pub fn create(dir: &Path, meta: Json, init_state: Json) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let journal_path = dir.join(JOURNAL_FILE);
+        if journal_path.exists() {
+            return Err(FedError::Store(format!(
+                "{} already holds a campaign journal; use `resume`",
+                dir.display()
+            )));
+        }
+        let snapshot_every = meta
+            .get("snapshot_every")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(16);
+        atomic_write(&dir.join(META_FILE), &meta.to_string())?;
+        atomic_write(&dir.join(INIT_SNAPSHOT_FILE), &snapshot::render(&init_state))?;
+        let journal = JournalWriter::create(&journal_path)?;
+        let rounds = JsonlSink::create(&dir.join(ROUNDS_FILE))?;
+        // Make the freshly-created directory entries durable before the
+        // first commit can rely on them.
+        sync_dir(dir);
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            snapshot_every,
+            journal,
+            rounds,
+            committed: 0,
+        })
+    }
+
+    /// Read a store without opening it for writing (what `replay` uses).
+    pub fn read(dir: &Path) -> Result<StoreContents> {
+        let meta = read_json(&dir.join(META_FILE))?;
+        let init_snapshot = snapshot::unwrap(&read_json(&dir.join(INIT_SNAPSHOT_FILE))?)?;
+        let entries = journal::read_journal(&dir.join(JOURNAL_FILE))?;
+        // The periodic snapshot is best-effort: a torn or stale file
+        // degrades to replaying more journal, never to an error.
+        let snapshot = std::fs::read_to_string(dir.join(SNAPSHOT_FILE))
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|doc| snapshot::unwrap(&doc).ok())
+            .filter(|state| {
+                state
+                    .get("next_round")
+                    .and_then(|v| v.as_usize())
+                    .map_or(false, |r| r <= entries.len())
+            })
+            .unwrap_or_else(|| init_snapshot.clone());
+        Ok(StoreContents { meta, init_snapshot, snapshot, entries })
+    }
+
+    /// Reopen an existing store for continued writing: read everything
+    /// back, repair [`ROUNDS_FILE`] against the journal (a crash between
+    /// the journal fsync and the row append loses at most the derived
+    /// row), and append from the committed count.
+    pub fn resume(dir: &Path) -> Result<(Self, StoreContents)> {
+        let contents = Self::read(dir)?;
+        let snapshot_every = contents
+            .meta
+            .get("snapshot_every")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(16);
+        repair_rounds(&dir.join(ROUNDS_FILE), &contents.entries)?;
+        let journal = JournalWriter::open_append(&dir.join(JOURNAL_FILE))?;
+        let rounds = JsonlSink::open_append(&dir.join(ROUNDS_FILE))?;
+        let store = Self {
+            dir: dir.to_path_buf(),
+            snapshot_every,
+            journal,
+            rounds,
+            committed: contents.entries.len(),
+        };
+        Ok((store, contents))
+    }
+
+    /// Commit one round: fsync its journal line, then stream its row.
+    pub fn commit(&mut self, entry: &JournalEntry) -> Result<()> {
+        if entry.round != self.committed {
+            return Err(FedError::Store(format!(
+                "journal expects round {}, got {}",
+                self.committed, entry.round
+            )));
+        }
+        self.journal.append(entry)?;
+        self.committed += 1;
+        self.rounds.record(&entry.row)?;
+        Ok(())
+    }
+
+    /// True when the periodic snapshot cadence is due.
+    pub fn due_snapshot(&self) -> bool {
+        self.snapshot_every > 0
+            && self.committed > 0
+            && self.committed % self.snapshot_every == 0
+    }
+
+    /// Atomically replace the periodic snapshot.
+    pub fn write_snapshot(&mut self, state: Json) -> Result<()> {
+        atomic_write(&self.dir.join(SNAPSHOT_FILE), &snapshot::render(&state))
+    }
+
+    /// Rounds committed to the journal.
+    pub fn committed(&self) -> usize {
+        self.committed
+    }
+
+    /// The store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+fn read_json(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| FedError::Store(format!("{}: {e}", path.display())))?;
+    Json::parse(&text)
+        .map_err(|e| FedError::Store(format!("{}: {e}", path.display())))
+}
+
+/// Rebuild [`ROUNDS_FILE`] from the journal when its complete-line count
+/// disagrees (crash windows on either side of the journal fsync, or a
+/// torn trailing line).
+fn repair_rounds(path: &Path, entries: &[JournalEntry]) -> Result<()> {
+    let needs_rewrite = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let torn = !text.is_empty() && !text.ends_with('\n');
+            let complete = text.split('\n').count().saturating_sub(1);
+            torn || complete != entries.len()
+        }
+        Err(_) => true,
+    };
+    if !needs_rewrite {
+        return Ok(());
+    }
+    let mut sink = JsonlSink::create(path)?;
+    for e in entries {
+        sink.record(&e.row)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable_and_sensitive() {
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv64(b"a"), fnv64(b"b"));
+        assert_eq!(fnv64(b"round"), fnv64(b"round"));
+    }
+
+    #[test]
+    fn f64_codec_covers_non_finite() {
+        for x in [1.5, -0.0, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = Json::obj(vec![("x", jf(x))]);
+            let back = get_f64(&Json::parse(&v.to_string()).unwrap(), "x").unwrap();
+            assert_eq!(back.to_bits(), x.to_bits());
+        }
+        let v = Json::obj(vec![("x", jf(f64::NAN))]);
+        assert!(get_f64(&Json::parse(&v.to_string()).unwrap(), "x")
+            .unwrap()
+            .is_nan());
+    }
+
+    #[test]
+    fn u64_codec_is_full_width() {
+        for x in [0u64, 1, u64::MAX, 0x9E37_79B9_7F4A_7C15] {
+            let v = Json::obj(vec![("x", ju(x))]);
+            let back = get_u64(&Json::parse(&v.to_string()).unwrap(), "x").unwrap();
+            assert_eq!(back, x);
+        }
+    }
+
+    #[test]
+    fn atomic_write_replaces() {
+        let dir = std::env::temp_dir().join("fedzero_store_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.json");
+        atomic_write(&p, "one").unwrap();
+        atomic_write(&p, "two").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "two");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

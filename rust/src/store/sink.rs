@@ -1,0 +1,229 @@
+//! Streaming metric sinks: per-round [`RoundLog`] rows leave the process
+//! as they happen, so the in-memory [`crate::metrics::TrainingLog`] can be
+//! bounded to a ring and campaign memory stops growing with the round
+//! count.
+//!
+//! [`Coordinator`](crate::coordinator::Coordinator) pushes every row
+//! (including aborted-round rows) into each attached sink; the
+//! [`CampaignStore`](crate::CampaignStore) additionally streams rows into
+//! its own `rounds.jsonl` as part of the commit path.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::metrics::RoundLog;
+use crate::store::{get_f64, get_str, get_usize, jf};
+use crate::util::json::Json;
+
+/// A consumer of per-round metric rows.
+pub trait MetricSink {
+    /// Receive one committed round's row.
+    fn record(&mut self, row: &RoundLog) -> Result<()>;
+
+    /// Flush any buffered output (no-op by default).
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Canonical JSON encoding of a row (key-sorted, float-exact; what the
+/// JSONL sink and the journal share).
+pub fn row_to_json(row: &RoundLog) -> Json {
+    Json::obj(vec![
+        ("round", Json::Num(row.round as f64)),
+        ("policy", Json::Str(row.policy.clone())),
+        ("loss", jf(row.loss)),
+        ("energy_j", jf(row.energy_j)),
+        ("sched_time_s", jf(row.sched_time_s)),
+        ("train_time_s", jf(row.train_time_s)),
+        ("participants", Json::Num(row.participants as f64)),
+        ("tasks", Json::Num(row.tasks as f64)),
+    ])
+}
+
+/// Decode [`row_to_json`].
+pub fn row_from_json(v: &Json) -> Result<RoundLog> {
+    Ok(RoundLog {
+        round: get_usize(v, "round")?,
+        policy: get_str(v, "policy")?.to_string(),
+        loss: get_f64(v, "loss")?,
+        energy_j: get_f64(v, "energy_j")?,
+        sched_time_s: get_f64(v, "sched_time_s")?,
+        train_time_s: get_f64(v, "train_time_s")?,
+        participants: get_usize(v, "participants")?,
+        tasks: get_usize(v, "tasks")?,
+    })
+}
+
+/// Discards every row — the explicit "stream nowhere" choice for runs
+/// that only want the bounded in-memory ring.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl MetricSink for NullSink {
+    fn record(&mut self, _row: &RoundLog) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// One JSON object per line, appended per round.
+pub struct JsonlSink {
+    file: File,
+}
+
+impl JsonlSink {
+    /// Create/truncate `path` (parent directories included).
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(Self { file: File::create(path)? })
+    }
+
+    /// Open `path` for appending (created if absent).
+    pub fn open_append(path: &Path) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Self { file })
+    }
+}
+
+impl MetricSink for JsonlSink {
+    fn record(&mut self, row: &RoundLog) -> Result<()> {
+        let mut line = row_to_json(row).to_string();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// RFC-4180-style CSV, one row per round — header and fields come from
+/// [`crate::metrics::ROUND_LOG_COLUMNS`] / [`RoundLog::csv_fields`], the
+/// same definitions [`crate::metrics::TrainingLog::to_csv`] uses, so the
+/// streamed and buffered CSV schemas cannot drift apart.
+pub struct CsvSink {
+    file: File,
+}
+
+impl CsvSink {
+    /// Create/truncate `path` and write the header.
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = File::create(path)?;
+        let mut header = crate::metrics::ROUND_LOG_COLUMNS.join(",");
+        header.push('\n');
+        file.write_all(header.as_bytes())?;
+        Ok(Self { file })
+    }
+}
+
+impl MetricSink for CsvSink {
+    fn record(&mut self, row: &RoundLog) -> Result<()> {
+        // Policy names are registry identifiers (no commas/quotes), so no
+        // field quoting is needed; assert the assumption instead of
+        // silently corrupting the file.
+        debug_assert!(!row.policy.contains([',', '"', '\n']));
+        let mut line = row.csv_fields().join(",");
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(round: usize, loss: f64) -> RoundLog {
+        RoundLog {
+            round,
+            policy: "auto".into(),
+            loss,
+            energy_j: 12.5,
+            sched_time_s: 0.001,
+            train_time_s: 0.25,
+            participants: 3,
+            tasks: 16,
+        }
+    }
+
+    #[test]
+    fn row_json_roundtrip_is_exact() {
+        for r in [row(0, 0.75), row(7, f64::NAN), row(1, 1.0 / 3.0)] {
+            let v = Json::parse(&row_to_json(&r).to_string()).unwrap();
+            let back = row_from_json(&v).unwrap();
+            assert_eq!(back.round, r.round);
+            assert_eq!(back.policy, r.policy);
+            assert!(
+                back.loss.to_bits() == r.loss.to_bits()
+                    || (back.loss.is_nan() && r.loss.is_nan())
+            );
+            assert_eq!(back.energy_j.to_bits(), r.energy_j.to_bits());
+            assert_eq!(back.participants, r.participants);
+            assert_eq!(back.tasks, r.tasks);
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_appends_one_line_per_row() {
+        let dir = std::env::temp_dir().join("fedzero_sink_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rounds.jsonl");
+        {
+            let mut s = JsonlSink::create(&p).unwrap();
+            s.record(&row(0, 0.5)).unwrap();
+            s.record(&row(1, 0.4)).unwrap();
+        }
+        {
+            let mut s = JsonlSink::open_append(&p).unwrap();
+            s.record(&row(2, 0.3)).unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for (i, line) in lines.iter().enumerate() {
+            let r = row_from_json(&Json::parse(line).unwrap()).unwrap();
+            assert_eq!(r.round, i);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn csv_sink_writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("fedzero_csv_sink_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rounds.csv");
+        {
+            let mut s = CsvSink::create(&p).unwrap();
+            s.record(&row(0, 0.5)).unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("round,policy,loss"));
+        assert!(text.lines().count() == 2);
+        assert!(text.contains("auto"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn null_sink_accepts_everything() {
+        let mut s = NullSink;
+        s.record(&row(0, 0.1)).unwrap();
+        s.flush().unwrap();
+    }
+}

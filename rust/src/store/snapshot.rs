@@ -1,0 +1,623 @@
+//! Versioned, checksummed snapshots of coordinator state, and the JSON
+//! codecs for every piece of that state.
+//!
+//! A snapshot captures everything that determines the campaign's future:
+//! the managed devices (cost functions, batteries, drift), the dynamics
+//! state (availability chain, drift scales), the coordinator RNG, the
+//! selection pool, the energy ledger, the metrics hub, and the backend's
+//! own durable state. Restoring it and replaying the journal tail
+//! therefore reproduces the uninterrupted run bit-for-bit — floats
+//! round-trip exactly through [`crate::util::json::Json`], `u64`s travel
+//! as hex strings, and the whole state is guarded by an FNV checksum so a
+//! torn snapshot degrades to "replay more journal", never to silent
+//! divergence. The warm-DP row cache is deliberately *not* persisted:
+//! warm re-solves are bit-for-bit equal to cold ones, so a restored run
+//! merely pays one cold solve.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{CoordinatorConfig, ManagedDevice};
+use crate::energy::battery::Battery;
+use crate::energy::power::{Behavior, PowerModel};
+use crate::error::{FedError, Result};
+use crate::fl::dynamics::{Availability, CostDrift, DynamicsConfig, Dropout};
+use crate::metrics::{EnergyLedger, MetricsHub};
+use crate::sched::costs::CostFn;
+use crate::store::{
+    as_f64, as_u64, fnv64, get, get_arr, get_f64, get_str, get_u64, get_usize,
+    jf, ju,
+};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Snapshot format version.
+pub const VERSION: usize = 1;
+
+/// Wrap a state object with version + checksum (the in-memory form;
+/// disk writes go through [`render`], which serializes the state once).
+pub fn wrap(state: Json) -> Json {
+    let checksum = fnv64(state.to_string().as_bytes());
+    Json::obj(vec![
+        ("version", Json::Num(VERSION as f64)),
+        ("checksum", ju(checksum)),
+        ("state", state),
+    ])
+}
+
+/// Render the on-disk snapshot document, serializing the (potentially
+/// large) state subtree exactly once. Byte-identical to
+/// `wrap(state).to_string()` — keys in sorted order, canonical number
+/// forms — which a unit test pins.
+pub fn render(state: &Json) -> String {
+    let payload = state.to_string();
+    let checksum = fnv64(payload.as_bytes());
+    format!("{{\"checksum\":\"{checksum:x}\",\"state\":{payload},\"version\":{VERSION}}}")
+}
+
+/// Unwrap a snapshot document, verifying version and checksum. The
+/// checksum is recomputed over the canonical re-serialization of the
+/// state, which `Json` guarantees is identical to what [`wrap`] hashed.
+pub fn unwrap(doc: &Json) -> Result<Json> {
+    let version = get_usize(doc, "version")?;
+    if version != VERSION {
+        return Err(FedError::Store(format!(
+            "snapshot version {version} (supported: {VERSION})"
+        )));
+    }
+    let state = get(doc, "state")?;
+    let expect = get_u64(doc, "checksum")?;
+    let actual = fnv64(state.to_string().as_bytes());
+    if actual != expect {
+        return Err(FedError::Store(format!(
+            "snapshot checksum mismatch ({actual:x} != {expect:x})"
+        )));
+    }
+    Ok(state.clone())
+}
+
+// ---- cost functions ----------------------------------------------------
+
+/// Encode a [`CostFn`] (recursively).
+pub fn costfn_to_json(c: &CostFn) -> Json {
+    match c {
+        CostFn::Affine { fixed, per_task } => Json::obj(vec![
+            ("fn", Json::Str("affine".into())),
+            ("fixed", jf(*fixed)),
+            ("per_task", jf(*per_task)),
+        ]),
+        CostFn::Quadratic { fixed, a, b } => Json::obj(vec![
+            ("fn", Json::Str("quadratic".into())),
+            ("fixed", jf(*fixed)),
+            ("a", jf(*a)),
+            ("b", jf(*b)),
+        ]),
+        CostFn::PowerLaw { fixed, scale, exponent } => Json::obj(vec![
+            ("fn", Json::Str("powerlaw".into())),
+            ("fixed", jf(*fixed)),
+            ("scale", jf(*scale)),
+            ("exponent", jf(*exponent)),
+        ]),
+        CostFn::Logarithmic { fixed, scale } => Json::obj(vec![
+            ("fn", Json::Str("logarithmic".into())),
+            ("fixed", jf(*fixed)),
+            ("scale", jf(*scale)),
+        ]),
+        CostFn::Tabulated { first, values } => Json::obj(vec![
+            ("fn", Json::Str("tabulated".into())),
+            ("first", Json::Num(*first as f64)),
+            ("values", Json::Arr(values.iter().map(|&v| jf(v)).collect())),
+        ]),
+        CostFn::Scaled { weight, inner } => Json::obj(vec![
+            ("fn", Json::Str("scaled".into())),
+            ("weight", jf(*weight)),
+            ("inner", costfn_to_json(inner)),
+        ]),
+        CostFn::Shifted { shift, inner } => Json::obj(vec![
+            ("fn", Json::Str("shifted".into())),
+            ("shift", Json::Num(*shift as f64)),
+            ("inner", costfn_to_json(inner)),
+        ]),
+    }
+}
+
+/// Decode [`costfn_to_json`].
+pub fn costfn_from_json(v: &Json) -> Result<CostFn> {
+    Ok(match get_str(v, "fn")? {
+        "affine" => CostFn::Affine {
+            fixed: get_f64(v, "fixed")?,
+            per_task: get_f64(v, "per_task")?,
+        },
+        "quadratic" => CostFn::Quadratic {
+            fixed: get_f64(v, "fixed")?,
+            a: get_f64(v, "a")?,
+            b: get_f64(v, "b")?,
+        },
+        "powerlaw" => CostFn::PowerLaw {
+            fixed: get_f64(v, "fixed")?,
+            scale: get_f64(v, "scale")?,
+            exponent: get_f64(v, "exponent")?,
+        },
+        "logarithmic" => CostFn::Logarithmic {
+            fixed: get_f64(v, "fixed")?,
+            scale: get_f64(v, "scale")?,
+        },
+        "tabulated" => CostFn::Tabulated {
+            first: get_usize(v, "first")?,
+            values: get_arr(v, "values")?
+                .iter()
+                .map(|x| as_f64(x, "values"))
+                .collect::<Result<Vec<f64>>>()?,
+        },
+        "scaled" => CostFn::Scaled {
+            weight: get_f64(v, "weight")?,
+            inner: Box::new(costfn_from_json(get(v, "inner")?)?),
+        },
+        "shifted" => CostFn::Shifted {
+            shift: get_usize(v, "shift")?,
+            inner: Box::new(costfn_from_json(get(v, "inner")?)?),
+        },
+        other => {
+            return Err(FedError::Store(format!("unknown cost fn '{other}'")))
+        }
+    })
+}
+
+// ---- devices -----------------------------------------------------------
+
+fn behavior_to_str(b: Behavior) -> &'static str {
+    match b {
+        Behavior::Convex => "convex",
+        Behavior::Linear => "linear",
+        Behavior::Concave => "concave",
+    }
+}
+
+fn behavior_from_str(s: &str) -> Result<Behavior> {
+    Ok(match s {
+        "convex" => Behavior::Convex,
+        "linear" => Behavior::Linear,
+        "concave" => Behavior::Concave,
+        other => {
+            return Err(FedError::Store(format!("unknown behavior '{other}'")))
+        }
+    })
+}
+
+fn power_to_json(p: &PowerModel) -> Json {
+    Json::obj(vec![
+        ("idle_w", jf(p.idle_w)),
+        ("busy_w", jf(p.busy_w)),
+        ("batch_latency_s", jf(p.batch_latency_s)),
+        ("behavior", Json::Str(behavior_to_str(p.behavior).into())),
+        ("curvature", jf(p.curvature)),
+    ])
+}
+
+fn power_from_json(v: &Json) -> Result<PowerModel> {
+    Ok(PowerModel {
+        idle_w: get_f64(v, "idle_w")?,
+        busy_w: get_f64(v, "busy_w")?,
+        batch_latency_s: get_f64(v, "batch_latency_s")?,
+        behavior: behavior_from_str(get_str(v, "behavior")?)?,
+        curvature: get_f64(v, "curvature")?,
+    })
+}
+
+fn battery_to_json(b: &Battery) -> Json {
+    Json::obj(vec![
+        ("capacity_wh", jf(b.capacity_wh)),
+        ("level", jf(b.level)),
+        ("round_budget_frac", jf(b.round_budget_frac)),
+    ])
+}
+
+fn battery_from_json(v: &Json) -> Result<Battery> {
+    Ok(Battery {
+        capacity_wh: get_f64(v, "capacity_wh")?,
+        level: get_f64(v, "level")?,
+        round_budget_frac: get_f64(v, "round_budget_frac")?,
+    })
+}
+
+/// Encode one managed device's full evolving state.
+pub fn device_to_json(d: &ManagedDevice) -> Json {
+    let battery = match &d.battery {
+        Some(b) => battery_to_json(b),
+        None => Json::Null,
+    };
+    let power = match &d.power {
+        Some(p) => power_to_json(p),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("id", Json::Num(d.id as f64)),
+        ("cost", costfn_to_json(&d.cost)),
+        ("lower", Json::Num(d.lower as f64)),
+        // `usize::MAX` encodes "unlimited": hex keeps it exact.
+        ("data_cap", ju(d.data_cap as u64)),
+        ("battery", battery),
+        ("power", power),
+        ("drift", jf(d.drift)),
+    ])
+}
+
+/// Decode [`device_to_json`].
+pub fn device_from_json(v: &Json) -> Result<ManagedDevice> {
+    let battery = match get(v, "battery")? {
+        Json::Null => None,
+        b => Some(battery_from_json(b)?),
+    };
+    let power = match get(v, "power")? {
+        Json::Null => None,
+        p => Some(power_from_json(p)?),
+    };
+    Ok(ManagedDevice {
+        id: get_usize(v, "id")?,
+        cost: costfn_from_json(get(v, "cost")?)?,
+        lower: get_usize(v, "lower")?,
+        data_cap: get_u64(v, "data_cap")? as usize,
+        battery,
+        power,
+        drift: get_f64(v, "drift")?,
+    })
+}
+
+// ---- dynamics ----------------------------------------------------------
+
+/// Encode dynamics state (chain states and drift scales included).
+pub fn dynamics_to_json(d: &DynamicsConfig) -> Json {
+    let availability = match &d.availability {
+        Some(a) => Json::obj(vec![
+            ("p_join", jf(a.p_join)),
+            ("p_leave", jf(a.p_leave)),
+            (
+                "online",
+                Json::Arr(a.states().iter().map(|&o| Json::Bool(o)).collect()),
+            ),
+        ]),
+        None => Json::Null,
+    };
+    let drift = match &d.drift {
+        Some(c) => Json::obj(vec![
+            ("sigma", jf(c.sigma)),
+            (
+                "scales",
+                Json::Arr(c.scales().iter().map(|&s| jf(s)).collect()),
+            ),
+        ]),
+        None => Json::Null,
+    };
+    let dropout = match &d.dropout {
+        Some(x) => Json::obj(vec![("p_fail", jf(x.p_fail))]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("availability", availability),
+        ("drift", drift),
+        ("dropout", dropout),
+    ])
+}
+
+/// Decode [`dynamics_to_json`].
+pub fn dynamics_from_json(v: &Json) -> Result<DynamicsConfig> {
+    let availability = match get(v, "availability")? {
+        Json::Null => None,
+        a => {
+            let online = get_arr(a, "online")?
+                .iter()
+                .map(|x| match x {
+                    Json::Bool(b) => Ok(*b),
+                    _ => Err(FedError::Store("'online' must be booleans".into())),
+                })
+                .collect::<Result<Vec<bool>>>()?;
+            Some(Availability::from_states(
+                get_f64(a, "p_join")?,
+                get_f64(a, "p_leave")?,
+                online,
+            ))
+        }
+    };
+    let drift = match get(v, "drift")? {
+        Json::Null => None,
+        c => Some(CostDrift::from_scales(
+            get_f64(c, "sigma")?,
+            get_arr(c, "scales")?
+                .iter()
+                .map(|x| as_f64(x, "scales"))
+                .collect::<Result<Vec<f64>>>()?,
+        )),
+    };
+    let dropout = match get(v, "dropout")? {
+        Json::Null => None,
+        x => Some(Dropout { p_fail: get_f64(x, "p_fail")? }),
+    };
+    Ok(DynamicsConfig { availability, drift, dropout })
+}
+
+// ---- coordinator substrate --------------------------------------------
+
+/// Encode the coordinator RNG state.
+pub fn rng_to_json(rng: &Rng) -> Json {
+    Json::Arr(rng.state().iter().map(|&w| ju(w)).collect())
+}
+
+/// Decode [`rng_to_json`].
+pub fn rng_from_json(v: &Json) -> Result<Rng> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| FedError::Store("rng state must be an array".into()))?;
+    if arr.len() != 4 {
+        return Err(FedError::Store("rng state must have 4 words".into()));
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in arr.iter().enumerate() {
+        s[i] = as_u64(w, "rng")?;
+    }
+    Ok(Rng::from_state(s))
+}
+
+/// Encode the energy ledger (per-device totals + retained round tail).
+pub fn ledger_to_json(l: &EnergyLedger) -> Json {
+    let per_device: BTreeMap<String, Json> = l
+        .per_device_map()
+        .iter()
+        .map(|(&id, &j)| (id.to_string(), jf(j)))
+        .collect();
+    Json::obj(vec![
+        ("per_device", Json::Obj(per_device)),
+        ("rounds", Json::Arr(l.rounds().iter().map(|&j| jf(j)).collect())),
+        ("opened", Json::Num(l.rounds_opened() as f64)),
+    ])
+}
+
+/// Decode [`ledger_to_json`].
+pub fn ledger_from_json(v: &Json) -> Result<EnergyLedger> {
+    let mut per_device = BTreeMap::new();
+    let obj = get(v, "per_device")?
+        .as_obj()
+        .ok_or_else(|| FedError::Store("'per_device' must be an object".into()))?;
+    for (k, val) in obj {
+        let id: usize = k
+            .parse()
+            .map_err(|_| FedError::Store(format!("bad device id '{k}'")))?;
+        per_device.insert(id, as_f64(val, "per_device")?);
+    }
+    let rounds = get_arr(v, "rounds")?
+        .iter()
+        .map(|x| as_f64(x, "rounds"))
+        .collect::<Result<Vec<f64>>>()?;
+    Ok(EnergyLedger::from_parts(per_device, rounds, get_usize(v, "opened")?))
+}
+
+/// Encode the metrics hub.
+pub fn metrics_to_json(m: &MetricsHub) -> Json {
+    let counters: BTreeMap<String, Json> = m
+        .counters_map()
+        .iter()
+        .map(|(k, &c)| (k.clone(), ju(c)))
+        .collect();
+    let gauges: BTreeMap<String, Json> = m
+        .gauges_map()
+        .iter()
+        .map(|(k, &g)| (k.clone(), jf(g)))
+        .collect();
+    Json::obj(vec![
+        ("counters", Json::Obj(counters)),
+        ("gauges", Json::Obj(gauges)),
+    ])
+}
+
+/// Decode [`metrics_to_json`].
+pub fn metrics_from_json(v: &Json) -> Result<MetricsHub> {
+    let mut m = MetricsHub::new();
+    let counters = get(v, "counters")?
+        .as_obj()
+        .ok_or_else(|| FedError::Store("'counters' must be an object".into()))?;
+    for (k, val) in counters {
+        m.set_counter(k, as_u64(val, "counters")?);
+    }
+    let gauges = get(v, "gauges")?
+        .as_obj()
+        .ok_or_else(|| FedError::Store("'gauges' must be an object".into()))?;
+    for (k, val) in gauges {
+        m.set(k, as_f64(val, "gauges")?);
+    }
+    Ok(m)
+}
+
+/// Encode a coordinator configuration (store `meta.json`'s `cfg` field).
+pub fn cfg_to_json(cfg: &CoordinatorConfig) -> Json {
+    let target_loss = match cfg.target_loss {
+        Some(t) => jf(t),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("rounds", Json::Num(cfg.rounds as f64)),
+        ("tasks_per_round", Json::Num(cfg.tasks_per_round as f64)),
+        ("algo", Json::Str(cfg.algo.clone())),
+        ("participation", jf(cfg.participation)),
+        ("min_tasks", Json::Num(cfg.min_tasks as f64)),
+        ("max_share", jf(cfg.max_share)),
+        ("seed", ju(cfg.seed)),
+        ("target_loss", target_loss),
+    ])
+}
+
+/// Decode [`cfg_to_json`].
+pub fn cfg_from_json(v: &Json) -> Result<CoordinatorConfig> {
+    let target_loss = match get(v, "target_loss")? {
+        Json::Null => None,
+        t => Some(as_f64(t, "target_loss")?),
+    };
+    Ok(CoordinatorConfig {
+        rounds: get_usize(v, "rounds")?,
+        tasks_per_round: get_usize(v, "tasks_per_round")?,
+        algo: get_str(v, "algo")?.to_string(),
+        participation: get_f64(v, "participation")?,
+        min_tasks: get_usize(v, "min_tasks")?,
+        max_share: get_f64(v, "max_share")?,
+        seed: get_u64(v, "seed")?,
+        target_loss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: &Json) -> Json {
+        Json::parse(&v.to_string()).unwrap()
+    }
+
+    #[test]
+    fn wrap_unwrap_detects_tampering() {
+        let state = Json::obj(vec![("x", Json::Num(1.5))]);
+        let doc = wrap(state.clone());
+        assert_eq!(unwrap(&roundtrip(&doc)).unwrap(), state);
+        // Tamper with the state: checksum must catch it.
+        let mut text = doc.to_string();
+        text = text.replace("1.5", "2.5");
+        assert!(unwrap(&Json::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn render_is_byte_identical_to_wrap() {
+        let state = Json::obj(vec![
+            ("z", Json::Num(-0.0)),
+            ("nested", Json::obj(vec![("k", Json::Str("a\"b".into()))])),
+            ("arr", Json::Arr(vec![Json::Num(0.1), Json::Null])),
+        ]);
+        assert_eq!(render(&state), wrap(state.clone()).to_string());
+        assert_eq!(unwrap(&Json::parse(&render(&state)).unwrap()).unwrap(), state);
+    }
+
+    #[test]
+    fn costfn_roundtrips_every_family() {
+        let cases = vec![
+            CostFn::Affine { fixed: 0.25, per_task: 1.0 / 3.0 },
+            CostFn::Quadratic { fixed: 0.0, a: 0.125, b: 2.0 },
+            CostFn::PowerLaw { fixed: 1.0, scale: 0.7, exponent: 0.55 },
+            CostFn::Logarithmic { fixed: 0.0, scale: 3.3 },
+            CostFn::Tabulated { first: 2, values: vec![6.0, 8.0, 9.5] },
+            CostFn::Scaled {
+                weight: 1.5,
+                inner: Box::new(CostFn::Affine { fixed: 0.0, per_task: 2.0 }),
+            },
+            CostFn::Shifted {
+                shift: 3,
+                inner: Box::new(CostFn::Logarithmic { fixed: 0.1, scale: 1.0 }),
+            },
+        ];
+        for c in cases {
+            let back = costfn_from_json(&roundtrip(&costfn_to_json(&c))).unwrap();
+            assert_eq!(back, c);
+        }
+    }
+
+    #[test]
+    fn device_roundtrips_with_and_without_battery() {
+        let abstract_dev = ManagedDevice::abstract_resource(
+            7,
+            CostFn::Affine { fixed: 0.0, per_task: 2.0 },
+            1,
+            usize::MAX,
+        );
+        let powered = ManagedDevice {
+            id: 3,
+            cost: CostFn::Quadratic { fixed: 0.0, a: 0.5, b: 0.1 },
+            lower: 0,
+            data_cap: 40,
+            battery: Some(Battery {
+                capacity_wh: 8.5,
+                level: 0.62,
+                round_budget_frac: 0.1,
+            }),
+            power: Some(PowerModel {
+                idle_w: 0.1,
+                busy_w: 2.5,
+                batch_latency_s: 0.4,
+                behavior: Behavior::Concave,
+                curvature: 0.07,
+            }),
+            drift: 1.31,
+        };
+        for d in [abstract_dev, powered] {
+            let back = device_from_json(&roundtrip(&device_to_json(&d))).unwrap();
+            assert_eq!(back.id, d.id);
+            assert_eq!(back.cost, d.cost);
+            assert_eq!(back.lower, d.lower);
+            assert_eq!(back.data_cap, d.data_cap);
+            assert_eq!(back.drift.to_bits(), d.drift.to_bits());
+            assert_eq!(back.battery.is_some(), d.battery.is_some());
+            if let (Some(a), Some(b)) = (&back.battery, &d.battery) {
+                assert_eq!(a.level.to_bits(), b.level.to_bits());
+                assert_eq!(a.capacity_wh.to_bits(), b.capacity_wh.to_bits());
+            }
+            if let (Some(a), Some(b)) = (&back.power, &d.power) {
+                assert_eq!(a.behavior, b.behavior);
+                assert_eq!(a.busy_w.to_bits(), b.busy_w.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dynamics_roundtrips_all_combinations() {
+        let mut rng = Rng::new(5);
+        let mut full = DynamicsConfig::mobile(6);
+        full.availability.as_mut().unwrap().step(&mut rng);
+        full.drift.as_mut().unwrap().step(&mut rng);
+        for d in [DynamicsConfig::none(), full] {
+            let back = dynamics_from_json(&roundtrip(&dynamics_to_json(&d))).unwrap();
+            assert_eq!(back.availability.is_some(), d.availability.is_some());
+            if let (Some(a), Some(b)) = (&back.availability, &d.availability) {
+                assert_eq!(a.states(), b.states());
+                assert_eq!(a.p_join.to_bits(), b.p_join.to_bits());
+            }
+            if let (Some(a), Some(b)) = (&back.drift, &d.drift) {
+                assert_eq!(a.scales(), b.scales());
+            }
+            assert_eq!(back.dropout.is_some(), d.dropout.is_some());
+        }
+    }
+
+    #[test]
+    fn rng_ledger_metrics_cfg_roundtrip() {
+        let mut rng = Rng::new(11);
+        rng.next_u64();
+        let back = rng_from_json(&roundtrip(&rng_to_json(&rng))).unwrap();
+        assert_eq!(back.state(), rng.state());
+
+        let mut l = EnergyLedger::new();
+        l.begin_round();
+        l.record(0, 2.5);
+        l.record(9, 0.1);
+        let lb = ledger_from_json(&roundtrip(&ledger_to_json(&l))).unwrap();
+        assert_eq!(lb.total().to_bits(), l.total().to_bits());
+        assert_eq!(lb.rounds(), l.rounds());
+        assert_eq!(lb.rounds_opened(), l.rounds_opened());
+
+        let mut m = MetricsHub::new();
+        m.inc("rounds", 3);
+        m.set("eval_loss", 0.25);
+        let mb = metrics_from_json(&roundtrip(&metrics_to_json(&m))).unwrap();
+        assert_eq!(mb.counter("rounds"), 3);
+        assert_eq!(mb.gauge("eval_loss"), Some(0.25));
+
+        let cfg = CoordinatorConfig {
+            rounds: 9,
+            tasks_per_round: 33,
+            algo: "mardec".into(),
+            participation: 0.75,
+            min_tasks: 1,
+            max_share: 0.5,
+            seed: u64::MAX - 3,
+            target_loss: Some(0.125),
+        };
+        let cb = cfg_from_json(&roundtrip(&cfg_to_json(&cfg))).unwrap();
+        assert_eq!(cb.rounds, cfg.rounds);
+        assert_eq!(cb.algo, cfg.algo);
+        assert_eq!(cb.seed, cfg.seed);
+        assert_eq!(cb.target_loss, cfg.target_loss);
+        assert_eq!(cb.participation.to_bits(), cfg.participation.to_bits());
+    }
+}

@@ -1,0 +1,51 @@
+//! FNV-1a hashing — the single home of the digest primitive shared by
+//! the store's checksums ([`crate::store::fnv64`]), the fleet-instance
+//! digest ([`crate::sched::fleet::FleetInstance::digest`]), and the
+//! journal's round/campaign digests. One implementation means the
+//! journal writer and the replay verifier can never drift apart.
+
+/// FNV-1a offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold raw bytes into a running FNV-1a state.
+#[inline]
+pub fn fold(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Hash a byte string from the offset basis.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fold(FNV_OFFSET, bytes)
+}
+
+/// Fold one `u64` (little-endian bytes) into a running state.
+#[inline]
+pub fn mix_u64(h: u64, word: u64) -> u64 {
+    fold(h, &word.to_le_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // Standard FNV-1a 64-bit vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn mix_u64_equals_folding_le_bytes() {
+        let h = fnv1a(b"seed");
+        assert_eq!(mix_u64(h, 0xDEAD_BEEF), fold(h, &0xDEAD_BEEFu64.to_le_bytes()));
+    }
+}

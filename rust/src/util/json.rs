@@ -46,7 +46,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // `-0.0` would print as "0" through the integer fast path,
+                // dropping the sign bit; the store's snapshot round-trips
+                // must be value-exact, so spell it out.
+                if *x == 0.0 && x.is_sign_negative() {
+                    out.push_str("-0.0");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -375,6 +380,96 @@ mod tests {
         let v = Json::Str("a\"b\\c\nd\te".to_string());
         let s = v.to_string();
         assert_eq!(Json::parse(&s).unwrap(), v);
+    }
+
+    // ---- journal-integrity round-trips ---------------------------------
+    //
+    // The coordinator store serializes every round through
+    // `Json::to_string` and reads it back through `Json::parse`; crash
+    // recovery is bit-for-bit only if that composition is the identity for
+    // floats and for strings with every escape class.
+
+    #[test]
+    fn float_roundtrip_is_bit_exact() {
+        let cases = [
+            0.0,
+            -0.0,
+            0.1,
+            -0.1,
+            1.0 / 3.0,
+            2.5,
+            -2.5,
+            1e-300,
+            -1e-300,
+            1e300,
+            f64::MAX,
+            f64::MIN,
+            f64::MIN_POSITIVE,
+            5e-324, // smallest subnormal
+            1e15,   // integer fast-path boundary
+            1e15 - 1.0,
+            9_007_199_254_740_993.0, // 2^53 + 1 (rounds to 2^53)
+            123_456_789.000_001,
+            std::f64::consts::PI,
+            std::f64::consts::E,
+        ];
+        for &x in &cases {
+            let s = Json::Num(x).to_string();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(
+                back.to_bits(),
+                x.to_bits(),
+                "float {x:?} serialized as {s:?} parsed back as {back:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        let s = Json::Num(-0.0).to_string();
+        assert_eq!(s, "-0.0");
+        let back = Json::parse(&s).unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative());
+    }
+
+    #[test]
+    fn string_escape_roundtrip_is_exact() {
+        let cases = [
+            "",
+            "plain",
+            "quote\" backslash\\ slash/ done",
+            "newline\n return\r tab\t",
+            "backspace\u{8} formfeed\u{c}",
+            "low controls \u{0}\u{1}\u{1f}",
+            "unicode café εζ 電池 🔋",
+            "mixed \"\\\n\t\u{3} café",
+            "trailing backslash \\",
+            "\\\"", // looks like an escape sequence itself
+        ];
+        for &orig in &cases {
+            let s = Json::Str(orig.to_string()).to_string();
+            let back = Json::parse(&s).unwrap();
+            assert_eq!(
+                back.as_str(),
+                Some(orig),
+                "string {orig:?} serialized as {s:?}"
+            );
+            // And serialization is canonical: a second trip is identical.
+            assert_eq!(back.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn nested_document_roundtrip_is_canonical() {
+        let doc = Json::obj(vec![
+            ("z", Json::Num(-0.0)),
+            ("a", Json::Arr(vec![Json::Num(0.1), Json::Str("x\ny".into())])),
+            ("m", Json::obj(vec![("k", Json::Num(1e300))])),
+        ]);
+        let s = doc.to_string();
+        let re = Json::parse(&s).unwrap();
+        assert_eq!(re, doc);
+        assert_eq!(re.to_string(), s, "to_string ∘ parse must be stable");
     }
 
     #[test]

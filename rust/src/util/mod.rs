@@ -2,6 +2,7 @@
 //! network access, so `rand`, `serde`, `csv`, ... are unavailable).
 
 pub mod csv;
+pub mod hash;
 pub mod heap;
 pub mod json;
 pub mod rng;

@@ -57,6 +57,20 @@ impl Rng {
         Rng::new(self.next_u64())
     }
 
+    /// The raw 256-bit generator state — what the coordinator store
+    /// snapshots so a restored run continues the *exact* stream.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a persisted [`Rng::state`]. The state must
+    /// come from a live generator (never all-zero), so it is restored
+    /// verbatim — bit-for-bit continuation is the whole point.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        debug_assert!(s != [0, 0, 0, 0], "restored RNG state must be non-zero");
+        Self { s }
+    }
+
     /// Next raw 64-bit value.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
@@ -369,6 +383,18 @@ mod tests {
             counts[r.zipf(10, 1.2)] += 1;
         }
         assert!(counts[1] > counts[2] && counts[2] > counts[5]);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_exact_stream() {
+        let mut a = Rng::new(77);
+        for _ in 0..13 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Binary-level tests of the durable-campaign CLI: `train --backend sim
+//! --store`, crash simulation (journal truncated to a prefix + snapshot
+//! removed — exactly the on-disk state a SIGKILL leaves, since the
+//! journal is append-only and snapshots replace atomically), `resume`,
+//! and `replay` digest equality between the clean and recovered runs.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn fedzero(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_fedzero"))
+        .args(args)
+        .output()
+        .expect("failed to spawn the fedzero binary")
+}
+
+fn stdout_ok(args: &[&str]) -> String {
+    let out = fedzero(args);
+    assert!(
+        out.status.success(),
+        "fedzero {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).unwrap()
+}
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("fedzero_cli_store").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn train_args(dir: &Path) -> Vec<String> {
+    let mut args: Vec<String> = [
+        "train",
+        "--backend",
+        "sim",
+        "--store",
+        dir.to_str().unwrap(),
+        "--rounds",
+        "30",
+        "--devices",
+        "12",
+        "--tasks",
+        "24",
+        "--algo",
+        "auto",
+        "--seed",
+        "11",
+        "--dynamics",
+        "mobile",
+        "--snapshot-every",
+        "10",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    args.push("--out".into());
+    args.push(dir.join("run.csv").to_string_lossy().into_owned());
+    args
+}
+
+fn campaign_line(replay_output: &str) -> String {
+    replay_output
+        .lines()
+        .find(|l| l.starts_with("campaign digest"))
+        .unwrap_or_else(|| panic!("no campaign digest line in: {replay_output}"))
+        .to_string()
+}
+
+/// Truncate the journal to its first `keep` lines and drop the periodic
+/// snapshot — the on-disk state of a campaign killed after round `keep`
+/// with its last snapshot lost.
+fn simulate_crash_at(dir: &Path, keep: usize) {
+    let journal = dir.join("journal.jsonl");
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let prefix: String =
+        text.lines().take(keep).map(|l| format!("{l}\n")).collect();
+    std::fs::write(&journal, prefix).unwrap();
+    let _ = std::fs::remove_file(dir.join("snapshot.json"));
+}
+
+#[test]
+fn train_resume_replay_roundtrip_is_bit_for_bit() {
+    let clean = scratch("clean");
+    let crash = scratch("crash");
+    let args: Vec<String> = train_args(&clean);
+    let argrefs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    let out = stdout_ok(&argrefs);
+    assert!(out.contains("campaign store:"), "{out}");
+
+    // Identical campaign into a second store, then "crash" it at round 13.
+    let args: Vec<String> = train_args(&crash);
+    let argrefs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    stdout_ok(&argrefs);
+    simulate_crash_at(&crash, 13);
+
+    let resume_out = stdout_ok(&["resume", crash.to_str().unwrap()]);
+    assert!(resume_out.contains("resuming"), "{resume_out}");
+    assert!(resume_out.contains("done:"), "{resume_out}");
+
+    // The streamed --out sink was re-attached from meta.json: both runs
+    // end with a complete CSV (header + 30 rows), crash or not.
+    for dir in [&clean, &crash] {
+        let csv = std::fs::read_to_string(dir.join("run.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 31, "incomplete CSV in {dir:?}");
+        assert!(csv.starts_with("round,policy,loss"));
+    }
+
+    // Replay both campaigns: the audit must pass and the deterministic
+    // campaign digests (timings excluded) must be identical.
+    let clean_replay = stdout_ok(&["replay", clean.to_str().unwrap()]);
+    let crash_replay = stdout_ok(&["replay", crash.to_str().unwrap()]);
+    assert!(clean_replay.contains("replayed 30 rounds"), "{clean_replay}");
+    assert!(crash_replay.contains("replayed 30 rounds"), "{crash_replay}");
+    assert_eq!(campaign_line(&clean_replay), campaign_line(&crash_replay));
+
+    // Resuming a complete campaign is a verified no-op.
+    let again = stdout_ok(&["resume", crash.to_str().unwrap()]);
+    assert!(again.contains("already complete"), "{again}");
+
+    let _ = std::fs::remove_dir_all(&clean);
+    let _ = std::fs::remove_dir_all(&crash);
+}
+
+#[test]
+fn store_refuses_silent_overwrite_and_fl_backend() {
+    let dir = scratch("overwrite");
+    let args: Vec<String> = train_args(&dir);
+    let argrefs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    stdout_ok(&argrefs);
+
+    // A second `train --store` into the same directory must refuse.
+    let out = fedzero(&argrefs);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("resume"), "{err}");
+
+    // And --store with the PJRT backend is rejected up front.
+    let out = fedzero(&["train", "--store", "/tmp/nope-fl-store"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--backend sim"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

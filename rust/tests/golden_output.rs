@@ -1,0 +1,113 @@
+//! Golden tests pinning byte-stable output ordering: journal lines, the
+//! `MetricsHub` summary, and the solver registry's applicability text
+//! (what `solvers` and `--algo` errors print). The store's journals and
+//! the CI recovery diff both depend on these being identical across runs
+//! and platforms, so any ordering change must be a conscious one.
+
+use fedzero::metrics::{MetricsHub, RoundLog};
+use fedzero::sched::solver::SolverRegistry;
+use fedzero::store::journal::JournalEntry;
+use fedzero::store::sink::row_to_json;
+
+#[test]
+fn registry_describe_order_is_pinned() {
+    // Registration order, each with its Table 2 applicability — the exact
+    // text `solvers` and `--algo` errors print. A new solver extends this
+    // string; nothing may reorder it.
+    let registry = SolverRegistry::with_defaults(0);
+    assert_eq!(
+        registry.describe().join(" "),
+        "auto[arb,inc,con,dec,dec∞] mc2mkp[arb,inc,con,dec,dec∞] \
+         marin[inc,con] marco[con] mardecun[dec∞] mardec[con,dec,dec∞] \
+         bruteforce[arb,inc,con,dec,dec∞] uniform[—] random[—] \
+         proportional[—] greedy[—] olar[—]"
+    );
+}
+
+#[test]
+fn registry_names_order_is_pinned() {
+    let registry = SolverRegistry::with_defaults(0);
+    assert_eq!(
+        registry.names(),
+        vec![
+            "auto",
+            "mc2mkp",
+            "marin",
+            "marco",
+            "mardecun",
+            "mardec",
+            "bruteforce",
+            "uniform",
+            "random",
+            "proportional",
+            "greedy",
+            "olar",
+        ]
+    );
+}
+
+#[test]
+fn metrics_summary_is_byte_stable() {
+    // Counters first (name-sorted), then gauges (name-sorted, 4 decimal
+    // places) — insertion order must not leak into the output.
+    let mut a = MetricsHub::new();
+    a.inc("rounds", 2);
+    a.inc("dp_solves", 1);
+    a.set("train_loss", 0.5);
+    a.set("eval_loss", 0.125);
+    assert_eq!(
+        a.summary(),
+        "dp_solves=1 rounds=2 eval_loss=0.1250 train_loss=0.5000"
+    );
+
+    let mut b = MetricsHub::new();
+    b.set("eval_loss", 0.125);
+    b.inc("dp_solves", 1);
+    b.set("train_loss", 0.5);
+    b.inc("rounds", 2);
+    assert_eq!(a.summary(), b.summary(), "insertion order must not matter");
+}
+
+fn sample_row() -> RoundLog {
+    RoundLog {
+        round: 2,
+        policy: "auto".into(),
+        loss: 0.5,
+        energy_j: 12.0,
+        sched_time_s: 0.0,
+        train_time_s: 0.0,
+        participants: 3,
+        tasks: 8,
+    }
+}
+
+#[test]
+fn journal_line_encoding_is_byte_stable() {
+    // Keys are emitted in sorted order and floats in their canonical
+    // shortest form, so journals are byte-identical across runs — the
+    // property the recovery-smoke diff in CI relies on.
+    let entry = JournalEntry {
+        round: 2,
+        solver: "marin".into(),
+        digest: 0xab,
+        rng_after: [1, 2, 3, 4],
+        row: sample_row(),
+    };
+    assert_eq!(
+        entry.to_json().to_string(),
+        "{\"digest\":\"ab\",\"rng\":[\"1\",\"2\",\"3\",\"4\"],\"round\":2,\
+         \"row\":{\"energy_j\":12,\"loss\":0.5,\"participants\":3,\
+         \"policy\":\"auto\",\"round\":2,\"sched_time_s\":0,\"tasks\":8,\
+         \"train_time_s\":0},\"solver\":\"marin\"}"
+    );
+}
+
+#[test]
+fn round_row_encoding_is_byte_stable() {
+    assert_eq!(
+        row_to_json(&sample_row()).to_string(),
+        "{\"energy_j\":12,\"loss\":0.5,\"participants\":3,\
+         \"policy\":\"auto\",\"round\":2,\"sched_time_s\":0,\"tasks\":8,\
+         \"train_time_s\":0}"
+    );
+}
