@@ -13,14 +13,28 @@
 //! only `u32` backtrack tables at `O(n·T)`), and its speedup is expected
 //! to be ~1×.
 //!
-//! `FEDZERO_BENCH_SMOKE=1` shrinks the sweep to `n = 10³` with quick
-//! timing — the CI regression gate.
+//! Since the sharded build pipeline, a second scenario times **instance
+//! construction itself** on a million-device fleet: single-thread
+//! `FleetInstance::from_flat` vs the sharded concurrent build
+//! (`runtime::pool::build_fleet_sharded` — partition, per-shard class
+//! dedup on scoped threads, exact merge). The full sweep gates the
+//! sharded build at **≥ 3×** the single-thread build; every run (smoke
+//! included) records the measured ops and speedup ratios into
+//! `BENCH_fleet_scale.json` so CI keeps a machine-readable perf
+//! trajectory.
+//!
+//! `FEDZERO_BENCH_SMOKE=1` shrinks the sweep to `n = 10³` (solves) and
+//! `n = 2·10⁵` (build) with quick timing — the CI regression gate. The
+//! build-speedup assertion is full-sweep only: shared CI runners expose
+//! too few cores to gate a parallelism ratio honestly.
 
 use fedzero::benchkit::{bench, BenchConfig};
+use fedzero::runtime::pool;
 use fedzero::sched::costs::CostFn;
 use fedzero::sched::fleet::FleetInstance;
 use fedzero::sched::instance::Instance;
 use fedzero::sched::{marco, mardecun, marin, mc2mkp};
+use fedzero::util::json::Json;
 use fedzero::util::rng::Rng;
 use fedzero::util::table::{fmt_duration, Table};
 
@@ -91,6 +105,7 @@ fn main() {
         &["algorithm", "n", "T", "flat", "class", "dedup", "speedup"],
     );
     let mut worst_marginal_speedup = f64::INFINITY;
+    let mut solve_rows: Vec<Json> = Vec::new();
 
     for &n in sizes {
         let t = 2 * n;
@@ -119,6 +134,15 @@ fn main() {
             });
             let speedup = m_flat.median() / m_class.median().max(1e-12);
             worst_marginal_speedup = worst_marginal_speedup.min(speedup);
+            solve_rows.push(Json::obj(vec![
+                ("algo", Json::Str(algo.to_string())),
+                ("n", Json::Num(n as f64)),
+                ("t", Json::Num(t as f64)),
+                ("flat_s", Json::Num(m_flat.median())),
+                ("class_s", Json::Num(m_class.median())),
+                ("dedup_s", Json::Num(m_dedup.median())),
+                ("speedup", Json::Num(speedup)),
+            ]));
             table.rows_str(vec![
                 algo.to_string(),
                 n.to_string(),
@@ -151,18 +175,116 @@ fn main() {
     }
 
     table.print();
-    // Full sweep enforces the acceptance bar; smoke (n = 10³, batched
-    // timing) enforces a looser gate that still catches the failure mode
-    // CI exists for — a class-aware solver silently regressing to the
-    // flat path shows up as ~1x, far below any plausible noise band.
+
+    // ---- sharded million-device instance build ---------------------------
+    //
+    // What a coordinator round pays *before* any solver runs: turning n
+    // devices into a class-deduplicated FleetInstance. Single-thread
+    // `from_flat` vs the sharded scoped-thread pipeline (identical output
+    // bits — asserted below, and property-tested in
+    // tests/shard_equivalence.rs).
+    let build_n: usize = if smoke { 200_000 } else { 1_000_000 };
+    let build_t = 2 * build_n;
+    let workers = pool::default_workers();
+    let shards = (workers * 2).max(2);
+    let build_cfg = BenchConfig { warmup: 1, iters: 5, min_time_s: 0.0 };
+    let (build_fleet, build_flat) = build("marco", build_n, build_t);
+    let m_single = bench("from_flat", &build_cfg, || {
+        FleetInstance::from_flat(&build_flat).unwrap()
+    });
+    let m_sharded = bench("sharded", &build_cfg, || {
+        pool::build_fleet_sharded(&build_flat, shards, workers).unwrap()
+    });
+    let (check, _) = pool::build_fleet_sharded(&build_flat, shards, workers).unwrap();
+    assert_eq!(
+        check.digest(),
+        build_fleet.digest(),
+        "sharded build must be bit-identical to the direct build"
+    );
+    let build_speedup = m_single.median() / m_sharded.median().max(1e-12);
+    let mut build_table = Table::new(
+        &format!(
+            "FLEET BUILD: single-thread vs sharded instance construction \
+             ({workers} workers, {shards} shards)"
+        ),
+        &["n", "T", "classes", "single", "sharded", "speedup"],
+    );
+    build_table.rows_str(vec![
+        build_n.to_string(),
+        build_t.to_string(),
+        build_fleet.n_classes().to_string(),
+        fmt_duration(m_single.median()),
+        fmt_duration(m_sharded.median()),
+        format!("{build_speedup:.1}x"),
+    ]);
+    build_table.print();
+
+    // ---- machine-readable trajectory (BENCH_fleet_scale.json) ------------
+    let build_gate = 3.0f64;
+    let build_pass = build_speedup >= build_gate;
+    let report = Json::obj(vec![
+        ("bench", Json::Str("fleet_scale".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("solve", Json::Arr(solve_rows)),
+        (
+            "build",
+            Json::obj(vec![
+                ("n", Json::Num(build_n as f64)),
+                ("t", Json::Num(build_t as f64)),
+                ("classes", Json::Num(build_fleet.n_classes() as f64)),
+                ("shards", Json::Num(shards as f64)),
+                ("workers", Json::Num(workers as f64)),
+                ("single_s", Json::Num(m_single.median())),
+                ("sharded_s", Json::Num(m_sharded.median())),
+                ("speedup", Json::Num(build_speedup)),
+            ]),
+        ),
+        (
+            "gates",
+            Json::obj(vec![
+                ("solve_worst_speedup", Json::Num(worst_marginal_speedup)),
+                ("solve_gate", Json::Num(if smoke { 2.0 } else { 10.0 })),
+                ("build_gate", Json::Num(build_gate)),
+                ("build_gate_enforced", Json::Bool(!smoke)),
+                ("build_pass", Json::Bool(build_pass)),
+            ]),
+        ),
+    ]);
+    let mut payload = report.to_string();
+    payload.push('\n');
+    std::fs::write("BENCH_fleet_scale.json", payload)
+        .expect("write BENCH_fleet_scale.json");
+    println!("wrote BENCH_fleet_scale.json");
+
+    // Full sweep enforces the acceptance bars; smoke (n = 10³, batched
+    // timing) enforces a looser solve gate that still catches the failure
+    // mode CI exists for — a class-aware solver silently regressing to
+    // the flat path shows up as ~1x, far below any plausible noise band.
+    // The build ratio is recorded always but asserted only on the full
+    // sweep (CI smoke runners have too few cores for an honest 3× gate).
     let gate = if smoke { 2.0 } else { 10.0 };
     println!(
         "acceptance: every marginal algorithm ≥ {gate}x — worst observed {:.0}x ({})",
         worst_marginal_speedup,
         if worst_marginal_speedup >= gate { "PASS" } else { "FAIL" }
     );
+    println!(
+        "acceptance: sharded build ≥ {build_gate}x single-thread at n = {build_n} — \
+         observed {build_speedup:.1}x ({})",
+        if build_pass {
+            "PASS"
+        } else if smoke {
+            "INFO (smoke: not enforced)"
+        } else {
+            "FAIL"
+        }
+    );
     assert!(
         worst_marginal_speedup >= gate,
         "class-path speedup regressed below {gate}x"
+    );
+    assert!(
+        smoke || build_pass,
+        "sharded instance build regressed below {build_gate}x single-thread"
     );
 }

@@ -229,6 +229,7 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "seed", help: "fleet RNG seed", takes_value: true, default: Some("1") },
                     OptSpec { name: "regime", help: "cost regime: increasing|constant|decreasing|arbitrary", takes_value: true, default: Some("increasing") },
                     OptSpec { name: "algo", help: "solver name (see `fedzero solvers`; errors list the registry)", takes_value: true, default: Some("auto") },
+                    OptSpec { name: "shards", help: "instance-build shards (concurrent class dedup; 1 = direct build, identical schedule either way)", takes_value: true, default: Some("1") },
                     OptSpec { name: "json", help: "print the schedule as JSON", takes_value: false, default: None },
                 ],
                 positional: vec![],
@@ -252,6 +253,7 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "metrics-jsonl", help: "stream per-round rows to this JSONL file", takes_value: true, default: None },
                     OptSpec { name: "log-ring", help: "bound the in-memory round log to this many rows (0 = unbounded)", takes_value: true, default: None },
                     OptSpec { name: "dynamics", help: "fleet dynamics: none | mobile (churn, drift, dropout)", takes_value: true, default: Some("none") },
+                    OptSpec { name: "shards", help: "per-round instance-build shards (concurrent class dedup; schedules are bit-for-bit identical for any value)", takes_value: true, default: Some("1") },
                     OptSpec { name: "round-sleep-ms", help: "sleep between rounds (crash-recovery testing; sim only)", takes_value: true, default: Some("0") },
                 ],
                 positional: vec![],
@@ -350,6 +352,18 @@ mod tests {
         let msg = format!("{err}");
         assert!(msg.contains("USAGE"));
         assert!(msg.contains("schedule"));
+    }
+
+    #[test]
+    fn shards_flag_parses_on_schedule_and_train() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["schedule", "--shards", "8"])).unwrap();
+        assert_eq!(p.get_parse::<usize>("shards").unwrap(), Some(8));
+        let p = app.parse(&args(&["train", "--backend", "sim"])).unwrap();
+        assert_eq!(p.get_or::<usize>("shards", 0).unwrap(), 1, "default");
+        assert_eq!(p.get_explicit("shards"), None);
+        let p = app.parse(&args(&["train", "--shards=4"])).unwrap();
+        assert_eq!(p.get_parse_explicit::<usize>("shards").unwrap(), Some(4));
     }
 
     #[test]

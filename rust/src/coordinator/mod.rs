@@ -37,7 +37,9 @@ use crate::config::TrainConfig;
 use crate::error::{FedError, Result};
 use crate::fl::dynamics::DynamicsConfig;
 use crate::metrics::{EnergyLedger, MetricsHub, RoundLog, Timer, TrainingLog};
+use crate::runtime::pool;
 use crate::sched::auto::{best_algorithm, classify_fleet};
+use crate::sched::costs::CostFn;
 use crate::sched::fleet::FleetInstance;
 use crate::sched::instance::{Instance, Schedule};
 use crate::sched::mc2mkp::WarmMc2mkp;
@@ -104,6 +106,13 @@ pub struct CoordinatorConfig {
     pub seed: u64,
     /// Early-stop target on evaluation loss.
     pub target_loss: Option<f64>,
+    /// Instance-build shards per round (`1` = direct builder path;
+    /// `> 1` = partition → concurrent per-shard class dedup → exact
+    /// merge via [`crate::sched::shard`]). The derived instance is
+    /// bit-for-bit identical either way, so journals/digests never
+    /// depend on this knob — it is a pure build-time speedup for
+    /// 10⁵–10⁶-device fleets.
+    pub shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -117,6 +126,7 @@ impl Default for CoordinatorConfig {
             max_share: 0.25,
             seed: 7,
             target_loss: None,
+            shards: 1,
         }
     }
 }
@@ -133,6 +143,7 @@ impl CoordinatorConfig {
             max_share: cfg.max_share,
             seed: cfg.seed,
             target_loss: cfg.target_loss,
+            shards: 1,
         }
     }
 }
@@ -203,6 +214,9 @@ impl<B: RoundBackend> Coordinator<B> {
         if !(0.0..=1.0).contains(&cfg.max_share) || cfg.max_share == 0.0 {
             return Err(FedError::Coordinator("max_share must be in (0, 1]".into()));
         }
+        if cfg.shards == 0 {
+            return Err(FedError::Coordinator("shards must be >= 1".into()));
+        }
         let registry = SolverRegistry::with_defaults(cfg.seed);
         registry.resolve(&cfg.algo)?;
         let rng = Rng::new(cfg.seed);
@@ -234,6 +248,17 @@ impl<B: RoundBackend> Coordinator<B> {
     /// mid-round dropout).
     pub fn set_dynamics(&mut self, dynamics: DynamicsConfig) {
         self.dynamics = dynamics;
+    }
+
+    /// Set the per-round instance-build shard count (see
+    /// [`CoordinatorConfig::shards`]). Safe to change between rounds:
+    /// the derived instance is bit-for-bit identical for every count.
+    pub fn set_shards(&mut self, shards: usize) -> Result<()> {
+        if shards == 0 {
+            return Err(FedError::Coordinator("shards must be >= 1".into()));
+        }
+        self.cfg.shards = shards;
+        Ok(())
     }
 
     /// Current phase.
@@ -395,11 +420,29 @@ impl<B: RoundBackend> Coordinator<B> {
         } else {
             lower
         };
-        let mut b = FleetInstance::builder().tasks(t);
-        for ((&d, &u), &l) in selected.iter().zip(&uppers).zip(&lower) {
-            b = b.device(self.devices[d].current_cost(), l, u);
-        }
-        Ok((b.build()?, t))
+        let fleet = if self.cfg.shards > 1 {
+            // Sharded build: materialize the flat device sequence once,
+            // fan the per-shard class dedup out over scoped threads, and
+            // merge exactly. `fleet_shards` / `shard_merge_ns` expose the
+            // fan-out; the merge timing never enters any digest.
+            let costs: Vec<CostFn> = selected
+                .iter()
+                .map(|&d| self.devices[d].current_cost())
+                .collect();
+            let inst = Instance { tasks: t, lower, upper: uppers, costs };
+            let (fleet, stats) =
+                pool::build_fleet_sharded(&inst, self.cfg.shards, 0)?;
+            self.metrics.inc("fleet_shards", stats.shards as u64);
+            self.metrics.inc("shard_merge_ns", stats.merge_ns);
+            fleet
+        } else {
+            let mut b = FleetInstance::builder().tasks(t);
+            for ((&d, &u), &l) in selected.iter().zip(&uppers).zip(&lower) {
+                b = b.device(self.devices[d].current_cost(), l, u);
+            }
+            b.build()?
+        };
+        Ok((fleet, t))
     }
 
     /// Solve the fleet instance with the configured algorithm,
@@ -1220,6 +1263,61 @@ mod tests {
         // Six interchangeable devices → one scheduling class.
         assert_eq!(coord.metrics().counter("fleet_devices"), 6);
         assert_eq!(coord.metrics().counter("fleet_classes"), 1);
+    }
+
+    #[test]
+    fn sharded_instance_derivation_is_bit_for_bit() {
+        // Same campaign, shards=1 vs shards=3 (with churn/drift/dropout
+        // engaged so per-round instances genuinely vary): every row and
+        // the RNG stream must match exactly — sharding is build-time
+        // only, never a scheduling change.
+        let run = |shards: usize| {
+            let cfg = CoordinatorConfig { rounds: 6, shards, ..paper_cfg() };
+            let mut c =
+                Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+            c.set_dynamics(DynamicsConfig::mobile(3));
+            c.run().unwrap();
+            let rows: Vec<(u64, u64, usize, usize)> = c
+                .log()
+                .rows()
+                .iter()
+                .map(|r| {
+                    (r.loss.to_bits(), r.energy_j.to_bits(), r.participants, r.tasks)
+                })
+                .collect();
+            (rows, c.rng.state(), c.ledger().total().to_bits())
+        };
+        let a = run(1);
+        let b = run(3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sharded_build_is_metered() {
+        let cfg = CoordinatorConfig { rounds: 2, shards: 2, ..paper_cfg() };
+        let mut c =
+            Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+        c.run().unwrap();
+        assert_eq!(c.metrics().counter("fleet_shards"), 4, "2 rounds × 2 shards");
+        // Merge time is wall-clock noise; only its presence is pinned.
+        let _ = c.metrics().counter("shard_merge_ns");
+        // The unsharded path must not emit shard metrics at all.
+        let mut plain =
+            Coordinator::new(paper_cfg(), paper_fleet(), SimBackend::new())
+                .unwrap();
+        plain.round().unwrap();
+        assert_eq!(plain.metrics().counter("fleet_shards"), 0);
+    }
+
+    #[test]
+    fn zero_shards_is_rejected() {
+        let cfg = CoordinatorConfig { shards: 0, ..paper_cfg() };
+        assert!(Coordinator::new(cfg, paper_fleet(), SimBackend::new()).is_err());
+        let mut c =
+            Coordinator::new(paper_cfg(), paper_fleet(), SimBackend::new())
+                .unwrap();
+        assert!(c.set_shards(0).is_err());
+        c.set_shards(4).unwrap();
     }
 
     #[test]

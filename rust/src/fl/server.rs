@@ -197,6 +197,13 @@ impl Server {
         self.coord.set_dynamics(dynamics);
     }
 
+    /// Set the per-round instance-build shard count (see
+    /// [`crate::coordinator::CoordinatorConfig::shards`]); schedules are
+    /// bit-for-bit identical for every count.
+    pub fn set_shards(&mut self, shards: usize) -> Result<()> {
+        self.coord.set_shards(shards)
+    }
+
     /// The runtime (for external evaluation).
     pub fn runtime(&self) -> &ModelRuntime {
         &self.coord.backend().runtime

@@ -25,6 +25,7 @@ use fedzero::energy::profiles::{BehaviorMix, Fleet};
 use fedzero::fl::dynamics::DynamicsConfig;
 use fedzero::fl::Server;
 use fedzero::metrics::Timer;
+use fedzero::runtime::pool;
 use fedzero::sched::auto::{best_algorithm, TABLE2_SCENARIOS};
 use fedzero::sched::fleet::FleetInstance;
 use fedzero::sched::solver::{Solver, SolverRegistry};
@@ -87,13 +88,24 @@ fn cmd_schedule(p: &cli::Parsed) -> fedzero::Result<()> {
     let registry = SolverRegistry::with_defaults(seed);
     let solver = registry.resolve(p.req("algo")?)?;
 
+    let shards: usize = p.get_or("shards", 1)?;
+    if shards == 0 {
+        // Same contract as the train paths (Coordinator rejects 0).
+        return Err(fedzero::FedError::Config("--shards must be >= 1".into()));
+    }
     let mut rng = Rng::new(seed);
     let fleet = Fleet::sample(devices, mix, &mut rng);
     let t = tasks.min(fleet.capacity());
     let inst = fleet.instance(t, 0)?;
     // Class-deduplicate before solving: interchangeable devices collapse,
     // so class-aware solvers run in the number of classes, not devices.
-    let fleet_inst = FleetInstance::from_flat(&inst)?;
+    // With --shards > 1 the dedup itself fans out over scoped threads —
+    // the resulting instance is bit-for-bit identical either way.
+    let fleet_inst = if shards > 1 {
+        pool::build_fleet_sharded(&inst, shards, 0)?.0
+    } else {
+        FleetInstance::from_flat(&inst)?
+    };
 
     let timer = Timer::start();
     let assignment = solver.solve_with_rng(&fleet_inst, &mut rng)?;
@@ -193,6 +205,7 @@ fn cmd_train_fl(p: &cli::Parsed) -> fedzero::Result<()> {
     if let Some(d) = parse_dynamics(p.req("dynamics")?, devices_n)? {
         server.set_dynamics(d);
     }
+    server.set_shards(p.get_or("shards", 1)?)?;
     if let Some(path) = p.get("metrics-jsonl") {
         server.add_sink(Box::new(JsonlSink::create(Path::new(path))?));
     }
@@ -311,6 +324,7 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
         max_share: base.max_share,
         seed,
         target_loss: base.target_loss,
+        shards: p.get_or("shards", 1)?,
     };
     let snapshot_every: usize = p.get_or("snapshot-every", 16)?;
     let sleep_ms: u64 = p.get_or("round-sleep-ms", 0)?;

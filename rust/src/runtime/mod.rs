@@ -12,6 +12,7 @@
 //! * eval:  inputs `params[0..P), x, y` → tuple `(loss,)`
 
 pub mod manifest;
+pub mod pool;
 
 pub use manifest::{Dtype, Manifest, ModelSpec};
 

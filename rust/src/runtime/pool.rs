@@ -1,0 +1,131 @@
+//! Scoped-thread fan-out for CPU-parallel build stages (std-only; the
+//! offline build has no rayon).
+//!
+//! The primary consumer is the sharded fleet-instance pipeline
+//! ([`crate::sched::shard`]): per-shard class dedup is embarrassingly
+//! parallel, so [`build_fleet_sharded`] fans the shard ranges out over
+//! scoped threads and runs the exact cross-shard merge on the caller's
+//! thread. Results are always collected **in input order**, so parallel
+//! execution cannot perturb any deterministic contract downstream.
+
+use crate::error::Result;
+use crate::sched::fleet::FleetInstance;
+use crate::sched::instance::Instance;
+use crate::sched::shard::{self, ShardClasses, ShardStats};
+
+/// Available CPU parallelism (1 when undetectable).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `max_workers` scoped threads,
+/// returning results **in input order** (worker scheduling can never
+/// reorder them). Items are split into contiguous chunks, one per
+/// worker; with one worker (or one item) everything runs inline on the
+/// caller's thread.
+///
+/// Panics in `f` propagate to the caller (the scope joins every worker).
+pub fn parallel_map<T, R, F>(items: Vec<T>, max_workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = max_workers.clamp(1, n.max(1));
+    if workers <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Contiguous chunks, ceil-sized so every item lands in some chunk.
+    let chunk_len = n.div_ceil(workers);
+    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
+    let mut it = items.into_iter();
+    loop {
+        let chunk: Vec<T> = it.by_ref().take(chunk_len).collect();
+        if chunk.is_empty() {
+            break;
+        }
+        chunks.push(chunk);
+    }
+    let f = &f;
+    let mut out: Vec<R> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|chunk| {
+                s.spawn(move || chunk.into_iter().map(f).collect::<Vec<R>>())
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("pool worker panicked"));
+        }
+    });
+    out
+}
+
+/// Concurrent sharded fleet construction: per-shard class dedup on scoped
+/// threads ([`crate::sched::shard::dedup_slots`]), then the exact
+/// cross-shard merge. Bit-for-bit identical to
+/// [`FleetInstance::from_flat`] — see the shard module's exactness
+/// contract. `workers = 0` uses the machine's available parallelism.
+pub fn build_fleet_sharded(
+    inst: &Instance,
+    shards: usize,
+    workers: usize,
+) -> Result<(FleetInstance, ShardStats)> {
+    inst.validate()?;
+    let plan = shard::ShardPlan::contiguous(inst.n(), shards);
+    let workers = if workers == 0 { default_workers() } else { workers };
+    let ranges: Vec<std::ops::Range<usize>> = plan.ranges().to_vec();
+    let tables: Vec<ShardClasses> = parallel_map(ranges, workers, |r| {
+        shard::dedup_slots(&inst.costs, &inst.lower, &inst.upper, r)
+    });
+    shard::merge_with_stats(inst.tasks, tables, plan.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::costs::CostFn;
+
+    #[test]
+    fn parallel_map_preserves_input_order() {
+        let items: Vec<usize> = (0..103).collect();
+        for workers in [1usize, 2, 3, 8, 200] {
+            let out = parallel_map(items.clone(), workers, |x| x * 2);
+            assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+        }
+        assert!(parallel_map(Vec::<usize>::new(), 4, |x: usize| x).is_empty());
+    }
+
+    #[test]
+    fn parallel_build_matches_from_flat_bit_for_bit() {
+        let n = 500;
+        let costs: Vec<CostFn> = (0..n)
+            .map(|i| CostFn::Affine { fixed: 0.0, per_task: 1.0 + (i % 7) as f64 })
+            .collect();
+        let inst =
+            Instance::new(300, vec![0; n], vec![4; n], costs).unwrap();
+        let flat = FleetInstance::from_flat(&inst).unwrap();
+        for (shards, workers) in [(1, 1), (4, 2), (8, 0), (16, 3), (700, 4)] {
+            let (built, stats) =
+                build_fleet_sharded(&inst, shards, workers).unwrap();
+            assert_eq!(stats.shards, shards.max(1));
+            assert_eq!(built.digest(), flat.digest());
+            assert_eq!(built.n_classes(), 7);
+        }
+    }
+
+    #[test]
+    fn invalid_instances_are_rejected_before_fanout() {
+        let bad = Instance {
+            tasks: 10,
+            lower: vec![0],
+            upper: vec![3],
+            costs: vec![CostFn::Affine { fixed: 0.0, per_task: 1.0 }],
+        };
+        assert!(build_fleet_sharded(&bad, 4, 2).is_err());
+    }
+}

@@ -193,15 +193,106 @@ impl FleetInstance {
     }
 }
 
+impl FleetInstance {
+    /// Assemble a fleet from already-grouped classes — the sharded build
+    /// path ([`crate::sched::shard`]). The class member lists must
+    /// partition the slot range `0..n` exactly (each slot claimed once);
+    /// the result is validated like any built fleet.
+    pub(crate) fn from_classes(
+        tasks: usize,
+        classes: Vec<DeviceClass>,
+    ) -> Result<FleetInstance> {
+        let n: usize = classes.iter().map(|c| c.members.len()).sum();
+        let mut slot_class = vec![usize::MAX; n];
+        for (ci, class) in classes.iter().enumerate() {
+            for &s in &class.members {
+                if s >= n || slot_class[s] != usize::MAX {
+                    return Err(FedError::InvalidInstance(format!(
+                        "class member lists must partition slots 0..{n} \
+                         (slot {s} missing or claimed twice)"
+                    )));
+                }
+                slot_class[s] = ci;
+            }
+        }
+        let fleet = FleetInstance { tasks, classes, slot_class };
+        fleet.validate()?;
+        Ok(fleet)
+    }
+}
+
+/// Dedup bucket key of a `(C, L, U)` device signature — shared by
+/// [`FleetBuilder`] and the sharded build path
+/// ([`crate::sched::shard`]), so cross-shard class fusion uses the exact
+/// bucketing the direct builder uses (a prerequisite for bit-for-bit
+/// merge results).
+#[inline]
+pub(crate) fn class_key(cost: &CostFn, lower: usize, upper: usize) -> u64 {
+    cost.structural_hash().wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ (lower as u64).wrapping_mul(0x517c_c1b7_2722_0a95)
+        ^ (upper as u64)
+}
+
+/// The probe/insert core shared by **every** class-dedup site — the
+/// direct [`FleetBuilder`], the per-shard dedup, and the cross-shard
+/// merge ([`crate::sched::shard`]). One bucketing, one equality rule, one
+/// first-occurrence class order: the sharded pipeline's bit-for-bit
+/// contract holds *by construction* because all three paths run this
+/// exact code.
+#[derive(Debug, Default)]
+pub(crate) struct ClassTable {
+    pub(crate) classes: Vec<DeviceClass>,
+    /// structural hash → candidate class indices (collision chain).
+    buckets: HashMap<u64, Vec<usize>>,
+}
+
+impl ClassTable {
+    pub(crate) fn with_capacity(cap: usize) -> Self {
+        Self {
+            classes: Vec::with_capacity(cap),
+            buckets: HashMap::with_capacity(cap),
+        }
+    }
+
+    /// Index of the class with this signature, creating it (with an empty
+    /// member list) on first occurrence.
+    pub(crate) fn class_index(
+        &mut self,
+        cost: &CostFn,
+        lower: usize,
+        upper: usize,
+    ) -> usize {
+        let key = class_key(cost, lower, upper);
+        let found = self.buckets.get(&key).and_then(|chain| {
+            chain.iter().copied().find(|&ci| {
+                let cl = &self.classes[ci];
+                cl.lower == lower && cl.upper == upper && cl.cost == *cost
+            })
+        });
+        match found {
+            Some(ci) => ci,
+            None => {
+                let ci = self.classes.len();
+                self.buckets.entry(key).or_default().push(ci);
+                self.classes.push(DeviceClass {
+                    cost: cost.clone(),
+                    lower,
+                    upper,
+                    members: Vec::new(),
+                });
+                ci
+            }
+        }
+    }
+}
+
 /// Builder for [`FleetInstance`]: push devices (or whole classes), then
 /// [`FleetBuilder::build`]. Devices with equal `(C, L, U)` signatures are
 /// deduplicated into one class regardless of push order.
 #[derive(Debug, Default)]
 pub struct FleetBuilder {
     tasks: usize,
-    classes: Vec<DeviceClass>,
-    /// structural hash → candidate class indices (collision chain).
-    buckets: HashMap<u64, Vec<usize>>,
+    table: ClassTable,
     n_devices: usize,
 }
 
@@ -234,42 +325,26 @@ impl FleetBuilder {
         if count == 0 {
             return self;
         }
-        let key = cost
-            .structural_hash()
-            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
-            ^ (lower as u64).wrapping_mul(0x517c_c1b7_2722_0a95)
-            ^ (upper as u64);
-        let slots: Vec<usize> = (self.n_devices..self.n_devices + count).collect();
+        let first = self.n_devices;
         self.n_devices += count;
-        let found = self.buckets.get(&key).and_then(|chain| {
-            chain.iter().copied().find(|&ci| {
-                let class = &self.classes[ci];
-                class.lower == lower && class.upper == upper && class.cost == cost
-            })
-        });
-        match found {
-            Some(ci) => self.classes[ci].members.extend_from_slice(&slots),
-            None => {
-                self.buckets
-                    .entry(key)
-                    .or_default()
-                    .push(self.classes.len());
-                self.classes
-                    .push(DeviceClass { cost, lower, upper, members: slots });
-            }
-        }
+        let ci = self.table.class_index(&cost, lower, upper);
+        self.table.classes[ci].members.extend(first..first + count);
         self
     }
 
     /// Validate and finish.
     pub fn build(self) -> Result<FleetInstance> {
         let mut slot_class = vec![0usize; self.n_devices];
-        for (ci, class) in self.classes.iter().enumerate() {
+        for (ci, class) in self.table.classes.iter().enumerate() {
             for &s in &class.members {
                 slot_class[s] = ci;
             }
         }
-        let fleet = FleetInstance { tasks: self.tasks, classes: self.classes, slot_class };
+        let fleet = FleetInstance {
+            tasks: self.tasks,
+            classes: self.table.classes,
+            slot_class,
+        };
         fleet.validate()?;
         Ok(fleet)
     }

@@ -15,6 +15,10 @@
 //!   (paper §5.5).
 //! * [`mardec`] — Algorithms 5–7: decreasing marginal costs with upper
 //!   limits (paper §5.6).
+//! * [`shard`] — sharded instance construction for 10⁵–10⁶-device
+//!   fleets: partition → per-shard class dedup → exact cross-shard merge
+//!   (bit-for-bit equal to the unsharded build; the scoped-thread driver
+//!   is [`crate::runtime::pool`]).
 //! * [`auto`] — Table 2 classification: scenario of an instance and the
 //!   name of the cheapest optimal algorithm for it.
 //! * [`solver`] — the [`solver::Solver`] trait and
@@ -36,6 +40,7 @@ pub mod limits;
 pub mod marco;
 pub mod mardec;
 pub mod pareto;
+pub mod shard;
 pub mod mardecun;
 pub mod marin;
 pub mod mc2mkp;

@@ -1,0 +1,338 @@
+//! Sharded fleet-instance construction for 10⁵–10⁶-device fleets.
+//!
+//! Since the fleet-scale redesign, the warm DP and the class-aware solver
+//! cores made *solving* cheap (`k ≪ n`); what remains `O(n)` on the round
+//! hot path is **building** the instance — hashing every device's
+//! `(C, L, U)` signature into its class. This module splits that work:
+//!
+//! 1. **Partition** the slot range into contiguous shards
+//!    ([`ShardPlan::contiguous`]);
+//! 2. **Dedup per shard** ([`dedup_slots`]): each shard independently
+//!    groups its devices into a shard-local class table (embarrassingly
+//!    parallel — the scoped-thread driver lives in
+//!    [`crate::runtime::pool`]);
+//! 3. **Merge** ([`merge`]): shard class tables fuse into one global
+//!    [`FleetInstance`]. Classes with equal structural signatures fuse
+//!    across shards, so the merged fleet still has `k ≪ n` classes and
+//!    the merge itself is `O(k · shards)` — independent of the device
+//!    count.
+//!
+//! **Exactness contract**: the merged fleet is *bit-for-bit identical* to
+//! the unsharded [`FleetInstance::from_flat`] result — same class order
+//! (global first-occurrence order), same slot-sorted member lists, same
+//! [`FleetInstance::digest`]. This holds because shards are contiguous
+//! slot ranges processed in ascending order, shard-local class order is
+//! first-occurrence order within the shard, and the merge walks shards in
+//! order using the builder's own bucketing ([`class_key`]). Any solve of
+//! the merged fleet therefore produces exactly the schedule the unsharded
+//! path would — sharding is a pure build-time optimization, never an
+//! approximation. `tests/shard_equivalence.rs` and the testkit
+//! differential harness ([`crate::testkit::instances`]) fuzz this
+//! contract across all registered solvers.
+
+use std::ops::Range;
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::sched::costs::CostFn;
+use crate::sched::fleet::{ClassTable, DeviceClass, FleetInstance};
+use crate::sched::instance::Instance;
+
+/// Contiguous slot ranges, one per shard, covering `0..n` in order.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    ranges: Vec<Range<usize>>,
+}
+
+impl ShardPlan {
+    /// Split `n` slots into `shards` contiguous, near-even ranges (the
+    /// first `n % shards` ranges carry one extra slot). `shards = 0` is
+    /// treated as 1; shard counts above `n` produce trailing empty
+    /// shards — degenerate but legal, the merge treats them as no-ops.
+    pub fn contiguous(n: usize, shards: usize) -> ShardPlan {
+        let shards = shards.max(1);
+        let base = n / shards;
+        let extra = n % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut lo = 0usize;
+        for s in 0..shards {
+            let len = base + usize::from(s < extra);
+            ranges.push(lo..lo + len);
+            lo += len;
+        }
+        ShardPlan { ranges }
+    }
+
+    /// The shard ranges, ascending and contiguous.
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// True when the plan holds no shards (never produced by
+    /// [`ShardPlan::contiguous`]).
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+}
+
+/// A shard-local class table: classes in first-member order, member lists
+/// carrying **global** slot indices (ascending within each class).
+#[derive(Clone, Debug, Default)]
+pub struct ShardClasses {
+    classes: Vec<DeviceClass>,
+}
+
+impl ShardClasses {
+    /// The shard's classes.
+    pub fn classes(&self) -> &[DeviceClass] {
+        &self.classes
+    }
+
+    /// Number of shard-local classes.
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+}
+
+/// Class-deduplicate one contiguous slot range of a device sequence
+/// (`O(len)` expected via structural hashing — the per-shard work the
+/// parallel driver fans out).
+pub fn dedup_slots(
+    costs: &[CostFn],
+    lower: &[usize],
+    upper: &[usize],
+    range: Range<usize>,
+) -> ShardClasses {
+    let mut table = ClassTable::default();
+    for slot in range {
+        let ci = table.class_index(&costs[slot], lower[slot], upper[slot]);
+        table.classes[ci].members.push(slot);
+    }
+    ShardClasses { classes: table.classes }
+}
+
+/// Fuse shard class tables into one global [`FleetInstance`].
+///
+/// The tables must come from a [`ShardPlan`]'s ranges **in plan order**
+/// (ascending, contiguous). Classes with equal signatures fuse across
+/// shards by concatenating member lists — which stays slot-sorted because
+/// shards are ascending ranges. The result is bit-for-bit identical to
+/// building the same device sequence through [`FleetInstance::from_flat`]
+/// (see the module docs for why the class order matches).
+pub fn merge(tasks: usize, shards: Vec<ShardClasses>) -> Result<FleetInstance> {
+    // Pre-size to the largest shard table: the global k is usually close.
+    let cap = shards.iter().map(|s| s.classes.len()).max().unwrap_or(0);
+    let mut table = ClassTable::with_capacity(cap);
+    for shard in shards {
+        for class in shard.classes {
+            let ci = table.class_index(&class.cost, class.lower, class.upper);
+            table.classes[ci].members.extend(class.members);
+        }
+    }
+    FleetInstance::from_classes(tasks, table.classes)
+}
+
+/// Observability of one sharded build (what the coordinator meters).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStats {
+    /// Shards the plan produced (== the configured count).
+    pub shards: usize,
+    /// Wall-clock nanoseconds spent in the cross-shard merge. Pure
+    /// timing — it is metered (`shard_merge_ns`) but never enters any
+    /// journal or campaign digest.
+    pub merge_ns: u64,
+}
+
+/// Merge shard tables and time the merge — shared tail of the
+/// single-threaded and parallel build drivers.
+pub fn merge_with_stats(
+    tasks: usize,
+    tables: Vec<ShardClasses>,
+    n_shards: usize,
+) -> Result<(FleetInstance, ShardStats)> {
+    let t0 = Instant::now();
+    let fleet = merge(tasks, tables)?;
+    let merge_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+    Ok((fleet, ShardStats { shards: n_shards, merge_ns }))
+}
+
+/// Single-threaded sharded build of a flat instance: partition, per-shard
+/// dedup, merge. Functionally (and bit-for-bit) equivalent to
+/// [`FleetInstance::from_flat`]; the concurrent driver is
+/// [`crate::runtime::pool::build_fleet_sharded`].
+pub fn build_sharded(
+    inst: &Instance,
+    shards: usize,
+) -> Result<(FleetInstance, ShardStats)> {
+    inst.validate()?;
+    let plan = ShardPlan::contiguous(inst.n(), shards);
+    let tables: Vec<ShardClasses> = plan
+        .ranges()
+        .iter()
+        .cloned()
+        .map(|r| dedup_slots(&inst.costs, &inst.lower, &inst.upper, r))
+        .collect();
+    merge_with_stats(inst.tasks, tables, plan.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn affine(per_task: f64) -> CostFn {
+        CostFn::Affine { fixed: 0.0, per_task }
+    }
+
+    /// A flat instance whose device classes interleave across any
+    /// contiguous partition: slots alternate between three signatures.
+    fn interleaved(n: usize, t: usize) -> Instance {
+        let costs: Vec<CostFn> =
+            (0..n).map(|i| affine(1.0 + (i % 3) as f64)).collect();
+        let lower = vec![0; n];
+        let upper = vec![t; n];
+        Instance::new(t, lower, upper, costs).unwrap()
+    }
+
+    fn assert_identical(a: &FleetInstance, b: &FleetInstance) {
+        assert_eq!(a.digest(), b.digest(), "digest mismatch");
+        assert_eq!(a.n_classes(), b.n_classes());
+        assert_eq!(a.n_devices(), b.n_devices());
+        for (ca, cb) in a.classes().iter().zip(b.classes()) {
+            assert_eq!(ca.cost, cb.cost);
+            assert_eq!(ca.lower, cb.lower);
+            assert_eq!(ca.upper, cb.upper);
+            assert_eq!(ca.members, cb.members);
+        }
+        for s in 0..a.n_devices() {
+            assert_eq!(a.class_of(s), b.class_of(s));
+        }
+    }
+
+    #[test]
+    fn contiguous_plan_covers_all_slots_in_order() {
+        for (n, s) in [(10, 3), (12, 4), (5, 5), (3, 7), (0, 2), (1, 1)] {
+            let plan = ShardPlan::contiguous(n, s);
+            assert_eq!(plan.len(), s.max(1));
+            let mut next = 0usize;
+            for r in plan.ranges() {
+                assert_eq!(r.start, next, "ranges must be contiguous");
+                assert!(r.end >= r.start);
+                next = r.end;
+            }
+            assert_eq!(next, n, "ranges must cover 0..n");
+        }
+    }
+
+    #[test]
+    fn zero_shards_degrades_to_one() {
+        let plan = ShardPlan::contiguous(4, 0);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.ranges()[0], 0..4);
+    }
+
+    #[test]
+    fn sharded_build_is_bit_identical_to_from_flat() {
+        let inst = interleaved(17, 20);
+        let flat = FleetInstance::from_flat(&inst).unwrap();
+        assert_eq!(flat.n_classes(), 3);
+        for shards in [1usize, 2, 3, 5, 7, 17, 23] {
+            let (built, stats) = build_sharded(&inst, shards).unwrap();
+            assert_eq!(stats.shards, shards);
+            assert_identical(&flat, &built);
+        }
+    }
+
+    #[test]
+    fn empty_shards_are_no_ops() {
+        // More shards than devices: trailing shards are empty ranges.
+        let inst = interleaved(4, 6);
+        let (built, stats) = build_sharded(&inst, 9).unwrap();
+        assert_eq!(stats.shards, 9);
+        assert_identical(&FleetInstance::from_flat(&inst).unwrap(), &built);
+    }
+
+    #[test]
+    fn single_class_fleet_fuses_across_all_shards() {
+        let n = 12;
+        let inst = Instance::new(
+            8,
+            vec![0; n],
+            vec![8; n],
+            vec![affine(2.0); n],
+        )
+        .unwrap();
+        let (built, _) = build_sharded(&inst, 5).unwrap();
+        assert_eq!(built.n_classes(), 1);
+        assert_eq!(
+            built.classes()[0].members,
+            (0..n).collect::<Vec<usize>>()
+        );
+        assert_identical(&FleetInstance::from_flat(&inst).unwrap(), &built);
+    }
+
+    #[test]
+    fn all_unique_fleet_keeps_every_class() {
+        let n = 9;
+        let costs: Vec<CostFn> = (0..n).map(|i| affine(1.0 + i as f64)).collect();
+        let inst = Instance::new(6, vec![0; n], vec![6; n], costs).unwrap();
+        let (built, _) = build_sharded(&inst, 4).unwrap();
+        assert_eq!(built.n_classes(), n);
+        assert_identical(&FleetInstance::from_flat(&inst).unwrap(), &built);
+    }
+
+    #[test]
+    fn merge_rejects_overlapping_member_lists() {
+        // Two hand-built shard tables claiming the same slot.
+        let mk = |slots: Vec<usize>| ShardClasses {
+            classes: vec![DeviceClass {
+                cost: affine(1.0),
+                lower: 0,
+                upper: 4,
+                members: slots,
+            }],
+        };
+        assert!(merge(4, vec![mk(vec![0, 1]), mk(vec![1])]).is_err());
+        // A gap (slot 1 never claimed) is rejected too.
+        let bad = vec![ShardClasses {
+            classes: vec![DeviceClass {
+                cost: affine(1.0),
+                lower: 0,
+                upper: 4,
+                members: vec![0, 2],
+            }],
+        }];
+        assert!(merge(4, bad).is_err());
+    }
+
+    #[test]
+    fn dedup_slots_groups_within_range_only() {
+        let inst = interleaved(9, 9);
+        let t = dedup_slots(&inst.costs, &inst.lower, &inst.upper, 3..9);
+        assert_eq!(t.n_classes(), 3);
+        for class in t.classes() {
+            for &m in &class.members {
+                assert!((3..9).contains(&m), "member {m} outside range");
+            }
+        }
+    }
+
+    #[test]
+    fn merged_fleet_solves_like_the_flat_fleet() {
+        use crate::sched::marin;
+        let inst = interleaved(12, 18);
+        let flat = FleetInstance::from_flat(&inst).unwrap();
+        let (built, _) = build_sharded(&inst, 4).unwrap();
+        let a = marin::solve_fleet(&flat).unwrap();
+        let b = marin::solve_fleet(&built).unwrap();
+        assert_eq!(a, b, "same input bits must give the same assignment");
+        assert_eq!(
+            a.total_cost(&flat).to_bits(),
+            b.total_cost(&built).to_bits()
+        );
+    }
+}

@@ -440,6 +440,7 @@ pub fn cfg_to_json(cfg: &CoordinatorConfig) -> Json {
         ("max_share", jf(cfg.max_share)),
         ("seed", ju(cfg.seed)),
         ("target_loss", target_loss),
+        ("shards", Json::Num(cfg.shards as f64)),
     ])
 }
 
@@ -458,6 +459,8 @@ pub fn cfg_from_json(v: &Json) -> Result<CoordinatorConfig> {
         max_share: get_f64(v, "max_share")?,
         seed: get_u64(v, "seed")?,
         target_loss,
+        // Absent in pre-shard stores: default to the direct build path.
+        shards: v.get("shards").and_then(|s| s.as_usize()).unwrap_or(1),
     })
 }
 
@@ -612,6 +615,7 @@ mod tests {
             max_share: 0.5,
             seed: u64::MAX - 3,
             target_loss: Some(0.125),
+            shards: 8,
         };
         let cb = cfg_from_json(&roundtrip(&cfg_to_json(&cfg))).unwrap();
         assert_eq!(cb.rounds, cfg.rounds);
@@ -619,5 +623,12 @@ mod tests {
         assert_eq!(cb.seed, cfg.seed);
         assert_eq!(cb.target_loss, cfg.target_loss);
         assert_eq!(cb.participation.to_bits(), cfg.participation.to_bits());
+        assert_eq!(cb.shards, 8);
+        // Pre-shard stores (no "shards" key) default to the direct path.
+        let mut legacy = cfg_to_json(&cfg);
+        if let Json::Obj(fields) = &mut legacy {
+            fields.remove("shards");
+        }
+        assert_eq!(cfg_from_json(&roundtrip(&legacy)).unwrap().shards, 1);
     }
 }

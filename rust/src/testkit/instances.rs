@@ -1,0 +1,694 @@
+//! Scenario-diverse random instance generation and the
+//! **shard ≡ class ≡ flat differential harness** — shared infrastructure
+//! for every scheduler property test.
+//!
+//! The generator covers the paper's Table 2 axes explicitly:
+//!
+//! * **cost family** ([`Family`]): convex (increasing marginals), affine
+//!   (constant), concave (decreasing), tabulated (arbitrary);
+//! * **limit pattern** ([`LimitPattern`]): unlimited, upper-only, both,
+//!   plus the adversarial shapes that historically break limit handling —
+//!   `TightLower` (ΣL = T: the schedule is globally forced) and `Pinned`
+//!   (L = U per device: every load is fixed, the transformed workload is
+//!   zero);
+//! * **duplication shape** ([`DupShape`]): random multiplicities,
+//!   single-class (every device interchangeable), all-unique (k = n — the
+//!   dedup fast-path boundary).
+//!
+//! Cases are value types carrying their derivation seed
+//! ([`Case::build`] is a pure function of the case), so failures print a
+//! reproducible recipe and [`crate::testkit::forall`] can shrink them.
+//!
+//! [`check_shard_class_flat`] is the differential oracle the shard
+//! pipeline is proven with: for one instance and one registered solver it
+//! checks (a) every sharded build is **bit-identical** to
+//! [`FleetInstance::from_flat`], (b) sharded and class solves agree on
+//! assignment *and* cost **bits**, (c) flat and class solves agree
+//! (bit-for-bit for flat-delegating solvers, cost-equal within float
+//! tolerance for class-aware cores), and (d) errors have parity — a path
+//! that rejects an instance must be rejected by every path.
+
+use crate::sched::costs::CostFn;
+use crate::sched::fleet::FleetInstance;
+use crate::sched::instance::Instance;
+use crate::sched::shard;
+use crate::sched::solver::{Solver as _, SolverRegistry};
+use crate::sched::validate;
+use crate::testkit::Gen;
+use crate::util::rng::Rng;
+
+/// Cost family of a generated instance (Table 2 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Quadratic — increasing marginal costs (7a).
+    Convex,
+    /// Affine — constant marginal costs (7b).
+    Affine,
+    /// Sub-linear power law or logarithmic — decreasing marginals (7c).
+    Concave,
+    /// Random tabulated values — arbitrary (possibly non-monotone).
+    Tabulated,
+}
+
+/// All cost families, scenario-sweep order.
+pub const ALL_FAMILIES: [Family; 4] =
+    [Family::Convex, Family::Affine, Family::Concave, Family::Tabulated];
+
+/// Sample one cost function of `family` valid on the domain `[0, t]`.
+pub fn sample_cost(family: Family, t: usize, rng: &mut Rng) -> CostFn {
+    match family {
+        Family::Convex => CostFn::Quadratic {
+            fixed: rng.range_f64(0.0, 2.0),
+            a: rng.range_f64(0.01, 1.0),
+            b: rng.range_f64(0.0, 3.0),
+        },
+        Family::Affine => CostFn::Affine {
+            fixed: rng.range_f64(0.0, 2.0),
+            per_task: rng.range_f64(0.1, 4.0),
+        },
+        Family::Concave => {
+            if rng.bool(0.5) {
+                CostFn::PowerLaw {
+                    fixed: rng.range_f64(0.0, 1.0),
+                    scale: rng.range_f64(0.3, 4.0),
+                    exponent: rng.range_f64(0.2, 0.95),
+                }
+            } else {
+                CostFn::Logarithmic {
+                    fixed: rng.range_f64(0.0, 1.0),
+                    scale: rng.range_f64(0.3, 4.0),
+                }
+            }
+        }
+        Family::Tabulated => {
+            let mut values = vec![0.0];
+            let mut acc = 0.0;
+            for _ in 1..=t {
+                acc += rng.range_f64(0.0, 3.0);
+                // non-monotone wiggle allowed
+                values.push((acc + rng.normal() * 0.5).max(0.0));
+            }
+            CostFn::Tabulated { first: 0, values }
+        }
+    }
+}
+
+/// Limit pattern imposed on a generated instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LimitPattern {
+    /// `U = T`, `L = 0` for everyone (paper §5.5's "without upper
+    /// limits").
+    Unlimited,
+    /// `U = T` with random `L ∈ [0, T/2]`: still effectively unlimited
+    /// after the §5.2 lower-limit removal (`U − L ≥ T − ΣL` always), so
+    /// MarDecUn applies — this is the cell that exercises its
+    /// remove/restore arithmetic with nonzero lowers.
+    UnlimitedWithLower,
+    /// Random `U ∈ [1, T]`, `L = 0`.
+    UpperOnly,
+    /// Random `U ∈ [1, T]`, random `L ∈ [0, U/2]`.
+    Both,
+    /// Lower limits sum to exactly `T`: every schedule is forced to
+    /// `x = L` (the §5.2 transform degenerates to `T' = 0`).
+    TightLower,
+    /// `L = U` per device (loads pinned to a random composition of `T`);
+    /// some devices may be pinned at 0.
+    Pinned,
+}
+
+/// All limit patterns, scenario-sweep order.
+pub const ALL_LIMIT_PATTERNS: [LimitPattern; 6] = [
+    LimitPattern::Unlimited,
+    LimitPattern::UnlimitedWithLower,
+    LimitPattern::UpperOnly,
+    LimitPattern::Both,
+    LimitPattern::TightLower,
+    LimitPattern::Pinned,
+];
+
+/// Duplication shape controlling the class structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DupShape {
+    /// Each distinct spec replicated a random number of times.
+    Random,
+    /// One spec, many copies — the whole fleet is one class.
+    SingleClass,
+    /// Every spec unique — `k = n`, the dedup fast-path boundary.
+    AllUnique,
+}
+
+/// All duplication shapes, scenario-sweep order.
+pub const ALL_DUP_SHAPES: [DupShape; 3] =
+    [DupShape::Random, DupShape::SingleClass, DupShape::AllUnique];
+
+/// One reproducible generated case: scenario coordinates plus the
+/// derivation seed. [`Case::build`] is a pure function of this value.
+#[derive(Clone, Copy, Debug)]
+pub struct Case {
+    /// Seed for every random draw inside [`Case::build`].
+    pub seed: u64,
+    pub family: Family,
+    pub limits: LimitPattern,
+    pub dup: DupShape,
+    /// Distinct device specs (≥ 1; ignored for `SingleClass`).
+    pub distinct: usize,
+    /// Maximum multiplicity per spec (≥ 1).
+    pub max_dup: usize,
+    /// Workload size `T` (≥ 2).
+    pub t: usize,
+}
+
+/// Grow uppers uniformly until `Σ min(U, T) >= T` (uniform growth keeps
+/// duplicated specs identical, preserving class structure).
+fn repair_uppers(upper: &mut [usize], t: usize) {
+    while upper.iter().map(|&u| u.min(t)).sum::<usize>() < t {
+        for u in upper.iter_mut() {
+            *u += 1;
+        }
+    }
+}
+
+impl Case {
+    /// Materialize the instance (always valid: limits are repaired to
+    /// feasibility after the pattern is imposed).
+    pub fn build(&self) -> Instance {
+        let mut rng = Rng::new(self.seed);
+        let t = self.t.max(2);
+        let copies: Vec<usize> = match self.dup {
+            DupShape::SingleClass => vec![2 + rng.index(self.max_dup.max(2))],
+            DupShape::AllUnique => vec![1; self.distinct.max(1)],
+            DupShape::Random => (0..self.distinct.max(1))
+                .map(|_| 1 + rng.index(self.max_dup.max(1)))
+                .collect(),
+        };
+        let mut costs = Vec::new();
+        let mut lower = Vec::new();
+        let mut upper = Vec::new();
+        for &m in &copies {
+            let cost = sample_cost(self.family, t, &mut rng);
+            let (l, u) = match self.limits {
+                LimitPattern::Unlimited => (0, t),
+                LimitPattern::UnlimitedWithLower => (rng.index(t / 2 + 1), t),
+                LimitPattern::UpperOnly => (0, 1 + rng.index(t)),
+                LimitPattern::Both => {
+                    let u = 1 + rng.index(t);
+                    (rng.index(u / 2 + 1), u)
+                }
+                LimitPattern::TightLower => {
+                    let u = 1 + rng.index(t);
+                    (rng.index(u + 1), u)
+                }
+                // Placeholder; the composition below overwrites both.
+                LimitPattern::Pinned => (0, 0),
+            };
+            for _ in 0..m {
+                costs.push(cost.clone());
+                lower.push(l);
+                upper.push(u);
+            }
+        }
+        let n = costs.len();
+        match self.limits {
+            LimitPattern::Pinned => {
+                // Pin every load **per spec** (copies share the value), so
+                // pinned classes keep their multiplicity and dedup shapes
+                // stay meaningful. Walk Σ mₛ·xₛ up to T in whole-spec
+                // steps; the sub-multiplicity remainder tops up the first
+                // `r` members of one spec (that spec splits into at most
+                // two pinned classes).
+                let k = copies.len();
+                let mut x = vec![0usize; k];
+                let mut r = t;
+                let start = rng.index(k);
+                loop {
+                    let mut progressed = false;
+                    for off in 0..k {
+                        let s = (start + off) % k;
+                        if x[s] < t && copies[s] <= r {
+                            x[s] += 1;
+                            r -= copies[s];
+                            progressed = true;
+                        }
+                    }
+                    if !progressed {
+                        break;
+                    }
+                }
+                // Per-device expansion (specs were pushed contiguously).
+                let mut loads = Vec::with_capacity(n);
+                for (s, &m) in copies.iter().enumerate() {
+                    for _ in 0..m {
+                        loads.push(x[s]);
+                    }
+                }
+                if r > 0 {
+                    // Some spec has headroom and multiplicity > r (else the
+                    // loop above would have progressed); bump its first r
+                    // members by one.
+                    let mut off = 0usize;
+                    for (s, &m) in copies.iter().enumerate() {
+                        if x[s] < t && m > r {
+                            for d in 0..r {
+                                loads[off + d] += 1;
+                            }
+                            r = 0;
+                            break;
+                        }
+                        off += m;
+                    }
+                    debug_assert_eq!(r, 0, "remainder spec must exist");
+                }
+                lower = loads.clone();
+                upper = loads;
+            }
+            LimitPattern::TightLower => {
+                repair_uppers(&mut upper, t);
+                for (l, &u) in lower.iter_mut().zip(upper.iter()) {
+                    *l = (*l).min(u);
+                }
+                // Force ΣL == T under the caps (round-robin: every full
+                // cycle makes progress while capacity remains).
+                let mut sum: usize = lower.iter().sum();
+                let mut i = 0usize;
+                while sum > t {
+                    if lower[i % n] > 0 {
+                        lower[i % n] -= 1;
+                        sum -= 1;
+                    }
+                    i += 1;
+                }
+                while sum < t {
+                    if lower[i % n] < upper[i % n].min(t) {
+                        lower[i % n] += 1;
+                        sum += 1;
+                    }
+                    i += 1;
+                }
+            }
+            _ => {
+                // Classic feasibility repair (same shape the historical
+                // per-test generators used).
+                let mut i = 0usize;
+                while lower.iter().sum::<usize>() > t {
+                    if lower[i % n] > 0 {
+                        lower[i % n] -= 1;
+                    }
+                    i += 1;
+                }
+                repair_uppers(&mut upper, t);
+            }
+        }
+        Instance::new(t, lower, upper, costs).expect("generated instance is valid")
+    }
+}
+
+/// [`Gen`] over [`Case`]s for one scenario cell; shrinking walks toward
+/// fewer specs / smaller workloads / weaker duplication.
+#[derive(Clone, Copy, Debug)]
+pub struct CaseGen {
+    pub family: Family,
+    pub limits: LimitPattern,
+    pub dup: DupShape,
+    pub max_distinct: usize,
+    pub max_dup: usize,
+    pub max_t: usize,
+}
+
+impl Gen<Case> for CaseGen {
+    fn generate(&self, rng: &mut Rng) -> Case {
+        Case {
+            seed: rng.next_u64(),
+            family: self.family,
+            limits: self.limits,
+            dup: self.dup,
+            distinct: 1 + rng.index(self.max_distinct.max(1)),
+            max_dup: self.max_dup.max(1),
+            t: 2 + rng.index(self.max_t.max(3) - 2),
+        }
+    }
+
+    fn shrink(&self, c: &Case) -> Vec<Case> {
+        let mut out = Vec::new();
+        if c.distinct > 1 {
+            out.push(Case { distinct: c.distinct - 1, ..*c });
+        }
+        if c.t > 2 {
+            out.push(Case { t: c.t / 2, ..*c });
+            out.push(Case { t: c.t - 1, ..*c });
+        }
+        if c.max_dup > 1 {
+            out.push(Case { max_dup: 1, ..*c });
+        }
+        out
+    }
+}
+
+/// A prime shard count that does not divide `n` — the
+/// degenerate-remainder partition the shard tests must cover.
+pub fn coprime_shards(n: usize) -> usize {
+    for p in [3usize, 5, 7, 11, 13] {
+        if n % p != 0 {
+            return p;
+        }
+    }
+    17
+}
+
+fn assert_fleet_bits_equal(
+    a: &FleetInstance,
+    b: &FleetInstance,
+    what: &str,
+) -> Result<(), String> {
+    if a.digest() != b.digest() {
+        return Err(format!("{what}: digest mismatch"));
+    }
+    if a.n_classes() != b.n_classes() || a.n_devices() != b.n_devices() {
+        return Err(format!(
+            "{what}: shape mismatch ({}/{} classes, {}/{} devices)",
+            a.n_classes(),
+            b.n_classes(),
+            a.n_devices(),
+            b.n_devices()
+        ));
+    }
+    for (i, (ca, cb)) in a.classes().iter().zip(b.classes()).enumerate() {
+        if ca.cost != cb.cost
+            || ca.lower != cb.lower
+            || ca.upper != cb.upper
+            || ca.members != cb.members
+        {
+            return Err(format!("{what}: class {i} differs"));
+        }
+    }
+    Ok(())
+}
+
+/// The differential oracle: prove shard ≡ class ≡ flat for one solver on
+/// one instance (see the module docs for the exact contract). `seed`
+/// feeds the same RNG stream into every path so seeded solvers (the
+/// `random` baseline) must reproduce bit-for-bit.
+pub fn check_shard_class_flat(
+    inst: &Instance,
+    name: &str,
+    shard_counts: &[usize],
+    seed: u64,
+) -> Result<(), String> {
+    let registry = SolverRegistry::with_defaults(seed);
+    let solver = registry.resolve(name).map_err(|e| e.to_string())?;
+    let fleet = FleetInstance::from_flat(inst).map_err(|e| e.to_string())?;
+
+    // (a) Structural: every sharded build is bit-identical to from_flat.
+    let mut sharded: Vec<FleetInstance> = Vec::with_capacity(shard_counts.len());
+    for &s in shard_counts {
+        let (built, stats) = shard::build_sharded(inst, s)
+            .map_err(|e| format!("build_sharded({s}): {e}"))?;
+        if stats.shards != s.max(1) {
+            return Err(format!(
+                "build_sharded({s}): reported {} shards",
+                stats.shards
+            ));
+        }
+        assert_fleet_bits_equal(&built, &fleet, &format!("shards={s}"))?;
+        sharded.push(built);
+    }
+
+    // (b)+(c)+(d) Behavioral.
+    let stream = seed ^ 0x5EED;
+    let flat_res = solver.solve_flat_with_rng(inst, &mut Rng::new(stream));
+    let class_res = solver.solve_with_rng(&fleet, &mut Rng::new(stream));
+    match (flat_res, class_res) {
+        (Err(_), Err(_)) => {
+            // Error parity: every sharded path must reject too.
+            for (built, &s) in sharded.iter().zip(shard_counts) {
+                if solver.solve_with_rng(built, &mut Rng::new(stream)).is_ok() {
+                    return Err(format!(
+                        "{name}: sharded fleet (shards={s}) solved an \
+                         instance both other paths reject"
+                    ));
+                }
+            }
+            Ok(())
+        }
+        (Ok(_), Err(e)) => {
+            Err(format!("{name}: class path failed where flat solved: {e}"))
+        }
+        (Err(e), Ok(_)) => {
+            Err(format!("{name}: flat path failed where class solved: {e}"))
+        }
+        (Ok(flat_sched), Ok(asg)) => {
+            validate::check(inst, &flat_sched)
+                .map_err(|e| format!("{name}: flat infeasible: {e}"))?;
+            asg.check(&fleet)
+                .map_err(|e| format!("{name}: class-infeasible: {e}"))?;
+            let expanded = asg.expand(&fleet);
+            validate::check(inst, &expanded)
+                .map_err(|e| format!("{name}: expansion infeasible: {e}"))?;
+            let c_flat = validate::total_cost(inst, &flat_sched);
+            let c_class = validate::total_cost(inst, &expanded);
+            if solver.class_aware() {
+                // Class-aware cores may permute interchangeable devices;
+                // the contract is cost equality.
+                let tol = 1e-9 * c_flat.abs().max(1.0);
+                if (c_flat - c_class).abs() > tol {
+                    return Err(format!(
+                        "{name}: class cost {c_class} != flat cost {c_flat}"
+                    ));
+                }
+            } else {
+                // Flat-delegating adapters go through the identical code
+                // on the identical bits: schedule and cost bits must match.
+                if expanded != flat_sched {
+                    return Err(format!(
+                        "{name}: class expansion differs from the flat \
+                         schedule on a flat-delegating solver"
+                    ));
+                }
+                if c_class.to_bits() != c_flat.to_bits() {
+                    return Err(format!(
+                        "{name}: cost bits differ on a flat-delegating solver"
+                    ));
+                }
+            }
+            // Sharded ≡ class: identical input bits through identical code
+            // must give identical assignment and cost bits.
+            let c_asg = asg.total_cost(&fleet);
+            for (built, &s) in sharded.iter().zip(shard_counts) {
+                let asg_s = solver
+                    .solve_with_rng(built, &mut Rng::new(stream))
+                    .map_err(|e| {
+                        format!("{name}: sharded (shards={s}) failed: {e}")
+                    })?;
+                if asg_s != asg {
+                    return Err(format!(
+                        "{name}: sharded assignment (shards={s}) differs \
+                         from the class assignment"
+                    ));
+                }
+                if asg_s.total_cost(built).to_bits() != c_asg.to_bits() {
+                    return Err(format!(
+                        "{name}: sharded cost bits (shards={s}) differ"
+                    ));
+                }
+                if asg_s.expand(built) != expanded {
+                    return Err(format!(
+                        "{name}: sharded expansion (shards={s}) differs"
+                    ));
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_cases_are_always_valid() {
+        for (fi, &family) in ALL_FAMILIES.iter().enumerate() {
+            for (li, &limits) in ALL_LIMIT_PATTERNS.iter().enumerate() {
+                for (di, &dup) in ALL_DUP_SHAPES.iter().enumerate() {
+                    for rep in 0..5u64 {
+                        let case = Case {
+                            seed: 0xCA5E
+                                ^ ((fi as u64) << 8)
+                                ^ ((li as u64) << 16)
+                                ^ ((di as u64) << 24)
+                                ^ rep,
+                            family,
+                            limits,
+                            dup,
+                            distinct: 3,
+                            max_dup: 3,
+                            t: 3 + (rep as usize) * 2,
+                        };
+                        let inst = case.build();
+                        inst.validate().unwrap_or_else(|e| {
+                            panic!("invalid instance from {case:?}: {e}")
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn build_is_a_pure_function_of_the_case() {
+        let case = Case {
+            seed: 0xF00D,
+            family: Family::Tabulated,
+            limits: LimitPattern::Both,
+            dup: DupShape::Random,
+            distinct: 3,
+            max_dup: 3,
+            t: 9,
+        };
+        let a = case.build();
+        let b = case.build();
+        assert_eq!(a.tasks, b.tasks);
+        assert_eq!(a.lower, b.lower);
+        assert_eq!(a.upper, b.upper);
+        assert_eq!(a.costs, b.costs);
+    }
+
+    #[test]
+    fn tight_lower_forces_the_whole_schedule() {
+        for seed in 0..10u64 {
+            let case = Case {
+                seed,
+                family: Family::Affine,
+                limits: LimitPattern::TightLower,
+                dup: DupShape::Random,
+                distinct: 3,
+                max_dup: 2,
+                t: 8,
+            };
+            let inst = case.build();
+            assert_eq!(inst.lower.iter().sum::<usize>(), inst.tasks);
+        }
+    }
+
+    #[test]
+    fn pinned_fixes_every_load() {
+        for seed in 20..30u64 {
+            let case = Case {
+                seed,
+                family: Family::Concave,
+                limits: LimitPattern::Pinned,
+                dup: DupShape::Random,
+                distinct: 3,
+                max_dup: 2,
+                t: 7,
+            };
+            let inst = case.build();
+            assert_eq!(inst.lower, inst.upper);
+            assert_eq!(inst.lower.iter().sum::<usize>(), inst.tasks);
+        }
+    }
+
+    #[test]
+    fn pinned_single_class_keeps_multiplicity() {
+        // Per-spec pinning: a single-spec fleet splits into at most two
+        // pinned classes (base load + a one-task remainder run), so the
+        // Pinned × SingleClass cell genuinely exercises multiplicity > 1.
+        let mut saw_multiplicity = false;
+        for seed in 0..20u64 {
+            let case = Case {
+                seed,
+                family: Family::Affine,
+                limits: LimitPattern::Pinned,
+                dup: DupShape::SingleClass,
+                distinct: 1,
+                max_dup: 4,
+                t: 9,
+            };
+            let fleet = FleetInstance::from_flat(&case.build()).unwrap();
+            assert!(fleet.n_classes() <= 2, "{} classes", fleet.n_classes());
+            if fleet.classes().iter().any(|c| c.members.len() > 1) {
+                saw_multiplicity = true;
+            }
+        }
+        assert!(saw_multiplicity, "pinned single-class never deduped");
+    }
+
+    #[test]
+    fn unlimited_with_lower_keeps_mardecun_applicable() {
+        use crate::sched::mardecun;
+        let mut saw_lower = false;
+        for seed in 0..15u64 {
+            let case = Case {
+                seed,
+                family: Family::Concave,
+                limits: LimitPattern::UnlimitedWithLower,
+                dup: DupShape::Random,
+                distinct: 3,
+                max_dup: 2,
+                t: 10,
+            };
+            let inst = case.build();
+            saw_lower |= inst.lower.iter().any(|&l| l > 0);
+            // Effectively unlimited after the §5.2 transform: MarDecUn
+            // must solve, not reject.
+            mardecun::solve(&inst).unwrap_or_else(|e| {
+                panic!("mardecun rejected an unlimited-with-lower case: {e}")
+            });
+        }
+        assert!(saw_lower, "pattern never produced a nonzero lower limit");
+    }
+
+    #[test]
+    fn dup_shapes_control_the_class_structure() {
+        let base = Case {
+            seed: 42,
+            family: Family::Affine,
+            limits: LimitPattern::UpperOnly,
+            dup: DupShape::SingleClass,
+            distinct: 4,
+            max_dup: 4,
+            t: 10,
+        };
+        let single = FleetInstance::from_flat(&base.build()).unwrap();
+        assert_eq!(single.n_classes(), 1, "SingleClass must dedup to one");
+        assert!(single.n_devices() >= 2);
+
+        let unique = Case { dup: DupShape::AllUnique, ..base };
+        let f = FleetInstance::from_flat(&unique.build()).unwrap();
+        assert_eq!(f.n_classes(), f.n_devices(), "AllUnique must not dedup");
+    }
+
+    #[test]
+    fn coprime_shards_never_divides() {
+        for n in 1..200usize {
+            let p = coprime_shards(n);
+            assert!(n % p != 0, "{p} divides {n}");
+        }
+    }
+
+    #[test]
+    fn harness_passes_on_a_known_good_solver_and_catches_divergence() {
+        let case = Case {
+            seed: 7,
+            family: Family::Affine,
+            limits: LimitPattern::Both,
+            dup: DupShape::Random,
+            distinct: 3,
+            max_dup: 3,
+            t: 9,
+        };
+        let inst = case.build();
+        let n = inst.n();
+        for name in ["uniform", "marco", "auto", "random"] {
+            check_shard_class_flat(
+                &inst,
+                name,
+                &[1, n, coprime_shards(n), n + 3],
+                case.seed,
+            )
+            .unwrap_or_else(|e| panic!("{e}"));
+        }
+        assert!(
+            check_shard_class_flat(&inst, "no-such-solver", &[1], 7).is_err()
+        );
+    }
+}

@@ -9,6 +9,12 @@
 //! The scheduler test-suite uses this to check, over thousands of random
 //! instances, that every specialized algorithm matches the (MC)²MKP DP and
 //! the brute-force oracle.
+//!
+//! [`instances`] supplies the shared scenario-diverse instance generator
+//! (Table 2 cost families × adversarial limit patterns × duplication
+//! shapes) and the shard ≡ class ≡ flat differential harness.
+
+pub mod instances;
 
 use crate::util::rng::Rng;
 

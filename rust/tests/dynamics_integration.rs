@@ -1,6 +1,11 @@
 //! Integration tests for dynamic fleet behaviour (availability churn,
 //! cost drift, dropout) end-to-end through the FL server.
-//! Require artifacts (skipped otherwise).
+//!
+//! All tests are `#[ignore]`d with an explicit reason (see
+//! fl_integration.rs): they need PJRT artifacts plus a real xla backend,
+//! which the offline build does not have. The sim-backend equivalents in
+//! tests/coordinator_roundloop.rs and tests/store_recovery.rs cover the
+//! same dynamics paths without artifacts.
 
 use std::path::Path;
 
@@ -30,6 +35,7 @@ fn cfg(rounds: usize) -> TrainConfig {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (make artifacts) + a real xla backend; the vendored offline stub cannot execute HLO"]
 fn dropout_wastes_energy_but_training_survives() {
     if !artifacts_present() {
         return;
@@ -48,6 +54,7 @@ fn dropout_wastes_energy_but_training_survives() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (make artifacts) + a real xla backend; the vendored offline stub cannot execute HLO"]
 fn churn_produces_empty_and_partial_rounds() {
     if !artifacts_present() {
         return;
@@ -68,6 +75,7 @@ fn churn_produces_empty_and_partial_rounds() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (make artifacts) + a real xla backend; the vendored offline stub cannot execute HLO"]
 fn drift_changes_round_energy_over_time() {
     if !artifacts_present() {
         return;
@@ -96,6 +104,7 @@ fn drift_changes_round_energy_over_time() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (make artifacts) + a real xla backend; the vendored offline stub cannot execute HLO"]
 fn mobile_preset_runs() {
     if !artifacts_present() {
         return;

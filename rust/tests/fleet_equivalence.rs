@@ -5,6 +5,11 @@
 //! class-aware code paths genuinely differ from the flat ones), for every
 //! registered solver.
 //!
+//! Instances come from the shared testkit generator
+//! (`fedzero::testkit::instances`); the sibling suite
+//! `tests/shard_equivalence.rs` extends the same contract to the sharded
+//! build pipeline with strict bit-level checks.
+//!
 //! Regime-specialized solvers are compared on instances inside their
 //! Table 2 scenario (outside it both paths are merely "feasible", with no
 //! cost contract to compare); arbitrary-regime solvers and all baselines
@@ -14,95 +19,21 @@ use fedzero::sched::costs::CostFn;
 use fedzero::sched::fleet::FleetInstance;
 use fedzero::sched::instance::Instance;
 use fedzero::sched::{validate, Solver, SolverRegistry};
+use fedzero::testkit::instances::{Case, DupShape, Family, LimitPattern};
 use fedzero::util::rng::Rng;
 
-#[derive(Clone, Copy, Debug)]
-enum Family {
-    Convex,
-    Affine,
-    Concave,
-    Tabulated,
-}
-
-fn sample_cost(family: Family, t: usize, rng: &mut Rng) -> CostFn {
-    match family {
-        Family::Convex => CostFn::Quadratic {
-            fixed: rng.range_f64(0.0, 2.0),
-            a: rng.range_f64(0.01, 1.0),
-            b: rng.range_f64(0.0, 3.0),
-        },
-        Family::Affine => CostFn::Affine {
-            fixed: rng.range_f64(0.0, 2.0),
-            per_task: rng.range_f64(0.1, 4.0),
-        },
-        Family::Concave => {
-            if rng.bool(0.5) {
-                CostFn::PowerLaw {
-                    fixed: rng.range_f64(0.0, 1.0),
-                    scale: rng.range_f64(0.3, 4.0),
-                    exponent: rng.range_f64(0.2, 0.95),
-                }
-            } else {
-                CostFn::Logarithmic {
-                    fixed: rng.range_f64(0.0, 1.0),
-                    scale: rng.range_f64(0.3, 4.0),
-                }
-            }
-        }
-        Family::Tabulated => {
-            let mut values = vec![0.0];
-            let mut acc = 0.0;
-            for _ in 1..=t {
-                acc += rng.range_f64(0.0, 3.0);
-                values.push((acc + rng.normal() * 0.5).max(0.0));
-            }
-            CostFn::Tabulated { first: 0, values }
-        }
+/// Generate a duplication-heavy instance for one sweep seed.
+fn duplicated_instance(seed: u64, family: Family, limits: LimitPattern) -> Instance {
+    Case {
+        seed,
+        family,
+        limits,
+        dup: DupShape::Random,
+        distinct: 3,
+        max_dup: 4,
+        t: 6 + (seed as usize % 19),
     }
-}
-
-/// Build an instance of `distinct` device specs, each replicated up to
-/// `max_dup` times (identical `(C, L, U)` triples ⇒ classes with
-/// multiplicity), repaired to feasibility.
-fn duplicated_instance(
-    seed: u64,
-    family: Family,
-    distinct: usize,
-    max_dup: usize,
-    max_t: usize,
-    unlimited: bool,
-) -> Instance {
-    let mut rng = Rng::new(seed);
-    let t = 6 + rng.index(max_t.saturating_sub(5).max(1));
-    let mut costs = Vec::new();
-    let mut lower = Vec::new();
-    let mut upper = Vec::new();
-    for _ in 0..1 + rng.index(distinct) {
-        let cost = sample_cost(family, t, &mut rng);
-        let u = if unlimited { t } else { 1 + rng.index(t) };
-        let l = rng.index((u / 2).max(1));
-        for _ in 0..1 + rng.index(max_dup) {
-            costs.push(cost.clone());
-            lower.push(l);
-            upper.push(u);
-        }
-    }
-    // Repair: shrink lowers until ΣL <= T, grow uppers until ΣU >= T.
-    // (Uniform growth keeps duplicated specs identical, preserving dedup.)
-    let n = costs.len();
-    let mut i = 0;
-    while lower.iter().sum::<usize>() > t {
-        if lower[i % n] > 0 {
-            lower[i % n] -= 1;
-        }
-        i += 1;
-    }
-    while upper.iter().map(|&u| u.min(t)).sum::<usize>() < t {
-        for u in upper.iter_mut() {
-            *u += 1;
-        }
-    }
-    Instance::new(t, lower, upper, costs).expect("generated instance valid")
+    .build()
 }
 
 /// Assert flat-path and class-path solves agree for every named solver.
@@ -153,7 +84,7 @@ const REGIME_FREE: [&str; 8] = [
 #[test]
 fn convex_instances_marin() {
     for seed in 0..12u64 {
-        let inst = duplicated_instance(seed, Family::Convex, 3, 4, 30, false);
+        let inst = duplicated_instance(seed, Family::Convex, LimitPattern::Both);
         assert_equivalent(&inst, &REGIME_FREE, seed);
         assert_equivalent(&inst, &["marin"], seed);
     }
@@ -162,7 +93,7 @@ fn convex_instances_marin() {
 #[test]
 fn affine_instances_marin_marco() {
     for seed in 20..32u64 {
-        let inst = duplicated_instance(seed, Family::Affine, 3, 4, 30, false);
+        let inst = duplicated_instance(seed, Family::Affine, LimitPattern::Both);
         assert_equivalent(&inst, &REGIME_FREE, seed);
         assert_equivalent(&inst, &["marin", "marco"], seed);
     }
@@ -171,7 +102,14 @@ fn affine_instances_marin_marco() {
 #[test]
 fn concave_unlimited_instances_mardecun_mardec() {
     for seed in 40..52u64 {
-        let inst = duplicated_instance(seed, Family::Concave, 3, 4, 24, true);
+        // UnlimitedWithLower: U = T with random nonzero lowers — still
+        // effectively unlimited after the §5.2 transform, so MarDecUn's
+        // remove/restore arithmetic is exercised with L > 0.
+        let inst = duplicated_instance(
+            seed,
+            Family::Concave,
+            LimitPattern::UnlimitedWithLower,
+        );
         assert_equivalent(&inst, &REGIME_FREE, seed);
         assert_equivalent(&inst, &["mardecun", "mardec"], seed);
     }
@@ -180,7 +118,7 @@ fn concave_unlimited_instances_mardecun_mardec() {
 #[test]
 fn concave_limited_instances_mardec() {
     for seed in 60..72u64 {
-        let inst = duplicated_instance(seed, Family::Concave, 3, 4, 24, false);
+        let inst = duplicated_instance(seed, Family::Concave, LimitPattern::Both);
         assert_equivalent(&inst, &REGIME_FREE, seed);
         assert_equivalent(&inst, &["mardec"], seed);
     }
@@ -190,7 +128,16 @@ fn concave_limited_instances_mardec() {
 fn arbitrary_instances_with_bruteforce_oracle() {
     for seed in 80..88u64 {
         // Tiny sizes: the oracle is exponential.
-        let inst = duplicated_instance(seed, Family::Tabulated, 2, 2, 9, false);
+        let inst = Case {
+            seed,
+            family: Family::Tabulated,
+            limits: LimitPattern::Both,
+            dup: DupShape::Random,
+            distinct: 2,
+            max_dup: 2,
+            t: 4 + (seed as usize % 5),
+        }
+        .build();
         assert_equivalent(&inst, &REGIME_FREE, seed);
         assert_equivalent(&inst, &["bruteforce"], seed);
     }
@@ -202,7 +149,7 @@ fn duplication_actually_produces_multiplicity_classes() {
     // must dedup below its device count, or the whole suite tests nothing.
     let mut seen_dedup = false;
     for seed in 0..12u64 {
-        let inst = duplicated_instance(seed, Family::Affine, 3, 4, 30, false);
+        let inst = duplicated_instance(seed, Family::Affine, LimitPattern::Both);
         let fleet = FleetInstance::from_flat(&inst).unwrap();
         assert!(fleet.n_classes() <= fleet.n_devices());
         if fleet.n_classes() < fleet.n_devices() {

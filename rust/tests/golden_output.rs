@@ -4,10 +4,16 @@
 //! the CI recovery diff both depend on these being identical across runs
 //! and platforms, so any ordering change must be a conscious one.
 
+use fedzero::coordinator::{
+    Coordinator, CoordinatorConfig, ManagedDevice, SimBackend,
+};
 use fedzero::metrics::{MetricsHub, RoundLog};
+use fedzero::sched::instance::Instance;
 use fedzero::sched::solver::SolverRegistry;
-use fedzero::store::journal::JournalEntry;
+use fedzero::store::journal::{campaign_digest, JournalEntry};
 use fedzero::store::sink::row_to_json;
+use fedzero::store::CampaignStore;
+use fedzero::util::json::Json;
 
 #[test]
 fn registry_describe_order_is_pinned() {
@@ -109,5 +115,86 @@ fn round_row_encoding_is_byte_stable() {
         "{\"energy_j\":12,\"loss\":0.5,\"participants\":3,\
          \"policy\":\"auto\",\"round\":2,\"sched_time_s\":0,\"tasks\":8,\
          \"train_time_s\":0}"
+    );
+}
+
+// ---- sharded build: digests stay timing-free and shard-count-free ------
+
+fn paper_fleet() -> Vec<ManagedDevice> {
+    let inst = Instance::paper_example(5);
+    (0..inst.n())
+        .map(|i| {
+            ManagedDevice::abstract_resource(
+                i,
+                inst.costs[i].clone(),
+                inst.lower[i],
+                inst.upper[i],
+            )
+        })
+        .collect()
+}
+
+/// Run a stored sim campaign with the given shard count; return its
+/// journal entries and final metrics summary.
+fn stored_campaign(dir: &std::path::Path, shards: usize) -> (Vec<JournalEntry>, String) {
+    let _ = std::fs::remove_dir_all(dir);
+    let cfg = CoordinatorConfig {
+        rounds: 5,
+        tasks_per_round: 5,
+        algo: "auto".into(),
+        max_share: 1.0,
+        shards,
+        ..CoordinatorConfig::default()
+    };
+    let mut coord =
+        Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+    let meta = Json::obj(vec![("kind", Json::Str("golden".into()))]);
+    let store = CampaignStore::create(dir, meta, coord.snapshot_json()).unwrap();
+    coord.attach_store(store).unwrap();
+    coord.run().unwrap();
+    let summary = coord.metrics().summary();
+    let contents = CampaignStore::read(dir).unwrap();
+    let _ = std::fs::remove_dir_all(dir);
+    (contents.entries, summary)
+}
+
+#[test]
+fn sharded_campaign_journal_is_bit_identical_to_unsharded() {
+    // The shards knob is a pure build-time optimization: the journal — and
+    // therefore every replay/recovery digest — must be byte-for-byte
+    // independent of it, and merge timings must never leak into entries.
+    let base = std::env::temp_dir().join("fedzero_golden_shards");
+    let (plain, plain_summary) = stored_campaign(&base.join("s1"), 1);
+    let (sharded, sharded_summary) = stored_campaign(&base.join("s3"), 3);
+    assert_eq!(plain.len(), 5);
+    assert_eq!(campaign_digest(&plain), campaign_digest(&sharded));
+    for (a, b) in plain.iter().zip(&sharded) {
+        // Everything except wall-clock timings must match to the bit.
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.solver, b.solver);
+        assert_eq!(a.digest, b.digest, "round {}", a.round);
+        assert_eq!(a.rng_after, b.rng_after, "round {}", a.round);
+        assert_eq!(a.row.loss.to_bits(), b.row.loss.to_bits());
+        assert_eq!(a.row.energy_j.to_bits(), b.row.energy_j.to_bits());
+        assert_eq!(a.row.participants, b.row.participants);
+        assert_eq!(a.row.tasks, b.row.tasks);
+        assert!(
+            !b.to_json().to_string().contains("shard"),
+            "journal lines must not carry shard/timing fields"
+        );
+    }
+    // The new metrics fields exist only on the sharded run — and only in
+    // metrics, never in the journal: 5 rounds × 3 shards.
+    assert!(
+        sharded_summary.contains("fleet_shards=15"),
+        "{sharded_summary}"
+    );
+    assert!(
+        sharded_summary.contains("shard_merge_ns="),
+        "{sharded_summary}"
+    );
+    assert!(
+        !plain_summary.contains("fleet_shards"),
+        "unsharded runs must not emit shard metrics: {plain_summary}"
     );
 }

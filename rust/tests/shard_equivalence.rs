@@ -1,0 +1,218 @@
+//! Differential proof of the sharded scheduling pipeline:
+//! **sharded ≡ class ≡ flat** for every registered solver.
+//!
+//! Structural half: for shard counts 1, `n` (all-singleton shards), a
+//! prime that does not divide the fleet, and `n + 3` (trailing empty
+//! shards), the merged fleet must be **bit-identical** to
+//! `FleetInstance::from_flat` — same digest, same class order, same
+//! member lists.
+//!
+//! Behavioral half: solving the sharded-built fleet must reproduce the
+//! class solve exactly (assignment + cost bits) and agree with the flat
+//! solve (bit-for-bit for flat-delegating solvers, cost-equal for
+//! class-aware cores); a path that rejects an instance must be rejected
+//! by every path. The shared oracle lives in
+//! `fedzero::testkit::instances::check_shard_class_flat`.
+//!
+//! The fuzz loop sweeps Table 2 cost families × adversarial limit
+//! patterns (tight lowers, pinned loads) × duplication shapes
+//! (single-class, all-unique, random), and keeps generating until every
+//! one of the 12 registered solvers has accumulated **≥ 200** seeded
+//! zero-divergence cases — the PR's acceptance bar.
+
+use std::collections::BTreeMap;
+
+use fedzero::runtime::pool;
+use fedzero::sched::fleet::FleetInstance;
+use fedzero::sched::instance::Instance;
+use fedzero::sched::{costs::CostFn, shard, SolverRegistry};
+use fedzero::testkit::instances::{
+    check_shard_class_flat, coprime_shards, Case, DupShape, Family, LimitPattern,
+};
+
+/// Every registered solver name — derived from the registry, not
+/// hand-maintained, so a newly registered solver automatically joins the
+/// fuzz (and must be classified by [`runs_on`], which panics on unknown
+/// names).
+fn all_solvers() -> Vec<&'static str> {
+    SolverRegistry::with_defaults(0).names()
+}
+
+/// Which scenario cells a solver joins the path-equivalence fuzz on.
+/// Regime-free solvers (the arbitrary-capable optima, the dispatcher,
+/// every baseline) run everywhere; regime-specialized solvers only where
+/// flat and class solves carry a cost contract (outside their regime the
+/// two paths are merely feasible and may legitimately diverge); the
+/// exhaustive oracle only on tiny instances.
+fn runs_on(name: &str, family: Family, tiny: bool) -> bool {
+    match name {
+        "auto" | "mc2mkp" | "uniform" | "random" | "proportional" | "greedy"
+        | "olar" => true,
+        "bruteforce" => tiny,
+        "marin" => matches!(family, Family::Convex | Family::Affine),
+        "marco" => matches!(family, Family::Affine),
+        "mardec" | "mardecun" => {
+            matches!(family, Family::Concave | Family::Affine)
+        }
+        other => panic!(
+            "solver '{other}' is registered but unclassified — add it to \
+             runs_on so the shard fuzz covers it"
+        ),
+    }
+}
+
+#[test]
+fn fuzz_shard_class_flat_equivalence_reaches_200_cases_per_solver() {
+    const TARGET: usize = 200;
+    let solvers = all_solvers();
+    let mut counts: BTreeMap<&str, usize> =
+        solvers.iter().map(|&s| (s, 0usize)).collect();
+    // Scenario cycle engineered so every solver's applicable combos recur
+    // often (marco is the rarest at 4-in-10).
+    let combos: [(Family, LimitPattern, DupShape); 10] = [
+        (Family::Convex, LimitPattern::Both, DupShape::Random),
+        (Family::Affine, LimitPattern::Unlimited, DupShape::SingleClass),
+        (Family::Concave, LimitPattern::UnlimitedWithLower, DupShape::Random),
+        (Family::Tabulated, LimitPattern::Both, DupShape::Random),
+        (Family::Affine, LimitPattern::UpperOnly, DupShape::Random),
+        (Family::Concave, LimitPattern::Both, DupShape::AllUnique),
+        (Family::Convex, LimitPattern::TightLower, DupShape::Random),
+        (Family::Affine, LimitPattern::Pinned, DupShape::SingleClass),
+        (
+            Family::Concave,
+            LimitPattern::UnlimitedWithLower,
+            DupShape::SingleClass,
+        ),
+        (Family::Affine, LimitPattern::Both, DupShape::Random),
+    ];
+    let mut case_idx: u64 = 0;
+    while counts.values().any(|&c| c < TARGET) {
+        assert!(
+            case_idx < 20_000,
+            "fuzz failed to reach {TARGET} cases/solver: {counts:?}"
+        );
+        let (family, limits, dup) = combos[(case_idx as usize) % combos.len()];
+        let case = Case {
+            seed: 0x51AD ^ case_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            family,
+            limits,
+            dup,
+            distinct: 3,
+            max_dup: 2,
+            t: 4 + (case_idx as usize % 5),
+        };
+        let inst = case.build();
+        let n = inst.n();
+        let tiny = n <= 4 && inst.tasks <= 8;
+        let shard_counts = [1usize, n, coprime_shards(n), n + 3];
+        for &name in &solvers {
+            if !runs_on(name, family, tiny) {
+                continue;
+            }
+            check_shard_class_flat(&inst, name, &shard_counts, case.seed)
+                .unwrap_or_else(|e| panic!("case {case:?}: {e}"));
+            *counts.get_mut(name).unwrap() += 1;
+        }
+        case_idx += 1;
+    }
+    for (name, c) in counts {
+        assert!(c >= TARGET, "{name}: only {c} zero-divergence cases");
+    }
+    println!("fuzz complete after {case_idx} generated instances");
+}
+
+fn affine(per_task: f64) -> CostFn {
+    CostFn::Affine { fixed: 0.0, per_task }
+}
+
+#[test]
+fn degenerate_shards_empty_single_class_all_unique() {
+    // Single class: every shard holds a slice of the same signature.
+    let n = 10;
+    let single = Instance::new(
+        8,
+        vec![0; n],
+        vec![8; n],
+        vec![affine(1.5); n],
+    )
+    .unwrap();
+    // All-unique: k = n, nothing fuses.
+    let unique = Instance::new(
+        8,
+        vec![0; n],
+        vec![8; n],
+        (0..n).map(|i| affine(1.0 + i as f64)).collect(),
+    )
+    .unwrap();
+    for inst in [&single, &unique] {
+        let flat = FleetInstance::from_flat(inst).unwrap();
+        // shards > n ⇒ trailing empty shards; shards = n ⇒ singletons;
+        // prime 7 ∤ 10 ⇒ uneven remainder.
+        for shards in [1usize, 7, n, n + 5] {
+            let (built, _) = shard::build_sharded(inst, shards).unwrap();
+            assert_eq!(built.digest(), flat.digest(), "shards={shards}");
+        }
+        for name in all_solvers() {
+            // Affine fleets: every solver is in-regime; the oracle is fine
+            // at n = 10, T = 8 thanks to its feasibility pruning.
+            check_shard_class_flat(inst, name, &[1, 7, n, n + 5], 0xD0_0D)
+                .unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+}
+
+#[test]
+fn parallel_driver_matches_sequential_sharding_at_scale() {
+    // 10⁴ devices in 16 interleaved classes: the scoped-thread driver and
+    // the sequential sharded build and the direct build all agree to the
+    // bit, for worker counts above, at, and below the shard count.
+    let n = 10_000;
+    let costs: Vec<CostFn> = (0..n).map(|i| affine(1.0 + (i % 16) as f64)).collect();
+    let inst = Instance::new(2 * n, vec![0; n], vec![4; n], costs).unwrap();
+    let flat = FleetInstance::from_flat(&inst).unwrap();
+    assert_eq!(flat.n_classes(), 16);
+    for (shards, workers) in [(8usize, 0usize), (8, 3), (13, 2), (64, 8)] {
+        let (seq, _) = shard::build_sharded(&inst, shards).unwrap();
+        let (par, stats) = pool::build_fleet_sharded(&inst, shards, workers).unwrap();
+        assert_eq!(stats.shards, shards);
+        assert_eq!(seq.digest(), flat.digest());
+        assert_eq!(par.digest(), flat.digest());
+    }
+}
+
+#[test]
+fn pinned_and_tight_lower_instances_survive_every_path() {
+    // The adversarial limit patterns: pinned loads (T' = 0 after the §5.2
+    // transform) and tight lower limits (schedule fully forced).
+    for (seed, limits) in [
+        (1u64, LimitPattern::Pinned),
+        (2, LimitPattern::Pinned),
+        (3, LimitPattern::TightLower),
+        (4, LimitPattern::TightLower),
+    ] {
+        for family in [Family::Affine, Family::Concave, Family::Convex] {
+            let case = Case {
+                seed: seed ^ 0xF1EE7,
+                family,
+                limits,
+                dup: DupShape::Random,
+                distinct: 3,
+                max_dup: 2,
+                t: 7,
+            };
+            let inst = case.build();
+            let n = inst.n();
+            for name in ["auto", "mc2mkp", "uniform", "random", "proportional",
+                "greedy", "olar"]
+            {
+                check_shard_class_flat(
+                    &inst,
+                    name,
+                    &[1, n, coprime_shards(n)],
+                    case.seed,
+                )
+                .unwrap_or_else(|e| panic!("{limits:?}/{family:?}: {e}"));
+            }
+        }
+    }
+}
