@@ -254,6 +254,7 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "log-ring", help: "bound the in-memory round log to this many rows (0 = unbounded)", takes_value: true, default: None },
                     OptSpec { name: "dynamics", help: "fleet dynamics: none | mobile (churn, drift, dropout)", takes_value: true, default: Some("none") },
                     OptSpec { name: "shards", help: "per-round instance-build shards (concurrent class dedup; schedules are bit-for-bit identical for any value)", takes_value: true, default: Some("1") },
+                    OptSpec { name: "pipeline", help: "overlap next-round scheduling with training: on | off (campaigns are bit-for-bit identical either way)", takes_value: true, default: Some("off") },
                     OptSpec { name: "round-sleep-ms", help: "sleep between rounds (crash-recovery testing; sim only)", takes_value: true, default: Some("0") },
                 ],
                 positional: vec![],
@@ -364,6 +365,17 @@ mod tests {
         assert_eq!(p.get_explicit("shards"), None);
         let p = app.parse(&args(&["train", "--shards=4"])).unwrap();
         assert_eq!(p.get_parse_explicit::<usize>("shards").unwrap(), Some(4));
+    }
+
+    #[test]
+    fn pipeline_flag_parses_on_train() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["train", "--backend", "sim"])).unwrap();
+        assert_eq!(p.get("pipeline"), Some("off"), "default");
+        assert_eq!(p.get_explicit("pipeline"), None);
+        let p = app.parse(&args(&["train", "--pipeline", "on"])).unwrap();
+        assert_eq!(p.get("pipeline"), Some("on"));
+        assert_eq!(p.get_explicit("pipeline"), Some("on"));
     }
 
     #[test]

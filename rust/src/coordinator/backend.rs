@@ -5,6 +5,7 @@
 //! runtimes plug in the same way.
 
 use crate::error::Result;
+use crate::runtime::pool;
 use crate::sched::instance::{Instance, Schedule};
 use crate::util::json::Json;
 
@@ -63,6 +64,34 @@ pub trait RoundBackend {
     /// until [`RoundBackend::aggregate`].
     fn train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>>;
 
+    /// Start the round's training **without blocking** — the seam the
+    /// pipelined coordinator overlaps against: between `begin_train` and
+    /// [`RoundBackend::finish_train`] it speculatively runs the *next*
+    /// round's Scheduling on the coordinator thread. Returns whether an
+    /// overlap window actually opened (`true` = training proceeds while
+    /// the coordinator keeps working, so speculation is free). The
+    /// default does nothing and returns `false` — training happens
+    /// synchronously in `finish_train`, and the coordinator skips
+    /// speculation rather than paying next-round Scheduling up front for
+    /// zero overlap — so existing backends stay correct and cost-neutral
+    /// without changes. Backends with real device-side latency kick their
+    /// work off here (e.g. [`SimBackend`] with a simulated round latency
+    /// runs it on a [`crate::runtime::pool::BackgroundTask`]).
+    fn begin_train(&mut self, plan: &RoundPlan) -> Result<bool> {
+        let _ = plan;
+        Ok(false)
+    }
+
+    /// Complete the training started by [`RoundBackend::begin_train`];
+    /// identical contract to [`RoundBackend::train`] (one outcome per
+    /// surviving assignment). The default falls back to the blocking
+    /// `train`, so `begin_train` + `finish_train` is always
+    /// outcome-equivalent to a single `train` call — which is what keeps
+    /// pipelined and serial campaigns bit-for-bit identical.
+    fn finish_train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+        self.train(plan)
+    }
+
     /// Fold the updates from the last `train` call into the global model.
     fn aggregate(&mut self) -> Result<()>;
 
@@ -93,6 +122,18 @@ pub trait BackendState {
 pub struct SimBackend {
     rounds_aggregated: usize,
     pending: usize,
+    /// Simulated wall-clock cost of one training leg. Zero (the default)
+    /// keeps training inline and instantaneous; non-zero makes
+    /// `begin_train` run it on a background thread for `train_delay`, so
+    /// the pipelined coordinator has a real window to overlap — what the
+    /// `fleet_scale` pipeline bench and overlap tests drive.
+    train_delay: std::time::Duration,
+    /// Training leg started by `begin_train`, awaiting `finish_train`.
+    inflight: Option<pool::BackgroundTask<Vec<DeviceOutcome>>>,
+    /// Outcomes computed eagerly by `begin_train` when no delay is
+    /// configured: the sim "trains" instantly, so the whole leg genuinely
+    /// completes inside the overlap window without needing a thread.
+    staged: Option<Vec<DeviceOutcome>>,
 }
 
 impl SimBackend {
@@ -101,16 +142,25 @@ impl SimBackend {
         Self::default()
     }
 
+    /// A backend whose training legs take `delay` of wall-clock time,
+    /// running on a background thread between `begin_train` and
+    /// `finish_train`. Outcomes are identical to the instant backend —
+    /// the delay is pure latency, never a result change.
+    pub fn with_train_delay(delay: std::time::Duration) -> Self {
+        Self { train_delay: delay, ..Self::default() }
+    }
+
     /// Rounds aggregated so far.
     pub fn rounds_aggregated(&self) -> usize {
         self.rounds_aggregated
     }
-}
 
-impl RoundBackend for SimBackend {
-    fn train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
-        let outcomes = plan
-            .assignments
+    /// The deterministic outcome set for a plan: energy read off the
+    /// plan's own (drift-inclusive) slot costs, loss a decaying proxy of
+    /// the aggregation count. Pure, so the background leg computes the
+    /// exact bits the inline leg would.
+    fn outcomes_for(plan: &RoundPlan, rounds_aggregated: usize) -> Vec<DeviceOutcome> {
+        plan.assignments
             .iter()
             .map(|a| {
                 // The instance's slot cost already includes drift (the
@@ -124,12 +174,51 @@ impl RoundBackend for SimBackend {
                     tasks: a.tasks,
                     energy_j,
                     sim_time_s: 0.0,
-                    mean_loss: 1.0 / (1.0 + self.rounds_aggregated as f64),
+                    mean_loss: 1.0 / (1.0 + rounds_aggregated as f64),
                 }
             })
-            .collect();
+            .collect()
+    }
+}
+
+impl RoundBackend for SimBackend {
+    fn train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+        let outcomes = Self::outcomes_for(plan, self.rounds_aggregated);
         self.pending = plan.assignments.len();
         Ok(outcomes)
+    }
+
+    fn begin_train(&mut self, plan: &RoundPlan) -> Result<bool> {
+        if self.train_delay.is_zero() {
+            // Instant training: the leg completes right here, which makes
+            // reporting an open overlap window honest — finish_train only
+            // collects the result.
+            self.staged = Some(Self::outcomes_for(plan, self.rounds_aggregated));
+            return Ok(true);
+        }
+        let plan = plan.clone();
+        let rounds_aggregated = self.rounds_aggregated;
+        let delay = self.train_delay;
+        self.inflight = Some(pool::BackgroundTask::spawn(move || {
+            std::thread::sleep(delay);
+            Self::outcomes_for(&plan, rounds_aggregated)
+        }));
+        Ok(true)
+    }
+
+    fn finish_train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+        if let Some(outcomes) = self.staged.take() {
+            self.pending = plan.assignments.len();
+            return Ok(outcomes);
+        }
+        match self.inflight.take() {
+            Some(task) => {
+                let outcomes = task.join();
+                self.pending = plan.assignments.len();
+                Ok(outcomes)
+            }
+            None => self.train(plan),
+        }
     }
 
     fn aggregate(&mut self) -> Result<()> {
@@ -156,7 +245,11 @@ impl BackendState for SimBackend {
     fn load_state(&mut self, state: &Json) -> Result<()> {
         self.rounds_aggregated = crate::store::get_usize(state, "rounds_aggregated")?;
         // Snapshots happen at round boundaries; no updates are in flight.
+        // `train_delay` is a process-local latency knob, not campaign
+        // state — it never round-trips through snapshots.
         self.pending = 0;
+        self.inflight = None;
+        self.staged = None;
         Ok(())
     }
 }
@@ -195,6 +288,52 @@ mod tests {
         let l0 = b.evaluate().unwrap();
         b.aggregate().unwrap();
         assert!(b.evaluate().unwrap() < l0, "proxy loss decays per round");
+    }
+
+    #[test]
+    fn delayed_training_leg_is_outcome_identical_to_inline() {
+        let inst = Instance::new(
+            3,
+            vec![0, 0],
+            vec![3, 3],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 2.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 5.0 },
+            ],
+        )
+        .unwrap();
+        let plan = RoundPlan {
+            round: 0,
+            schedule: Schedule::new(vec![2, 1]),
+            assignments: vec![
+                Assignment { slot: 0, device: 0, device_id: 10, tasks: 2, energy_scale: 1.0 },
+                Assignment { slot: 1, device: 1, device_id: 11, tasks: 1, energy_scale: 1.0 },
+            ],
+            instance: inst,
+        };
+        let mut inline = SimBackend::new();
+        let a = inline.train(&plan).unwrap();
+        let mut delayed =
+            SimBackend::with_train_delay(std::time::Duration::from_millis(5));
+        assert!(
+            delayed.begin_train(&plan).unwrap(),
+            "a delayed leg opens the overlap window"
+        );
+        let b = delayed.finish_train(&plan).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.device_id, y.device_id);
+            assert_eq!(x.tasks, y.tasks);
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+            assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits());
+        }
+        // The undelayed backend completes its leg inside begin_train —
+        // still an open window, still the exact train() bits.
+        let mut plain = SimBackend::new();
+        assert!(plain.begin_train(&plan).unwrap());
+        let c = plain.finish_train(&plan).unwrap();
+        assert_eq!(c.len(), a.len());
+        assert_eq!(c[0].energy_j.to_bits(), a[0].energy_j.to_bits());
     }
 
     #[test]

@@ -24,6 +24,31 @@
 //! checked, every round emits an energy/cost metrics row, and the
 //! training side is a seam (`RoundBackend`) so the same loop drives the
 //! PJRT-backed FL server and the dependency-free [`SimBackend`].
+//!
+//! # Pipelined rounds
+//!
+//! With [`PipelineConfig`] enabled the round is split into its two
+//! halves — **prepare** (the Scheduling phase: selection, instance
+//! derivation, solve) and **commit** (Training → Aggregating →
+//! Recosting) — and the driver overlaps them across consecutive rounds:
+//! while round `r` trains behind the [`RoundBackend::begin_train`] /
+//! [`RoundBackend::finish_train`] seam (`begin_train` reports whether an
+//! overlap window actually opened; synchronous backends report none and
+//! the driver skips speculation rather than paying Scheduling up front
+//! for zero overlap), the coordinator *speculatively*
+//! prepares round `r + 1` against the **predicted** post-round state
+//! (training drains guessed from the plan's own costs — exact for the
+//! sim backend — and Recosting's RNG/dynamics steps, which never depend
+//! on training results, replayed on clones). When round `r` commits, a
+//! guard digest over everything Scheduling reads (RNG state, online
+//! pool, per-device limits and drift-scaled costs) decides: equal means
+//! round `r + 1`'s Scheduling would be a pure-function replay of the
+//! speculation, so it is **adopted** — RNG, warm-DP cache, and metric
+//! increments included — and is bit-for-bit what the serial loop would
+//! have computed; unequal means the speculation is discarded and the
+//! round prepares serially. Either way journal lines, digests, RNG
+//! streams, and recovery are identical to the serial loop; speculation
+//! is pure overlap, observable only through the `pipeline_*` metrics.
 
 pub mod backend;
 pub mod device;
@@ -48,6 +73,7 @@ use crate::sched::validate;
 use crate::store::journal::{round_digest, JournalEntry, ABORTED_SOLVER};
 use crate::store::snapshot as snap;
 use crate::store::{get, get_arr, get_f64, get_usize, jf, CampaignStore, MetricSink};
+use crate::util::hash::{mix_u64, FNV_OFFSET};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -83,6 +109,35 @@ impl Phase {
     }
 }
 
+/// Round-pipelining knob (see the module docs): overlap round `r + 1`'s
+/// Scheduling with round `r`'s Training. Off by default — pipelining is
+/// pure overlap (results are bit-for-bit identical either way), but the
+/// serial loop stays the reference the equivalence suite compares
+/// against.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PipelineConfig {
+    /// Run the speculative round driver.
+    pub enabled: bool,
+}
+
+impl PipelineConfig {
+    /// Pipelining on.
+    pub fn on() -> Self {
+        Self { enabled: true }
+    }
+
+    /// Pipelining off (the default).
+    pub fn off() -> Self {
+        Self { enabled: false }
+    }
+}
+
+impl From<bool> for PipelineConfig {
+    fn from(enabled: bool) -> Self {
+        Self { enabled }
+    }
+}
+
 /// What the coordinator needs to know to drive rounds (the scheduling
 /// subset of [`TrainConfig`], minus the ML-side knobs).
 #[derive(Clone, Debug)]
@@ -113,6 +168,11 @@ pub struct CoordinatorConfig {
     /// depend on this knob — it is a pure build-time speedup for
     /// 10⁵–10⁶-device fleets.
     pub shards: usize,
+    /// Overlap round `r + 1`'s Scheduling with round `r`'s Training
+    /// (speculate → validate → adopt; see the module docs). Like
+    /// `shards`, a pure wall-clock knob: journals, digests, and RNG
+    /// streams are bit-for-bit identical on or off.
+    pub pipeline: PipelineConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -127,6 +187,7 @@ impl Default for CoordinatorConfig {
             seed: 7,
             target_loss: None,
             shards: 1,
+            pipeline: PipelineConfig::off(),
         }
     }
 }
@@ -144,6 +205,7 @@ impl CoordinatorConfig {
             seed: cfg.seed,
             target_loss: cfg.target_loss,
             shards: 1,
+            pipeline: PipelineConfig::off(),
         }
     }
 }
@@ -158,6 +220,65 @@ pub struct RoundTrace {
     /// [`round_digest`] of the derived fleet instance + schedule (0 when
     /// no schedule was produced).
     pub digest: u64,
+}
+
+/// Output of the **prepare** (Scheduling) half of a round: either an
+/// empty round (nobody online / fleet exhausted) or a solved plan ready
+/// for the commit half.
+enum PreparedRound {
+    /// No schedulable work; commit degrades to an empty round.
+    Empty {
+        /// Whether devices were online but all drained (metered
+        /// separately from "nobody online").
+        exhausted: bool,
+    },
+    /// A derived, solved, validated round.
+    Planned(PlannedRound),
+}
+
+/// The Scheduling phase's products, carried into the commit half.
+struct PlannedRound {
+    /// Selected device indices, sorted (slot order).
+    selected: Vec<usize>,
+    /// Class-deduplicated instance (digest input).
+    fleet: FleetInstance,
+    /// Slot-expanded view (what the round plan and warm DP key on).
+    instance: Instance,
+    /// The validated schedule.
+    schedule: Schedule,
+    /// Effective solver name (what the journal records).
+    effective: &'static str,
+    /// Wall-clock solve time (metrics row only; excluded from digests).
+    sched_time_s: f64,
+    /// Scheduler-predicted round energy.
+    predicted_j: f64,
+    /// Effective workload after capacity clamping.
+    t: usize,
+}
+
+/// A speculatively prepared round `r + 1`, computed while round `r`
+/// trained. Adopted only when `guard` matches the actual post-commit
+/// state — the digest covers everything the Scheduling phase reads, so a
+/// match proves the serial loop would have produced these exact bits.
+struct Speculation {
+    /// The round this speculation was prepared for.
+    round: usize,
+    /// [`Coordinator::scheduling_guard`] over the *predicted* post-round
+    /// state the speculation solved against.
+    guard: u64,
+    /// RNG state after the speculative Scheduling phase (selection +
+    /// seeded-solver draws) — adopted so the live stream continues
+    /// exactly where the serial loop's would.
+    rng_after: [u64; 4],
+    /// The warm-DP cache after the speculative solve (a clone of the live
+    /// cache, mutated only if the DP ran). Adopted wholesale: when the DP
+    /// did not run it is byte-identical to the live cache.
+    warm: WarmMc2mkp,
+    /// Metric increments the serial Scheduling phase would have made,
+    /// applied on adoption so counters match a serial run's.
+    incs: Vec<(&'static str, u64)>,
+    /// The prepared round itself.
+    prepared: PlannedRound,
 }
 
 /// The multi-round FL coordinator (see module docs).
@@ -192,6 +313,10 @@ pub struct Coordinator<B: RoundBackend> {
     trace: Option<RoundTrace>,
     /// Compute traces even without a store (restore/replay verification).
     record_trace: bool,
+    /// In-flight speculative next round (pipelining only). Never
+    /// journaled, never snapshotted: a restored coordinator simply
+    /// prepares its first round serially.
+    speculation: Option<Speculation>,
 }
 
 impl<B: RoundBackend> Coordinator<B> {
@@ -241,6 +366,7 @@ impl<B: RoundBackend> Coordinator<B> {
             store_failed: None,
             trace: None,
             record_trace: false,
+            speculation: None,
         })
     }
 
@@ -253,12 +379,27 @@ impl<B: RoundBackend> Coordinator<B> {
     /// Set the per-round instance-build shard count (see
     /// [`CoordinatorConfig::shards`]). Safe to change between rounds:
     /// the derived instance is bit-for-bit identical for every count.
+    /// Any in-flight speculation is discarded — it was built with the old
+    /// count, and while its schedule would still be bit-identical, its
+    /// deferred `fleet_shards`/`shard_merge_ns` increments would not
+    /// match what a serial round under the new count records.
     pub fn set_shards(&mut self, shards: usize) -> Result<()> {
         if shards == 0 {
             return Err(FedError::Coordinator("shards must be >= 1".into()));
         }
         self.cfg.shards = shards;
+        self.speculation = None;
         Ok(())
+    }
+
+    /// Enable/disable round pipelining (see [`PipelineConfig`]). Safe to
+    /// flip between rounds: results are bit-for-bit identical either way
+    /// (disabling discards any in-flight speculation).
+    pub fn set_pipeline(&mut self, enabled: bool) {
+        self.cfg.pipeline.enabled = enabled;
+        if !enabled {
+            self.speculation = None;
+        }
     }
 
     /// Current phase.
@@ -267,8 +408,12 @@ impl<B: RoundBackend> Coordinator<B> {
     }
 
     /// The solver registry (e.g. to register custom solvers before
-    /// running).
+    /// running). Discards any in-flight speculation: it was solved
+    /// through the registry as it was, and the scheduling guard does not
+    /// (and need not) cover registry contents — adopting it after an
+    /// override could silently bypass the caller's new solver.
     pub fn registry_mut(&mut self) -> &mut SolverRegistry {
+        self.speculation = None;
         &mut self.registry
     }
 
@@ -357,21 +502,29 @@ impl<B: RoundBackend> Coordinator<B> {
         Ok(())
     }
 
-    /// Build this round's **fleet instance** over `selected` device
+    /// Build one round's **fleet instance** over `selected` device
     /// indices (with their already-computed `raw_uppers`, which the caller
     /// derived from current device state and checked to be non-empty in
     /// total). Devices sharing a cost signature and limits collapse into
     /// classes — on real fleets `k ≪ n`, which is what the class-aware
     /// solvers exploit.
-    fn build_instance(
-        &mut self,
+    ///
+    /// State-parametric (no `&self`): the serial path passes the live
+    /// fleet, the pipelined path a *predicted* clone — identical code, so
+    /// an adopted speculation cannot diverge from the serial build.
+    /// Metric increments go through `incs` (the speculative path defers
+    /// them until adoption).
+    fn build_instance_for(
+        cfg: &CoordinatorConfig,
+        devices: &[ManagedDevice],
         selected: &[usize],
         raw_uppers: &[usize],
+        incs: &mut Vec<(&'static str, u64)>,
     ) -> Result<(FleetInstance, usize)> {
         // Overflow-safe capacity: "unlimited" devices may carry
         // `usize::MAX` uppers (same encoding Instance::validate hardens
         // against), so clamp each term to T before a saturating fold.
-        let t_req = self.cfg.tasks_per_round;
+        let t_req = cfg.tasks_per_round;
         let capacity: usize = raw_uppers
             .iter()
             .fold(0usize, |a, &u| a.saturating_add(u.min(t_req)));
@@ -380,7 +533,7 @@ impl<B: RoundBackend> Coordinator<B> {
 
         // Over-representation guard (§6): cap any device at max_share · T,
         // doubling the cap until the capped fleet can still absorb T.
-        let mut cap = ((t as f64 * self.cfg.max_share).ceil() as usize).max(1);
+        let mut cap = ((t as f64 * cfg.max_share).ceil() as usize).max(1);
         let uppers: Vec<usize> = loop {
             let capped: Vec<usize> = raw_uppers.iter().map(|&u| u.min(cap)).collect();
             if capped
@@ -398,7 +551,7 @@ impl<B: RoundBackend> Coordinator<B> {
         let lower: Vec<usize> = selected
             .iter()
             .zip(&uppers)
-            .map(|(&d, &u)| self.cfg.min_tasks.max(self.devices[d].lower).min(u))
+            .map(|(&d, &u)| cfg.min_tasks.max(devices[d].lower).min(u))
             .collect();
         // Relax in two stages when ΣL overshoots T: first drop the
         // config-level minimum and keep only the intrinsic device minima;
@@ -409,10 +562,10 @@ impl<B: RoundBackend> Coordinator<B> {
             let intrinsic: Vec<usize> = selected
                 .iter()
                 .zip(&uppers)
-                .map(|(&d, &u)| self.devices[d].lower.min(u))
+                .map(|(&d, &u)| devices[d].lower.min(u))
                 .collect();
             if intrinsic.iter().sum::<usize>() > t {
-                self.metrics.inc("lower_limits_relaxed", 1);
+                incs.push(("lower_limits_relaxed", 1));
                 vec![0; uppers.len()]
             } else {
                 intrinsic
@@ -420,67 +573,70 @@ impl<B: RoundBackend> Coordinator<B> {
         } else {
             lower
         };
-        let fleet = if self.cfg.shards > 1 {
+        let fleet = if cfg.shards > 1 {
             // Sharded build: materialize the flat device sequence once,
             // fan the per-shard class dedup out over scoped threads, and
             // merge exactly. `fleet_shards` / `shard_merge_ns` expose the
             // fan-out; the merge timing never enters any digest.
             let costs: Vec<CostFn> = selected
                 .iter()
-                .map(|&d| self.devices[d].current_cost())
+                .map(|&d| devices[d].current_cost())
                 .collect();
             let inst = Instance { tasks: t, lower, upper: uppers, costs };
-            let (fleet, stats) =
-                pool::build_fleet_sharded(&inst, self.cfg.shards, 0)?;
-            self.metrics.inc("fleet_shards", stats.shards as u64);
-            self.metrics.inc("shard_merge_ns", stats.merge_ns);
+            let (fleet, stats) = pool::build_fleet_sharded(&inst, cfg.shards, 0)?;
+            incs.push(("fleet_shards", stats.shards as u64));
+            incs.push(("shard_merge_ns", stats.merge_ns));
             fleet
         } else {
             let mut b = FleetInstance::builder().tasks(t);
             for ((&d, &u), &l) in selected.iter().zip(&uppers).zip(&lower) {
-                b = b.device(self.devices[d].current_cost(), l, u);
+                b = b.device(devices[d].current_cost(), l, u);
             }
             b.build()?
         };
         Ok((fleet, t))
     }
 
-    /// Solve the fleet instance with the configured algorithm,
-    /// warm-starting the (MC)²MKP DP whenever the DP is what runs
-    /// (configured directly or chosen by `auto` dispatch). `flat` is the
-    /// slot-expanded view of `fleet` (the caller needs it for the round
-    /// plan anyway); the warm DP row cache keys on it. Returns the
-    /// schedule together with the *effective* solver name (what the store
-    /// journals).
-    fn solve(
-        &mut self,
+    /// Solve a fleet instance with `algo`, warm-starting the (MC)²MKP DP
+    /// whenever the DP is what runs (configured directly or chosen by
+    /// `auto` dispatch). `flat` is the slot-expanded view of `fleet` (the
+    /// caller needs it for the round plan anyway); the warm DP row cache
+    /// keys on it. Returns the schedule together with the *effective*
+    /// solver name (what the store journals).
+    ///
+    /// State-parametric like [`Coordinator::build_instance_for`]: the
+    /// serial path passes the live `warm`/`rng`, the speculative path
+    /// clones — same code either way.
+    fn solve_with(
+        registry: &SolverRegistry,
+        warm: &mut WarmMc2mkp,
+        rng: &mut Rng,
+        algo: &str,
         fleet: &FleetInstance,
         flat: &Instance,
+        incs: &mut Vec<(&'static str, u64)>,
     ) -> Result<(Schedule, &'static str)> {
-        let canonical = self.registry.resolve(&self.cfg.algo)?.name();
+        let canonical = registry.resolve(algo)?.name();
         // Resolve `auto` to its concrete Table 2 pick here, once: the
         // classification is per *class* (cheap on deduplicated fleets),
         // and registry overrides of the concrete solvers are honored by
         // the dispatch.
-        let effective = if canonical == "auto" && !self.registry.is_overridden("auto")
-        {
+        let effective = if canonical == "auto" && !registry.is_overridden("auto") {
             best_algorithm(&classify_fleet(fleet))
         } else {
             canonical
         };
         // The warm fast path only stands in for the *built-in* DP; a
         // caller-registered "mc2mkp" must win over it.
-        if effective == "mc2mkp" && !self.registry.is_overridden("mc2mkp") {
-            let (schedule, info) = self.warm.solve(flat)?;
-            self.metrics.inc("dp_solves", 1);
-            self.metrics.inc("dp_rows_reused", info.reused_rows as u64);
-            self.metrics.inc("dp_rows_total", info.total_rows as u64);
+        if effective == "mc2mkp" && !registry.is_overridden("mc2mkp") {
+            let (schedule, info) = warm.solve(flat)?;
+            incs.push(("dp_solves", 1));
+            incs.push(("dp_rows_reused", info.reused_rows as u64));
+            incs.push(("dp_rows_total", info.total_rows as u64));
             Ok((schedule, "mc2mkp"))
         } else {
-            let schedule = self
-                .registry
-                .solve_fleet_seeded(effective, fleet, &mut self.rng)?
-                .expand(fleet);
+            let schedule =
+                registry.solve_fleet_seeded(effective, fleet, rng)?.expand(fleet);
             Ok((schedule, effective))
         }
     }
@@ -592,22 +748,67 @@ impl<B: RoundBackend> Coordinator<B> {
     }
 
     fn round_inner(&mut self, round_idx: usize) -> Result<RoundLog> {
-        // ---- Scheduling ------------------------------------------------
-        if self.pool.is_empty() {
-            // Nobody online: an empty round (no energy, model unchanged).
-            self.ledger.begin_round();
-            let loss = self.backend.evaluate()?;
-            self.metrics.inc("empty_rounds", 1);
-            let row = self.finish_round(round_idx, loss, 0.0, 0.0, 0.0, 0, 0)?;
-            return Ok(row);
-        }
+        let prepared = if self.cfg.pipeline.enabled {
+            match self.take_speculation(round_idx) {
+                Some(p) => PreparedRound::Planned(p),
+                None => self.prepare_round()?,
+            }
+        } else {
+            // Pipelining may have been switched off between rounds: a
+            // stale speculation must never outlive the mode that made it.
+            self.speculation = None;
+            self.prepare_round()?
+        };
+        self.commit_round(round_idx, prepared)
+    }
 
-        let n_online = self.pool.len();
-        let k = ((self.devices.len() as f64 * self.cfg.participation).ceil()
-            as usize)
+    /// The **prepare** half: the Scheduling phase against the live state.
+    /// Pure of backend and ledger effects — those belong to commit. A
+    /// thin wrapper over [`Coordinator::schedule_for`], which is the ONE
+    /// code body both this serial path and the speculative path run.
+    fn prepare_round(&mut self) -> Result<PreparedRound> {
+        let mut incs = Vec::new();
+        let out = Self::schedule_for(
+            &self.cfg,
+            &self.registry,
+            &mut self.warm,
+            &mut self.rng,
+            &self.pool,
+            &self.devices,
+            &mut incs,
+        );
+        for (key, v) in incs {
+            self.metrics.inc(key, v);
+        }
+        out
+    }
+
+    /// One Scheduling pass over an explicit state — selection draw,
+    /// instance derivation, solve, validation. State-parametric on
+    /// purpose: the serial prepare passes the live pool/devices/RNG/warm
+    /// cache, the speculative prepare passes predicted clones, and both
+    /// run THIS body. The guard digest proves equal inputs; sharing the
+    /// body is what proves equal code, so the two paths cannot drift.
+    /// Metric increments go through `incs` (the speculative path defers
+    /// them until adoption).
+    fn schedule_for(
+        cfg: &CoordinatorConfig,
+        registry: &SolverRegistry,
+        warm: &mut WarmMc2mkp,
+        rng: &mut Rng,
+        pool: &[usize],
+        devices: &[ManagedDevice],
+        incs: &mut Vec<(&'static str, u64)>,
+    ) -> Result<PreparedRound> {
+        if pool.is_empty() {
+            // Nobody online: an empty round (no energy, model unchanged).
+            return Ok(PreparedRound::Empty { exhausted: false });
+        }
+        let n_online = pool.len();
+        let k = ((devices.len() as f64 * cfg.participation).ceil() as usize)
             .clamp(1, n_online);
-        let picks = self.rng.sample_indices(n_online, k);
-        let mut selected: Vec<usize> = picks.iter().map(|&i| self.pool[i]).collect();
+        let picks = rng.sample_indices(n_online, k);
+        let mut selected: Vec<usize> = picks.iter().map(|&i| pool[i]).collect();
         // Stable slot order: keeps slot→device mapping canonical and
         // maximizes the unchanged class prefix the warm DP can reuse.
         selected.sort_unstable();
@@ -616,29 +817,67 @@ impl<B: RoundBackend> Coordinator<B> {
         // degrade to an empty round instead of aborting the run.
         let raw_uppers: Vec<usize> = selected
             .iter()
-            .map(|&d| self.devices[d].effective_upper())
+            .map(|&d| devices[d].effective_upper())
             .collect();
         if raw_uppers.iter().all(|&u| u == 0) {
-            self.ledger.begin_round();
-            let loss = self.backend.evaluate()?;
-            self.metrics.inc("empty_rounds", 1);
-            self.metrics.inc("exhausted_rounds", 1);
-            return self.finish_round(round_idx, loss, 0.0, 0.0, 0.0, 0, 0);
+            return Ok(PreparedRound::Empty { exhausted: true });
         }
 
-        let (fleet, t) = self.build_instance(&selected, &raw_uppers)?;
-        self.metrics.inc("fleet_devices", fleet.n_devices() as u64);
-        self.metrics.inc("fleet_classes", fleet.n_classes() as u64);
+        let (fleet, t) =
+            Self::build_instance_for(cfg, devices, &selected, &raw_uppers, incs)?;
+        incs.push(("fleet_devices", fleet.n_devices() as u64));
+        incs.push(("fleet_classes", fleet.n_classes() as u64));
         let instance = fleet.to_flat();
         let timer = Timer::start();
-        let (schedule, effective) = self.solve(&fleet, &instance)?;
+        let (schedule, effective) = Self::solve_with(
+            registry,
+            warm,
+            rng,
+            &cfg.algo,
+            &fleet,
+            &instance,
+            incs,
+        )?;
         let sched_time_s = timer.elapsed_s();
         validate::check(&instance, &schedule)?;
         let predicted_j = validate::total_cost(&instance, &schedule);
+        Ok(PreparedRound::Planned(PlannedRound {
+            selected,
+            fleet,
+            instance,
+            schedule,
+            effective,
+            sched_time_s,
+            predicted_j,
+            t,
+        }))
+    }
+
+    /// The **commit** half: Training → Aggregating → Recosting over a
+    /// prepared round. With pipelining on, the speculative prepare of
+    /// round `round_idx + 1` runs between the backend's `begin_train` and
+    /// `finish_train` — the overlap window.
+    fn commit_round(
+        &mut self,
+        round_idx: usize,
+        prepared: PreparedRound,
+    ) -> Result<RoundLog> {
+        let p = match prepared {
+            PreparedRound::Empty { exhausted } => {
+                self.ledger.begin_round();
+                let loss = self.backend.evaluate()?;
+                self.metrics.inc("empty_rounds", 1);
+                if exhausted {
+                    self.metrics.inc("exhausted_rounds", 1);
+                }
+                return self.finish_round(round_idx, loss, 0.0, 0.0, 0.0, 0, 0);
+            }
+            PreparedRound::Planned(p) => p,
+        };
         if self.tracing() {
             self.trace = Some(RoundTrace {
-                solver: effective.to_string(),
-                digest: round_digest(&fleet, &schedule),
+                solver: p.effective.to_string(),
+                digest: round_digest(&p.fleet, &p.schedule),
             });
         }
 
@@ -647,8 +886,8 @@ impl<B: RoundBackend> Coordinator<B> {
         self.ledger.begin_round();
         let wall = Timer::start();
         let mut assignments = Vec::new();
-        for (slot, &d) in selected.iter().enumerate() {
-            let tasks = schedule.get(slot);
+        for (slot, &d) in p.selected.iter().enumerate() {
+            let tasks = p.schedule.get(slot);
             if tasks == 0 {
                 continue;
             }
@@ -678,11 +917,20 @@ impl<B: RoundBackend> Coordinator<B> {
         }
         let plan = RoundPlan {
             round: round_idx,
-            instance,
-            schedule,
+            instance: p.instance,
+            schedule: p.schedule,
             assignments,
         };
-        let outcomes = self.backend.train(&plan)?;
+        let overlap = self.backend.begin_train(&plan)?;
+        if overlap && self.cfg.pipeline.enabled && round_idx + 1 < self.cfg.rounds {
+            // The overlap window: the backend is training in the
+            // background; prepare round_idx + 1 against the predicted
+            // post-round state on this thread. Backends that train
+            // synchronously in finish_train report no window, and the
+            // speculation is skipped — it would be pure added latency.
+            self.speculate(round_idx + 1, &plan);
+        }
+        let outcomes = self.backend.finish_train(&plan)?;
         let mut sim_time_s = 0.0f64;
         let mut loss_sum = 0.0;
         let mut loss_n = 0usize;
@@ -708,12 +956,148 @@ impl<B: RoundBackend> Coordinator<B> {
         self.finish_round(
             round_idx,
             eval_loss,
-            sched_time_s,
+            p.sched_time_s,
             train_time_s,
-            predicted_j,
+            p.predicted_j,
             outcomes.len(),
-            t,
+            p.t,
         )
+    }
+
+    /// Digest of **everything the Scheduling phase reads**: the RNG
+    /// state, the fleet size, the online pool, and each pooled device's
+    /// scheduling-relevant state (lower limit, battery-capped upper,
+    /// drift-scaled cost signature). Scheduling is a pure function of
+    /// these inputs (the registry and config are fixed within a run), so
+    /// equal guards prove a speculation solved the exact problem the
+    /// serial loop would — the adoption criterion.
+    fn scheduling_guard(rng: &Rng, pool: &[usize], devices: &[ManagedDevice]) -> u64 {
+        let mut h = FNV_OFFSET;
+        for w in rng.state() {
+            h = mix_u64(h, w);
+        }
+        h = mix_u64(h, devices.len() as u64);
+        h = mix_u64(h, pool.len() as u64);
+        for &i in pool {
+            let d = &devices[i];
+            h = mix_u64(h, i as u64);
+            h = mix_u64(h, d.lower as u64);
+            h = mix_u64(h, d.effective_upper() as u64);
+            h = mix_u64(h, d.current_cost().structural_hash());
+        }
+        h
+    }
+
+    /// Validate-and-adopt an in-flight speculation for `round_idx`. On a
+    /// guard match the speculative Scheduling IS the serial Scheduling
+    /// (same inputs through the same code), so its RNG state, warm-DP
+    /// cache, and metric increments are installed and the prepared round
+    /// returned. Any mismatch discards it — correctness never depends on
+    /// a speculation being adopted.
+    fn take_speculation(&mut self, round_idx: usize) -> Option<PlannedRound> {
+        let spec = self.speculation.take()?;
+        if spec.round != round_idx
+            || spec.guard
+                != Self::scheduling_guard(&self.rng, &self.pool, &self.devices)
+        {
+            self.metrics.inc("pipeline_misses", 1);
+            return None;
+        }
+        self.metrics.inc("pipeline_hits", 1);
+        self.rng = Rng::from_state(spec.rng_after);
+        self.warm = spec.warm;
+        for (k, v) in spec.incs {
+            self.metrics.inc(k, v);
+        }
+        Some(spec.prepared)
+    }
+
+    /// Speculatively prepare round `round` while the backend trains.
+    /// Failures are swallowed (metered as `pipeline_spec_errors`): a
+    /// condition that genuinely fails Scheduling will resurface — and be
+    /// handled — when the round prepares serially.
+    fn speculate(&mut self, round: usize, plan: &RoundPlan) {
+        let timer = Timer::start();
+        let spec = self.speculate_inner(round, plan);
+        self.metrics
+            .inc("pipeline_overlap_ns", (timer.elapsed_s() * 1e9) as u64);
+        match spec {
+            Ok(Some(s)) => {
+                self.speculation = Some(s);
+                self.metrics.inc("pipeline_speculations", 1);
+            }
+            Ok(None) => {
+                self.metrics.inc("pipeline_spec_skipped", 1);
+            }
+            Err(_) => {
+                self.metrics.inc("pipeline_spec_errors", 1);
+            }
+        }
+    }
+
+    /// The speculative prepare: predict the post-round state, replay
+    /// Recosting on clones, then run the identical Scheduling code the
+    /// serial loop would. Returns `None` when the predicted round is
+    /// empty (nothing worth precomputing).
+    fn speculate_inner(
+        &self,
+        round: usize,
+        plan: &RoundPlan,
+    ) -> Result<Option<Speculation>> {
+        // Predicted training drains: each surviving assignment burns its
+        // scheduled cost. Exact for the sim backend (it reads energy off
+        // the same plan costs); a guess for measured-energy backends —
+        // where the guess is wrong, the guard misses and the round simply
+        // prepares serially. Dropout victims drained *before* the plan
+        // was built, so the live device state already carries them.
+        let mut devices = self.devices.clone();
+        for a in &plan.assignments {
+            let e = plan.instance.costs[a.slot].eval(a.tasks);
+            devices[a.device].drain(e);
+        }
+        // Recosting's drift/availability steps and RNG draws depend only
+        // on dynamics + RNG state — never on training results — so the
+        // predicted pool, drift scales, and RNG stream are *exact*
+        // replicas of what finish_round will compute.
+        let mut rng = self.rng.clone();
+        let mut dynamics = self.dynamics.clone();
+        if let Some(drift) = dynamics.drift.as_mut() {
+            drift.step(&mut rng);
+            for (i, dev) in devices.iter_mut().enumerate() {
+                dev.drift = drift.scale(i);
+            }
+        }
+        let pool: Vec<usize> = match dynamics.availability.as_mut() {
+            Some(av) => av.step(&mut rng),
+            None => (0..devices.len()).collect(),
+        };
+        let guard = Self::scheduling_guard(&rng, &pool, &devices);
+
+        // From here on: the ONE Scheduling body (`schedule_for`), against
+        // the predicted state.
+        let mut incs = Vec::new();
+        let mut warm = self.warm.clone();
+        let prepared = match Self::schedule_for(
+            &self.cfg,
+            &self.registry,
+            &mut warm,
+            &mut rng,
+            &pool,
+            &devices,
+            &mut incs,
+        )? {
+            PreparedRound::Planned(p) => p,
+            // A predicted-empty round has no solve worth precomputing.
+            PreparedRound::Empty { .. } => return Ok(None),
+        };
+        Ok(Some(Speculation {
+            round,
+            guard,
+            rng_after: rng.state(),
+            warm,
+            incs,
+            prepared,
+        }))
     }
 
     /// Recosting phase + metrics row shared by normal and empty rounds.
@@ -1318,6 +1702,311 @@ mod tests {
                 .unwrap();
         assert!(c.set_shards(0).is_err());
         c.set_shards(4).unwrap();
+    }
+
+    #[test]
+    fn pipelined_campaign_is_bit_for_bit_with_dynamics() {
+        // Same campaign, pipeline off vs on (churn/drift/dropout engaged
+        // so speculation validation genuinely has state to check): every
+        // row and the RNG stream must match exactly — pipelining is a
+        // wall-clock overlap, never a scheduling change.
+        let run = |pipeline: bool| {
+            let cfg = CoordinatorConfig {
+                rounds: 8,
+                pipeline: pipeline.into(),
+                ..paper_cfg()
+            };
+            let mut c =
+                Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+            c.set_dynamics(DynamicsConfig::mobile(3));
+            c.run().unwrap();
+            let rows: Vec<(u64, u64, usize, usize)> = c
+                .log()
+                .rows()
+                .iter()
+                .map(|r| {
+                    (r.loss.to_bits(), r.energy_j.to_bits(), r.participants, r.tasks)
+                })
+                .collect();
+            (rows, c.rng.state(), c.ledger().total().to_bits())
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn speculation_hits_every_round_on_a_predictable_fleet() {
+        // The sim backend's measured energy IS the scheduled cost, so the
+        // speculative drain prediction is exact and every speculation must
+        // validate — rounds 1..R-1 all adopt (round 0 has nothing to adopt,
+        // the last round spawns no speculation). mc2mkp keeps the warm DP
+        // adoption path honest too.
+        let cfg = CoordinatorConfig {
+            rounds: 5,
+            pipeline: PipelineConfig::on(),
+            ..paper_cfg()
+        };
+        let mut c =
+            Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+        c.run().unwrap();
+        assert_eq!(c.metrics().counter("pipeline_speculations"), 4);
+        assert_eq!(c.metrics().counter("pipeline_hits"), 4);
+        assert_eq!(c.metrics().counter("pipeline_misses"), 0);
+        // Adopted DP solves must meter exactly like serial ones (warm
+        // cache adopted across rounds: static fleet reuses every row).
+        assert_eq!(c.metrics().counter("dp_solves"), 5);
+        assert_eq!(c.metrics().counter("dp_rows_reused"), 12);
+        // Overlap time is wall-clock noise; only its presence is pinned.
+        assert!(c.metrics().counter("pipeline_overlap_ns") > 0);
+        // The serial loop must not emit pipeline metrics at all.
+        let mut plain =
+            Coordinator::new(paper_cfg(), paper_fleet(), SimBackend::new())
+                .unwrap();
+        plain.run().unwrap();
+        assert_eq!(plain.metrics().counter("pipeline_speculations"), 0);
+        assert_eq!(plain.metrics().counter("pipeline_hits"), 0);
+    }
+
+    #[test]
+    fn wrong_energy_prediction_misses_but_stays_correct() {
+        use crate::energy::battery::Battery;
+        use crate::energy::power::{Behavior, PowerModel};
+        // A backend whose measured energy exceeds the scheduled cost: the
+        // speculative battery drain under-predicts, the guard catches the
+        // divergence, and the round re-prepares serially — identical rows
+        // to the serial loop over the same backend, just without overlap.
+        struct InflatedEnergyBackend {
+            inner: SimBackend,
+        }
+        impl RoundBackend for InflatedEnergyBackend {
+            fn train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+                let mut out = self.inner.train(plan)?;
+                for o in &mut out {
+                    o.energy_j *= 1.25;
+                }
+                Ok(out)
+            }
+            fn begin_train(&mut self, plan: &RoundPlan) -> Result<bool> {
+                self.inner.begin_train(plan)
+            }
+            fn finish_train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+                let mut out = self.inner.finish_train(plan)?;
+                for o in &mut out {
+                    o.energy_j *= 1.25;
+                }
+                Ok(out)
+            }
+            fn aggregate(&mut self) -> Result<()> {
+                self.inner.aggregate()
+            }
+            fn evaluate(&mut self) -> Result<f64> {
+                self.inner.evaluate()
+            }
+        }
+        let power = PowerModel {
+            idle_w: 0.0,
+            busy_w: 2.0,
+            batch_latency_s: 0.5,
+            behavior: Behavior::Linear,
+            curvature: 0.0,
+        }; // 1 J per task
+        let fleet = || {
+            vec![
+                ManagedDevice {
+                    id: 0,
+                    cost: power.cost_fn(),
+                    lower: 0,
+                    data_cap: 10,
+                    battery: Some(Battery {
+                        capacity_wh: 24.0 / 3600.0,
+                        level: 1.0,
+                        round_budget_frac: 0.5,
+                    }),
+                    power: Some(power.clone()),
+                    drift: 1.0,
+                },
+                ManagedDevice::abstract_resource(
+                    1,
+                    CostFn::Affine { fixed: 0.0, per_task: 3.0 },
+                    0,
+                    10,
+                ),
+            ]
+        };
+        let cfg = |pipeline: bool| CoordinatorConfig {
+            rounds: 4,
+            tasks_per_round: 6,
+            algo: "auto".into(),
+            max_share: 1.0,
+            pipeline: pipeline.into(),
+            ..CoordinatorConfig::default()
+        };
+        let run = |pipeline: bool| {
+            let mut c = Coordinator::new(
+                cfg(pipeline),
+                fleet(),
+                InflatedEnergyBackend { inner: SimBackend::new() },
+            )
+            .unwrap();
+            c.run().unwrap();
+            let rows: Vec<(u64, u64)> = c
+                .log()
+                .rows()
+                .iter()
+                .map(|r| (r.energy_j.to_bits(), r.loss.to_bits()))
+                .collect();
+            (rows, c.rng.state(), c.metrics().counter("pipeline_misses"))
+        };
+        let (serial_rows, serial_rng, _) = run(false);
+        let (piped_rows, piped_rng, misses) = run(true);
+        assert_eq!(serial_rows, piped_rows);
+        assert_eq!(serial_rng, piped_rng);
+        assert!(misses > 0, "inflated energy must invalidate speculations");
+    }
+
+    #[test]
+    fn aborted_rounds_stay_equivalent_under_pipelining() {
+        // A backend that fails one round mid-campaign: the abort path and
+        // the rounds after it must be bit-for-bit identical with the
+        // pipeline on (the failed round's speculation is guard-checked
+        // like any other and never forges state).
+        struct FailNth {
+            inner: SimBackend,
+            fail_round: usize,
+        }
+        impl RoundBackend for FailNth {
+            fn train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+                if plan.round == self.fail_round {
+                    return Err(FedError::Fl("injected mid-campaign".into()));
+                }
+                self.inner.train(plan)
+            }
+            fn begin_train(&mut self, plan: &RoundPlan) -> Result<bool> {
+                self.inner.begin_train(plan)
+            }
+            fn finish_train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+                if plan.round == self.fail_round {
+                    return Err(FedError::Fl("injected mid-campaign".into()));
+                }
+                self.inner.finish_train(plan)
+            }
+            fn aggregate(&mut self) -> Result<()> {
+                self.inner.aggregate()
+            }
+            fn evaluate(&mut self) -> Result<f64> {
+                self.inner.evaluate()
+            }
+        }
+        let run = |pipeline: bool| {
+            let cfg = CoordinatorConfig {
+                rounds: 6,
+                pipeline: pipeline.into(),
+                ..paper_cfg()
+            };
+            let mut c = Coordinator::new(
+                cfg,
+                paper_fleet(),
+                FailNth { inner: SimBackend::new(), fail_round: 2 },
+            )
+            .unwrap();
+            c.set_dynamics(DynamicsConfig::mobile(3));
+            let mut errors = 0;
+            while c.rounds_run() < 6 {
+                if c.round().is_err() {
+                    errors += 1;
+                }
+            }
+            let rows: Vec<(u64, u64, usize)> = c
+                .log()
+                .rows()
+                .iter()
+                .map(|r| (r.loss.to_bits(), r.energy_j.to_bits(), r.participants))
+                .collect();
+            (rows, c.rng.state(), errors)
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn store_poison_with_speculation_in_flight_never_journals_it() {
+        // Simulate the one failure the commit path cannot recover from —
+        // a failed journal append — while a speculation is in flight: the
+        // next round must refuse to run, and the speculative round must
+        // never reach the journal (contiguity from disk proves it).
+        let dir = std::env::temp_dir().join("fedzero_pipeline_poison_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CoordinatorConfig {
+            rounds: 6,
+            pipeline: PipelineConfig::on(),
+            ..paper_cfg()
+        };
+        let mut c =
+            Coordinator::new(cfg.clone(), paper_fleet(), SimBackend::new())
+                .unwrap();
+        let meta = Json::obj(vec![("cfg", snap::cfg_to_json(&cfg))]);
+        let store = CampaignStore::create(&dir, meta, c.snapshot_json()).unwrap();
+        c.attach_store(store).unwrap();
+        c.round_stored().unwrap();
+        assert!(c.speculation.is_some(), "round 1's speculation is in flight");
+        c.store_failed = Some("injected commit failure".into());
+        let err = c.round().unwrap_err().to_string();
+        assert!(err.contains("refusing"), "{err}");
+        let journal = std::fs::read_to_string(dir.join("journal.jsonl")).unwrap();
+        assert_eq!(journal.lines().count(), 1, "only round 0 is journaled");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn registry_override_mid_campaign_discards_inflight_speculation() {
+        use crate::sched::solver::Solver;
+        struct UniformAsDp;
+        impl Solver for UniformAsDp {
+            fn name(&self) -> &'static str {
+                "mc2mkp"
+            }
+            fn solve_flat(&self, inst: &Instance) -> Result<Schedule> {
+                crate::sched::baselines::uniform(inst)
+            }
+        }
+        let cfg = CoordinatorConfig {
+            rounds: 4,
+            pipeline: PipelineConfig::on(),
+            ..paper_cfg()
+        };
+        let mut c =
+            Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+        c.round().unwrap();
+        assert!(c.speculation.is_some(), "round 1 was speculated with the DP");
+        // The override must win from the very next round: the stale
+        // speculation (solved by the built-in DP) is discarded, never
+        // adopted past the new solver.
+        c.registry_mut().register(Box::new(UniformAsDp));
+        assert!(c.speculation.is_none());
+        let row = c.round().unwrap();
+        assert!(
+            row.energy_j > 7.5 + 1e-9,
+            "stale DP speculation adopted over the override: {}",
+            row.energy_j
+        );
+        assert_eq!(c.metrics().counter("pipeline_hits"), 0);
+    }
+
+    #[test]
+    fn disabling_the_pipeline_discards_inflight_speculation() {
+        let cfg = CoordinatorConfig {
+            rounds: 4,
+            pipeline: PipelineConfig::on(),
+            ..paper_cfg()
+        };
+        let mut c =
+            Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+        c.record_trace = true;
+        c.round().unwrap();
+        assert!(c.speculation.is_some());
+        c.set_pipeline(false);
+        assert!(c.speculation.is_none());
+        // And the serial continuation is the plain serial continuation.
+        c.round().unwrap();
+        assert_eq!(c.metrics().counter("pipeline_hits"), 0);
     }
 
     #[test]

@@ -204,6 +204,20 @@ impl Server {
         self.coord.set_shards(shards)
     }
 
+    /// Enable/disable pipelined rounds (overlap next-round scheduling
+    /// with training; see [`crate::coordinator::PipelineConfig`]).
+    /// Campaigns are bit-for-bit identical either way. Note the PJRT
+    /// backend still trains synchronously inside the
+    /// `begin_train`/`finish_train` seam (its runtime is not yet
+    /// thread-movable — see ROADMAP: wire `TrainConfig.workers`), so its
+    /// `begin_train` reports no overlap window and the coordinator skips
+    /// speculation entirely — the knob is plumbed and persisted so
+    /// campaigns record the intended mode today at zero cost, and the
+    /// overlap engages the moment the backend starts deferring work.
+    pub fn set_pipeline(&mut self, enabled: bool) {
+        self.coord.set_pipeline(enabled);
+    }
+
     /// The runtime (for external evaluation).
     pub fn runtime(&self) -> &ModelRuntime {
         &self.coord.backend().runtime

@@ -19,7 +19,9 @@ use std::process::ExitCode;
 
 use fedzero::cli;
 use fedzero::config::{Policy, TrainConfig};
-use fedzero::coordinator::{Coordinator, CoordinatorConfig, ManagedDevice, SimBackend};
+use fedzero::coordinator::{
+    Coordinator, CoordinatorConfig, ManagedDevice, PipelineConfig, SimBackend,
+};
 use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::{BehaviorMix, Fleet};
 use fedzero::fl::dynamics::DynamicsConfig;
@@ -206,6 +208,7 @@ fn cmd_train_fl(p: &cli::Parsed) -> fedzero::Result<()> {
         server.set_dynamics(d);
     }
     server.set_shards(p.get_or("shards", 1)?)?;
+    server.set_pipeline(parse_pipeline(p.req("pipeline")?)?);
     if let Some(path) = p.get("metrics-jsonl") {
         server.add_sink(Box::new(JsonlSink::create(Path::new(path))?));
     }
@@ -255,6 +258,16 @@ fn parse_dynamics(name: &str, n: usize) -> fedzero::Result<Option<DynamicsConfig
         "mobile" => Ok(Some(DynamicsConfig::mobile(n))),
         other => Err(fedzero::FedError::Config(format!(
             "unknown dynamics '{other}' (none|mobile)"
+        ))),
+    }
+}
+
+fn parse_pipeline(v: &str) -> fedzero::Result<bool> {
+    match v {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => Err(fedzero::FedError::Config(format!(
+            "unknown pipeline mode '{other}' (on|off)"
         ))),
     }
 }
@@ -325,6 +338,9 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
         seed,
         target_loss: base.target_loss,
         shards: p.get_or("shards", 1)?,
+        // The knob lands in cfg (and thus the store meta), so `resume`
+        // and `replay` pick the same mode back up from the campaign.
+        pipeline: PipelineConfig::from(parse_pipeline(p.req("pipeline")?)?),
     };
     let snapshot_every: usize = p.get_or("snapshot-every", 16)?;
     let sleep_ms: u64 = p.get_or("round-sleep-ms", 0)?;

@@ -65,6 +65,37 @@ where
     out
 }
 
+/// A detached worker computing one value in the background — the
+/// threading primitive behind the coordinator's pipelined round driver:
+/// a [`crate::coordinator::RoundBackend`] kicks its training leg off in
+/// `begin_train` (e.g. [`crate::coordinator::SimBackend`] with a
+/// simulated device latency) and joins it in `finish_train`, leaving the
+/// coordinator thread free to speculatively schedule the next round in
+/// between.
+///
+/// Unlike [`parallel_map`] this is *not* scoped: the closure must own its
+/// inputs (`'static`), which is exactly the shape a backend's staged
+/// round plan has.
+#[derive(Debug)]
+pub struct BackgroundTask<T> {
+    handle: std::thread::JoinHandle<T>,
+}
+
+impl<T: Send + 'static> BackgroundTask<T> {
+    /// Start computing `f` on a background thread.
+    pub fn spawn<F>(f: F) -> Self
+    where
+        F: FnOnce() -> T + Send + 'static,
+    {
+        Self { handle: std::thread::spawn(f) }
+    }
+
+    /// Block until the value is ready. Panics in `f` propagate here.
+    pub fn join(self) -> T {
+        self.handle.join().expect("background task panicked")
+    }
+}
+
 /// Concurrent sharded fleet construction: per-shard class dedup on scoped
 /// threads ([`crate::sched::shard::dedup_slots`]), then the exact
 /// cross-shard merge. Bit-for-bit identical to
@@ -116,6 +147,12 @@ mod tests {
             assert_eq!(built.digest(), flat.digest());
             assert_eq!(built.n_classes(), 7);
         }
+    }
+
+    #[test]
+    fn background_task_returns_its_value() {
+        let task = BackgroundTask::spawn(|| (0..100u64).sum::<u64>());
+        assert_eq!(task.join(), 4950);
     }
 
     #[test]

@@ -198,11 +198,15 @@ impl DpMatrices {
 /// Results are **bit-for-bit identical** to [`solve`]: the warm path runs
 /// the exact same row-filling code on the exact same inputs, merely
 /// skipping rows whose inputs are unchanged.
-#[derive(Default)]
+// `Clone` lets the pipelined coordinator speculate round r+1's DP solve
+// on a private copy of the cache while round r trains, adopting the copy
+// only when the speculation validates.
+#[derive(Clone, Default)]
 pub struct WarmMc2mkp {
     cache: Option<WarmState>,
 }
 
+#[derive(Clone)]
 struct WarmState {
     classes: Classes,
     matrices: DpMatrices,

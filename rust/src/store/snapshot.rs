@@ -16,7 +16,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::{CoordinatorConfig, ManagedDevice};
+use crate::coordinator::{CoordinatorConfig, ManagedDevice, PipelineConfig};
 use crate::energy::battery::Battery;
 use crate::energy::power::{Behavior, PowerModel};
 use crate::error::{FedError, Result};
@@ -441,6 +441,7 @@ pub fn cfg_to_json(cfg: &CoordinatorConfig) -> Json {
         ("seed", ju(cfg.seed)),
         ("target_loss", target_loss),
         ("shards", Json::Num(cfg.shards as f64)),
+        ("pipeline", Json::Bool(cfg.pipeline.enabled)),
     ])
 }
 
@@ -461,6 +462,17 @@ pub fn cfg_from_json(v: &Json) -> Result<CoordinatorConfig> {
         target_loss,
         // Absent in pre-shard stores: default to the direct build path.
         shards: v.get("shards").and_then(|s| s.as_usize()).unwrap_or(1),
+        // Absent in pre-pipeline stores: default to the serial loop.
+        pipeline: match v.get("pipeline") {
+            Some(Json::Bool(b)) => {
+                if *b {
+                    PipelineConfig::on()
+                } else {
+                    PipelineConfig::off()
+                }
+            }
+            _ => PipelineConfig::off(),
+        },
     })
 }
 
@@ -616,6 +628,7 @@ mod tests {
             seed: u64::MAX - 3,
             target_loss: Some(0.125),
             shards: 8,
+            pipeline: PipelineConfig::on(),
         };
         let cb = cfg_from_json(&roundtrip(&cfg_to_json(&cfg))).unwrap();
         assert_eq!(cb.rounds, cfg.rounds);
@@ -624,11 +637,16 @@ mod tests {
         assert_eq!(cb.target_loss, cfg.target_loss);
         assert_eq!(cb.participation.to_bits(), cfg.participation.to_bits());
         assert_eq!(cb.shards, 8);
-        // Pre-shard stores (no "shards" key) default to the direct path.
+        assert!(cb.pipeline.enabled, "pipeline knob must round-trip");
+        // Pre-shard / pre-pipeline stores (missing keys) default to the
+        // direct build path and the serial loop.
         let mut legacy = cfg_to_json(&cfg);
         if let Json::Obj(fields) = &mut legacy {
             fields.remove("shards");
+            fields.remove("pipeline");
         }
-        assert_eq!(cfg_from_json(&roundtrip(&legacy)).unwrap().shards, 1);
+        let lb = cfg_from_json(&roundtrip(&legacy)).unwrap();
+        assert_eq!(lb.shards, 1);
+        assert!(!lb.pipeline.enabled);
     }
 }

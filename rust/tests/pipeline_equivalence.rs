@@ -1,0 +1,339 @@
+//! Differential proof of the pipelined round driver: **pipelined ≡
+//! serial**, bit-for-bit, for every registered solver.
+//!
+//! The pipelined coordinator overlaps round `r + 1`'s Scheduling with
+//! round `r`'s Training by speculating against predicted post-round
+//! state and adopting the speculation only when a guard digest over
+//! everything Scheduling reads matches (`rust/src/coordinator`). The
+//! acceptance bar here mirrors the shard suite's: a scenario-diverse
+//! generator sweep (Table 2 cost families × adversarial limit patterns ×
+//! duplication shapes, ≥ 200 cases total) across **all 12 registered
+//! solvers**, with fleet dynamics both off and on, comparing
+//!
+//! * every round row's loss/energy **bits**, participants, and tasks,
+//! * the final RNG state (equal state ⇒ every stochastic decision
+//!   matched),
+//! * the snapshot fingerprint (devices, batteries, drift, pool, ledger),
+//!
+//! plus journaled-campaign digests through a real store, and a
+//! SIGKILL-style kill/resume **mid-pipeline** (a speculation in flight
+//! when the process dies) that must still reproduce the serial clean
+//! run's campaign digest — pipelining never reaches the journal.
+
+use std::path::{Path, PathBuf};
+
+use fedzero::coordinator::{Coordinator, CoordinatorConfig, ManagedDevice, SimBackend};
+use fedzero::energy::battery::Battery;
+use fedzero::energy::power::{Behavior, PowerModel};
+use fedzero::fl::dynamics::DynamicsConfig;
+use fedzero::sched::instance::Instance;
+use fedzero::sched::solver::SolverRegistry;
+use fedzero::store::journal::{campaign_digest, JournalEntry};
+use fedzero::store::{get, snapshot as snap, CampaignStore};
+use fedzero::testkit::instances::{
+    Case, ALL_DUP_SHAPES, ALL_FAMILIES, ALL_LIMIT_PATTERNS,
+};
+use fedzero::util::json::Json;
+
+/// Abstract paper-style fleet mirroring a generated instance's devices.
+fn managed(inst: &Instance) -> Vec<ManagedDevice> {
+    (0..inst.n())
+        .map(|i| {
+            ManagedDevice::abstract_resource(
+                i,
+                inst.costs[i].clone(),
+                inst.lower[i],
+                inst.upper[i],
+            )
+        })
+        .collect()
+}
+
+fn cfg_for(case: &Case, algo: &str, participation: f64, pipeline: bool) -> CoordinatorConfig {
+    let inst = case.build();
+    CoordinatorConfig {
+        rounds: 5,
+        tasks_per_round: inst.tasks,
+        algo: algo.to_string(),
+        participation,
+        min_tasks: 0,
+        max_share: 1.0,
+        seed: case.seed ^ 0xA5A5,
+        target_loss: None,
+        shards: 1,
+        pipeline: pipeline.into(),
+    }
+}
+
+/// Everything a campaign decided, bit-exact: per-round row bits plus a
+/// fingerprint of the state the snapshot would persist (RNG, devices
+/// incl. batteries and drift, selection pool, ledger, last loss). The
+/// metrics subtree is deliberately excluded — `pipeline_*` counters are
+/// the one intended observable difference.
+fn run_campaign(
+    case: &Case,
+    algo: &str,
+    mobile: bool,
+    participation: f64,
+    pipeline: bool,
+) -> (Vec<(u64, u64, usize, usize)>, String) {
+    let inst = case.build();
+    let cfg = cfg_for(case, algo, participation, pipeline);
+    let rounds = cfg.rounds;
+    let mut c = Coordinator::new(cfg, managed(&inst), SimBackend::new()).unwrap();
+    if mobile {
+        c.set_dynamics(DynamicsConfig::mobile(inst.n()));
+    }
+    // Scenario-mismatched solvers (e.g. MarDecUn on a limited fleet)
+    // abort every round; aborts must pipeline identically too.
+    while c.rounds_run() < rounds {
+        let _ = c.round();
+    }
+    let rows = c
+        .log()
+        .rows()
+        .iter()
+        .map(|r| (r.loss.to_bits(), r.energy_j.to_bits(), r.participants, r.tasks))
+        .collect();
+    let state = c.snapshot_json();
+    let fingerprint = ["rng", "devices", "pool", "ledger", "last_loss", "next_round"]
+        .iter()
+        .map(|k| format!("{k}={}", state.get(k).expect("snapshot field").to_string()))
+        .collect::<Vec<_>>()
+        .join(";");
+    (rows, fingerprint)
+}
+
+/// The core property: across ≥ 200 generator cases spanning every
+/// scenario axis, each of the 12 registered solvers drives the exact
+/// same campaign with the pipeline on as off.
+#[test]
+fn pipelined_matches_serial_across_generator_cases_for_all_solvers() {
+    let registry = SolverRegistry::with_defaults(0);
+    let solvers = registry.names();
+    assert_eq!(solvers.len(), 12, "sweep must cover every registered solver");
+    let mut cases = 0usize;
+    for (si, solver) in solvers.iter().enumerate() {
+        for (fi, &family) in ALL_FAMILIES.iter().enumerate() {
+            for rep in 0..5u64 {
+                let case = Case {
+                    seed: 0x91BE_11E5
+                        ^ ((si as u64) << 32)
+                        ^ ((fi as u64) << 16)
+                        ^ rep,
+                    family,
+                    limits: ALL_LIMIT_PATTERNS
+                        [(si + fi + rep as usize) % ALL_LIMIT_PATTERNS.len()],
+                    dup: ALL_DUP_SHAPES[(si + rep as usize) % ALL_DUP_SHAPES.len()],
+                    distinct: 3,
+                    max_dup: 3,
+                    t: 4 + (rep as usize) * 2,
+                };
+                // Alternate dynamics and partial participation so the
+                // speculative Recosting replay (drift, churn, dropout
+                // draws) and the selection draw are both exercised.
+                let mobile = rep % 2 == 0;
+                let participation = if rep % 3 == 0 { 1.0 } else { 0.8 };
+                let serial = run_campaign(&case, solver, mobile, participation, false);
+                let piped = run_campaign(&case, solver, mobile, participation, true);
+                assert_eq!(
+                    serial, piped,
+                    "solver {solver}, mobile {mobile}, case {case:?}"
+                );
+                cases += 1;
+            }
+        }
+    }
+    assert!(cases >= 200, "only {cases} generator cases ran");
+}
+
+// ---- journaled campaigns: digests through a real store -----------------
+
+const ROUNDS: usize = 12;
+const SNAPSHOT_EVERY: usize = 4;
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("fedzero_pipeline_equivalence")
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A dynamic fleet with duplicated specs, a lower limit, mixed cost
+/// shapes, and a draining battery — the state speculation must predict.
+fn dynamic_fleet() -> Vec<ManagedDevice> {
+    use fedzero::sched::costs::CostFn;
+    let affine = CostFn::Affine { fixed: 0.0, per_task: 1.0 };
+    let quad = CostFn::Quadratic { fixed: 0.5, a: 0.25, b: 0.5 };
+    let sqrtish = CostFn::PowerLaw { fixed: 0.0, scale: 2.0, exponent: 0.6 };
+    let power = PowerModel {
+        idle_w: 0.1,
+        busy_w: 2.0,
+        batch_latency_s: 0.5,
+        behavior: Behavior::Linear,
+        curvature: 0.0,
+    }; // 1 J per task
+    vec![
+        ManagedDevice::abstract_resource(0, affine.clone(), 0, 4),
+        ManagedDevice::abstract_resource(1, affine, 0, 4),
+        ManagedDevice::abstract_resource(2, quad, 1, 5),
+        ManagedDevice::abstract_resource(3, sqrtish.clone(), 0, 6),
+        ManagedDevice::abstract_resource(4, sqrtish, 0, 6),
+        ManagedDevice {
+            id: 5,
+            cost: power.cost_fn(),
+            lower: 0,
+            data_cap: 8,
+            battery: Some(Battery {
+                capacity_wh: 60.0 / 3600.0, // 60 J total
+                level: 1.0,
+                round_budget_frac: 0.4,
+            }),
+            power: Some(power),
+            drift: 1.0,
+        },
+    ]
+}
+
+fn stored_cfg(solver: &str, seed: u64, pipeline: bool) -> CoordinatorConfig {
+    CoordinatorConfig {
+        rounds: ROUNDS,
+        tasks_per_round: 8,
+        algo: solver.to_string(),
+        participation: 0.8,
+        max_share: 1.0,
+        seed,
+        pipeline: pipeline.into(),
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn new_stored(
+    solver: &str,
+    seed: u64,
+    pipeline: bool,
+    dir: &Path,
+) -> Coordinator<SimBackend> {
+    let cfg = stored_cfg(solver, seed, pipeline);
+    let mut c =
+        Coordinator::new(cfg.clone(), dynamic_fleet(), SimBackend::new()).unwrap();
+    c.set_dynamics(DynamicsConfig::mobile(6));
+    let meta = Json::obj(vec![
+        ("snapshot_every", Json::Num(SNAPSHOT_EVERY as f64)),
+        ("cfg", snap::cfg_to_json(&cfg)),
+    ]);
+    let store = CampaignStore::create(dir, meta, c.snapshot_json()).unwrap();
+    c.attach_store(store).unwrap();
+    c
+}
+
+fn drive(c: &mut Coordinator<SimBackend>, upto: usize) {
+    while c.rounds_run() < upto {
+        let _ = c.round_stored();
+    }
+}
+
+fn run_stored(solver: &str, seed: u64, pipeline: bool, dir: &Path) -> Vec<JournalEntry> {
+    let mut c = new_stored(solver, seed, pipeline, dir);
+    drive(&mut c, ROUNDS);
+    CampaignStore::read(dir).unwrap().entries
+}
+
+fn assert_entries_equal(ctx: &str, a: &[JournalEntry], b: &[JournalEntry]) {
+    assert_eq!(a.len(), b.len(), "{ctx}: campaign length");
+    for (ea, eb) in a.iter().zip(b) {
+        assert_eq!(ea.round, eb.round, "{ctx}: round index");
+        assert_eq!(ea.solver, eb.solver, "{ctx}: effective solver, round {}", ea.round);
+        assert_eq!(ea.digest, eb.digest, "{ctx}: digest, round {}", ea.round);
+        assert_eq!(ea.rng_after, eb.rng_after, "{ctx}: RNG, round {}", ea.round);
+        assert_eq!(
+            ea.row.energy_j.to_bits(),
+            eb.row.energy_j.to_bits(),
+            "{ctx}: energy, round {}",
+            ea.round
+        );
+    }
+    assert_eq!(campaign_digest(a), campaign_digest(b), "{ctx}: campaign digest");
+}
+
+/// Journal-level equality: a pipelined stored campaign writes the exact
+/// journal a serial one does — entry by entry, digest for digest —
+/// including the warm-DP solver, the `auto` dispatcher, and the seeded
+/// `random` baseline.
+#[test]
+fn pipelined_campaign_digest_equals_serial_through_a_store() {
+    for (i, solver) in ["auto", "mc2mkp", "random", "marin"].iter().enumerate() {
+        let seed = 300 + i as u64;
+        let serial_dir = scratch(&format!("digest_{solver}_serial"));
+        let piped_dir = scratch(&format!("digest_{solver}_piped"));
+        let serial = run_stored(solver, seed, false, &serial_dir);
+        let piped = run_stored(solver, seed, true, &piped_dir);
+        assert_entries_equal(solver, &serial, &piped);
+        let _ = std::fs::remove_dir_all(&serial_dir);
+        let _ = std::fs::remove_dir_all(&piped_dir);
+    }
+}
+
+/// Kill/resume **mid-pipeline**: the pipelined campaign is dropped while
+/// a speculation for the next round is in flight (every committed round
+/// spawns one), resumed from its store — `resume` picks the pipeline
+/// mode back up from the persisted cfg — and must land on the serial
+/// clean run's exact campaign digest. Speculative state dies with the
+/// process and is simply re-derived; the journal never saw it.
+#[test]
+fn kill_and_resume_mid_pipeline_matches_clean_serial_run() {
+    let solver = "auto";
+    let seed = 777;
+    let clean_dir = scratch("kill_clean");
+    let clean = run_stored(solver, seed, false, &clean_dir);
+
+    for r in [1usize, 5, 9] {
+        let crash_dir = scratch(&format!("kill_crash_{r}"));
+        {
+            let mut c = new_stored(solver, seed, true, &crash_dir);
+            drive(&mut c, r);
+            // Dropping the coordinator IS the crash; the in-flight
+            // speculation for round r (created while round r-1 trained)
+            // dies un-journaled with it.
+            assert!(
+                c.metrics().counter("pipeline_speculations") > 0,
+                "campaign must actually have speculated before the kill"
+            );
+        }
+        let (store, contents) = CampaignStore::resume(&crash_dir).unwrap();
+        let cfg = snap::cfg_from_json(get(&contents.meta, "cfg").unwrap()).unwrap();
+        assert!(cfg.pipeline.enabled, "resume must restore the pipeline mode");
+        let mut c = Coordinator::restore(
+            cfg,
+            &contents.snapshot,
+            &contents.entries,
+            SimBackend::new(),
+            None,
+        )
+        .unwrap();
+        c.attach_store(store).unwrap();
+        drive(&mut c, ROUNDS);
+        let resumed = CampaignStore::read(&crash_dir).unwrap().entries;
+        assert_entries_equal(&format!("crash at {r}"), &clean, &resumed);
+        let _ = std::fs::remove_dir_all(&crash_dir);
+    }
+    let _ = std::fs::remove_dir_all(&clean_dir);
+}
+
+/// Speculation pays off where it should: on the sim backend the drain
+/// prediction is exact, so a dynamic campaign (churn + drift + dropout +
+/// battery) adopts every speculation it makes.
+#[test]
+fn dynamic_sim_campaign_adopts_every_speculation() {
+    let dir = scratch("hit_rate");
+    let mut c = new_stored("auto", 42, true, &dir);
+    drive(&mut c, ROUNDS);
+    let spec = c.metrics().counter("pipeline_speculations");
+    let hits = c.metrics().counter("pipeline_hits");
+    let misses = c.metrics().counter("pipeline_misses");
+    assert!(spec > 0, "a {ROUNDS}-round campaign must speculate");
+    assert_eq!(misses, 0, "sim predictions are exact; nothing may miss");
+    assert_eq!(hits, spec, "every speculation must be adopted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
