@@ -30,13 +30,22 @@
 //! gates pipelined round throughput **≥ 1.5×** serial; rows must be
 //! bit-identical and every speculation must adopt.
 //!
+//! A fourth scenario times **incremental round re-derivation**: a
+//! million-device fleet where ≤ 1% of devices re-cost per round, built
+//! through the persistent class index
+//! (`sched::incremental::FleetIndex` — mark dirty, re-classify only the
+//! dirty set, derive from live buckets) vs the from-scratch per-round
+//! rebuild. Every round's output is digest-asserted identical; the gate
+//! is **≥ 5×**, enforced on smoke and full alike (both legs are
+//! single-thread CPU work, so few-core runners measure the same ratio).
+//!
 //! `FEDZERO_BENCH_SMOKE=1` shrinks the sweep to `n = 10³` (solves),
-//! `n = 2·10⁵` (build), and `n = 2·10⁴` (pipeline) with quick timing —
-//! the CI regression gate. Every gated ratio FAILS the run (non-zero
-//! exit) when it regresses below its floor; the build-speedup assertion
-//! is full-sweep only (shared CI runners expose too few cores to gate a
-//! parallelism ratio honestly), and smoke's pipeline floor is a looser
-//! 1.2× tripwire for the same reason.
+//! `n = 2·10⁵` (build and incremental), and `n = 2·10⁴` (pipeline) with
+//! quick timing — the CI regression gate. Every gated ratio FAILS the
+//! run (non-zero exit) when it regresses below its floor; the
+//! build-speedup assertion is full-sweep only (shared CI runners expose
+//! too few cores to gate a parallelism ratio honestly), and smoke's
+//! pipeline floor is a looser 1.2× tripwire for the same reason.
 
 use std::time::{Duration, Instant};
 
@@ -45,6 +54,7 @@ use fedzero::coordinator::{Coordinator, CoordinatorConfig, ManagedDevice, SimBac
 use fedzero::runtime::pool;
 use fedzero::sched::costs::CostFn;
 use fedzero::sched::fleet::FleetInstance;
+use fedzero::sched::incremental::{from_scratch_round, FleetIndex, RoundParams};
 use fedzero::sched::instance::Instance;
 use fedzero::sched::{marco, mardecun, marin, mc2mkp};
 use fedzero::util::json::Json;
@@ -350,16 +360,113 @@ fn main() {
     ]);
     pipe_table.print();
 
+    // ---- incremental round re-derivation: persistent index vs rebuild ----
+    //
+    // What a coordinator round pays to *build* its instance when the
+    // fleet barely changed: 1% of devices re-cost per round. The
+    // persistent index re-classifies only the dirty set and derives the
+    // round instance from live buckets; the baseline re-buckets all n
+    // device signatures from scratch. Outputs are digest-asserted
+    // identical every round here, and property-tested under every churn
+    // shape in tests/incremental_equivalence.rs.
+    let incr_n: usize = if smoke { 200_000 } else { 1_000_000 };
+    let incr_rounds: usize = if smoke { 6 } else { 10 };
+    let churn_per_round = (incr_n / 100).max(1); // 1% of the fleet
+    let mut incr_rng = Rng::new(0x1DE8);
+    let class_costs: Vec<CostFn> = (0..K)
+        .map(|_| CostFn::Quadratic {
+            fixed: incr_rng.range_f64(0.0, 1.0),
+            a: incr_rng.range_f64(0.005, 0.1),
+            b: incr_rng.range_f64(0.5, 3.0),
+        })
+        .collect();
+    let mut incr_uppers: Vec<usize> = vec![8; incr_n];
+    let sig = |uppers: &[usize], d: usize| -> (CostFn, usize, usize) {
+        (class_costs[d % K].clone(), 0, uppers[d])
+    };
+    let incr_selected: Vec<usize> = (0..incr_n).collect();
+    let incr_params =
+        RoundParams { tasks: 2 * incr_n, min_tasks: 0, max_share: 1.0 };
+    let mut ix = FleetIndex::build(incr_n, |d| sig(&incr_uppers, d));
+    let mut incr_time = Duration::ZERO;
+    let mut rebuild_time = Duration::ZERO;
+    for _ in 0..incr_rounds {
+        // Recost 1% of the fleet (battery-style upper-limit moves), then
+        // build the round instance both ways over identical signatures.
+        let dirty: Vec<usize> = (0..churn_per_round)
+            .map(|_| incr_rng.index(incr_n))
+            .collect();
+        for &d in &dirty {
+            incr_uppers[d] = 1 + incr_rng.index(8);
+        }
+        let t0 = Instant::now();
+        for &d in &dirty {
+            ix.mark(d);
+        }
+        ix.apply(|d| sig(&incr_uppers, d));
+        let mut relaxed = false;
+        let (derived, derived_t) = ix
+            .derive(&incr_selected, &incr_params, &mut relaxed)
+            .unwrap()
+            .expect("fleet never exhausts");
+        incr_time += t0.elapsed();
+
+        let t1 = Instant::now();
+        let mut relaxed_scratch = false;
+        let (scratch, scratch_t) = from_scratch_round(
+            |d| sig(&incr_uppers, d),
+            &incr_selected,
+            &incr_params,
+            &mut relaxed_scratch,
+        )
+        .unwrap()
+        .expect("fleet never exhausts");
+        rebuild_time += t1.elapsed();
+        assert_eq!(
+            derived.digest(),
+            scratch.digest(),
+            "incremental build must be bit-identical to the rebuild"
+        );
+        assert_eq!(derived_t, scratch_t);
+        assert_eq!(relaxed, relaxed_scratch);
+    }
+    let incr_speedup =
+        rebuild_time.as_secs_f64() / incr_time.as_secs_f64().max(1e-9);
+    let mut incr_table = Table::new(
+        &format!(
+            "INCREMENTAL REBUILD: persistent index vs from-scratch round \
+             builds (n = {incr_n}, {incr_rounds} rounds, 1% churn)"
+        ),
+        &["mode", "total", "per round", "speedup"],
+    );
+    incr_table.rows_str(vec![
+        "rebuild".into(),
+        fmt_duration(rebuild_time.as_secs_f64()),
+        fmt_duration(rebuild_time.as_secs_f64() / incr_rounds as f64),
+        "1.0x".into(),
+    ]);
+    incr_table.rows_str(vec![
+        "incremental".into(),
+        fmt_duration(incr_time.as_secs_f64()),
+        fmt_duration(incr_time.as_secs_f64() / incr_rounds as f64),
+        format!("{incr_speedup:.1}x"),
+    ]);
+    incr_table.print();
+
     // ---- machine-readable trajectory (BENCH_fleet_scale.json) ------------
     //
     // Schema-versioned: CI copies this file to the repo-root
     // BENCH_fleet_scale.json snapshot, so committed trajectories must
     // state which shape they carry. Bump SCHEMA_VERSION whenever a field
     // is added, removed, or re-meant.
-    const SCHEMA_VERSION: usize = 2;
+    const SCHEMA_VERSION: usize = 3;
     let solve_gate = if smoke { 2.0 } else { 10.0 };
     let build_gate = 3.0f64;
     let build_pass = build_speedup >= build_gate;
+    // The incremental ratio compares two single-thread CPU legs over
+    // identical signatures, so it is enforced on smoke and full alike.
+    let incr_gate = 5.0f64;
+    let incr_pass = incr_speedup >= incr_gate;
     // The pipeline floor is 1.5× on the full sweep; smoke keeps a looser
     // 1.2× tripwire (same reasoning as the solve gate: what CI must catch
     // is the pipeline silently not overlapping, which reads ~1.0×, far
@@ -397,6 +504,18 @@ fn main() {
             ]),
         ),
         (
+            "incremental",
+            Json::obj(vec![
+                ("n", Json::Num(incr_n as f64)),
+                ("classes", Json::Num(K as f64)),
+                ("churn_pct", Json::Num(1.0)),
+                ("rounds", Json::Num(incr_rounds as f64)),
+                ("incremental_s", Json::Num(incr_time.as_secs_f64())),
+                ("rebuild_s", Json::Num(rebuild_time.as_secs_f64())),
+                ("speedup", Json::Num(incr_speedup)),
+            ]),
+        ),
+        (
             "gates",
             Json::obj(vec![
                 ("solve_worst_speedup", Json::Num(worst_marginal_speedup)),
@@ -406,6 +525,8 @@ fn main() {
                 ("build_pass", Json::Bool(build_pass)),
                 ("pipeline_gate", Json::Num(pipe_gate)),
                 ("pipeline_pass", Json::Bool(pipe_pass)),
+                ("incremental_gate", Json::Num(incr_gate)),
+                ("incremental_pass", Json::Bool(incr_pass)),
             ]),
         ),
     ]);
@@ -442,6 +563,11 @@ fn main() {
          observed {pipe_speedup:.2}x ({})",
         if pipe_pass { "PASS" } else { "FAIL" }
     );
+    println!(
+        "acceptance: incremental re-derivation ≥ {incr_gate}x rebuild at \
+         n = {incr_n}, 1% churn — observed {incr_speedup:.1}x ({})",
+        if incr_pass { "PASS" } else { "FAIL" }
+    );
     assert!(
         worst_marginal_speedup >= solve_gate,
         "class-path speedup regressed below {solve_gate}x"
@@ -453,5 +579,10 @@ fn main() {
     assert!(
         pipe_pass,
         "pipelined round throughput regressed below {pipe_gate}x serial"
+    );
+    assert!(
+        incr_pass,
+        "incremental round re-derivation regressed below {incr_gate}x the \
+         from-scratch rebuild"
     );
 }

@@ -255,6 +255,7 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "dynamics", help: "fleet dynamics: none | mobile (churn, drift, dropout)", takes_value: true, default: Some("none") },
                     OptSpec { name: "shards", help: "per-round instance-build shards (concurrent class dedup; schedules are bit-for-bit identical for any value)", takes_value: true, default: Some("1") },
                     OptSpec { name: "pipeline", help: "overlap next-round scheduling with training: on | off (campaigns are bit-for-bit identical either way)", takes_value: true, default: Some("off") },
+                    OptSpec { name: "incremental", help: "persistent class index, re-derive rounds from the dirty set: on | off (schedules are bit-for-bit identical either way)", takes_value: true, default: Some("off") },
                     OptSpec { name: "round-sleep-ms", help: "sleep between rounds (crash-recovery testing; sim only)", takes_value: true, default: Some("0") },
                 ],
                 positional: vec![],
@@ -376,6 +377,17 @@ mod tests {
         let p = app.parse(&args(&["train", "--pipeline", "on"])).unwrap();
         assert_eq!(p.get("pipeline"), Some("on"));
         assert_eq!(p.get_explicit("pipeline"), Some("on"));
+    }
+
+    #[test]
+    fn incremental_flag_parses_on_train() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["train", "--backend", "sim"])).unwrap();
+        assert_eq!(p.get("incremental"), Some("off"), "default");
+        assert_eq!(p.get_explicit("incremental"), None);
+        let p = app.parse(&args(&["train", "--incremental", "on"])).unwrap();
+        assert_eq!(p.get("incremental"), Some("on"));
+        assert_eq!(p.get_explicit("incremental"), Some("on"));
     }
 
     #[test]

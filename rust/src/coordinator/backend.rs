@@ -40,7 +40,13 @@ pub struct RoundPlan {
     pub assignments: Vec<Assignment>,
 }
 
-/// What one device reports back from local training.
+/// What one device reports back from local training. Besides feeding
+/// the energy ledger, the measured `energy_j` drains the device's
+/// battery — a Recosting input that dirty-marks the device in the
+/// persistent class index ([`crate::sched::incremental::FleetIndex`])
+/// when incremental re-derivation is on. Backends return exactly one
+/// outcome per assignment, which is what lets the speculative path
+/// predict the dirty set before outcomes exist.
 #[derive(Clone, Debug)]
 pub struct DeviceOutcome {
     /// Stable device id.

@@ -105,6 +105,18 @@ impl ManagedDevice {
             b.drain(joules);
         }
     }
+
+    /// The raw class signature the persistent index
+    /// ([`crate::sched::incremental::FleetIndex`]) buckets this device
+    /// on: drift-scaled cost, intrinsic lower limit, battery-capped
+    /// upper limit. Devices with equal signatures are interchangeable
+    /// for scheduling — exactly the equivalence [`crate::sched::fleet`]
+    /// collapses into classes. Any mutation that can change this triple
+    /// (drains, drift re-scaling) must dirty-mark the device in the
+    /// index.
+    pub fn class_signature(&self) -> (CostFn, usize, usize) {
+        (self.current_cost(), self.lower, self.effective_upper())
+    }
 }
 
 #[cfg(test)]
@@ -170,6 +182,18 @@ mod tests {
         assert!((d.partial_energy_j(1) - 3.0).abs() < 1e-12, "half of C(2)");
         assert!((d.partial_energy_j(3) - 8.0).abs() < 1e-12);
         assert!((d.partial_energy_j(9) - 9.0).abs() < 1e-12, "clamped to cap");
+    }
+
+    #[test]
+    fn class_signature_tracks_drain_and_drift() {
+        let mut d = powered();
+        let s0 = d.class_signature();
+        assert_eq!(s0.1, 0);
+        assert_eq!(s0.2, 36);
+        d.drain(1800.0);
+        assert_eq!(d.class_signature().2, 18, "drain moves the upper");
+        d.drift = 1.5;
+        assert_ne!(d.class_signature().0, s0.0, "drift moves the cost");
     }
 
     #[test]

@@ -66,6 +66,7 @@ use crate::runtime::pool;
 use crate::sched::auto::{best_algorithm, classify_fleet};
 use crate::sched::costs::CostFn;
 use crate::sched::fleet::FleetInstance;
+use crate::sched::incremental::{self, FleetIndex, RoundParams};
 use crate::sched::instance::{Instance, Schedule};
 use crate::sched::mc2mkp::WarmMc2mkp;
 use crate::sched::solver::SolverRegistry;
@@ -138,6 +139,37 @@ impl From<bool> for PipelineConfig {
     }
 }
 
+/// Incremental round re-derivation knob: keep a persistent device→class
+/// index ([`FleetIndex`]) alive across rounds and re-classify only the
+/// devices Recosting actually touched, instead of re-bucketing all `n`
+/// devices every Scheduling phase. Off by default — like `shards` and
+/// `pipeline` it is a pure wall-clock knob (journals, digests, and RNG
+/// streams are bit-for-bit identical on or off), but the from-scratch
+/// build stays the reference the equivalence suite compares against.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IncrementalConfig {
+    /// Maintain the persistent class index.
+    pub enabled: bool,
+}
+
+impl IncrementalConfig {
+    /// Incremental re-derivation on.
+    pub fn on() -> Self {
+        Self { enabled: true }
+    }
+
+    /// Incremental re-derivation off (the default).
+    pub fn off() -> Self {
+        Self { enabled: false }
+    }
+}
+
+impl From<bool> for IncrementalConfig {
+    fn from(enabled: bool) -> Self {
+        Self { enabled }
+    }
+}
+
 /// What the coordinator needs to know to drive rounds (the scheduling
 /// subset of [`TrainConfig`], minus the ML-side knobs).
 #[derive(Clone, Debug)]
@@ -173,6 +205,11 @@ pub struct CoordinatorConfig {
     /// `shards`, a pure wall-clock knob: journals, digests, and RNG
     /// streams are bit-for-bit identical on or off.
     pub pipeline: PipelineConfig,
+    /// Derive each round's instance from the persistent class index
+    /// instead of re-bucketing all devices (see [`IncrementalConfig`]).
+    /// When enabled it supersedes the sharded build for round
+    /// derivation — there is no `O(n)` bucketing left to shard.
+    pub incremental: IncrementalConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -188,6 +225,7 @@ impl Default for CoordinatorConfig {
             target_loss: None,
             shards: 1,
             pipeline: PipelineConfig::off(),
+            incremental: IncrementalConfig::off(),
         }
     }
 }
@@ -206,6 +244,7 @@ impl CoordinatorConfig {
             target_loss: cfg.target_loss,
             shards: 1,
             pipeline: PipelineConfig::off(),
+            incremental: IncrementalConfig::off(),
         }
     }
 }
@@ -317,6 +356,11 @@ pub struct Coordinator<B: RoundBackend> {
     /// journaled, never snapshotted: a restored coordinator simply
     /// prepares its first round serially.
     speculation: Option<Speculation>,
+    /// Persistent device→class index (incremental re-derivation only).
+    /// Like the warm-DP cache it is pure derived state: never journaled,
+    /// never snapshotted — rebuilt lazily (`incr_index_rebuilds`) on the
+    /// first incremental prepare after construction or restore.
+    index: Option<FleetIndex>,
 }
 
 impl<B: RoundBackend> Coordinator<B> {
@@ -367,6 +411,7 @@ impl<B: RoundBackend> Coordinator<B> {
             trace: None,
             record_trace: false,
             speculation: None,
+            index: None,
         })
     }
 
@@ -400,6 +445,22 @@ impl<B: RoundBackend> Coordinator<B> {
         if !enabled {
             self.speculation = None;
         }
+    }
+
+    /// Enable/disable incremental round re-derivation (see
+    /// [`IncrementalConfig`]). Safe to flip between rounds: the derived
+    /// instances are bit-for-bit identical either way. Flipping discards
+    /// the index (enabling rebuilds it lazily at the next serial
+    /// prepare) and any in-flight speculation — a speculation made under
+    /// the other mode carries the wrong deferred metric increments and,
+    /// when enabling, no index fingerprint to validate against.
+    pub fn set_incremental(&mut self, enabled: bool) {
+        if self.cfg.incremental.enabled == enabled {
+            return;
+        }
+        self.cfg.incremental.enabled = enabled;
+        self.speculation = None;
+        self.index = None;
     }
 
     /// Current phase.
@@ -509,6 +570,16 @@ impl<B: RoundBackend> Coordinator<B> {
     /// classes — on real fleets `k ≪ n`, which is what the class-aware
     /// solvers exploit.
     ///
+    /// The scheduling subset of the config the round limit transform
+    /// reads (shared between the from-scratch and incremental paths).
+    fn round_params(cfg: &CoordinatorConfig) -> RoundParams {
+        RoundParams {
+            tasks: cfg.tasks_per_round,
+            min_tasks: cfg.min_tasks,
+            max_share: cfg.max_share,
+        }
+    }
+
     /// State-parametric (no `&self`): the serial path passes the live
     /// fleet, the pipelined path a *predicted* clone — identical code, so
     /// an adopted speculation cannot diverge from the serial build.
@@ -521,58 +592,23 @@ impl<B: RoundBackend> Coordinator<B> {
         raw_uppers: &[usize],
         incs: &mut Vec<(&'static str, u64)>,
     ) -> Result<(FleetInstance, usize)> {
-        // Overflow-safe capacity: "unlimited" devices may carry
-        // `usize::MAX` uppers (same encoding Instance::validate hardens
-        // against), so clamp each term to T before a saturating fold.
-        let t_req = cfg.tasks_per_round;
-        let capacity: usize = raw_uppers
-            .iter()
-            .fold(0usize, |a, &u| a.saturating_add(u.min(t_req)));
-        debug_assert!(capacity > 0, "caller degrades zero capacity to an empty round");
-        let t = t_req.min(capacity);
-
-        // Over-representation guard (§6): cap any device at max_share · T,
-        // doubling the cap until the capped fleet can still absorb T.
-        let mut cap = ((t as f64 * cfg.max_share).ceil() as usize).max(1);
-        let uppers: Vec<usize> = loop {
-            let capped: Vec<usize> = raw_uppers.iter().map(|&u| u.min(cap)).collect();
-            if capped
-                .iter()
-                .fold(0usize, |a, &c| a.saturating_add(c))
-                >= t
-            {
-                break capped;
-            }
-            cap *= 2;
-        };
-
-        // Lower limits: config-level minimum joined with each device's
-        // intrinsic minimum, clamped to the (possibly share-capped) upper.
-        let lower: Vec<usize> = selected
-            .iter()
-            .zip(&uppers)
-            .map(|(&d, &u)| cfg.min_tasks.max(devices[d].lower).min(u))
-            .collect();
-        // Relax in two stages when ΣL overshoots T: first drop the
-        // config-level minimum and keep only the intrinsic device minima;
-        // if even those sum above T (a small round over a demanding
-        // fleet), drop all lower limits rather than failing every round —
-        // metered so the relaxation is observable.
-        let lower = if lower.iter().sum::<usize>() > t {
-            let intrinsic: Vec<usize> = selected
-                .iter()
-                .zip(&uppers)
-                .map(|(&d, &u)| devices[d].lower.min(u))
-                .collect();
-            if intrinsic.iter().sum::<usize>() > t {
-                incs.push(("lower_limits_relaxed", 1));
-                vec![0; uppers.len()]
-            } else {
-                intrinsic
-            }
-        } else {
-            lower
-        };
+        // The round's limit transform (capacity clamp, §6 share cap,
+        // staged lower relaxation) lives in ONE place —
+        // `incremental::effective_limits` — shared with the persistent
+        // index's per-class derivation, so the two build paths cannot
+        // drift apart.
+        let raw_lowers: Vec<usize> =
+            selected.iter().map(|&d| devices[d].lower).collect();
+        let mut relaxed = false;
+        let (t, lower, uppers) = incremental::effective_limits(
+            &Self::round_params(cfg),
+            &raw_lowers,
+            raw_uppers,
+            &mut relaxed,
+        );
+        if relaxed {
+            incs.push(("lower_limits_relaxed", 1));
+        }
         let fleet = if cfg.shards > 1 {
             // Sharded build: materialize the flat device sequence once,
             // fan the per-shard class dedup out over scoped threads, and
@@ -767,6 +803,16 @@ impl<B: RoundBackend> Coordinator<B> {
     /// thin wrapper over [`Coordinator::schedule_for`], which is the ONE
     /// code body both this serial path and the speculative path run.
     fn prepare_round(&mut self) -> Result<PreparedRound> {
+        if self.cfg.incremental.enabled && self.index.is_none() {
+            // Lazy full classification — the one O(n) pass (first round,
+            // or first after restore / toggling the knob). Every later
+            // round pays only for its dirty set.
+            let devices = &self.devices;
+            self.index = Some(FleetIndex::build(devices.len(), |d| {
+                devices[d].class_signature()
+            }));
+            self.metrics.inc("incr_index_rebuilds", 1);
+        }
         let mut incs = Vec::new();
         let out = Self::schedule_for(
             &self.cfg,
@@ -775,6 +821,7 @@ impl<B: RoundBackend> Coordinator<B> {
             &mut self.rng,
             &self.pool,
             &self.devices,
+            self.index.as_mut(),
             &mut incs,
         );
         for (key, v) in incs {
@@ -790,7 +837,11 @@ impl<B: RoundBackend> Coordinator<B> {
     /// run THIS body. The guard digest proves equal inputs; sharing the
     /// body is what proves equal code, so the two paths cannot drift.
     /// Metric increments go through `incs` (the speculative path defers
-    /// them until adoption).
+    /// them until adoption). With incremental re-derivation on, `index`
+    /// carries the persistent class index (live or a speculative clone):
+    /// the pending dirty set is applied and the instance derived per
+    /// class — bit-for-bit what the from-scratch branch builds.
+    #[allow(clippy::too_many_arguments)]
     fn schedule_for(
         cfg: &CoordinatorConfig,
         registry: &SolverRegistry,
@@ -798,6 +849,7 @@ impl<B: RoundBackend> Coordinator<B> {
         rng: &mut Rng,
         pool: &[usize],
         devices: &[ManagedDevice],
+        index: Option<&mut FleetIndex>,
         incs: &mut Vec<(&'static str, u64)>,
     ) -> Result<PreparedRound> {
         if pool.is_empty() {
@@ -813,18 +865,42 @@ impl<B: RoundBackend> Coordinator<B> {
         // maximizes the unchanged class prefix the warm DP can reuse.
         selected.sort_unstable();
 
-        // Exhausted fleet (e.g. every selected battery drained to zero):
-        // degrade to an empty round instead of aborting the run.
-        let raw_uppers: Vec<usize> = selected
-            .iter()
-            .map(|&d| devices[d].effective_upper())
-            .collect();
-        if raw_uppers.iter().all(|&u| u == 0) {
-            return Ok(PreparedRound::Empty { exhausted: true });
-        }
-
-        let (fleet, t) =
-            Self::build_instance_for(cfg, devices, &selected, &raw_uppers, incs)?;
+        let (fleet, t) = match index {
+            Some(ix) => {
+                // Incremental path: drain the dirty set, then derive the
+                // instance from raw classes — O(selected + dirty) instead
+                // of O(n) heavy work. Supersedes the sharded build (there
+                // is no O(n) bucketing left to fan out, so no
+                // `fleet_shards` increments on this path).
+                incs.push(("incr_dirty", ix.pending_len() as u64));
+                let moved = ix.apply(|d| devices[d].class_signature());
+                incs.push(("incr_reclassified", moved as u64));
+                let mut relaxed = false;
+                let built =
+                    ix.derive(&selected, &Self::round_params(cfg), &mut relaxed)?;
+                if relaxed {
+                    incs.push(("lower_limits_relaxed", 1));
+                }
+                match built {
+                    // Exhausted fleet (every selected battery drained to
+                    // zero): degrade to an empty round.
+                    None => return Ok(PreparedRound::Empty { exhausted: true }),
+                    Some(bt) => bt,
+                }
+            }
+            None => {
+                // Exhausted fleet: degrade to an empty round instead of
+                // aborting the run.
+                let raw_uppers: Vec<usize> = selected
+                    .iter()
+                    .map(|&d| devices[d].effective_upper())
+                    .collect();
+                if raw_uppers.iter().all(|&u| u == 0) {
+                    return Ok(PreparedRound::Empty { exhausted: true });
+                }
+                Self::build_instance_for(cfg, devices, &selected, &raw_uppers, incs)?
+            }
+        };
         incs.push(("fleet_devices", fleet.n_devices() as u64));
         incs.push(("fleet_classes", fleet.n_classes() as u64));
         let instance = fleet.to_flat();
@@ -904,6 +980,14 @@ impl<B: RoundBackend> Coordinator<B> {
                 let wasted = self.devices[d].partial_energy_j(done);
                 self.ledger.record(self.devices[d].id, wasted);
                 self.devices[d].drain(wasted);
+                // A drain can move a battery device's effective upper —
+                // dirty-mark it for the class index (mains devices
+                // no-op the drain, so their signature cannot change).
+                if self.devices[d].battery.is_some() {
+                    if let Some(ix) = self.index.as_mut() {
+                        ix.mark(d);
+                    }
+                }
                 self.metrics.inc("dropouts", 1);
                 continue;
             }
@@ -937,6 +1021,12 @@ impl<B: RoundBackend> Coordinator<B> {
         for o in &outcomes {
             self.ledger.record(o.device_id, o.energy_j);
             self.devices[o.device].drain(o.energy_j);
+            // Same dirty-marking rule as the dropout drains above.
+            if self.devices[o.device].battery.is_some() {
+                if let Some(ix) = self.index.as_mut() {
+                    ix.mark(o.device);
+                }
+            }
             sim_time_s = sim_time_s.max(o.sim_time_s); // devices run in parallel
             loss_sum += o.mean_loss * o.tasks as f64;
             loss_n += o.tasks;
@@ -996,10 +1086,25 @@ impl<B: RoundBackend> Coordinator<B> {
     /// a speculation being adopted.
     fn take_speculation(&mut self, round_idx: usize) -> Option<PlannedRound> {
         let spec = self.speculation.take()?;
-        if spec.round != round_idx
-            || spec.guard
-                != Self::scheduling_guard(&self.rng, &self.pool, &self.devices)
-        {
+        let mut guard =
+            Self::scheduling_guard(&self.rng, &self.pool, &self.devices);
+        if self.cfg.incremental.enabled {
+            match &self.index {
+                // The incremental guard additionally covers the index
+                // state (classification + un-applied dirty set): equal
+                // fingerprints prove the speculative clone's apply +
+                // derive was a pure-function replay of what the serial
+                // prepare will now skip.
+                Some(ix) => guard = mix_u64(guard, ix.fingerprint()),
+                // No live index (knob just toggled on): the serial
+                // prepare must build it — force a miss.
+                None => {
+                    self.metrics.inc("pipeline_misses", 1);
+                    return None;
+                }
+            }
+        }
+        if spec.round != round_idx || spec.guard != guard {
             self.metrics.inc("pipeline_misses", 1);
             return None;
         }
@@ -1051,9 +1156,31 @@ impl<B: RoundBackend> Coordinator<B> {
         // prepares serially. Dropout victims drained *before* the plan
         // was built, so the live device state already carries them.
         let mut devices = self.devices.clone();
+        // Incremental re-derivation speculates on a CLONE of the class
+        // index, discarded afterwards — a wrong prediction can never
+        // corrupt the live index (the live dirty set keeps accumulating
+        // from actual drains and is applied at the next serial prepare).
+        let mut index = if self.cfg.incremental.enabled {
+            match &self.index {
+                Some(ix) => Some(ix.clone()),
+                // Transient (knob just toggled on): the serial prepare
+                // builds the index first; nothing to speculate against.
+                None => return Ok(None),
+            }
+        } else {
+            None
+        };
         for a in &plan.assignments {
             let e = plan.instance.costs[a.slot].eval(a.tasks);
             devices[a.device].drain(e);
+            // Predicted dirty marks mirror finish_train's: backends
+            // return one outcome per assignment, so the marked device
+            // set matches the live one exactly.
+            if devices[a.device].battery.is_some() {
+                if let Some(ix) = index.as_mut() {
+                    ix.mark(a.device);
+                }
+            }
         }
         // Recosting's drift/availability steps and RNG draws depend only
         // on dynamics + RNG state — never on training results — so the
@@ -1064,14 +1191,27 @@ impl<B: RoundBackend> Coordinator<B> {
         if let Some(drift) = dynamics.drift.as_mut() {
             drift.step(&mut rng);
             for (i, dev) in devices.iter_mut().enumerate() {
-                dev.drift = drift.scale(i);
+                let s = drift.scale(i);
+                if dev.drift != s {
+                    dev.drift = s;
+                    if let Some(ix) = index.as_mut() {
+                        ix.mark(i);
+                    }
+                }
             }
         }
         let pool: Vec<usize> = match dynamics.availability.as_mut() {
             Some(av) => av.step(&mut rng),
             None => (0..devices.len()).collect(),
         };
-        let guard = Self::scheduling_guard(&rng, &pool, &devices);
+        let mut guard = Self::scheduling_guard(&rng, &pool, &devices);
+        // Fingerprint the clone BEFORE schedule_for applies its dirty
+        // set: adoption compares against the live index in the same
+        // pre-apply state (classification as of the last apply + the
+        // accumulated dirty set).
+        if let Some(ix) = &index {
+            guard = mix_u64(guard, ix.fingerprint());
+        }
 
         // From here on: the ONE Scheduling body (`schedule_for`), against
         // the predicted state.
@@ -1084,6 +1224,7 @@ impl<B: RoundBackend> Coordinator<B> {
             &mut rng,
             &pool,
             &devices,
+            index.as_mut(),
             &mut incs,
         )? {
             PreparedRound::Planned(p) => p,
@@ -1115,11 +1256,21 @@ impl<B: RoundBackend> Coordinator<B> {
         self.transition(Phase::Recosting)?;
         // Advance fleet dynamics for the NEXT round: drift the energy
         // profiles and churn availability. Battery state was already
-        // re-costed in place as energy was recorded.
+        // re-costed in place as energy was recorded (and dirty-marked).
+        // Drift assignment is conditional so only devices whose scale
+        // actually moved are marked — storing the same bits either way,
+        // non-incremental behavior is unchanged. Availability never
+        // changes a signature, so it never marks.
         if let Some(drift) = self.dynamics.drift.as_mut() {
             drift.step(&mut self.rng);
             for (i, dev) in self.devices.iter_mut().enumerate() {
-                dev.drift = drift.scale(i);
+                let s = drift.scale(i);
+                if dev.drift != s {
+                    dev.drift = s;
+                    if let Some(ix) = self.index.as_mut() {
+                        ix.mark(i);
+                    }
+                }
             }
         }
         self.pool = match self.dynamics.availability.as_mut() {
@@ -2075,5 +2226,232 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(go(), go());
+    }
+
+    // ---- incremental round re-derivation ------------------------------
+
+    /// Fingerprint of a finished campaign: every row's bits, the RNG
+    /// stream position, and the ledger total. Metrics are deliberately
+    /// excluded — the incremental/pipeline/shard knobs meter themselves
+    /// differently by design, while everything here must be identical.
+    fn campaign_bits<B: RoundBackend>(
+        c: &Coordinator<B>,
+    ) -> (Vec<(u64, u64, usize, usize)>, [u64; 4], u64) {
+        let rows = c
+            .log()
+            .rows()
+            .iter()
+            .map(|r| {
+                (r.loss.to_bits(), r.energy_j.to_bits(), r.participants, r.tasks)
+            })
+            .collect();
+        (rows, c.rng.state(), c.ledger().total().to_bits())
+    }
+
+    #[test]
+    fn incremental_campaign_is_bit_for_bit_with_dynamics() {
+        // Same campaign under every knob combination (churn, drift, and
+        // dropout engaged so the dirty set genuinely varies): rows, RNG
+        // stream, and ledger must match the plain serial run exactly —
+        // incremental derivation, like sharding and pipelining, is a
+        // wall-clock knob, never a scheduling change.
+        let run = |incremental: bool, pipeline: bool, shards: usize| {
+            let cfg = CoordinatorConfig {
+                rounds: 8,
+                incremental: incremental.into(),
+                pipeline: pipeline.into(),
+                shards,
+                ..paper_cfg()
+            };
+            let mut c =
+                Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+            c.set_dynamics(DynamicsConfig::mobile(3));
+            c.run().unwrap();
+            campaign_bits(&c)
+        };
+        let reference = run(false, false, 1);
+        assert_eq!(reference, run(true, false, 1), "incremental serial");
+        assert_eq!(reference, run(true, true, 1), "incremental + pipeline");
+        assert_eq!(reference, run(true, false, 3), "incremental + shards");
+        assert_eq!(reference, run(true, true, 3), "all knobs");
+    }
+
+    #[test]
+    fn incremental_is_metered_and_supersedes_sharding() {
+        let cfg = CoordinatorConfig {
+            rounds: 4,
+            incremental: IncrementalConfig::on(),
+            shards: 3,
+            ..paper_cfg()
+        };
+        let mut c =
+            Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+        c.set_dynamics(DynamicsConfig::mobile(3));
+        c.run().unwrap();
+        // One lazy full classification, then dirty-set-only rounds.
+        assert_eq!(c.metrics().counter("incr_index_rebuilds"), 1);
+        // The counters exist even when zero devices moved (inc(_, 0)
+        // creates the entry), so their presence is pinned.
+        let _ = c.metrics().counter("incr_dirty");
+        let _ = c.metrics().counter("incr_reclassified");
+        // No O(n) bucketing runs, so nothing is sharded on this path.
+        assert_eq!(c.metrics().counter("fleet_shards"), 0);
+        // And the from-scratch path must not emit index metrics at all.
+        let mut plain =
+            Coordinator::new(paper_cfg(), paper_fleet(), SimBackend::new())
+                .unwrap();
+        plain.run().unwrap();
+        assert_eq!(plain.metrics().counter("incr_index_rebuilds"), 0);
+        assert!(!plain.metrics().summary().contains("incr_"));
+    }
+
+    #[test]
+    fn incremental_battery_recosting_is_bit_for_bit() {
+        use crate::energy::battery::Battery;
+        use crate::energy::power::{Behavior, PowerModel};
+        // The battery-drain recost scenario (work shifts to the expensive
+        // device as the battery empties) under incremental derivation:
+        // drains dirty-mark the device, and the re-derived rounds match
+        // the from-scratch run to the bit.
+        let power = PowerModel {
+            idle_w: 0.0,
+            busy_w: 2.0,
+            batch_latency_s: 0.5,
+            behavior: Behavior::Linear,
+            curvature: 0.0,
+        }; // 1 J per task
+        let fleet = || {
+            vec![
+                ManagedDevice {
+                    id: 0,
+                    cost: power.cost_fn(),
+                    lower: 0,
+                    data_cap: 10,
+                    battery: Some(Battery {
+                        capacity_wh: 8.0 / 3600.0,
+                        level: 1.0,
+                        round_budget_frac: 0.5,
+                    }),
+                    power: Some(power.clone()),
+                    drift: 1.0,
+                },
+                ManagedDevice::abstract_resource(
+                    1,
+                    CostFn::Affine { fixed: 0.0, per_task: 100.0 },
+                    0,
+                    10,
+                ),
+            ]
+        };
+        let run = |incremental: bool| {
+            let cfg = CoordinatorConfig {
+                rounds: 3,
+                tasks_per_round: 4,
+                algo: "auto".into(),
+                max_share: 1.0,
+                incremental: incremental.into(),
+                ..CoordinatorConfig::default()
+            };
+            let mut c = Coordinator::new(cfg, fleet(), SimBackend::new()).unwrap();
+            c.run().unwrap();
+            campaign_bits(&c)
+        };
+        let (rows, _, _) = run(false);
+        assert!(
+            (f64::from_bits(rows[1].1) - 202.0).abs() < 1e-9,
+            "round 2 must overflow to the expensive device"
+        );
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn incremental_speculations_hit_on_a_predictable_fleet() {
+        // Static mains fleet: no drains change signatures, the index
+        // fingerprint is constant, and every speculation must still
+        // adopt — the incremental guard must never spuriously miss.
+        let cfg = CoordinatorConfig {
+            rounds: 5,
+            incremental: IncrementalConfig::on(),
+            pipeline: PipelineConfig::on(),
+            ..paper_cfg()
+        };
+        let mut c =
+            Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+        c.run().unwrap();
+        assert_eq!(c.metrics().counter("pipeline_speculations"), 4);
+        assert_eq!(c.metrics().counter("pipeline_hits"), 4);
+        assert_eq!(c.metrics().counter("pipeline_misses"), 0);
+        assert_eq!(c.metrics().counter("incr_index_rebuilds"), 1);
+    }
+
+    #[test]
+    fn toggling_incremental_discards_index_and_speculation() {
+        let cfg = CoordinatorConfig {
+            rounds: 6,
+            pipeline: PipelineConfig::on(),
+            ..paper_cfg()
+        };
+        let mut c =
+            Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+        c.round().unwrap();
+        assert!(c.speculation.is_some(), "round 1's speculation is in flight");
+        // Enabling mid-campaign: the stale speculation (from-scratch
+        // mode) must not be adopted into incremental mode.
+        c.set_incremental(true);
+        assert!(c.speculation.is_none());
+        assert!(c.index.is_none(), "index is built lazily, not eagerly");
+        c.round().unwrap();
+        assert!(c.index.is_some());
+        assert_eq!(c.metrics().counter("incr_index_rebuilds"), 1);
+        // Disabling drops the index; re-enabling rebuilds it.
+        c.set_incremental(false);
+        assert!(c.index.is_none());
+        c.round().unwrap();
+        c.set_incremental(true);
+        c.round().unwrap();
+        assert_eq!(c.metrics().counter("incr_index_rebuilds"), 2);
+        // A no-op set must not discard anything.
+        let spec_before = c.speculation.is_some();
+        c.set_incremental(true);
+        assert_eq!(c.speculation.is_some(), spec_before);
+        assert!(c.index.is_some());
+    }
+
+    #[test]
+    fn snapshot_restore_under_incremental_resumes_bit_for_bit() {
+        // Snapshot two rounds into an incremental campaign (dynamics
+        // engaged), restore, and continue both: identical rows and RNG.
+        // The index is never snapshotted — the restored side rebuilds it
+        // lazily and must land on the same bits.
+        let cfg = CoordinatorConfig {
+            rounds: 5,
+            incremental: IncrementalConfig::on(),
+            ..paper_cfg()
+        };
+        let mut a =
+            Coordinator::new(cfg.clone(), paper_fleet(), SimBackend::new())
+                .unwrap();
+        a.set_dynamics(DynamicsConfig::mobile(3));
+        a.round().unwrap();
+        a.round().unwrap();
+        let state = Json::parse(&a.snapshot_json().to_string()).unwrap();
+        // The index itself must never leak into snapshots (the incr_*
+        // metrics counters legitimately persist through the metrics
+        // hub; the classification state does not).
+        assert!(!a.snapshot_json().to_string().contains("device_class"));
+        let mut b =
+            Coordinator::restore(cfg, &state, &[], SimBackend::new(), None)
+                .unwrap();
+        assert!(b.index.is_none(), "restore leaves the index to lazy rebuild");
+        for _ in 0..3 {
+            let ra = a.round().unwrap();
+            let rb = b.round().unwrap();
+            assert_eq!(ra.energy_j.to_bits(), rb.energy_j.to_bits());
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+            assert_eq!(ra.participants, rb.participants);
+            assert_eq!(ra.tasks, rb.tasks);
+        }
+        assert_eq!(a.rng.state(), b.rng.state());
+        assert!(b.index.is_some());
     }
 }

@@ -218,6 +218,14 @@ impl Server {
         self.coord.set_pipeline(enabled);
     }
 
+    /// Enable/disable incremental round re-derivation (persistent
+    /// device→class index; see
+    /// [`crate::coordinator::IncrementalConfig`]). Schedules are
+    /// bit-for-bit identical either way — only build time changes.
+    pub fn set_incremental(&mut self, enabled: bool) {
+        self.coord.set_incremental(enabled);
+    }
+
     /// The runtime (for external evaluation).
     pub fn runtime(&self) -> &ModelRuntime {
         &self.coord.backend().runtime

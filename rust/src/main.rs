@@ -209,6 +209,7 @@ fn cmd_train_fl(p: &cli::Parsed) -> fedzero::Result<()> {
     }
     server.set_shards(p.get_or("shards", 1)?)?;
     server.set_pipeline(parse_pipeline(p.req("pipeline")?)?);
+    server.set_incremental(parse_incremental(p.req("incremental")?)?);
     if let Some(path) = p.get("metrics-jsonl") {
         server.add_sink(Box::new(JsonlSink::create(Path::new(path))?));
     }
@@ -268,6 +269,16 @@ fn parse_pipeline(v: &str) -> fedzero::Result<bool> {
         "off" => Ok(false),
         other => Err(fedzero::FedError::Config(format!(
             "unknown pipeline mode '{other}' (on|off)"
+        ))),
+    }
+}
+
+fn parse_incremental(v: &str) -> fedzero::Result<bool> {
+    match v {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => Err(fedzero::FedError::Config(format!(
+            "unknown incremental mode '{other}' (on|off)"
         ))),
     }
 }
@@ -338,9 +349,10 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
         seed,
         target_loss: base.target_loss,
         shards: p.get_or("shards", 1)?,
-        // The knob lands in cfg (and thus the store meta), so `resume`
-        // and `replay` pick the same mode back up from the campaign.
+        // These knobs land in cfg (and thus the store meta), so `resume`
+        // and `replay` pick the same modes back up from the campaign.
         pipeline: PipelineConfig::from(parse_pipeline(p.req("pipeline")?)?),
+        incremental: parse_incremental(p.req("incremental")?)?.into(),
     };
     let snapshot_every: usize = p.get_or("snapshot-every", 16)?;
     let sleep_ms: u64 = p.get_or("round-sleep-ms", 0)?;

@@ -234,11 +234,12 @@ pub(crate) fn class_key(cost: &CostFn, lower: usize, upper: usize) -> u64 {
 }
 
 /// The probe/insert core shared by **every** class-dedup site — the
-/// direct [`FleetBuilder`], the per-shard dedup, and the cross-shard
-/// merge ([`crate::sched::shard`]). One bucketing, one equality rule, one
-/// first-occurrence class order: the sharded pipeline's bit-for-bit
-/// contract holds *by construction* because all three paths run this
-/// exact code.
+/// direct [`FleetBuilder`], the per-shard dedup, the cross-shard merge
+/// ([`crate::sched::shard`]), and the persistent index's per-round
+/// emission ([`crate::sched::incremental`]). One bucketing, one equality
+/// rule, one first-occurrence class order: the sharded and incremental
+/// bit-for-bit contracts hold *by construction* because all these paths
+/// run this exact code.
 #[derive(Debug, Default)]
 pub(crate) struct ClassTable {
     pub(crate) classes: Vec<DeviceClass>,
@@ -283,6 +284,14 @@ impl ClassTable {
                 ci
             }
         }
+    }
+
+    /// Consume the table into its classes in first-occurrence order —
+    /// what [`FleetInstance::from_classes`] expects. Used by the merge
+    /// sites that probe a table and then emit
+    /// ([`crate::sched::incremental`]).
+    pub(crate) fn into_classes(self) -> Vec<DeviceClass> {
+        self.classes
     }
 }
 

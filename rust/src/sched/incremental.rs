@@ -1,0 +1,732 @@
+//! Incremental round re-derivation: a **persistent device→class index**
+//! ([`FleetIndex`]) that makes per-round instance building
+//! `O(selected + changed)` heavy work instead of `O(n)` re-bucketing.
+//!
+//! Every coordinator round derives a [`FleetInstance`] from the fleet's
+//! current state. The from-scratch build clones, hashes, and probes every
+//! selected device's cost function — `O(n)` expensive operations even
+//! when Recosting touched only a handful of devices. The paper's
+//! class-level formulation is exactly what makes deltas cheap: a device
+//! whose `(C, L, U)` signature did not change stays in its bucket
+//! untouched, so only the **dirty set** (battery drains, cost drift,
+//! profile changes) needs re-classification.
+//!
+//! # Design
+//!
+//! The index buckets devices by their **raw signature** — the per-device
+//! `(current cost, intrinsic lower, battery-capped upper)` triple,
+//! *before* any per-round workload transform. Raw classes are keyed and
+//! compared with the exact [`class_key`] bucketing and structural
+//! equality every other dedup site uses ([`ClassTable`]).
+//!
+//! Each round then maps raw classes to **round classes** by applying the
+//! round's limit transform (capacity clamp, `max_share` cap, lower-limit
+//! staging — [`effective_limits`]) at class granularity. The transform is
+//! a pure function of the raw signature and round-global scalars, so raw
+//! classes *refine* round classes: distinct raw classes may merge for a
+//! round (e.g. two upper limits both clipped to the same share cap), but
+//! one raw class never splits. [`FleetIndex::derive`] therefore needs one
+//! `O(selected)` array-lookup pass to group slots by raw class, and
+//! `O(k)` hash probes to emit the round's classes — no per-device cost
+//! clone or hash anywhere.
+//!
+//! # Exactness
+//!
+//! The emitted instance is **bit-for-bit identical** — class order,
+//! member lists, digest — to the from-scratch build over the same
+//! selection, because:
+//!
+//! * per-class saturating/wrapping sums compute exactly what the
+//!   reference's per-device folds compute (documented at each site);
+//! * round classes are created by probing a fresh [`ClassTable`] in
+//!   raw-class **first-slot order**, which reproduces the builder's
+//!   first-occurrence class order (a merged round class is created when
+//!   its earliest-slot constituent probes);
+//! * member lists concatenate constituent slot runs (each ascending) and
+//!   sort on merge, reproducing the builder's ascending slot order.
+//!
+//! The internal class ids, bucket layout, and free-list history never
+//! affect emission — the derived instance is a pure function of the
+//! device signatures, the selection, and the round parameters. The
+//! differential suite (`tests/incremental_equivalence.rs`) proves this
+//! over generated churn scenarios; `benches/fleet_scale.rs` gates the
+//! speedup (≥ 5× at 10⁶ devices, ≤ 1% churn).
+//!
+//! # Contract
+//!
+//! Correctness rests on one invariant the owner must uphold: **every
+//! signature mutation is [`FleetIndex::mark`]ed** before the next
+//! [`FleetIndex::apply`]. Marking an unchanged device is always safe
+//! (`apply` re-reads the live signature and no-ops); failing to mark a
+//! changed one silently desynchronizes the index. The coordinator marks
+//! at its three mutation sites (dropout drains, training drains, drift
+//! re-scaling) and proves the invariant end-to-end by campaign
+//! equivalence tests.
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::sched::costs::CostFn;
+use crate::sched::fleet::{class_key, ClassTable, FleetInstance};
+use crate::util::hash::{mix_u64, FNV_OFFSET};
+
+/// The round-global knobs of one round's instance derivation (the
+/// scheduling subset of `CoordinatorConfig` the limit transform reads).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundParams {
+    /// Requested workload `T` for the round.
+    pub tasks: usize,
+    /// Config-level minimum participation per selected device.
+    pub min_tasks: usize,
+    /// Over-representation guard: no device may receive more than this
+    /// fraction of the round's tasks (doubled until feasible).
+    pub max_share: f64,
+}
+
+/// The per-device **reference** limit transform — the single home of the
+/// round math both build paths run: the coordinator's from-scratch
+/// `build_instance_for` calls this directly, and
+/// [`FleetIndex::derive`] computes the per-class equivalent (proven
+/// equal by the differential suite).
+///
+/// Given each selected device's intrinsic lower limit and raw
+/// (battery-capped) upper limit, returns the effective workload `t`
+/// (requested `T` clamped to capacity), the staged lower limits, and the
+/// share-capped upper limits. Sets `relaxed` when even the intrinsic
+/// lower limits overshoot `t` and all lowers were dropped.
+///
+/// The caller must pre-check the exhausted case (all raw uppers zero) —
+/// zero capacity degrades to an empty round, never reaches here.
+pub fn effective_limits(
+    p: &RoundParams,
+    intrinsic_lowers: &[usize],
+    raw_uppers: &[usize],
+    relaxed: &mut bool,
+) -> (usize, Vec<usize>, Vec<usize>) {
+    // Overflow-safe capacity: "unlimited" devices may carry `usize::MAX`
+    // uppers, so clamp each term to T before a saturating fold.
+    let t_req = p.tasks;
+    let capacity: usize = raw_uppers
+        .iter()
+        .fold(0usize, |a, &u| a.saturating_add(u.min(t_req)));
+    debug_assert!(capacity > 0, "caller degrades zero capacity to an empty round");
+    let t = t_req.min(capacity);
+
+    // Over-representation guard: cap any device at max_share · T,
+    // doubling the cap until the capped fleet can still absorb T.
+    let mut cap = ((t as f64 * p.max_share).ceil() as usize).max(1);
+    let uppers: Vec<usize> = loop {
+        let capped: Vec<usize> = raw_uppers.iter().map(|&u| u.min(cap)).collect();
+        if capped
+            .iter()
+            .fold(0usize, |a, &c| a.saturating_add(c))
+            >= t
+        {
+            break capped;
+        }
+        cap *= 2;
+    };
+
+    // Lower limits: config-level minimum joined with each device's
+    // intrinsic minimum, clamped to the (possibly share-capped) upper.
+    let lower: Vec<usize> = intrinsic_lowers
+        .iter()
+        .zip(&uppers)
+        .map(|(&l, &u)| p.min_tasks.max(l).min(u))
+        .collect();
+    // Relax in two stages when ΣL overshoots T: first drop the
+    // config-level minimum and keep only the intrinsic device minima; if
+    // even those sum above T, drop all lower limits rather than failing
+    // every round.
+    let lower = if lower.iter().sum::<usize>() > t {
+        let intrinsic: Vec<usize> = intrinsic_lowers
+            .iter()
+            .zip(&uppers)
+            .map(|(&l, &u)| l.min(u))
+            .collect();
+        if intrinsic.iter().sum::<usize>() > t {
+            *relaxed = true;
+            vec![0; uppers.len()]
+        } else {
+            intrinsic
+        }
+    } else {
+        lower
+    };
+    (t, lower, uppers)
+}
+
+/// The from-scratch round derivation over an explicit signature source:
+/// [`effective_limits`] plus the per-device builder loop. This is the
+/// rebuild baseline the incremental path is benchmarked against, and the
+/// oracle the differential suite compares [`FleetIndex::derive`] to.
+/// Returns `None` for an exhausted selection (every raw upper zero).
+pub fn from_scratch_round<F>(
+    sig: F,
+    selected: &[usize],
+    p: &RoundParams,
+    relaxed: &mut bool,
+) -> Result<Option<(FleetInstance, usize)>>
+where
+    F: Fn(usize) -> (CostFn, usize, usize),
+{
+    let sigs: Vec<(CostFn, usize, usize)> =
+        selected.iter().map(|&d| sig(d)).collect();
+    if sigs.iter().all(|s| s.2 == 0) {
+        return Ok(None);
+    }
+    let raw_lowers: Vec<usize> = sigs.iter().map(|s| s.1).collect();
+    let raw_uppers: Vec<usize> = sigs.iter().map(|s| s.2).collect();
+    let (t, lower, uppers) = effective_limits(p, &raw_lowers, &raw_uppers, relaxed);
+    let mut b = FleetInstance::builder().tasks(t);
+    for ((s, &u), &l) in sigs.into_iter().zip(&uppers).zip(&lower) {
+        b = b.device(s.0, l, u);
+    }
+    Ok(Some((b.build()?, t)))
+}
+
+/// One persistent raw class: a `(C, L, U)` signature shared by `refs`
+/// devices. Member lists are *not* kept here — membership lives in the
+/// per-device `device_class` array, and per-round slot lists are grouped
+/// on the fly by [`FleetIndex::derive`] (a persistent member list would
+/// go stale with every selection change).
+#[derive(Clone, Debug)]
+struct RawClass {
+    cost: CostFn,
+    lower: usize,
+    upper: usize,
+    /// Number of devices currently in this class (0 = retired, on the
+    /// free list awaiting id reuse).
+    refs: usize,
+}
+
+/// The persistent device→class index (see the module docs).
+///
+/// Cloneable: the pipelined coordinator speculates on a clone and
+/// discards it, so a wrong prediction can never corrupt the live index.
+#[derive(Clone, Debug, Default)]
+pub struct FleetIndex {
+    /// Raw classes by internal id; retired entries are recycled through
+    /// `free`. Ids are private bookkeeping — they never affect emission.
+    classes: Vec<RawClass>,
+    /// [`class_key`] → live class ids (collision chain) — the same
+    /// bucketing every other dedup site uses.
+    buckets: HashMap<u64, Vec<u32>>,
+    /// Retired class ids available for reuse.
+    free: Vec<u32>,
+    /// Current raw class of each device.
+    device_class: Vec<u32>,
+    /// Dirty devices awaiting [`FleetIndex::apply`] (deduplicated).
+    pending: Vec<u32>,
+    in_pending: Vec<bool>,
+    // ---- per-round scratch, reused across derives -------------------
+    /// Slot lists grouped by raw class id (valid when stamped).
+    round_slots: Vec<Vec<usize>>,
+    round_stamp: Vec<u64>,
+    round_epoch: u64,
+    /// Raw class ids present in the current selection, first-slot order.
+    touched: Vec<u32>,
+}
+
+impl FleetIndex {
+    /// Classify all `n` devices from scratch (the one `O(n)` pass; the
+    /// coordinator meters it as `incr_index_rebuilds`).
+    pub fn build<F>(n: usize, sig: F) -> Self
+    where
+        F: Fn(usize) -> (CostFn, usize, usize),
+    {
+        let mut ix = FleetIndex {
+            device_class: vec![0; n],
+            in_pending: vec![false; n],
+            ..FleetIndex::default()
+        };
+        for d in 0..n {
+            let (cost, lower, upper) = sig(d);
+            let id = ix.find_or_create(cost, lower, upper);
+            ix.classes[id as usize].refs += 1;
+            ix.device_class[d] = id;
+        }
+        ix
+    }
+
+    /// Devices tracked.
+    pub fn len(&self) -> usize {
+        self.device_class.len()
+    }
+
+    /// Whether the index tracks no devices.
+    pub fn is_empty(&self) -> bool {
+        self.device_class.is_empty()
+    }
+
+    /// Live raw classes.
+    pub fn n_classes(&self) -> usize {
+        self.classes.len() - self.free.len()
+    }
+
+    /// Mark a device dirty: its signature may have changed and must be
+    /// re-read at the next [`FleetIndex::apply`]. Idempotent and safe to
+    /// call for unchanged devices.
+    pub fn mark(&mut self, device: usize) {
+        if !self.in_pending[device] {
+            self.in_pending[device] = true;
+            self.pending.push(device as u32);
+        }
+    }
+
+    /// Size of the pending dirty set (the `incr_dirty` metric).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Order-insensitive digest of the index state the next
+    /// [`FleetIndex::apply`] will resolve: the device→class map plus the
+    /// (sorted) pending dirty set. The pipelined coordinator mixes this
+    /// into its scheduling guard — a speculation's pre-apply clone
+    /// fingerprint equals the live fingerprint at adoption time iff the
+    /// clone carried the same classification and the same dirty set, so
+    /// the clone's `apply` + `derive` was a pure-function replay of what
+    /// the serial path would do.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = mix_u64(h, self.device_class.len() as u64);
+        for &c in &self.device_class {
+            h = mix_u64(h, c as u64);
+        }
+        let mut dirty = self.pending.clone();
+        dirty.sort_unstable();
+        h = mix_u64(h, dirty.len() as u64);
+        for d in dirty {
+            h = mix_u64(h, d as u64);
+        }
+        h
+    }
+
+    /// Re-classify every pending device against its live signature:
+    /// unchanged devices stay put, changed ones move between buckets
+    /// (creating/retiring classes as needed). Returns how many actually
+    /// moved (the `incr_reclassified` metric). The result is independent
+    /// of mark order — ids are internal, and signature equality is exact.
+    pub fn apply<F>(&mut self, sig: F) -> usize
+    where
+        F: Fn(usize) -> (CostFn, usize, usize),
+    {
+        let pending = std::mem::take(&mut self.pending);
+        let mut moved = 0usize;
+        for d32 in pending {
+            let d = d32 as usize;
+            self.in_pending[d] = false;
+            let (cost, lower, upper) = sig(d);
+            let old = self.device_class[d];
+            {
+                let oc = &self.classes[old as usize];
+                if oc.lower == lower && oc.upper == upper && oc.cost == cost {
+                    continue;
+                }
+            }
+            moved += 1;
+            self.detach(old);
+            let id = self.find_or_create(cost, lower, upper);
+            self.classes[id as usize].refs += 1;
+            self.device_class[d] = id;
+        }
+        moved
+    }
+
+    /// Drop one reference to class `id`; retire it (bucket removal + id
+    /// recycling) when no device references it anymore. `refs` counts
+    /// exactly the devices whose `device_class` points here, so a retired
+    /// class can never be reachable.
+    fn detach(&mut self, id: u32) {
+        let c = &mut self.classes[id as usize];
+        c.refs -= 1;
+        if c.refs == 0 {
+            let key = class_key(&c.cost, c.lower, c.upper);
+            if let Some(chain) = self.buckets.get_mut(&key) {
+                chain.retain(|&x| x != id);
+                if chain.is_empty() {
+                    self.buckets.remove(&key);
+                }
+            }
+            self.free.push(id);
+        }
+    }
+
+    /// Id of the live class with this exact signature, creating one
+    /// (reusing a retired id if available) on first occurrence. At most
+    /// one live class per signature exists, so the probe is
+    /// deterministic regardless of bucket-chain order.
+    fn find_or_create(&mut self, cost: CostFn, lower: usize, upper: usize) -> u32 {
+        let key = class_key(&cost, lower, upper);
+        if let Some(chain) = self.buckets.get(&key) {
+            for &id in chain {
+                let c = &self.classes[id as usize];
+                if c.lower == lower && c.upper == upper && c.cost == cost {
+                    return id;
+                }
+            }
+        }
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.classes[id as usize] = RawClass { cost, lower, upper, refs: 0 };
+                id
+            }
+            None => {
+                self.classes.push(RawClass { cost, lower, upper, refs: 0 });
+                (self.classes.len() - 1) as u32
+            }
+        };
+        self.buckets.entry(key).or_default().push(id);
+        id
+    }
+
+    /// Derive one round's [`FleetInstance`] over `selected` device
+    /// indices (slot `s` = position `s` in `selected`; must be
+    /// non-empty). Requires [`FleetIndex::apply`] to have drained the
+    /// dirty set first. Returns `None` for an exhausted selection (every
+    /// selected device's raw upper is zero); sets `relaxed` exactly like
+    /// [`effective_limits`].
+    ///
+    /// Bit-for-bit identical to [`from_scratch_round`] over the same
+    /// selection — see the module docs for the argument.
+    pub fn derive(
+        &mut self,
+        selected: &[usize],
+        p: &RoundParams,
+        relaxed: &mut bool,
+    ) -> Result<Option<(FleetInstance, usize)>> {
+        debug_assert!(
+            self.pending.is_empty(),
+            "apply() must drain the dirty set before derive()"
+        );
+        if self.round_slots.len() < self.classes.len() {
+            self.round_slots.resize_with(self.classes.len(), Vec::new);
+            self.round_stamp.resize(self.classes.len(), 0);
+        }
+        self.round_epoch += 1;
+        let epoch = self.round_epoch;
+        // Pass 1 — group slots by raw class: one array read per selected
+        // device, nothing heavier. `touched` collects classes in
+        // first-slot order because slots are visited ascending.
+        self.touched.clear();
+        for (slot, &d) in selected.iter().enumerate() {
+            let c = self.device_class[d];
+            let ci = c as usize;
+            if self.round_stamp[ci] != epoch {
+                self.round_stamp[ci] = epoch;
+                self.round_slots[ci].clear();
+                self.touched.push(c);
+            }
+            self.round_slots[ci].push(slot);
+        }
+        // Exhausted selection: every raw upper zero ⇔ zero capacity.
+        if self.touched.iter().all(|&c| self.classes[c as usize].upper == 0) {
+            return Ok(None);
+        }
+
+        // Round-global scalars, per class. Saturating per-class mul+add
+        // equals the reference's per-device sequential saturating fold:
+        // both compute min(true sum, usize::MAX) over non-negative terms.
+        let t_req = p.tasks;
+        let mut capacity = 0usize;
+        for &c in &self.touched {
+            let m = self.round_slots[c as usize].len();
+            let u = self.classes[c as usize].upper.min(t_req);
+            capacity = capacity.saturating_add(m.saturating_mul(u));
+        }
+        let t = t_req.min(capacity);
+        let mut cap = ((t as f64 * p.max_share).ceil() as usize).max(1);
+        loop {
+            let mut sum = 0usize;
+            for &c in &self.touched {
+                let m = self.round_slots[c as usize].len();
+                let u = self.classes[c as usize].upper.min(cap);
+                sum = sum.saturating_add(m.saturating_mul(u));
+            }
+            if sum >= t {
+                break;
+            }
+            cap *= 2;
+        }
+        // Lower staging. The reference sums lowers with plain `+`, which
+        // wraps in release builds — wrapping per-class arithmetic is
+        // congruent mod 2⁶⁴, so the `> t` comparisons agree bit-for-bit.
+        // (Real lower sums never approach the wrap; this mirrors the
+        // reference's semantics rather than "improving" on them.)
+        let mut joined_sum = 0usize;
+        let mut intrinsic_sum = 0usize;
+        for &c in &self.touched {
+            let m = self.round_slots[c as usize].len();
+            let rc = &self.classes[c as usize];
+            let u = rc.upper.min(cap);
+            joined_sum = joined_sum
+                .wrapping_add(m.wrapping_mul(p.min_tasks.max(rc.lower).min(u)));
+            intrinsic_sum = intrinsic_sum.wrapping_add(m.wrapping_mul(rc.lower.min(u)));
+        }
+        #[derive(Clone, Copy)]
+        enum Stage {
+            Joined,
+            Intrinsic,
+            Zero,
+        }
+        let stage = if joined_sum > t {
+            if intrinsic_sum > t {
+                *relaxed = true;
+                Stage::Zero
+            } else {
+                Stage::Intrinsic
+            }
+        } else {
+            Stage::Joined
+        };
+
+        // Pass 2 — emit round classes by probing a fresh ClassTable in
+        // raw-class first-slot order: O(k) probes total. A round class
+        // merging several raw classes is created when its earliest-slot
+        // constituent probes, which reproduces the builder's
+        // first-occurrence order exactly.
+        let mut table = ClassTable::with_capacity(self.touched.len());
+        let mut merged: Vec<usize> = Vec::new();
+        for &c in &self.touched {
+            let rc = &self.classes[c as usize];
+            let u = rc.upper.min(cap);
+            let l = match stage {
+                Stage::Joined => p.min_tasks.max(rc.lower).min(u),
+                Stage::Intrinsic => rc.lower.min(u),
+                Stage::Zero => 0,
+            };
+            let idx = table.class_index(&rc.cost, l, u);
+            let members = &mut table.classes[idx].members;
+            if !members.is_empty() {
+                merged.push(idx);
+            }
+            members.extend_from_slice(&self.round_slots[c as usize]);
+        }
+        // Merged member lists are concatenations of ascending runs —
+        // restore the builder's globally-ascending slot order.
+        merged.sort_unstable();
+        merged.dedup();
+        for idx in merged {
+            table.classes[idx].members.sort_unstable();
+        }
+        let fleet = FleetInstance::from_classes(t, table.into_classes())?;
+        Ok(Some((fleet, t)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn affine(per_task: f64) -> CostFn {
+        CostFn::Affine { fixed: 0.0, per_task }
+    }
+
+    /// A mutable signature table standing in for a managed fleet.
+    struct Sigs(Vec<(CostFn, usize, usize)>);
+
+    impl Sigs {
+        fn get(&self) -> impl Fn(usize) -> (CostFn, usize, usize) + '_ {
+            |d| self.0[d].clone()
+        }
+    }
+
+    fn check_equal(ix: &mut FleetIndex, sigs: &Sigs, selected: &[usize], p: &RoundParams) {
+        let mut r1 = false;
+        let mut r2 = false;
+        let inc = ix.derive(selected, p, &mut r1).unwrap();
+        let scratch = from_scratch_round(sigs.get(), selected, p, &mut r2).unwrap();
+        match (inc, scratch) {
+            (None, None) => {}
+            (Some((fi, ti)), Some((fs, ts))) => {
+                assert_eq!(ti, ts, "effective workload");
+                assert_eq!(fi.digest(), fs.digest(), "instance digest");
+                assert_eq!(fi.n_classes(), fs.n_classes());
+                for (a, b) in fi.classes().iter().zip(fs.classes()) {
+                    assert_eq!(a.lower, b.lower);
+                    assert_eq!(a.upper, b.upper);
+                    assert_eq!(a.cost, b.cost);
+                    assert_eq!(a.members, b.members);
+                }
+            }
+            (a, b) => panic!(
+                "exhausted disagreement: incremental {:?} vs scratch {:?}",
+                a.is_some(),
+                b.is_some()
+            ),
+        }
+        assert_eq!(r1, r2, "lower-relaxation flag");
+    }
+
+    fn fleet_sigs() -> Sigs {
+        // 8 devices, 3 raw classes, one device with a lower limit.
+        Sigs(vec![
+            (affine(1.0), 0, 5),
+            (affine(2.0), 1, 8),
+            (affine(1.0), 0, 5),
+            (affine(3.0), 0, 20),
+            (affine(2.0), 1, 8),
+            (affine(1.0), 0, 5),
+            (affine(3.0), 0, 20),
+            (affine(2.0), 1, 8),
+        ])
+    }
+
+    const P: RoundParams = RoundParams { tasks: 12, min_tasks: 0, max_share: 1.0 };
+
+    #[test]
+    fn fresh_index_matches_from_scratch() {
+        let sigs = fleet_sigs();
+        let mut ix = FleetIndex::build(sigs.0.len(), sigs.get());
+        assert_eq!(ix.len(), 8);
+        assert_eq!(ix.n_classes(), 3);
+        let all: Vec<usize> = (0..8).collect();
+        check_equal(&mut ix, &sigs, &all, &P);
+        // Sub-selections too (slots re-number from 0).
+        check_equal(&mut ix, &sigs, &[1, 3, 4, 6], &P);
+        check_equal(&mut ix, &sigs, &[7], &RoundParams { tasks: 4, ..P });
+    }
+
+    #[test]
+    fn marked_churn_stays_bit_for_bit() {
+        let mut sigs = fleet_sigs();
+        let mut ix = FleetIndex::build(sigs.0.len(), sigs.get());
+        let all: Vec<usize> = (0..8).collect();
+        // Battery-style decay on device 3, drift on device 0, death of 5.
+        sigs.0[3].2 = 7;
+        sigs.0[0].0 = CostFn::Scaled { weight: 1.5, inner: Box::new(affine(1.0)) };
+        sigs.0[5].2 = 0;
+        for d in [3usize, 0, 5] {
+            ix.mark(d);
+        }
+        assert_eq!(ix.pending_len(), 3);
+        assert_eq!(ix.apply(sigs.get()), 3);
+        check_equal(&mut ix, &sigs, &all, &P);
+        // A second apply with no marks is a no-op.
+        assert_eq!(ix.apply(sigs.get()), 0);
+        check_equal(&mut ix, &sigs, &all, &P);
+    }
+
+    #[test]
+    fn marking_unchanged_devices_is_safe_and_free() {
+        let sigs = fleet_sigs();
+        let mut ix = FleetIndex::build(sigs.0.len(), sigs.get());
+        ix.mark(2);
+        ix.mark(2); // deduplicated
+        ix.mark(6);
+        assert_eq!(ix.pending_len(), 2);
+        assert_eq!(ix.apply(sigs.get()), 0, "unchanged devices never move");
+        let all: Vec<usize> = (0..8).collect();
+        check_equal(&mut ix, &sigs, &all, &P);
+    }
+
+    #[test]
+    fn classes_retire_and_ids_recycle() {
+        let mut sigs = fleet_sigs();
+        let mut ix = FleetIndex::build(sigs.0.len(), sigs.get());
+        // Move the sole members of class (affine(3), 0, 20) away: the
+        // class retires; a later new signature reuses its id.
+        sigs.0[3] = (affine(1.0), 0, 5);
+        sigs.0[6] = (affine(1.0), 0, 5);
+        ix.mark(3);
+        ix.mark(6);
+        assert_eq!(ix.apply(sigs.get()), 2);
+        assert_eq!(ix.n_classes(), 2);
+        sigs.0[7] = (affine(9.0), 0, 4);
+        ix.mark(7);
+        assert_eq!(ix.apply(sigs.get()), 1);
+        assert_eq!(ix.n_classes(), 3);
+        let all: Vec<usize> = (0..8).collect();
+        check_equal(&mut ix, &sigs, &all, &P);
+    }
+
+    #[test]
+    fn round_transform_merges_raw_classes() {
+        // Two raw classes with equal cost but different uppers merge once
+        // the share cap clips both to the same effective upper.
+        let sigs = Sigs(vec![
+            (affine(1.0), 0, 50),
+            (affine(1.0), 0, 80),
+            (affine(2.0), 0, 50),
+            (affine(1.0), 0, 50),
+        ]);
+        let mut ix = FleetIndex::build(sigs.0.len(), sigs.get());
+        assert_eq!(ix.n_classes(), 3);
+        let all: Vec<usize> = (0..4).collect();
+        let p = RoundParams { tasks: 40, min_tasks: 0, max_share: 0.25 };
+        let mut relaxed = false;
+        let (fleet, _) = ix.derive(&all, &p, &mut relaxed).unwrap().unwrap();
+        // cap = 10 clips 50 and 80 alike: slots 0, 1, 3 fuse into one
+        // round class with ascending members despite coming from two raw
+        // classes.
+        assert_eq!(fleet.n_classes(), 2);
+        assert_eq!(fleet.classes()[0].members, vec![0, 1, 3]);
+        check_equal(&mut ix, &sigs, &all, &p);
+    }
+
+    #[test]
+    fn lower_staging_and_exhaustion_match_reference() {
+        let sigs = Sigs(vec![
+            (affine(1.0), 4, 6),
+            (affine(2.0), 4, 6),
+            (affine(3.0), 4, 6),
+        ]);
+        let mut ix = FleetIndex::build(sigs.0.len(), sigs.get());
+        let all: Vec<usize> = (0..3).collect();
+        // ΣL = 12 > T = 8 with min_tasks joined; intrinsic also 12 > 8 →
+        // full relaxation, flag set on both paths.
+        check_equal(
+            &mut ix,
+            &sigs,
+            &all,
+            &RoundParams { tasks: 8, min_tasks: 5, max_share: 1.0 },
+        );
+        // Exhausted: all uppers zero.
+        let dead = Sigs(vec![(affine(1.0), 0, 0), (affine(2.0), 0, 0)]);
+        let mut dx = FleetIndex::build(2, dead.get());
+        check_equal(&mut dx, &dead, &[0, 1], &P);
+    }
+
+    #[test]
+    fn unmarked_mutation_desynchronizes_the_index() {
+        // The contract, demonstrated: a signature change without a mark
+        // leaves the index deriving against stale state. This is exactly
+        // what the coordinator's mark-at-every-mutation sites prevent.
+        let mut sigs = fleet_sigs();
+        let mut ix = FleetIndex::build(sigs.0.len(), sigs.get());
+        sigs.0[3].2 = 2; // mutate, do NOT mark
+        let all: Vec<usize> = (0..8).collect();
+        let mut r = false;
+        let (stale, _) = ix.derive(&all, &P, &mut r).unwrap().unwrap();
+        let (fresh, _) =
+            from_scratch_round(sigs.get(), &all, &P, &mut r).unwrap().unwrap();
+        assert_ne!(stale.digest(), fresh.digest());
+        // Marking repairs it.
+        ix.mark(3);
+        ix.apply(sigs.get());
+        check_equal(&mut ix, &sigs, &all, &P);
+    }
+
+    #[test]
+    fn fingerprint_tracks_classification_and_dirty_set() {
+        let sigs = fleet_sigs();
+        let mut ix = FleetIndex::build(sigs.0.len(), sigs.get());
+        let f0 = ix.fingerprint();
+        let clone = ix.clone();
+        assert_eq!(clone.fingerprint(), f0, "clones fingerprint equal");
+        ix.mark(1);
+        let f1 = ix.fingerprint();
+        assert_ne!(f0, f1, "pending marks are visible");
+        // Mark order is invisible (the set is hashed sorted).
+        let mut a = clone.clone();
+        let mut b = clone.clone();
+        a.mark(1);
+        a.mark(4);
+        b.mark(4);
+        b.mark(1);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Applying a no-op mark restores the original fingerprint.
+        ix.apply(sigs.get());
+        assert_eq!(ix.fingerprint(), f0);
+    }
+}

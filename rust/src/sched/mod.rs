@@ -19,6 +19,9 @@
 //!   fleets: partition → per-shard class dedup → exact cross-shard merge
 //!   (bit-for-bit equal to the unsharded build; the scoped-thread driver
 //!   is [`crate::runtime::pool`]).
+//! * [`incremental`] — persistent device→class index for incremental
+//!   round re-derivation: `O(selected + changed)` per-round instance
+//!   builds that stay bit-for-bit equal to the from-scratch build.
 //! * [`auto`] — Table 2 classification: scenario of an instance and the
 //!   name of the cheapest optimal algorithm for it.
 //! * [`solver`] — the [`solver::Solver`] trait and
@@ -35,6 +38,7 @@ pub mod baselines;
 pub mod bruteforce;
 pub mod costs;
 pub mod fleet;
+pub mod incremental;
 pub mod instance;
 pub mod limits;
 pub mod marco;

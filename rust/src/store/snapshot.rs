@@ -16,7 +16,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::{CoordinatorConfig, ManagedDevice, PipelineConfig};
+use crate::coordinator::{CoordinatorConfig, IncrementalConfig, ManagedDevice, PipelineConfig};
 use crate::energy::battery::Battery;
 use crate::energy::power::{Behavior, PowerModel};
 use crate::error::{FedError, Result};
@@ -442,6 +442,7 @@ pub fn cfg_to_json(cfg: &CoordinatorConfig) -> Json {
         ("target_loss", target_loss),
         ("shards", Json::Num(cfg.shards as f64)),
         ("pipeline", Json::Bool(cfg.pipeline.enabled)),
+        ("incremental", Json::Bool(cfg.incremental.enabled)),
     ])
 }
 
@@ -472,6 +473,17 @@ pub fn cfg_from_json(v: &Json) -> Result<CoordinatorConfig> {
                 }
             }
             _ => PipelineConfig::off(),
+        },
+        // Absent in pre-incremental stores: default to from-scratch builds.
+        incremental: match v.get("incremental") {
+            Some(Json::Bool(b)) => {
+                if *b {
+                    IncrementalConfig::on()
+                } else {
+                    IncrementalConfig::off()
+                }
+            }
+            _ => IncrementalConfig::off(),
         },
     })
 }
@@ -629,6 +641,7 @@ mod tests {
             target_loss: Some(0.125),
             shards: 8,
             pipeline: PipelineConfig::on(),
+            incremental: IncrementalConfig::on(),
         };
         let cb = cfg_from_json(&roundtrip(&cfg_to_json(&cfg))).unwrap();
         assert_eq!(cb.rounds, cfg.rounds);
@@ -638,15 +651,19 @@ mod tests {
         assert_eq!(cb.participation.to_bits(), cfg.participation.to_bits());
         assert_eq!(cb.shards, 8);
         assert!(cb.pipeline.enabled, "pipeline knob must round-trip");
-        // Pre-shard / pre-pipeline stores (missing keys) default to the
-        // direct build path and the serial loop.
+        assert!(cb.incremental.enabled, "incremental knob must round-trip");
+        // Pre-shard / pre-pipeline / pre-incremental stores (missing
+        // keys) default to the direct build path, the serial loop, and
+        // from-scratch instance builds.
         let mut legacy = cfg_to_json(&cfg);
         if let Json::Obj(fields) = &mut legacy {
             fields.remove("shards");
             fields.remove("pipeline");
+            fields.remove("incremental");
         }
         let lb = cfg_from_json(&roundtrip(&legacy)).unwrap();
         assert_eq!(lb.shards, 1);
         assert!(!lb.pipeline.enabled);
+        assert!(!lb.incremental.enabled);
     }
 }

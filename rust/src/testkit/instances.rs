@@ -30,6 +30,7 @@
 
 use crate::sched::costs::CostFn;
 use crate::sched::fleet::FleetInstance;
+use crate::sched::incremental::{from_scratch_round, FleetIndex, RoundParams};
 use crate::sched::instance::Instance;
 use crate::sched::shard;
 use crate::sched::solver::{Solver as _, SolverRegistry};
@@ -500,6 +501,217 @@ pub fn check_shard_class_flat(
     }
 }
 
+/// Round-over-round fleet mutation shape driven by
+/// [`check_incremental_churn`] — each models one way a real campaign
+/// dirties the persistent class index
+/// ([`crate::sched::incremental::FleetIndex`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnPattern {
+    /// The *selection* changes every round but no signature does: the
+    /// index must re-derive correct instances for arbitrary subsets with
+    /// an empty dirty set.
+    AvailabilityFlip,
+    /// A few devices per round halve their upper limit toward zero
+    /// (battery drain through death) — the classic recosting dirty set.
+    BatteryDeath,
+    /// Each device independently re-scales its cost with probability
+    /// `pct`% per round (the coordinator's drift recosting).
+    DriftP {
+        /// Per-device per-round mutation probability, percent.
+        pct: u8,
+    },
+    /// One device per round toggles between retired (upper forced to 0,
+    /// out of the selection) and re-joined (original upper restored) —
+    /// classes retire and their recycled ids must never leak.
+    JoinRetire,
+}
+
+/// All churn patterns, scenario-sweep order (`DriftP` at the paper-shaped
+/// ≤ a-few-percent rate; the fuzz sweeps vary the rate further).
+pub const ALL_CHURN_PATTERNS: [ChurnPattern; 4] = [
+    ChurnPattern::AvailabilityFlip,
+    ChurnPattern::BatteryDeath,
+    ChurnPattern::DriftP { pct: 5 },
+    ChurnPattern::JoinRetire,
+];
+
+/// A reproducible multi-round churn scenario over a generated base fleet.
+/// Like [`Case`], a pure value: the whole mutation script derives from
+/// `base.seed`.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnCase {
+    /// Base fleet (costs, limits, class structure) at round 0.
+    pub base: Case,
+    pub pattern: ChurnPattern,
+    /// Churn rounds to script.
+    pub rounds: usize,
+    /// Round-transform share cap fed to [`RoundParams`] (1.0 = off).
+    pub max_share: f64,
+    /// Config-level per-device participation floor.
+    pub min_tasks: usize,
+}
+
+/// The incremental differential oracle: script `case.rounds` rounds of
+/// churn over one base fleet, and at every round prove that the
+/// persistent index's mark → apply → derive path emits a
+/// [`FleetInstance`] **bit-identical** (digest, class order, members,
+/// limits, workload, relaxation flag) to [`from_scratch_round`] over the
+/// same signatures and selection — then solve both with `solver_name` on
+/// one RNG stream and require identical assignment and cost bits (error
+/// parity when the solver rejects).
+pub fn check_incremental_churn(
+    case: &ChurnCase,
+    solver_name: &str,
+) -> Result<(), String> {
+    let registry = SolverRegistry::with_defaults(case.base.seed);
+    let solver = registry.resolve(solver_name).map_err(|e| e.to_string())?;
+    let inst = case.base.build();
+    let n = inst.n();
+
+    // Signature state the script evolves: drift weights over the base
+    // costs, decaying uppers, and a retired/active flag per device.
+    let base_costs = inst.costs.clone();
+    let lowers = inst.lower.clone();
+    let mut weights = vec![1.0f64; n];
+    let mut uppers = inst.upper.clone();
+    let mut active = vec![true; n];
+    let sig_of = |ws: &[f64], us: &[usize], d: usize| -> (CostFn, usize, usize) {
+        let cost = if ws[d] == 1.0 {
+            base_costs[d].clone()
+        } else {
+            CostFn::Scaled { weight: ws[d], inner: Box::new(base_costs[d].clone()) }
+        };
+        (cost, lowers[d], us[d])
+    };
+
+    let mut ix = FleetIndex::build(n, |d| sig_of(&weights, &uppers, d));
+    let mut rng = Rng::new(case.base.seed ^ 0xC407);
+    let p = RoundParams {
+        tasks: inst.tasks,
+        min_tasks: case.min_tasks,
+        max_share: case.max_share,
+    };
+
+    for round in 0..case.rounds {
+        // 1. Mutate signatures per the pattern, marking every change.
+        match case.pattern {
+            ChurnPattern::AvailabilityFlip => {}
+            ChurnPattern::BatteryDeath => {
+                for _ in 0..1 + rng.index((n / 8).max(1)) {
+                    let d = rng.index(n);
+                    if uppers[d] > 0 {
+                        uppers[d] /= 2;
+                        ix.mark(d);
+                    }
+                }
+            }
+            ChurnPattern::DriftP { pct } => {
+                for d in 0..n {
+                    if rng.bool(f64::from(pct) / 100.0) {
+                        weights[d] *= if rng.bool(0.5) { 1.25 } else { 0.8 };
+                        ix.mark(d);
+                    }
+                }
+            }
+            ChurnPattern::JoinRetire => {
+                let d = rng.index(n);
+                active[d] = !active[d];
+                uppers[d] = if active[d] { inst.upper[d] } else { 0 };
+                ix.mark(d);
+            }
+        }
+
+        // 2. Pick this round's selection.
+        let selected: Vec<usize> = match case.pattern {
+            ChurnPattern::AvailabilityFlip => {
+                let mut s: Vec<usize> =
+                    (0..n).filter(|_| rng.bool(0.75)).collect();
+                if s.is_empty() {
+                    s.push(rng.index(n));
+                }
+                s
+            }
+            ChurnPattern::JoinRetire => {
+                (0..n).filter(|&d| active[d]).collect()
+            }
+            _ => (0..n).collect(),
+        };
+        if selected.is_empty() {
+            continue;
+        }
+
+        // 3. Incremental path vs the from-scratch oracle.
+        ix.apply(|d| sig_of(&weights, &uppers, d));
+        let mut relaxed_inc = false;
+        let mut relaxed_scratch = false;
+        let inc =
+            ix.derive(&selected, &p, &mut relaxed_inc).map_err(|e| e.to_string())?;
+        let scratch = from_scratch_round(
+            |d| sig_of(&weights, &uppers, d),
+            &selected,
+            &p,
+            &mut relaxed_scratch,
+        )
+        .map_err(|e| e.to_string())?;
+        let (fleet_inc, fleet_scratch, t_inc, t_scratch) = match (inc, scratch) {
+            (None, None) => continue,
+            (Some(_), None) | (None, Some(_)) => {
+                return Err(format!(
+                    "{case:?} round {round}: exhaustion disagreement"
+                ));
+            }
+            (Some((a, ta)), Some((b, tb))) => (a, b, ta, tb),
+        };
+        if t_inc != t_scratch {
+            return Err(format!(
+                "{case:?} round {round}: workload {t_inc} != {t_scratch}"
+            ));
+        }
+        if relaxed_inc != relaxed_scratch {
+            return Err(format!(
+                "{case:?} round {round}: relaxation flags diverge"
+            ));
+        }
+        assert_fleet_bits_equal(
+            &fleet_inc,
+            &fleet_scratch,
+            &format!("{:?} round {round}", case.pattern),
+        )?;
+
+        // 4. Per-solver zero divergence on the emitted instances.
+        let stream = case.base.seed ^ 0x1A1A ^ (round as u64).wrapping_mul(0xD1);
+        let res_inc = solver.solve_with_rng(&fleet_inc, &mut Rng::new(stream));
+        let res_scratch =
+            solver.solve_with_rng(&fleet_scratch, &mut Rng::new(stream));
+        match (res_inc, res_scratch) {
+            (Err(_), Err(_)) => {}
+            (Ok(a), Ok(b)) => {
+                if a != b {
+                    return Err(format!(
+                        "{solver_name}: assignments diverge at round {round} \
+                         of {case:?}"
+                    ));
+                }
+                let ca = a.total_cost(&fleet_inc);
+                let cb = b.total_cost(&fleet_scratch);
+                if ca.to_bits() != cb.to_bits() {
+                    return Err(format!(
+                        "{solver_name}: cost bits diverge at round {round} \
+                         of {case:?}"
+                    ));
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "{solver_name}: solve error parity broke at round \
+                     {round} of {case:?}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -690,5 +902,64 @@ mod tests {
         assert!(
             check_shard_class_flat(&inst, "no-such-solver", &[1], 7).is_err()
         );
+    }
+
+    #[test]
+    fn churn_checker_passes_every_pattern() {
+        let base = Case {
+            seed: 0xC0FFEE,
+            family: Family::Affine,
+            limits: LimitPattern::Both,
+            dup: DupShape::Random,
+            distinct: 4,
+            max_dup: 3,
+            t: 12,
+        };
+        for (i, &pattern) in ALL_CHURN_PATTERNS.iter().enumerate() {
+            let case = ChurnCase {
+                base: Case { seed: base.seed ^ (i as u64) << 4, ..base },
+                pattern,
+                rounds: 6,
+                max_share: 1.0,
+                min_tasks: 0,
+            };
+            for solver in ["uniform", "marco", "auto", "random"] {
+                check_incremental_churn(&case, solver)
+                    .unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
+        let bad = ChurnCase {
+            base,
+            pattern: ChurnPattern::BatteryDeath,
+            rounds: 2,
+            max_share: 1.0,
+            min_tasks: 0,
+        };
+        assert!(check_incremental_churn(&bad, "no-such-solver").is_err());
+    }
+
+    #[test]
+    fn churn_checker_exercises_the_share_cap_and_min_tasks() {
+        // max_share < 1 engages the round transform's cap doubling (the
+        // raw-class *merge* case: distinct uppers clipped to one cap);
+        // nonzero min_tasks engages the joined lower stage. Both must
+        // stay bit-for-bit under heavy drift.
+        let base = Case {
+            seed: 0xCAB,
+            family: Family::Convex,
+            limits: LimitPattern::UpperOnly,
+            dup: DupShape::Random,
+            distinct: 3,
+            max_dup: 3,
+            t: 10,
+        };
+        let case = ChurnCase {
+            base,
+            pattern: ChurnPattern::DriftP { pct: 40 },
+            rounds: 5,
+            max_share: 0.3,
+            min_tasks: 1,
+        };
+        check_incremental_churn(&case, "auto").unwrap_or_else(|e| panic!("{e}"));
     }
 }

@@ -134,9 +134,13 @@ fn paper_fleet() -> Vec<ManagedDevice> {
         .collect()
 }
 
-/// Run a stored sim campaign with the given shard count; return its
-/// journal entries and final metrics summary.
-fn stored_campaign(dir: &std::path::Path, shards: usize) -> (Vec<JournalEntry>, String) {
+/// Run a stored sim campaign with the given shard count and incremental
+/// mode; return its journal entries and final metrics summary.
+fn stored_campaign(
+    dir: &std::path::Path,
+    shards: usize,
+    incremental: bool,
+) -> (Vec<JournalEntry>, String) {
     let _ = std::fs::remove_dir_all(dir);
     let cfg = CoordinatorConfig {
         rounds: 5,
@@ -144,6 +148,7 @@ fn stored_campaign(dir: &std::path::Path, shards: usize) -> (Vec<JournalEntry>, 
         algo: "auto".into(),
         max_share: 1.0,
         shards,
+        incremental: incremental.into(),
         ..CoordinatorConfig::default()
     };
     let mut coord =
@@ -164,8 +169,8 @@ fn sharded_campaign_journal_is_bit_identical_to_unsharded() {
     // therefore every replay/recovery digest — must be byte-for-byte
     // independent of it, and merge timings must never leak into entries.
     let base = std::env::temp_dir().join("fedzero_golden_shards");
-    let (plain, plain_summary) = stored_campaign(&base.join("s1"), 1);
-    let (sharded, sharded_summary) = stored_campaign(&base.join("s3"), 3);
+    let (plain, plain_summary) = stored_campaign(&base.join("s1"), 1, false);
+    let (sharded, sharded_summary) = stored_campaign(&base.join("s3"), 3, false);
     assert_eq!(plain.len(), 5);
     assert_eq!(campaign_digest(&plain), campaign_digest(&sharded));
     for (a, b) in plain.iter().zip(&sharded) {
@@ -196,5 +201,45 @@ fn sharded_campaign_journal_is_bit_identical_to_unsharded() {
     assert!(
         !plain_summary.contains("fleet_shards"),
         "unsharded runs must not emit shard metrics: {plain_summary}"
+    );
+}
+
+#[test]
+fn incremental_campaign_journal_is_bit_identical() {
+    // The incremental knob is a pure build-time optimization, exactly
+    // like shards: journals — and therefore every replay/recovery
+    // digest — must be byte-for-byte independent of it. The index
+    // surfaces only through the metrics sink.
+    let base = std::env::temp_dir().join("fedzero_golden_incremental");
+    let (plain, plain_summary) = stored_campaign(&base.join("off"), 1, false);
+    let (incr, incr_summary) = stored_campaign(&base.join("on"), 1, true);
+    assert_eq!(plain.len(), 5);
+    assert_eq!(campaign_digest(&plain), campaign_digest(&incr));
+    for (a, b) in plain.iter().zip(&incr) {
+        // Everything except wall-clock timings must match to the bit.
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.solver, b.solver);
+        assert_eq!(a.digest, b.digest, "round {}", a.round);
+        assert_eq!(a.rng_after, b.rng_after, "round {}", a.round);
+        assert_eq!(a.row.loss.to_bits(), b.row.loss.to_bits());
+        assert_eq!(a.row.energy_j.to_bits(), b.row.energy_j.to_bits());
+        assert_eq!(a.row.participants, b.row.participants);
+        assert_eq!(a.row.tasks, b.row.tasks);
+        assert!(
+            !b.to_json().to_string().contains("incr"),
+            "journal lines must not carry index fields"
+        );
+    }
+    // The index counters exist only on the incremental run — and only in
+    // metrics, never in the journal: one lazy build, and a dirty-set
+    // line per round (zero on this static fleet).
+    assert!(
+        incr_summary.contains("incr_index_rebuilds=1"),
+        "{incr_summary}"
+    );
+    assert!(incr_summary.contains("incr_dirty="), "{incr_summary}");
+    assert!(
+        !plain_summary.contains("incr_"),
+        "from-scratch runs must not emit index metrics: {plain_summary}"
     );
 }

@@ -1,0 +1,329 @@
+//! Differential proof of incremental round re-derivation:
+//! **persistent-index builds ≡ from-scratch builds**, bit-for-bit, under
+//! churn, for every registered solver.
+//!
+//! The persistent class index (`rust/src/sched/incremental.rs`) keeps
+//! device→class buckets alive across rounds and re-classifies only the
+//! dirty set the coordinator's recosting emits. The acceptance bar
+//! mirrors the shard and pipeline suites:
+//!
+//! * a scenario-diverse churn fuzz — Table 2 cost families × adversarial
+//!   limit patterns × duplication shapes × churn shapes (availability
+//!   flips, battery death, p% cost drift, device join/retire) — that
+//!   keeps generating until each of the 12 registered solvers has
+//!   accumulated **≥ 200** zero-divergence cases (the shared oracle is
+//!   `fedzero::testkit::instances::check_incremental_churn`: identical
+//!   digest, class bits, workload, relaxation flag, assignment bits, and
+//!   cost bits at every scripted round);
+//! * full-campaign equivalence through the coordinator — a battery +
+//!   drift + dropout fleet where `--incremental on` must reproduce the
+//!   off-path campaign row-for-row and state-bit-for-state-bit, alone
+//!   and composed with the pipelined driver and sharded selection.
+
+use fedzero::coordinator::{Coordinator, CoordinatorConfig, ManagedDevice, SimBackend};
+use fedzero::energy::battery::Battery;
+use fedzero::energy::power::{Behavior, PowerModel};
+use fedzero::fl::dynamics::DynamicsConfig;
+use fedzero::sched::costs::CostFn;
+use fedzero::sched::instance::Instance;
+use fedzero::sched::solver::SolverRegistry;
+use fedzero::testkit::instances::{
+    check_incremental_churn, Case, ChurnCase, ChurnPattern, DupShape, Family,
+    LimitPattern,
+};
+
+use std::collections::BTreeMap;
+
+/// Every registered solver name — derived from the registry so a newly
+/// registered solver automatically joins the fuzz (and must be
+/// classified by [`runs_on`], which panics on unknown names).
+fn all_solvers() -> Vec<&'static str> {
+    SolverRegistry::with_defaults(0).names()
+}
+
+/// Which scenario cells a solver joins the churn fuzz on — the same
+/// regime envelope the shard suite proves path equivalence inside
+/// (outside a solver's regime the two identical-bit solves still agree
+/// trivially, but the solver may legitimately reject the instance, so
+/// coverage there proves nothing extra). Drift churn wraps costs in
+/// `Scaled`, which preserves the base family's marginal regime.
+fn runs_on(name: &str, family: Family, tiny: bool) -> bool {
+    match name {
+        "auto" | "mc2mkp" | "uniform" | "random" | "proportional" | "greedy"
+        | "olar" => true,
+        "bruteforce" => tiny,
+        "marin" => matches!(family, Family::Convex | Family::Affine),
+        "marco" => matches!(family, Family::Affine),
+        "mardec" | "mardecun" => {
+            matches!(family, Family::Concave | Family::Affine)
+        }
+        other => panic!(
+            "solver '{other}' is registered but unclassified — add it to \
+             runs_on so the churn fuzz covers it"
+        ),
+    }
+}
+
+#[test]
+fn fuzz_incremental_churn_reaches_200_cases_per_solver() {
+    const TARGET: usize = 200;
+    let solvers = all_solvers();
+    let mut counts: BTreeMap<&str, usize> =
+        solvers.iter().map(|&s| (s, 0usize)).collect();
+    // Scenario cycle engineered so every solver's applicable combos recur
+    // often (marco is the rarest at 4-in-10) and every churn shape
+    // appears at least twice per cycle.
+    let combos: [(Family, LimitPattern, DupShape, ChurnPattern); 10] = [
+        (
+            Family::Convex,
+            LimitPattern::Both,
+            DupShape::Random,
+            ChurnPattern::AvailabilityFlip,
+        ),
+        (
+            Family::Affine,
+            LimitPattern::Unlimited,
+            DupShape::SingleClass,
+            ChurnPattern::BatteryDeath,
+        ),
+        (
+            Family::Concave,
+            LimitPattern::UnlimitedWithLower,
+            DupShape::Random,
+            ChurnPattern::DriftP { pct: 10 },
+        ),
+        (
+            Family::Tabulated,
+            LimitPattern::Both,
+            DupShape::Random,
+            ChurnPattern::JoinRetire,
+        ),
+        (
+            Family::Affine,
+            LimitPattern::UpperOnly,
+            DupShape::Random,
+            ChurnPattern::DriftP { pct: 2 },
+        ),
+        (
+            Family::Concave,
+            LimitPattern::Both,
+            DupShape::AllUnique,
+            ChurnPattern::BatteryDeath,
+        ),
+        (
+            Family::Convex,
+            LimitPattern::TightLower,
+            DupShape::Random,
+            ChurnPattern::DriftP { pct: 25 },
+        ),
+        (
+            Family::Affine,
+            LimitPattern::Pinned,
+            DupShape::SingleClass,
+            ChurnPattern::AvailabilityFlip,
+        ),
+        (
+            Family::Concave,
+            LimitPattern::UnlimitedWithLower,
+            DupShape::SingleClass,
+            ChurnPattern::JoinRetire,
+        ),
+        (
+            Family::Affine,
+            LimitPattern::Both,
+            DupShape::Random,
+            ChurnPattern::BatteryDeath,
+        ),
+    ];
+    let mut case_idx: u64 = 0;
+    while counts.values().any(|&c| c < TARGET) {
+        assert!(
+            case_idx < 20_000,
+            "fuzz failed to reach {TARGET} cases/solver: {counts:?}"
+        );
+        let (family, limits, dup, pattern) =
+            combos[(case_idx as usize) % combos.len()];
+        let base = Case {
+            seed: 0x1DE0 ^ case_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            family,
+            limits,
+            dup,
+            distinct: 3,
+            max_dup: 2,
+            t: 4 + (case_idx as usize % 5),
+        };
+        let churn = ChurnCase {
+            base,
+            pattern,
+            rounds: 5,
+            // Cycle the round-transform knobs so the share cap's
+            // raw-class merges and the joined lower stage both recur.
+            max_share: [1.0, 0.6, 0.35][(case_idx as usize) % 3],
+            min_tasks: (case_idx as usize) % 2,
+        };
+        let inst = base.build();
+        let tiny = inst.n() <= 4 && inst.tasks <= 8;
+        for &name in &solvers {
+            if !runs_on(name, family, tiny) {
+                continue;
+            }
+            check_incremental_churn(&churn, name)
+                .unwrap_or_else(|e| panic!("case {churn:?}: {e}"));
+            *counts.get_mut(name).unwrap() += 1;
+        }
+        case_idx += 1;
+    }
+    for (name, c) in counts {
+        assert!(c >= TARGET, "{name}: only {c} zero-divergence cases");
+    }
+    println!("churn fuzz complete after {case_idx} generated scenarios");
+}
+
+// ---- full campaigns through the coordinator ----------------------------
+
+/// A dynamic fleet with duplicated specs, a lower limit, mixed cost
+/// shapes, and a draining battery — every dirty-set source (drift
+/// recosting, dropout drains, battery-draining training) at once.
+fn dynamic_fleet() -> Vec<ManagedDevice> {
+    let affine = CostFn::Affine { fixed: 0.0, per_task: 1.0 };
+    let quad = CostFn::Quadratic { fixed: 0.5, a: 0.25, b: 0.5 };
+    let sqrtish = CostFn::PowerLaw { fixed: 0.0, scale: 2.0, exponent: 0.6 };
+    let power = PowerModel {
+        idle_w: 0.1,
+        busy_w: 2.0,
+        batch_latency_s: 0.5,
+        behavior: Behavior::Linear,
+        curvature: 0.0,
+    }; // 1 J per task
+    vec![
+        ManagedDevice::abstract_resource(0, affine.clone(), 0, 4),
+        ManagedDevice::abstract_resource(1, affine, 0, 4),
+        ManagedDevice::abstract_resource(2, quad, 1, 5),
+        ManagedDevice::abstract_resource(3, sqrtish.clone(), 0, 6),
+        ManagedDevice::abstract_resource(4, sqrtish, 0, 6),
+        ManagedDevice {
+            id: 5,
+            cost: power.cost_fn(),
+            lower: 0,
+            data_cap: 8,
+            battery: Some(Battery {
+                capacity_wh: 60.0 / 3600.0, // 60 J total
+                level: 1.0,
+                round_budget_frac: 0.4,
+            }),
+            power: Some(power),
+            drift: 1.0,
+        },
+    ]
+}
+
+/// Everything a campaign decided, bit-exact: per-round row bits plus a
+/// fingerprint of the state the snapshot would persist. The metrics
+/// subtree is deliberately excluded — `incr_*` (and, pipelined,
+/// `pipeline_*`) counters are the intended observable difference.
+fn run_campaign(
+    solver: &str,
+    seed: u64,
+    incremental: bool,
+    pipeline: bool,
+    shards: usize,
+) -> (Vec<(u64, u64, usize, usize)>, String) {
+    let cfg = CoordinatorConfig {
+        rounds: 8,
+        tasks_per_round: 8,
+        algo: solver.to_string(),
+        participation: 0.8,
+        max_share: 1.0,
+        seed,
+        shards,
+        pipeline: pipeline.into(),
+        incremental: incremental.into(),
+        ..CoordinatorConfig::default()
+    };
+    let rounds = cfg.rounds;
+    let mut c = Coordinator::new(cfg, dynamic_fleet(), SimBackend::new()).unwrap();
+    c.set_dynamics(DynamicsConfig::mobile(6));
+    // Scenario-mismatched solvers abort every round; aborts must be
+    // identical across build paths too.
+    while c.rounds_run() < rounds {
+        let _ = c.round();
+    }
+    let rows = c
+        .log()
+        .rows()
+        .iter()
+        .map(|r| (r.loss.to_bits(), r.energy_j.to_bits(), r.participants, r.tasks))
+        .collect();
+    let state = c.snapshot_json();
+    let fingerprint = ["rng", "devices", "pool", "ledger", "last_loss", "next_round"]
+        .iter()
+        .map(|k| format!("{k}={}", state.get(k).expect("snapshot field").to_string()))
+        .collect::<Vec<_>>()
+        .join(";");
+    (rows, fingerprint)
+}
+
+/// The coordinator-level property: for every registered solver, the
+/// incremental index drives the exact same dynamic campaign as the
+/// from-scratch build — alone, under sharded selection, through the
+/// pipelined speculative path, and under both at once.
+#[test]
+fn incremental_campaigns_match_from_scratch_for_all_solvers() {
+    let solvers = all_solvers();
+    assert_eq!(solvers.len(), 12, "sweep must cover every registered solver");
+    for (si, solver) in solvers.iter().enumerate() {
+        for rep in 0..2u64 {
+            let seed = 0xFEED_5EED ^ ((si as u64) << 8) ^ rep;
+            let reference = run_campaign(solver, seed, false, false, 1);
+            for (pipeline, shards) in
+                [(false, 1usize), (true, 1), (false, 3), (true, 3)]
+            {
+                let incr = run_campaign(solver, seed, true, pipeline, shards);
+                assert_eq!(
+                    reference, incr,
+                    "solver {solver}, seed {seed:#x}, pipeline {pipeline}, \
+                     shards {shards}"
+                );
+            }
+        }
+    }
+}
+
+/// Paper-style abstract fleets (no battery, no power model) must also be
+/// identical — the index's mains-powered no-drain path.
+#[test]
+fn incremental_matches_on_an_abstract_paper_fleet() {
+    let inst = Instance::paper_example(5);
+    let devices = || -> Vec<ManagedDevice> {
+        (0..inst.n())
+            .map(|i| {
+                ManagedDevice::abstract_resource(
+                    i,
+                    inst.costs[i].clone(),
+                    inst.lower[i],
+                    inst.upper[i],
+                )
+            })
+            .collect()
+    };
+    let run = |incremental: bool| {
+        let cfg = CoordinatorConfig {
+            rounds: 4,
+            tasks_per_round: 5,
+            algo: "mc2mkp".into(),
+            max_share: 1.0,
+            incremental: incremental.into(),
+            ..CoordinatorConfig::default()
+        };
+        let mut c = Coordinator::new(cfg, devices(), SimBackend::new()).unwrap();
+        while c.rounds_run() < 4 {
+            c.round().unwrap();
+        }
+        c.log()
+            .rows()
+            .iter()
+            .map(|r| (r.energy_j.to_bits(), r.participants, r.tasks))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(false), run(true));
+}

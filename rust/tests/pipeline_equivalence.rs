@@ -62,6 +62,7 @@ fn cfg_for(case: &Case, algo: &str, participation: f64, pipeline: bool) -> Coord
         target_loss: None,
         shards: 1,
         pipeline: pipeline.into(),
+        incremental: false.into(),
     }
 }
 
