@@ -1,5 +1,10 @@
 //! Shared instance generators for the benchmark suite.
 
+// Each bench target compiles its own copy and uses its own subset (e.g.
+// dp_ablation only runs Scenario::Arbitrary), so per-target dead-code
+// analysis must not gate the shared module.
+#![allow(dead_code)]
+
 use fedzero::sched::costs::CostFn;
 use fedzero::sched::instance::Instance;
 use fedzero::util::rng::Rng;

@@ -315,7 +315,7 @@ mod tests {
     fn bytes_windows() {
         let mut rng = Rng::new(3);
         let ds = Dataset::synth(&tfm_spec(), 100, &mut rng);
-        assert!(ds.len() > 0);
+        assert!(!ds.is_empty());
         if let Dataset::Bytes { stream, seq } = &ds {
             assert_eq!(*seq, 8);
             assert!(stream.iter().all(|&t| (0..32).contains(&t)));

@@ -56,6 +56,12 @@
 //! assert!((validate::total_cost(&inst, &sched) - 7.5).abs() < 1e-9);
 //! ```
 
+// Crate hygiene: the determinism guarantees are audited by fedlint
+// (rust/tools/fedlint) at the source level; `unsafe` would let code step
+// around both the type system and that audit, so it is denied outright.
+#![deny(unsafe_code)]
+#![warn(rust_2018_idioms)]
+
 pub mod benchkit;
 pub mod cli;
 pub mod config;

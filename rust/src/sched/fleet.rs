@@ -27,6 +27,8 @@
 //! the seed solvers bit-for-bit equivalent through the new
 //! [`crate::sched::solver::Solver`] seam.
 
+// fedlint: allow(R1) — probe-only dedup index: class order comes from
+// first-occurrence push order, never from map iteration.
 use std::collections::HashMap;
 
 use crate::error::{FedError, Result};
@@ -191,6 +193,64 @@ impl FleetInstance {
         }
         Ok(())
     }
+
+    /// Structural deep-audit behind the debug-build invariant auditor
+    /// ([`crate::sched::validate::audit_instance`]): everything
+    /// [`FleetInstance::validate`] does *not* check — membership /
+    /// back-pointer consistency, canonical first-occurrence class order,
+    /// and signature uniqueness. `O(n + k²)`; debug builds only.
+    pub(crate) fn audit(&self) -> std::result::Result<(), String> {
+        let n = self.slot_class.len();
+        let mut claimed = vec![false; n];
+        let mut prev_first = None;
+        for (c, class) in self.classes.iter().enumerate() {
+            let Some(&first) = class.members.first() else {
+                return Err(format!("class {c}: empty member list"));
+            };
+            if class.lower > class.upper {
+                return Err(format!("class {c}: L={} > U={}", class.lower, class.upper));
+            }
+            if prev_first.is_some_and(|p| first <= p) {
+                return Err(format!(
+                    "class {c}: first member {first} does not follow the previous class's \
+                     (classes must sit in first-occurrence order)"
+                ));
+            }
+            prev_first = Some(first);
+            let mut prev = None;
+            for &s in &class.members {
+                if s >= n {
+                    return Err(format!("class {c}: member slot {s} out of range 0..{n}"));
+                }
+                if prev.is_some_and(|p| s <= p) {
+                    return Err(format!("class {c}: members not strictly ascending at slot {s}"));
+                }
+                prev = Some(s);
+                if claimed[s] {
+                    return Err(format!("slot {s} claimed by two classes"));
+                }
+                claimed[s] = true;
+                if self.slot_class[s] != c {
+                    return Err(format!(
+                        "slot {s}: back-pointer {} != owning class {c}",
+                        self.slot_class[s]
+                    ));
+                }
+            }
+            for d in self.classes.iter().take(c) {
+                if d.lower == class.lower && d.upper == class.upper && d.cost == class.cost {
+                    return Err(format!("class {c} duplicates an earlier class signature"));
+                }
+            }
+        }
+        // Back-pointers are total over 0..n, so with every membership
+        // verified above an unclaimed slot is impossible unless the two
+        // structures disagree in length.
+        if let Some(s) = claimed.iter().position(|&done| !done) {
+            return Err(format!("slot {s} belongs to no class"));
+        }
+        Ok(())
+    }
 }
 
 impl FleetInstance {
@@ -217,6 +277,7 @@ impl FleetInstance {
         }
         let fleet = FleetInstance { tasks, classes, slot_class };
         fleet.validate()?;
+        crate::sched::validate::audit_instance(&fleet);
         Ok(fleet)
     }
 }
@@ -244,6 +305,8 @@ pub(crate) fn class_key(cost: &CostFn, lower: usize, upper: usize) -> u64 {
 pub(crate) struct ClassTable {
     pub(crate) classes: Vec<DeviceClass>,
     /// structural hash → candidate class indices (collision chain).
+    // fedlint: allow(R1) — probe-only: lookups go through `get`, and the
+    // emitted class order is `classes` push order, never bucket order.
     buckets: HashMap<u64, Vec<usize>>,
 }
 
@@ -251,6 +314,7 @@ impl ClassTable {
     pub(crate) fn with_capacity(cap: usize) -> Self {
         Self {
             classes: Vec::with_capacity(cap),
+            // fedlint: allow(R1) — same probe-only index as the field.
             buckets: HashMap::with_capacity(cap),
         }
     }
@@ -355,6 +419,7 @@ impl FleetBuilder {
             slot_class,
         };
         fleet.validate()?;
+        crate::sched::validate::audit_instance(&fleet);
         Ok(fleet)
     }
 }
@@ -441,7 +506,9 @@ impl<'a> LowerFree<'a> {
             .iter()
             .map(|cl| cl.lower * cl.count())
             .sum();
-        Self { fleet, t_prime: fleet.tasks - sum_l }
+        // Valid instances satisfy Σ m·L ≤ T (validate()), so saturation
+        // never engages; it merely shields invalid input.
+        Self { fleet, t_prime: fleet.tasks.saturating_sub(sum_l) }
     }
 
     /// Map transformed class loads back to original loads (eq. 11:
@@ -474,13 +541,16 @@ impl CostView for LowerFree<'_> {
     }
     fn upper(&self, c: usize) -> usize {
         let cl = &self.fleet.classes[c];
-        cl.upper - cl.lower
+        // L ≤ U per class (validate()); exact there, shielded otherwise.
+        cl.upper.saturating_sub(cl.lower)
     }
     fn eval(&self, c: usize, j: usize) -> f64 {
         let cl = &self.fleet.classes[c];
         if cl.lower == 0 {
             cl.cost.eval(j)
         } else {
+            // fedlint: allow(R2) — eq. 10 float cost math: j ≤ U′ keeps
+            // j + L ≤ U in range, and the `-` is on f64 costs, not capacity.
             cl.cost.eval(j + cl.lower) - cl.cost.eval(cl.lower)
         }
     }
@@ -832,6 +902,31 @@ mod tests {
         ] {
             assert_ne!(base.digest(), other.digest());
         }
+    }
+
+    #[test]
+    fn audit_rejects_corrupted_structures() {
+        let inst = Instance::paper_example(5);
+        let fleet = FleetInstance::from_flat(&inst).unwrap();
+        assert_eq!(fleet.n_classes(), 3);
+        fleet.audit().unwrap();
+
+        // Back-pointer disagreeing with the owning member list.
+        let mut bad = fleet.clone();
+        bad.slot_class[0] = 2;
+        assert!(bad.audit().unwrap_err().contains("back-pointer"));
+
+        // One slot claimed by two classes.
+        let mut bad = fleet.clone();
+        bad.classes[1].members = bad.classes[0].members.clone();
+        assert!(bad.audit().is_err());
+
+        // Two classes carrying the same (C, L, U) signature.
+        let mut bad = fleet.clone();
+        bad.classes[1].cost = bad.classes[0].cost.clone();
+        bad.classes[1].lower = bad.classes[0].lower;
+        bad.classes[1].upper = bad.classes[0].upper;
+        assert!(bad.audit().unwrap_err().contains("duplicates"));
     }
 
     #[test]

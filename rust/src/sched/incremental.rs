@@ -63,6 +63,8 @@
 //! re-scaling) and proves the invariant end-to-end by campaign
 //! equivalence tests.
 
+// fedlint: allow(R1) — probe-only bucket index: emission order comes
+// from first-slot order over `touched`, never from map iteration.
 use std::collections::HashMap;
 
 use crate::error::Result;
@@ -211,6 +213,8 @@ pub struct FleetIndex {
     classes: Vec<RawClass>,
     /// [`class_key`] → live class ids (collision chain) — the same
     /// bucketing every other dedup site uses.
+    // fedlint: allow(R1) — probe-only: lookups via `get`/`get_mut`; ids
+    // and chain order are private bookkeeping that never reach emission.
     buckets: HashMap<u64, Vec<u32>>,
     /// Retired class ids available for reuse.
     free: Vec<u32>,
@@ -380,6 +384,82 @@ impl FleetIndex {
         id
     }
 
+    /// Structural deep-audit behind the debug-build invariant auditor
+    /// ([`crate::sched::validate::audit_index`]): cross-checks the
+    /// device→class map, the refcounts, the free list, and the bucket
+    /// chains — by probing, never by map iteration, so the audit itself
+    /// obeys the determinism rules it guards.
+    pub(crate) fn audit(&self) -> std::result::Result<(), String> {
+        let n = self.device_class.len();
+        if self.in_pending.len() != n {
+            return Err(format!(
+                "in_pending tracks {} devices, device_class {n}",
+                self.in_pending.len()
+            ));
+        }
+        // Refcount histogram from the ground truth (the device map).
+        let mut hist = vec![0usize; self.classes.len()];
+        for (d, &c) in self.device_class.iter().enumerate() {
+            let Some(slot) = hist.get_mut(c as usize) else {
+                return Err(format!("device {d}: class id {c} out of range"));
+            };
+            *slot += 1;
+        }
+        for (id, class) in self.classes.iter().enumerate() {
+            if class.refs != hist[id] {
+                return Err(format!(
+                    "class {id}: refs = {} but {} devices point at it",
+                    class.refs, hist[id]
+                ));
+            }
+            let key = class_key(&class.cost, class.lower, class.upper);
+            let in_chain = self
+                .buckets
+                .get(&key)
+                .map_or(0, |chain| chain.iter().filter(|&&x| x == id as u32).count());
+            if class.refs > 0 && in_chain != 1 {
+                return Err(format!("live class {id} appears {in_chain}x in its bucket chain"));
+            }
+            if class.refs == 0 && in_chain != 0 {
+                return Err(format!("retired class {id} still sits in a bucket chain"));
+            }
+        }
+        // Free list: exactly the retired ids, each listed once.
+        let mut freed = vec![false; self.classes.len()];
+        for &id in &self.free {
+            let Some(slot) = freed.get_mut(id as usize) else {
+                return Err(format!("free id {id} out of range"));
+            };
+            if *slot {
+                return Err(format!("free id {id} listed twice"));
+            }
+            *slot = true;
+            if self.classes[id as usize].refs != 0 {
+                return Err(format!("free id {id} still referenced"));
+            }
+        }
+        for (id, class) in self.classes.iter().enumerate() {
+            if class.refs == 0 && !freed[id] {
+                return Err(format!("retired class {id} missing from the free list"));
+            }
+        }
+        // Pending: deduplicated and mirrored by in_pending.
+        let mut queued = vec![false; n];
+        for &d in &self.pending {
+            let Some(slot) = queued.get_mut(d as usize) else {
+                return Err(format!("pending device {d} out of range"));
+            };
+            if *slot {
+                return Err(format!("pending device {d} queued twice"));
+            }
+            *slot = true;
+        }
+        if let Some(d) = (0..n).find(|&d| self.in_pending[d] != queued[d]) {
+            return Err(format!("device {d}: in_pending flag disagrees with the queue"));
+        }
+        Ok(())
+    }
+
     /// Derive one round's [`FleetInstance`] over `selected` device
     /// indices (slot `s` = position `s` in `selected`; must be
     /// non-empty). Requires [`FleetIndex::apply`] to have drained the
@@ -395,6 +475,7 @@ impl FleetIndex {
         p: &RoundParams,
         relaxed: &mut bool,
     ) -> Result<Option<(FleetInstance, usize)>> {
+        crate::sched::validate::audit_index(self);
         debug_assert!(
             self.pending.is_empty(),
             "apply() must drain the dirty set before derive()"
@@ -705,6 +786,34 @@ mod tests {
         ix.mark(3);
         ix.apply(sigs.get());
         check_equal(&mut ix, &sigs, &all, &P);
+    }
+
+    #[test]
+    fn audit_holds_across_mark_apply_derive() {
+        let mut sigs = fleet_sigs();
+        let mut ix = FleetIndex::build(sigs.0.len(), sigs.get());
+        ix.audit().unwrap();
+        sigs.0[2].2 = 9;
+        ix.mark(2);
+        ix.audit().unwrap();
+        assert_eq!(ix.apply(sigs.get()), 1);
+        ix.audit().unwrap();
+        let all: Vec<usize> = (0..8).collect();
+        let mut relaxed = false;
+        let p = RoundParams { tasks: 6, min_tasks: 0, max_share: 1.0 };
+        ix.derive(&all, &p, &mut relaxed).unwrap().unwrap();
+        ix.audit().unwrap();
+
+        // Hand-corrupted states are caught.
+        let mut bad = ix.clone();
+        bad.classes[0].refs += 1;
+        assert!(bad.audit().unwrap_err().contains("devices point at it"));
+        let mut bad = ix.clone();
+        bad.pending.push(1);
+        assert!(bad.audit().unwrap_err().contains("disagrees"));
+        let mut bad = ix.clone();
+        bad.free.push(0);
+        assert!(bad.audit().unwrap_err().contains("still referenced"));
     }
 
     #[test]

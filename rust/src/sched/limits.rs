@@ -30,10 +30,12 @@ pub fn remove_lower_limits(inst: &Instance) -> Transformed {
     let n = inst.n();
     let mut costs = Vec::with_capacity(n);
     let mut upper = Vec::with_capacity(n);
-    let t_prime = inst.tasks - sum_l;
+    // Valid instances satisfy Σ L ≤ T and L_i ≤ U_i (validate()): the
+    // saturating forms are exact there and merely shield invalid input.
+    let t_prime = inst.tasks.saturating_sub(sum_l);
     for i in 0..n {
         let l = inst.lower[i];
-        upper.push(inst.upper[i] - l);
+        upper.push(inst.upper[i].saturating_sub(l));
         if l == 0 {
             costs.push(inst.costs[i].clone());
         } else {

@@ -1,6 +1,16 @@
-//! Schedule feasibility checks and total-cost evaluation.
+//! Schedule feasibility checks, total-cost evaluation, and the
+//! debug-build invariant auditor.
+//!
+//! [`audit_instance`] / [`audit_index`] run the structural deep-audits
+//! (`FleetInstance::audit`, `FleetIndex::audit`) at every build and
+//! derive seam — free in release builds (`cfg!(debug_assertions)` folds
+//! to a constant), fatal in debug builds and the test suites, so a
+//! corrupted class structure is caught where it is created, not rounds
+//! later when a digest disagrees.
 
 use crate::error::{FedError, Result};
+use crate::sched::fleet::FleetInstance;
+use crate::sched::incremental::FleetIndex;
 use crate::sched::instance::{Instance, Schedule};
 
 /// Total cost `ΣC = Σ_i C_i(x_i)` of a schedule (paper eq. 1a).
@@ -58,6 +68,31 @@ pub fn checked_cost(inst: &Instance, sched: &Schedule) -> Result<f64> {
     Ok(total_cost(inst, sched))
 }
 
+/// Debug-build structural audit of a freshly built [`FleetInstance`]
+/// (membership/back-pointer consistency, canonical class order,
+/// signature uniqueness). No-op in release builds; panics on corruption
+/// otherwise — a failed audit means a builder bug, not bad user input.
+pub fn audit_instance(fleet: &FleetInstance) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    if let Err(why) = fleet.audit() {
+        panic!("FleetInstance audit: {why}");
+    }
+}
+
+/// Debug-build structural audit of a [`FleetIndex`] at the derive seam
+/// (device→class map vs refcounts vs free list vs bucket chains). No-op
+/// in release builds; panics on corruption otherwise.
+pub fn audit_index(index: &FleetIndex) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    if let Err(why) = index.audit() {
+        panic!("FleetIndex audit: {why}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +131,22 @@ mod tests {
         let inst = Instance::paper_example(5);
         let s = Schedule::new(vec![2, 3, 0]);
         assert!((max_cost(&inst, &s) - 4.0).abs() < 1e-12); // C2(3)=4 dominates
+    }
+
+    #[test]
+    fn audit_instance_accepts_built_fleets() {
+        let inst = Instance::paper_example(8);
+        let fleet = FleetInstance::from_flat(&inst).unwrap();
+        audit_instance(&fleet); // must not panic
+    }
+
+    #[test]
+    fn audit_index_accepts_built_indices() {
+        use crate::sched::costs::CostFn;
+        let sigs: Vec<(CostFn, usize, usize)> = (0..6)
+            .map(|d| (CostFn::Affine { fixed: 0.0, per_task: (d % 2) as f64 + 1.0 }, 0, 4))
+            .collect();
+        let ix = FleetIndex::build(sigs.len(), |d| sigs[d].clone());
+        audit_index(&ix); // must not panic
     }
 }

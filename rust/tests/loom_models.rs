@@ -1,0 +1,117 @@
+//! Loom models of the repo's three threading protocols.
+//!
+//! Compiled only under `--cfg loom`: CI's loom job adds the `loom` dev
+//! dependency (`cargo add --dev loom`) and sets `RUSTFLAGS="--cfg loom"`,
+//! so the committed manifest stays offline-buildable and this target is
+//! empty in a normal `cargo test`.
+//!
+//! The real implementations use `std::thread` directly
+//! (`runtime/pool.rs`), which loom cannot instrument, so each model
+//! restates the *protocol* — the spawn/join shape and the memory-order
+//! assumptions — over loom's checked primitives and lets the model
+//! checker enumerate every interleaving:
+//!
+//! 1. `parallel_map`: workers complete in any order, but the caller
+//!    extends the output in spawn order, so results are input-ordered
+//!    and every worker's writes are visible after its join.
+//! 2. `BackgroundTask`: `join` returns the closure's value and is a
+//!    happens-before edge for its side effects — `finish_train` may read
+//!    anything `begin_train`'s thread wrote, even `Relaxed`.
+//! 3. The pipelined coordinator's speculation overlap window: the next
+//!    round is solved from a pre-training snapshot while training
+//!    mutates live state; the adoption guard (a fingerprint compare,
+//!    `sched/incremental.rs`) accepts the speculative result iff the
+//!    snapshot still matches, so an adopted result always equals what a
+//!    serial re-solve of the live state would produce.
+#![cfg(loom)]
+
+use loom::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+/// Stand-in for a deterministic solve: any pure function of the
+/// snapshot works, this one just mixes the bits around.
+fn solve(x: u64) -> u64 {
+    x.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ 0x2209_0621
+}
+
+#[test]
+fn parallel_map_joins_in_spawn_order() {
+    loom::model(|| {
+        let started = Arc::new(AtomicUsize::new(0));
+        let chunks = [vec![1u64, 2], vec![3, 4]];
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|chunk| {
+                let started = Arc::clone(&started);
+                thread::spawn(move || {
+                    started.fetch_add(1, Ordering::Relaxed);
+                    chunk.into_iter().map(|x| x * 2).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::new();
+        for h in handles {
+            out.extend(h.join().unwrap());
+        }
+        assert_eq!(out, vec![2, 4, 6, 8], "spawn order, not completion order");
+        assert_eq!(started.load(Ordering::Relaxed), 2, "both joins are visibility edges");
+    });
+}
+
+#[test]
+fn background_task_join_is_a_happens_before_edge() {
+    loom::model(|| {
+        let effect = Arc::new(AtomicUsize::new(0));
+        let task = {
+            let effect = Arc::clone(&effect);
+            thread::spawn(move || {
+                // Relaxed on purpose: visibility must come from the
+                // join edge alone, exactly what BackgroundTask promises.
+                effect.store(1, Ordering::Relaxed);
+                42u64
+            })
+        };
+        let value = task.join().unwrap();
+        assert_eq!(value, 42);
+        assert_eq!(effect.load(Ordering::Relaxed), 1);
+    });
+}
+
+/// One pass through the overlap window. The trainer thread runs
+/// concurrently with the speculative solve; the guard decides at join
+/// time. The assertion is the pipelined driver's whole correctness
+/// claim: whatever was adopted equals a serial re-solve of the live
+/// state.
+fn overlap_window(train_mutates: bool) {
+    loom::model(move || {
+        let live = Arc::new(AtomicU64::new(7));
+        let trainer = {
+            let live = Arc::clone(&live);
+            thread::spawn(move || {
+                if train_mutates {
+                    live.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+        };
+        // Speculative leg: snapshot, then solve from the snapshot while
+        // the trainer may or may not have mutated the live state yet.
+        let snapshot = live.load(Ordering::SeqCst);
+        let speculative = solve(snapshot);
+        trainer.join().unwrap();
+        // Adoption guard: fingerprint compare against the live state.
+        let now = live.load(Ordering::SeqCst);
+        let adopted = if now == snapshot { speculative } else { solve(now) };
+        assert_eq!(adopted, solve(now), "adopted result == serial re-solve");
+    });
+}
+
+#[test]
+fn speculation_guard_with_quiet_training() {
+    overlap_window(false);
+}
+
+#[test]
+fn speculation_guard_with_mutating_training() {
+    overlap_window(true);
+}

@@ -1,0 +1,169 @@
+//! `fedlint.toml` — which rule applies where.
+//!
+//! The config language is the tiny TOML subset the repo actually needs
+//! (`[section]`, `key = "str"`, `key = ["a", "b"]` on one line), parsed
+//! by hand because the authoring environment has no crates.io access.
+
+use std::fmt;
+
+/// Parsed rule configuration. Paths are relative to the scan root
+/// (`rust/src`); a module entry names either a single file
+/// (`sched/fleet.rs`) or a directory prefix (`store`). The special
+/// entry `"."` matches every scanned file.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    /// R1: digest-feeding modules (no unordered iteration / wall clock /
+    /// ambient RNG / float accumulation).
+    pub r1_modules: Vec<String>,
+    /// R2: modules where raw `+`/`-` on capacity idents is banned.
+    pub r2_modules: Vec<String>,
+    /// R2: the capacity/lower-sum identifiers the ban applies to.
+    pub r2_idents: Vec<String>,
+    /// R3: commit-path modules (no unwrap/expect/panic).
+    pub r3_modules: Vec<String>,
+    /// R4: the file defining the solver registry.
+    pub r4_solver_file: String,
+    /// R4: classifier files that must name every registered solver.
+    /// Entries may use `../` to reach out of the scan root (the
+    /// differential suites live in `rust/tests/`).
+    pub r4_classifier_files: Vec<String>,
+    /// R5: modules scanned for metrics-only fields inside digest fns.
+    pub r5_modules: Vec<String>,
+    /// R5: the digest-feeding function names.
+    pub r5_digest_fns: Vec<String>,
+    /// R5: metrics-only field name prefixes.
+    pub r5_prefixes: Vec<String>,
+    /// R5: metrics-only field name suffixes.
+    pub r5_suffixes: Vec<String>,
+}
+
+/// A config parse failure with its (1-based) line.
+#[derive(Debug)]
+pub struct ConfigError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "fedlint.toml:{}: {}", self.line, self.message)
+    }
+}
+
+impl Config {
+    /// Parse the config text. Unknown sections and keys are errors so a
+    /// typo cannot silently disable a rule.
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (idx, raw_line) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = raw_line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                match section.as_str() {
+                    "r1" | "r2" | "r3" | "r4" | "r5" => {}
+                    other => {
+                        return Err(err(lineno, format!("unknown section [{other}]")));
+                    }
+                }
+                continue;
+            }
+            let (key, value) = match line.split_once('=') {
+                Some((k, v)) => (k.trim(), v.trim()),
+                None => return Err(err(lineno, format!("expected `key = value`: {line}"))),
+            };
+            match (section.as_str(), key) {
+                ("r1", "modules") => cfg.r1_modules = parse_list(value, lineno)?,
+                ("r2", "modules") => cfg.r2_modules = parse_list(value, lineno)?,
+                ("r2", "idents") => cfg.r2_idents = parse_list(value, lineno)?,
+                ("r3", "modules") => cfg.r3_modules = parse_list(value, lineno)?,
+                ("r4", "solver_file") => cfg.r4_solver_file = parse_str(value, lineno)?,
+                ("r4", "classifier_files") => {
+                    cfg.r4_classifier_files = parse_list(value, lineno)?;
+                }
+                ("r5", "modules") => cfg.r5_modules = parse_list(value, lineno)?,
+                ("r5", "digest_fns") => cfg.r5_digest_fns = parse_list(value, lineno)?,
+                ("r5", "prefixes") => cfg.r5_prefixes = parse_list(value, lineno)?,
+                ("r5", "suffixes") => cfg.r5_suffixes = parse_list(value, lineno)?,
+                (sec, key) => {
+                    return Err(err(lineno, format!("unknown key `{key}` in [{sec}]")));
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Does a scan-root-relative path fall under any of `modules`?
+    pub fn in_modules(path: &str, modules: &[String]) -> bool {
+        modules.iter().any(|m| under(path, m))
+    }
+}
+
+fn under(path: &str, module: &str) -> bool {
+    module == "."
+        || path == module
+        || (path.starts_with(module) && path.as_bytes().get(module.len()) == Some(&b'/'))
+}
+
+fn err(line: usize, message: String) -> ConfigError {
+    ConfigError { line, message }
+}
+
+fn parse_str(value: &str, line: usize) -> Result<String, ConfigError> {
+    let inner = value
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or_else(|| err(line, format!("expected a quoted string, got {value}")))?;
+    Ok(inner.to_string())
+}
+
+fn parse_list(value: &str, line: usize) -> Result<Vec<String>, ConfigError> {
+    let inner = value
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| err(line, format!("expected a one-line [..] list, got {value}")))?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(parse_str(part, line)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_strings_and_lists() {
+        let cfg = Config::parse(
+            "# comment\n[r1]\nmodules = [\"store\", \"util/hash.rs\"]\n\n[r4]\nsolver_file = \"sched/solver.rs\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.r1_modules, vec!["store", "util/hash.rs"]);
+        assert_eq!(cfg.r4_solver_file, "sched/solver.rs");
+    }
+
+    #[test]
+    fn rejects_unknown_sections_and_keys() {
+        assert!(Config::parse("[r9]\n").is_err());
+        assert!(Config::parse("[r1]\nmodule = [\"store\"]\n").is_err());
+    }
+
+    #[test]
+    fn module_matching_is_prefix_by_path_component() {
+        let mods = vec!["store".to_string(), "sched/fleet.rs".to_string()];
+        assert!(Config::in_modules("store/journal.rs", &mods));
+        assert!(Config::in_modules("sched/fleet.rs", &mods));
+        assert!(!Config::in_modules("storefront/x.rs", &mods));
+        assert!(!Config::in_modules("sched/fleet_extra.rs", &mods));
+        assert!(Config::in_modules("anything.rs", &[".".to_string()]));
+    }
+}

@@ -1,0 +1,336 @@
+//! A minimal Rust source scanner — the token layer under every rule.
+//!
+//! fedlint runs in an offline build environment with no `syn`, so instead
+//! of an AST it produces a **masked** view of each file: comments and
+//! string/char-literal contents are blanked to spaces (string delimiters
+//! survive, so token structure stays visible), comment text is kept per
+//! line (allow annotations live there), string literal values are
+//! recorded (rule R4 reads solver names from them), and `#[cfg(test)]` /
+//! `#[test]` / `macro_rules!` regions are brace-matched so rules can skip
+//! them. The rules are line-oriented and the tree is rustfmt-normalized,
+//! which is what makes this masking sufficient in practice.
+
+/// One scanned source file.
+#[derive(Debug, Default)]
+pub struct SourceFile {
+    /// Original lines (report snippets).
+    pub raw: Vec<String>,
+    /// Masked code lines: comments and literal contents blanked to
+    /// spaces. Non-ASCII code characters are blanked too, so byte-level
+    /// scans never split a UTF-8 boundary.
+    pub code: Vec<String>,
+    /// Comment text accumulated per line.
+    pub comments: Vec<String>,
+    /// String literal values with the (1-based) line each starts on, in
+    /// source order.
+    pub strings: Vec<(usize, String)>,
+    /// Per-line flag: inside a `#[cfg(test)]` / `#[test]` /
+    /// `macro_rules!` region.
+    pub skip: Vec<bool>,
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    /// Inside a string literal; `Some(n)` is a raw string closed by `"`
+    /// followed by `n` hashes.
+    Str(Option<usize>),
+    StrEscape,
+    Char,
+    CharEscape,
+}
+
+/// Scan `text` into its masked view.
+pub fn scan(text: &str) -> SourceFile {
+    let chars: Vec<char> = text.chars().collect();
+    let mut file = SourceFile {
+        raw: text.lines().map(str::to_string).collect(),
+        ..SourceFile::default()
+    };
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut value = String::new();
+    let mut value_line = 0usize;
+    let mut state = State::Code;
+    let n = chars.len();
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            match state {
+                State::LineComment => state = State::Code,
+                State::Str(_) => value.push('\n'),
+                State::StrEscape => {
+                    value.push('\n');
+                    state = State::Str(None);
+                }
+                _ => {}
+            }
+            file.code.push(std::mem::take(&mut code));
+            file.comments.push(std::mem::take(&mut comment));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    code.push_str("  ");
+                    state = State::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    code.push_str("  ");
+                    state = State::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    code.push('"');
+                    state = State::Str(raw_hashes(&chars, i));
+                    value_line = file.code.len() + 1;
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' {
+                    if is_char_literal(&chars, i) {
+                        code.push(' ');
+                        state = State::Char;
+                    } else {
+                        // A lifetime tick: ordinary code.
+                        code.push('\'');
+                    }
+                    i += 1;
+                    continue;
+                }
+                code.push(if c.is_ascii() { c } else { ' ' });
+                i += 1;
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(depth + 1);
+                    comment.push(' ');
+                    i += 2;
+                    continue;
+                }
+                comment.push(c);
+                i += 1;
+            }
+            State::Str(raw) => {
+                if c == '"' {
+                    let hashes = raw.unwrap_or(0);
+                    let closes = (0..hashes).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closes {
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push(' ');
+                        }
+                        file.strings.push((value_line, std::mem::take(&mut value)));
+                        state = State::Code;
+                        i += 1 + hashes;
+                        continue;
+                    }
+                    value.push('"');
+                    code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                if c == '\\' && raw.is_none() {
+                    value.push(c);
+                    code.push(' ');
+                    state = State::StrEscape;
+                    i += 1;
+                    continue;
+                }
+                value.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            State::StrEscape => {
+                value.push(c);
+                code.push(' ');
+                state = State::Str(None);
+                i += 1;
+            }
+            State::Char => {
+                if c == '\'' {
+                    state = State::Code;
+                } else if c == '\\' {
+                    state = State::CharEscape;
+                }
+                code.push(' ');
+                i += 1;
+            }
+            State::CharEscape => {
+                code.push(' ');
+                state = State::Char;
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || file.code.len() < file.raw.len() {
+        file.code.push(code);
+        file.comments.push(comment);
+    }
+    while file.code.len() < file.raw.len() {
+        file.code.push(String::new());
+        file.comments.push(String::new());
+    }
+    file.skip = mark_regions(&file.code);
+    file
+}
+
+/// At an opening quote: `Some(n)` when this is a raw string prefixed by
+/// `r` (or `br`) and `n` hashes.
+fn raw_hashes(chars: &[char], quote: usize) -> Option<usize> {
+    let mut j = quote;
+    let mut hashes = 0usize;
+    while j > 0 && chars[j - 1] == '#' {
+        hashes += 1;
+        j -= 1;
+    }
+    if j > 0 && chars[j - 1] == 'r' {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// At a tick: a char literal (vs a lifetime) iff it is escaped or closed
+/// one character later.
+fn is_char_literal(chars: &[char], tick: usize) -> bool {
+    match chars.get(tick + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(tick + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// 1-based line number of a byte position in flattened (newline-joined)
+/// masked code.
+pub fn line_of(flat: &str, pos: usize) -> usize {
+    flat.as_bytes()[..pos].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// Byte position of the `}` closing the `{` at `open` (masked code, so
+/// braces inside literals and comments are already blanked).
+pub fn close_brace(flat: &str, open: usize) -> Option<usize> {
+    let bytes = flat.as_bytes();
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < bytes.len() {
+        match bytes[j] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Mark every line covered by a test or `macro_rules!` item: from the
+/// marker through the matching close brace (or through the `;` of a
+/// braceless item).
+fn mark_regions(code: &[String]) -> Vec<bool> {
+    let mut skip = vec![false; code.len()];
+    if code.is_empty() {
+        return skip;
+    }
+    let flat = code.join("\n");
+    let bytes = flat.as_bytes();
+    for marker in ["#[cfg(test)]", "#[cfg(all(test", "#[test]", "macro_rules!"] {
+        let mut from = 0usize;
+        while let Some(pos) = flat[from..].find(marker) {
+            let start = from + pos;
+            from = start + marker.len();
+            let first = line_of(&flat, start);
+            let mut j = start + marker.len();
+            let mut open = None;
+            while j < bytes.len() {
+                match bytes[j] {
+                    b'{' => {
+                        open = Some(j);
+                        break;
+                    }
+                    b';' => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            let last = match open.and_then(|o| close_brace(&flat, o)) {
+                Some(close) => line_of(&flat, close),
+                None => line_of(&flat, j.min(bytes.len() - 1)),
+            };
+            for s in skip.iter_mut().take(last).skip(first - 1) {
+                *s = true;
+            }
+        }
+    }
+    skip
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_comments_and_strings_but_keeps_structure() {
+        let src = "let x = \"a { b\"; // trailing { note\nlet y = 1;\n";
+        let f = scan(src);
+        assert_eq!(f.code.len(), 2);
+        assert!(!f.code[0].contains('{'), "brace in string must be masked");
+        assert!(f.comments[0].contains("trailing"));
+        assert_eq!(f.strings, vec![(1, "a { b".to_string())]);
+    }
+
+    #[test]
+    fn distinguishes_lifetimes_from_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char {\n    'x'\n}\n";
+        let f = scan(src);
+        assert!(f.code[0].contains("<'a>"), "lifetimes stay code");
+        assert!(!f.code[1].contains('x'), "char literal content is masked");
+    }
+
+    #[test]
+    fn raw_strings_and_escapes_terminate_correctly() {
+        let src = "let a = r#\"quote \" inside\"#;\nlet b = \"esc \\\" here\";\nlet c = 1;\n";
+        let f = scan(src);
+        assert_eq!(f.strings.len(), 2);
+        assert_eq!(f.strings[0].1, "quote \" inside");
+        assert!(f.code[2].contains("let c = 1;"), "scanner must resync");
+    }
+
+    #[test]
+    fn test_regions_are_brace_matched() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let f = scan(src);
+        assert_eq!(f.skip, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn braceless_attributed_items_cover_only_themselves() {
+        let src = "#[cfg(test)]\nuse std::fmt;\nfn live() {}\n";
+        let f = scan(src);
+        assert_eq!(f.skip, vec![true, true, false]);
+    }
+}

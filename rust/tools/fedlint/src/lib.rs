@@ -1,0 +1,57 @@
+//! fedlint — repo-specific determinism & soundness lints.
+//!
+//! The fedzero reproduction guarantees bit-for-bit journal digests
+//! across `--shards`/`--pipeline`/`--incremental` and exact solver
+//! equivalence; those guarantees rest on invariants no compiler checks.
+//! fedlint enforces the static half of them (rules R1–R5, declared in
+//! the repo-root `fedlint.toml`) so the whole violation class is caught
+//! before CI runs a single test. See EXPERIMENTS.md §Static analysis
+//! for the rule table and the allow-annotation policy.
+
+#![deny(unsafe_code)]
+#![warn(rust_2018_idioms)]
+
+pub mod config;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use config::Config;
+use report::Report;
+
+/// Scan every `.rs` file under `root` (recursively, in sorted order)
+/// and apply the configured rules. The returned report is sorted and
+/// ready to print.
+pub fn run(root: &Path, cfg: &Config) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut report = Report::default();
+    for path in &files {
+        let text = fs::read_to_string(path)?;
+        let rel = path.strip_prefix(root).unwrap_or(path);
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        let file = lexer::scan(&text);
+        rules::check_file(&rel, &file, cfg, &mut report);
+        report.files_scanned += 1;
+    }
+    rules::check_r4(root, cfg, &mut report);
+    report.sort();
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! CLI entry point: `fedlint [--format text|json] [--config PATH] <scan-root>`.
+
+#![deny(unsafe_code)]
+#![warn(rust_2018_idioms)]
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fedlint::config::Config;
+
+const USAGE: &str = "\
+usage: fedlint [--format text|json] [--config fedlint.toml] <scan-root>
+
+Scans <scan-root> recursively for .rs files and applies the repo rules
+R1-R5 declared in fedlint.toml (looked up in the current directory
+unless --config is given). Exit codes: 0 clean, 1 violations found,
+2 usage/config/io error.
+";
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut config_path: Option<PathBuf> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--format" => match args.next().as_deref() {
+                Some("json") => json = true,
+                Some("text") => json = false,
+                other => return usage(&format!("--format expects text|json, got {other:?}")),
+            },
+            "--config" => match args.next() {
+                Some(p) => config_path = Some(PathBuf::from(p)),
+                None => return usage("--config expects a path"),
+            },
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                return usage(&format!("unknown flag {other}"));
+            }
+            other => {
+                if root.is_some() {
+                    return usage("exactly one scan root expected");
+                }
+                root = Some(PathBuf::from(other));
+            }
+        }
+    }
+    let Some(root) = root else {
+        return usage("missing scan root (e.g. rust/src)");
+    };
+    let config_path = config_path.unwrap_or_else(|| PathBuf::from("fedlint.toml"));
+    let text = match fs::read_to_string(&config_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("fedlint: cannot read {}: {e}", config_path.display());
+            return ExitCode::from(2);
+        }
+    };
+    let cfg = match Config::parse(&text) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("fedlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = match fedlint::run(&root, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fedlint: scan of {} failed: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        print!("{}", report.to_json());
+    } else {
+        print!("{}", report.to_text());
+    }
+    if report.violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("fedlint: {msg}\n{USAGE}");
+    ExitCode::from(2)
+}

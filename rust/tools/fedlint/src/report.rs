@@ -1,0 +1,146 @@
+//! Findings and the two output formats (human text, stable JSON).
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Rule id: `R1`..`R5`.
+    pub rule: &'static str,
+    /// The specific check within the rule, e.g. `map-iteration`.
+    pub check: &'static str,
+    /// Scan-root-relative path.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+    /// What is wrong and what the blessed alternative is.
+    pub message: String,
+}
+
+/// A whole run's findings.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    /// Findings suppressed by `fedlint: allow(...)` annotations — counted
+    /// so dead annotations are visible in review.
+    pub allows_used: usize,
+    pub violations: Vec<Violation>,
+}
+
+/// JSON schema version; bump when the shape of the report changes.
+pub const SCHEMA_VERSION: u32 = 1;
+
+impl Report {
+    /// Deterministic order: by file, then line, then rule.
+    pub fn sort(&mut self) {
+        self.violations.sort_by(order);
+    }
+
+    /// Human-readable listing, one block per violation.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!(
+                "{}:{}: [{}/{}] {}\n",
+                v.file, v.line, v.rule, v.check, v.message
+            ));
+            out.push_str(&format!("    {}\n", v.snippet));
+        }
+        out.push_str(&format!(
+            "fedlint: {} file(s) scanned, {} violation(s), {} allow(s) used\n",
+            self.files_scanned,
+            self.violations.len(),
+            self.allows_used
+        ));
+        out
+    }
+
+    /// Machine-readable report. The schema is covered by fixture tests;
+    /// bump [`SCHEMA_VERSION`] on any shape change.
+    pub fn to_json(&self) -> String {
+        let mut out = format!("{{\"version\":{SCHEMA_VERSION},");
+        out.push_str(&format!(
+            "\"files_scanned\":{},\"allows_used\":{},\"violations\":[",
+            self.files_scanned, self.allows_used
+        ));
+        for (i, v) in self.violations.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"rule\":{},\"check\":{},\"file\":{},\"line\":{},\"snippet\":{},\"message\":{}}}",
+                json_str(v.rule),
+                json_str(v.check),
+                json_str(&v.file),
+                v.line,
+                json_str(&v.snippet),
+                json_str(&v.message)
+            ));
+        }
+        out.push_str("]}\n");
+        out
+    }
+}
+
+fn order(a: &Violation, b: &Violation) -> std::cmp::Ordering {
+    (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+}
+
+/// Escape a string into a JSON literal.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_is_escaped_and_versioned() {
+        let mut r = Report { files_scanned: 1, ..Report::default() };
+        r.violations.push(Violation {
+            rule: "R1",
+            check: "map-iteration",
+            file: "a.rs".into(),
+            line: 3,
+            snippet: "say \"hi\"".into(),
+            message: "no".into(),
+        });
+        let json = r.to_json();
+        assert!(json.starts_with("{\"version\":1,"));
+        assert!(json.contains("\\\"hi\\\""));
+        assert!(json.trim_end().ends_with("}]}"));
+    }
+
+    #[test]
+    fn sort_orders_by_file_then_line() {
+        let mk = |file: &str, line: usize| Violation {
+            rule: "R1",
+            check: "c",
+            file: file.into(),
+            line,
+            snippet: String::new(),
+            message: String::new(),
+        };
+        let mut r = Report::default();
+        r.violations = vec![mk("b.rs", 1), mk("a.rs", 9), mk("a.rs", 2)];
+        r.sort();
+        let order: Vec<(String, usize)> =
+            r.violations.iter().map(|v| (v.file.clone(), v.line)).collect();
+        assert_eq!(order, vec![("a.rs".into(), 2), ("a.rs".into(), 9), ("b.rs".into(), 1)]);
+    }
+}

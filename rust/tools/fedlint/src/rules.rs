@@ -1,0 +1,487 @@
+//! The five repo rules (see `fedlint.toml` and EXPERIMENTS.md §Static
+//! analysis).
+//!
+//! All scans run over the masked code from [`crate::lexer`]: comments
+//! and literal contents are already blanked, and `#[cfg(test)]` /
+//! `#[test]` / `macro_rules!` regions are excluded at the emit seam.
+//! Findings can be suppressed per rule with a comment annotation:
+//!
+//! ```text
+//! // fedlint: allow(R1) — probe-only map, reads never iterate.
+//! use std::collections::HashMap;
+//! ```
+//!
+//! An annotation covers its own line plus the next line carrying code,
+//! so a two-line justification comment still reaches its target.
+
+use std::fs;
+use std::path::Path;
+
+use crate::config::Config;
+use crate::lexer::{self, SourceFile};
+use crate::report::{Report, Violation};
+
+/// Suppressions parsed from a file's comments.
+pub struct Allows {
+    /// (rule, covered line) pairs.
+    covered: Vec<(String, usize)>,
+}
+
+impl Allows {
+    pub fn parse(file: &SourceFile) -> Allows {
+        let mut covered = Vec::new();
+        for (idx, comment) in file.comments.iter().enumerate() {
+            let line = idx + 1;
+            let mut from = 0usize;
+            while let Some(pos) = comment[from..].find("fedlint: allow(") {
+                let at = from + pos + "fedlint: allow(".len();
+                from = at;
+                let Some(close) = comment[at..].find(')') else { break };
+                let rule = comment[at..at + close].trim().to_string();
+                covered.push((rule.clone(), line));
+                // Cover the next code-bearing line too: annotations sit in
+                // comments, whose masked code is blank.
+                let mut next = line + 1;
+                while next <= file.code.len() {
+                    if !file.code[next - 1].trim().is_empty() {
+                        covered.push((rule.clone(), next));
+                        break;
+                    }
+                    next += 1;
+                }
+            }
+        }
+        Allows { covered }
+    }
+
+    pub fn covers(&self, rule: &str, line: usize) -> bool {
+        self.covered.iter().any(|(r, l)| r == rule && *l == line)
+    }
+}
+
+struct Ctx<'a> {
+    path: &'a str,
+    file: &'a SourceFile,
+    allows: &'a Allows,
+}
+
+impl Ctx<'_> {
+    /// Record a finding unless the line is in a test/macro region or an
+    /// allow annotation covers it (counted, so dead allows show up in
+    /// review as a zero count).
+    fn emit(
+        &self,
+        report: &mut Report,
+        rule: &'static str,
+        check: &'static str,
+        line: usize,
+        message: String,
+    ) {
+        if self.file.skip.get(line - 1).copied().unwrap_or(false) {
+            return;
+        }
+        if self.allows.covers(rule, line) {
+            report.allows_used += 1;
+            return;
+        }
+        let snippet = match self.file.raw.get(line - 1) {
+            Some(s) => s.trim().to_string(),
+            None => String::new(),
+        };
+        report.violations.push(Violation {
+            rule,
+            check,
+            file: self.path.to_string(),
+            line,
+            snippet,
+            message,
+        });
+    }
+}
+
+/// Apply R1/R2/R3/R5 to one scanned file (R4 is cross-file; see
+/// [`check_r4`]).
+pub fn check_file(path: &str, file: &SourceFile, cfg: &Config, report: &mut Report) {
+    let allows = Allows::parse(file);
+    let ctx = Ctx { path, file, allows: &allows };
+    if Config::in_modules(path, &cfg.r1_modules) {
+        r1(&ctx, report);
+    }
+    if Config::in_modules(path, &cfg.r2_modules) {
+        r2(&ctx, cfg, report);
+    }
+    if Config::in_modules(path, &cfg.r3_modules) {
+        r3(&ctx, report);
+    }
+    if Config::in_modules(path, &cfg.r5_modules) {
+        r5(&ctx, cfg, report);
+    }
+}
+
+/// R1 — digest-feeding modules must be deterministic: no unordered
+/// containers (even probe-only use must carry a justifying allow), no
+/// wall-clock reads, no ambient RNG, no float accumulation.
+fn r1(ctx: &Ctx<'_>, report: &mut Report) {
+    const IDENTS: [(&str, &str, &str); 6] = [
+        ("HashMap", "unordered-container", "justify probe-only use or use a sorted structure"),
+        ("HashSet", "unordered-container", "justify probe-only use or use a sorted structure"),
+        ("Instant", "wall-clock", "timings are metrics-only and never reach digest inputs"),
+        ("SystemTime", "wall-clock", "timings are metrics-only and never reach digest inputs"),
+        ("thread_rng", "ambient-rng", "randomness must flow from the seeded campaign RNG"),
+        ("from_entropy", "ambient-rng", "randomness must flow from the seeded campaign RNG"),
+    ];
+    const METHODS: [&str; 6] = [
+        ".keys(",
+        ".values(",
+        ".values_mut(",
+        ".into_keys(",
+        ".into_values(",
+        ".drain(",
+    ];
+    const FLOAT_ACC: [&str; 3] = ["fold(0.0", ".sum::<f32>()", ".sum::<f64>()"];
+    for (idx, code) in ctx.file.code.iter().enumerate() {
+        let line = idx + 1;
+        for (ident, check, why) in IDENTS {
+            if has_ident(code, ident) {
+                let msg = format!("`{ident}` in a digest-feeding module; {why}");
+                ctx.emit(report, "R1", check, line, msg);
+            }
+        }
+        for method in METHODS {
+            if code.contains(method) {
+                let msg = format!("unordered iteration `{method})` in a digest-feeding module");
+                ctx.emit(report, "R1", "map-iteration", line, msg);
+            }
+        }
+        for pat in FLOAT_ACC {
+            if code.contains(pat) {
+                let msg = format!(
+                    "float accumulation `{pat}` in a digest-feeding module; accumulate in \
+                     integers or document an order-fixed fold"
+                );
+                ctx.emit(report, "R1", "float-accumulation", line, msg);
+            }
+        }
+    }
+}
+
+/// R2 — capacity/lower-sum arithmetic in `sched/` must go through the
+/// blessed helpers (`effective_limits`, `saturating_*`, `wrapping_*`),
+/// never raw `+`/`-`.
+fn r2(ctx: &Ctx<'_>, cfg: &Config, report: &mut Report) {
+    for (idx, code) in ctx.file.code.iter().enumerate() {
+        if !has_raw_add_sub(code) {
+            continue;
+        }
+        let Some(ident) = cfg.r2_idents.iter().find(|id| has_ident(code, id)) else {
+            continue;
+        };
+        let msg = format!(
+            "raw `+`/`-` on a line touching capacity ident `{ident}`; use \
+             saturating/wrapping helpers or effective_limits"
+        );
+        ctx.emit(report, "R2", "raw-capacity-arith", idx + 1, msg);
+    }
+}
+
+/// R3 — commit paths surface failures as `FedError` (or poison); they
+/// never abort.
+fn r3(ctx: &Ctx<'_>, report: &mut Report) {
+    const PATTERNS: [(&str, &str); 6] = [
+        (".unwrap()", "unwrap"),
+        (".expect(", "expect"),
+        ("panic!", "panic-macro"),
+        ("unreachable!", "panic-macro"),
+        ("todo!", "panic-macro"),
+        ("unimplemented!", "panic-macro"),
+    ];
+    for (idx, code) in ctx.file.code.iter().enumerate() {
+        for (pat, check) in PATTERNS {
+            if has_pattern(code, pat) {
+                let msg = format!("`{pat}` in a commit path; return FedError or poison the store");
+                ctx.emit(report, "R3", check, idx + 1, msg);
+            }
+        }
+    }
+}
+
+/// R4 — every solver the registry constructs must be named by each
+/// classifier the differential suites key on, or a new solver would
+/// silently skip its equivalence class.
+pub fn check_r4(root: &Path, cfg: &Config, report: &mut Report) {
+    if cfg.r4_solver_file.is_empty() {
+        return;
+    }
+    let solver_path = root.join(&cfg.r4_solver_file);
+    let Ok(text) = fs::read_to_string(&solver_path) else {
+        report.violations.push(Violation {
+            rule: "R4",
+            check: "missing-solver-file",
+            file: cfg.r4_solver_file.clone(),
+            line: 1,
+            snippet: String::new(),
+            message: format!("cannot read solver registry file {}", solver_path.display()),
+        });
+        return;
+    };
+    let file = lexer::scan(&text);
+    let allows = Allows::parse(&file);
+    let registered = registered_solvers(&file);
+    if registered.is_empty() {
+        let msg = "no registered solver names found; the R4 extractor no longer matches the \
+                   registry idiom — fix the extractor, do not delete the rule";
+        report.violations.push(Violation {
+            rule: "R4",
+            check: "no-names-found",
+            file: cfg.r4_solver_file.clone(),
+            line: 1,
+            snippet: String::new(),
+            message: msg.to_string(),
+        });
+        return;
+    }
+    let ctx = Ctx { path: &cfg.r4_solver_file, file: &file, allows: &allows };
+    for cls in &cfg.r4_classifier_files {
+        let Ok(cls_text) = fs::read_to_string(root.join(cls)) else {
+            report.violations.push(Violation {
+                rule: "R4",
+                check: "missing-classifier",
+                file: cls.clone(),
+                line: 1,
+                snippet: String::new(),
+                message: format!("cannot read classifier file {cls}"),
+            });
+            continue;
+        };
+        let cls_file = lexer::scan(&cls_text);
+        for (name, line) in &registered {
+            if !cls_file.strings.iter().any(|(_, v)| v == name) {
+                let message = format!(
+                    "solver \"{name}\" is registered here but never named in classifier \
+                     {cls}; the differential suites would silently skip it"
+                );
+                ctx.emit(report, "R4", "unclassified-solver", *line, message);
+            }
+        }
+    }
+}
+
+/// Registered solver names: the first string literal on each
+/// `fn_solver!(..)` invocation line, plus the first string literal
+/// inside each hand-written `fn name` body (test and `macro_rules!`
+/// regions excluded).
+fn registered_solvers(file: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (idx, code) in file.code.iter().enumerate() {
+        let line = idx + 1;
+        if file.skip[idx] || !code.contains("fn_solver!") {
+            continue;
+        }
+        if let Some((_, v)) = file.strings.iter().find(|(l, _)| *l == line) {
+            out.push((v.clone(), line));
+        }
+    }
+    for (first, last) in fn_bodies(file, "name") {
+        if let Some((l, v)) = file.strings.iter().find(|(l, _)| (first..=last).contains(l)) {
+            out.push((v.clone(), *l));
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// R5 — metrics-only state (configured prefixes/suffixes) must never
+/// appear inside a digest-feeding function body.
+fn r5(ctx: &Ctx<'_>, cfg: &Config, report: &mut Report) {
+    for fn_name in &cfg.r5_digest_fns {
+        for (first, last) in fn_bodies(ctx.file, fn_name) {
+            for line in first..=last {
+                let code = &ctx.file.code[line - 1];
+                for ident in idents(code) {
+                    let metrics = cfg.r5_prefixes.iter().any(|p| ident.starts_with(p.as_str()))
+                        || cfg.r5_suffixes.iter().any(|s| ident.ends_with(s.as_str()));
+                    if metrics {
+                        let message = format!(
+                            "metrics-only field `{ident}` inside `{fn_name}`; digests must \
+                             exclude wall-clock/throughput state"
+                        );
+                        ctx.emit(report, "R5", "metrics-into-digest", line, message);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// (first_line, last_line) of every non-test `fn <name>` body in the
+/// file. Bodiless declarations (trait methods ending in `;`) are
+/// skipped.
+fn fn_bodies(file: &SourceFile, name: &str) -> Vec<(usize, usize)> {
+    let flat = file.code.join("\n");
+    let bytes = flat.as_bytes();
+    let needle = format!("fn {name}");
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = flat[from..].find(&needle) {
+        let start = from + pos;
+        from = start + needle.len();
+        if start > 0 && is_ident_byte(bytes[start - 1]) {
+            continue;
+        }
+        let after = start + needle.len();
+        if after < bytes.len() && is_ident_byte(bytes[after]) {
+            continue;
+        }
+        let first = lexer::line_of(&flat, start);
+        if file.skip.get(first - 1).copied().unwrap_or(false) {
+            continue;
+        }
+        let mut j = after;
+        let mut open = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => {
+                    open = Some(j);
+                    break;
+                }
+                b';' => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if let Some(close) = open.and_then(|o| lexer::close_brace(&flat, o)) {
+            out.push((first, lexer::line_of(&flat, close)));
+        }
+    }
+    out
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Whole-identifier occurrence of `ident` in masked code.
+fn has_ident(code: &str, ident: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find(ident) {
+        let at = from + pos;
+        from = at + ident.len();
+        let left_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + ident.len();
+        let right_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if left_ok && right_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Occurrence of `pat` with a non-identifier byte on its left (method
+/// patterns start with `.`, which is its own boundary).
+fn has_pattern(code: &str, pat: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find(pat) {
+        let at = from + pos;
+        from = at + pat.len();
+        if pat.starts_with('.') || at == 0 || !is_ident_byte(code.as_bytes()[at - 1]) {
+            return true;
+        }
+    }
+    false
+}
+
+/// A binary `+`/`-` whose left operand ends in an identifier byte or a
+/// closing bracket. `->`, unary minus and float exponents (`1e-9`) do
+/// not count.
+fn has_raw_add_sub(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b'+' && b != b'-' {
+            continue;
+        }
+        if b == b'-' && bytes.get(i + 1) == Some(&b'>') {
+            continue;
+        }
+        if b == b'-'
+            && i >= 2
+            && (bytes[i - 1] == b'e' || bytes[i - 1] == b'E')
+            && bytes[i - 2].is_ascii_digit()
+        {
+            continue;
+        }
+        let prev = bytes[..i].iter().rev().find(|&&p| p != b' ');
+        if prev.is_some_and(|&p| is_ident_byte(p) || p == b')' || p == b']') {
+            return true;
+        }
+    }
+    false
+}
+
+/// Identifier tokens of a masked code line, in order.
+fn idents(code: &str) -> Vec<&str> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i].is_ascii_alphabetic() || bytes[i] == b'_' {
+            let start = i;
+            while i < bytes.len() && is_ident_byte(bytes[i]) {
+                i += 1;
+            }
+            out.push(&code[start..i]);
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_add_sub_skips_arrows_unary_and_exponents() {
+        assert!(has_raw_add_sub("let x = upper - lower;"));
+        assert!(has_raw_add_sub("f(a[i] + 1)"));
+        assert!(!has_raw_add_sub("fn f() -> usize {"));
+        assert!(!has_raw_add_sub("let x = -1;"));
+        assert!(!has_raw_add_sub("let eps = 1e-9;"));
+        assert!(has_raw_add_sub("sum += l;"));
+    }
+
+    #[test]
+    fn ident_matching_is_whole_word() {
+        assert!(has_ident("use std::collections::HashMap;", "HashMap"));
+        assert!(!has_ident("let upper_bound = 3;", "upper"));
+        assert!(!has_ident("let my_upper = 3;", "upper"));
+        assert!(has_ident("let upper = 3;", "upper"));
+    }
+
+    #[test]
+    fn pattern_matching_needs_a_left_boundary_for_macros() {
+        assert!(has_pattern("panic!(\"no\")", "panic!"));
+        assert!(!has_pattern("dont_panic!(\"no\")", "panic!"));
+        assert!(has_pattern("x.unwrap()", ".unwrap()"));
+        assert!(!has_pattern("x.unwrap_or(0)", ".unwrap()"));
+    }
+
+    #[test]
+    fn allows_cover_their_line_and_the_next_code_line() {
+        let src = "// fedlint: allow(R1) — probe-only, reads use get,\n// never iteration.\nuse std::collections::HashMap;\n";
+        let file = lexer::scan(src);
+        let allows = Allows::parse(&file);
+        assert!(allows.covers("R1", 1));
+        assert!(allows.covers("R1", 3), "skips the comment continuation line");
+        assert!(!allows.covers("R2", 3), "rule-specific");
+    }
+
+    #[test]
+    fn fn_bodies_skips_bodiless_declarations_and_tests() {
+        let src = "trait T {\n    fn name(&self) -> &'static str;\n}\nstruct S;\nimpl S {\n    fn name(&self) -> &'static str {\n        \"s\"\n    }\n}\n";
+        let file = lexer::scan(src);
+        assert_eq!(fn_bodies(&file, "name"), vec![(6, 8)]);
+    }
+}

@@ -1,0 +1,104 @@
+//! Fixture-driven liveness tests: every rule must fire exactly where
+//! seeded, the clean file must stay clean (with its allow annotations
+//! counted), and the JSON report schema must stay stable.
+
+use std::path::Path;
+
+use fedlint::config::Config;
+use fedlint::report::Report;
+
+const CONFIG: &str = r#"
+[r1]
+modules = ["r1_violation.rs", "clean.rs"]
+
+[r2]
+modules = ["r2_violation.rs", "clean.rs"]
+idents = ["lower", "upper", "tasks", "sum_l"]
+
+[r3]
+modules = ["r3_violation.rs", "clean.rs"]
+
+[r4]
+solver_file = "r4_solvers.rs"
+classifier_files = ["r4_classifier.rs"]
+
+[r5]
+modules = ["."]
+digest_fns = ["digest"]
+prefixes = ["incr_", "pipeline_", "shard_"]
+suffixes = ["_ns"]
+"#;
+
+fn report() -> Report {
+    let cfg = Config::parse(CONFIG).expect("fixture config parses");
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    fedlint::run(&root, &cfg).expect("fixture scan succeeds")
+}
+
+#[test]
+fn every_rule_fires_exactly_where_seeded() {
+    let r = report();
+    let got: Vec<(&str, &str, usize)> =
+        r.violations.iter().map(|v| (v.rule, v.file.as_str(), v.line)).collect();
+    let want = vec![
+        ("R1", "r1_violation.rs", 3),
+        ("R1", "r1_violation.rs", 4),
+        ("R1", "r1_violation.rs", 6),
+        ("R1", "r1_violation.rs", 7),
+        ("R1", "r1_violation.rs", 10),
+        ("R1", "r1_violation.rs", 11),
+        ("R1", "r1_violation.rs", 15),
+        ("R2", "r2_violation.rs", 4),
+        ("R2", "r2_violation.rs", 8),
+        ("R3", "r3_violation.rs", 4),
+        ("R3", "r3_violation.rs", 8),
+        ("R3", "r3_violation.rs", 12),
+        ("R4", "r4_solvers.rs", 12),
+        ("R5", "r5_violation.rs", 10),
+        ("R5", "r5_violation.rs", 11),
+        ("R5", "r5_violation.rs", 12),
+    ];
+    assert_eq!(got, want);
+}
+
+#[test]
+fn checks_name_the_violation_family() {
+    let r = report();
+    let find = |file: &str, line: usize| {
+        r.violations
+            .iter()
+            .find(|v| v.file == file && v.line == line)
+            .map(|v| v.check)
+            .unwrap_or("absent")
+    };
+    assert_eq!(find("r1_violation.rs", 3), "unordered-container");
+    assert_eq!(find("r1_violation.rs", 4), "wall-clock");
+    assert_eq!(find("r1_violation.rs", 7), "map-iteration");
+    assert_eq!(find("r1_violation.rs", 15), "float-accumulation");
+    assert_eq!(find("r2_violation.rs", 4), "raw-capacity-arith");
+    assert_eq!(find("r3_violation.rs", 4), "unwrap");
+    assert_eq!(find("r3_violation.rs", 12), "panic-macro");
+    assert_eq!(find("r4_solvers.rs", 12), "unclassified-solver");
+    assert_eq!(find("r5_violation.rs", 11), "metrics-into-digest");
+}
+
+#[test]
+fn clean_file_is_clean_and_allows_are_counted() {
+    let r = report();
+    assert!(r.violations.iter().all(|v| v.file != "clean.rs"));
+    assert_eq!(r.allows_used, 2, "both clean.rs annotations suppress a finding");
+    assert_eq!(r.files_scanned, 7);
+}
+
+#[test]
+fn json_schema_is_stable() {
+    let r = report();
+    let json = r.to_json();
+    let head = "{\"version\":1,\"files_scanned\":7,\"allows_used\":2,\"violations\":[";
+    assert!(json.starts_with(head), "schema header changed: {json}");
+    let keys = ["\"rule\":", "\"check\":", "\"file\":", "\"line\":", "\"snippet\":", "\"message\":"];
+    for key in keys {
+        assert_eq!(json.matches(key).count(), 16, "{key} must appear once per violation");
+    }
+    assert!(json.trim_end().ends_with("]}"));
+}

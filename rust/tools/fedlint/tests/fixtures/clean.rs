@@ -1,0 +1,27 @@
+//! Clean fixture: allow-annotated probe-only map, blessed arithmetic,
+//! error-propagating commit path, metrics kept out of the digest.
+
+// fedlint: allow(R1) — probe-only index: reads use `get`, iteration
+// never happens, so ordering cannot leak into any digest.
+use std::collections::HashMap;
+
+// fedlint: allow(R1) — same probe-only index as above.
+pub fn probe(map: &HashMap<u64, usize>, key: u64) -> Option<usize> {
+    map.get(&key).copied()
+}
+
+pub fn t_prime(tasks: usize, sum_l: usize) -> usize {
+    tasks.saturating_sub(sum_l)
+}
+
+pub fn commit(value: Option<u32>) -> Result<u32, String> {
+    value.ok_or_else(|| "missing".to_string())
+}
+
+pub struct Stats {
+    pub merge_ns: u64,
+}
+
+pub fn digest(tasks: u64) -> u64 {
+    tasks.wrapping_mul(0x0100_0000_01b3)
+}

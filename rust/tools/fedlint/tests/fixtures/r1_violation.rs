@@ -1,0 +1,25 @@
+//! Seeded R1 violations: one per check family.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn lookup_order(map: &HashMap<u64, usize>) -> Vec<u64> {
+    map.keys().copied().collect()
+}
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}
+
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+
+    fn exempt() -> HashSet<u64> {
+        HashSet::new()
+    }
+}

@@ -1,0 +1,22 @@
+//! Seeded R2 violations plus a test-region exemption proof.
+
+pub fn t_prime(tasks: usize, sum_l: usize) -> usize {
+    tasks - sum_l
+}
+
+pub fn widen(upper: usize) -> usize {
+    upper + 1
+}
+
+pub fn fine(upper: usize, lower: usize) -> usize {
+    upper.saturating_sub(lower)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn exempt() {
+        let upper = 5;
+        assert_eq!(upper - 1, 4);
+    }
+}

@@ -1,0 +1,17 @@
+//! Seeded R3 violations plus near-miss names that must not fire.
+
+pub fn commit(value: Option<u32>) -> u32 {
+    value.unwrap()
+}
+
+pub fn commit_msg(value: Option<u32>) -> u32 {
+    value.expect("present")
+}
+
+pub fn abort() {
+    panic!("boom");
+}
+
+pub fn near_miss(value: Option<u32>) -> u32 {
+    value.unwrap_or_default()
+}

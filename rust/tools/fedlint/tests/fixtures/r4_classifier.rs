@@ -1,0 +1,10 @@
+//! The R4 fixture classifier: it names `exact` and `auto` but not the
+//! third registered solver, so exactly one R4 violation is expected.
+
+pub fn classify(name: &str) -> &'static str {
+    match name {
+        "exact" => "optimal",
+        "auto" => "delegates",
+        _ => "unknown",
+    }
+}

@@ -1,0 +1,20 @@
+//! A miniature solver registry for the R4 fixture.
+
+macro_rules! fn_solver {
+    ($name:literal) => {
+        pub fn registered() -> &'static str {
+            $name
+        }
+    };
+}
+
+fn_solver!("exact");
+fn_solver!("missing");
+
+pub struct Auto;
+
+impl Auto {
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+}

@@ -1,0 +1,18 @@
+//! Seeded R5 violations: metrics state flowing into a digest fn.
+
+pub struct Stats {
+    pub incr_hits: u64,
+    pub merge_ns: u64,
+}
+
+pub fn digest(stats: &Stats) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h ^= stats.incr_hits;
+    h ^= stats.merge_ns;
+    h ^= stats.incr_hits.rotate_left(7);
+    h
+}
+
+pub fn report(stats: &Stats) -> u64 {
+    stats.incr_hits ^ stats.merge_ns
+}
