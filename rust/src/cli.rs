@@ -257,6 +257,7 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "pipeline", help: "overlap next-round scheduling with training: on | off (campaigns are bit-for-bit identical either way)", takes_value: true, default: Some("off") },
                     OptSpec { name: "incremental", help: "persistent class index, re-derive rounds from the dirty set: on | off (schedules are bit-for-bit identical either way)", takes_value: true, default: Some("off") },
                     OptSpec { name: "round-sleep-ms", help: "sleep between rounds (crash-recovery testing; sim only)", takes_value: true, default: Some("0") },
+                    OptSpec { name: "trace", help: "write a Chrome Trace Event JSONL phase trace to this file (pure telemetry; campaigns are bit-for-bit identical with or without it)", takes_value: true, default: None },
                 ],
                 positional: vec![],
             },
@@ -265,6 +266,7 @@ pub fn fedzero_app() -> App {
                 about: "continue a crashed or stopped campaign from its store",
                 opts: vec![
                     OptSpec { name: "round-sleep-ms", help: "sleep between rounds (crash-recovery testing)", takes_value: true, default: Some("0") },
+                    OptSpec { name: "trace", help: "append the phase trace to this file (overrides the trace path persisted in the store meta)", takes_value: true, default: None },
                 ],
                 positional: vec![("dir", "campaign store directory")],
             },
@@ -272,6 +274,14 @@ pub fn fedzero_app() -> App {
                 name: "replay",
                 about: "re-derive every journaled round and verify digests (deterministic audit)",
                 opts: vec![],
+                positional: vec![("dir", "campaign store directory")],
+            },
+            CmdSpec {
+                name: "stats",
+                about: "post-hoc campaign dashboard from a store (phases, pipeline/incremental rates, energy concentration, solver usage)",
+                opts: vec![
+                    OptSpec { name: "expose", help: "also print the metrics hub in text exposition format", takes_value: false, default: None },
+                ],
                 positional: vec![("dir", "campaign store directory")],
             },
             CmdSpec {
@@ -407,6 +417,31 @@ mod tests {
         let p = app.parse(&args(&["replay", "/tmp/x"])).unwrap();
         assert_eq!(p.command, "replay");
         assert!(app.parse(&args(&["resume"])).is_err(), "dir is required");
+    }
+
+    #[test]
+    fn trace_flag_parses_on_train_and_resume() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["train", "--backend", "sim"])).unwrap();
+        assert_eq!(p.get("trace"), None, "no default trace path");
+        let p = app
+            .parse(&args(&["train", "--trace", "/tmp/t.jsonl"]))
+            .unwrap();
+        assert_eq!(p.get("trace"), Some("/tmp/t.jsonl"));
+        let p = app
+            .parse(&args(&["resume", "/tmp/x", "--trace=/tmp/t.jsonl"]))
+            .unwrap();
+        assert_eq!(p.get("trace"), Some("/tmp/t.jsonl"));
+    }
+
+    #[test]
+    fn stats_subcommand_parses() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["stats", "/tmp/x", "--expose"])).unwrap();
+        assert_eq!(p.command, "stats");
+        assert_eq!(p.positional, vec!["/tmp/x".to_string()]);
+        assert!(p.flag("expose"));
+        assert!(app.parse(&args(&["stats"])).is_err(), "dir is required");
     }
 
     #[test]

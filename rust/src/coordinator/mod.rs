@@ -62,6 +62,8 @@ use crate::config::TrainConfig;
 use crate::error::{FedError, Result};
 use crate::fl::dynamics::DynamicsConfig;
 use crate::metrics::{EnergyLedger, MetricsHub, RoundLog, Timer, TrainingLog};
+use crate::obs::hist::{secs_to_ns, ObsHists};
+use crate::obs::{NoopTracer, Tracer, COORD_LANE};
 use crate::runtime::pool;
 use crate::sched::auto::{best_algorithm, classify_fleet};
 use crate::sched::costs::CostFn;
@@ -361,6 +363,15 @@ pub struct Coordinator<B: RoundBackend> {
     /// never snapshotted — rebuilt lazily (`incr_index_rebuilds`) on the
     /// first incremental prepare after construction or restore.
     index: Option<FleetIndex>,
+    /// Trace consumer (default: the zero-cost [`NoopTracer`]). Pure
+    /// output — no tracer method returns data into scheduling state, so
+    /// traced and untraced campaigns are bit-identical.
+    tracer: Box<dyn Tracer>,
+    /// Latency histograms (phase durations, per-solver solve time,
+    /// incremental dirty-set sizes). Always recorded (a record is a
+    /// shift + two adds); exported as `obs_*` gauges only on traced
+    /// campaigns so untraced metrics summaries stay bit-stable.
+    hists: ObsHists,
 }
 
 impl<B: RoundBackend> Coordinator<B> {
@@ -412,6 +423,8 @@ impl<B: RoundBackend> Coordinator<B> {
             record_trace: false,
             speculation: None,
             index: None,
+            tracer: Box::new(NoopTracer),
+            hists: ObsHists::default(),
         })
     }
 
@@ -461,6 +474,24 @@ impl<B: RoundBackend> Coordinator<B> {
         self.cfg.incremental.enabled = enabled;
         self.speculation = None;
         self.index = None;
+    }
+
+    /// Attach a trace consumer (e.g. [`crate::obs::ChromeTraceSink`]).
+    /// Tracing is pure output: journals, digests, RNG streams, and
+    /// schedules are bit-for-bit identical with any tracer attached —
+    /// `tests/obs_trace.rs` proves it differentially.
+    pub fn set_tracer(&mut self, tracer: Box<dyn Tracer>) {
+        self.tracer = tracer;
+    }
+
+    /// Flush the attached tracer, surfacing any deferred write error.
+    pub fn flush_trace(&mut self) -> Result<()> {
+        self.tracer.flush()
+    }
+
+    /// The latency histograms accumulated so far.
+    pub fn hists(&self) -> &ObsHists {
+        &self.hists
     }
 
     /// Current phase.
@@ -591,6 +622,7 @@ impl<B: RoundBackend> Coordinator<B> {
         selected: &[usize],
         raw_uppers: &[usize],
         incs: &mut Vec<(&'static str, u64)>,
+        tracer: &mut dyn Tracer,
     ) -> Result<(FleetInstance, usize)> {
         // The round's limit transform (capacity clamp, §6 share cap,
         // staged lower relaxation) lives in ONE place —
@@ -619,7 +651,32 @@ impl<B: RoundBackend> Coordinator<B> {
                 .map(|&d| devices[d].current_cost())
                 .collect();
             let inst = Instance { tasks: t, lower, upper: uppers, costs };
-            let (fleet, stats) = pool::build_fleet_sharded(&inst, cfg.shards, 0)?;
+            let (fleet, stats) = if tracer.enabled() {
+                // Traced build: each shard worker reports its dedup
+                // window as offsets on a clock anchored at `base`, then
+                // renders on lanes 1..=shards beside the coordinator's
+                // lane 0. Telemetry only — the fleet is bit-identical.
+                let base = tracer.now_ns();
+                let mut spans: Vec<(u64, u64)> = Vec::new();
+                let out = pool::build_fleet_sharded_traced(
+                    &inst,
+                    cfg.shards,
+                    0,
+                    Some(&mut spans),
+                )?;
+                for (i, &(s, e)) in spans.iter().enumerate() {
+                    tracer.span_at(
+                        "shard",
+                        1 + i as u32,
+                        base.saturating_add(s),
+                        base.saturating_add(e),
+                        &|| vec![("shard", i.to_string())],
+                    );
+                }
+                out
+            } else {
+                pool::build_fleet_sharded(&inst, cfg.shards, 0)?
+            };
             incs.push(("fleet_shards", stats.shards as u64));
             incs.push(("shard_merge_ns", stats.merge_ns));
             fleet
@@ -703,7 +760,16 @@ impl<B: RoundBackend> Coordinator<B> {
         let round_idx = self.next_round;
         self.next_round += 1;
         self.trace = None;
-        match self.round_inner(round_idx) {
+        let round_t0 = self.tracer.now_ns();
+        let outcome = self.round_inner(round_idx);
+        if self.tracer.enabled() {
+            let round_t1 = self.tracer.now_ns();
+            let ok = outcome.is_ok();
+            self.tracer.span_at("round", COORD_LANE, round_t0, round_t1, &|| {
+                vec![("round", round_idx.to_string()), ("ok", ok.to_string())]
+            });
+        }
+        match outcome {
             Ok(row) => {
                 self.record_round(&row)?;
                 Ok(row)
@@ -758,15 +824,30 @@ impl<B: RoundBackend> Coordinator<B> {
     /// unrecoverable divergence); a failed sink merely surfaces its error
     /// (the stream loses a row, the campaign itself is intact).
     fn record_round(&mut self, row: &RoundLog) -> Result<()> {
-        if let Some(store) = self.store.as_mut() {
+        if self.store.is_some() {
             let trace = self.trace.clone().unwrap_or_default();
-            let commit = store.commit(&JournalEntry {
+            let entry = JournalEntry {
                 round: row.round,
                 solver: trace.solver,
                 digest: trace.digest,
                 rng_after: self.rng.state(),
                 row: row.clone(),
-            });
+            };
+            // The span covers the append *and* its fsync (the store
+            // syncs before `commit` returns).
+            let t0 = self.tracer.now_ns();
+            let commit = match self.store.as_mut() {
+                Some(store) => store.commit(&entry),
+                None => Ok(()),
+            };
+            if self.tracer.enabled() {
+                let t1 = self.tracer.now_ns();
+                let round = row.round;
+                let ok = commit.is_ok();
+                self.tracer.span_at("journal_append", COORD_LANE, t0, t1, &|| {
+                    vec![("round", round.to_string()), ("ok", ok.to_string())]
+                });
+            }
             if let Err(se) = commit {
                 self.store_failed = Some(se.to_string());
                 return Err(se);
@@ -814,6 +895,8 @@ impl<B: RoundBackend> Coordinator<B> {
             self.metrics.inc("incr_index_rebuilds", 1);
         }
         let mut incs = Vec::new();
+        let timer = Timer::start();
+        let t0 = self.tracer.now_ns();
         let out = Self::schedule_for(
             &self.cfg,
             &self.registry,
@@ -823,11 +906,27 @@ impl<B: RoundBackend> Coordinator<B> {
             &self.devices,
             self.index.as_mut(),
             &mut incs,
+            &mut *self.tracer,
         );
+        if self.tracer.enabled() {
+            let t1 = self.tracer.now_ns();
+            self.tracer.span_at("scheduling", COORD_LANE, t0, t1, &Vec::new);
+        }
+        self.hists.sched_ns.record(secs_to_ns(timer.elapsed_s()));
+        self.apply_incs(incs);
+        out
+    }
+
+    /// Apply deferred Scheduling-phase metric increments (serial prepare
+    /// or adopted speculation — same sink either way), siphoning the
+    /// dirty-set sizes into their histogram on the way through.
+    fn apply_incs(&mut self, incs: Vec<(&'static str, u64)>) {
         for (key, v) in incs {
+            if key == "incr_dirty" {
+                self.hists.incr_dirty.record(v);
+            }
             self.metrics.inc(key, v);
         }
-        out
     }
 
     /// One Scheduling pass over an explicit state — selection draw,
@@ -851,6 +950,7 @@ impl<B: RoundBackend> Coordinator<B> {
         devices: &[ManagedDevice],
         index: Option<&mut FleetIndex>,
         incs: &mut Vec<(&'static str, u64)>,
+        tracer: &mut dyn Tracer,
     ) -> Result<PreparedRound> {
         if pool.is_empty() {
             // Nobody online: an empty round (no energy, model unchanged).
@@ -872,6 +972,7 @@ impl<B: RoundBackend> Coordinator<B> {
                 // of O(n) heavy work. Supersedes the sharded build (there
                 // is no O(n) bucketing left to fan out, so no
                 // `fleet_shards` increments on this path).
+                let t0 = tracer.now_ns();
                 incs.push(("incr_dirty", ix.pending_len() as u64));
                 let moved = ix.apply(|d| devices[d].class_signature());
                 incs.push(("incr_reclassified", moved as u64));
@@ -880,6 +981,15 @@ impl<B: RoundBackend> Coordinator<B> {
                     ix.derive(&selected, &Self::round_params(cfg), &mut relaxed)?;
                 if relaxed {
                     incs.push(("lower_limits_relaxed", 1));
+                }
+                if tracer.enabled() {
+                    let t1 = tracer.now_ns();
+                    tracer.span_at("build_instance", COORD_LANE, t0, t1, &|| {
+                        vec![
+                            ("mode", "incremental".to_string()),
+                            ("dirty", moved.to_string()),
+                        ]
+                    });
                 }
                 match built {
                     // Exhausted fleet (every selected battery drained to
@@ -898,14 +1008,34 @@ impl<B: RoundBackend> Coordinator<B> {
                 if raw_uppers.iter().all(|&u| u == 0) {
                     return Ok(PreparedRound::Empty { exhausted: true });
                 }
-                Self::build_instance_for(cfg, devices, &selected, &raw_uppers, incs)?
+                let t0 = tracer.now_ns();
+                let built = Self::build_instance_for(
+                    cfg,
+                    devices,
+                    &selected,
+                    &raw_uppers,
+                    incs,
+                    tracer,
+                );
+                if tracer.enabled() {
+                    let t1 = tracer.now_ns();
+                    let n = selected.len();
+                    tracer.span_at("build_instance", COORD_LANE, t0, t1, &|| {
+                        vec![
+                            ("mode", "scratch".to_string()),
+                            ("devices", n.to_string()),
+                        ]
+                    });
+                }
+                built?
             }
         };
         incs.push(("fleet_devices", fleet.n_devices() as u64));
         incs.push(("fleet_classes", fleet.n_classes() as u64));
         let instance = fleet.to_flat();
         let timer = Timer::start();
-        let (schedule, effective) = Self::solve_with(
+        let t0 = tracer.now_ns();
+        let solved = Self::solve_with(
             registry,
             warm,
             rng,
@@ -913,8 +1043,20 @@ impl<B: RoundBackend> Coordinator<B> {
             &fleet,
             &instance,
             incs,
-        )?;
+        );
+        let t1 = tracer.now_ns();
         let sched_time_s = timer.elapsed_s();
+        let (schedule, effective) = solved?;
+        if tracer.enabled() {
+            let classes = fleet.n_classes();
+            tracer.span_at("solve", COORD_LANE, t0, t1, &|| {
+                vec![
+                    ("solver", effective.to_string()),
+                    ("classes", classes.to_string()),
+                    ("t", t.to_string()),
+                ]
+            });
+        }
         validate::check(&instance, &schedule)?;
         let predicted_j = validate::total_cost(&instance, &schedule);
         Ok(PreparedRound::Planned(PlannedRound {
@@ -941,6 +1083,13 @@ impl<B: RoundBackend> Coordinator<B> {
         let p = match prepared {
             PreparedRound::Empty { exhausted } => {
                 self.ledger.begin_round();
+                self.tracer.instant("empty_round", &|| {
+                    vec![(
+                        "cause",
+                        if exhausted { "exhausted" } else { "nobody_online" }
+                            .to_string(),
+                    )]
+                });
                 let loss = self.backend.evaluate()?;
                 self.metrics.inc("empty_rounds", 1);
                 if exhausted {
@@ -956,11 +1105,13 @@ impl<B: RoundBackend> Coordinator<B> {
                 digest: round_digest(&p.fleet, &p.schedule),
             });
         }
+        self.hists.record_solve(p.effective, secs_to_ns(p.sched_time_s));
 
         // ---- Training --------------------------------------------------
         self.transition(Phase::Training)?;
         self.ledger.begin_round();
         let wall = Timer::start();
+        let train_t0 = self.tracer.now_ns();
         let mut assignments = Vec::new();
         for (slot, &d) in p.selected.iter().enumerate() {
             let tasks = p.schedule.get(slot);
@@ -1032,6 +1183,14 @@ impl<B: RoundBackend> Coordinator<B> {
             loss_n += o.tasks;
         }
         let train_time_s = wall.elapsed_s();
+        self.hists.train_ns.record(secs_to_ns(train_time_s));
+        if self.tracer.enabled() {
+            let train_t1 = self.tracer.now_ns();
+            let n = outcomes.len();
+            self.tracer.span_at("training", COORD_LANE, train_t0, train_t1, &|| {
+                vec![("outcomes", n.to_string())]
+            });
+        }
         self.metrics.set("sim_round_time_s", sim_time_s);
         self.metrics.set(
             "train_loss",
@@ -1040,8 +1199,15 @@ impl<B: RoundBackend> Coordinator<B> {
 
         // ---- Aggregating -----------------------------------------------
         self.transition(Phase::Aggregating)?;
+        let agg_timer = Timer::start();
+        let agg_t0 = self.tracer.now_ns();
         self.backend.aggregate()?;
         let eval_loss = self.backend.evaluate()?;
+        self.hists.aggregate_ns.record(secs_to_ns(agg_timer.elapsed_s()));
+        if self.tracer.enabled() {
+            let agg_t1 = self.tracer.now_ns();
+            self.tracer.span_at("aggregate", COORD_LANE, agg_t0, agg_t1, &Vec::new);
+        }
 
         self.finish_round(
             round_idx,
@@ -1099,21 +1265,33 @@ impl<B: RoundBackend> Coordinator<B> {
                 // No live index (knob just toggled on): the serial
                 // prepare must build it — force a miss.
                 None => {
+                    self.tracer.instant("speculation_miss", &|| {
+                        vec![("cause", "index_missing".to_string())]
+                    });
                     self.metrics.inc("pipeline_misses", 1);
                     return None;
                 }
             }
         }
         if spec.round != round_idx || spec.guard != guard {
+            let cause = if spec.round != round_idx {
+                "stale_round"
+            } else {
+                "guard_mismatch"
+            };
+            self.tracer.instant("speculation_miss", &|| {
+                vec![("cause", cause.to_string())]
+            });
             self.metrics.inc("pipeline_misses", 1);
             return None;
         }
+        self.tracer.instant("speculation_adopt", &|| {
+            vec![("round", round_idx.to_string())]
+        });
         self.metrics.inc("pipeline_hits", 1);
         self.rng = Rng::from_state(spec.rng_after);
         self.warm = spec.warm;
-        for (k, v) in spec.incs {
-            self.metrics.inc(k, v);
-        }
+        self.apply_incs(spec.incs);
         Some(spec.prepared)
     }
 
@@ -1123,7 +1301,22 @@ impl<B: RoundBackend> Coordinator<B> {
     /// handled — when the round prepares serially.
     fn speculate(&mut self, round: usize, plan: &RoundPlan) {
         let timer = Timer::start();
+        let t0 = self.tracer.now_ns();
         let spec = self.speculate_inner(round, plan);
+        if self.tracer.enabled() {
+            let t1 = self.tracer.now_ns();
+            let outcome = match &spec {
+                Ok(Some(_)) => "prepared",
+                Ok(None) => "skipped",
+                Err(_) => "error",
+            };
+            self.tracer.span_at("speculate", COORD_LANE, t0, t1, &|| {
+                vec![
+                    ("round", round.to_string()),
+                    ("outcome", outcome.to_string()),
+                ]
+            });
+        }
         self.metrics
             .inc("pipeline_overlap_ns", (timer.elapsed_s() * 1e9) as u64);
         match spec {
@@ -1145,7 +1338,7 @@ impl<B: RoundBackend> Coordinator<B> {
     /// serial loop would. Returns `None` when the predicted round is
     /// empty (nothing worth precomputing).
     fn speculate_inner(
-        &self,
+        &mut self,
         round: usize,
         plan: &RoundPlan,
     ) -> Result<Option<Speculation>> {
@@ -1226,6 +1419,10 @@ impl<B: RoundBackend> Coordinator<B> {
             &devices,
             index.as_mut(),
             &mut incs,
+            // Live tracer, speculatively-cloned everything else: trace
+            // events are pure output, so tracing the speculation as it
+            // happens can never perturb the state it predicts.
+            &mut *self.tracer,
         )? {
             PreparedRound::Planned(p) => p,
             // A predicted-empty round has no solve worth precomputing.
@@ -1254,6 +1451,8 @@ impl<B: RoundBackend> Coordinator<B> {
         tasks: usize,
     ) -> Result<RoundLog> {
         self.transition(Phase::Recosting)?;
+        let recost_timer = Timer::start();
+        let recost_t0 = self.tracer.now_ns();
         // Advance fleet dynamics for the NEXT round: drift the energy
         // profiles and churn availability. Battery state was already
         // re-costed in place as energy was recorded (and dirty-marked).
@@ -1277,6 +1476,16 @@ impl<B: RoundBackend> Coordinator<B> {
             Some(av) => av.step(&mut self.rng),
             None => (0..self.devices.len()).collect(),
         };
+        self.hists.recost_ns.record(secs_to_ns(recost_timer.elapsed_s()));
+        if self.tracer.enabled() {
+            let recost_t1 = self.tracer.now_ns();
+            self.tracer
+                .span_at("recost", COORD_LANE, recost_t0, recost_t1, &Vec::new);
+            // Quantile gauges are exported only on traced campaigns:
+            // they are wall-clock telemetry, and untraced metrics
+            // summaries stay bit-stable run-to-run without them.
+            self.hists.export(&mut self.metrics);
+        }
 
         let energy_j = self.ledger.rounds().last().copied().unwrap_or(0.0);
         let row = RoundLog {
@@ -1347,9 +1556,17 @@ impl<B: RoundBackend + BackendState> Coordinator<B> {
     pub fn round_stored(&mut self) -> Result<RoundLog> {
         let row = self.round()?;
         if self.store.as_ref().map_or(false, |s| s.due_snapshot()) {
+            let t0 = self.tracer.now_ns();
             let state = self.snapshot_json();
             if let Some(store) = self.store.as_mut() {
                 store.write_snapshot(state)?;
+            }
+            if self.tracer.enabled() {
+                let t1 = self.tracer.now_ns();
+                let round = row.round;
+                self.tracer.span_at("snapshot", COORD_LANE, t0, t1, &|| {
+                    vec![("round", round.to_string())]
+                });
             }
         }
         Ok(row)
@@ -2453,5 +2670,94 @@ mod tests {
         }
         assert_eq!(a.rng.state(), b.rng.state());
         assert!(b.index.is_some());
+    }
+
+    // ---- observability ------------------------------------------------
+
+    #[test]
+    fn traced_campaign_is_bit_for_bit_and_spans_balance() {
+        use crate::obs::ChromeTraceSink;
+        use std::sync::{Arc, Mutex};
+
+        #[derive(Clone, Default)]
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+        impl std::io::Write for SharedBuf {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+
+        // Pipeline + sharded build engaged so the speculative and
+        // fan-out span paths are exercised; churn/drift/dropout so the
+        // traced state genuinely varies.
+        let run = |sink: Option<SharedBuf>| {
+            let traced = sink.is_some();
+            let cfg = CoordinatorConfig {
+                rounds: 6,
+                shards: 3,
+                pipeline: PipelineConfig::on(),
+                ..paper_cfg()
+            };
+            let mut c =
+                Coordinator::new(cfg, paper_fleet(), SimBackend::new()).unwrap();
+            c.set_dynamics(DynamicsConfig::mobile(3));
+            if let Some(buf) = sink {
+                c.set_tracer(Box::new(ChromeTraceSink::from_writer(
+                    Box::new(buf),
+                )));
+            }
+            c.run().unwrap();
+            c.flush_trace().unwrap();
+            assert!(c.hists().sched_ns.count() > 0, "hists always record");
+            assert_eq!(
+                c.metrics().summary().contains("obs_"),
+                traced,
+                "quantile gauges exported exactly when traced"
+            );
+            campaign_bits(&c)
+        };
+        let buf = SharedBuf::default();
+        let untraced = run(None);
+        let traced = run(Some(buf.clone()));
+        assert_eq!(untraced, traced, "tracing must be pure output");
+
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let mut open: Vec<(String, String)> = Vec::new();
+        let mut names: std::collections::BTreeSet<String> = Default::default();
+        for line in text.lines() {
+            let v = Json::parse(line).expect("trace lines are valid JSON");
+            let ph = v.req("ph").unwrap().as_str().unwrap().to_string();
+            let name = v.req("name").unwrap().as_str().unwrap().to_string();
+            let tid = v.req("tid").unwrap().as_f64().unwrap().to_string();
+            names.insert(name.clone());
+            match ph.as_str() {
+                "B" => open.push((name, tid)),
+                "E" => assert_eq!(
+                    open.pop().expect("E without B"),
+                    (name, tid),
+                    "spans must nest"
+                ),
+                "i" => {}
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        assert!(open.is_empty(), "unbalanced spans: {open:?}");
+        for expected in [
+            "round",
+            "scheduling",
+            "build_instance",
+            "solve",
+            "shard",
+            "training",
+            "aggregate",
+            "recost",
+            "speculate",
+        ] {
+            assert!(names.contains(expected), "missing span '{expected}'");
+        }
     }
 }

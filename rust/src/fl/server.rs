@@ -226,6 +226,18 @@ impl Server {
         self.coord.set_incremental(enabled);
     }
 
+    /// Attach a trace consumer (e.g. [`crate::obs::ChromeTraceSink`]
+    /// behind `--trace FILE`). Pure output — campaigns are bit-for-bit
+    /// identical with any tracer attached.
+    pub fn set_tracer(&mut self, tracer: Box<dyn crate::obs::Tracer>) {
+        self.coord.set_tracer(tracer);
+    }
+
+    /// Flush the attached tracer, surfacing any deferred write error.
+    pub fn flush_trace(&mut self) -> Result<()> {
+        self.coord.flush_trace()
+    }
+
     /// The runtime (for external evaluation).
     pub fn runtime(&self) -> &ModelRuntime {
         &self.coord.backend().runtime

@@ -34,6 +34,10 @@
 //!   checksummed snapshot/restore (crash recovery is bit-for-bit), and
 //!   streaming metric sinks that keep coordinator memory bounded over
 //!   long campaigns.
+//! * [`obs`] — observability: phase-span tracing ([`obs::Tracer`], with
+//!   a Chrome Trace Event JSONL sink and a zero-cost no-op default) and
+//!   fixed-bucket log₂ latency histograms ([`obs::hist`]). Pure output:
+//!   tracing can never perturb a schedule, journal byte, or digest.
 //! * [`energy`] — device power/energy/carbon models that synthesize the
 //!   cost functions consumed by the schedulers.
 //! * [`fl`] — federated-learning server (a PJRT-backed coordinator
@@ -70,6 +74,7 @@ pub mod energy;
 pub mod error;
 pub mod fl;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod store;

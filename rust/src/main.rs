@@ -11,8 +11,15 @@
 //!   bit-for-bit (snapshot + verified journal replay);
 //! * `replay` — re-derive every journaled round from the initial snapshot
 //!   and verify digests: a deterministic audit of a finished campaign;
+//! * `stats` — post-hoc campaign dashboard from a store: phase-time
+//!   breakdown, per-solver usage, pipeline/incremental rates, energy
+//!   concentration;
 //! * `fleet` — sample and describe a heterogeneous fleet;
 //! * `solvers` — list every solver in the registry.
+//!
+//! `train`/`resume` additionally take `--trace FILE` to stream a Chrome
+//! Trace Event phase trace ([`fedzero::obs`]) — pure telemetry, campaigns
+//! are bit-for-bit identical with or without it.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -27,6 +34,7 @@ use fedzero::energy::profiles::{BehaviorMix, Fleet};
 use fedzero::fl::dynamics::DynamicsConfig;
 use fedzero::fl::Server;
 use fedzero::metrics::Timer;
+use fedzero::obs::ChromeTraceSink;
 use fedzero::runtime::pool;
 use fedzero::sched::auto::{best_algorithm, TABLE2_SCENARIOS};
 use fedzero::sched::fleet::FleetInstance;
@@ -59,6 +67,7 @@ fn run(args: &[String]) -> fedzero::Result<()> {
         "train" => cmd_train(&parsed),
         "resume" => cmd_resume(&parsed),
         "replay" => cmd_replay(&parsed),
+        "stats" => cmd_stats(&parsed),
         "fleet" => cmd_fleet(&parsed),
         "solvers" => cmd_solvers(),
         other => Err(fedzero::FedError::Config(format!("unhandled command {other}"))),
@@ -210,6 +219,9 @@ fn cmd_train_fl(p: &cli::Parsed) -> fedzero::Result<()> {
     server.set_shards(p.get_or("shards", 1)?)?;
     server.set_pipeline(parse_pipeline(p.req("pipeline")?)?);
     server.set_incremental(parse_incremental(p.req("incremental")?)?);
+    if let Some(path) = p.get("trace") {
+        server.set_tracer(Box::new(ChromeTraceSink::create(Path::new(path))?));
+    }
     if let Some(path) = p.get("metrics-jsonl") {
         server.add_sink(Box::new(JsonlSink::create(Path::new(path))?));
     }
@@ -243,6 +255,7 @@ fn cmd_train_fl(p: &cli::Parsed) -> fedzero::Result<()> {
         }
     }
     server.flush_sinks()?;
+    server.flush_trace()?;
     println!(
         "done: policy={policy}, total energy {}",
         fmt_energy(server.ledger().total())
@@ -312,6 +325,8 @@ fn drive_sim(
         }
     }
     coord.flush_sinks()?;
+    // Surface any deferred trace-write error; a no-op without `--trace`.
+    coord.flush_trace()?;
     Ok(())
 }
 
@@ -415,6 +430,9 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
             // them so streamed outputs stay complete across crashes.
             ("metrics_jsonl", opt_path("metrics-jsonl")),
             ("out", opt_path("out")),
+            // The trace file too: `resume` re-attaches it in append mode
+            // so one campaign yields one continuous trace across crashes.
+            ("trace", opt_path("trace")),
             ("cfg", snap::cfg_to_json(&cfg)),
         ]);
         let store = CampaignStore::create(dir, meta, coord.snapshot_json())?;
@@ -423,6 +441,11 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
         if ring > 0 {
             coord.set_log_bound(Some(ring));
         }
+    }
+    if let Some(path) = p.get("trace") {
+        // Pure output: the traced campaign is bit-for-bit identical to an
+        // untraced one (journal bytes and replay digest included).
+        coord.set_tracer(Box::new(ChromeTraceSink::create(Path::new(path))?));
     }
 
     println!("round,policy,loss,energy_j,sched_ms,train_s");
@@ -504,6 +527,23 @@ fn cmd_resume(p: &cli::Parsed) -> fedzero::Result<()> {
     )?;
     coord.attach_store(campaign)?;
     reattach_sinks(&mut coord, &contents.meta, &contents.entries)?;
+    // Trace re-attach: an explicit `--trace` overrides the path persisted
+    // in the store meta. Attached only *after* `restore` replayed the
+    // journal tail, so replayed rounds never duplicate spans in the file;
+    // `open_append` truncates any line torn by the crash.
+    let trace_path = p
+        .get("trace")
+        .map(str::to_string)
+        .or_else(|| {
+            contents
+                .meta
+                .get("trace")
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+        });
+    if let Some(path) = trace_path {
+        coord.set_tracer(Box::new(ChromeTraceSink::open_append(Path::new(&path))?));
+    }
     if coord.rounds_run() >= rounds || target_reached {
         println!("campaign already complete ({committed} rounds)");
         return Ok(());
@@ -552,6 +592,147 @@ fn cmd_replay(p: &cli::Parsed) -> fedzero::Result<()> {
         campaign_digest(&contents.entries)
     );
     debug_assert_eq!(coord.rounds_run(), n);
+    Ok(())
+}
+
+/// `stats DIR`: a post-hoc dashboard over a campaign store — phase-time
+/// breakdown and per-solver usage from the journal (complete for every
+/// committed round), plus pipeline/incremental effectiveness and energy
+/// concentration from the latest snapshot's metrics hub and ledger.
+fn cmd_stats(p: &cli::Parsed) -> fedzero::Result<()> {
+    let dir = PathBuf::from(&p.positional[0]);
+    let contents = CampaignStore::read(&dir)?;
+    let cfg = snap::cfg_from_json(store::get(&contents.meta, "cfg")?)?;
+    let entries = &contents.entries;
+    let n = entries.len();
+
+    // Journal-derived aggregates: exact for all n committed rounds.
+    let mut sched_s = 0.0f64;
+    let mut train_s = 0.0f64;
+    let mut energy_j = 0.0f64;
+    let mut tasks = 0u64;
+    // (rounds, Σ sched s) per effective solver; BTreeMap for stable order.
+    let mut solvers: std::collections::BTreeMap<&str, (u64, f64)> =
+        std::collections::BTreeMap::new();
+    for e in entries {
+        sched_s += e.row.sched_time_s;
+        train_s += e.row.train_time_s;
+        energy_j += e.row.energy_j;
+        tasks += e.row.tasks as u64;
+        let name =
+            if e.solver.is_empty() { "(empty round)" } else { e.solver.as_str() };
+        let slot = solvers.entry(name).or_insert((0, 0.0));
+        slot.0 += 1;
+        slot.1 += e.row.sched_time_s;
+    }
+
+    println!(
+        "campaign {} — {n} of {} rounds journaled, policy {}",
+        dir.display(),
+        cfg.rounds,
+        cfg.algo
+    );
+    println!(
+        "energy: {} over {tasks} tasks ({} per task)",
+        fmt_energy(energy_j),
+        fmt_energy(if tasks > 0 { energy_j / tasks as f64 } else { 0.0 })
+    );
+    let wall = sched_s + train_s;
+    let pct = |x: f64| if wall > 0.0 { 100.0 * x / wall } else { 0.0 };
+    println!(
+        "phases: scheduling {} ({:.1}%), training {} ({:.1}%)",
+        fmt_duration(sched_s),
+        pct(sched_s),
+        fmt_duration(train_s),
+        pct(train_s)
+    );
+
+    let mut table = Table::new(
+        "per-solver usage (from the journal)",
+        &["solver", "rounds", "share", "Σ sched", "mean sched"],
+    );
+    for (name, (count, time_s)) in &solvers {
+        table.rows_str(vec![
+            name.to_string(),
+            count.to_string(),
+            format!("{:.1}%", 100.0 * *count as f64 / n.max(1) as f64),
+            fmt_duration(*time_s),
+            fmt_duration(time_s / (*count).max(1) as f64),
+        ]);
+    }
+    table.print();
+
+    // Snapshot-derived rates: the hub and ledger are periodic, so they
+    // cover the first `snap_rounds` rounds (≤ n after a crash window).
+    let snap_rounds = contents
+        .snapshot
+        .get("next_round")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    let metrics = snap::metrics_from_json(store::get(&contents.snapshot, "metrics")?)?;
+    let ledger = snap::ledger_from_json(store::get(&contents.snapshot, "ledger")?)?;
+    if snap_rounds < n {
+        println!(
+            "(rates below are from the snapshot at round {snap_rounds}; \
+             the journal is ahead at {n})"
+        );
+    }
+
+    let spec = metrics.counter("pipeline_speculations");
+    if cfg.pipeline.enabled || spec > 0 {
+        let hits = metrics.counter("pipeline_hits");
+        let misses = metrics.counter("pipeline_misses");
+        let judged = hits + misses;
+        println!(
+            "pipeline: {spec} speculations, {hits} adopted, {misses} missed \
+             ({:.1}% hit rate), {:.3}s overlap reclaimed",
+            if judged > 0 { 100.0 * hits as f64 / judged as f64 } else { 0.0 },
+            metrics.counter("pipeline_overlap_ns") as f64 / 1e9
+        );
+    }
+    let scheduled = metrics.counter("fleet_devices");
+    if cfg.incremental.enabled {
+        let dirty = metrics.counter("incr_dirty");
+        println!(
+            "incremental: {} index rebuilds, {dirty} dirty devices across \
+             {scheduled} scheduled ({:.1}% dirty rate)",
+            metrics.counter("incr_index_rebuilds"),
+            if scheduled > 0 { 100.0 * dirty as f64 / scheduled as f64 } else { 0.0 }
+        );
+    }
+    let classes = metrics.counter("fleet_classes");
+    if scheduled > 0 {
+        println!(
+            "dedup: {scheduled} device-slots solved as {classes} classes \
+             ({:.1}× collapse)",
+            scheduled as f64 / classes.max(1) as f64
+        );
+    }
+    println!(
+        "energy concentration: max device share {:.3} (cap {:.3}) over {} \
+         ledger rounds",
+        ledger.max_device_share(),
+        cfg.max_share,
+        ledger.rounds_opened()
+    );
+    // Latency gauges exported by a traced run (`--trace`): log₂-bucketed
+    // phase/solve quantiles, absent on untraced campaigns by design.
+    let obs: Vec<(&String, &f64)> = metrics
+        .gauges_map()
+        .iter()
+        .filter(|(k, _)| k.starts_with("obs_"))
+        .collect();
+    if !obs.is_empty() {
+        let mut table =
+            Table::new("traced latency gauges (ns)", &["gauge", "value"]);
+        for (k, v) in obs {
+            table.rows_str(vec![k.clone(), format!("{v:.0}")]);
+        }
+        table.print();
+    }
+    if p.flag("expose") {
+        print!("{}", metrics.expose_text());
+    }
     Ok(())
 }
 

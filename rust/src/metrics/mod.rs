@@ -63,6 +63,27 @@ impl MetricsHub {
         parts.extend(self.gauges.iter().map(|(k, v)| format!("{k}={v:.4}")));
         parts.join(" ")
     }
+
+    /// Prometheus-style text exposition: every counter then every gauge,
+    /// name-sorted (the `BTreeMap` order), one `# TYPE` line each, names
+    /// prefixed `fedzero_`. Floats render through the deterministic
+    /// [`crate::util::json::Json`] writer, so the format is
+    /// locale-independent and bit-stable — pinned by a golden test.
+    pub fn expose_text(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!(
+                "# TYPE fedzero_{k} counter\nfedzero_{k} {v}\n"
+            ));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!(
+                "# TYPE fedzero_{k} gauge\nfedzero_{k} {}\n",
+                crate::util::json::Json::Num(*v).to_string()
+            ));
+        }
+        out
+    }
 }
 
 /// Scoped wall-clock timer.
@@ -140,8 +161,18 @@ impl EnergyLedger {
     }
 
     /// Record energy for `device` in the current (last) round.
+    ///
+    /// Energy recorded before any [`EnergyLedger::begin_round`] opens an
+    /// implicit round bucket, so the per-round series never silently
+    /// drops joules that `per_device` (and thus [`EnergyLedger::total`])
+    /// kept. A ledger restored mid-campaign (`opened > 0` with an empty
+    /// retained tail) is *not* implicitly re-opened — round accounting
+    /// there belongs to the coordinator's next `begin_round`.
     pub fn record(&mut self, device: usize, joules: f64) {
         debug_assert!(joules >= 0.0, "negative energy");
+        if self.opened == 0 {
+            self.begin_round();
+        }
         *self.per_device.entry(device).or_insert(0.0) += joules;
         if let Some(last) = self.per_round.last_mut() {
             *last += joules;
@@ -373,6 +404,37 @@ mod tests {
     #[test]
     fn ledger_share_empty() {
         assert_eq!(EnergyLedger::new().max_device_share(), 0.0);
+    }
+
+    #[test]
+    fn record_before_begin_round_opens_an_implicit_bucket() {
+        // Regression: joules recorded before any begin_round used to
+        // reach per_device but silently vanish from the round series
+        // (`last_mut()` was None). They must land in an implicit bucket.
+        let mut l = EnergyLedger::new();
+        l.record(2, 4.0);
+        assert_eq!(l.rounds_opened(), 1);
+        assert_eq!(l.rounds(), &[4.0]);
+        assert_eq!(l.total(), 4.0);
+        // The implicit bucket is the current round: later records and an
+        // explicit begin_round compose normally after it.
+        l.record(0, 1.0);
+        l.begin_round();
+        l.record(0, 2.0);
+        assert_eq!(l.rounds(), &[5.0, 2.0]);
+        assert_eq!(l.rounds_opened(), 2);
+    }
+
+    #[test]
+    fn restored_ledger_does_not_reopen_implicitly() {
+        // A mid-campaign restore can carry `opened > 0` with an empty
+        // retained tail; record() must leave round accounting to the
+        // coordinator's next begin_round instead of forging a bucket.
+        let mut l = EnergyLedger::from_parts(BTreeMap::new(), Vec::new(), 7);
+        l.record(1, 3.0);
+        assert_eq!(l.rounds_opened(), 7);
+        assert!(l.rounds().is_empty());
+        assert_eq!(l.total(), 3.0);
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Fixed-bucket log₂ latency histograms (no deps, no allocation per
+//! record).
+//!
+//! A [`LogHist`] buckets `u64` samples by bit length: bucket `i` holds
+//! values in `[2^(i-1), 2^i - 1]` (bucket 0 holds exactly 0), so 65
+//! fixed buckets cover the whole `u64` range and `record` is a shift +
+//! two adds. Quantiles are answered as the bucket upper bound clamped to
+//! the exact observed maximum — coarse (one power of two) but stable,
+//! allocation-free, and cheap enough to leave on unconditionally.
+//!
+//! None of this state ever feeds a digest: histograms live beside the
+//! [`crate::metrics::MetricsHub`] and are exported as `obs_*` gauges,
+//! which the store snapshots persist but no journal entry, guard, or
+//! campaign digest ever reads (fedlint R5 fences the `obs_` prefix out
+//! of digest functions).
+
+use std::collections::BTreeMap;
+
+use crate::metrics::MetricsHub;
+
+/// Number of buckets: bit lengths 0 (the value 0) through 64.
+pub const BUCKETS: usize = 65;
+
+/// A fixed-bucket log₂ histogram over `u64` samples.
+#[derive(Clone, Debug)]
+pub struct LogHist {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    max: u64,
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHist {
+    /// New empty histogram.
+    pub const fn new() -> Self {
+        Self { buckets: [0; BUCKETS], count: 0, max: 0 }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        let idx = (64 - v.leading_zeros()) as usize;
+        self.buckets[idx] += 1;
+        self.count += 1;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact maximum sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Upper bound of the bucket holding bit length `i`.
+    fn bucket_upper(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]`: the upper bound of the
+    /// first bucket whose cumulative count reaches `⌈q·count⌉`, clamped
+    /// to the exact maximum. Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target =
+            ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut acc = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            acc += b;
+            if acc >= target {
+                return Self::bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median estimate.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 95th-percentile estimate.
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+}
+
+/// Convert a wall-clock duration in seconds to whole nanoseconds
+/// (negative or non-finite inputs clamp to 0).
+pub fn secs_to_ns(s: f64) -> u64 {
+    if s.is_finite() && s > 0.0 {
+        (s * 1e9) as u64
+    } else {
+        0
+    }
+}
+
+/// The coordinator's histogram set: phase durations, per-solver solve
+/// time, and incremental dirty-set sizes. Exported to `obs_*` gauges on
+/// the metrics hub (p50/p95/max per series); never read by any digest.
+#[derive(Clone, Debug, Default)]
+pub struct ObsHists {
+    /// Scheduling-phase duration per round (ns).
+    pub sched_ns: LogHist,
+    /// Training-phase duration per round (ns).
+    pub train_ns: LogHist,
+    /// Aggregating-phase duration per round (ns).
+    pub aggregate_ns: LogHist,
+    /// Recosting-phase duration per round (ns).
+    pub recost_ns: LogHist,
+    /// Incremental dirty-set size per derived round (devices).
+    pub incr_dirty: LogHist,
+    /// Solve duration per effective solver (ns).
+    pub solve_ns: BTreeMap<&'static str, LogHist>,
+}
+
+impl ObsHists {
+    /// Record one solve duration under its effective solver name.
+    pub fn record_solve(&mut self, solver: &'static str, ns: u64) {
+        self.solve_ns.entry(solver).or_default().record(ns);
+    }
+
+    /// Export every non-empty series as `obs_<name>_{p50,p95,max}`
+    /// gauges.
+    pub fn export(&self, hub: &mut MetricsHub) {
+        fn put(hub: &mut MetricsHub, name: &str, h: &LogHist) {
+            if h.count() == 0 {
+                return;
+            }
+            hub.set(&format!("obs_{name}_p50"), h.p50() as f64);
+            hub.set(&format!("obs_{name}_p95"), h.p95() as f64);
+            hub.set(&format!("obs_{name}_max"), h.max() as f64);
+        }
+        put(hub, "sched_ns", &self.sched_ns);
+        put(hub, "train_ns", &self.train_ns);
+        put(hub, "aggregate_ns", &self.aggregate_ns);
+        put(hub, "recost_ns", &self.recost_ns);
+        put(hub, "incr_dirty", &self.incr_dirty);
+        for (solver, h) in &self.solve_ns {
+            put(hub, &format!("solve_ns_{solver}"), h);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let h = LogHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p95(), 0);
+    }
+
+    #[test]
+    fn buckets_by_bit_length() {
+        let mut h = LogHist::new();
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.max(), 1000);
+        // Median target is the 4th sample (value 3 → bucket upper 3).
+        assert_eq!(h.p50(), 3);
+        // p95 target is the 8th sample; bucket upper 1023 clamps to max.
+        assert_eq!(h.p95(), 1000);
+    }
+
+    #[test]
+    fn extreme_values_do_not_overflow() {
+        let mut h = LogHist::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.p95(), u64::MAX);
+    }
+
+    #[test]
+    fn secs_conversion_clamps() {
+        assert_eq!(secs_to_ns(1.5e-3), 1_500_000);
+        assert_eq!(secs_to_ns(-1.0), 0);
+        assert_eq!(secs_to_ns(f64::NAN), 0);
+    }
+
+    #[test]
+    fn export_writes_quantile_gauges() {
+        let mut o = ObsHists::default();
+        o.sched_ns.record(1_000);
+        o.record_solve("mc2mkp", 2_000);
+        o.record_solve("mc2mkp", 4_000);
+        let mut hub = MetricsHub::new();
+        o.export(&mut hub);
+        assert_eq!(hub.gauge("obs_sched_ns_max"), Some(1_000.0));
+        assert!(hub.gauge("obs_solve_ns_mc2mkp_p50").is_some());
+        assert_eq!(hub.gauge("obs_solve_ns_mc2mkp_max"), Some(4_000.0));
+        // Empty series stay absent.
+        assert_eq!(hub.gauge("obs_train_ns_p50"), None);
+    }
+}

@@ -1,0 +1,373 @@
+//! Observability: phase-span tracing for campaigns, with a zero-cost
+//! default.
+//!
+//! The coordinator (and everything it drives — the sharded instance
+//! builder, the speculative pipeline, the durable store) reports *what
+//! happened when* through the [`Tracer`] trait. Two implementations:
+//!
+//! * [`NoopTracer`] — the default. Every method is an empty default
+//!   body, and every argument-carrying event takes its arguments as a
+//!   closure, so an untraced campaign never materializes a single
+//!   string or reads a clock on the tracer's behalf. Untraced runs are
+//!   bit-identical to pre-observability builds.
+//! * [`ChromeTraceSink`] — writes Trace Event Format JSONL (one event
+//!   object per line) loadable directly in `chrome://tracing` or
+//!   Perfetto. Duration events are `B`/`E` pairs on lane (`tid`) 0 for
+//!   the coordinator; shard-build workers get one complete span per
+//!   worker on lanes 1.. via [`Tracer::span_at`]; speculation lifecycle
+//!   events are instants carrying the miss cause.
+//!
+//! **The invariant**: tracing is pure *output*. No tracer method returns
+//! data to the caller (other than [`Tracer::now_ns`], used only to
+//! timestamp other trace events), so no schedule, journal byte, RNG
+//! state, or digest can depend on whether a tracer is attached. fedlint
+//! R5 additionally fences the `trace_`/`span_`/`obs_` prefixes out of
+//! every digest function, and `tests/obs_trace.rs` proves journal byte
+//! identity differentially.
+
+pub mod hist;
+
+use std::io::{Read as _, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// Lazily-built event arguments: short key/value pairs rendered into the
+/// trace line's `args` object.
+pub type ArgList = Vec<(&'static str, String)>;
+
+/// Structured trace consumer. All methods default to no-ops so that
+/// [`NoopTracer`] (and any partial implementation) costs nothing.
+pub trait Tracer: Send {
+    /// Whether events will actually be recorded — callers use this to
+    /// skip argument preparation that even the closure indirection can't
+    /// make free (e.g. snapshotting per-worker timing offsets).
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    /// Nanoseconds since this tracer's anchor instant (0 when disabled).
+    /// Only ever used to place [`Tracer::span_at`] events on the same
+    /// clock as live `begin`/`end` pairs — never returned into
+    /// scheduling state.
+    fn now_ns(&self) -> u64 {
+        0
+    }
+
+    /// Open a duration span on the coordinator lane.
+    fn begin(&mut self, _name: &'static str) {}
+
+    /// Open a duration span with arguments (built only when recording).
+    fn begin_args(&mut self, _name: &'static str, _args: &dyn Fn() -> ArgList) {}
+
+    /// Close the innermost open span with this name.
+    fn end(&mut self, _name: &'static str) {}
+
+    /// A point-in-time event with arguments.
+    fn instant(&mut self, _name: &'static str, _args: &dyn Fn() -> ArgList) {}
+
+    /// A complete span on lane `lane` with explicit timestamps (offsets
+    /// on this tracer's [`Tracer::now_ns`] clock) — how concurrent shard
+    /// workers report after the fact without sharing the sink.
+    fn span_at(
+        &mut self,
+        _name: &'static str,
+        _lane: u32,
+        _start_ns: u64,
+        _end_ns: u64,
+        _args: &dyn Fn() -> ArgList,
+    ) {
+    }
+
+    /// Flush buffered events to the sink, surfacing any deferred write
+    /// error.
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The default tracer: records nothing, costs nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopTracer;
+
+impl Tracer for NoopTracer {}
+
+/// The coordinator's lane (`tid`) in the trace; shard workers use
+/// lanes 1..=shards.
+pub const COORD_LANE: u32 = 0;
+
+/// Trace Event Format JSONL writer.
+///
+/// One JSON object per line (`B`/`E` duration events, `i` instants) with
+/// `pid` fixed at 1 and `tid` carrying the lane. Timestamps are
+/// microseconds (fractional) from the sink's anchor instant. The stream
+/// is plain JSONL — no surrounding array — which both `chrome://tracing`
+/// and Perfetto accept.
+///
+/// Write errors never interrupt a campaign: they are deferred and
+/// surfaced by [`Tracer::flush`] (a trace is telemetry, not state — a
+/// full disk must not kill training the journal can survive).
+pub struct ChromeTraceSink {
+    out: Box<dyn Write + Send>,
+    anchor: Instant,
+    err: Option<std::io::Error>,
+}
+
+impl ChromeTraceSink {
+    /// Create (truncate) a trace file at `path`.
+    pub fn create(path: &Path) -> Result<Self> {
+        let file = std::fs::File::create(path)?;
+        Ok(Self::from_writer(Box::new(std::io::BufWriter::new(file))))
+    }
+
+    /// Re-open an existing trace for append (`resume` re-attaching the
+    /// campaign's trace). A crash can tear the trailing line mid-write;
+    /// like the journal's `open_append`, anything after the last newline
+    /// is truncated away so the stream stays valid JSONL.
+    pub fn open_append(path: &Path) -> Result<Self> {
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)?;
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf)?;
+        let keep = match buf.iter().rposition(|&b| b == b'\n') {
+            Some(pos) => (pos + 1) as u64,
+            None => 0,
+        };
+        if keep != buf.len() as u64 {
+            file.set_len(keep)?;
+            file.sync_data()?;
+        }
+        file.seek(SeekFrom::Start(keep))?;
+        Ok(Self::from_writer(Box::new(std::io::BufWriter::new(file))))
+    }
+
+    /// Build over any writer (tests capture the byte stream this way).
+    pub fn from_writer(out: Box<dyn Write + Send>) -> Self {
+        Self { out, anchor: Instant::now(), err: None }
+    }
+
+    fn emit(
+        &mut self,
+        ph: &str,
+        name: &str,
+        lane: u32,
+        ts_ns: u64,
+        args: Option<ArgList>,
+    ) {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("cat", Json::Str("fedzero".into())),
+            ("name", Json::Str(name.into())),
+            ("ph", Json::Str(ph.into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(lane as f64)),
+            ("ts", Json::Num(ts_ns as f64 / 1000.0)),
+        ];
+        if ph == "i" {
+            // Instant scope: thread.
+            fields.push(("s", Json::Str("t".into())));
+        }
+        if let Some(a) = args {
+            fields.push((
+                "args",
+                Json::Obj(
+                    a.into_iter()
+                        .map(|(k, v)| (k.to_string(), Json::Str(v)))
+                        .collect(),
+                ),
+            ));
+        }
+        let mut line = Json::obj(fields).to_string();
+        line.push('\n');
+        if self.err.is_none() {
+            if let Err(e) = self.out.write_all(line.as_bytes()) {
+                self.err = Some(e);
+            }
+        }
+    }
+}
+
+impl Tracer for ChromeTraceSink {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.anchor.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    fn begin(&mut self, name: &'static str) {
+        let ts = self.now_ns();
+        self.emit("B", name, COORD_LANE, ts, None);
+    }
+
+    fn begin_args(&mut self, name: &'static str, args: &dyn Fn() -> ArgList) {
+        let ts = self.now_ns();
+        self.emit("B", name, COORD_LANE, ts, Some(args()));
+    }
+
+    fn end(&mut self, name: &'static str) {
+        let ts = self.now_ns();
+        self.emit("E", name, COORD_LANE, ts, None);
+    }
+
+    fn instant(&mut self, name: &'static str, args: &dyn Fn() -> ArgList) {
+        let ts = self.now_ns();
+        self.emit("i", name, COORD_LANE, ts, Some(args()));
+    }
+
+    fn span_at(
+        &mut self,
+        name: &'static str,
+        lane: u32,
+        start_ns: u64,
+        end_ns: u64,
+        args: &dyn Fn() -> ArgList,
+    ) {
+        self.emit("B", name, lane, start_ns, Some(args()));
+        self.emit("E", name, lane, end_ns.max(start_ns), None);
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if let Some(e) = self.err.take() {
+            return Err(e.into());
+        }
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    /// A writer handing its bytes back to the test through a shared
+    /// buffer (the sink owns its writer, so tests read via the clone).
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl SharedBuf {
+        fn text(&self) -> String {
+            String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+        }
+    }
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn noop_tracer_is_inert() {
+        let mut t = NoopTracer;
+        assert!(!t.enabled());
+        assert_eq!(t.now_ns(), 0);
+        t.begin("x");
+        t.end("x");
+        t.instant("y", &Vec::new);
+        t.span_at("z", 3, 10, 20, &Vec::new);
+        t.flush().unwrap();
+    }
+
+    #[test]
+    fn span_at_lines_are_pinned() {
+        let buf = SharedBuf::default();
+        let mut sink = ChromeTraceSink::from_writer(Box::new(buf.clone()));
+        sink.span_at("shard", 2, 1500, 2750, &|| {
+            vec![("range", "0..8".to_string())]
+        });
+        sink.flush().unwrap();
+        assert_eq!(
+            buf.text(),
+            concat!(
+                r#"{"args":{"range":"0..8"},"cat":"fedzero","name":"shard","ph":"B","pid":1,"tid":2,"ts":1.5}"#,
+                "\n",
+                r#"{"cat":"fedzero","name":"shard","ph":"E","pid":1,"tid":2,"ts":2.75}"#,
+                "\n",
+            )
+        );
+    }
+
+    #[test]
+    fn every_line_parses_and_durations_balance() {
+        let buf = SharedBuf::default();
+        let mut sink = ChromeTraceSink::from_writer(Box::new(buf.clone()));
+        sink.begin("round");
+        sink.begin_args("solve", &|| vec![("solver", "mc2mkp".into())]);
+        sink.instant("speculation", &|| vec![("cause", "guard_mismatch".into())]);
+        sink.end("solve");
+        sink.end("round");
+        sink.span_at("shard", 1, 5, 9, &Vec::new);
+        sink.flush().unwrap();
+
+        let mut open: Vec<(String, String)> = Vec::new();
+        for line in buf.text().lines() {
+            let v = Json::parse(line).expect("valid JSON line");
+            let ph = v.req("ph").unwrap().as_str().unwrap().to_string();
+            let name = v.req("name").unwrap().as_str().unwrap().to_string();
+            let tid = v.req("tid").unwrap().as_f64().unwrap().to_string();
+            assert_eq!(v.req("cat").unwrap().as_str(), Some("fedzero"));
+            assert!(v.req("ts").unwrap().as_f64().unwrap() >= 0.0);
+            match ph.as_str() {
+                "B" => open.push((name, tid)),
+                "E" => {
+                    let top = open.pop().expect("E without open B");
+                    assert_eq!(top, (name, tid), "spans must nest");
+                }
+                "i" => {}
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        assert!(open.is_empty(), "unbalanced B/E events: {open:?}");
+    }
+
+    #[test]
+    fn open_append_truncates_a_torn_tail() {
+        let dir = std::env::temp_dir().join("fedzero_obs_torn");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let whole = r#"{"cat":"fedzero","name":"a","ph":"B","pid":1,"tid":0,"ts":1}"#;
+        std::fs::write(&path, format!("{whole}\n{{\"cat\":\"fedz")).unwrap();
+        let mut sink = ChromeTraceSink::open_append(&path).unwrap();
+        sink.end("a");
+        sink.flush().unwrap();
+        drop(sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "torn fragment dropped: {text:?}");
+        assert_eq!(lines[0], whole);
+        for line in lines {
+            Json::parse(line).unwrap();
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_errors_defer_to_flush() {
+        struct FailWriter;
+        impl Write for FailWriter {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::other("disk full"))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut sink = ChromeTraceSink::from_writer(Box::new(FailWriter));
+        sink.begin("x"); // must not panic or error here
+        sink.end("x");
+        assert!(sink.flush().is_err(), "deferred error surfaces at flush");
+        assert!(sink.flush().is_ok(), "error reported once");
+    }
+}

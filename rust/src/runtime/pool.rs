@@ -106,13 +106,50 @@ pub fn build_fleet_sharded(
     shards: usize,
     workers: usize,
 ) -> Result<(FleetInstance, ShardStats)> {
+    build_fleet_sharded_traced(inst, shards, workers, None)
+}
+
+/// [`build_fleet_sharded`] with optional per-worker span capture for the
+/// tracing layer: when `spans` is `Some`, each shard's dedup records its
+/// `(start_ns, end_ns)` offsets (one pair per shard, in shard order) on
+/// a clock anchored just before the fan-out. The offsets are pure
+/// telemetry — the built fleet is bit-for-bit identical either way, and
+/// with `spans = None` no clock is read at all.
+pub fn build_fleet_sharded_traced(
+    inst: &Instance,
+    shards: usize,
+    workers: usize,
+    spans: Option<&mut Vec<(u64, u64)>>,
+) -> Result<(FleetInstance, ShardStats)> {
     inst.validate()?;
     let plan = shard::ShardPlan::contiguous(inst.n(), shards);
     let workers = if workers == 0 { default_workers() } else { workers };
     let ranges: Vec<std::ops::Range<usize>> = plan.ranges().to_vec();
-    let tables: Vec<ShardClasses> = parallel_map(ranges, workers, |r| {
-        shard::dedup_slots(&inst.costs, &inst.lower, &inst.upper, r)
-    });
+    let record = spans.is_some();
+    let anchor = std::time::Instant::now();
+    let clock = |on: bool| -> u64 {
+        if on {
+            anchor.elapsed().as_nanos().min(u64::MAX as u128) as u64
+        } else {
+            0
+        }
+    };
+    let results: Vec<(ShardClasses, u64, u64)> =
+        parallel_map(ranges, workers, |r| {
+            let start_ns = clock(record);
+            let table = shard::dedup_slots(&inst.costs, &inst.lower, &inst.upper, r);
+            (table, start_ns, clock(record))
+        });
+    let mut tables = Vec::with_capacity(results.len());
+    if let Some(spans) = spans {
+        spans.reserve(results.len());
+        for (table, start_ns, end_ns) in results {
+            spans.push((start_ns, end_ns));
+            tables.push(table);
+        }
+    } else {
+        tables.extend(results.into_iter().map(|(table, _, _)| table));
+    }
     shard::merge_with_stats(inst.tasks, tables, plan.len())
 }
 
@@ -147,6 +184,25 @@ mod tests {
             assert_eq!(built.digest(), flat.digest());
             assert_eq!(built.n_classes(), 7);
         }
+    }
+
+    #[test]
+    fn traced_build_captures_one_span_per_shard() {
+        let n = 64;
+        let costs: Vec<CostFn> = (0..n)
+            .map(|i| CostFn::Affine { fixed: 0.0, per_task: 1.0 + (i % 5) as f64 })
+            .collect();
+        let inst = Instance::new(40, vec![0; n], vec![4; n], costs).unwrap();
+        let (plain, _) = build_fleet_sharded(&inst, 4, 2).unwrap();
+        let mut spans = Vec::new();
+        let (traced, stats) =
+            build_fleet_sharded_traced(&inst, 4, 2, Some(&mut spans)).unwrap();
+        assert_eq!(stats.shards, 4);
+        assert_eq!(spans.len(), 4, "one span per shard");
+        for &(s, e) in &spans {
+            assert!(e >= s);
+        }
+        assert_eq!(traced.digest(), plain.digest(), "telemetry-only");
     }
 
     #[test]

@@ -140,6 +140,9 @@ pub fn merge(tasks: usize, shards: Vec<ShardClasses>) -> Result<FleetInstance> {
 }
 
 /// Observability of one sharded build (what the coordinator meters).
+/// Deliberately `Copy`-small: per-worker span capture for the tracing
+/// layer lives in the out-param of
+/// [`crate::runtime::pool::build_fleet_sharded_traced`], not here.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ShardStats {
     /// Shards the plan produced (== the configured count).

@@ -124,6 +124,65 @@ fn train_resume_replay_roundtrip_is_bit_for_bit() {
 }
 
 #[test]
+fn traced_campaign_digest_matches_untraced_and_stats_renders() {
+    let plain = scratch("trace_plain");
+    let traced = scratch("trace_traced");
+    let trace_file = std::env::temp_dir()
+        .join("fedzero_cli_store")
+        .join("campaign.trace.jsonl");
+    let _ = std::fs::remove_file(&trace_file);
+
+    let args: Vec<String> = train_args(&plain);
+    let argrefs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    stdout_ok(&argrefs);
+
+    let mut args: Vec<String> = train_args(&traced);
+    args.push("--trace".into());
+    args.push(trace_file.to_string_lossy().into_owned());
+    let argrefs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    stdout_ok(&argrefs);
+
+    // Crash the traced campaign and resume WITHOUT --trace: the path is
+    // read back from the store meta and re-attached in append mode.
+    simulate_crash_at(&traced, 13);
+    stdout_ok(&["resume", traced.to_str().unwrap()]);
+
+    // Tracing must not perturb the campaign digest — even across a
+    // crash/resume cycle.
+    let plain_replay = stdout_ok(&["replay", plain.to_str().unwrap()]);
+    let traced_replay = stdout_ok(&["replay", traced.to_str().unwrap()]);
+    assert_eq!(campaign_line(&plain_replay), campaign_line(&traced_replay));
+
+    // The trace is valid JSONL with balanced duration spans (the resumed
+    // process appended to the same file).
+    let text = std::fs::read_to_string(&trace_file).unwrap();
+    assert!(!text.is_empty());
+    let mut open = 0i64;
+    for line in text.lines() {
+        let v = fedzero::util::json::Json::parse(line).unwrap();
+        match v.req("ph").unwrap().as_str().unwrap() {
+            "B" => open += 1,
+            "E" => open -= 1,
+            "i" => {}
+            other => panic!("unexpected phase {other}"),
+        }
+        assert!(open >= 0, "E before B");
+    }
+    assert_eq!(open, 0, "unbalanced spans");
+
+    // The dashboard renders from the store alone.
+    let stats = stdout_ok(&["stats", traced.to_str().unwrap(), "--expose"]);
+    assert!(stats.contains("30 of 30 rounds journaled"), "{stats}");
+    assert!(stats.contains("per-solver usage"), "{stats}");
+    assert!(stats.contains("energy concentration"), "{stats}");
+    assert!(stats.contains("fedzero_rounds 30"), "{stats}");
+
+    let _ = std::fs::remove_dir_all(&plain);
+    let _ = std::fs::remove_dir_all(&traced);
+    let _ = std::fs::remove_file(&trace_file);
+}
+
+#[test]
 fn store_refuses_silent_overwrite_and_fl_backend() {
     let dir = scratch("overwrite");
     let args: Vec<String> = train_args(&dir);

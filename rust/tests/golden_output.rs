@@ -74,6 +74,33 @@ fn metrics_summary_is_byte_stable() {
     assert_eq!(a.summary(), b.summary(), "insertion order must not matter");
 }
 
+#[test]
+fn expose_text_is_byte_stable() {
+    // Counters first then gauges, each name-sorted with a `# TYPE` line,
+    // names prefixed `fedzero_`, floats through the deterministic Json
+    // writer — what the `stats --expose` dashboard prints. Insertion
+    // order must not leak into the output.
+    let mut a = MetricsHub::new();
+    a.set("obs_sched_ns_p95", 250000.0);
+    a.inc("rounds", 3);
+    a.inc("pipeline_hits", 2);
+    a.set("eval_loss", 0.125);
+    assert_eq!(
+        a.expose_text(),
+        "# TYPE fedzero_pipeline_hits counter\nfedzero_pipeline_hits 2\n\
+         # TYPE fedzero_rounds counter\nfedzero_rounds 3\n\
+         # TYPE fedzero_eval_loss gauge\nfedzero_eval_loss 0.125\n\
+         # TYPE fedzero_obs_sched_ns_p95 gauge\nfedzero_obs_sched_ns_p95 250000\n"
+    );
+
+    let mut b = MetricsHub::new();
+    b.set("eval_loss", 0.125);
+    b.inc("pipeline_hits", 2);
+    b.set("obs_sched_ns_p95", 250000.0);
+    b.inc("rounds", 3);
+    assert_eq!(a.expose_text(), b.expose_text(), "insertion order must not matter");
+}
+
 fn sample_row() -> RoundLog {
     RoundLog {
         round: 2,

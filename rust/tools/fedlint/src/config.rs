@@ -15,6 +15,10 @@ pub struct Config {
     /// R1: digest-feeding modules (no unordered iteration / wall clock /
     /// ambient RNG / float accumulation).
     pub r1_modules: Vec<String>,
+    /// R1: extra banned identifiers (beyond the built-in container/
+    /// clock/RNG set) — e.g. the telemetry layer's types and span
+    /// methods, which must never reach digest-feeding modules.
+    pub r1_idents: Vec<String>,
     /// R2: modules where raw `+`/`-` on capacity idents is banned.
     pub r2_modules: Vec<String>,
     /// R2: the capacity/lower-sum identifiers the ban applies to.
@@ -78,6 +82,7 @@ impl Config {
             };
             match (section.as_str(), key) {
                 ("r1", "modules") => cfg.r1_modules = parse_list(value, lineno)?,
+                ("r1", "idents") => cfg.r1_idents = parse_list(value, lineno)?,
                 ("r2", "modules") => cfg.r2_modules = parse_list(value, lineno)?,
                 ("r2", "idents") => cfg.r2_idents = parse_list(value, lineno)?,
                 ("r3", "modules") => cfg.r3_modules = parse_list(value, lineno)?,

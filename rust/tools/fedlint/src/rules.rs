@@ -105,7 +105,7 @@ pub fn check_file(path: &str, file: &SourceFile, cfg: &Config, report: &mut Repo
     let allows = Allows::parse(file);
     let ctx = Ctx { path, file, allows: &allows };
     if Config::in_modules(path, &cfg.r1_modules) {
-        r1(&ctx, report);
+        r1(&ctx, cfg, report);
     }
     if Config::in_modules(path, &cfg.r2_modules) {
         r2(&ctx, cfg, report);
@@ -120,8 +120,10 @@ pub fn check_file(path: &str, file: &SourceFile, cfg: &Config, report: &mut Repo
 
 /// R1 — digest-feeding modules must be deterministic: no unordered
 /// containers (even probe-only use must carry a justifying allow), no
-/// wall-clock reads, no ambient RNG, no float accumulation.
-fn r1(ctx: &Ctx<'_>, report: &mut Report) {
+/// wall-clock reads, no ambient RNG, no float accumulation, and none of
+/// the extra configured identifiers (the telemetry layer's types and
+/// span methods — tracing is pure output and stays out of digest code).
+fn r1(ctx: &Ctx<'_>, cfg: &Config, report: &mut Report) {
     const IDENTS: [(&str, &str, &str); 6] = [
         ("HashMap", "unordered-container", "justify probe-only use or use a sorted structure"),
         ("HashSet", "unordered-container", "justify probe-only use or use a sorted structure"),
@@ -160,6 +162,15 @@ fn r1(ctx: &Ctx<'_>, report: &mut Report) {
                      integers or document an order-fixed fold"
                 );
                 ctx.emit(report, "R1", "float-accumulation", line, msg);
+            }
+        }
+        for ident in &cfg.r1_idents {
+            if has_ident(code, ident) {
+                let msg = format!(
+                    "telemetry identifier `{ident}` in a digest-feeding module; tracing is \
+                     pure output and must stay out of digest code"
+                );
+                ctx.emit(report, "R1", "telemetry-leak", line, msg);
             }
         }
     }

@@ -10,6 +10,7 @@ use fedlint::report::Report;
 const CONFIG: &str = r#"
 [r1]
 modules = ["r1_violation.rs", "clean.rs"]
+idents = ["Tracer", "span_at"]
 
 [r2]
 modules = ["r2_violation.rs", "clean.rs"]
@@ -48,6 +49,8 @@ fn every_rule_fires_exactly_where_seeded() {
         ("R1", "r1_violation.rs", 10),
         ("R1", "r1_violation.rs", 11),
         ("R1", "r1_violation.rs", 15),
+        ("R1", "r1_violation.rs", 18),
+        ("R1", "r1_violation.rs", 19),
         ("R2", "r2_violation.rs", 4),
         ("R2", "r2_violation.rs", 8),
         ("R3", "r3_violation.rs", 4),
@@ -75,6 +78,8 @@ fn checks_name_the_violation_family() {
     assert_eq!(find("r1_violation.rs", 4), "wall-clock");
     assert_eq!(find("r1_violation.rs", 7), "map-iteration");
     assert_eq!(find("r1_violation.rs", 15), "float-accumulation");
+    assert_eq!(find("r1_violation.rs", 18), "telemetry-leak");
+    assert_eq!(find("r1_violation.rs", 19), "telemetry-leak");
     assert_eq!(find("r2_violation.rs", 4), "raw-capacity-arith");
     assert_eq!(find("r3_violation.rs", 4), "unwrap");
     assert_eq!(find("r3_violation.rs", 12), "panic-macro");
@@ -98,7 +103,7 @@ fn json_schema_is_stable() {
     assert!(json.starts_with(head), "schema header changed: {json}");
     let keys = ["\"rule\":", "\"check\":", "\"file\":", "\"line\":", "\"snippet\":", "\"message\":"];
     for key in keys {
-        assert_eq!(json.matches(key).count(), 16, "{key} must appear once per violation");
+        assert_eq!(json.matches(key).count(), 18, "{key} must appear once per violation");
     }
     assert!(json.trim_end().ends_with("]}"));
 }

@@ -15,6 +15,10 @@ pub fn total(xs: &[f32]) -> f32 {
     xs.iter().sum::<f32>()
 }
 
+pub fn leak(tracer: &mut dyn Tracer) {
+    tracer.span_at("phase");
+}
+
 #[cfg(test)]
 mod tests {
     use std::collections::HashSet;
