@@ -28,12 +28,12 @@ fn main() -> fedzero::Result<()> {
         .devices
         .iter()
         .map(|d| carbon::carbon_cost(d.cost_fn(), d.region))
-        .collect::<Vec<_>>();
+        .collect::<fedzero::Result<Vec<_>>>()?;
     let money_costs = fleet
         .devices
         .iter()
         .map(|d| carbon::monetary_cost(d.cost_fn(), d.region))
-        .collect::<Vec<_>>();
+        .collect::<fedzero::Result<Vec<_>>>()?;
     let carbon_inst = Instance::new(
         energy_inst.tasks,
         energy_inst.lower.clone(),
@@ -58,7 +58,7 @@ fn main() -> fedzero::Result<()> {
         &["device", "region", "gCO2/kWh", "x_i (energy)", "x_i (carbon)", "x_i (money)"],
     );
     for (i, d) in fleet.devices.iter().enumerate() {
-        let (co2, _) = carbon::region(d.region).unwrap();
+        let (co2, _) = carbon::region(d.region)?;
         table.rows_str(vec![
             format!("{} ({})", d.id, d.archetype),
             d.region.to_string(),

@@ -1,14 +1,14 @@
 //! Energy/time Pareto front (cf. Khaleghzadeh et al. [28], which the paper
 //! cites as the bi-objective alternative): energy-minimal schedules subject
 //! to round-deadline (makespan) constraints, via ε-constraint solves of the
-//! Minimal Cost FL Schedule problem.
+//! Minimal Cost FL Schedule problem on the class-deduplicated fleet.
 //!
 //! Run with: `cargo run --release --example pareto_tradeoff`
 
 use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::{BehaviorMix, Fleet};
-use fedzero::sched::costs::CostFn;
-use fedzero::sched::pareto::BiInstance;
+use fedzero::sched::pareto::{BiFleet, TimeModel, DEFAULT_UPLOAD_S};
+use fedzero::sched::SolverRegistry;
 use fedzero::util::rng::Rng;
 use fedzero::util::table::{fmt_duration, fmt_energy, Table};
 
@@ -18,21 +18,22 @@ fn main() -> fedzero::Result<()> {
     let tasks = (fleet.capacity() / 4).max(8);
 
     let energy = fleet.instance(tasks, 0)?;
-    let time: Vec<CostFn> = fleet
+    let times: Vec<TimeModel> = fleet
         .devices
         .iter()
-        .map(|d| CostFn::Affine { fixed: 0.0, per_task: d.power.batch_latency_s })
+        .map(|d| TimeModel::affine(d.power.batch_latency_s, DEFAULT_UPLOAD_S))
         .collect();
-    let bi = BiInstance { energy, time };
+    let bi = BiFleet::from_flat(&energy, &times)?;
 
-    let front = bi.pareto_front()?;
+    let registry = SolverRegistry::with_defaults(23);
+    let front = bi.pareto_front(&registry, "mc2mkp")?;
     let mut table = Table::new(
         &format!(
             "energy/makespan Pareto front — n={}, T={tasks} ({} points, sampled)",
             fleet.len(),
             front.len()
         ),
-        &["point", "deadline (makespan)", "energy", "schedule"],
+        &["point", "deadline (makespan)", "energy", "solver", "schedule"],
     );
     let step = (front.len() / 14).max(1);
     for (i, p) in front.iter().enumerate() {
@@ -43,6 +44,7 @@ fn main() -> fedzero::Result<()> {
             i.to_string(),
             fmt_duration(p.makespan),
             fmt_energy(p.energy),
+            p.solver.to_string(),
             p.schedule.to_string(),
         ]);
     }

@@ -39,9 +39,19 @@
 //! is **≥ 5×**, enforced on smoke and full alike (both legs are
 //! single-thread CPU work, so few-core runners measure the same ratio).
 //!
+//! A fifth scenario times **Pareto-front construction** (the deadline
+//! work): the class-level ε-constraint sweep — per-τ capping through
+//! `BiFleet::capped_fleet` plus Table-2 auto dispatch on the capped
+//! instance — vs the flat baseline a caller without class machinery
+//! pays: re-cap every device and run the general (MC)²MKP DP at every
+//! candidate τ. Per-τ optimal energies are asserted equal (the
+//! differential suite proves the stronger property); the gate is
+//! **≥ 5×**, enforced on smoke and full alike (both legs are
+//! single-thread CPU work).
+//!
 //! `FEDZERO_BENCH_SMOKE=1` shrinks the sweep to `n = 10³` (solves),
-//! `n = 2·10⁵` (build and incremental), and `n = 2·10⁴` (pipeline) with
-//! quick timing — the CI regression gate. Every gated ratio FAILS the
+//! `n = 2·10⁵` (build and incremental), `n = 2·10⁴` (pipeline), and
+//! `n = 60` (pareto) with quick timing — the CI regression gate. Every gated ratio FAILS the
 //! run (non-zero exit) when it regresses below its floor; the
 //! build-speedup assertion is full-sweep only (shared CI runners expose
 //! too few cores to gate a parallelism ratio honestly), and smoke's
@@ -56,7 +66,8 @@ use fedzero::sched::costs::CostFn;
 use fedzero::sched::fleet::FleetInstance;
 use fedzero::sched::incremental::{from_scratch_round, FleetIndex, RoundParams};
 use fedzero::sched::instance::Instance;
-use fedzero::sched::{marco, mardecun, marin, mc2mkp};
+use fedzero::sched::pareto::{BiFleet, TimeModel};
+use fedzero::sched::{marco, mardecun, marin, mc2mkp, validate, SolverRegistry};
 use fedzero::util::json::Json;
 use fedzero::util::rng::Rng;
 use fedzero::util::table::{fmt_duration, Table};
@@ -453,13 +464,117 @@ fn main() {
     ]);
     incr_table.print();
 
+    // ---- pareto front: class-level ε-constraint vs flat per-τ DP ---------
+    //
+    // The deadline work reuses the class machinery: every candidate
+    // makespan cap is folded through `capped_fleet` (per-class binary
+    // search + the shared round transform) and the *capped* instance is
+    // auto-dispatched to its Table-2 marginal algorithm on k classes.
+    // The baseline is what the ε-constraint method costs without class
+    // dedup and dispatch: re-cap all n devices and run the general
+    // (MC)²MKP DP at every τ. Optimal energies must agree at every τ;
+    // both legs are single-thread CPU work, so the ≥ 5× gate holds on
+    // smoke and full alike.
+    let (par_n, par_t, par_k): (usize, usize, usize) =
+        if smoke { (60, 60, 6) } else { (200, 150, 10) };
+    let mut par_rng = Rng::new(0x9A12);
+    let par_class_costs: Vec<CostFn> = (0..par_k)
+        .map(|_| CostFn::Affine {
+            fixed: par_rng.range_f64(0.0, 1.0),
+            per_task: par_rng.range_f64(0.5, 3.0),
+        })
+        .collect();
+    let par_class_speed: Vec<f64> =
+        (0..par_k).map(|_| par_rng.range_f64(0.2, 2.0)).collect();
+    let par_costs: Vec<CostFn> =
+        (0..par_n).map(|d| par_class_costs[d % par_k].clone()).collect();
+    let par_times: Vec<TimeModel> = (0..par_n)
+        .map(|d| TimeModel::affine(par_class_speed[d % par_k], 1.0))
+        .collect();
+    let par_upper = 8usize.min(par_t);
+    let par_flat = Instance::new(
+        par_t,
+        vec![0; par_n],
+        vec![par_upper; par_n],
+        par_costs.clone(),
+    )
+    .expect("pareto bench fleet valid");
+    let par_bi =
+        BiFleet::from_flat(&par_flat, &par_times).expect("class-consistent models");
+    let par_registry = SolverRegistry::with_defaults(7);
+    let par_taus = par_bi.candidate_makespans();
+    let flat_point = |tau: f64| -> Option<f64> {
+        let mut caps = Vec::with_capacity(par_n);
+        let mut room = 0usize;
+        for d in 0..par_n {
+            let u = par_times[d].max_tasks_within(tau, 0, par_upper)?;
+            room += u;
+            caps.push(u);
+        }
+        if room < par_t {
+            return None;
+        }
+        let capped =
+            Instance::new(par_t, vec![0; par_n], caps, par_costs.clone()).ok()?;
+        let sched = mc2mkp::solve(&capped).ok()?;
+        Some(validate::total_cost(&par_flat, &sched))
+    };
+    let par_cfg = BenchConfig { warmup: 1, iters: 5, min_time_s: 0.005 };
+    let m_par_class = bench("pareto_class", &par_cfg, || {
+        par_bi.pareto_front(&par_registry, "auto").unwrap()
+    });
+    let m_par_flat = bench("pareto_flat", &par_cfg, || {
+        par_taus.iter().map(|&tau| flat_point(tau)).collect::<Vec<_>>()
+    });
+    // Per-τ parity: the class path's optimum must match the flat DP's.
+    for &tau in &par_taus {
+        let class_p = par_bi.solve_constrained(&par_registry, "auto", tau).unwrap();
+        match (class_p, flat_point(tau)) {
+            (None, None) => {}
+            (Some(p), Some(e)) => assert!(
+                (p.energy - e).abs() < 1e-6,
+                "pareto parity broke at τ={tau}: class {} vs flat {e}",
+                p.energy
+            ),
+            (c, f) => panic!(
+                "pareto feasibility parity broke at τ={tau} \
+                 (class: {}, flat: {})",
+                c.is_some(),
+                f.is_some()
+            ),
+        }
+    }
+    let par_front = par_bi.pareto_front(&par_registry, "auto").unwrap();
+    let par_speedup = m_par_flat.median() / m_par_class.median().max(1e-12);
+    let mut par_table = Table::new(
+        &format!(
+            "PARETO FRONT: class-level ε-constraint vs flat per-τ DP \
+             (n = {par_n}, k = {par_k}, T = {par_t}, {} candidate τ)",
+            par_taus.len()
+        ),
+        &["mode", "front points", "time", "speedup"],
+    );
+    par_table.rows_str(vec![
+        "flat DP".into(),
+        "—".into(),
+        fmt_duration(m_par_flat.median()),
+        "1.0x".into(),
+    ]);
+    par_table.rows_str(vec![
+        "class + dispatch".into(),
+        par_front.len().to_string(),
+        fmt_duration(m_par_class.median()),
+        format!("{par_speedup:.1}x"),
+    ]);
+    par_table.print();
+
     // ---- machine-readable trajectory (BENCH_fleet_scale.json) ------------
     //
     // Schema-versioned: CI copies this file to the repo-root
     // BENCH_fleet_scale.json snapshot, so committed trajectories must
     // state which shape they carry. Bump SCHEMA_VERSION whenever a field
     // is added, removed, or re-meant.
-    const SCHEMA_VERSION: usize = 3;
+    const SCHEMA_VERSION: usize = 4;
     let solve_gate = if smoke { 2.0 } else { 10.0 };
     let build_gate = 3.0f64;
     let build_pass = build_speedup >= build_gate;
@@ -473,6 +588,10 @@ fn main() {
     // below any noise band on a sleep-dominated measurement).
     let pipe_gate = if smoke { 1.2 } else { 1.5 };
     let pipe_pass = pipe_speedup >= pipe_gate;
+    // Class-vs-flat front construction is pure dedup + dispatch leverage
+    // on two single-thread legs — enforced on smoke and full alike.
+    let par_gate = 5.0f64;
+    let par_pass = par_speedup >= par_gate;
     let report = Json::obj(vec![
         ("bench", Json::Str("fleet_scale".into())),
         ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
@@ -516,6 +635,19 @@ fn main() {
             ]),
         ),
         (
+            "pareto",
+            Json::obj(vec![
+                ("n", Json::Num(par_n as f64)),
+                ("t", Json::Num(par_t as f64)),
+                ("classes", Json::Num(par_k as f64)),
+                ("taus", Json::Num(par_taus.len() as f64)),
+                ("front_points", Json::Num(par_front.len() as f64)),
+                ("class_s", Json::Num(m_par_class.median())),
+                ("flat_s", Json::Num(m_par_flat.median())),
+                ("speedup", Json::Num(par_speedup)),
+            ]),
+        ),
+        (
             "gates",
             Json::obj(vec![
                 ("solve_worst_speedup", Json::Num(worst_marginal_speedup)),
@@ -527,6 +659,8 @@ fn main() {
                 ("pipeline_pass", Json::Bool(pipe_pass)),
                 ("incremental_gate", Json::Num(incr_gate)),
                 ("incremental_pass", Json::Bool(incr_pass)),
+                ("pareto_gate", Json::Num(par_gate)),
+                ("pareto_pass", Json::Bool(par_pass)),
             ]),
         ),
     ]);
@@ -568,6 +702,11 @@ fn main() {
          n = {incr_n}, 1% churn — observed {incr_speedup:.1}x ({})",
         if incr_pass { "PASS" } else { "FAIL" }
     );
+    println!(
+        "acceptance: class-level front construction ≥ {par_gate}x flat per-τ \
+         DP at n = {par_n} — observed {par_speedup:.1}x ({})",
+        if par_pass { "PASS" } else { "FAIL" }
+    );
     assert!(
         worst_marginal_speedup >= solve_gate,
         "class-path speedup regressed below {solve_gate}x"
@@ -584,5 +723,10 @@ fn main() {
         incr_pass,
         "incremental round re-derivation regressed below {incr_gate}x the \
          from-scratch rebuild"
+    );
+    assert!(
+        par_pass,
+        "class-level Pareto-front construction regressed below {par_gate}x \
+         the flat per-τ DP baseline"
     );
 }

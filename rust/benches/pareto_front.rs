@@ -3,7 +3,8 @@
 //! paper cites. We cannot run the authors' implementation, so the
 //! comparison is to the *bound*: the table reports our measured time and
 //! the ratio to a (normalized) cubic-model prediction, showing the
-//! structural win of exploiting monotone time functions.
+//! structural win of exploiting monotone time functions on the
+//! class-deduplicated fleet.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -11,26 +12,28 @@ mod common;
 use fedzero::benchkit::{bench, BenchConfig};
 use fedzero::sched::costs::CostFn;
 use fedzero::sched::instance::Instance;
-use fedzero::sched::pareto::BiInstance;
+use fedzero::sched::pareto::{BiFleet, TimeModel};
+use fedzero::sched::SolverRegistry;
 use fedzero::util::rng::Rng;
 use fedzero::util::stats;
 use fedzero::util::table::{fmt_duration, Table};
 
-fn tradeoff(n: usize, t: usize, seed: u64) -> BiInstance {
+fn tradeoff(n: usize, t: usize, seed: u64) -> BiFleet {
     let mut rng = Rng::new(seed);
     let mut costs = Vec::new();
-    let mut time = Vec::new();
+    let mut times = Vec::new();
     for _ in 0..n {
         let speed = rng.range_f64(0.1, 2.0);
         costs.push(CostFn::Affine { fixed: 0.0, per_task: 2.0 / speed });
-        time.push(CostFn::Affine { fixed: 0.0, per_task: speed });
+        times.push(TimeModel::affine(speed, 0.0));
     }
     let energy = Instance::new(t, vec![0; n], vec![t; n], costs).unwrap();
-    BiInstance { energy, time }
+    BiFleet::from_flat(&energy, &times).unwrap()
 }
 
 fn main() {
     let cfg = BenchConfig { warmup: 1, iters: 5, min_time_s: 0.0 };
+    let registry = SolverRegistry::with_defaults(3);
     let mut table = Table::new(
         "Pareto front construction (ε-constraint over (MC)²MKP)",
         &["n", "T", "front points", "time", "time / (nT)^1.x"],
@@ -39,8 +42,8 @@ fn main() {
     let mut times = Vec::new();
     for (n, t) in [(4usize, 50usize), (8, 50), (8, 100), (16, 100), (16, 200)] {
         let bi = tradeoff(n, t, 3);
-        let front = bi.pareto_front().unwrap();
-        let m = bench("front", &cfg, || bi.pareto_front().unwrap());
+        let front = bi.pareto_front(&registry, "mc2mkp").unwrap();
+        let m = bench("front", &cfg, || bi.pareto_front(&registry, "mc2mkp").unwrap());
         sizes_t.push((n * t) as f64);
         times.push(m.median());
         table.rows_str(vec![

@@ -258,6 +258,8 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "incremental", help: "persistent class index, re-derive rounds from the dirty set: on | off (schedules are bit-for-bit identical either way)", takes_value: true, default: Some("off") },
                     OptSpec { name: "round-sleep-ms", help: "sleep between rounds (crash-recovery testing; sim only)", takes_value: true, default: Some("0") },
                     OptSpec { name: "trace", help: "write a Chrome Trace Event JSONL phase trace to this file (pure telemetry; campaigns are bit-for-bit identical with or without it)", takes_value: true, default: None },
+                    OptSpec { name: "deadline", help: "per-round completion deadline in seconds (min energy s.t. makespan <= D; persisted with the campaign)", takes_value: true, default: None },
+                    OptSpec { name: "objective", help: "cost unit to minimize: energy | carbon | money (carbon/money weight device costs by grid region)", takes_value: true, default: Some("energy") },
                 ],
                 positional: vec![],
             },
@@ -283,6 +285,24 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "expose", help: "also print the metrics hub in text exposition format", takes_value: false, default: None },
                 ],
                 positional: vec![("dir", "campaign store directory")],
+            },
+            CmdSpec {
+                name: "pareto",
+                about: "dump the energy-time Pareto front of a sampled fleet (epsilon-constraint sweep)",
+                opts: vec![
+                    OptSpec { name: "tasks", help: "workload size T", takes_value: true, default: Some("256") },
+                    OptSpec { name: "devices", help: "fleet size", takes_value: true, default: Some("10") },
+                    OptSpec { name: "seed", help: "fleet RNG seed", takes_value: true, default: Some("1") },
+                    OptSpec { name: "algo", help: "solver for each epsilon-constrained point (any registered name)", takes_value: true, default: Some("auto") },
+                    OptSpec { name: "objective", help: "cost unit: energy | carbon | money", takes_value: true, default: Some("energy") },
+                    OptSpec { name: "region", help: "pin every device to one grid region (default: spread across the region table)", takes_value: true, default: None },
+                    OptSpec { name: "round", help: "round index to sample the carbon curve at (carbon objective only)", takes_value: true, default: Some("0") },
+                    OptSpec { name: "upload-s", help: "model upload seconds added to every device's compute time", takes_value: true, default: Some("2") },
+                    OptSpec { name: "deadline", help: "solve one epsilon-constrained point at this makespan cap instead of the full front", takes_value: true, default: None },
+                    OptSpec { name: "format", help: "output format: csv | jsonl", takes_value: true, default: Some("csv") },
+                    OptSpec { name: "out", help: "write points to this file instead of stdout", takes_value: true, default: None },
+                ],
+                positional: vec![],
             },
             CmdSpec {
                 name: "fleet",
@@ -442,6 +462,44 @@ mod tests {
         assert_eq!(p.positional, vec!["/tmp/x".to_string()]);
         assert!(p.flag("expose"));
         assert!(app.parse(&args(&["stats"])).is_err(), "dir is required");
+    }
+
+    #[test]
+    fn deadline_and_objective_parse_on_train() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["train", "--backend", "sim"])).unwrap();
+        assert_eq!(p.get("deadline"), None, "no default deadline");
+        assert_eq!(p.get("objective"), Some("energy"), "default objective");
+        let p = app
+            .parse(&args(&["train", "--deadline", "7.5", "--objective", "carbon"]))
+            .unwrap();
+        assert_eq!(p.get_parse::<f64>("deadline").unwrap(), Some(7.5));
+        assert_eq!(p.get("objective"), Some("carbon"));
+        assert_eq!(p.get_explicit("objective"), Some("carbon"));
+    }
+
+    #[test]
+    fn pareto_subcommand_parses() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["pareto"])).unwrap();
+        assert_eq!(p.command, "pareto");
+        assert_eq!(p.get_or::<usize>("tasks", 0).unwrap(), 256);
+        assert_eq!(p.get_or::<usize>("devices", 0).unwrap(), 10);
+        assert_eq!(p.get("format"), Some("csv"));
+        assert_eq!(p.get("deadline"), None);
+        let p = app
+            .parse(&args(&[
+                "pareto", "--objective", "carbon", "--region", "france",
+                "--round", "12", "--deadline=30", "--format", "jsonl",
+                "--out", "/tmp/front.jsonl",
+            ]))
+            .unwrap();
+        assert_eq!(p.get("objective"), Some("carbon"));
+        assert_eq!(p.get("region"), Some("france"));
+        assert_eq!(p.get_or::<usize>("round", 0).unwrap(), 12);
+        assert_eq!(p.get_parse::<f64>("deadline").unwrap(), Some(30.0));
+        assert_eq!(p.get("format"), Some("jsonl"));
+        assert_eq!(p.get("out"), Some("/tmp/front.jsonl"));
     }
 
     #[test]

@@ -7,6 +7,7 @@ use crate::energy::battery::Battery;
 use crate::energy::power::PowerModel;
 use crate::energy::profiles::Device;
 use crate::sched::costs::CostFn;
+use crate::sched::pareto::{TimeModel, DEFAULT_UPLOAD_S};
 
 /// A device as managed by the coordinator across rounds.
 #[derive(Clone, Debug)]
@@ -30,6 +31,12 @@ pub struct ManagedDevice {
     pub power: Option<PowerModel>,
     /// Current multiplicative drift on the energy profile (1.0 = nominal).
     pub drift: f64,
+    /// Round-deadline cap: the largest load whose compute + upload time
+    /// fits within the configured round deadline (`usize::MAX` = no
+    /// deadline, or no time model to enforce one with). Derived from the
+    /// coordinator config at construction — NOT persisted; `restore`
+    /// re-derives it from the decoded config.
+    pub deadline_cap: usize,
 }
 
 impl ManagedDevice {
@@ -44,6 +51,7 @@ impl ManagedDevice {
             battery: None,
             power: None,
             drift: 1.0,
+            deadline_cap: usize::MAX,
         }
     }
 
@@ -59,17 +67,45 @@ impl ManagedDevice {
             battery: d.battery.clone(),
             power: Some(d.power.clone()),
             drift: 1.0,
+            deadline_cap: usize::MAX,
         }
+    }
+
+    /// The device's completion-time model, when its power model provides
+    /// a batch latency: affine compute time plus the default upload
+    /// window. Abstract paper-style resources have no time model (and are
+    /// therefore deadline-exempt).
+    pub fn time_model(&self) -> Option<TimeModel> {
+        self.power
+            .as_ref()
+            .map(|p| TimeModel::affine(p.batch_latency_s, DEFAULT_UPLOAD_S))
+    }
+
+    /// Derive the deadline cap from a round deadline in seconds: the
+    /// largest load whose compute + upload fits. A deadline too tight
+    /// even for one task leaves the device schedulable at 0 tasks (it
+    /// sits rounds out rather than making the fleet infeasible).
+    pub fn apply_deadline(&mut self, seconds: f64) {
+        self.deadline_cap = match self.time_model() {
+            Some(tm) => tm.max_tasks_within(seconds, 0, self.data_cap).unwrap_or(0),
+            None => usize::MAX,
+        };
+    }
+
+    /// Remove any deadline cap.
+    pub fn clear_deadline(&mut self) {
+        self.deadline_cap = usize::MAX;
     }
 
     /// This round's effective upper limit: static cap, further clamped by
     /// the current battery budget. Re-evaluated every round — this is the
     /// "re-cost" input that makes schedules adapt to battery drain.
     pub fn effective_upper(&self) -> usize {
-        match (&self.battery, &self.power) {
+        let cap = match (&self.battery, &self.power) {
             (Some(b), Some(p)) => self.data_cap.min(b.max_batches(p)),
             _ => self.data_cap,
-        }
+        };
+        cap.min(self.deadline_cap)
     }
 
     /// This round's scheduler-visible cost function: the base cost under
@@ -143,6 +179,7 @@ mod tests {
                 curvature: 0.0,
             }),
             drift: 1.0,
+            deadline_cap: usize::MAX,
         }
     }
 
@@ -194,6 +231,32 @@ mod tests {
         assert_eq!(d.class_signature().2, 18, "drain moves the upper");
         d.drift = 1.5;
         assert_ne!(d.class_signature().0, s0.0, "drift moves the cost");
+    }
+
+    #[test]
+    fn deadline_cap_clamps_effective_upper() {
+        let mut d = powered();
+        assert_eq!(d.effective_upper(), 36, "battery cap before any deadline");
+        // latency 0.5 s/batch + 2 s upload: 10 s fits 16 batches.
+        d.apply_deadline(10.0);
+        assert_eq!(d.deadline_cap, 16);
+        assert_eq!(d.effective_upper(), 16, "deadline tighter than battery");
+        assert_eq!(d.class_signature().2, 16, "deadline is class-visible");
+        // A deadline too tight even for the upload leaves the device at 0
+        // tasks (it sits out) rather than erroring.
+        d.apply_deadline(1.0);
+        assert_eq!(d.effective_upper(), 0);
+        d.clear_deadline();
+        assert_eq!(d.effective_upper(), 36);
+        // Abstract resources have no time model → deadline-exempt.
+        let mut a = ManagedDevice::abstract_resource(
+            1,
+            CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+            0,
+            10,
+        );
+        a.apply_deadline(0.1);
+        assert_eq!(a.effective_upper(), 10);
     }
 
     #[test]

@@ -172,6 +172,35 @@ impl From<bool> for IncrementalConfig {
     }
 }
 
+/// Round-deadline knob: minimize energy subject to every participating
+/// device finishing its compute + upload within `seconds` (ε-constrained
+/// bi-objective scheduling, see [`crate::sched::pareto`]). Applied as a
+/// per-device upper-limit cap derived from its [`TimeModel`], so every
+/// registered solver honors it. Unlike `shards`/`pipeline`/`incremental`
+/// this knob *changes schedules* — it is part of campaign identity,
+/// persisted in snapshots and honored by `resume`/`replay`.
+///
+/// [`TimeModel`]: crate::sched::pareto::TimeModel
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeadlineConfig {
+    /// Enforce the round deadline.
+    pub enabled: bool,
+    /// Round deadline `D` in seconds (ignored when disabled).
+    pub seconds: f64,
+}
+
+impl DeadlineConfig {
+    /// Deadline of `seconds` per round.
+    pub fn on(seconds: f64) -> Self {
+        Self { enabled: true, seconds }
+    }
+
+    /// No deadline (the default).
+    pub fn off() -> Self {
+        Self { enabled: false, seconds: 0.0 }
+    }
+}
+
 /// What the coordinator needs to know to drive rounds (the scheduling
 /// subset of [`TrainConfig`], minus the ML-side knobs).
 #[derive(Clone, Debug)]
@@ -212,6 +241,10 @@ pub struct CoordinatorConfig {
     /// When enabled it supersedes the sharded build for round
     /// derivation — there is no `O(n)` bucketing left to shard.
     pub incremental: IncrementalConfig,
+    /// Per-round completion deadline (min energy s.t. makespan ≤ D).
+    /// Unlike the wall-clock knobs above, this changes schedules and is
+    /// persisted with the campaign.
+    pub deadline: DeadlineConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -228,6 +261,7 @@ impl Default for CoordinatorConfig {
             shards: 1,
             pipeline: PipelineConfig::off(),
             incremental: IncrementalConfig::off(),
+            deadline: DeadlineConfig::off(),
         }
     }
 }
@@ -247,6 +281,7 @@ impl CoordinatorConfig {
             shards: 1,
             pipeline: PipelineConfig::off(),
             incremental: IncrementalConfig::off(),
+            deadline: DeadlineConfig::off(),
         }
     }
 }
@@ -379,7 +414,7 @@ impl<B: RoundBackend> Coordinator<B> {
     /// `Configuring`) if the solver name is unknown or the fleet is empty.
     pub fn new(
         cfg: CoordinatorConfig,
-        devices: Vec<ManagedDevice>,
+        mut devices: Vec<ManagedDevice>,
         backend: B,
     ) -> Result<Self> {
         if devices.is_empty() {
@@ -396,6 +431,23 @@ impl<B: RoundBackend> Coordinator<B> {
         }
         if cfg.shards == 0 {
             return Err(FedError::Coordinator("shards must be >= 1".into()));
+        }
+        if cfg.deadline.enabled
+            && !(cfg.deadline.seconds.is_finite() && cfg.deadline.seconds > 0.0)
+        {
+            return Err(FedError::Coordinator(format!(
+                "deadline must be a finite number of seconds > 0, got {}",
+                cfg.deadline.seconds
+            )));
+        }
+        // Deadline caps are derived state (config × device time model),
+        // applied here so restore — which decodes devices then re-enters
+        // this constructor with the decoded config — re-derives them
+        // identically.
+        if cfg.deadline.enabled {
+            for d in &mut devices {
+                d.apply_deadline(cfg.deadline.seconds);
+            }
         }
         let registry = SolverRegistry::with_defaults(cfg.seed);
         registry.resolve(&cfg.algo)?;
@@ -474,6 +526,30 @@ impl<B: RoundBackend> Coordinator<B> {
         self.cfg.incremental.enabled = enabled;
         self.speculation = None;
         self.index = None;
+    }
+
+    /// Change the round deadline (see [`DeadlineConfig`]). Unlike the
+    /// wall-clock knobs this changes schedules: deadline caps shift every
+    /// powered device's effective upper limit, so in-flight speculation
+    /// and the persistent class index are both discarded.
+    pub fn set_deadline(&mut self, deadline: DeadlineConfig) -> Result<()> {
+        if deadline.enabled && !(deadline.seconds.is_finite() && deadline.seconds > 0.0) {
+            return Err(FedError::Coordinator(format!(
+                "deadline must be a finite number of seconds > 0, got {}",
+                deadline.seconds
+            )));
+        }
+        self.cfg.deadline = deadline;
+        for d in &mut self.devices {
+            if deadline.enabled {
+                d.apply_deadline(deadline.seconds);
+            } else {
+                d.clear_deadline();
+            }
+        }
+        self.speculation = None;
+        self.index = None;
+        Ok(())
     }
 
     /// Attach a trace consumer (e.g. [`crate::obs::ChromeTraceSink`]).
@@ -1853,6 +1929,7 @@ mod tests {
                 }),
                 power: Some(cheap_power),
                 drift: 1.0,
+                deadline_cap: usize::MAX,
             },
             ManagedDevice::abstract_resource(
                 1,
@@ -1903,6 +1980,7 @@ mod tests {
             }),
             power: Some(power),
             drift: 1.0,
+            deadline_cap: usize::MAX,
         }];
         let cfg = CoordinatorConfig {
             rounds: 3,
@@ -2191,6 +2269,7 @@ mod tests {
                     }),
                     power: Some(power.clone()),
                     drift: 1.0,
+                    deadline_cap: usize::MAX,
                 },
                 ManagedDevice::abstract_resource(
                     1,
@@ -2493,6 +2572,133 @@ mod tests {
         assert_eq!(reference, run(true, true, 3), "all knobs");
     }
 
+    /// Mains-powered fleet with distinct latencies: device 0 is fast and
+    /// cheap (0.5 s, 1 J per batch), device 2 slow and expensive (2 s,
+    /// 4 J per batch). Under the default 2 s upload, a 6 s deadline caps
+    /// them at 8 / 4 / 2 tasks.
+    fn timed_fleet() -> Vec<ManagedDevice> {
+        use crate::energy::power::{Behavior, PowerModel};
+        [0.5, 1.0, 2.0]
+            .iter()
+            .enumerate()
+            .map(|(id, &latency)| {
+                let power = PowerModel {
+                    idle_w: 0.0,
+                    busy_w: 2.0,
+                    batch_latency_s: latency,
+                    behavior: Behavior::Linear,
+                    curvature: 0.0,
+                };
+                ManagedDevice {
+                    id,
+                    cost: power.cost_fn(),
+                    lower: 0,
+                    data_cap: 20,
+                    battery: None,
+                    power: Some(power),
+                    drift: 1.0,
+                    deadline_cap: usize::MAX,
+                }
+            })
+            .collect()
+    }
+
+    fn timed_cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            rounds: 6,
+            tasks_per_round: 12,
+            algo: "auto".into(),
+            max_share: 1.0,
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    #[test]
+    fn deadline_caps_change_schedules_and_energy() {
+        // Unconstrained, all 12 tasks fit the cheap fast device: 12 J per
+        // round. A 6 s deadline caps it at 8, spilling 4 tasks to the
+        // 2 J device: 16 J per round.
+        let run = |deadline: DeadlineConfig| {
+            let cfg = CoordinatorConfig { rounds: 1, deadline, ..timed_cfg() };
+            let mut c =
+                Coordinator::new(cfg, timed_fleet(), SimBackend::new()).unwrap();
+            c.run().unwrap();
+            c.log().rows()[0].energy_j
+        };
+        assert!((run(DeadlineConfig::off()) - 12.0).abs() < 1e-9);
+        assert!((run(DeadlineConfig::on(6.0)) - 16.0).abs() < 1e-9);
+        // A loose deadline caps nothing: identical to unconstrained.
+        assert!((run(DeadlineConfig::on(1e6)) - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_campaign_is_bit_for_bit_across_knobs() {
+        // The deadline *changes* schedules, but must compose with every
+        // wall-clock knob without changing them further: a deadline
+        // campaign's rows, RNG stream, and ledger are identical across
+        // pipeline/shards/incremental, including under dynamics.
+        let run = |incremental: bool, pipeline: bool, shards: usize| {
+            let cfg = CoordinatorConfig {
+                incremental: incremental.into(),
+                pipeline: pipeline.into(),
+                shards,
+                deadline: DeadlineConfig::on(6.0),
+                ..timed_cfg()
+            };
+            let mut c =
+                Coordinator::new(cfg, timed_fleet(), SimBackend::new()).unwrap();
+            c.set_dynamics(DynamicsConfig::mobile(3));
+            c.run().unwrap();
+            campaign_bits(&c)
+        };
+        let reference = run(false, false, 1);
+        assert_eq!(reference, run(true, false, 1), "deadline + incremental");
+        assert_eq!(reference, run(false, true, 1), "deadline + pipeline");
+        assert_eq!(reference, run(false, false, 3), "deadline + shards");
+        assert_eq!(reference, run(true, true, 3), "deadline + all knobs");
+        // And the deadline itself is not a wall-clock knob: dropping it
+        // changes the campaign.
+        let unconstrained = {
+            let mut c = Coordinator::new(timed_cfg(), timed_fleet(), SimBackend::new())
+                .unwrap();
+            c.set_dynamics(DynamicsConfig::mobile(3));
+            c.run().unwrap();
+            campaign_bits(&c)
+        };
+        assert_ne!(reference.0, unconstrained.0, "deadline must bind");
+    }
+
+    #[test]
+    fn set_deadline_recaps_devices_and_discards_derived_state() {
+        let cfg = CoordinatorConfig {
+            pipeline: PipelineConfig::on(),
+            ..timed_cfg()
+        };
+        let mut c =
+            Coordinator::new(cfg, timed_fleet(), SimBackend::new()).unwrap();
+        c.round().unwrap();
+        assert!(c.speculation.is_some());
+        c.set_deadline(DeadlineConfig::on(6.0)).unwrap();
+        assert!(c.speculation.is_none(), "caps invalidate the speculation");
+        assert_eq!(
+            c.devices().iter().map(|d| d.effective_upper()).collect::<Vec<_>>(),
+            vec![8, 4, 2]
+        );
+        c.set_deadline(DeadlineConfig::off()).unwrap();
+        assert_eq!(
+            c.devices().iter().map(|d| d.effective_upper()).collect::<Vec<_>>(),
+            vec![20, 20, 20]
+        );
+        // Invalid deadlines are rejected at both entry points.
+        assert!(c.set_deadline(DeadlineConfig::on(0.0)).is_err());
+        assert!(c.set_deadline(DeadlineConfig::on(f64::NAN)).is_err());
+        let bad = CoordinatorConfig {
+            deadline: DeadlineConfig::on(-1.0),
+            ..timed_cfg()
+        };
+        assert!(Coordinator::new(bad, timed_fleet(), SimBackend::new()).is_err());
+    }
+
     #[test]
     fn incremental_is_metered_and_supersedes_sharding() {
         let cfg = CoordinatorConfig {
@@ -2551,6 +2757,7 @@ mod tests {
                     }),
                     power: Some(power.clone()),
                     drift: 1.0,
+                    deadline_cap: usize::MAX,
                 },
                 ManagedDevice::abstract_resource(
                     1,

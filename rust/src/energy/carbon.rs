@@ -12,7 +12,18 @@
 //! household rates (EUR per kWh). Absolute accuracy is irrelevant to the
 //! scheduling behaviour — the *relative spread* across regions is what
 //! drives the schedules.
+//!
+//! Region lookups are **fallible**: an unknown region name is a
+//! configuration error surfaced as [`FedError::Config`], never silently
+//! substituted with a default grid (a typo'd `--objective carbon` region
+//! must not produce plausible-but-wrong schedules).
+//!
+//! [`CarbonCurve`] adds the time axis: a periodic `round → g CO₂e/kWh`
+//! trajectory so "schedule when the grid is green" is a runnable
+//! scenario (see [`crate::energy::tracegen::carbon_curve`] for a
+//! generator with a diurnal shape).
 
+use crate::error::{FedError, Result};
 use crate::sched::costs::CostFn;
 
 /// `(region, g CO₂e per kWh, EUR per kWh)`.
@@ -27,39 +38,124 @@ pub const REGIONS: [(&str, f64, f64); 8] = [
     ("brazil", 100.0, 0.14),
 ];
 
-/// Look up a region row.
-pub fn region(name: &str) -> Option<(f64, f64)> {
+/// The known region names, `|`-joined (for error messages and CLI help).
+pub fn region_list() -> String {
+    REGIONS
+        .iter()
+        .map(|(r, _, _)| *r)
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+/// Look up a region row. Unknown names are a configuration error.
+pub fn region(name: &str) -> Result<(f64, f64)> {
     REGIONS
         .iter()
         .find(|(r, _, _)| *r == name)
         .map(|(_, co2, eur)| (*co2, *eur))
+        .ok_or_else(|| {
+            FedError::Config(format!(
+                "unknown grid region '{name}' (valid: {})",
+                region_list()
+            ))
+        })
 }
 
 /// Grams of CO₂-equivalent per joule for a region.
-pub fn co2_g_per_joule(region_name: &str) -> f64 {
-    let (g_per_kwh, _) = region(region_name).unwrap_or((400.0, 0.2));
-    g_per_kwh / 3.6e6
+pub fn co2_g_per_joule(region_name: &str) -> Result<f64> {
+    let (g_per_kwh, _) = region(region_name)?;
+    Ok(g_per_kwh / 3.6e6)
 }
 
 /// EUR per joule for a region.
-pub fn eur_per_joule(region_name: &str) -> f64 {
-    let (_, eur_per_kwh) = region(region_name).unwrap_or((400.0, 0.2));
-    eur_per_kwh / 3.6e6
+pub fn eur_per_joule(region_name: &str) -> Result<f64> {
+    let (_, eur_per_kwh) = region(region_name)?;
+    Ok(eur_per_kwh / 3.6e6)
 }
 
 /// Wrap an energy (joules) cost function so its unit becomes g CO₂e.
-pub fn carbon_cost(energy_cost: CostFn, region_name: &str) -> CostFn {
-    CostFn::Scaled {
-        weight: co2_g_per_joule(region_name),
+pub fn carbon_cost(energy_cost: CostFn, region_name: &str) -> Result<CostFn> {
+    Ok(CostFn::Scaled {
+        weight: co2_g_per_joule(region_name)?,
         inner: Box::new(energy_cost),
-    }
+    })
 }
 
 /// Wrap an energy (joules) cost function so its unit becomes EUR.
-pub fn monetary_cost(energy_cost: CostFn, region_name: &str) -> CostFn {
-    CostFn::Scaled {
-        weight: eur_per_joule(region_name),
+pub fn monetary_cost(energy_cost: CostFn, region_name: &str) -> Result<CostFn> {
+    Ok(CostFn::Scaled {
+        weight: eur_per_joule(region_name)?,
         inner: Box::new(energy_cost),
+    })
+}
+
+/// A periodic time-varying carbon intensity: `values[r % len]` is the
+/// grid's g CO₂e per kWh at round `r`. The cycle repeats for campaigns
+/// longer than the stored trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CarbonCurve {
+    values: Vec<f64>,
+}
+
+impl CarbonCurve {
+    /// Build a curve from explicit per-round intensities. Values must be
+    /// non-empty, finite, and non-negative.
+    pub fn new(values: Vec<f64>) -> Result<Self> {
+        if values.is_empty() {
+            return Err(FedError::Config("carbon curve must be non-empty".into()));
+        }
+        if let Some(v) = values.iter().find(|v| !v.is_finite() || **v < 0.0) {
+            return Err(FedError::Config(format!(
+                "carbon intensity must be finite and >= 0, got {v}"
+            )));
+        }
+        Ok(Self { values })
+    }
+
+    /// A constant curve pinned to a region's annual average intensity.
+    pub fn flat(region_name: &str) -> Result<Self> {
+        let (g_per_kwh, _) = region(region_name)?;
+        Self::new(vec![g_per_kwh])
+    }
+
+    /// Stored trajectory length (one full cycle).
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Whether the curve is empty (never true for a constructed curve).
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Intensity at `round`, in g CO₂e per kWh (cycles past the end).
+    pub fn g_per_kwh(&self, round: usize) -> f64 {
+        self.values[round % self.values.len()]
+    }
+
+    /// Intensity at `round`, in g CO₂e per joule.
+    pub fn g_per_joule(&self, round: usize) -> f64 {
+        self.g_per_kwh(round) / 3.6e6
+    }
+
+    /// Wrap an energy (joules) cost so its unit becomes g CO₂e under the
+    /// grid mix at `round`.
+    pub fn carbon_cost_at(&self, energy_cost: CostFn, round: usize) -> CostFn {
+        CostFn::Scaled {
+            weight: self.g_per_joule(round),
+            inner: Box::new(energy_cost),
+        }
+    }
+
+    /// The round (within the first cycle) where the grid is cleanest.
+    pub fn greenest_round(&self) -> usize {
+        let mut best = 0;
+        for (r, v) in self.values.iter().enumerate() {
+            if *v < self.values[best] {
+                best = r;
+            }
+        }
+        best
     }
 }
 
@@ -73,33 +169,72 @@ mod tests {
         let (co2, eur) = region("france").unwrap();
         assert_eq!(co2, 56.0);
         assert_eq!(eur, 0.23);
-        assert!(region("atlantis").is_none());
+        assert!(region("atlantis").is_err());
     }
 
     #[test]
     fn per_joule_conversions() {
         // 1 kWh = 3.6e6 J
-        assert!((co2_g_per_joule("sweden") * 3.6e6 - 41.0).abs() < 1e-9);
-        assert!((eur_per_joule("india") * 3.6e6 - 0.07).abs() < 1e-9);
+        assert!((co2_g_per_joule("sweden").unwrap() * 3.6e6 - 41.0).abs() < 1e-9);
+        assert!((eur_per_joule("india").unwrap() * 3.6e6 - 0.07).abs() < 1e-9);
     }
 
     #[test]
     fn carbon_wrapping_preserves_regime() {
         let energy = CostFn::Quadratic { fixed: 0.0, a: 0.3, b: 1.0 };
-        let carbon = carbon_cost(energy, "germany");
+        let carbon = carbon_cost(energy, "germany").unwrap();
         assert_eq!(classify(&carbon, 0, 20), MarginalRegime::Increasing);
     }
 
     #[test]
     fn dirty_grid_costs_more() {
         let energy = CostFn::Affine { fixed: 0.0, per_task: 10.0 };
-        let india = carbon_cost(energy.clone(), "india");
-        let sweden = carbon_cost(energy, "sweden");
+        let india = carbon_cost(energy.clone(), "india").unwrap();
+        let sweden = carbon_cost(energy, "sweden").unwrap();
         assert!(india.eval(5) > 10.0 * sweden.eval(5));
     }
 
     #[test]
-    fn unknown_region_uses_default() {
-        assert!((co2_g_per_joule("atlantis") * 3.6e6 - 400.0).abs() < 1e-9);
+    fn unknown_region_is_an_error_listing_valid_names() {
+        // Pre-fix, a typo'd region silently fell back to a 400 g/kWh
+        // default grid; it must fail loudly and name the alternatives.
+        let err = co2_g_per_joule("atlantis").unwrap_err().to_string();
+        assert!(err.contains("atlantis"), "{err}");
+        assert!(err.contains("france"), "{err}");
+        assert!(err.contains("india"), "{err}");
+        assert!(eur_per_joule("atlantis").is_err());
+        let energy = CostFn::Affine { fixed: 0.0, per_task: 1.0 };
+        assert!(carbon_cost(energy.clone(), "atlantis").is_err());
+        assert!(monetary_cost(energy, "atlantis").is_err());
+    }
+
+    #[test]
+    fn curve_cycles_and_converts() {
+        let c = CarbonCurve::new(vec![300.0, 100.0, 200.0]).unwrap();
+        assert_eq!(c.len(), 3);
+        assert!(!c.is_empty());
+        assert_eq!(c.g_per_kwh(0), 300.0);
+        assert_eq!(c.g_per_kwh(4), 100.0);
+        assert!((c.g_per_joule(2) * 3.6e6 - 200.0).abs() < 1e-9);
+        assert_eq!(c.greenest_round(), 1);
+    }
+
+    #[test]
+    fn curve_weighting_tracks_the_grid() {
+        let c = CarbonCurve::new(vec![400.0, 50.0]).unwrap();
+        let energy = CostFn::Affine { fixed: 0.0, per_task: 10.0 };
+        let dirty = c.carbon_cost_at(energy.clone(), 0);
+        let green = c.carbon_cost_at(energy, 1);
+        assert!(dirty.eval(5) > 7.0 * green.eval(5));
+    }
+
+    #[test]
+    fn curve_rejects_bad_values() {
+        assert!(CarbonCurve::new(vec![]).is_err());
+        assert!(CarbonCurve::new(vec![100.0, f64::NAN]).is_err());
+        assert!(CarbonCurve::new(vec![-1.0]).is_err());
+        assert!(CarbonCurve::flat("atlantis").is_err());
+        let flat = CarbonCurve::flat("sweden").unwrap();
+        assert_eq!(flat.g_per_kwh(17), 41.0);
     }
 }

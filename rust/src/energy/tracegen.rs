@@ -9,7 +9,14 @@
 //! table to monotone non-decreasing via the pool-adjacent-violators
 //! algorithm (PAVA) — what a profiler post-processing step would do before
 //! handing costs to MarIn/MarCo/MarDec.
+//!
+//! [`carbon_curve`] generates the time axis of the carbon objective: a
+//! periodic round-indexed grid-intensity trajectory
+//! ([`crate::energy::carbon::CarbonCurve`]) with a diurnal solar dip, so
+//! "schedule when the grid is green" scenarios have realistic input.
 
+use crate::energy::carbon::CarbonCurve;
+use crate::error::Result;
 use crate::sched::costs::CostFn;
 use crate::util::rng::Rng;
 
@@ -95,6 +102,55 @@ pub fn table_cost(values: Vec<f64>) -> CostFn {
     CostFn::Tabulated { first: 0, values }
 }
 
+/// Parameters for synthetic grid-intensity trajectories.
+#[derive(Clone, Debug)]
+pub struct CarbonCurveParams {
+    /// Mean grid intensity, g CO₂e per kWh.
+    pub mean_g_per_kwh: f64,
+    /// Relative amplitude of the diurnal swing (0 = flat).
+    pub swing: f64,
+    /// Rounds per diurnal cycle.
+    pub period: usize,
+    /// Log-normal per-round noise sigma (0 = clean).
+    pub noise_sigma: f64,
+}
+
+impl Default for CarbonCurveParams {
+    fn default() -> Self {
+        Self {
+            mean_g_per_kwh: 300.0,
+            swing: 0.4,
+            period: 24,
+            noise_sigma: 0.05,
+        }
+    }
+}
+
+/// Generate a `rounds`-long grid-intensity trajectory with a diurnal
+/// shape: intensity peaks at the cycle boundaries ("night") and dips to
+/// its minimum mid-cycle (the solar window), times multiplicative
+/// log-normal noise, floored at 1 g/kWh.
+pub fn carbon_curve(
+    rounds: usize,
+    p: &CarbonCurveParams,
+    rng: &mut Rng,
+) -> Result<CarbonCurve> {
+    let period = p.period.max(1);
+    let mut values = Vec::with_capacity(rounds);
+    for r in 0..rounds {
+        let phase = (r % period) as f64 / period as f64;
+        let base = p.mean_g_per_kwh
+            * (1.0 + p.swing * (std::f64::consts::TAU * phase).cos());
+        let noise = if p.noise_sigma > 0.0 {
+            rng.lognormal(0.0, p.noise_sigma)
+        } else {
+            1.0
+        };
+        values.push((base * noise).max(1.0));
+    }
+    CarbonCurve::new(values)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +203,49 @@ mod tests {
         }
         for w in t.windows(2) {
             assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn carbon_curve_shape_and_diurnal_dip() {
+        let mut rng = Rng::new(9);
+        let p = CarbonCurveParams { noise_sigma: 0.0, ..Default::default() };
+        let c = carbon_curve(48, &p, &mut rng).unwrap();
+        assert_eq!(c.len(), 48);
+        // Clean curve: the minimum sits mid-cycle (the solar window) and
+        // the cycle repeats exactly.
+        assert_eq!(c.greenest_round(), 12);
+        assert!((c.g_per_kwh(0) - c.g_per_kwh(24)).abs() < 1e-9);
+        assert!(c.g_per_kwh(12) < c.g_per_kwh(0));
+        // swing 0.4 around a 300 mean: peak 420, trough 180.
+        assert!((c.g_per_kwh(0) - 420.0).abs() < 1e-9);
+        assert!((c.g_per_kwh(12) - 180.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn carbon_curve_flat_when_swing_and_noise_are_zero() {
+        let mut rng = Rng::new(10);
+        let p = CarbonCurveParams {
+            swing: 0.0,
+            noise_sigma: 0.0,
+            mean_g_per_kwh: 250.0,
+            ..Default::default()
+        };
+        let c = carbon_curve(10, &p, &mut rng).unwrap();
+        for r in 0..10 {
+            assert!((c.g_per_kwh(r) - 250.0).abs() < 1e-9);
+        }
+        // Zero rounds is rejected by the curve constructor.
+        assert!(carbon_curve(0, &p, &mut rng).is_err());
+    }
+
+    #[test]
+    fn carbon_curve_noise_stays_positive() {
+        let mut rng = Rng::new(11);
+        let p = CarbonCurveParams { noise_sigma: 0.8, ..Default::default() };
+        let c = carbon_curve(200, &p, &mut rng).unwrap();
+        for r in 0..200 {
+            assert!(c.g_per_kwh(r) >= 1.0);
         }
     }
 

@@ -14,6 +14,9 @@
 //! * `stats` — post-hoc campaign dashboard from a store: phase-time
 //!   breakdown, per-solver usage, pipeline/incremental rates, energy
 //!   concentration;
+//! * `pareto` — sweep the energy–time Pareto front of a sampled fleet
+//!   (ε-constraint method over class-level candidate makespans) and dump
+//!   it as CSV or JSONL;
 //! * `fleet` — sample and describe a heterogeneous fleet;
 //! * `solvers` — list every solver in the registry.
 //!
@@ -27,10 +30,13 @@ use std::process::ExitCode;
 use fedzero::cli;
 use fedzero::config::{Policy, TrainConfig};
 use fedzero::coordinator::{
-    Coordinator, CoordinatorConfig, ManagedDevice, PipelineConfig, SimBackend,
+    Coordinator, CoordinatorConfig, DeadlineConfig, ManagedDevice, PipelineConfig,
+    SimBackend,
 };
+use fedzero::energy::carbon::{self, CarbonCurve};
 use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::{BehaviorMix, Fleet};
+use fedzero::energy::tracegen::{carbon_curve, CarbonCurveParams};
 use fedzero::fl::dynamics::DynamicsConfig;
 use fedzero::fl::Server;
 use fedzero::metrics::Timer;
@@ -38,6 +44,8 @@ use fedzero::obs::ChromeTraceSink;
 use fedzero::runtime::pool;
 use fedzero::sched::auto::{best_algorithm, TABLE2_SCENARIOS};
 use fedzero::sched::fleet::FleetInstance;
+use fedzero::sched::instance::Instance;
+use fedzero::sched::pareto::{BiFleet, TimeModel};
 use fedzero::sched::solver::{Solver, SolverRegistry};
 use fedzero::sched::validate;
 use fedzero::store::journal::campaign_digest;
@@ -68,6 +76,7 @@ fn run(args: &[String]) -> fedzero::Result<()> {
         "resume" => cmd_resume(&parsed),
         "replay" => cmd_replay(&parsed),
         "stats" => cmd_stats(&parsed),
+        "pareto" => cmd_pareto(&parsed),
         "fleet" => cmd_fleet(&parsed),
         "solvers" => cmd_solvers(),
         other => Err(fedzero::FedError::Config(format!("unhandled command {other}"))),
@@ -183,6 +192,11 @@ fn cmd_train_fl(p: &cli::Parsed) -> fedzero::Result<()> {
                 .into(),
         ));
     }
+    if p.get("deadline").is_some() || parse_objective(p.req("objective")?)? != Objective::Energy {
+        return Err(fedzero::FedError::Config(
+            "--deadline/--objective require --backend sim".into(),
+        ));
+    }
     let mut cfg = match p.get("config") {
         Some(path) => TrainConfig::from_toml(&std::fs::read_to_string(path)?)?,
         None => TrainConfig::default(),
@@ -296,6 +310,32 @@ fn parse_incremental(v: &str) -> fedzero::Result<bool> {
     }
 }
 
+/// The cost unit `--objective` asks the scheduler to minimize.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Objective {
+    Energy,
+    Carbon,
+    Money,
+}
+
+fn parse_objective(v: &str) -> fedzero::Result<Objective> {
+    match v {
+        "energy" => Ok(Objective::Energy),
+        "carbon" => Ok(Objective::Carbon),
+        "money" => Ok(Objective::Money),
+        other => Err(fedzero::FedError::Config(format!(
+            "unknown objective '{other}' (energy|carbon|money)"
+        ))),
+    }
+}
+
+fn parse_deadline(p: &cli::Parsed) -> fedzero::Result<DeadlineConfig> {
+    Ok(match p.get_parse::<f64>("deadline")? {
+        Some(s) => DeadlineConfig::on(s),
+        None => DeadlineConfig::off(),
+    })
+}
+
 /// Drive a sim-backed coordinator to `rounds`, printing one CSV-ish line
 /// per round and honoring periodic snapshots when a store is attached.
 fn drive_sim(
@@ -368,21 +408,45 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
         // and `replay` pick the same modes back up from the campaign.
         pipeline: PipelineConfig::from(parse_pipeline(p.req("pipeline")?)?),
         incremental: parse_incremental(p.req("incremental")?)?.into(),
+        // The deadline is campaign identity, not a wall-clock knob: it
+        // changes schedules, so it persists in the store meta and is
+        // re-applied to the restored fleet by `resume`/`replay`.
+        deadline: parse_deadline(p)?,
     };
     let snapshot_every: usize = p.get_or("snapshot-every", 16)?;
     let sleep_ms: u64 = p.get_or("round-sleep-ms", 0)?;
     let dynamics_name = p.req("dynamics")?.to_string();
     let dynamics = parse_dynamics(&dynamics_name, devices_n)?;
+    let objective = parse_objective(p.req("objective")?)?;
+    if objective != Objective::Energy && dynamics.is_some() {
+        return Err(fedzero::FedError::Config(
+            "--objective carbon|money requires --dynamics none: mid-round \
+             dropout accounting is joule-based and must not mix units"
+                .into(),
+        ));
+    }
 
     // The fleet is sampled from the seed; its full evolving state lives in
     // the snapshots thereafter, so `resume` never needs to resample.
     let mut rng = Rng::new(seed);
     let fleet = Fleet::sample(devices_n, BehaviorMix::Mixed, &mut rng);
-    let managed: Vec<ManagedDevice> = fleet
+    let mut managed: Vec<ManagedDevice> = fleet
         .devices
         .iter()
         .map(|d| ManagedDevice::from_device(d, usize::MAX))
         .collect();
+    // Non-energy objectives weight each device's joule cost by its grid
+    // region (annual-average intensity/price). The wrapped costs are what
+    // the snapshot codec persists, so restored campaigns keep the unit.
+    if objective != Objective::Energy {
+        for (m, d) in managed.iter_mut().zip(&fleet.devices) {
+            m.cost = match objective {
+                Objective::Carbon => carbon::carbon_cost(m.cost.clone(), d.region)?,
+                Objective::Money => carbon::monetary_cost(m.cost.clone(), d.region)?,
+                Objective::Energy => unreachable!(),
+            };
+        }
+    }
     let mut coord = Coordinator::new(cfg.clone(), managed, SimBackend::new())?;
     if let Some(d) = dynamics {
         coord.set_dynamics(d);
@@ -433,6 +497,7 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
             // The trace file too: `resume` re-attaches it in append mode
             // so one campaign yields one continuous trace across crashes.
             ("trace", opt_path("trace")),
+            ("objective", Json::Str(p.req("objective")?.to_string())),
             ("cfg", snap::cfg_to_json(&cfg)),
         ]);
         let store = CampaignStore::create(dir, meta, coord.snapshot_json())?;
@@ -632,6 +697,17 @@ fn cmd_stats(p: &cli::Parsed) -> fedzero::Result<()> {
         cfg.rounds,
         cfg.algo
     );
+    if cfg.deadline.enabled {
+        println!(
+            "deadline: {} s per round (min cost s.t. makespan <= D)",
+            cfg.deadline.seconds
+        );
+    }
+    if let Some(obj) = contents.meta.get("objective").and_then(|v| v.as_str()) {
+        if obj != "energy" {
+            println!("objective: {obj} (device costs weighted by grid region)");
+        }
+    }
     println!(
         "energy: {} over {tasks} tasks ({} per task)",
         fmt_energy(energy_j),
@@ -753,6 +829,147 @@ fn parse_algo(name: &str, seed: u64) -> fedzero::Result<Policy> {
                 .join("|")
         ))
     })
+}
+
+/// `pareto`: sample a fleet, build its bi-objective instance under the
+/// chosen cost unit, and dump either the full energy–time front or (with
+/// `--deadline`) the single ε-constrained point at that cap.
+fn cmd_pareto(p: &cli::Parsed) -> fedzero::Result<()> {
+    let tasks: usize = p.get_or("tasks", 256)?;
+    let devices_n: usize = p.get_or("devices", 10)?;
+    let seed: u64 = p.get_or("seed", 1)?;
+    let algo = p.req("algo")?;
+    let objective = parse_objective(p.req("objective")?)?;
+    let round: usize = p.get_or("round", 0)?;
+    let upload_s: f64 = p.get_or("upload-s", 2.0)?;
+    let format = p.req("format")?;
+    if format != "csv" && format != "jsonl" {
+        return Err(fedzero::FedError::Config(format!(
+            "unknown format '{format}' (csv|jsonl)"
+        )));
+    }
+    let registry = SolverRegistry::with_defaults(seed);
+    registry.resolve(algo)?;
+    // Validate a pinned region before doing any work (unknown names are
+    // a hard error — never a silently-substituted default grid).
+    let region_override = p.get("region");
+    if let Some(r) = region_override {
+        carbon::region(r)?;
+    }
+
+    let mut rng = Rng::new(seed);
+    let fleet = Fleet::sample(devices_n, BehaviorMix::Mixed, &mut rng);
+    let t = tasks.min(fleet.capacity());
+
+    // Per-region diurnal carbon curves, deterministic from the seed: the
+    // time axis of the carbon objective. `--round` picks where on the
+    // cycle the front is computed — the "schedule when the grid is
+    // green" scenario is `--objective carbon --round <trough>`.
+    let mut curves: std::collections::BTreeMap<&str, CarbonCurve> =
+        std::collections::BTreeMap::new();
+    if objective == Objective::Carbon {
+        for (i, &(name, g_per_kwh, _)) in carbon::REGIONS.iter().enumerate() {
+            let params = CarbonCurveParams {
+                mean_g_per_kwh: g_per_kwh,
+                ..CarbonCurveParams::default()
+            };
+            let mut crng = Rng::new(seed ^ (i as u64 + 1).wrapping_mul(0x9e37_79b9));
+            curves.insert(name, carbon_curve(48, &params, &mut crng)?);
+        }
+    }
+
+    let mut costs = Vec::with_capacity(fleet.len());
+    let mut uppers = Vec::with_capacity(fleet.len());
+    let mut times = Vec::with_capacity(fleet.len());
+    for d in &fleet.devices {
+        let region = region_override.unwrap_or(d.region);
+        let energy = d.cost_fn();
+        costs.push(match objective {
+            Objective::Energy => energy,
+            Objective::Carbon => curves[region].carbon_cost_at(energy, round),
+            Objective::Money => carbon::monetary_cost(energy, region)?,
+        });
+        uppers.push(d.upper_limit());
+        times.push(TimeModel::affine(d.power.batch_latency_s, upload_s));
+    }
+    let inst = Instance::new(t, vec![0; fleet.len()], uppers, costs)?;
+    let bi = BiFleet::from_flat(&inst, &times)?;
+
+    let points = match p.get_parse::<f64>("deadline")? {
+        Some(tau) => match bi.solve_constrained(&registry, algo, tau)? {
+            Some(pt) => vec![pt],
+            None => {
+                return Err(fedzero::FedError::Infeasible(format!(
+                    "no schedule meets a {tau} s deadline (tightest feasible \
+                     makespan exceeds it)"
+                )))
+            }
+        },
+        None => bi.pareto_front(&registry, algo)?,
+    };
+
+    let unit = match objective {
+        Objective::Energy => "J",
+        Objective::Carbon => "gCO2e",
+        Objective::Money => "EUR",
+    };
+    let mut out = String::new();
+    if format == "csv" {
+        out.push_str("point,makespan_s,cost,unit,solver,assignments\n");
+        for (i, pt) in points.iter().enumerate() {
+            let loads: Vec<String> =
+                pt.schedule.assignments().iter().map(|x| x.to_string()).collect();
+            out.push_str(&format!(
+                "{i},{},{},{unit},{},{}\n",
+                pt.makespan,
+                pt.energy,
+                pt.solver,
+                loads.join(" ")
+            ));
+        }
+    } else {
+        for (i, pt) in points.iter().enumerate() {
+            let loads: Vec<Json> = pt
+                .schedule
+                .assignments()
+                .iter()
+                .map(|&x| Json::Num(x as f64))
+                .collect();
+            let obj = Json::obj(vec![
+                ("point", Json::Num(i as f64)),
+                ("makespan_s", Json::Num(pt.makespan)),
+                ("cost", Json::Num(pt.energy)),
+                ("unit", Json::Str(unit.to_string())),
+                ("solver", Json::Str(pt.solver.to_string())),
+                ("assignments", Json::Arr(loads)),
+            ]);
+            out.push_str(&obj.to_string());
+            out.push('\n');
+        }
+    }
+    match p.get("out") {
+        Some(path) => std::fs::write(path, &out)?,
+        None => print!("{out}"),
+    }
+    // Human summary on stderr so stdout stays machine-parseable.
+    let k = bi.energy().n_classes();
+    eprintln!(
+        "{} point(s) over {} candidate makespans — n={} in {k} classes, T={t}, \
+         objective {unit}",
+        points.len(),
+        bi.candidate_makespans().len(),
+        fleet.len()
+    );
+    if let (Some(first), Some(last)) = (points.first(), points.last()) {
+        eprintln!(
+            "tightest: {:.3} s at {:.3} {unit}; loosest: {:.3} s at {:.3} {unit}",
+            first.makespan, first.energy, last.makespan, last.energy
+        );
+    }
+    if let Some(path) = p.get("out") {
+        eprintln!("front written to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_fleet(p: &cli::Parsed) -> fedzero::Result<()> {

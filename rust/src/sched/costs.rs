@@ -74,7 +74,38 @@ impl CostFn {
                 values[j - first]
             }
             CostFn::Scaled { weight, inner } => weight * inner.eval(j),
-            CostFn::Shifted { shift, inner } => inner.eval(j + shift) - inner.eval(*shift),
+            CostFn::Shifted { shift, inner } => {
+                // `j + shift` must never wrap, and a `Shifted`-wrapped
+                // `Tabulated` may be queried past the table's stored domain
+                // by callers probing the transformed range (the §5.2
+                // restore path) — clamp instead of hitting `eval`'s hard
+                // domain assert.
+                let x = j.saturating_add(*shift);
+                inner.eval_clamped(x) - inner.eval_clamped(*shift)
+            }
+        }
+    }
+
+    /// Evaluate like [`CostFn::eval`], but clamp out-of-domain `Tabulated`
+    /// queries to the nearest stored endpoint instead of panicking (the
+    /// analytic families are total and behave identically to `eval`).
+    ///
+    /// This is the edge-tolerant path used by [`CostFn::Shifted`] and the
+    /// time-model binary search in [`crate::sched::pareto`], where probe
+    /// points may legitimately exceed a measured table's domain.
+    pub fn eval_clamped(&self, j: usize) -> f64 {
+        match self {
+            CostFn::Tabulated { first, values } => {
+                let hi = values.len().saturating_sub(1);
+                let idx = j.saturating_sub(*first).min(hi);
+                values[idx]
+            }
+            CostFn::Scaled { weight, inner } => weight * inner.eval_clamped(j),
+            CostFn::Shifted { shift, inner } => {
+                let x = j.saturating_add(*shift);
+                inner.eval_clamped(x) - inner.eval_clamped(*shift)
+            }
+            _ => self.eval(j),
         }
     }
 
@@ -312,6 +343,47 @@ mod tests {
         assert_eq!(shifted.eval(0), 0.0);
         assert_eq!(shifted.eval(1), base.eval(3) - base.eval(2));
         assert_eq!(shifted.eval(3), base.eval(5) - base.eval(2));
+    }
+
+    #[test]
+    fn shifted_overflow_saturates_instead_of_panicking() {
+        // A shift at the top of the usize range must not wrap `j + shift`
+        // around zero; the saturated point evaluates like the endpoint,
+        // so the transformed cost degenerates to 0 instead of garbage.
+        let shifted = CostFn::Shifted {
+            shift: usize::MAX,
+            inner: Box::new(CostFn::Affine { fixed: 1.0, per_task: 2.0 }),
+        };
+        assert_eq!(shifted.eval(0), 0.0);
+        assert_eq!(shifted.eval(3), 0.0);
+    }
+
+    #[test]
+    fn shifted_tabulated_out_of_domain_clamps() {
+        // Pre-fix this hit `eval`'s hard domain assert: the shifted view
+        // of a 4-entry table has domain [0, 1] but eq. 10's restore path
+        // probes past it. Clamping pins out-of-range queries to the last
+        // stored value.
+        let table =
+            CostFn::from_table(&[(0, 0.0), (1, 2.0), (2, 3.0), (3, 9.0)]);
+        let shifted = CostFn::Shifted { shift: 2, inner: Box::new(table) };
+        assert_eq!(shifted.eval(0), 0.0);
+        assert_eq!(shifted.eval(1), 9.0 - 3.0);
+        // j + shift = 4 and 52 both exceed the table: clamp to j = 3.
+        assert_eq!(shifted.eval(2), 9.0 - 3.0);
+        assert_eq!(shifted.eval(50), 9.0 - 3.0);
+    }
+
+    #[test]
+    fn eval_clamped_clamps_tabulated_to_domain_edges() {
+        let c = CostFn::from_table(&[(2, 4.0), (3, 6.0)]);
+        assert_eq!(c.eval_clamped(0), 4.0);
+        assert_eq!(c.eval_clamped(2), 4.0);
+        assert_eq!(c.eval_clamped(3), 6.0);
+        assert_eq!(c.eval_clamped(9), 6.0);
+        // Analytic families are unchanged.
+        let a = CostFn::Affine { fixed: 1.0, per_task: 3.0 };
+        assert_eq!(a.eval_clamped(4), a.eval(4));
     }
 
     #[test]

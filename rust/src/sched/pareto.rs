@@ -1,68 +1,105 @@
 //! Bi-objective energy/time trade-off: the Pareto front between total
 //! energy (`ΣC`, this paper's objective) and round makespan (`max t_i`,
-//! OLAR's [26] objective).
+//! OLAR's [26] objective), at **class granularity**.
 //!
 //! The paper positions itself against Khaleghzadeh et al. [28], who compute
 //! the full time/energy Pareto front in `O(n³T³ log(nT))`. Here we exploit
 //! the problem's structure with an **ε-constraint scalarization**: for a
-//! candidate makespan cap `τ`, the constraint `time_i(x_i) <= τ` is exactly
-//! an upper limit `U_i(τ)` per resource (times are monotone in the number
-//! of tasks), so each front point is one Minimal Cost FL Schedule solve —
-//! `O(P · T² n)` for `P` distinct candidate makespans, far below the
-//! general-case bound.
+//! candidate makespan cap `τ`, the constraint `time_c(x) <= τ` is exactly
+//! an upper limit `U_c(τ)` per device class (times are monotone in the
+//! number of tasks), so each front point is one Minimal Cost FL Schedule
+//! solve over the capped instance.
 //!
-//! Candidate makespans are the distinct per-resource times `time_i(j)`,
-//! `j ∈ [L_i, U_i]` — the makespan of *any* schedule is one of these, so
-//! the enumeration is exact, and dominated points are filtered at the end.
+//! Everything runs on the class-deduplicated [`FleetInstance`] API:
+//!
+//! * one [`TimeModel`] per *class* (`k ≪ n` — interchangeable devices
+//!   share compute and upload behaviour by definition);
+//! * candidate makespans are the distinct per-class times `time_c(j)`,
+//!   `j ∈ [L_c, U_c]` — `O(Σ_c (U_c − L_c))` candidates instead of the
+//!   flat `O(Σ_i (U_i − L_i))`, and the makespan of *any* schedule is one
+//!   of them, so the enumeration stays exact;
+//! * [`BiFleet::solve_constrained`] folds the `U_c(τ)` caps through the
+//!   shared [`effective_limits`] round seam and dispatches through the
+//!   [`SolverRegistry`] — **any** registered solver can solve the
+//!   ε-constrained instance, with Table-2 applicability
+//!   ([`crate::sched::auto`]) decided on the *capped* instance, whose
+//!   regime may differ from the uncapped one.
+//!
+//! Tightening τ can *fuse* classes (distinct uppers clipped to one cap),
+//! so the capped instance is re-deduplicated through the shared
+//! [`ClassTable`] probe/insert core — the same code every other build
+//! path uses.
 
-use crate::error::Result;
+use crate::error::{FedError, Result};
+use crate::sched::auto::{best_algorithm, classify_fleet};
 use crate::sched::costs::CostFn;
+use crate::sched::fleet::{Assignment, ClassTable, FleetInstance};
+use crate::sched::incremental::{effective_limits, RoundParams};
 use crate::sched::instance::{Instance, Schedule};
-use crate::sched::{mc2mkp, validate};
+use crate::sched::solver::SolverRegistry;
 
-/// A bi-objective instance: energy costs (the [`Instance`]) plus a
-/// monotone time function per resource.
-#[derive(Clone, Debug)]
-pub struct BiInstance {
-    /// The energy-minimization instance.
-    pub energy: Instance,
-    /// `time[i].eval(j)` = seconds resource `i` needs for `j` tasks
-    /// (monotone non-decreasing in `j`).
-    pub time: Vec<CostFn>,
+/// Default model-upload time per participating device, seconds. Used by
+/// the CLI and coordinator when a device's power model provides compute
+/// latency but no network profile exists.
+pub const DEFAULT_UPLOAD_S: f64 = 2.0;
+
+/// Completion-time model of one device class: seconds to train `j` tasks
+/// *and* upload the model update. Monotone non-decreasing in `j`; an
+/// idle device (`j = 0`) participates in nothing and takes 0 seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimeModel {
+    secs: CostFn,
 }
 
-/// One point on the Pareto front.
-#[derive(Clone, Debug)]
-pub struct ParetoPoint {
-    pub schedule: Schedule,
-    pub energy: f64,
-    pub makespan: f64,
-}
-
-impl BiInstance {
-    /// Makespan of a schedule under this instance's time functions.
-    pub fn makespan(&self, sched: &Schedule) -> f64 {
-        sched
-            .assignments()
-            .iter()
-            .enumerate()
-            .map(|(i, &x)| self.time[i].eval(x))
-            .fold(0.0f64, f64::max)
+impl TimeModel {
+    /// Affine time: `upload_s + compute_s_per_task · j` (the classic
+    /// compute + communication split of arXiv 2209.14900-style models).
+    pub fn affine(compute_s_per_task: f64, upload_s: f64) -> Self {
+        Self {
+            secs: CostFn::Affine { fixed: upload_s, per_task: compute_s_per_task },
+        }
     }
 
-    /// Largest assignment of resource `i` whose time fits within `tau`
-    /// (monotone → binary search), clamped to `[L_i, U_i]`. Returns `None`
-    /// if even `L_i` tasks exceed `tau`.
-    fn cap_for(&self, i: usize, tau: f64) -> Option<usize> {
-        let lo = self.energy.lower[i];
-        let hi = self.energy.cap(i);
-        if self.time[i].eval(lo) > tau {
+    /// Wrap an arbitrary monotone seconds-per-load function (e.g. a
+    /// measured [`CostFn::Tabulated`] latency profile).
+    pub fn from_cost(secs: CostFn) -> Self {
+        Self { secs }
+    }
+
+    /// The underlying seconds-per-load function.
+    pub fn cost(&self) -> &CostFn {
+        &self.secs
+    }
+
+    /// Seconds for `j` tasks. `j = 0` is defined as 0 (the device sits
+    /// the round out — no compute, no upload); tabulated profiles are
+    /// domain-clamped rather than panicking on probe overshoot.
+    pub fn seconds(&self, j: usize) -> f64 {
+        if j == 0 {
+            0.0
+        } else {
+            self.secs.eval_clamped(j)
+        }
+    }
+
+    /// Largest load in `[floor, ceil]` whose time fits within `tau`
+    /// (monotone → binary search). `None` if even `floor` tasks exceed
+    /// `tau`.
+    pub fn max_tasks_within(&self, tau: f64, floor: usize, ceil: usize) -> Option<usize> {
+        if self.seconds(floor) > tau {
             return None;
         }
-        let (mut lo_ok, mut hi_bad) = (lo, hi + 1);
-        while hi_bad - lo_ok > 1 {
-            let mid = lo_ok + (hi_bad - lo_ok) / 2;
-            if self.time[i].eval(mid) <= tau {
+        if self.seconds(ceil) <= tau {
+            return Some(ceil);
+        }
+        // Invariant: time(lo_ok) <= tau < time(hi_bad). Saturating steps
+        // keep the unbounded-cap edge (`ceil = usize::MAX`) exact instead
+        // of wrapping past it.
+        let mut lo_ok = floor;
+        let mut hi_bad = ceil;
+        while hi_bad.saturating_sub(lo_ok) > 1 {
+            let mid = lo_ok.saturating_add(hi_bad.saturating_sub(lo_ok) / 2);
+            if self.seconds(mid) <= tau {
                 lo_ok = mid;
             } else {
                 hi_bad = mid;
@@ -70,58 +107,251 @@ impl BiInstance {
         }
         Some(lo_ok)
     }
+}
 
-    /// Energy-minimal schedule subject to `makespan <= tau`, if feasible.
-    pub fn solve_constrained(&self, tau: f64) -> Result<Option<ParetoPoint>> {
-        let n = self.energy.n();
-        let mut upper = Vec::with_capacity(n);
-        for i in 0..n {
-            match self.cap_for(i, tau) {
-                Some(u) => upper.push(u),
-                None => return Ok(None), // lower limit alone busts the cap
+/// One point on the energy/makespan Pareto front.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    /// Slot-expanded schedule (device order of the underlying fleet).
+    pub schedule: Schedule,
+    /// Class-level assignment (run-length form, `O(k)` on the wire).
+    pub assignment: Assignment,
+    /// Total energy `ΣC` of the schedule (the minimized objective).
+    pub energy: f64,
+    /// Realized makespan `max_i time(x_i)` of the schedule.
+    pub makespan: f64,
+    /// Effective solver that produced this point.
+    pub solver: &'static str,
+}
+
+/// A bi-objective instance: a class-deduplicated energy fleet plus one
+/// [`TimeModel`] per class.
+#[derive(Clone, Debug)]
+pub struct BiFleet {
+    energy: FleetInstance,
+    times: Vec<TimeModel>,
+}
+
+impl BiFleet {
+    /// Build and validate: one model per class, all times finite,
+    /// non-negative, and monotone non-decreasing over the class domain.
+    pub fn new(energy: FleetInstance, times: Vec<TimeModel>) -> Result<BiFleet> {
+        if times.len() != energy.n_classes() {
+            return Err(FedError::InvalidInstance(format!(
+                "need one time model per class: {} models for {} classes",
+                times.len(),
+                energy.n_classes()
+            )));
+        }
+        for (c, class) in energy.classes().iter().enumerate() {
+            let hi_c = class.upper.min(energy.tasks);
+            let mut prev = 0.0f64;
+            for j in class.lower..=hi_c {
+                let s = times[c].seconds(j);
+                if !s.is_finite() || s < 0.0 {
+                    return Err(FedError::InvalidInstance(format!(
+                        "class {c}: time({j}) = {s} is not a finite non-negative \
+                         number of seconds"
+                    )));
+                }
+                if s < prev {
+                    return Err(FedError::InvalidInstance(format!(
+                        "class {c}: time({j}) = {s} < time({}) = {prev} — time \
+                         models must be monotone non-decreasing",
+                        j.saturating_sub(1)
+                    )));
+                }
+                prev = s;
             }
         }
-        let capped = Instance {
-            tasks: self.energy.tasks,
-            lower: self.energy.lower.clone(),
-            upper,
-            costs: self.energy.costs.clone(),
-        };
-        if capped.validate().is_err() {
-            return Ok(None); // not enough capacity under this makespan
-        }
-        let sched = mc2mkp::solve(&capped)?;
-        let energy = validate::total_cost(&self.energy, &sched);
-        let makespan = self.makespan(&sched);
-        Ok(Some(ParetoPoint { schedule: sched, energy, makespan }))
+        Ok(Self { energy, times })
     }
 
-    /// Compute the energy/makespan Pareto front.
-    pub fn pareto_front(&self) -> Result<Vec<ParetoPoint>> {
-        // Candidate makespans: all distinct reachable per-resource times.
+    /// Group a flat per-device instance plus per-device time models into
+    /// a class-level bi-objective fleet. Devices that share an energy
+    /// class must share a time model (structurally equal), or the class
+    /// would not actually be interchangeable.
+    pub fn from_flat(energy: &Instance, per_device: &[TimeModel]) -> Result<BiFleet> {
+        if per_device.len() != energy.n() {
+            return Err(FedError::InvalidInstance(format!(
+                "need one time model per device: {} models for {} devices",
+                per_device.len(),
+                energy.n()
+            )));
+        }
+        let fleet = FleetInstance::from_flat(energy)?;
+        let mut times = Vec::with_capacity(fleet.n_classes());
+        for (c, class) in fleet.classes().iter().enumerate() {
+            let first = class.members[0];
+            for &s in &class.members {
+                if per_device[s] != per_device[first] {
+                    return Err(FedError::InvalidInstance(format!(
+                        "devices {first} and {s} share energy class {c} but \
+                         disagree on time models"
+                    )));
+                }
+            }
+            times.push(per_device[first].clone());
+        }
+        Self::new(fleet, times)
+    }
+
+    /// The energy fleet.
+    pub fn energy(&self) -> &FleetInstance {
+        &self.energy
+    }
+
+    /// The per-class time models (index-aligned with
+    /// [`FleetInstance::classes`]).
+    pub fn times(&self) -> &[TimeModel] {
+        &self.times
+    }
+
+    /// Makespan of a slot-expanded schedule under the class time models.
+    pub fn makespan(&self, sched: &Schedule) -> f64 {
+        let mut worst = 0.0f64;
+        for (slot, &load) in sched.assignments().iter().enumerate() {
+            let c = self.energy.class_of(slot);
+            worst = worst.max(self.times[c].seconds(load));
+        }
+        worst
+    }
+
+    /// Candidate makespans: all distinct reachable per-class times
+    /// `time_c(j)`, `j ∈ [L_c, min(U_c, T)]`, ascending. The makespan of
+    /// any schedule equals one of these, so sweeping them is exact.
+    pub fn candidate_makespans(&self) -> Vec<f64> {
         let mut candidates: Vec<f64> = Vec::new();
-        for i in 0..self.energy.n() {
-            for j in self.energy.lower[i]..=self.energy.cap(i) {
-                candidates.push(self.time[i].eval(j));
+        for (c, class) in self.energy.classes().iter().enumerate() {
+            let hi_c = class.upper.min(self.energy.tasks);
+            for j in class.lower..=hi_c {
+                candidates.push(self.times[c].seconds(j));
             }
         }
         candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
         candidates.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        candidates
+    }
 
+    /// The ε-constrained instance for makespan cap `tau`: per-class
+    /// `U_c(τ)` caps folded through the shared [`effective_limits`] round
+    /// seam, re-deduplicated (capping can fuse classes). `Ok(None)` when
+    /// no schedule can meet the cap — a class's lower limit alone busts
+    /// it, or the capped fleet cannot absorb `T`.
+    pub fn capped_fleet(&self, tau: f64) -> Result<Option<FleetInstance>> {
+        let t_req = self.energy.tasks;
+        let classes = self.energy.classes();
+        let mut class_caps = Vec::with_capacity(classes.len());
+        for (c, class) in classes.iter().enumerate() {
+            let hi_c = class.upper.min(t_req);
+            match self.times[c].max_tasks_within(tau, class.lower, hi_c) {
+                Some(u) => class_caps.push(u),
+                None => return Ok(None),
+            }
+        }
+        // effective_limits shrinks the workload to fit capacity instead
+        // of failing; an ε-constrained solve must treat "can't absorb T
+        // under this cap" as infeasible, so pre-check capacity here.
+        let mut room = 0usize;
+        for (class, &u) in classes.iter().zip(&class_caps) {
+            room = room.saturating_add(u.saturating_mul(class.count()));
+        }
+        if room < t_req.max(1) {
+            return Ok(None);
+        }
+
+        // Expand to per-slot limits and run the shared round transform
+        // (share cap off, no config minimum) — the single home of the
+        // capacity/lower math, so the capped instance obeys exactly the
+        // invariants every solver already assumes.
+        let n = self.energy.n_devices();
+        let mut raw_caps = vec![0usize; n];
+        let mut intrinsic = vec![0usize; n];
+        for (c, class) in classes.iter().enumerate() {
+            for &s in &class.members {
+                raw_caps[s] = class_caps[c];
+                intrinsic[s] = class.lower;
+            }
+        }
+        let p = RoundParams { tasks: t_req, min_tasks: 0, max_share: 1.0 };
+        let mut relaxed = false;
+        let (t_eff, low_eff, up_eff) =
+            effective_limits(&p, &intrinsic, &raw_caps, &mut relaxed);
+        debug_assert_eq!(t_eff, t_req, "capacity was pre-checked above");
+        debug_assert!(!relaxed, "class caps never fall below class lowers");
+
+        // Re-deduplicate: a tight τ can clip distinct uppers to one cap,
+        // fusing formerly-distinct classes. Probe the shared ClassTable
+        // in first-occurrence class order (first members ascend, so the
+        // canonical order invariant holds) and sort merged member lists.
+        let mut table = ClassTable::with_capacity(classes.len());
+        for class in classes {
+            let first = class.members[0];
+            let ci = table.class_index(&class.cost, low_eff[first], up_eff[first]);
+            table.classes[ci].members.extend_from_slice(&class.members);
+        }
+        let mut merged = table.into_classes();
+        for class in &mut merged {
+            class.members.sort_unstable();
+        }
+        Ok(Some(FleetInstance::from_classes(t_eff, merged)?))
+    }
+
+    /// Energy-minimal schedule subject to `makespan <= tau`, solved by
+    /// `algo` resolved through `registry`. `auto` (when not overridden)
+    /// picks the Table-2 algorithm for the **capped** instance — capping
+    /// restricts domains, so its regime can differ from the uncapped
+    /// fleet's. Returns `Ok(None)` when the cap is infeasible.
+    pub fn solve_constrained(
+        &self,
+        registry: &SolverRegistry,
+        algo: &str,
+        tau: f64,
+    ) -> Result<Option<ParetoPoint>> {
+        let Some(capped) = self.capped_fleet(tau)? else {
+            return Ok(None);
+        };
+        let canonical = registry.resolve(algo)?.name();
+        let effective = if canonical == "auto" && !registry.is_overridden("auto") {
+            best_algorithm(&classify_fleet(&capped))
+        } else {
+            canonical
+        };
+        let assignment = registry.solve_fleet(effective, &capped)?;
+        let schedule = assignment.expand(&capped);
+        // Capped classes keep the original cost functions (only limits
+        // changed), so the class-level total is the exact energy.
+        let energy = assignment.total_cost(&capped);
+        let makespan = self.makespan(&schedule);
+        Ok(Some(ParetoPoint { schedule, assignment, energy, makespan, solver: effective }))
+    }
+
+    /// The energy/makespan Pareto front under `algo`: sweep candidate
+    /// makespans tightest → loosest, keep strict energy improvements,
+    /// filter residual dominated points, sort by makespan ascending.
+    ///
+    /// With an optimal solver the result is the exact front; with a
+    /// heuristic it is that heuristic's achievable front (still mutually
+    /// non-dominated).
+    pub fn pareto_front(
+        &self,
+        registry: &SolverRegistry,
+        algo: &str,
+    ) -> Result<Vec<ParetoPoint>> {
         let mut points: Vec<ParetoPoint> = Vec::new();
         let mut best_energy = f64::INFINITY;
-        // Scan caps from tightest to loosest; energy is non-increasing in τ,
-        // so a point enters the front iff it strictly improves energy.
-        for &tau in candidates.iter() {
-            if let Some(p) = self.solve_constrained(tau)? {
+        // Energy is non-increasing in τ, so a point enters the front iff
+        // it strictly improves energy.
+        for &tau in self.candidate_makespans().iter() {
+            if let Some(p) = self.solve_constrained(registry, algo, tau)? {
                 if p.energy < best_energy - 1e-12 {
                     best_energy = p.energy;
                     points.push(p);
                 }
             }
         }
-        // Filter any residual dominated points (defensive; candidates with
-        // equal makespan can slip in out of order).
+        // Filter any residual dominated points (defensive; heuristic
+        // solvers need not be monotone in τ).
         let mut front: Vec<ParetoPoint> = Vec::new();
         for p in points {
             front.retain(|q| !(p.makespan <= q.makespan && p.energy <= q.energy));
@@ -140,47 +370,131 @@ impl BiInstance {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::baselines;
+    use crate::sched::{baselines, mc2mkp, validate};
     use crate::util::rng::Rng;
 
     /// Fleet where fast devices are energy-hungry (a real trade-off).
-    fn tradeoff_instance(n: usize, t: usize, seed: u64) -> BiInstance {
+    /// Random parameters make every device its own class (`k = n`).
+    fn tradeoff(n: usize, t: usize, seed: u64) -> BiFleet {
         let mut rng = Rng::new(seed);
         let mut costs = Vec::new();
-        let mut time = Vec::new();
+        let mut models = Vec::new();
         for _ in 0..n {
             let speed = rng.range_f64(0.1, 2.0); // s per task
             // faster → more power-hungry (superlinear coupling)
             let energy_per_task = 2.0 / speed * rng.range_f64(0.8, 1.2);
             costs.push(CostFn::Affine { fixed: 0.0, per_task: energy_per_task });
-            time.push(CostFn::Affine { fixed: 0.0, per_task: speed });
+            models.push(TimeModel::affine(speed, 0.0));
         }
         let energy = Instance::new(t, vec![0; n], vec![t; n], costs).unwrap();
-        BiInstance { energy, time }
+        BiFleet::from_flat(&energy, &models).unwrap()
+    }
+
+    fn registry() -> SolverRegistry {
+        SolverRegistry::with_defaults(7)
+    }
+
+    #[test]
+    fn time_model_seconds_and_binary_search() {
+        let tm = TimeModel::affine(0.5, 2.0);
+        assert_eq!(tm.seconds(0), 0.0);
+        assert!((tm.seconds(1) - 2.5).abs() < 1e-12);
+        assert!((tm.seconds(10) - 7.0).abs() < 1e-12);
+        // 2 + 0.5j <= 6  ⇔  j <= 8
+        assert_eq!(tm.max_tasks_within(6.0, 0, 20), Some(8));
+        assert_eq!(tm.max_tasks_within(6.0, 0, 5), Some(5));
+        assert_eq!(tm.max_tasks_within(f64::INFINITY, 0, 20), Some(20));
+        // floor = 3 needs 3.5 s: a 3 s cap is infeasible, 0 tasks is not
+        // an option below the floor.
+        assert_eq!(tm.max_tasks_within(3.0, 3, 20), None);
+        // j = 0 is free, so a zero cap still admits sitting out.
+        assert_eq!(tm.max_tasks_within(0.0, 0, 20), Some(0));
+        // Saturating domain edge.
+        assert_eq!(
+            tm.max_tasks_within(f64::INFINITY, 0, usize::MAX),
+            Some(usize::MAX)
+        );
+    }
+
+    #[test]
+    fn time_model_tabulated_is_domain_clamped() {
+        let tm = TimeModel::from_cost(CostFn::from_table(&[
+            (0, 0.0),
+            (1, 1.0),
+            (2, 4.0),
+        ]));
+        assert_eq!(tm.seconds(2), 4.0);
+        // Probes past the table clamp to the last entry, so the binary
+        // search over a larger ceiling cannot panic.
+        assert_eq!(tm.seconds(50), 4.0);
+        assert_eq!(tm.max_tasks_within(3.9, 0, 10), Some(1));
+    }
+
+    #[test]
+    fn bifleet_rejects_mismatched_and_nonmonotone_models() {
+        let energy = Instance::new(
+            6,
+            vec![0, 0],
+            vec![6, 6],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+            ],
+        )
+        .unwrap();
+        // One class, two disagreeing device models → rejected.
+        let disagree =
+            vec![TimeModel::affine(1.0, 0.0), TimeModel::affine(2.0, 0.0)];
+        assert!(BiFleet::from_flat(&energy, &disagree).is_err());
+        // Non-monotone tabulated time → rejected.
+        let fleet = FleetInstance::from_flat(&energy).unwrap();
+        let shrinking = TimeModel::from_cost(CostFn::from_table(&[
+            (0, 0.0),
+            (1, 5.0),
+            (2, 1.0),
+            (3, 1.5),
+            (4, 2.0),
+            (5, 2.5),
+            (6, 3.0),
+        ]));
+        assert!(BiFleet::new(fleet.clone(), vec![shrinking]).is_err());
+        // Wrong arity → rejected.
+        assert!(BiFleet::new(fleet, vec![]).is_err());
     }
 
     #[test]
     fn front_is_nondominated_and_sorted() {
-        let bi = tradeoff_instance(4, 30, 1);
-        let front = bi.pareto_front().unwrap();
+        let bi = tradeoff(4, 30, 1);
+        let flat = bi.energy().to_flat();
+        let front = bi.pareto_front(&registry(), "mc2mkp").unwrap();
         assert!(!front.is_empty());
         for w in front.windows(2) {
             assert!(w[0].makespan < w[1].makespan);
             assert!(w[0].energy > w[1].energy, "energy must strictly improve");
         }
         for p in &front {
-            validate::check(&bi.energy, &p.schedule).unwrap();
+            validate::check(&flat, &p.schedule).unwrap();
+            assert_eq!(p.solver, "mc2mkp");
         }
     }
 
     #[test]
     fn loosest_point_matches_unconstrained_energy_optimum() {
-        let bi = tradeoff_instance(4, 30, 2);
-        let front = bi.pareto_front().unwrap();
-        let unconstrained = mc2mkp::solve(&bi.energy).unwrap();
-        let e_opt = validate::total_cost(&bi.energy, &unconstrained);
+        let bi = tradeoff(4, 30, 2);
+        let reg = registry();
+        let front = bi.pareto_front(&reg, "mc2mkp").unwrap();
+        let unconstrained = mc2mkp::solve(&bi.energy().to_flat()).unwrap();
+        let e_opt = validate::total_cost(&bi.energy().to_flat(), &unconstrained);
         let last = front.last().unwrap();
         assert!((last.energy - e_opt).abs() < 1e-9);
+        // Bit-for-bit: the loosest front point is the τ = ∞ solve through
+        // the identical pipeline.
+        let inf = bi
+            .solve_constrained(&reg, "mc2mkp", f64::INFINITY)
+            .unwrap()
+            .unwrap();
+        assert_eq!(last.energy.to_bits(), inf.energy.to_bits());
+        assert_eq!(last.schedule, inf.schedule);
     }
 
     #[test]
@@ -188,40 +502,112 @@ mod tests {
         // OLAR greedily minimizes max cost; with time as the cost it gives
         // a (near-)minimal makespan. The front's tightest point must be at
         // least as good.
-        let bi = tradeoff_instance(4, 30, 3);
+        let bi = tradeoff(4, 30, 3);
+        let flat = bi.energy().to_flat();
+        let time_costs: Vec<CostFn> = (0..flat.n())
+            .map(|i| bi.times()[bi.energy().class_of(i)].cost().clone())
+            .collect();
         let time_inst = Instance {
-            tasks: bi.energy.tasks,
-            lower: bi.energy.lower.clone(),
-            upper: bi.energy.upper.clone(),
-            costs: bi.time.clone(),
+            tasks: flat.tasks,
+            lower: flat.lower.clone(),
+            upper: flat.upper.clone(),
+            costs: time_costs,
         };
         let olar = baselines::olar(&time_inst).unwrap();
         let olar_ms = bi.makespan(&olar);
-        let front = bi.pareto_front().unwrap();
+        let front = bi.pareto_front(&registry(), "mc2mkp").unwrap();
         assert!(front[0].makespan <= olar_ms + 1e-9);
     }
 
     #[test]
     fn constrained_solve_respects_cap() {
-        let bi = tradeoff_instance(5, 40, 4);
-        let front = bi.pareto_front().unwrap();
+        let bi = tradeoff(5, 40, 4);
+        let reg = registry();
+        let front = bi.pareto_front(&reg, "mc2mkp").unwrap();
         let mid = &front[front.len() / 2];
-        let p = bi.solve_constrained(mid.makespan).unwrap().unwrap();
+        let p = bi
+            .solve_constrained(&reg, "mc2mkp", mid.makespan)
+            .unwrap()
+            .unwrap();
         assert!(p.makespan <= mid.makespan + 1e-9);
         assert!((p.energy - mid.energy).abs() < 1e-9);
     }
 
     #[test]
     fn infeasible_cap_returns_none() {
-        let bi = tradeoff_instance(3, 30, 5);
-        assert!(bi.solve_constrained(1e-6).unwrap().is_none());
+        let bi = tradeoff(3, 30, 5);
+        let reg = registry();
+        assert!(bi.solve_constrained(&reg, "mc2mkp", 1e-6).unwrap().is_none());
+        // A lower limit that alone busts the cap is infeasible too.
+        let energy = Instance::new(
+            6,
+            vec![3, 0],
+            vec![6, 6],
+            vec![
+                CostFn::Affine { fixed: 0.0, per_task: 1.0 },
+                CostFn::Affine { fixed: 0.0, per_task: 2.0 },
+            ],
+        )
+        .unwrap();
+        let models = vec![TimeModel::affine(1.0, 0.0), TimeModel::affine(1.0, 0.0)];
+        let floored = BiFleet::from_flat(&energy, &models).unwrap();
+        assert!(floored.solve_constrained(&reg, "auto", 2.0).unwrap().is_none());
+        assert!(floored.solve_constrained(&reg, "auto", 4.0).unwrap().is_some());
     }
 
     #[test]
     fn single_resource_front_is_single_point() {
-        let bi = tradeoff_instance(1, 10, 6);
-        let front = bi.pareto_front().unwrap();
+        let bi = tradeoff(1, 10, 6);
+        let front = bi.pareto_front(&registry(), "mc2mkp").unwrap();
         assert_eq!(front.len(), 1);
         assert_eq!(front[0].schedule.assignments(), &[10]);
+    }
+
+    #[test]
+    fn tight_cap_fuses_classes_through_the_shared_dedup() {
+        // Two classes, same cost/lower, uppers 10 vs 8: a τ that clips
+        // both to 6 fuses them into one class through ClassTable — and
+        // the fused instance still expands to a valid schedule.
+        let cost = CostFn::Affine { fixed: 0.0, per_task: 1.0 };
+        let energy = Instance::new(
+            20,
+            vec![0; 4],
+            vec![10, 10, 8, 8],
+            vec![cost.clone(), cost.clone(), cost.clone(), cost],
+        )
+        .unwrap();
+        let models = vec![TimeModel::affine(1.0, 0.0); 4];
+        let bi = BiFleet::from_flat(&energy, &models).unwrap();
+        assert_eq!(bi.energy().n_classes(), 2);
+        let capped = bi.capped_fleet(6.0).unwrap().unwrap();
+        assert_eq!(capped.n_classes(), 1, "equal caps must fuse the classes");
+        assert_eq!(capped.classes()[0].upper, 6);
+        assert_eq!(capped.classes()[0].members, vec![0, 1, 2, 3]);
+        let p = bi.solve_constrained(&registry(), "auto", 6.0).unwrap().unwrap();
+        validate::check(&energy, &p.schedule).unwrap();
+        assert!(p.makespan <= 6.0 + 1e-9);
+        assert_eq!(p.schedule.assignments().iter().sum::<usize>(), 20);
+    }
+
+    #[test]
+    fn any_registered_solver_solves_the_capped_instance() {
+        // The ε-constrained instance goes through the registry, so
+        // heuristics work too: schedules stay feasible and within τ.
+        let bi = tradeoff(4, 24, 8);
+        let flat = bi.energy().to_flat();
+        let reg = registry();
+        let tau = bi.candidate_makespans()[12];
+        for name in ["uniform", "greedy", "olar", "proportional", "auto"] {
+            let p = bi
+                .solve_constrained(&reg, name, tau)
+                .unwrap()
+                .unwrap_or_else(|| panic!("{name} found τ = {tau} infeasible"));
+            validate::check(&flat, &p.schedule)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(p.makespan <= tau + 1e-9, "{name} broke the cap");
+        }
+        // auto records the dispatched algorithm, not "auto" itself.
+        let p = bi.solve_constrained(&reg, "auto", tau).unwrap().unwrap();
+        assert_ne!(p.solver, "auto");
     }
 }

@@ -16,7 +16,9 @@
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::{CoordinatorConfig, IncrementalConfig, ManagedDevice, PipelineConfig};
+use crate::coordinator::{
+    CoordinatorConfig, DeadlineConfig, IncrementalConfig, ManagedDevice, PipelineConfig,
+};
 use crate::energy::battery::Battery;
 use crate::energy::power::{Behavior, PowerModel};
 use crate::error::{FedError, Result};
@@ -259,6 +261,9 @@ pub fn device_from_json(v: &Json) -> Result<ManagedDevice> {
         battery,
         power,
         drift: get_f64(v, "drift")?,
+        // Not persisted: Coordinator::new re-derives it from the decoded
+        // config's deadline on restore.
+        deadline_cap: usize::MAX,
     })
 }
 
@@ -431,7 +436,7 @@ pub fn cfg_to_json(cfg: &CoordinatorConfig) -> Json {
         Some(t) => jf(t),
         None => Json::Null,
     };
-    Json::obj(vec![
+    let mut fields = vec![
         ("rounds", Json::Num(cfg.rounds as f64)),
         ("tasks_per_round", Json::Num(cfg.tasks_per_round as f64)),
         ("algo", Json::Str(cfg.algo.clone())),
@@ -443,7 +448,13 @@ pub fn cfg_to_json(cfg: &CoordinatorConfig) -> Json {
         ("shards", Json::Num(cfg.shards as f64)),
         ("pipeline", Json::Bool(cfg.pipeline.enabled)),
         ("incremental", Json::Bool(cfg.incremental.enabled)),
-    ])
+    ];
+    // Only emitted when enabled, so deadline-free stores stay
+    // byte-identical to pre-deadline ones.
+    if cfg.deadline.enabled {
+        fields.push(("deadline_s", jf(cfg.deadline.seconds)));
+    }
+    Json::obj(fields)
 }
 
 /// Decode [`cfg_to_json`].
@@ -484,6 +495,11 @@ pub fn cfg_from_json(v: &Json) -> Result<CoordinatorConfig> {
                 }
             }
             _ => IncrementalConfig::off(),
+        },
+        // Absent (incl. pre-deadline stores): unconstrained rounds.
+        deadline: match v.get("deadline_s") {
+            Some(s) => DeadlineConfig::on(as_f64(s, "deadline_s")?),
+            None => DeadlineConfig::off(),
         },
     })
 }
@@ -567,6 +583,7 @@ mod tests {
                 curvature: 0.07,
             }),
             drift: 1.31,
+            deadline_cap: usize::MAX,
         };
         for d in [abstract_dev, powered] {
             let back = device_from_json(&roundtrip(&device_to_json(&d))).unwrap();
@@ -642,6 +659,7 @@ mod tests {
             shards: 8,
             pipeline: PipelineConfig::on(),
             incremental: IncrementalConfig::on(),
+            deadline: DeadlineConfig::on(12.5),
         };
         let cb = cfg_from_json(&roundtrip(&cfg_to_json(&cfg))).unwrap();
         assert_eq!(cb.rounds, cfg.rounds);
@@ -652,18 +670,27 @@ mod tests {
         assert_eq!(cb.shards, 8);
         assert!(cb.pipeline.enabled, "pipeline knob must round-trip");
         assert!(cb.incremental.enabled, "incremental knob must round-trip");
-        // Pre-shard / pre-pipeline / pre-incremental stores (missing
-        // keys) default to the direct build path, the serial loop, and
-        // from-scratch instance builds.
+        assert!(cb.deadline.enabled, "deadline knob must round-trip");
+        assert_eq!(cb.deadline.seconds.to_bits(), 12.5f64.to_bits());
+        // Pre-shard / pre-pipeline / pre-incremental / pre-deadline
+        // stores (missing keys) default to the direct build path, the
+        // serial loop, from-scratch instance builds, and unconstrained
+        // rounds.
         let mut legacy = cfg_to_json(&cfg);
         if let Json::Obj(fields) = &mut legacy {
             fields.remove("shards");
             fields.remove("pipeline");
             fields.remove("incremental");
+            fields.remove("deadline_s");
         }
         let lb = cfg_from_json(&roundtrip(&legacy)).unwrap();
         assert_eq!(lb.shards, 1);
         assert!(!lb.pipeline.enabled);
         assert!(!lb.incremental.enabled);
+        assert!(!lb.deadline.enabled);
+        // A deadline-free config emits no key at all (byte-compatible
+        // with pre-deadline stores).
+        let off = CoordinatorConfig { deadline: DeadlineConfig::off(), ..cfg };
+        assert!(!cfg_to_json(&off).to_string().contains("deadline_s"));
     }
 }

@@ -28,10 +28,12 @@
 //! tolerance for class-aware cores), and (d) errors have parity — a path
 //! that rejects an instance must be rejected by every path.
 
+use crate::sched::bruteforce;
 use crate::sched::costs::CostFn;
 use crate::sched::fleet::FleetInstance;
 use crate::sched::incremental::{from_scratch_round, FleetIndex, RoundParams};
-use crate::sched::instance::Instance;
+use crate::sched::instance::{Instance, Schedule};
+use crate::sched::pareto::TimeModel;
 use crate::sched::shard;
 use crate::sched::solver::{Solver as _, SolverRegistry};
 use crate::sched::validate;
@@ -712,6 +714,96 @@ pub fn check_incremental_churn(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Bi-objective (energy × time) axis: per-class time models and the
+// deadline-constrained bruteforce oracle the pareto differential suite
+// keys on.
+// ---------------------------------------------------------------------------
+
+/// Shape of a generated per-class completion-time model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeShape {
+    /// Affine: fixed upload window plus constant seconds per task.
+    Affine,
+    /// Tabulated monotone table (random positive increments) — exercises
+    /// the non-affine branch of the cap binary search.
+    Tabulated,
+}
+
+/// All time-model shapes, scenario-sweep order.
+pub const ALL_TIME_SHAPES: [TimeShape; 2] = [TimeShape::Affine, TimeShape::Tabulated];
+
+/// Sample one time model per device such that devices in the same
+/// scheduling class (equal `(cost, lower, upper)` signature) share a
+/// model — the invariant [`crate::sched::pareto::BiFleet::from_flat`]
+/// enforces. Deterministic in `(inst, shape, seed)`.
+pub fn sample_time_models(inst: &Instance, shape: TimeShape, seed: u64) -> Vec<TimeModel> {
+    let fleet = FleetInstance::from_flat(inst)
+        .expect("sample_time_models requires a valid instance");
+    let mut slots: Vec<Option<TimeModel>> = vec![None; inst.costs.len()];
+    for (c, class) in fleet.classes().iter().enumerate() {
+        let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let model = match shape {
+            TimeShape::Affine => {
+                TimeModel::affine(rng.range_f64(0.05, 1.5), rng.range_f64(0.0, 3.0))
+            }
+            TimeShape::Tabulated => {
+                let cap = class.upper.min(inst.tasks);
+                let mut values = Vec::with_capacity(cap + 1);
+                values.push(0.0);
+                let mut total = 0.0;
+                for _ in 1..=cap {
+                    total += rng.range_f64(0.05, 1.0);
+                    values.push(total);
+                }
+                TimeModel::from_cost(CostFn::Tabulated { first: 0, values })
+            }
+        };
+        for &slot in &class.members {
+            slots[slot] = Some(model.clone());
+        }
+    }
+    slots
+        .into_iter()
+        .map(|m| m.expect("every slot belongs to a class"))
+        .collect()
+}
+
+/// Deadline-constrained reference: cap every device at the largest load
+/// finishing within `tau` (linear scan — no binary search to share bugs
+/// with), then exhaustively solve the capped instance. Returns the
+/// optimal schedule and its energy on the *original* costs, or `None`
+/// when no feasible schedule meets the deadline. Exponential — keep
+/// `n`/`T` tiny.
+pub fn constrained_bruteforce(
+    inst: &Instance,
+    times: &[TimeModel],
+    tau: f64,
+) -> Option<(Schedule, f64)> {
+    let n = inst.costs.len();
+    let mut upper = Vec::with_capacity(n);
+    let mut room = 0usize;
+    for i in 0..n {
+        if times[i].seconds(inst.lower[i]) > tau {
+            return None; // forced minimum already busts the deadline
+        }
+        let mut u = inst.lower[i];
+        while u < inst.cap(i) && times[i].seconds(u + 1) <= tau {
+            u += 1;
+        }
+        upper.push(u);
+        room = room.saturating_add(u);
+    }
+    if room < inst.tasks.max(1) {
+        return None;
+    }
+    let capped =
+        Instance::new(inst.tasks, inst.lower.clone(), upper, inst.costs.clone()).ok()?;
+    let sched = bruteforce::solve(&capped).ok()?;
+    let energy = validate::total_cost(inst, &sched);
+    Some((sched, energy))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -961,5 +1053,42 @@ mod tests {
             min_tasks: 1,
         };
         check_incremental_churn(&case, "auto").unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    #[test]
+    fn time_models_are_class_consistent_and_oracle_respects_caps() {
+        let case = Case {
+            seed: 0x71AE,
+            family: Family::Affine,
+            limits: LimitPattern::Both,
+            dup: DupShape::Random,
+            distinct: 3,
+            max_dup: 2,
+            t: 8,
+        };
+        let inst = case.build();
+        let fleet = FleetInstance::from_flat(&inst).unwrap();
+        for &shape in &ALL_TIME_SHAPES {
+            let times = sample_time_models(&inst, shape, 0xBEEF);
+            assert_eq!(times.len(), inst.costs.len());
+            // Same class → identical model (the BiFleet::from_flat invariant).
+            for class in fleet.classes() {
+                let first = &times[class.members[0]];
+                for &m in &class.members {
+                    assert_eq!(&times[m], first, "{shape:?}: class model split");
+                }
+            }
+            // A huge deadline constrains nothing: the oracle must find a
+            // feasible schedule whose per-device completion times all fit.
+            let (sched, energy) =
+                constrained_bruteforce(&inst, &times, 1e9).expect("loose tau feasible");
+            validate::check(&inst, &sched).unwrap();
+            assert!((energy - validate::total_cost(&inst, &sched)).abs() < 1e-12);
+            for (i, &x) in sched.assignments().iter().enumerate() {
+                assert!(times[i].seconds(x) <= 1e9);
+            }
+            // An impossible deadline is an explicit None, not a bogus schedule.
+            assert!(constrained_bruteforce(&inst, &times, -1.0).is_none());
+        }
     }
 }

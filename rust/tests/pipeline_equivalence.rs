@@ -193,6 +193,7 @@ fn dynamic_fleet() -> Vec<ManagedDevice> {
             }),
             power: Some(power),
             drift: 1.0,
+            deadline_cap: usize::MAX,
         },
     ]
 }

@@ -71,6 +71,7 @@ fn fleet() -> Vec<ManagedDevice> {
             }),
             power: Some(power),
             drift: 1.0,
+            deadline_cap: usize::MAX,
         },
     ]
 }

@@ -14,7 +14,7 @@ idents = ["Tracer", "span_at"]
 
 [r2]
 modules = ["r2_violation.rs", "clean.rs"]
-idents = ["lower", "upper", "tasks", "sum_l"]
+idents = ["lower", "upper", "tasks", "sum_l", "lo_ok", "hi_bad"]
 
 [r3]
 modules = ["r3_violation.rs", "clean.rs"]
@@ -53,6 +53,7 @@ fn every_rule_fires_exactly_where_seeded() {
         ("R1", "r1_violation.rs", 19),
         ("R2", "r2_violation.rs", 4),
         ("R2", "r2_violation.rs", 8),
+        ("R2", "r2_violation.rs", 16),
         ("R3", "r3_violation.rs", 4),
         ("R3", "r3_violation.rs", 8),
         ("R3", "r3_violation.rs", 12),
@@ -81,6 +82,7 @@ fn checks_name_the_violation_family() {
     assert_eq!(find("r1_violation.rs", 18), "telemetry-leak");
     assert_eq!(find("r1_violation.rs", 19), "telemetry-leak");
     assert_eq!(find("r2_violation.rs", 4), "raw-capacity-arith");
+    assert_eq!(find("r2_violation.rs", 16), "raw-capacity-arith");
     assert_eq!(find("r3_violation.rs", 4), "unwrap");
     assert_eq!(find("r3_violation.rs", 12), "panic-macro");
     assert_eq!(find("r4_solvers.rs", 12), "unclassified-solver");
@@ -103,7 +105,7 @@ fn json_schema_is_stable() {
     assert!(json.starts_with(head), "schema header changed: {json}");
     let keys = ["\"rule\":", "\"check\":", "\"file\":", "\"line\":", "\"snippet\":", "\"message\":"];
     for key in keys {
-        assert_eq!(json.matches(key).count(), 18, "{key} must appear once per violation");
+        assert_eq!(json.matches(key).count(), 19, "{key} must appear once per violation");
     }
     assert!(json.trim_end().ends_with("]}"));
 }

@@ -12,6 +12,10 @@ pub fn fine(upper: usize, lower: usize) -> usize {
     upper.saturating_sub(lower)
 }
 
+pub fn cap_search(lo_ok: usize, hi_bad: usize) -> usize {
+    lo_ok + (hi_bad - lo_ok) / 2
+}
+
 #[cfg(test)]
 mod tests {
     #[test]
