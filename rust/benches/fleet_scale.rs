@@ -49,6 +49,16 @@
 //! **≥ 5×**, enforced on smoke and full alike (both legs are
 //! single-thread CPU work).
 //!
+//! A sixth scenario drives the **networked coordinator service**: the
+//! same stored campaign twice — once in-process (`SimBackend`), once
+//! served over the loopback transport to a simulated client fleet of
+//! `n` devices (10⁵ smoke / 10⁶ full) with injected connection churn —
+//! and asserts the two journals carry the *same campaign digest*. The
+//! wire bound rides along: the largest schedule-slice frame must stay
+//! under a fixed byte budget (the payload names one class and carries
+//! one class cost — O(classes), never O(devices)), and a straggler leg
+//! with forced deadline misses must still complete its rounds partially.
+//!
 //! `FEDZERO_BENCH_SMOKE=1` shrinks the sweep to `n = 10³` (solves),
 //! `n = 2·10⁵` (build and incremental), `n = 2·10⁴` (pipeline), and
 //! `n = 60` (pareto) with quick timing — the CI regression gate. Every gated ratio FAILS the
@@ -57,11 +67,18 @@
 //! too few cores to gate a parallelism ratio honestly), and smoke's
 //! pipeline floor is a looser 1.2× tripwire for the same reason.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use fedzero::benchkit::{bench, BenchConfig};
-use fedzero::coordinator::{Coordinator, CoordinatorConfig, ManagedDevice, SimBackend};
+use fedzero::coordinator::{
+    BackendState, Coordinator, CoordinatorConfig, ManagedDevice, RoundBackend,
+    SimBackend,
+};
 use fedzero::runtime::pool;
+use fedzero::store::journal::{campaign_digest, JournalEntry};
+use fedzero::store::{snapshot as snap, CampaignStore};
+use fedzero::svc::{loopback_service, ServiceConfig, SimClientsConfig};
 use fedzero::sched::costs::CostFn;
 use fedzero::sched::fleet::FleetInstance;
 use fedzero::sched::incremental::{from_scratch_round, FleetIndex, RoundParams};
@@ -117,6 +134,32 @@ fn build(algo: &str, n: usize, t: usize) -> (FleetInstance, Instance) {
     let fleet = b.build().expect("bench fleet valid");
     let flat = fleet.to_flat();
     (fleet, flat)
+}
+
+/// Drive one stored campaign to completion for the service scenario;
+/// returns the wall time, the journal, and the coordinator (for backend
+/// stats). Aborted rounds journal too, so the loop always terminates.
+fn run_stored_campaign<B: RoundBackend + BackendState>(
+    dir: &Path,
+    cfg: &CoordinatorConfig,
+    fleet: Vec<ManagedDevice>,
+    backend: B,
+) -> (Duration, Vec<JournalEntry>, Coordinator<B>) {
+    let _ = std::fs::remove_dir_all(dir);
+    let mut c = Coordinator::new(cfg.clone(), fleet, backend).unwrap();
+    let meta = Json::obj(vec![
+        ("snapshot_every", Json::Num(4.0)),
+        ("cfg", snap::cfg_to_json(cfg)),
+    ]);
+    let store = CampaignStore::create(dir, meta, c.snapshot_json()).unwrap();
+    c.attach_store(store).unwrap();
+    let t0 = Instant::now();
+    while c.rounds_run() < cfg.rounds {
+        let _ = c.round_stored();
+    }
+    let wall = t0.elapsed();
+    let entries = CampaignStore::read(dir).unwrap().entries;
+    (wall, entries, c)
 }
 
 fn main() {
@@ -568,13 +611,139 @@ fn main() {
     ]);
     par_table.print();
 
+    // ---- networked service: the round loop served over the wire ----------
+    //
+    // The same stored campaign twice: in-process SimBackend reference vs
+    // the loopback service driving a simulated client fleet (rendezvous,
+    // heartbeats, slice fetches, reports, injected post-report churn).
+    // The two journals must carry the same campaign digest — the
+    // tentpole equivalence at fleet scale. The slice-frame bound is the
+    // wire-cost claim: one class cost + four scalars per scheduled
+    // device, so the largest frame is constant in fleet size.
+    let svc_n: usize = if smoke { 100_000 } else { 1_000_000 };
+    let svc_rounds: usize = 3;
+    let svc_seed: u64 = 0x5EC5;
+    let svc_fleet = || -> Vec<ManagedDevice> {
+        let mut rng = Rng::new(0xC1A55);
+        let class_costs: Vec<CostFn> = (0..K)
+            .map(|_| CostFn::Quadratic {
+                fixed: rng.range_f64(0.0, 1.0),
+                a: rng.range_f64(0.005, 0.1),
+                b: rng.range_f64(0.5, 3.0),
+            })
+            .collect();
+        (0..svc_n)
+            .map(|i| {
+                ManagedDevice::abstract_resource(
+                    i,
+                    class_costs[i % K].clone(),
+                    0,
+                    8,
+                )
+            })
+            .collect()
+    };
+    let svc_cfg = CoordinatorConfig {
+        rounds: svc_rounds,
+        tasks_per_round: 2_000,
+        algo: "marin".into(),
+        participation: 1.0,
+        max_share: 1.0,
+        seed: svc_seed,
+        ..CoordinatorConfig::default()
+    };
+    let service = |churn: u32, miss: u32| {
+        loopback_service(
+            ServiceConfig::default(),
+            SimClientsConfig {
+                seed: svc_seed,
+                churn_permille: churn,
+                miss_permille: miss,
+                ..SimClientsConfig::default()
+            },
+            (0..svc_n).collect(),
+        )
+    };
+    let svc_tmp = std::env::temp_dir().join("fedzero_bench_service");
+    let (ref_wall, ref_entries, _) = run_stored_campaign(
+        &svc_tmp.join("reference"),
+        &svc_cfg,
+        svc_fleet(),
+        SimBackend::new(),
+    );
+    let (svc_wall, svc_entries, svc_coord) = run_stored_campaign(
+        &svc_tmp.join("loopback"),
+        &svc_cfg,
+        svc_fleet(),
+        service(250, 0),
+    );
+    assert_eq!(
+        campaign_digest(&ref_entries),
+        campaign_digest(&svc_entries),
+        "loopback campaign must journal the in-process reference bits"
+    );
+    let svc_rejoins = svc_coord.backend().stats().counter("svc_rejoins");
+    assert!(svc_rejoins > 0, "churn must actually fire at fleet scale");
+    let svc_frames = svc_coord.backend().stats().counter("svc_frames");
+    let (svc_up, svc_down) = svc_coord.backend().transport().bytes();
+    let slice_bytes = svc_coord.backend().max_slice_bytes();
+    // O(classes) wire bound: the largest slice frame carries one class
+    // cost and four scalars — a fixed byte budget no fleet size can
+    // breach (cross-checked against a small fleet in svc::tests).
+    const SLICE_BOUND: usize = 512;
+    let slice_pass = slice_bytes > 0 && slice_bytes <= SLICE_BOUND;
+
+    // Straggler leg: forced deadline misses make rounds partial; the
+    // campaign must still complete every round through the coordinator's
+    // existing abort/recosting paths.
+    let frag_cfg = CoordinatorConfig { rounds: 2, ..svc_cfg.clone() };
+    let (_, frag_entries, frag_coord) = run_stored_campaign(
+        &svc_tmp.join("stragglers"),
+        &frag_cfg,
+        svc_fleet(),
+        service(250, 100),
+    );
+    assert_eq!(
+        frag_entries.len(),
+        frag_cfg.rounds,
+        "straggler campaign must journal every round"
+    );
+    assert!(
+        frag_coord.backend().stats().counter("svc_stragglers") > 0,
+        "forced misses must produce stragglers"
+    );
+    let _ = std::fs::remove_dir_all(&svc_tmp);
+
+    let mut svc_table = Table::new(
+        &format!(
+            "NETWORKED SERVICE: loopback campaign vs in-process reference \
+             (n = {svc_n} clients, {svc_rounds} rounds, k = {K} classes)"
+        ),
+        &["mode", "wall", "wire frames", "bytes up/down", "max slice"],
+    );
+    svc_table.rows_str(vec![
+        "in-process".into(),
+        fmt_duration(ref_wall.as_secs_f64()),
+        "—".into(),
+        "—".into(),
+        "—".into(),
+    ]);
+    svc_table.rows_str(vec![
+        "loopback".into(),
+        fmt_duration(svc_wall.as_secs_f64()),
+        svc_frames.to_string(),
+        format!("{svc_up}/{svc_down}"),
+        format!("{slice_bytes} B"),
+    ]);
+    svc_table.print();
+
     // ---- machine-readable trajectory (BENCH_fleet_scale.json) ------------
     //
     // Schema-versioned: CI copies this file to the repo-root
     // BENCH_fleet_scale.json snapshot, so committed trajectories must
     // state which shape they carry. Bump SCHEMA_VERSION whenever a field
     // is added, removed, or re-meant.
-    const SCHEMA_VERSION: usize = 4;
+    const SCHEMA_VERSION: usize = 5;
     let solve_gate = if smoke { 2.0 } else { 10.0 };
     let build_gate = 3.0f64;
     let build_pass = build_speedup >= build_gate;
@@ -648,6 +817,23 @@ fn main() {
             ]),
         ),
         (
+            "service",
+            Json::obj(vec![
+                ("n", Json::Num(svc_n as f64)),
+                ("rounds", Json::Num(svc_rounds as f64)),
+                ("classes", Json::Num(K as f64)),
+                ("churn_permille", Json::Num(250.0)),
+                ("reference_s", Json::Num(ref_wall.as_secs_f64())),
+                ("loopback_s", Json::Num(svc_wall.as_secs_f64())),
+                ("frames", Json::Num(svc_frames as f64)),
+                ("bytes_up", Json::Num(svc_up as f64)),
+                ("bytes_down", Json::Num(svc_down as f64)),
+                ("rejoins", Json::Num(svc_rejoins as f64)),
+                ("max_slice_bytes", Json::Num(slice_bytes as f64)),
+                ("digest_match", Json::Bool(true)),
+            ]),
+        ),
+        (
             "gates",
             Json::obj(vec![
                 ("solve_worst_speedup", Json::Num(worst_marginal_speedup)),
@@ -661,6 +847,9 @@ fn main() {
                 ("incremental_pass", Json::Bool(incr_pass)),
                 ("pareto_gate", Json::Num(par_gate)),
                 ("pareto_pass", Json::Bool(par_pass)),
+                ("service_slice_bound", Json::Num(SLICE_BOUND as f64)),
+                ("service_slice_bytes", Json::Num(slice_bytes as f64)),
+                ("service_pass", Json::Bool(slice_pass)),
             ]),
         ),
     ]);
@@ -707,6 +896,11 @@ fn main() {
          DP at n = {par_n} — observed {par_speedup:.1}x ({})",
         if par_pass { "PASS" } else { "FAIL" }
     );
+    println!(
+        "acceptance: slice frames ≤ {SLICE_BOUND} B at n = {svc_n} clients \
+         (O(classes) wire payload) — observed {slice_bytes} B ({})",
+        if slice_pass { "PASS" } else { "FAIL" }
+    );
     assert!(
         worst_marginal_speedup >= solve_gate,
         "class-path speedup regressed below {solve_gate}x"
@@ -728,5 +922,10 @@ fn main() {
         par_pass,
         "class-level Pareto-front construction regressed below {par_gate}x \
          the flat per-τ DP baseline"
+    );
+    assert!(
+        slice_pass,
+        "schedule-slice frame grew past {SLICE_BOUND} bytes — the O(classes) \
+         wire-payload bound broke"
     );
 }

@@ -260,6 +260,25 @@ pub fn fedzero_app() -> App {
                     OptSpec { name: "trace", help: "write a Chrome Trace Event JSONL phase trace to this file (pure telemetry; campaigns are bit-for-bit identical with or without it)", takes_value: true, default: None },
                     OptSpec { name: "deadline", help: "per-round completion deadline in seconds (min energy s.t. makespan <= D; persisted with the campaign)", takes_value: true, default: None },
                     OptSpec { name: "objective", help: "cost unit to minimize: energy | carbon | money (carbon/money weight device costs by grid region)", takes_value: true, default: Some("energy") },
+                    OptSpec { name: "transport", help: "round delivery: inproc (direct backend call) | loopback (networked service over the in-memory wire; sim backend only)", takes_value: true, default: Some("inproc") },
+                    OptSpec { name: "svc-churn", help: "permille of (device, round) pairs that disconnect after reporting and rejoin (loopback transport; digest-neutral)", takes_value: true, default: Some("0") },
+                    OptSpec { name: "svc-miss", help: "permille of (device, round) pairs that never report (loopback transport; hard stragglers, partial rounds)", takes_value: true, default: Some("0") },
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "serve",
+                about: "run a storeless loopback service campaign and print protocol/registry stats",
+                opts: vec![
+                    OptSpec { name: "rounds", help: "number of FL rounds", takes_value: true, default: Some("8") },
+                    OptSpec { name: "devices", help: "fleet size (simulated clients)", takes_value: true, default: Some("64") },
+                    OptSpec { name: "tasks", help: "mini-batches per round (T)", takes_value: true, default: Some("128") },
+                    OptSpec { name: "seed", help: "RNG seed", takes_value: true, default: Some("7") },
+                    OptSpec { name: "algo", help: "scheduler policy (any registered solver name)", takes_value: true, default: Some("auto") },
+                    OptSpec { name: "svc-churn", help: "permille of (device, round) pairs that disconnect after reporting and rejoin", takes_value: true, default: Some("50") },
+                    OptSpec { name: "svc-miss", help: "permille of (device, round) pairs that never report", takes_value: true, default: Some("0") },
+                    OptSpec { name: "trace", help: "write a Chrome Trace Event JSONL service trace to this file", takes_value: true, default: None },
+                    OptSpec { name: "expose", help: "also print the service metrics hub in text exposition format", takes_value: false, default: None },
                 ],
                 positional: vec![],
             },
@@ -500,6 +519,44 @@ mod tests {
         assert_eq!(p.get_parse::<f64>("deadline").unwrap(), Some(30.0));
         assert_eq!(p.get("format"), Some("jsonl"));
         assert_eq!(p.get("out"), Some("/tmp/front.jsonl"));
+    }
+
+    #[test]
+    fn transport_flags_parse_on_train() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["train", "--backend", "sim"])).unwrap();
+        assert_eq!(p.get("transport"), Some("inproc"), "default transport");
+        assert_eq!(p.get_or::<u32>("svc-churn", 1).unwrap(), 0);
+        assert_eq!(p.get_or::<u32>("svc-miss", 1).unwrap(), 0);
+        let p = app
+            .parse(&args(&[
+                "train", "--backend", "sim", "--transport", "loopback",
+                "--svc-churn", "120", "--svc-miss=45",
+            ]))
+            .unwrap();
+        assert_eq!(p.get("transport"), Some("loopback"));
+        assert_eq!(p.get_explicit("transport"), Some("loopback"));
+        assert_eq!(p.get_or::<u32>("svc-churn", 0).unwrap(), 120);
+        assert_eq!(p.get_or::<u32>("svc-miss", 0).unwrap(), 45);
+    }
+
+    #[test]
+    fn serve_subcommand_parses() {
+        let app = fedzero_app();
+        let p = app.parse(&args(&["serve"])).unwrap();
+        assert_eq!(p.command, "serve");
+        assert_eq!(p.get_or::<usize>("rounds", 0).unwrap(), 8);
+        assert_eq!(p.get_or::<usize>("devices", 0).unwrap(), 64);
+        assert_eq!(p.get_or::<u32>("svc-churn", 0).unwrap(), 50);
+        assert!(!p.flag("expose"));
+        let p = app
+            .parse(&args(&[
+                "serve", "--devices", "100000", "--svc-miss", "10", "--expose",
+            ]))
+            .unwrap();
+        assert_eq!(p.get_or::<usize>("devices", 0).unwrap(), 100_000);
+        assert_eq!(p.get_or::<u32>("svc-miss", 0).unwrap(), 10);
+        assert!(p.flag("expose"));
     }
 
     #[test]

@@ -112,92 +112,137 @@ impl Phase {
     }
 }
 
-/// Round-pipelining knob (see the module docs): overlap round `r + 1`'s
-/// Scheduling with round `r`'s Training. Off by default — pipelining is
-/// pure overlap (results are bit-for-bit identical either way), but the
-/// serial loop stays the reference the equivalence suite compares
-/// against.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct PipelineConfig {
-    /// Run the speculative round driver.
-    pub enabled: bool,
+/// The one idiom behind every coordinator feature toggle. A knob is a
+/// small `Copy` struct with an `enabled` flag, `on`/`off` constructors,
+/// and a conversion impl: `From<bool>` for payload-free knobs,
+/// `From<Option<payload>>` (its payload analogue — `Some` enables, `None`
+/// disables) for knobs whose "on" state carries a value. Generating the
+/// trio from one macro is what keeps the surfaces from drifting apart
+/// again: the hand-written copies this replaces had grown three subtly
+/// different shapes, and only one of them its `From` impl.
+macro_rules! toggle_config {
+    // Payload-free knob: `on()` / `off()` / `From<bool>`.
+    (
+        $(#[$doc:meta])*
+        $name:ident {
+            $(#[$edoc:meta])*
+            enabled
+        }
+    ) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+        pub struct $name {
+            $(#[$edoc])*
+            pub enabled: bool,
+        }
+
+        impl $name {
+            #[doc = concat!("`", stringify!($name), "` enabled.")]
+            pub fn on() -> Self {
+                Self { enabled: true }
+            }
+
+            #[doc = concat!("`", stringify!($name), "` disabled (the default).")]
+            pub fn off() -> Self {
+                Self { enabled: false }
+            }
+        }
+
+        impl From<bool> for $name {
+            fn from(enabled: bool) -> Self {
+                Self { enabled }
+            }
+        }
+    };
+    // Payload-carrying knob: `on(payload)` / `off()` /
+    // `From<Option<payload>>`. (No `Eq`: payloads may be floats.)
+    (
+        $(#[$doc:meta])*
+        $name:ident {
+            $(#[$edoc:meta])*
+            enabled,
+            $(#[$fdoc:meta])*
+            $field:ident: $fty:ty
+        }
+    ) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, Debug, Default, PartialEq)]
+        pub struct $name {
+            $(#[$edoc])*
+            pub enabled: bool,
+            $(#[$fdoc])*
+            pub $field: $fty,
+        }
+
+        impl $name {
+            #[doc = concat!(
+                "`", stringify!($name), "` enabled with the given `",
+                stringify!($field), "`."
+            )]
+            pub fn on($field: $fty) -> Self {
+                Self { enabled: true, $field }
+            }
+
+            #[doc = concat!("`", stringify!($name), "` disabled (the default).")]
+            pub fn off() -> Self {
+                Self::default()
+            }
+        }
+
+        impl From<Option<$fty>> for $name {
+            fn from(payload: Option<$fty>) -> Self {
+                match payload {
+                    Some($field) => Self::on($field),
+                    None => Self::off(),
+                }
+            }
+        }
+    };
 }
 
-impl PipelineConfig {
-    /// Pipelining on.
-    pub fn on() -> Self {
-        Self { enabled: true }
-    }
-
-    /// Pipelining off (the default).
-    pub fn off() -> Self {
-        Self { enabled: false }
-    }
-}
-
-impl From<bool> for PipelineConfig {
-    fn from(enabled: bool) -> Self {
-        Self { enabled }
+toggle_config! {
+    /// Round-pipelining knob (see the module docs): overlap round
+    /// `r + 1`'s Scheduling with round `r`'s Training. Off by default —
+    /// pipelining is pure overlap (results are bit-for-bit identical
+    /// either way), but the serial loop stays the reference the
+    /// equivalence suite compares against.
+    PipelineConfig {
+        /// Run the speculative round driver.
+        enabled
     }
 }
 
-/// Incremental round re-derivation knob: keep a persistent device→class
-/// index ([`FleetIndex`]) alive across rounds and re-classify only the
-/// devices Recosting actually touched, instead of re-bucketing all `n`
-/// devices every Scheduling phase. Off by default — like `shards` and
-/// `pipeline` it is a pure wall-clock knob (journals, digests, and RNG
-/// streams are bit-for-bit identical on or off), but the from-scratch
-/// build stays the reference the equivalence suite compares against.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct IncrementalConfig {
-    /// Maintain the persistent class index.
-    pub enabled: bool,
-}
-
-impl IncrementalConfig {
-    /// Incremental re-derivation on.
-    pub fn on() -> Self {
-        Self { enabled: true }
-    }
-
-    /// Incremental re-derivation off (the default).
-    pub fn off() -> Self {
-        Self { enabled: false }
+toggle_config! {
+    /// Incremental round re-derivation knob: keep a persistent
+    /// device→class index ([`FleetIndex`]) alive across rounds and
+    /// re-classify only the devices Recosting actually touched, instead
+    /// of re-bucketing all `n` devices every Scheduling phase. Off by
+    /// default — like `shards` and `pipeline` it is a pure wall-clock
+    /// knob (journals, digests, and RNG streams are bit-for-bit
+    /// identical on or off), but the from-scratch build stays the
+    /// reference the equivalence suite compares against.
+    IncrementalConfig {
+        /// Maintain the persistent class index.
+        enabled
     }
 }
 
-impl From<bool> for IncrementalConfig {
-    fn from(enabled: bool) -> Self {
-        Self { enabled }
-    }
-}
-
-/// Round-deadline knob: minimize energy subject to every participating
-/// device finishing its compute + upload within `seconds` (ε-constrained
-/// bi-objective scheduling, see [`crate::sched::pareto`]). Applied as a
-/// per-device upper-limit cap derived from its [`TimeModel`], so every
-/// registered solver honors it. Unlike `shards`/`pipeline`/`incremental`
-/// this knob *changes schedules* — it is part of campaign identity,
-/// persisted in snapshots and honored by `resume`/`replay`.
-///
-/// [`TimeModel`]: crate::sched::pareto::TimeModel
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct DeadlineConfig {
-    /// Enforce the round deadline.
-    pub enabled: bool,
-    /// Round deadline `D` in seconds (ignored when disabled).
-    pub seconds: f64,
-}
-
-impl DeadlineConfig {
-    /// Deadline of `seconds` per round.
-    pub fn on(seconds: f64) -> Self {
-        Self { enabled: true, seconds }
-    }
-
-    /// No deadline (the default).
-    pub fn off() -> Self {
-        Self { enabled: false, seconds: 0.0 }
+toggle_config! {
+    /// Round-deadline knob: minimize energy subject to every
+    /// participating device finishing its compute + upload within
+    /// `seconds` (ε-constrained bi-objective scheduling, see
+    /// [`crate::sched::pareto`]). Applied as a per-device upper-limit
+    /// cap derived from its [`TimeModel`], so every registered solver
+    /// honors it. Unlike `shards`/`pipeline`/`incremental` this knob
+    /// *changes schedules* — it is part of campaign identity, persisted
+    /// in snapshots and honored by `resume`/`replay`.
+    ///
+    /// [`TimeModel`]: crate::sched::pareto::TimeModel
+    DeadlineConfig {
+        /// Enforce the round deadline.
+        enabled,
+        /// Round deadline `D` in seconds (ignored when disabled).
+        seconds: f64
     }
 }
 
@@ -283,6 +328,82 @@ impl CoordinatorConfig {
             incremental: IncrementalConfig::off(),
             deadline: DeadlineConfig::off(),
         }
+    }
+}
+
+/// Every post-construction coordinator knob in one struct, applied in
+/// one place. The CLI, the FL [`crate::fl::Server`], and the networked
+/// service layer ([`crate::svc`]) all configure rounds by building a
+/// `KnobSet` and calling [`KnobSet::apply_to`] — there is exactly one
+/// ordering of the underlying setters in the codebase, instead of three
+/// hand-maintained mirrors of the `set_*` surface. `resume` rebuilds
+/// its `KnobSet` from store meta through this same path.
+///
+/// Every field is optional ("leave the coordinator as constructed");
+/// `sinks` appends. Application order is fixed and load-bearing:
+/// structural knobs first (dynamics, shards, pipeline, incremental,
+/// deadline — these may discard in-flight speculation or the class
+/// index), then log retention, then sinks, and the tracer last (pure
+/// output; a failure in an earlier knob must not leave a half-attached
+/// trace).
+#[derive(Default)]
+pub struct KnobSet {
+    /// Fleet dynamics (availability churn, cost drift, dropout).
+    pub dynamics: Option<DynamicsConfig>,
+    /// Instance-build shard count (validated: must be ≥ 1).
+    pub shards: Option<usize>,
+    /// Round pipelining.
+    pub pipeline: Option<PipelineConfig>,
+    /// Incremental round re-derivation.
+    pub incremental: Option<IncrementalConfig>,
+    /// Per-round completion deadline (validated: finite seconds > 0).
+    pub deadline: Option<DeadlineConfig>,
+    /// In-memory log/ledger retention bound (`Some(None)` = unbounded).
+    pub log_bound: Option<Option<usize>>,
+    /// Streaming per-round row sinks to attach.
+    pub sinks: Vec<Box<dyn MetricSink>>,
+    /// Trace consumer to attach.
+    pub tracer: Option<Box<dyn Tracer>>,
+}
+
+impl KnobSet {
+    /// An empty knob set (applies nothing).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Apply every present knob to `coordinator`, in the documented
+    /// order. Validation failures (zero shards, non-finite deadline)
+    /// surface before any sink or tracer is attached.
+    pub fn apply_to<B: RoundBackend>(
+        self,
+        coordinator: &mut Coordinator<B>,
+    ) -> Result<()> {
+        if let Some(shards) = self.shards {
+            coordinator.set_shards(shards)?;
+        }
+        if let Some(deadline) = self.deadline {
+            coordinator.set_deadline(deadline)?;
+        }
+        if let Some(dynamics) = self.dynamics {
+            coordinator.set_dynamics(dynamics);
+        }
+        if let Some(pipeline) = self.pipeline {
+            coordinator.set_pipeline(pipeline.enabled);
+        }
+        if let Some(incremental) = self.incremental {
+            coordinator.set_incremental(incremental.enabled);
+        }
+        if let Some(bound) = self.log_bound {
+            coordinator.set_log_bound(bound);
+        }
+        for sink in self.sinks {
+            coordinator.add_sink(sink);
+        }
+        if let Some(tracer) = self.tracer {
+            coordinator.set_tracer(tracer);
+        }
+        Ok(())
     }
 }
 

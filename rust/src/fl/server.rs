@@ -14,8 +14,8 @@ use std::path::Path;
 
 use crate::config::{Policy, TrainConfig};
 use crate::coordinator::{
-    BackendState, Coordinator, CoordinatorConfig, DeviceOutcome, ManagedDevice,
-    RoundBackend, RoundPlan,
+    BackendState, Coordinator, CoordinatorConfig, DeviceOutcome, KnobSet,
+    ManagedDevice, RoundBackend, RoundPlan,
 };
 use crate::energy::power::Behavior;
 use crate::energy::profiles::{BehaviorMix, Fleet};
@@ -23,10 +23,8 @@ use crate::error::{FedError, Result};
 use crate::fl::aggregate::fedavg;
 use crate::fl::client::SimClient;
 use crate::fl::data::Dataset;
-use crate::fl::dynamics::DynamicsConfig;
 use crate::metrics::{EnergyLedger, MetricsHub, RoundLog, TrainingLog};
 use crate::runtime::{Dtype, ModelRuntime, ParamSet};
-use crate::store::MetricSink;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -191,46 +189,20 @@ impl Server {
         &self.cfg
     }
 
-    /// Install dynamic fleet behaviour (availability churn, cost drift,
-    /// mid-round dropout — paper §6 future work).
-    pub fn set_dynamics(&mut self, dynamics: DynamicsConfig) {
-        self.coord.set_dynamics(dynamics);
-    }
-
-    /// Set the per-round instance-build shard count (see
-    /// [`crate::coordinator::CoordinatorConfig::shards`]); schedules are
-    /// bit-for-bit identical for every count.
-    pub fn set_shards(&mut self, shards: usize) -> Result<()> {
-        self.coord.set_shards(shards)
-    }
-
-    /// Enable/disable pipelined rounds (overlap next-round scheduling
-    /// with training; see [`crate::coordinator::PipelineConfig`]).
-    /// Campaigns are bit-for-bit identical either way. Note the PJRT
-    /// backend still trains synchronously inside the
-    /// `begin_train`/`finish_train` seam (its runtime is not yet
-    /// thread-movable — see ROADMAP: wire `TrainConfig.workers`), so its
-    /// `begin_train` reports no overlap window and the coordinator skips
-    /// speculation entirely — the knob is plumbed and persisted so
+    /// Apply a [`KnobSet`] to the underlying coordinator — the single
+    /// configuration seam shared with the CLI `train`/`resume` paths and
+    /// the networked service layer. This replaced a hand-maintained
+    /// mirror of seven coordinator setters.
+    ///
+    /// Note on `pipeline`: the PJRT backend still trains synchronously
+    /// inside the `begin_train`/`finish_train` seam (its runtime is not
+    /// yet thread-movable — see ROADMAP: wire `TrainConfig.workers`), so
+    /// its `begin_train` reports no overlap window and the coordinator
+    /// skips speculation entirely — the knob is plumbed and persisted so
     /// campaigns record the intended mode today at zero cost, and the
     /// overlap engages the moment the backend starts deferring work.
-    pub fn set_pipeline(&mut self, enabled: bool) {
-        self.coord.set_pipeline(enabled);
-    }
-
-    /// Enable/disable incremental round re-derivation (persistent
-    /// device→class index; see
-    /// [`crate::coordinator::IncrementalConfig`]). Schedules are
-    /// bit-for-bit identical either way — only build time changes.
-    pub fn set_incremental(&mut self, enabled: bool) {
-        self.coord.set_incremental(enabled);
-    }
-
-    /// Attach a trace consumer (e.g. [`crate::obs::ChromeTraceSink`]
-    /// behind `--trace FILE`). Pure output — campaigns are bit-for-bit
-    /// identical with any tracer attached.
-    pub fn set_tracer(&mut self, tracer: Box<dyn crate::obs::Tracer>) {
-        self.coord.set_tracer(tracer);
+    pub fn apply_knobs(&mut self, knobs: KnobSet) -> Result<()> {
+        knobs.apply_to(&mut self.coord)
     }
 
     /// Flush the attached tracer, surfacing any deferred write error.
@@ -272,19 +244,6 @@ impl Server {
     /// Per-round training log.
     pub fn log(&self) -> &TrainingLog {
         self.coord.log()
-    }
-
-    /// Stream every round's row into `sink` (JSONL/CSV/custom) as it
-    /// commits.
-    pub fn add_sink(&mut self, sink: Box<dyn MetricSink>) {
-        self.coord.add_sink(sink);
-    }
-
-    /// Bound in-memory per-round retention (see
-    /// [`Coordinator::set_log_bound`]) — pair with a sink so long
-    /// campaigns stop growing memory with the round count.
-    pub fn set_log_bound(&mut self, bound: Option<usize>) {
-        self.coord.set_log_bound(bound);
     }
 
     /// Flush all attached sinks.

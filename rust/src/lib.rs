@@ -38,6 +38,13 @@
 //!   a Chrome Trace Event JSONL sink and a zero-cost no-op default) and
 //!   fixed-bucket log₂ latency histograms ([`obs::hist`]). Pure output:
 //!   tracing can never perturb a schedule, journal byte, or digest.
+//! * [`svc`] — the networked coordinator service: a transport-agnostic
+//!   protocol (rendezvous / heartbeat / fetch-slice / report), a
+//!   participant registry with heartbeat expiry and rejoin, and
+//!   [`svc::ServiceBackend`] serving each round's run-length schedule
+//!   slices over a deterministic loopback transport to simulated client
+//!   fleets — partial rounds on missed deadlines, digest-identical to
+//!   the in-process reference otherwise.
 //! * [`energy`] — device power/energy/carbon models that synthesize the
 //!   cost functions consumed by the schedulers.
 //! * [`fl`] — federated-learning server (a PJRT-backed coordinator
@@ -78,6 +85,7 @@ pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod store;
+pub mod svc;
 pub mod testkit;
 pub mod util;
 

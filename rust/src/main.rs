@@ -17,6 +17,10 @@
 //! * `pareto` — sweep the energy–time Pareto front of a sampled fleet
 //!   (ε-constraint method over class-level candidate makespans) and dump
 //!   it as CSV or JSONL;
+//! * `serve` — run a storeless campaign over the networked coordinator
+//!   service ([`fedzero::svc`]): the round loop served as run-length
+//!   schedule slices over the in-memory loopback wire to a simulated
+//!   client fleet, with protocol/registry stats printed at the end;
 //! * `fleet` — sample and describe a heterogeneous fleet;
 //! * `solvers` — list every solver in the registry.
 //!
@@ -30,8 +34,8 @@ use std::process::ExitCode;
 use fedzero::cli;
 use fedzero::config::{Policy, TrainConfig};
 use fedzero::coordinator::{
-    Coordinator, CoordinatorConfig, DeadlineConfig, ManagedDevice, PipelineConfig,
-    SimBackend,
+    BackendState, Coordinator, CoordinatorConfig, DeadlineConfig, IncrementalConfig,
+    KnobSet, ManagedDevice, PipelineConfig, RoundBackend, SimBackend,
 };
 use fedzero::energy::carbon::{self, CarbonCurve};
 use fedzero::energy::power::Behavior;
@@ -50,8 +54,10 @@ use fedzero::sched::solver::{Solver, SolverRegistry};
 use fedzero::sched::validate;
 use fedzero::store::journal::campaign_digest;
 use fedzero::store::{
-    self, snapshot as snap, CampaignStore, CsvSink, JsonlSink, MetricSink,
+    self, snapshot as snap, CampaignStore, CsvSink, JournalEntry, JsonlSink,
+    MetricSink, StoreContents,
 };
+use fedzero::svc::{self, LoopbackService, ServiceConfig, SimClientsConfig};
 use fedzero::util::json::Json;
 use fedzero::util::rng::Rng;
 use fedzero::util::table::{fmt_duration, fmt_energy, Table};
@@ -73,6 +79,7 @@ fn run(args: &[String]) -> fedzero::Result<()> {
     match parsed.command.as_str() {
         "schedule" => cmd_schedule(&parsed),
         "train" => cmd_train(&parsed),
+        "serve" => cmd_serve(&parsed),
         "resume" => cmd_resume(&parsed),
         "replay" => cmd_replay(&parsed),
         "stats" => cmd_stats(&parsed),
@@ -197,6 +204,13 @@ fn cmd_train_fl(p: &cli::Parsed) -> fedzero::Result<()> {
             "--deadline/--objective require --backend sim".into(),
         ));
     }
+    if p.req("transport")? != "inproc" {
+        return Err(fedzero::FedError::Config(
+            "--transport loopback requires --backend sim (the networked \
+             service serves the simulated fleet)"
+                .into(),
+        ));
+    }
     let mut cfg = match p.get("config") {
         Some(path) => TrainConfig::from_toml(&std::fs::read_to_string(path)?)?,
         None => TrainConfig::default(),
@@ -227,28 +241,33 @@ fn cmd_train_fl(p: &cli::Parsed) -> fedzero::Result<()> {
     let rounds = cfg.rounds;
     let devices_n = cfg.devices;
     let mut server = Server::new(cfg, fedzero::fl::server::DEFAULT_MIX)?;
-    if let Some(d) = parse_dynamics(p.req("dynamics")?, devices_n)? {
-        server.set_dynamics(d);
-    }
-    server.set_shards(p.get_or("shards", 1)?)?;
-    server.set_pipeline(parse_pipeline(p.req("pipeline")?)?);
-    server.set_incremental(parse_incremental(p.req("incremental")?)?);
+    // Every post-construction knob rides in one `KnobSet`, applied in one
+    // call — the same seam the sim path, `resume`, and the service layer
+    // configure through.
+    let mut knobs = KnobSet {
+        dynamics: parse_dynamics(p.req("dynamics")?, devices_n)?,
+        shards: Some(p.get_or("shards", 1)?),
+        pipeline: Some(PipelineConfig::from(parse_pipeline(p.req("pipeline")?)?)),
+        incremental: Some(parse_incremental(p.req("incremental")?)?.into()),
+        ..KnobSet::default()
+    };
     if let Some(path) = p.get("trace") {
-        server.set_tracer(Box::new(ChromeTraceSink::create(Path::new(path))?));
+        knobs.tracer = Some(Box::new(ChromeTraceSink::create(Path::new(path))?));
     }
     if let Some(path) = p.get("metrics-jsonl") {
-        server.add_sink(Box::new(JsonlSink::create(Path::new(path))?));
+        knobs.sinks.push(Box::new(JsonlSink::create(Path::new(path))?));
     }
     if let Some(path) = &out {
         // Streamed, not materialized at the end — so `--out` stays
         // complete even when `--log-ring` bounds the in-memory log.
-        server.add_sink(Box::new(CsvSink::create(Path::new(path))?));
+        knobs.sinks.push(Box::new(CsvSink::create(Path::new(path))?));
     }
     if let Some(ring) = p.get_parse::<usize>("log-ring")? {
         if ring > 0 {
-            server.set_log_bound(Some(ring));
+            knobs.log_bound = Some(Some(ring));
         }
     }
+    server.apply_knobs(knobs)?;
     println!("round,policy,loss,energy_j,sched_ms,train_s");
     for r in 0..rounds {
         let row = server.round()?;
@@ -336,10 +355,12 @@ fn parse_deadline(p: &cli::Parsed) -> fedzero::Result<DeadlineConfig> {
     })
 }
 
-/// Drive a sim-backed coordinator to `rounds`, printing one CSV-ish line
-/// per round and honoring periodic snapshots when a store is attached.
-fn drive_sim(
-    coord: &mut Coordinator<SimBackend>,
+/// Drive an artifact-free coordinator to `rounds` — over the in-process
+/// sim backend or the loopback service, the loop is the same — printing
+/// one CSV-ish line per round and honoring periodic snapshots when a
+/// store is attached.
+fn drive_rounds<B: RoundBackend + BackendState>(
+    coord: &mut Coordinator<B>,
     rounds: usize,
     sleep_ms: u64,
 ) -> fedzero::Result<()> {
@@ -413,8 +434,6 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
         // re-applied to the restored fleet by `resume`/`replay`.
         deadline: parse_deadline(p)?,
     };
-    let snapshot_every: usize = p.get_or("snapshot-every", 16)?;
-    let sleep_ms: u64 = p.get_or("round-sleep-ms", 0)?;
     let dynamics_name = p.req("dynamics")?.to_string();
     let dynamics = parse_dynamics(&dynamics_name, devices_n)?;
     let objective = parse_objective(p.req("objective")?)?;
@@ -447,26 +466,92 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
             };
         }
     }
-    let mut coord = Coordinator::new(cfg.clone(), managed, SimBackend::new())?;
-    if let Some(d) = dynamics {
-        coord.set_dynamics(d);
+    // The backend the rounds run over is picked by `--transport`: a
+    // direct in-process call (`inproc`) or the networked coordinator
+    // service over the in-memory loopback wire (`loopback`). Both paths
+    // share `run_train_sim` — the round loop, knobs, and store wiring
+    // are identical; only the backend differs.
+    let transport = p.req("transport")?.to_string();
+    let svc_churn: u32 = p.get_or("svc-churn", 0)?;
+    let svc_miss: u32 = p.get_or("svc-miss", 0)?;
+    match transport.as_str() {
+        "inproc" => {
+            if svc_churn != 0 || svc_miss != 0 {
+                return Err(fedzero::FedError::Config(
+                    "--svc-churn/--svc-miss require --transport loopback".into(),
+                ));
+            }
+            run_train_sim(p, cfg, managed, dynamics, &dynamics_name, "inproc", SimBackend::new())
+        }
+        "loopback" => {
+            let backend = svc::loopback_service(
+                ServiceConfig::default(),
+                SimClientsConfig {
+                    seed,
+                    churn_permille: svc_churn,
+                    miss_permille: svc_miss,
+                    ..SimClientsConfig::default()
+                },
+                managed.iter().map(|m| m.id).collect(),
+            );
+            run_train_sim(p, cfg, managed, dynamics, &dynamics_name, "loopback", backend)
+        }
+        other => Err(fedzero::FedError::Config(format!(
+            "unknown transport '{other}' (inproc|loopback)"
+        ))),
     }
+}
 
-    let ring = p.get_parse::<usize>("log-ring")?;
+/// The shared tail of `train --backend sim`: knobs, optional store, and
+/// the round loop, generic over the round backend (in-process sim or
+/// the loopback service).
+fn run_train_sim<B: RoundBackend + BackendState>(
+    p: &cli::Parsed,
+    cfg: CoordinatorConfig,
+    managed: Vec<ManagedDevice>,
+    dynamics: Option<DynamicsConfig>,
+    dynamics_name: &str,
+    transport: &str,
+    backend: B,
+) -> fedzero::Result<()> {
+    let snapshot_every: usize = p.get_or("snapshot-every", 16)?;
+    let sleep_ms: u64 = p.get_or("round-sleep-ms", 0)?;
+    let rounds = cfg.rounds;
+    let devices_n = managed.len();
+    let mut coord = Coordinator::new(cfg.clone(), managed, backend)?;
+
+    // One `KnobSet`, one application — the same seam the fl path,
+    // `resume`, and the service layer configure through.
+    let mut knobs = KnobSet { dynamics, ..KnobSet::default() };
     if let Some(path) = p.get("metrics-jsonl") {
-        coord.add_sink(Box::new(JsonlSink::create(Path::new(path))?));
+        knobs.sinks.push(Box::new(JsonlSink::create(Path::new(path))?));
     }
     if let Some(path) = p.get("out") {
         // The sim path streams the CSV instead of materializing the full
         // log at the end — same columns as TrainingLog::to_csv.
-        coord.add_sink(Box::new(CsvSink::create(Path::new(path))?));
+        knobs.sinks.push(Box::new(CsvSink::create(Path::new(path))?));
     }
+    if let Some(path) = p.get("trace") {
+        // Pure output: the traced campaign is bit-for-bit identical to an
+        // untraced one (journal bytes and replay digest included).
+        knobs.tracer = Some(Box::new(ChromeTraceSink::create(Path::new(path))?));
+    }
+    let ring = p.get_parse::<usize>("log-ring")?;
     let store_dir = p.get("store").map(PathBuf::from);
-    if let Some(dir) = &store_dir {
+    if store_dir.is_some() {
         // Storing streams every row to disk; default the in-memory log to
         // a small ring so campaign memory is flat in the round count.
         let ring = ring.unwrap_or(64);
-        coord.set_log_bound(if ring == 0 { None } else { Some(ring) });
+        knobs.log_bound = Some(if ring == 0 { None } else { Some(ring) });
+    } else if let Some(ring) = ring {
+        if ring > 0 {
+            knobs.log_bound = Some(Some(ring));
+        }
+    }
+    knobs.apply_to(&mut coord)?;
+
+    if let Some(dir) = &store_dir {
+        let ring = ring.unwrap_or(64);
         // Absolutized: `resume` may run from a different cwd, and must
         // re-attach the *same* files the crashed process was streaming.
         let opt_path = |key: &str| match p.get(key) {
@@ -483,11 +568,22 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
             }
             None => Json::Null,
         };
+        // The service knobs persist with the campaign: `resume`/`replay`
+        // rebuild the identical loopback service (fleet behavior is a
+        // pure function of the seed) from these keys.
+        let svc_meta = if transport == "loopback" {
+            Json::obj(vec![
+                ("churn_permille", Json::Num(p.get_or::<u32>("svc-churn", 0)? as f64)),
+                ("miss_permille", Json::Num(p.get_or::<u32>("svc-miss", 0)? as f64)),
+            ])
+        } else {
+            Json::Null
+        };
         let meta = Json::obj(vec![
             ("version", Json::Num(1.0)),
             ("kind", Json::Str("sim".into())),
             ("devices", Json::Num(devices_n as f64)),
-            ("dynamics", Json::Str(dynamics_name.clone())),
+            ("dynamics", Json::Str(dynamics_name.to_string())),
             ("snapshot_every", Json::Num(snapshot_every as f64)),
             ("log_ring", Json::Num(ring as f64)),
             // Sink paths are part of the campaign: `resume` re-attaches
@@ -498,23 +594,16 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
             // so one campaign yields one continuous trace across crashes.
             ("trace", opt_path("trace")),
             ("objective", Json::Str(p.req("objective")?.to_string())),
+            ("transport", Json::Str(transport.to_string())),
+            ("svc", svc_meta),
             ("cfg", snap::cfg_to_json(&cfg)),
         ]);
         let store = CampaignStore::create(dir, meta, coord.snapshot_json())?;
         coord.attach_store(store)?;
-    } else if let Some(ring) = ring {
-        if ring > 0 {
-            coord.set_log_bound(Some(ring));
-        }
-    }
-    if let Some(path) = p.get("trace") {
-        // Pure output: the traced campaign is bit-for-bit identical to an
-        // untraced one (journal bytes and replay digest included).
-        coord.set_tracer(Box::new(ChromeTraceSink::create(Path::new(path))?));
     }
 
     println!("round,policy,loss,energy_j,sched_ms,train_s");
-    drive_sim(&mut coord, rounds, sleep_ms)?;
+    drive_rounds(&mut coord, rounds, sleep_ms)?;
     println!(
         "done: policy={}, total energy {}",
         cfg.algo,
@@ -526,39 +615,107 @@ fn cmd_train_sim(p: &cli::Parsed) -> fedzero::Result<()> {
     Ok(())
 }
 
-/// Rebuild the campaign's streamed sink files from the journal (their
-/// derived content is fully journaled, timings included) and re-attach
-/// them, so a resumed campaign keeps producing the outputs the crashed
-/// process was streaming.
-fn reattach_sinks(
-    coord: &mut Coordinator<SimBackend>,
+/// The round backend a stored campaign was trained over, from its meta.
+/// Legacy metas (no "transport" key) are in-process sim campaigns.
+fn transport_of(meta: &Json) -> String {
+    meta.get("transport")
+        .and_then(|v| v.as_str())
+        .unwrap_or("inproc")
+        .to_string()
+}
+
+/// Rebuild the loopback service (simulated fleet included) that a
+/// `--transport loopback` campaign was served over. The fleet's behavior
+/// is a pure function of `(seed, round, device)` — never of history or
+/// the wall clock — so the reconstructed service re-serves the exact
+/// outcome bits the journal recorded.
+fn loopback_from_meta(
     meta: &Json,
-    entries: &[fedzero::store::JournalEntry],
-) -> fedzero::Result<()> {
+    cfg: &CoordinatorConfig,
+) -> fedzero::Result<LoopbackService> {
+    let svc_meta = store::get(meta, "svc")?;
+    let devices = store::get_usize(meta, "devices")?;
+    Ok(svc::loopback_service(
+        ServiceConfig::default(),
+        SimClientsConfig {
+            seed: cfg.seed,
+            churn_permille: store::get_usize(svc_meta, "churn_permille")? as u32,
+            miss_permille: store::get_usize(svc_meta, "miss_permille")? as u32,
+            ..SimClientsConfig::default()
+        },
+        // Fleet::sample ids are 0..n; the client fleet mirrors them.
+        (0..devices).collect(),
+    ))
+}
+
+/// Rebuild a resumed campaign's runtime knobs from its store meta — the
+/// same `KnobSet` seam `train` configures through. Sink files are
+/// re-created and rewound from the journal (their derived content is
+/// fully journaled, timings included); the persisted trace file is
+/// re-opened in append mode. cfg-level knobs (shards, pipeline,
+/// incremental, deadline) travel inside the persisted cfg and dynamics
+/// state lives in the snapshot — `Coordinator::restore` re-applies both.
+fn knobs_from_meta(
+    meta: &Json,
+    entries: &[JournalEntry],
+    trace_override: Option<&str>,
+) -> fedzero::Result<KnobSet> {
+    let mut knobs = KnobSet::new();
     if let Some(path) = meta.get("metrics_jsonl").and_then(|v| v.as_str()) {
         let mut sink = JsonlSink::create(Path::new(path))?;
         for e in entries {
             sink.record(&e.row)?;
         }
-        coord.add_sink(Box::new(sink));
+        knobs.sinks.push(Box::new(sink));
     }
     if let Some(path) = meta.get("out").and_then(|v| v.as_str()) {
         let mut sink = CsvSink::create(Path::new(path))?;
         for e in entries {
             sink.record(&e.row)?;
         }
-        coord.add_sink(Box::new(sink));
+        knobs.sinks.push(Box::new(sink));
     }
-    Ok(())
+    // Trace re-attach: an explicit `--trace` overrides the path persisted
+    // in the store meta. The knobs are applied only *after* `restore`
+    // replayed the journal tail, so replayed rounds never duplicate spans
+    // in the file; `open_append` truncates any line torn by the crash.
+    let trace_path = trace_override.map(str::to_string).or_else(|| {
+        meta.get("trace").and_then(|v| v.as_str()).map(str::to_string)
+    });
+    if let Some(path) = trace_path {
+        knobs.tracer =
+            Some(Box::new(ChromeTraceSink::open_append(Path::new(&path))?));
+    }
+    Ok(knobs)
 }
 
 /// `resume DIR`: rebuild the coordinator from the latest snapshot, replay
-/// and verify the journal tail, and continue the remaining rounds.
+/// and verify the journal tail, and continue the remaining rounds — over
+/// the same backend the campaign was trained on (loopback campaigns get
+/// their service and simulated fleet reconstructed from the meta).
 fn cmd_resume(p: &cli::Parsed) -> fedzero::Result<()> {
     let dir = PathBuf::from(&p.positional[0]);
-    let sleep_ms: u64 = p.get_or("round-sleep-ms", 0)?;
     let (campaign, contents) = CampaignStore::resume(&dir)?;
     let cfg = snap::cfg_from_json(store::get(&contents.meta, "cfg")?)?;
+    match transport_of(&contents.meta).as_str() {
+        "loopback" => {
+            let backend = loopback_from_meta(&contents.meta, &cfg)?;
+            resume_campaign(p, &dir, campaign, &contents, cfg, backend)
+        }
+        _ => resume_campaign(p, &dir, campaign, &contents, cfg, SimBackend::new()),
+    }
+}
+
+/// The backend-generic tail of `resume`.
+fn resume_campaign<B: RoundBackend + BackendState>(
+    p: &cli::Parsed,
+    dir: &Path,
+    campaign: CampaignStore,
+    contents: &StoreContents,
+    cfg: CoordinatorConfig,
+    backend: B,
+) -> fedzero::Result<()> {
+    let sleep_ms: u64 = p.get_or("round-sleep-ms", 0)?;
     let ring = contents
         .meta
         .get("log_ring")
@@ -587,34 +744,18 @@ fn cmd_resume(p: &cli::Parsed) -> fedzero::Result<()> {
         cfg,
         &contents.snapshot,
         &contents.entries,
-        SimBackend::new(),
+        backend,
         log_bound,
     )?;
     coord.attach_store(campaign)?;
-    reattach_sinks(&mut coord, &contents.meta, &contents.entries)?;
-    // Trace re-attach: an explicit `--trace` overrides the path persisted
-    // in the store meta. Attached only *after* `restore` replayed the
-    // journal tail, so replayed rounds never duplicate spans in the file;
-    // `open_append` truncates any line torn by the crash.
-    let trace_path = p
-        .get("trace")
-        .map(str::to_string)
-        .or_else(|| {
-            contents
-                .meta
-                .get("trace")
-                .and_then(|v| v.as_str())
-                .map(str::to_string)
-        });
-    if let Some(path) = trace_path {
-        coord.set_tracer(Box::new(ChromeTraceSink::open_append(Path::new(&path))?));
-    }
+    knobs_from_meta(&contents.meta, &contents.entries, p.get("trace"))?
+        .apply_to(&mut coord)?;
     if coord.rounds_run() >= rounds || target_reached {
         println!("campaign already complete ({committed} rounds)");
         return Ok(());
     }
     println!("round,policy,loss,energy_j,sched_ms,train_s");
-    drive_sim(&mut coord, rounds, sleep_ms)?;
+    drive_rounds(&mut coord, rounds, sleep_ms)?;
     println!(
         "done: policy={}, total energy {}",
         coord.cfg().algo,
@@ -625,11 +766,29 @@ fn cmd_resume(p: &cli::Parsed) -> fedzero::Result<()> {
 
 /// `replay DIR`: re-derive every journaled round from the *initial*
 /// snapshot, verifying solver, instance/schedule digests, RNG states, and
-/// energy per round — a deterministic audit of the whole campaign.
+/// energy per round — a deterministic audit of the whole campaign. For
+/// loopback campaigns every round is re-*served* through a reconstructed
+/// service, so the audit covers the wire path too.
 fn cmd_replay(p: &cli::Parsed) -> fedzero::Result<()> {
     let dir = PathBuf::from(&p.positional[0]);
     let contents = CampaignStore::read(&dir)?;
     let cfg = snap::cfg_from_json(store::get(&contents.meta, "cfg")?)?;
+    match transport_of(&contents.meta).as_str() {
+        "loopback" => {
+            let backend = loopback_from_meta(&contents.meta, &cfg)?;
+            replay_campaign(&dir, &contents, cfg, backend)
+        }
+        _ => replay_campaign(&dir, &contents, cfg, SimBackend::new()),
+    }
+}
+
+/// The backend-generic tail of `replay`.
+fn replay_campaign<B: RoundBackend + BackendState>(
+    dir: &Path,
+    contents: &StoreContents,
+    cfg: CoordinatorConfig,
+    backend: B,
+) -> fedzero::Result<()> {
     let n = contents.entries.len();
     // `restore` re-executes and checks every entry; reaching Ok *is* the
     // audit passing.
@@ -637,7 +796,7 @@ fn cmd_replay(p: &cli::Parsed) -> fedzero::Result<()> {
         cfg,
         &contents.init_snapshot,
         &contents.entries,
-        SimBackend::new(),
+        backend,
         None,
     )?;
     let total_energy: f64 = contents.entries.iter().map(|e| e.row.energy_j).sum();
@@ -657,6 +816,95 @@ fn cmd_replay(p: &cli::Parsed) -> fedzero::Result<()> {
         campaign_digest(&contents.entries)
     );
     debug_assert_eq!(coord.rounds_run(), n);
+    Ok(())
+}
+
+/// `serve`: a storeless loopback campaign — the round loop served as
+/// run-length schedule slices over the in-memory wire to a simulated
+/// client fleet — followed by a protocol/registry stats report. The
+/// quickest way to watch the networked service (rendezvous, heartbeats,
+/// slices, partial rounds) without creating a campaign store.
+fn cmd_serve(p: &cli::Parsed) -> fedzero::Result<()> {
+    let rounds: usize = p.get_or("rounds", 8)?;
+    let devices_n: usize = p.get_or("devices", 64)?;
+    let tasks: usize = p.get_or("tasks", 128)?;
+    let seed: u64 = p.get_or("seed", 7)?;
+    let algo = p.req("algo")?.to_string();
+    SolverRegistry::with_defaults(seed).resolve(&algo)?;
+    let churn: u32 = p.get_or("svc-churn", 50)?;
+    let miss: u32 = p.get_or("svc-miss", 0)?;
+
+    let base = TrainConfig::default();
+    let cfg = CoordinatorConfig {
+        rounds,
+        tasks_per_round: tasks,
+        algo,
+        participation: base.participation,
+        min_tasks: base.min_tasks,
+        max_share: base.max_share,
+        seed,
+        target_loss: None,
+        shards: 1,
+        pipeline: PipelineConfig::off(),
+        incremental: IncrementalConfig::off(),
+        deadline: DeadlineConfig::off(),
+    };
+    let mut rng = Rng::new(seed);
+    let fleet = Fleet::sample(devices_n, BehaviorMix::Mixed, &mut rng);
+    let managed: Vec<ManagedDevice> = fleet
+        .devices
+        .iter()
+        .map(|d| ManagedDevice::from_device(d, usize::MAX))
+        .collect();
+    let backend = svc::loopback_service(
+        ServiceConfig::default(),
+        SimClientsConfig {
+            seed,
+            churn_permille: churn,
+            miss_permille: miss,
+            ..SimClientsConfig::default()
+        },
+        managed.iter().map(|m| m.id).collect(),
+    );
+    let mut coord = Coordinator::new(cfg, managed, backend)?;
+    if let Some(path) = p.get("trace") {
+        // The service's own spans (svc_round begin/end, per-round pump
+        // instants) are the interesting ones here — the tracer goes to
+        // the backend, not the coordinator.
+        coord
+            .backend_mut()
+            .set_tracer(Box::new(ChromeTraceSink::create(Path::new(path))?));
+    }
+    println!("round,policy,loss,energy_j,sched_ms,train_s");
+    drive_rounds(&mut coord, rounds, 0)?;
+    coord.backend_mut().flush_trace()?;
+
+    let service = coord.backend();
+    let stats = service.stats();
+    let (up, down) = service.transport().bytes();
+    println!(
+        "service: {devices_n} clients — {} joins ({} rejoins), {} heartbeats, \
+         {} fetches, {} reports accepted ({} late, {} rejected)",
+        stats.counter("svc_joins"),
+        stats.counter("svc_rejoins"),
+        stats.counter("svc_heartbeats"),
+        stats.counter("svc_fetches"),
+        stats.counter("svc_reports_accepted"),
+        stats.counter("svc_reports_late"),
+        stats.counter("svc_reports_rejected"),
+    );
+    println!(
+        "rounds: {} partial, {} stragglers, {} expiries; wire: {up} B up, \
+         {down} B down, max slice frame {} B (O(classes), never O(devices))",
+        stats.counter("svc_partial_rounds"),
+        stats.counter("svc_stragglers"),
+        stats.counter("svc_expiries"),
+        service.max_slice_bytes(),
+    );
+    println!("total energy {}", fmt_energy(coord.ledger().total()));
+    if p.flag("expose") {
+        print!("{}", stats.expose_text());
+    }
     Ok(())
 }
 

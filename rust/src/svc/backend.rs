@@ -1,0 +1,384 @@
+//! [`ServiceBackend`] — the networked [`RoundBackend`].
+//!
+//! `train(plan)` no longer computes outcomes in-process: it *serves*
+//! the round over a [`Transport`]. Each pump tick advances the logical
+//! clock, lets the far side act, then handles every queued frame —
+//! rendezvous, heartbeats, slice fetches, reports — until either every
+//! scheduled device has reported or the tick deadline lapses. Devices
+//! that miss the deadline are simply absent from the returned outcome
+//! vector, which is exactly the partial-round shape the coordinator
+//! already handles (aggregation proceeds over reporters; absentees hit
+//! the normal dropout/Recosting accounting), so journals, snapshots,
+//! resume, and replay work unchanged.
+//!
+//! Digest-equivalence contract: when every report lands in time, the
+//! outcome vector is bit-identical to the in-process
+//! [`crate::coordinator::SimBackend`] on the same plan — same ordering
+//! (assignment order), same energy bits (clients evaluate the slice's
+//! drift-inclusive cost function, which round-trips the wire exactly),
+//! same loss proxy (`1/(1+model_version)`). `aggregate`/`evaluate`/
+//! [`BackendState`] mirror `SimBackend` too, so `--store`, `resume`,
+//! and `replay` compose with the service layer for free.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{BackendState, DeviceOutcome, RoundBackend, RoundPlan};
+use crate::error::Result;
+use crate::metrics::MetricsHub;
+use crate::obs::{NoopTracer, Tracer};
+use crate::store::get_usize;
+use crate::util::json::Json;
+
+use super::loopback::Transport;
+use super::protocol::{Protocol, RejectReason, Reply, ScheduleSlice};
+use super::registry::{Joined, ParticipantRegistry, ReportVerdict};
+
+/// Service-layer knobs. Both are logical-tick counts — the service has
+/// no wall clock, which is what keeps networked campaigns replayable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// A participant unheard-from for more than this many ticks is
+    /// expired at the next round boundary.
+    pub expiry_ticks: u64,
+    /// Report deadline per round, in pump ticks. Reports that miss it
+    /// leave the round partial.
+    pub deadline_ticks: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        // Deadline comfortably above the worst-case client turnaround
+        // (join + heartbeat + fetch + max straggler jitter); expiry
+        // short enough that churned clients expire across a boundary.
+        ServiceConfig {
+            expiry_ticks: 12,
+            deadline_ticks: 32,
+        }
+    }
+}
+
+/// A report accepted from the wire, pending round assembly.
+#[derive(Clone, Copy, Debug)]
+struct Report {
+    tasks: usize,
+    energy_j: f64,
+    sim_time_s: f64,
+    mean_loss: f64,
+}
+
+/// The networked round backend: participant registry + transport pump
+/// bridging the coordinator's round loop to connected clients.
+pub struct ServiceBackend<T: Transport> {
+    transport: T,
+    registry: ParticipantRegistry,
+    cfg: ServiceConfig,
+    /// Mirrors `SimBackend`: how many aggregations the global model has
+    /// absorbed — the clients' loss proxy derives from it.
+    rounds_aggregated: usize,
+    /// Reports collected by the last Training phase, consumed by
+    /// `aggregate`.
+    pending: usize,
+    stats: MetricsHub,
+    tracer: Box<dyn Tracer>,
+    max_slice_bytes: usize,
+}
+
+impl<T: Transport> ServiceBackend<T> {
+    /// Wrap a transport in a fresh service.
+    pub fn new(cfg: ServiceConfig, transport: T) -> Self {
+        ServiceBackend {
+            transport,
+            registry: ParticipantRegistry::new(cfg.expiry_ticks),
+            cfg,
+            rounds_aggregated: 0,
+            pending: 0,
+            stats: MetricsHub::new(),
+            tracer: Box::new(NoopTracer),
+            max_slice_bytes: 0,
+        }
+    }
+
+    /// Service counters (`svc_*`), independent of the coordinator's hub.
+    pub fn stats(&self) -> &MetricsHub {
+        &self.stats
+    }
+
+    /// The participant registry.
+    pub fn registry(&self) -> &ParticipantRegistry {
+        &self.registry
+    }
+
+    /// The transport (driver access in tests and benches).
+    pub fn transport(&self) -> &T {
+        &self.transport
+    }
+
+    /// Mutable transport access.
+    pub fn transport_mut(&mut self) -> &mut T {
+        &mut self.transport
+    }
+
+    /// The service configuration.
+    pub fn service_cfg(&self) -> ServiceConfig {
+        self.cfg
+    }
+
+    /// Largest encoded [`ScheduleSlice`] frame served so far — the
+    /// quantity the `fleet_scale` bench pins to O(classes).
+    pub fn max_slice_bytes(&self) -> usize {
+        self.max_slice_bytes
+    }
+
+    /// Attach a tracer for `svc_*` spans (separate from the
+    /// coordinator's tracer; same purity rule — tracing never feeds
+    /// digests).
+    pub fn set_tracer(&mut self, tracer: Box<dyn Tracer>) {
+        self.tracer = tracer;
+    }
+
+    /// Flush the attached tracer.
+    pub fn flush_trace(&mut self) -> Result<()> {
+        self.tracer.flush()
+    }
+
+    fn handle(
+        &mut self,
+        msg: Protocol,
+        plan: &RoundPlan,
+        by_device: &BTreeMap<usize, usize>,
+        reports: &mut BTreeMap<usize, Report>,
+    ) -> Reply {
+        match msg {
+            Protocol::Rendezvous { client, device_id } => {
+                match self.registry.rendezvous(client, device_id) {
+                    Joined::New => self.stats.inc("svc_joins", 1),
+                    Joined::Rejoin => self.stats.inc("svc_rejoins", 1),
+                }
+                Reply::Welcome {
+                    expiry_ticks: self.registry.expiry_ticks(),
+                }
+            }
+            Protocol::Heartbeat { client, device_id } => {
+                self.stats.inc("svc_heartbeats", 1);
+                match self.registry.heartbeat(client, device_id) {
+                    Some((phase, round)) => Reply::Beat { phase, round },
+                    None => Reply::Rejected {
+                        reason: RejectReason::Unknown,
+                    },
+                }
+            }
+            Protocol::FetchSlice {
+                client,
+                device_id,
+                round,
+            } => {
+                self.stats.inc("svc_fetches", 1);
+                let assigned = by_device.get(&device_id).copied();
+                match assigned {
+                    Some(idx) if self.registry.fetch(client, device_id, round) => {
+                        let a = &plan.assignments[idx];
+                        Reply::Slice(ScheduleSlice {
+                            round,
+                            device_id,
+                            slot: a.slot,
+                            tasks: a.tasks,
+                            model_version: self.rounds_aggregated,
+                            cost: plan.instance.costs[a.slot].clone(),
+                        })
+                    }
+                    Some(_) => Reply::Rejected {
+                        reason: if round == self.registry.round() {
+                            RejectReason::NotSelected
+                        } else {
+                            RejectReason::WrongRound
+                        },
+                    },
+                    None => Reply::Rejected {
+                        reason: RejectReason::NotSelected,
+                    },
+                }
+            }
+            Protocol::ReportResult {
+                client,
+                device_id,
+                round,
+                tasks,
+                energy_j,
+                sim_time_s,
+                mean_loss,
+            } => {
+                // Verify the echoed task count against the assignment
+                // *before* mutating the registry, so a mismatched report
+                // does not burn the device's one accept.
+                if let Some(&idx) = by_device.get(&device_id) {
+                    if round == self.registry.round() && plan.assignments[idx].tasks != tasks {
+                        self.stats.inc("svc_reports_rejected", 1);
+                        return Reply::Rejected {
+                            reason: RejectReason::TaskMismatch,
+                        };
+                    }
+                }
+                match self.registry.report(client, device_id, round) {
+                    ReportVerdict::Accepted => {
+                        let prior = reports.insert(
+                            device_id,
+                            Report {
+                                tasks,
+                                energy_j,
+                                sim_time_s,
+                                mean_loss,
+                            },
+                        );
+                        debug_assert!(prior.is_none(), "registry accepted a duplicate report");
+                        self.stats.inc("svc_reports_accepted", 1);
+                        Reply::Accepted
+                    }
+                    verdict => {
+                        let reason = match verdict {
+                            ReportVerdict::WrongRound => {
+                                self.stats.inc("svc_reports_late", 1);
+                                RejectReason::WrongRound
+                            }
+                            ReportVerdict::Duplicate => RejectReason::Duplicate,
+                            ReportVerdict::NotTraining | ReportVerdict::Unknown => {
+                                RejectReason::Unknown
+                            }
+                            // Unreachable: Accepted is matched above.
+                            ReportVerdict::Accepted => RejectReason::Unknown,
+                        };
+                        self.stats.inc("svc_reports_rejected", 1);
+                        Reply::Rejected { reason }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Serve one round over the transport; returns outcomes in
+    /// assignment order for every device that reported in time.
+    fn serve_round(&mut self, plan: &RoundPlan) -> Vec<DeviceOutcome> {
+        let round = plan.round;
+        let n = plan.assignments.len();
+        self.tracer.begin_args("svc_round", &|| {
+            vec![
+                ("round", round.to_string()),
+                ("assignments", n.to_string()),
+            ]
+        });
+
+        // Assignment index by device id — slice lookups and task checks.
+        let by_device: BTreeMap<usize, usize> = plan
+            .assignments
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.device_id, i))
+            .collect();
+        let scheduled: Vec<usize> = plan.assignments.iter().map(|a| a.device_id).collect();
+        let start = self.registry.begin_round(round, &scheduled);
+        self.stats.inc("svc_expiries", start.expired as u64);
+
+        let mut reports: BTreeMap<usize, Report> = BTreeMap::new();
+        for _ in 0..self.cfg.deadline_ticks {
+            self.registry.advance();
+            self.transport.tick(self.registry.clock());
+            for frame in self.transport.drain_requests() {
+                self.stats.inc("svc_frames", 1);
+                let Ok(msg) = Protocol::decode(&frame) else {
+                    self.stats.inc("svc_bad_frames", 1);
+                    continue;
+                };
+                let client = msg.client();
+                let reply = self.handle(msg, plan, &by_device, &mut reports);
+                let encoded = reply.encode();
+                if matches!(reply, Reply::Slice(_)) {
+                    self.max_slice_bytes = self.max_slice_bytes.max(encoded.len());
+                }
+                self.transport.deliver(client, encoded);
+            }
+            if reports.len() == n {
+                break; // everyone reported — no need to burn the deadline
+            }
+        }
+
+        let end = self.registry.finish_round();
+        let missing = n - reports.len();
+        if missing > 0 {
+            self.stats.inc("svc_partial_rounds", 1);
+            self.stats.inc("svc_stragglers", missing as u64);
+        }
+        let (up, down) = self.transport.bytes();
+        self.stats.set_counter("svc_bytes_up", up);
+        self.stats.set_counter("svc_bytes_down", down);
+        self.stats
+            .set_counter("svc_max_slice_bytes", self.max_slice_bytes as u64);
+        self.stats.set_counter("svc_clock", self.registry.clock());
+
+        self.tracer.instant("svc_round_served", &|| {
+            vec![
+                ("round", round.to_string()),
+                ("reported", reports.len().to_string()),
+                ("stragglers", missing.to_string()),
+                ("connected_stragglers", end.stragglers.to_string()),
+                ("expired", start.expired.to_string()),
+            ]
+        });
+        self.tracer.end("svc_round");
+
+        plan.assignments
+            .iter()
+            .filter_map(|a| {
+                reports.get(&a.device_id).map(|r| DeviceOutcome {
+                    device_id: a.device_id,
+                    device: a.device,
+                    tasks: r.tasks,
+                    energy_j: r.energy_j,
+                    sim_time_s: r.sim_time_s,
+                    mean_loss: r.mean_loss,
+                })
+            })
+            .collect()
+    }
+}
+
+impl<T: Transport> RoundBackend for ServiceBackend<T> {
+    fn train(&mut self, plan: &RoundPlan) -> Result<Vec<DeviceOutcome>> {
+        let outcomes = self.serve_round(plan);
+        self.pending = outcomes.len();
+        Ok(outcomes)
+    }
+
+    fn aggregate(&mut self) -> Result<()> {
+        // Mirrors `SimBackend`: a partial round still advances the
+        // model as long as at least one report landed.
+        if self.pending > 0 {
+            self.rounds_aggregated += 1;
+            self.pending = 0;
+        }
+        Ok(())
+    }
+
+    fn evaluate(&mut self) -> Result<f64> {
+        Ok(1.0 / (1.0 + self.rounds_aggregated as f64))
+    }
+}
+
+impl<T: Transport> BackendState for ServiceBackend<T> {
+    fn save_state(&self) -> Json {
+        // Same shape as `SimBackend`: the durable model state is the
+        // aggregation count. Registry/transport state is connection
+        // state — after a resume, clients re-rendezvous, which the
+        // protocol handles as ordinary (re)joins.
+        Json::obj(vec![(
+            "rounds_aggregated",
+            Json::Num(self.rounds_aggregated as f64),
+        )])
+    }
+
+    fn load_state(&mut self, state: &Json) -> Result<()> {
+        self.rounds_aggregated = get_usize(state, "rounds_aggregated")?;
+        self.pending = 0;
+        self.registry = ParticipantRegistry::new(self.cfg.expiry_ticks);
+        self.max_slice_bytes = 0;
+        Ok(())
+    }
+}

@@ -1,0 +1,158 @@
+//! Transport seam + the in-memory loopback implementation.
+//!
+//! The service is transport-agnostic: [`super::ServiceBackend`] talks
+//! only to the [`Transport`] trait — drain requests, deliver replies,
+//! tick the far side. [`Loopback`] is the shipped implementation: a
+//! pair of in-memory queues (one client→server FIFO, per-client reply
+//! inboxes) with a pluggable [`ClientDriver`] as the far side. The pump
+//! is single-threaded and frames drain in arrival order, so a loopback
+//! campaign is bit-deterministic — the property the digest-equivalence
+//! tests and the CI service-smoke leg rely on.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::protocol::ClientId;
+
+/// The in-memory channel pair a [`ClientDriver`] sees: send frames up,
+/// receive frames addressed to a client. Byte counters feed the
+/// `svc_bytes_*` stats and the wire-payload bench assertion.
+#[derive(Debug, Default)]
+pub struct Wire {
+    requests: VecDeque<String>,
+    inboxes: BTreeMap<ClientId, VecDeque<String>>,
+    bytes_up: u64,
+    bytes_down: u64,
+}
+
+impl Wire {
+    /// Client side: send an encoded request frame to the coordinator.
+    pub fn send(&mut self, frame: String) {
+        self.bytes_up += frame.len() as u64;
+        self.requests.push_back(frame);
+    }
+
+    /// Client side: drain every frame addressed to `client`.
+    pub fn recv(&mut self, client: ClientId) -> Vec<String> {
+        match self.inboxes.get_mut(&client) {
+            Some(inbox) => inbox.drain(..).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Server side: deliver an encoded reply frame to a client inbox.
+    pub fn deliver(&mut self, client: ClientId, frame: String) {
+        self.bytes_down += frame.len() as u64;
+        self.inboxes.entry(client).or_default().push_back(frame);
+    }
+
+    /// Server side: drain every queued request, in arrival order.
+    pub fn drain_requests(&mut self) -> Vec<String> {
+        self.requests.drain(..).collect()
+    }
+
+    /// `(client→server, server→client)` bytes carried so far.
+    pub fn bytes(&self) -> (u64, u64) {
+        (self.bytes_up, self.bytes_down)
+    }
+}
+
+/// The far side of a loopback wire: owns the client population and
+/// advances it one logical tick at a time. Implementations must be
+/// deterministic functions of `(their own state, now, inbox contents)` —
+/// no wall clock, no thread timing — or replay breaks.
+pub trait ClientDriver {
+    /// Advance every client one tick at logical time `now`: read reply
+    /// frames from the inboxes, update local state, send new requests.
+    fn tick(&mut self, now: u64, wire: &mut Wire);
+}
+
+/// Server-side transport handle: what [`super::ServiceBackend`] pumps.
+pub trait Transport {
+    /// Advance the far side one logical tick.
+    fn tick(&mut self, now: u64);
+    /// Drain every queued client→server frame, in arrival order.
+    fn drain_requests(&mut self) -> Vec<String>;
+    /// Deliver a server→client frame.
+    fn deliver(&mut self, client: ClientId, frame: String);
+    /// `(client→server, server→client)` bytes carried so far.
+    fn bytes(&self) -> (u64, u64);
+}
+
+/// In-memory transport: a [`Wire`] with a [`ClientDriver`] attached.
+#[derive(Debug)]
+pub struct Loopback<D> {
+    wire: Wire,
+    driver: D,
+}
+
+impl<D: ClientDriver> Loopback<D> {
+    /// Wrap a client driver in a fresh wire.
+    pub fn new(driver: D) -> Self {
+        Loopback {
+            wire: Wire::default(),
+            driver,
+        }
+    }
+
+    /// The attached driver (stats and tests).
+    pub fn driver(&self) -> &D {
+        &self.driver
+    }
+
+    /// Mutable driver access (reseeding between campaigns).
+    pub fn driver_mut(&mut self) -> &mut D {
+        &mut self.driver
+    }
+}
+
+impl<D: ClientDriver> Transport for Loopback<D> {
+    fn tick(&mut self, now: u64) {
+        self.driver.tick(now, &mut self.wire);
+    }
+
+    fn drain_requests(&mut self) -> Vec<String> {
+        self.wire.drain_requests()
+    }
+
+    fn deliver(&mut self, client: ClientId, frame: String) {
+        self.wire.deliver(client, frame);
+    }
+
+    fn bytes(&self) -> (u64, u64) {
+        self.wire.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo {
+        sent: usize,
+    }
+
+    impl ClientDriver for Echo {
+        fn tick(&mut self, now: u64, wire: &mut Wire) {
+            for frame in wire.recv(7) {
+                assert!(frame.starts_with("pong"));
+            }
+            wire.send(format!("ping {now} #{}", self.sent));
+            self.sent += 1;
+        }
+    }
+
+    #[test]
+    fn frames_flow_in_fifo_order_and_bytes_are_counted() {
+        let mut lb = Loopback::new(Echo { sent: 0 });
+        lb.tick(1);
+        lb.tick(2);
+        let frames = lb.drain_requests();
+        assert_eq!(frames, vec!["ping 1 #0".to_string(), "ping 2 #1".to_string()]);
+        lb.deliver(7, "pong".into());
+        lb.tick(3); // driver consumes the pong without complaint
+        let (up, down) = lb.bytes();
+        assert_eq!(up as usize, "ping 1 #0".len() + "ping 2 #1".len() + "ping 3 #2".len());
+        assert_eq!(down as usize, "pong".len());
+        assert_eq!(lb.driver().sent, 3);
+    }
+}

@@ -1,0 +1,206 @@
+//! The networked coordinator service: the round loop served over a
+//! wire instead of a function call.
+//!
+//! Layers, innermost out:
+//!
+//! - [`protocol`] — the four-request/five-reply message set
+//!   ([`Protocol`], [`Reply`]) as single-line JSON frames; the schedule
+//!   payload is one run-length [`ScheduleSlice`] per device (one class
+//!   cost + scalars — O(classes) on the wire, never O(devices)).
+//! - [`registry`] — connected participants with heartbeat expiry,
+//!   rejoin, and the per-round Standby→Selected→Training→Done cycle
+//!   ([`ParticipantRegistry`]), on a logical tick clock.
+//! - [`loopback`] — the [`Transport`] seam plus the shipped in-memory
+//!   implementation ([`Loopback`] + [`Wire`]) with a pluggable
+//!   [`ClientDriver`] far side.
+//! - [`backend`] — [`ServiceBackend`]`: RoundBackend`: `train(plan)`
+//!   pumps the transport until every scheduled device reported or the
+//!   tick deadline lapsed, then returns outcomes in assignment order
+//!   (absentees simply missing — the partial-round shape the
+//!   coordinator already journals deterministically).
+//! - [`sim_clients`] — [`SimFleet`], a deterministic simulated client
+//!   population (hash-driven join stagger, heartbeats, straggler
+//!   jitter, deadline misses, post-report churn) that drives 10⁵–10⁶
+//!   clients through the full protocol.
+//!
+//! The whole stack is wall-clock-free and single-threaded, so a
+//! networked campaign with churn is *digest-identical* to the
+//! in-process [`crate::coordinator::SimBackend`] reference on the same
+//! fleet (proven at this level below, at store level in
+//! `tests/svc_equivalence.rs`, and across SIGKILL in the CI
+//! service-smoke leg).
+
+pub mod backend;
+pub mod loopback;
+pub mod protocol;
+pub mod registry;
+pub mod sim_clients;
+
+pub use backend::{ServiceBackend, ServiceConfig};
+pub use loopback::{ClientDriver, Loopback, Transport, Wire};
+pub use protocol::{ClientId, ParticipantPhase, Protocol, RejectReason, Reply, ScheduleSlice};
+pub use registry::{Joined, Participant, ParticipantRegistry, ReportVerdict};
+pub use sim_clients::{SimClientsConfig, SimFleet};
+
+/// The shipped loopback service: simulated fleet behind the in-memory
+/// transport — what `train --transport loopback` and the benches run.
+pub type LoopbackService = ServiceBackend<Loopback<SimFleet>>;
+
+/// Wire a simulated fleet for the given device ids into a loopback
+/// service.
+pub fn loopback_service(
+    svc: ServiceConfig,
+    sim: SimClientsConfig,
+    device_ids: Vec<usize>,
+) -> LoopbackService {
+    ServiceBackend::new(svc, Loopback::new(SimFleet::new(device_ids, sim)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{
+        Assignment, BackendState, RoundBackend, RoundPlan, SimBackend,
+    };
+    use crate::sched::costs::CostFn;
+    use crate::sched::instance::{Instance, Schedule};
+
+    fn plan(round: usize) -> RoundPlan {
+        let inst = Instance::new(
+            6,
+            vec![0, 0, 0],
+            vec![4, 4, 4],
+            vec![
+                CostFn::Affine { fixed: 0.5, per_task: 2.0 },
+                CostFn::Quadratic { fixed: 0.7, a: 0.3, b: 1.1 },
+                CostFn::Affine { fixed: 0.0, per_task: 5.0 },
+            ],
+        )
+        .unwrap();
+        RoundPlan {
+            round,
+            schedule: Schedule::new(vec![3, 2, 1]),
+            assignments: vec![
+                Assignment { slot: 0, device: 0, device_id: 10, tasks: 3, energy_scale: 1.0 },
+                Assignment { slot: 1, device: 1, device_id: 11, tasks: 2, energy_scale: 1.0 },
+                Assignment { slot: 2, device: 2, device_id: 12, tasks: 1, energy_scale: 1.0 },
+            ],
+            instance: inst,
+        }
+    }
+
+    fn assert_same_outcomes(
+        a: &[crate::coordinator::DeviceOutcome],
+        b: &[crate::coordinator::DeviceOutcome],
+    ) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.device_id, y.device_id);
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.tasks, y.tasks);
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+            assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits());
+            assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn served_round_is_bit_identical_to_sim_backend() {
+        let mut sim = SimBackend::new();
+        let mut svc = loopback_service(
+            ServiceConfig::default(),
+            SimClientsConfig { seed: 42, churn_permille: 1000, ..SimClientsConfig::default() },
+            vec![10, 11, 12],
+        );
+        for round in 0..4 {
+            let p = plan(round);
+            let reference = sim.train(&p).unwrap();
+            let served = svc.train(&p).unwrap();
+            assert_same_outcomes(&reference, &served);
+            sim.aggregate().unwrap();
+            svc.aggregate().unwrap();
+            assert_eq!(
+                sim.evaluate().unwrap().to_bits(),
+                svc.evaluate().unwrap().to_bits()
+            );
+        }
+        // Churn actually happened (rejoins observed) yet outcomes
+        // stayed identical — churn is digest-neutral by construction.
+        assert!(svc.stats().counter("svc_rejoins") > 0, "churn never fired");
+        assert_eq!(svc.stats().counter("svc_stragglers"), 0);
+    }
+
+    #[test]
+    fn missed_deadlines_yield_partial_rounds() {
+        let mut svc = loopback_service(
+            ServiceConfig::default(),
+            SimClientsConfig { seed: 7, miss_permille: 1000, ..SimClientsConfig::default() },
+            vec![10, 11, 12],
+        );
+        let served = svc.train(&plan(0)).unwrap();
+        assert!(served.is_empty(), "every report was dropped");
+        assert_eq!(svc.stats().counter("svc_partial_rounds"), 1);
+        assert_eq!(svc.stats().counter("svc_stragglers"), 3);
+        // A fully-missed round does not advance the model (mirrors
+        // SimBackend's empty-pending rule).
+        let before = svc.evaluate().unwrap();
+        svc.aggregate().unwrap();
+        assert_eq!(svc.evaluate().unwrap().to_bits(), before.to_bits());
+    }
+
+    #[test]
+    fn state_roundtrip_matches_sim_backend_shape() {
+        let mut svc = loopback_service(
+            ServiceConfig::default(),
+            SimClientsConfig::default(),
+            vec![10, 11, 12],
+        );
+        svc.train(&plan(0)).unwrap();
+        svc.aggregate().unwrap();
+        let saved = svc.save_state();
+        let mut sim = SimBackend::new();
+        sim.load_state(&saved).unwrap();
+        assert_eq!(
+            sim.evaluate().unwrap().to_bits(),
+            svc.evaluate().unwrap().to_bits(),
+            "service state is interchangeable with the sim backend's"
+        );
+        let mut fresh = loopback_service(
+            ServiceConfig::default(),
+            SimClientsConfig::default(),
+            vec![10, 11, 12],
+        );
+        fresh.load_state(&saved).unwrap();
+        // The resumed service re-serves rounds from a cold registry:
+        // clients re-rendezvous and the next round still completes.
+        let served = fresh.train(&plan(1)).unwrap();
+        assert_eq!(served.len(), 3);
+    }
+
+    #[test]
+    fn slice_frames_do_not_grow_with_fleet_size() {
+        let mut svc_small = loopback_service(
+            ServiceConfig::default(),
+            SimClientsConfig::default(),
+            vec![10, 11, 12, 13],
+        );
+        svc_small.train(&plan(0)).unwrap();
+        // The same three slices served out of a 4096-client fleet:
+        // every extra client only rendezvouses and heartbeats; the
+        // slice frame is unchanged.
+        let mut ids: Vec<usize> = vec![10, 11, 12];
+        ids.extend(100..4196usize);
+        let mut svc_big = loopback_service(
+            ServiceConfig::default(),
+            SimClientsConfig::default(),
+            ids,
+        );
+        svc_big.train(&plan(0)).unwrap();
+        assert!(svc_small.max_slice_bytes() > 0);
+        assert_eq!(
+            svc_small.max_slice_bytes(),
+            svc_big.max_slice_bytes(),
+            "slice payload must be O(classes), independent of fleet size"
+        );
+    }
+}

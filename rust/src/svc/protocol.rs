@@ -1,0 +1,431 @@
+//! The coordinator service wire protocol.
+//!
+//! Four client→coordinator messages ([`Protocol`]) and five replies
+//! ([`Reply`]), encoded as single-line JSON frames. The schedule payload
+//! ([`ScheduleSlice`]) is the run-length slice of the class-level
+//! schedule owned by one device: *one* slot's drift-inclusive cost
+//! function plus four scalars. Its size is O(classes) in the sense that
+//! it names one class and carries one class cost — it never enumerates
+//! devices, so the frame does not grow with fleet size (asserted by the
+//! `fleet_scale` service scenario).
+//!
+//! Floats cross the wire through [`crate::store::jf`] — the same
+//! NaN/∞-safe codec the snapshot layer uses — and cost functions through
+//! [`crate::store::snapshot::costfn_to_json`], so a client-side
+//! `cost.eval(tasks)` reproduces the coordinator-side energy bits
+//! exactly. That exactness is what lets a networked campaign's journal
+//! digest equal the in-process reference run.
+
+use crate::error::{FedError, Result};
+use crate::sched::costs::CostFn;
+use crate::store::snapshot::{costfn_from_json, costfn_to_json};
+use crate::store::{get, get_f64, get_str, get_u64, get_usize, jf, ju};
+use crate::util::json::Json;
+
+/// Opaque client connection identity. A device that disconnects and
+/// rejoins comes back as a *new* client id bound to the same device id.
+pub type ClientId = u64;
+
+/// Per-round participant lifecycle, modeled on xaynet's coordinator
+/// state machine: everyone idles in `Standby`; the round start promotes
+/// scheduled, live participants to `Selected`; fetching the slice makes
+/// them `Training`; an accepted report makes them `Done`; the round end
+/// returns everyone to `Standby`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParticipantPhase {
+    /// Connected, not part of the current round.
+    Standby,
+    /// Scheduled this round; slice not yet fetched.
+    Selected,
+    /// Slice fetched; result not yet reported.
+    Training,
+    /// Result accepted this round.
+    Done,
+}
+
+impl ParticipantPhase {
+    /// Stable wire name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ParticipantPhase::Standby => "standby",
+            ParticipantPhase::Selected => "selected",
+            ParticipantPhase::Training => "training",
+            ParticipantPhase::Done => "done",
+        }
+    }
+
+    /// Parse a wire name.
+    pub fn parse(s: &str) -> Result<ParticipantPhase> {
+        match s {
+            "standby" => Ok(ParticipantPhase::Standby),
+            "selected" => Ok(ParticipantPhase::Selected),
+            "training" => Ok(ParticipantPhase::Training),
+            "done" => Ok(ParticipantPhase::Done),
+            other => Err(FedError::Config(format!("unknown phase '{other}'"))),
+        }
+    }
+}
+
+/// Why a request was turned down. Carried on [`Reply::Rejected`] so
+/// clients can recover deterministically (a `WrongRound` report means
+/// "drop it and re-poll", not "retry").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// No live participant bound to this (client, device) pair —
+    /// expired or superseded by a rejoin; re-rendezvous.
+    Unknown,
+    /// FetchSlice from a participant the round did not select.
+    NotSelected,
+    /// The message named a round other than the one being served
+    /// (a straggler report that missed the deadline lands here).
+    WrongRound,
+    /// A second report for a device that already reported this round.
+    Duplicate,
+    /// The reported task count does not match the assigned slice.
+    TaskMismatch,
+}
+
+impl RejectReason {
+    /// Stable wire name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectReason::Unknown => "unknown",
+            RejectReason::NotSelected => "not-selected",
+            RejectReason::WrongRound => "wrong-round",
+            RejectReason::Duplicate => "duplicate",
+            RejectReason::TaskMismatch => "task-mismatch",
+        }
+    }
+
+    /// Parse a wire name.
+    pub fn parse(s: &str) -> Result<RejectReason> {
+        match s {
+            "unknown" => Ok(RejectReason::Unknown),
+            "not-selected" => Ok(RejectReason::NotSelected),
+            "wrong-round" => Ok(RejectReason::WrongRound),
+            "duplicate" => Ok(RejectReason::Duplicate),
+            "task-mismatch" => Ok(RejectReason::TaskMismatch),
+            other => Err(FedError::Config(format!("unknown reject reason '{other}'"))),
+        }
+    }
+}
+
+/// One device's run-length slice of the class-level schedule: the slot
+/// (class) it belongs to, its task count, and the slot's current
+/// drift-inclusive cost function. The client evaluates `cost.eval(tasks)`
+/// for its measured energy and derives its loss proxy from
+/// `model_version` — bit-identical to what the in-process `SimBackend`
+/// computes, which is the digest-equivalence contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduleSlice {
+    /// Round this slice belongs to.
+    pub round: usize,
+    /// The device the slice is addressed to.
+    pub device_id: usize,
+    /// Class slot in the round's deduplicated instance.
+    pub slot: usize,
+    /// Local training workload (number of tasks).
+    pub tasks: usize,
+    /// Aggregation count of the global model the client trains from.
+    pub model_version: usize,
+    /// Drift-inclusive cost of the device's class this round.
+    pub cost: CostFn,
+}
+
+/// Client → coordinator messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Protocol {
+    /// First contact (and re-contact after an expiry): `client` claims
+    /// the fleet identity `device_id`.
+    Rendezvous { client: ClientId, device_id: usize },
+    /// Liveness ping; the ack carries the participant's current phase,
+    /// which is also how a client discovers it was selected.
+    Heartbeat { client: ClientId, device_id: usize },
+    /// Request this round's [`ScheduleSlice`] (legal once a heartbeat
+    /// ack reported `Selected`).
+    FetchSlice {
+        client: ClientId,
+        device_id: usize,
+        round: usize,
+    },
+    /// Report the trained result: measured energy and local loss.
+    ReportResult {
+        client: ClientId,
+        device_id: usize,
+        round: usize,
+        tasks: usize,
+        energy_j: f64,
+        sim_time_s: f64,
+        mean_loss: f64,
+    },
+}
+
+impl Protocol {
+    /// The sender, for reply routing.
+    pub fn client(&self) -> ClientId {
+        match *self {
+            Protocol::Rendezvous { client, .. }
+            | Protocol::Heartbeat { client, .. }
+            | Protocol::FetchSlice { client, .. }
+            | Protocol::ReportResult { client, .. } => client,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Protocol::Rendezvous { client, device_id } => Json::obj(vec![
+                ("t", Json::Str("rendezvous".into())),
+                ("client", ju(*client)),
+                ("device", Json::Num(*device_id as f64)),
+            ]),
+            Protocol::Heartbeat { client, device_id } => Json::obj(vec![
+                ("t", Json::Str("heartbeat".into())),
+                ("client", ju(*client)),
+                ("device", Json::Num(*device_id as f64)),
+            ]),
+            Protocol::FetchSlice {
+                client,
+                device_id,
+                round,
+            } => Json::obj(vec![
+                ("t", Json::Str("fetch".into())),
+                ("client", ju(*client)),
+                ("device", Json::Num(*device_id as f64)),
+                ("round", Json::Num(*round as f64)),
+            ]),
+            Protocol::ReportResult {
+                client,
+                device_id,
+                round,
+                tasks,
+                energy_j,
+                sim_time_s,
+                mean_loss,
+            } => Json::obj(vec![
+                ("t", Json::Str("report".into())),
+                ("client", ju(*client)),
+                ("device", Json::Num(*device_id as f64)),
+                ("round", Json::Num(*round as f64)),
+                ("tasks", Json::Num(*tasks as f64)),
+                ("energy_j", jf(*energy_j)),
+                ("sim_time_s", jf(*sim_time_s)),
+                ("mean_loss", jf(*mean_loss)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Protocol> {
+        let client = get_u64(v, "client")?;
+        let device_id = get_usize(v, "device")?;
+        match get_str(v, "t")? {
+            "rendezvous" => Ok(Protocol::Rendezvous { client, device_id }),
+            "heartbeat" => Ok(Protocol::Heartbeat { client, device_id }),
+            "fetch" => Ok(Protocol::FetchSlice {
+                client,
+                device_id,
+                round: get_usize(v, "round")?,
+            }),
+            "report" => Ok(Protocol::ReportResult {
+                client,
+                device_id,
+                round: get_usize(v, "round")?,
+                tasks: get_usize(v, "tasks")?,
+                energy_j: get_f64(v, "energy_j")?,
+                sim_time_s: get_f64(v, "sim_time_s")?,
+                mean_loss: get_f64(v, "mean_loss")?,
+            }),
+            other => Err(FedError::Config(format!("unknown request kind '{other}'"))),
+        }
+    }
+
+    /// Encode as a single-line wire frame.
+    pub fn encode(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Decode a wire frame.
+    pub fn decode(frame: &str) -> Result<Protocol> {
+        Protocol::from_json(&Json::parse(frame)?)
+    }
+}
+
+/// Coordinator → client replies.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// Rendezvous accepted; heartbeat at least every `expiry_ticks`
+    /// logical ticks or be expired from the registry.
+    Welcome { expiry_ticks: u64 },
+    /// Heartbeat ack: the participant's phase and the round being
+    /// served.
+    Beat {
+        phase: ParticipantPhase,
+        round: usize,
+    },
+    /// The requested schedule slice.
+    Slice(ScheduleSlice),
+    /// Report accepted — the device's energy/loss is in this round.
+    Accepted,
+    /// Request turned down; see [`RejectReason`].
+    Rejected { reason: RejectReason },
+}
+
+impl Reply {
+    fn to_json(&self) -> Json {
+        match self {
+            Reply::Welcome { expiry_ticks } => Json::obj(vec![
+                ("t", Json::Str("welcome".into())),
+                ("expiry_ticks", Json::Num(*expiry_ticks as f64)),
+            ]),
+            Reply::Beat { phase, round } => Json::obj(vec![
+                ("t", Json::Str("beat".into())),
+                ("phase", Json::Str(phase.as_str().into())),
+                ("round", Json::Num(*round as f64)),
+            ]),
+            Reply::Slice(s) => Json::obj(vec![
+                ("t", Json::Str("slice".into())),
+                ("round", Json::Num(s.round as f64)),
+                ("device", Json::Num(s.device_id as f64)),
+                ("slot", Json::Num(s.slot as f64)),
+                ("tasks", Json::Num(s.tasks as f64)),
+                ("model_version", Json::Num(s.model_version as f64)),
+                ("cost", costfn_to_json(&s.cost)),
+            ]),
+            Reply::Accepted => Json::obj(vec![("t", Json::Str("accepted".into()))]),
+            Reply::Rejected { reason } => Json::obj(vec![
+                ("t", Json::Str("rejected".into())),
+                ("reason", Json::Str(reason.as_str().into())),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Reply> {
+        match get_str(v, "t")? {
+            "welcome" => Ok(Reply::Welcome {
+                expiry_ticks: get_u64(v, "expiry_ticks")?,
+            }),
+            "beat" => Ok(Reply::Beat {
+                phase: ParticipantPhase::parse(get_str(v, "phase")?)?,
+                round: get_usize(v, "round")?,
+            }),
+            "slice" => Ok(Reply::Slice(ScheduleSlice {
+                round: get_usize(v, "round")?,
+                device_id: get_usize(v, "device")?,
+                slot: get_usize(v, "slot")?,
+                tasks: get_usize(v, "tasks")?,
+                model_version: get_usize(v, "model_version")?,
+                cost: costfn_from_json(get(v, "cost")?)?,
+            })),
+            "accepted" => Ok(Reply::Accepted),
+            "rejected" => Ok(Reply::Rejected {
+                reason: RejectReason::parse(get_str(v, "reason")?)?,
+            }),
+            other => Err(FedError::Config(format!("unknown reply kind '{other}'"))),
+        }
+    }
+
+    /// Encode as a single-line wire frame.
+    pub fn encode(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Decode a wire frame.
+    pub fn decode(frame: &str) -> Result<Reply> {
+        Reply::from_json(&Json::parse(frame)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(msg: Protocol) {
+        let decoded = Protocol::decode(&msg.encode()).expect("decode");
+        assert_eq!(decoded, msg);
+    }
+
+    fn roundtrip_reply(msg: Reply) {
+        let decoded = Reply::decode(&msg.encode()).expect("decode");
+        assert_eq!(decoded, msg);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(Protocol::Rendezvous {
+            client: u64::MAX,
+            device_id: 7,
+        });
+        roundtrip_req(Protocol::Heartbeat {
+            client: 3,
+            device_id: 0,
+        });
+        roundtrip_req(Protocol::FetchSlice {
+            client: 9,
+            device_id: 4,
+            round: 12,
+        });
+        roundtrip_req(Protocol::ReportResult {
+            client: 0x1_0000_0001,
+            device_id: 99_999,
+            round: 3,
+            tasks: 17,
+            energy_j: 0.1 + 0.2, // non-representable sum must survive exactly
+            sim_time_s: 0.0,
+            mean_loss: 1.0 / 3.0,
+        });
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        roundtrip_reply(Reply::Welcome { expiry_ticks: 12 });
+        roundtrip_reply(Reply::Beat {
+            phase: ParticipantPhase::Selected,
+            round: 5,
+        });
+        roundtrip_reply(Reply::Slice(ScheduleSlice {
+            round: 2,
+            device_id: 41,
+            slot: 3,
+            tasks: 8,
+            model_version: 2,
+            cost: CostFn::Quadratic {
+                fixed: 0.125,
+                a: 0.25,
+                b: 1.5,
+            },
+        }));
+        roundtrip_reply(Reply::Accepted);
+        roundtrip_reply(Reply::Rejected {
+            reason: RejectReason::WrongRound,
+        });
+    }
+
+    #[test]
+    fn slice_cost_evaluates_identically_after_roundtrip() {
+        let cost = CostFn::Quadratic {
+            fixed: 5.3,
+            a: 0.7,
+            b: 0.31,
+        };
+        let slice = Reply::Slice(ScheduleSlice {
+            round: 0,
+            device_id: 0,
+            slot: 0,
+            tasks: 13,
+            model_version: 0,
+            cost: cost.clone(),
+        });
+        let decoded = Reply::decode(&slice.encode()).expect("decode");
+        let Reply::Slice(s) = decoded else {
+            panic!("wrong reply kind")
+        };
+        assert_eq!(s.cost.eval(13).to_bits(), cost.eval(13).to_bits());
+    }
+
+    #[test]
+    fn malformed_frames_are_errors_not_panics() {
+        assert!(Protocol::decode("not json").is_err());
+        assert!(Protocol::decode("{\"t\":\"nope\",\"client\":\"0\",\"device\":1}").is_err());
+        assert!(Reply::decode("{\"t\":\"beat\",\"phase\":\"bogus\",\"round\":0}").is_err());
+        assert!(Reply::decode("{}").is_err());
+    }
+}

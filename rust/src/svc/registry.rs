@@ -1,0 +1,395 @@
+//! The participant registry: who is connected, how fresh, and where in
+//! the per-round lifecycle.
+//!
+//! Time is a logical tick counter advanced by the service pump — no
+//! wall clock anywhere, so campaigns replay bit-identically. Liveness
+//! is `clock - last_seen <= expiry_ticks`; expiry is evaluated at round
+//! boundaries only (inside [`ParticipantRegistry::begin_round`]), so a
+//! participant that was live when the round started cannot vanish
+//! mid-round — within a round, the deadline governs.
+//!
+//! Invariants the property tests pin (`tests/svc_equivalence.rs`):
+//! an expired participant is never in `Selected`/`Training`, a report
+//! is accepted at most once per (device, round), and an accepted report
+//! is never dropped by a later registry event.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::protocol::{ClientId, ParticipantPhase};
+
+/// One connected participant: the client identity currently bound to a
+/// device, its round phase, and when it was last heard from.
+#[derive(Clone, Debug)]
+pub struct Participant {
+    /// Current client binding (rejoin replaces it).
+    pub client: ClientId,
+    /// Per-round lifecycle phase.
+    pub phase: ParticipantPhase,
+    /// Logical tick of the last message from this client.
+    pub last_seen: u64,
+}
+
+/// Outcome of a rendezvous.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Joined {
+    /// The device had no registry entry.
+    New,
+    /// The device was already registered; the new client supersedes the
+    /// old binding (reconnect after churn or expiry).
+    Rejoin,
+}
+
+/// Outcome of a report, decided by the registry's phase machine. The
+/// service maps everything but `Accepted` to a [`super::protocol::RejectReason`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReportVerdict {
+    /// First report from a `Training` participant for the served round.
+    Accepted,
+    /// No participant bound to this (client, device) pair.
+    Unknown,
+    /// The report named a round other than the one being served.
+    WrongRound,
+    /// The participant already reported this round.
+    Duplicate,
+    /// The participant never fetched its slice this round.
+    NotTraining,
+}
+
+/// What [`ParticipantRegistry::begin_round`] did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundStart {
+    /// Stale participants removed at the boundary.
+    pub expired: usize,
+    /// Scheduled devices with a live participant at round start (the
+    /// rest must rejoin mid-round or miss the deadline).
+    pub connected: usize,
+}
+
+/// What [`ParticipantRegistry::finish_round`] observed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundEnd {
+    /// Participants that reached `Done`.
+    pub reported: usize,
+    /// Participants still in `Selected`/`Training` at the deadline.
+    pub stragglers: usize,
+}
+
+/// Connected-participant table keyed by device id, with heartbeat
+/// expiry, rejoin, and the Standby→Selected→Training→Done round cycle.
+#[derive(Debug, Default)]
+pub struct ParticipantRegistry {
+    by_device: BTreeMap<usize, Participant>,
+    /// Devices scheduled in the round being served.
+    selected: BTreeSet<usize>,
+    round: usize,
+    expiry_ticks: u64,
+    clock: u64,
+}
+
+impl ParticipantRegistry {
+    /// New empty registry with the given heartbeat expiry.
+    pub fn new(expiry_ticks: u64) -> Self {
+        ParticipantRegistry {
+            expiry_ticks,
+            ..ParticipantRegistry::default()
+        }
+    }
+
+    /// Current logical tick.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Heartbeat expiry in ticks (advertised in `Welcome`).
+    pub fn expiry_ticks(&self) -> u64 {
+        self.expiry_ticks
+    }
+
+    /// The round currently being served.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Advance the logical clock one tick.
+    pub fn advance(&mut self) {
+        self.clock += 1;
+    }
+
+    /// Connected participants.
+    pub fn len(&self) -> usize {
+        self.by_device.len()
+    }
+
+    /// Whether no participant is connected.
+    pub fn is_empty(&self) -> bool {
+        self.by_device.is_empty()
+    }
+
+    /// Look up the participant bound to a device.
+    pub fn participant(&self, device_id: usize) -> Option<&Participant> {
+        self.by_device.get(&device_id)
+    }
+
+    /// Iterate all participants (tests and stats).
+    pub fn participants(&self) -> impl Iterator<Item = (usize, &Participant)> {
+        self.by_device.iter().map(|(&d, p)| (d, p))
+    }
+
+    fn is_fresh(&self, p: &Participant) -> bool {
+        self.clock.saturating_sub(p.last_seen) <= self.expiry_ticks
+    }
+
+    /// Bind `client` to `device_id`. An existing binding is replaced —
+    /// that is the rejoin path, and it resets the phase to `Standby` so
+    /// a reconnecting device re-earns selection through a heartbeat —
+    /// with one exception: `Done` survives the rebind. A round's
+    /// accepted report belongs to the *device*, not the connection that
+    /// delivered it; preserving `Done` is what makes a
+    /// report-then-rejoin interleaving unable to double-report.
+    pub fn rendezvous(&mut self, client: ClientId, device_id: usize) -> Joined {
+        let (phase, joined) = match self.by_device.get(&device_id) {
+            Some(p) if p.phase == ParticipantPhase::Done => {
+                (ParticipantPhase::Done, Joined::Rejoin)
+            }
+            Some(_) => (ParticipantPhase::Standby, Joined::Rejoin),
+            None => (ParticipantPhase::Standby, Joined::New),
+        };
+        self.by_device.insert(
+            device_id,
+            Participant {
+                client,
+                phase,
+                last_seen: self.clock,
+            },
+        );
+        joined
+    }
+
+    /// Start serving `round` for the given scheduled devices: expire
+    /// stale participants first (the only expiry point — so nothing
+    /// selected below can already be expired), then promote live
+    /// scheduled participants `Standby → Selected`. Devices that
+    /// reconnect later in the round are promoted lazily by
+    /// [`ParticipantRegistry::heartbeat`].
+    pub fn begin_round(&mut self, round: usize, devices: &[usize]) -> RoundStart {
+        let clock = self.clock;
+        let expiry = self.expiry_ticks;
+        let before = self.by_device.len();
+        self.by_device
+            .retain(|_, p| clock.saturating_sub(p.last_seen) <= expiry);
+        let expired = before - self.by_device.len();
+
+        self.round = round;
+        self.selected = devices.iter().copied().collect();
+        let mut connected = 0;
+        for (d, p) in self.by_device.iter_mut() {
+            debug_assert_eq!(p.phase, ParticipantPhase::Standby);
+            if self.selected.contains(d) {
+                p.phase = ParticipantPhase::Selected;
+                connected += 1;
+            }
+        }
+        RoundStart { expired, connected }
+    }
+
+    /// Record a liveness ping; returns the participant's phase and the
+    /// served round, or `None` for an unknown or superseded client. A
+    /// scheduled participant still in `Standby` (it rejoined after round
+    /// start) is promoted to `Selected` here — it is live by
+    /// construction, preserving the no-expired-selection invariant.
+    pub fn heartbeat(
+        &mut self,
+        client: ClientId,
+        device_id: usize,
+    ) -> Option<(ParticipantPhase, usize)> {
+        let scheduled = self.selected.contains(&device_id);
+        let clock = self.clock;
+        let round = self.round;
+        let p = self.by_device.get_mut(&device_id)?;
+        if p.client != client {
+            return None;
+        }
+        p.last_seen = clock;
+        if scheduled && p.phase == ParticipantPhase::Standby {
+            p.phase = ParticipantPhase::Selected;
+        }
+        Some((p.phase, round))
+    }
+
+    /// Hand out the slice: `Selected → Training`. Idempotent for a
+    /// participant already `Training` (a retried fetch gets the slice
+    /// again); refused for any other phase, a stale round, or a
+    /// superseded client.
+    pub fn fetch(&mut self, client: ClientId, device_id: usize, round: usize) -> bool {
+        if round != self.round {
+            return false;
+        }
+        let clock = self.clock;
+        let Some(p) = self.by_device.get_mut(&device_id) else {
+            return false;
+        };
+        if p.client != client {
+            return false;
+        }
+        match p.phase {
+            ParticipantPhase::Selected | ParticipantPhase::Training => {
+                p.last_seen = clock;
+                p.phase = ParticipantPhase::Training;
+                true
+            }
+            ParticipantPhase::Standby | ParticipantPhase::Done => false,
+        }
+    }
+
+    /// Accept or refuse a report: `Training → Done` exactly once per
+    /// (device, round). A live client's stale-round report still counts
+    /// as liveness (the device is demonstrably up) but is refused.
+    pub fn report(&mut self, client: ClientId, device_id: usize, round: usize) -> ReportVerdict {
+        let clock = self.clock;
+        let served = self.round;
+        let Some(p) = self.by_device.get_mut(&device_id) else {
+            return ReportVerdict::Unknown;
+        };
+        if p.client != client {
+            return ReportVerdict::Unknown;
+        }
+        p.last_seen = clock;
+        if round != served {
+            return ReportVerdict::WrongRound;
+        }
+        match p.phase {
+            ParticipantPhase::Training => {
+                p.phase = ParticipantPhase::Done;
+                ReportVerdict::Accepted
+            }
+            ParticipantPhase::Done => ReportVerdict::Duplicate,
+            ParticipantPhase::Standby | ParticipantPhase::Selected => ReportVerdict::NotTraining,
+        }
+    }
+
+    /// Close the round: count who reported vs. who straggled, then
+    /// return every participant to `Standby` and clear the selection.
+    pub fn finish_round(&mut self) -> RoundEnd {
+        let mut end = RoundEnd::default();
+        for p in self.by_device.values_mut() {
+            match p.phase {
+                ParticipantPhase::Done => end.reported += 1,
+                ParticipantPhase::Selected | ParticipantPhase::Training => end.stragglers += 1,
+                ParticipantPhase::Standby => {}
+            }
+            p.phase = ParticipantPhase::Standby;
+        }
+        self.selected.clear();
+        end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut reg = ParticipantRegistry::new(10);
+        assert_eq!(reg.rendezvous(1, 0), Joined::New);
+        let start = reg.begin_round(0, &[0]);
+        assert_eq!(start.connected, 1);
+        assert_eq!(start.expired, 0);
+        assert_eq!(
+            reg.heartbeat(1, 0),
+            Some((ParticipantPhase::Selected, 0))
+        );
+        assert!(reg.fetch(1, 0, 0));
+        assert_eq!(reg.report(1, 0, 0), ReportVerdict::Accepted);
+        assert_eq!(reg.report(1, 0, 0), ReportVerdict::Duplicate);
+        let end = reg.finish_round();
+        assert_eq!((end.reported, end.stragglers), (1, 0));
+        assert_eq!(
+            reg.participant(0).map(|p| p.phase),
+            Some(ParticipantPhase::Standby)
+        );
+    }
+
+    #[test]
+    fn expiry_removes_and_rejoin_rebinds() {
+        let mut reg = ParticipantRegistry::new(2);
+        reg.rendezvous(1, 0);
+        for _ in 0..3 {
+            reg.advance();
+        }
+        let start = reg.begin_round(0, &[0]);
+        assert_eq!(start.expired, 1);
+        assert_eq!(start.connected, 0);
+        assert!(reg.is_empty());
+        // Rejoin mid-round under a new client id: lazily selected at
+        // the next heartbeat, then the normal path works.
+        assert_eq!(reg.rendezvous(2, 0), Joined::New); // entry was gone
+        assert_eq!(
+            reg.heartbeat(2, 0),
+            Some((ParticipantPhase::Selected, 0))
+        );
+        assert!(reg.fetch(2, 0, 0));
+        assert_eq!(reg.report(2, 0, 0), ReportVerdict::Accepted);
+    }
+
+    #[test]
+    fn superseded_client_is_refused() {
+        let mut reg = ParticipantRegistry::new(10);
+        reg.rendezvous(1, 0);
+        assert_eq!(reg.rendezvous(2, 0), Joined::Rejoin);
+        assert_eq!(reg.heartbeat(1, 0), None);
+        assert_eq!(reg.report(1, 0, 0), ReportVerdict::Unknown);
+        assert!(reg.heartbeat(2, 0).is_some());
+    }
+
+    #[test]
+    fn unselected_participant_cannot_fetch_or_report() {
+        let mut reg = ParticipantRegistry::new(10);
+        reg.rendezvous(1, 0);
+        reg.rendezvous(2, 1);
+        reg.begin_round(0, &[0]);
+        assert_eq!(
+            reg.heartbeat(2, 1),
+            Some((ParticipantPhase::Standby, 0))
+        );
+        assert!(!reg.fetch(2, 1, 0));
+        assert_eq!(reg.report(2, 1, 0), ReportVerdict::NotTraining);
+    }
+
+    #[test]
+    fn rejoin_after_reporting_cannot_double_report() {
+        let mut reg = ParticipantRegistry::new(10);
+        reg.rendezvous(1, 0);
+        reg.begin_round(0, &[0]);
+        assert!(reg.fetch(1, 0, 0));
+        assert_eq!(reg.report(1, 0, 0), ReportVerdict::Accepted);
+        // Churn: the device drops and rejoins mid-round as client 2.
+        assert_eq!(reg.rendezvous(2, 0), Joined::Rejoin);
+        // `Done` survived the rebind: no re-selection, no second accept.
+        assert_eq!(reg.heartbeat(2, 0), Some((ParticipantPhase::Done, 0)));
+        assert!(!reg.fetch(2, 0, 0));
+        assert_eq!(reg.report(2, 0, 0), ReportVerdict::Duplicate);
+        assert_eq!(reg.finish_round().reported, 1);
+    }
+
+    #[test]
+    fn stale_round_messages_are_refused_but_count_as_liveness() {
+        let mut reg = ParticipantRegistry::new(4);
+        reg.rendezvous(1, 0);
+        reg.begin_round(0, &[0]);
+        assert!(reg.fetch(1, 0, 0));
+        reg.finish_round();
+        for _ in 0..3 {
+            reg.advance();
+        }
+        reg.begin_round(1, &[0]);
+        assert!(!reg.fetch(1, 0, 0));
+        assert_eq!(reg.report(1, 0, 0), ReportVerdict::WrongRound);
+        // The stale report refreshed liveness: no expiry next boundary.
+        for _ in 0..4 {
+            reg.advance();
+        }
+        assert_eq!(reg.finish_round().stragglers, 1);
+        assert_eq!(reg.begin_round(2, &[0]).expired, 0);
+    }
+}

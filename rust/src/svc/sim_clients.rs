@@ -1,0 +1,340 @@
+//! Simulated client fleet — the loopback wire's far side.
+//!
+//! Each device is driven by a tiny per-client state machine that speaks
+//! the full protocol: rendezvous, periodic heartbeats, slice fetch on
+//! selection, local "training" (evaluating the slice's cost function,
+//! exactly what [`crate::coordinator::SimBackend`] computes in-process),
+//! and the energy/loss report. All behavior — join stagger, heartbeat
+//! phase, straggler jitter, deadline misses, post-report churn — is a
+//! pure FNV hash of `(seed, salt, round, device)`, never of the wall
+//! clock, so a campaign killed and resumed replays the same fleet
+//! behavior bit-for-bit (the CI service-smoke leg depends on this).
+//!
+//! Churn (`churn_permille`) disconnects a client *after* its accepted
+//! report and rejoins it under a new client id a couple of ticks later:
+//! it exercises rejoin/expiry without perturbing round outcomes, so a
+//! churned campaign stays digest-equal to the in-process reference.
+//! Misses (`miss_permille`) drop the report outright: hard stragglers,
+//! partial rounds — digests then deliberately diverge from the
+//! full-participation reference but remain reproducible. A missed round
+//! leaves no residue in the client (it idles and heartbeats on), so
+//! fleet behavior in round `r+1` never depends on what round `r` did —
+//! the memorylessness that makes a killed-and-resumed campaign replay
+//! the original outcome set exactly.
+
+use crate::util::hash::{mix_u64, FNV_OFFSET};
+
+use super::loopback::{ClientDriver, Wire};
+use super::protocol::{ClientId, ParticipantPhase, Protocol, RejectReason, Reply};
+
+/// Hash-decision salts (arbitrary, fixed: they only need to differ).
+const SALT_JOIN: u64 = 0x1001;
+const SALT_HB: u64 = 0x1002;
+const SALT_DELAY: u64 = 0x1003;
+const SALT_MISS: u64 = 0x1004;
+const SALT_CHURN: u64 = 0x1005;
+
+/// Deterministic per-(round, device) decision value.
+fn decision(seed: u64, salt: u64, round: usize, device: usize) -> u64 {
+    let mut h = mix_u64(FNV_OFFSET, seed);
+    h = mix_u64(h, salt);
+    h = mix_u64(h, round as u64);
+    h = mix_u64(h, device as u64);
+    h
+}
+
+/// Client ids encode `(generation, device)` so a rejoined device comes
+/// back as a distinguishable connection.
+fn client_id(generation: u32, device_id: usize) -> ClientId {
+    ((generation as u64) << 40) | (device_id as u64)
+}
+
+/// Fleet behavior knobs. Defaults match the service defaults in
+/// [`super::ServiceConfig`]: worst-case turnaround (join + heartbeat
+/// discovery + fetch + `max_delay`) stays under the 32-tick deadline,
+/// and the churn gap exceeds the 12-tick expiry when rounds run long.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimClientsConfig {
+    /// Seed for every hash decision.
+    pub seed: u64,
+    /// Permille of (device, round) pairs that disconnect after their
+    /// accepted report and rejoin shortly after (digest-neutral).
+    pub churn_permille: u32,
+    /// Permille of (device, round) pairs whose report is dropped
+    /// outright (hard stragglers; partial rounds).
+    pub miss_permille: u32,
+    /// Heartbeat period in ticks while idle.
+    pub heartbeat_every: u64,
+    /// Max straggler jitter added before a report is sent, in ticks.
+    pub max_delay: u64,
+    /// Ticks a churned client stays offline before re-rendezvousing.
+    pub rejoin_delay: u64,
+}
+
+impl Default for SimClientsConfig {
+    fn default() -> Self {
+        SimClientsConfig {
+            seed: 0,
+            churn_permille: 0,
+            miss_permille: 0,
+            heartbeat_every: 8,
+            max_delay: 8,
+            rejoin_delay: 2,
+        }
+    }
+}
+
+/// Per-client connection state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CState {
+    /// Disconnected; will rendezvous at `wake_at`.
+    Offline,
+    /// Rendezvous sent, waiting for `Welcome`.
+    Joining,
+    /// Connected, heartbeating, available for selection.
+    Idle,
+    /// `FetchSlice` sent, waiting for the slice.
+    Fetching,
+    /// Slice in hand; report fires at `wake_at`.
+    Training,
+    /// Report sent, waiting for the ack.
+    AwaitAck,
+}
+
+/// A computed local result awaiting (or surviving a refused) report.
+#[derive(Clone, Copy, Debug)]
+struct PendingReport {
+    round: usize,
+    tasks: usize,
+    energy_j: f64,
+    mean_loss: f64,
+}
+
+#[derive(Debug)]
+struct Client {
+    device_id: usize,
+    generation: u32,
+    client: ClientId,
+    state: CState,
+    wake_at: u64,
+    hb_offset: u64,
+    result: Option<PendingReport>,
+}
+
+fn send_heartbeat(c: &Client, wire: &mut Wire) {
+    wire.send(
+        Protocol::Heartbeat {
+            client: c.client,
+            device_id: c.device_id,
+        }
+        .encode(),
+    );
+}
+
+/// The whole simulated fleet: one [`Client`] per device, advanced in
+/// device order every tick (deterministic).
+#[derive(Debug)]
+pub struct SimFleet {
+    cfg: SimClientsConfig,
+    clients: Vec<Client>,
+}
+
+impl SimFleet {
+    /// One client per device id, joining within the first few ticks.
+    pub fn new(device_ids: Vec<usize>, cfg: SimClientsConfig) -> Self {
+        let clients = device_ids
+            .into_iter()
+            .map(|device_id| Client {
+                device_id,
+                generation: 1,
+                client: client_id(1, device_id),
+                state: CState::Offline,
+                wake_at: decision(cfg.seed, SALT_JOIN, 0, device_id) % 3,
+                hb_offset: decision(cfg.seed, SALT_HB, 0, device_id) % cfg.heartbeat_every.max(1),
+                result: None,
+            })
+            .collect();
+        SimFleet { cfg, clients }
+    }
+
+    /// The fleet configuration.
+    pub fn cfg(&self) -> &SimClientsConfig {
+        &self.cfg
+    }
+
+    /// Number of simulated clients.
+    pub fn len(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Whether the fleet is empty.
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    /// Total rejoins performed so far (generations beyond the first).
+    pub fn rejoin_count(&self) -> u64 {
+        self.clients
+            .iter()
+            .map(|c| (c.generation - 1) as u64)
+            .sum()
+    }
+}
+
+impl ClientDriver for SimFleet {
+    fn tick(&mut self, now: u64, wire: &mut Wire) {
+        let cfg = self.cfg;
+        for c in &mut self.clients {
+            // 1. Consume replies. Frames addressed to superseded client
+            //    ids are never read — a churned identity is gone.
+            for frame in wire.recv(c.client) {
+                let Ok(reply) = Reply::decode(&frame) else {
+                    continue;
+                };
+                match reply {
+                    Reply::Welcome { .. } => {
+                        if c.state == CState::Joining {
+                            c.state = CState::Idle;
+                            // Probe immediately: selection discovery
+                            // should not wait a full heartbeat period.
+                            send_heartbeat(c, wire);
+                        }
+                    }
+                    Reply::Beat { phase, round } => {
+                        if c.state == CState::Idle && phase == ParticipantPhase::Selected {
+                            wire.send(
+                                Protocol::FetchSlice {
+                                    client: c.client,
+                                    device_id: c.device_id,
+                                    round,
+                                }
+                                .encode(),
+                            );
+                            c.state = CState::Fetching;
+                        }
+                    }
+                    Reply::Slice(s) => {
+                        if c.state == CState::Fetching {
+                            let miss = cfg.miss_permille > 0
+                                && decision(cfg.seed, SALT_MISS, s.round, c.device_id) % 1000
+                                    < cfg.miss_permille as u64;
+                            if miss {
+                                // Hard straggler: the report never
+                                // fires. Return to idle at once so the
+                                // miss leaves no cross-round residue —
+                                // heartbeats keep the registration
+                                // alive and round r+1 proceeds exactly
+                                // as if round r had completed.
+                                c.state = CState::Idle;
+                                continue;
+                            }
+                            // "Local training": evaluate the slice's
+                            // drift-inclusive cost — the same bits the
+                            // in-process SimBackend would produce.
+                            let energy_j = s.cost.eval(s.tasks);
+                            let mean_loss = 1.0 / (1.0 + s.model_version as f64);
+                            c.wake_at = now
+                                + decision(cfg.seed, SALT_DELAY, s.round, c.device_id)
+                                    % (cfg.max_delay + 1);
+                            c.result = Some(PendingReport {
+                                round: s.round,
+                                tasks: s.tasks,
+                                energy_j,
+                                mean_loss,
+                            });
+                            c.state = CState::Training;
+                        }
+                    }
+                    Reply::Accepted => {
+                        if c.state == CState::AwaitAck {
+                            let round = c.result.take().map(|r| r.round).unwrap_or(0);
+                            let churn = cfg.churn_permille > 0
+                                && decision(cfg.seed, SALT_CHURN, round, c.device_id) % 1000
+                                    < cfg.churn_permille as u64;
+                            if churn {
+                                c.generation += 1;
+                                c.client = client_id(c.generation, c.device_id);
+                                c.state = CState::Offline;
+                                c.wake_at = now + cfg.rejoin_delay;
+                            } else {
+                                c.state = CState::Idle;
+                            }
+                        }
+                    }
+                    Reply::Rejected { reason } => {
+                        // Recovery: drop stale work; an `Unknown` means
+                        // the registry expired us — re-rendezvous.
+                        c.result = None;
+                        if reason == RejectReason::Unknown {
+                            c.state = CState::Offline;
+                            c.wake_at = now + 1;
+                        } else if c.state != CState::Offline && c.state != CState::Joining {
+                            c.state = CState::Idle;
+                            send_heartbeat(c, wire);
+                        }
+                    }
+                }
+            }
+
+            // 2. Act on the current state.
+            match c.state {
+                CState::Offline if now >= c.wake_at => {
+                    wire.send(
+                        Protocol::Rendezvous {
+                            client: c.client,
+                            device_id: c.device_id,
+                        }
+                        .encode(),
+                    );
+                    c.state = CState::Joining;
+                }
+                CState::Idle
+                    if (now + c.hb_offset) % cfg.heartbeat_every.max(1) == 0 =>
+                {
+                    send_heartbeat(c, wire);
+                }
+                CState::Training if now >= c.wake_at => {
+                    if let Some(r) = c.result {
+                        wire.send(
+                            Protocol::ReportResult {
+                                client: c.client,
+                                device_id: c.device_id,
+                                round: r.round,
+                                tasks: r.tasks,
+                                energy_j: r.energy_j,
+                                sim_time_s: 0.0,
+                                mean_loss: r.mean_loss,
+                            }
+                            .encode(),
+                        );
+                        c.state = CState::AwaitAck;
+                    } else {
+                        // Defensive: no result to send — re-idle.
+                        c.state = CState::Idle;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_salt_sensitive() {
+        let a = decision(7, SALT_MISS, 3, 41);
+        assert_eq!(a, decision(7, SALT_MISS, 3, 41));
+        assert_ne!(a, decision(7, SALT_CHURN, 3, 41));
+        assert_ne!(a, decision(8, SALT_MISS, 3, 41));
+    }
+
+    #[test]
+    fn client_ids_separate_generation_and_device() {
+        assert_ne!(client_id(1, 5), client_id(2, 5));
+        assert_ne!(client_id(1, 5), client_id(1, 6));
+        assert_eq!(client_id(1, 5) & 0xFF_FFFF_FFFF, 5);
+    }
+}

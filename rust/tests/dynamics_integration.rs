@@ -10,10 +10,22 @@
 use std::path::Path;
 
 use fedzero::config::TrainConfig;
+use fedzero::coordinator::KnobSet;
 use fedzero::energy::power::Behavior;
 use fedzero::energy::profiles::BehaviorMix;
 use fedzero::fl::dynamics::{Availability, CostDrift, Dropout, DynamicsConfig};
 use fedzero::fl::Server;
+
+/// Configure dynamics through the shared knob seam (the per-knob
+/// `Server` setters were folded into `KnobSet` in the service PR).
+fn set_dynamics(server: &mut Server, dynamics: DynamicsConfig) {
+    server
+        .apply_knobs(KnobSet {
+            dynamics: Some(dynamics),
+            ..KnobSet::default()
+        })
+        .unwrap();
+}
 
 fn artifacts_present() -> bool {
     let ok = Path::new("artifacts/manifest.json").exists();
@@ -42,7 +54,7 @@ fn dropout_wastes_energy_but_training_survives() {
     }
     let mut server =
         Server::new(cfg(8), BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
-    server.set_dynamics(DynamicsConfig {
+    set_dynamics(&mut server, DynamicsConfig {
         availability: None,
         drift: None,
         dropout: Some(Dropout { p_fail: 0.4 }),
@@ -61,7 +73,7 @@ fn churn_produces_empty_and_partial_rounds() {
     }
     let mut server =
         Server::new(cfg(20), BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
-    server.set_dynamics(DynamicsConfig {
+    set_dynamics(&mut server, DynamicsConfig {
         availability: Some(Availability::new(10, 0.05, 0.6)), // mostly offline
         drift: None,
         dropout: None,
@@ -83,7 +95,7 @@ fn drift_changes_round_energy_over_time() {
     let run_total = |drift: Option<CostDrift>| -> Vec<f64> {
         let mut server =
             Server::new(cfg(12), BehaviorMix::Homogeneous(Behavior::Linear)).unwrap();
-        server.set_dynamics(DynamicsConfig {
+        set_dynamics(&mut server, DynamicsConfig {
             availability: None,
             drift,
             dropout: None,
@@ -110,7 +122,7 @@ fn mobile_preset_runs() {
         return;
     }
     let mut server = Server::new(cfg(6), BehaviorMix::Mixed).unwrap();
-    server.set_dynamics(DynamicsConfig::mobile(10));
+    set_dynamics(&mut server, DynamicsConfig::mobile(10));
     server.run().unwrap();
     assert_eq!(server.log().rows().len(), 6);
 }

@@ -5,7 +5,8 @@
 //! and platforms, so any ordering change must be a conscious one.
 
 use fedzero::coordinator::{
-    Coordinator, CoordinatorConfig, ManagedDevice, SimBackend,
+    Coordinator, CoordinatorConfig, DeadlineConfig, IncrementalConfig,
+    ManagedDevice, PipelineConfig, SimBackend,
 };
 use fedzero::metrics::{MetricsHub, RoundLog};
 use fedzero::sched::instance::Instance;
@@ -99,6 +100,68 @@ fn expose_text_is_byte_stable() {
     b.set("obs_sched_ns_p95", 250000.0);
     b.inc("rounds", 3);
     assert_eq!(a.expose_text(), b.expose_text(), "insertion order must not matter");
+}
+
+#[test]
+fn cfg_codec_bytes_are_pinned() {
+    // The persisted cfg is campaign identity: `resume`/`replay` rebuild
+    // the coordinator from these exact bytes, and the CI recovery diff
+    // compares stores byte-for-byte. The toggle-trio unification
+    // (on()/off()/From<bool> for pipeline/incremental, From<Option<f64>>
+    // for deadline) must not move a single byte of this encoding.
+    let off = CoordinatorConfig {
+        rounds: 12,
+        tasks_per_round: 40,
+        algo: "auto".into(),
+        participation: 0.5,
+        min_tasks: 2,
+        max_share: 0.25,
+        seed: 0xfeed,
+        target_loss: None,
+        shards: 1,
+        pipeline: PipelineConfig::off(),
+        incremental: IncrementalConfig::off(),
+        deadline: DeadlineConfig::off(),
+    };
+    assert_eq!(
+        fedzero::store::snapshot::cfg_to_json(&off).to_string(),
+        "{\"algo\":\"auto\",\"incremental\":false,\"max_share\":0.25,\
+         \"min_tasks\":2,\"participation\":0.5,\"pipeline\":false,\
+         \"rounds\":12,\"seed\":\"feed\",\"shards\":1,\"target_loss\":null,\
+         \"tasks_per_round\":40}"
+    );
+    let on = CoordinatorConfig {
+        algo: "mc2mkp".into(),
+        target_loss: Some(0.125),
+        shards: 3,
+        pipeline: PipelineConfig::on(),
+        incremental: IncrementalConfig::on(),
+        deadline: DeadlineConfig::on(7.5),
+        ..off
+    };
+    assert_eq!(
+        fedzero::store::snapshot::cfg_to_json(&on).to_string(),
+        "{\"algo\":\"mc2mkp\",\"deadline_s\":7.5,\"incremental\":true,\
+         \"max_share\":0.25,\"min_tasks\":2,\"participation\":0.5,\
+         \"pipeline\":true,\"rounds\":12,\"seed\":\"feed\",\"shards\":3,\
+         \"target_loss\":0.125,\"tasks_per_round\":40}"
+    );
+    // The unified toggle idiom is equivalent to the explicit
+    // constructors — `From` conversions may never drift from on()/off().
+    assert_eq!(PipelineConfig::from(true), PipelineConfig::on());
+    assert_eq!(PipelineConfig::from(false), PipelineConfig::off());
+    assert_eq!(IncrementalConfig::from(true), IncrementalConfig::on());
+    assert_eq!(IncrementalConfig::from(false), IncrementalConfig::off());
+    assert_eq!(DeadlineConfig::from(Some(7.5)), DeadlineConfig::on(7.5));
+    assert_eq!(DeadlineConfig::from(None), DeadlineConfig::off());
+    // And the codec round-trips the enabled states exactly.
+    let back = fedzero::store::snapshot::cfg_from_json(
+        &fedzero::store::snapshot::cfg_to_json(&on),
+    )
+    .unwrap();
+    assert_eq!(back.pipeline, on.pipeline);
+    assert_eq!(back.incremental, on.incremental);
+    assert_eq!(back.deadline, on.deadline);
 }
 
 fn sample_row() -> RoundLog {

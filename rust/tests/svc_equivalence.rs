@@ -1,0 +1,474 @@
+//! Service-layer equivalence and safety properties.
+//!
+//! Part 1 — registry interleavings: over thousands of random
+//! heartbeat/expiry/rejoin/fetch/report interleavings, the participant
+//! registry never loses an accepted report, never accepts the same
+//! (device, round) report twice (no double-counted energy), and never
+//! has an expired or unscheduled participant in `Selected`/`Training`.
+//!
+//! Part 2 — store-level digest equivalence: a campaign served over the
+//! loopback transport (with connection churn) journals the *same bytes*
+//! as the in-process `SimBackend` reference on the same fleet, and a
+//! loopback campaign killed mid-run resumes to the exact clean-run
+//! digest even with hard stragglers forcing partial rounds.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use fedzero::coordinator::{
+    BackendState, Coordinator, CoordinatorConfig, KnobSet, ManagedDevice,
+    RoundBackend, SimBackend,
+};
+use fedzero::fl::dynamics::DynamicsConfig;
+use fedzero::sched::costs::CostFn;
+use fedzero::store::journal::{campaign_digest, JournalEntry};
+use fedzero::store::{get, snapshot as snap, CampaignStore};
+use fedzero::svc::{
+    loopback_service, LoopbackService, ParticipantPhase, ParticipantRegistry,
+    ReportVerdict, ServiceConfig, SimClientsConfig,
+};
+use fedzero::testkit::{ensure, forall, Config, Gen, PropResult};
+use fedzero::util::json::Json;
+use fedzero::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Part 1: registry interleaving properties
+// ---------------------------------------------------------------------------
+
+const DEVICES: usize = 5;
+const EXPIRY: u64 = 3;
+
+/// One step of a random client/coordinator interleaving. `Join` doubles
+/// as churn: a device that already had a binding comes back under a new
+/// client id, superseding the old one.
+#[derive(Clone, Debug)]
+enum Op {
+    /// Advance the logical clock one tick.
+    Advance,
+    /// Rendezvous a (possibly new) client id for the device.
+    Join(usize),
+    /// Heartbeat from the device's current client.
+    Heartbeat(usize),
+    /// Heartbeat from a superseded client id — must be refused.
+    StaleHeartbeat(usize),
+    /// FetchSlice for the served round.
+    Fetch(usize),
+    /// Report for the served round.
+    Report(usize),
+    /// Report naming a round the service is not serving.
+    StaleReport(usize),
+    /// Heartbeat + fetch + report in sequence (the happy path, so
+    /// accepted reports are common in random runs).
+    Complete(usize),
+    /// Close the round and open the next with the bitmask's selection.
+    NextRound(u8),
+}
+
+struct OpsGen;
+
+impl Gen<Vec<Op>> for OpsGen {
+    fn generate(&self, rng: &mut Rng) -> Vec<Op> {
+        let n = 20 + rng.index(60);
+        (0..n)
+            .map(|_| {
+                let d = rng.index(DEVICES);
+                match rng.index(12) {
+                    0 | 1 => Op::Advance,
+                    2 | 3 => Op::Join(d),
+                    4 => Op::Heartbeat(d),
+                    5 => Op::StaleHeartbeat(d),
+                    6 => Op::Fetch(d),
+                    7 => Op::Report(d),
+                    8 => Op::StaleReport(d),
+                    9 | 10 => Op::Complete(d),
+                    _ => Op::NextRound(rng.below(32) as u8),
+                }
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<Op>) -> Vec<Vec<Op>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[v.len() / 2..].to_vec());
+            for i in 0..v.len().min(8) {
+                let mut w = v.clone();
+                w.remove(i);
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Phase sanity after any op: `Selected`/`Training`/`Done` only ever
+/// hold for devices the served round actually scheduled.
+fn phases_respect_selection(
+    reg: &ParticipantRegistry,
+    selection: &BTreeSet<usize>,
+) -> PropResult {
+    for (d, p) in reg.participants() {
+        if p.phase != ParticipantPhase::Standby {
+            ensure(
+                selection.contains(&d),
+                format!("device {d} is {:?} but was never scheduled", p.phase),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Heartbeat from the device's current binding; a `Selected` ack must
+/// name a scheduled device.
+fn try_heartbeat(
+    reg: &mut ParticipantRegistry,
+    client: u64,
+    d: usize,
+    round: usize,
+    selection: &BTreeSet<usize>,
+) -> PropResult {
+    if let Some((phase, r)) = reg.heartbeat(client, d) {
+        ensure(r == round, "heartbeat ack named a stale round")?;
+        if phase == ParticipantPhase::Selected {
+            ensure(
+                selection.contains(&d),
+                format!("device {d} selected but not scheduled"),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+fn try_fetch(
+    reg: &mut ParticipantRegistry,
+    client: u64,
+    d: usize,
+    round: usize,
+    selection: &BTreeSet<usize>,
+) -> PropResult {
+    if reg.fetch(client, d, round) {
+        ensure(
+            selection.contains(&d),
+            format!("device {d} training but not scheduled"),
+        )?;
+    }
+    Ok(())
+}
+
+fn try_report(
+    reg: &mut ParticipantRegistry,
+    client: u64,
+    d: usize,
+    round: usize,
+    selection: &BTreeSet<usize>,
+    accepted: &mut BTreeSet<(usize, usize)>,
+    accepted_this_round: &mut usize,
+) -> PropResult {
+    if reg.report(client, d, round) == ReportVerdict::Accepted {
+        ensure(
+            accepted.insert((d, round)),
+            format!("device {d} report double-accepted in round {round}"),
+        )?;
+        ensure(
+            selection.contains(&d),
+            format!("unscheduled device {d} reported"),
+        )?;
+        *accepted_this_round += 1;
+    }
+    Ok(())
+}
+
+fn run_interleaving(ops: &[Op]) -> PropResult {
+    let mut reg = ParticipantRegistry::new(EXPIRY);
+    let mut next_client: u64 = 1;
+    // Our model of the world: current binding per device, superseded
+    // ids, and every (device, round) report the registry accepted.
+    let mut cur: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut old: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut accepted: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut accepted_this_round = 0usize;
+    let mut round = 0usize;
+    let mut selection: BTreeSet<usize> = (0..DEVICES).collect();
+    let sel_vec: Vec<usize> = selection.iter().copied().collect();
+    reg.begin_round(round, &sel_vec);
+
+    for op in ops {
+        match *op {
+            Op::Advance => reg.advance(),
+            Op::Join(d) => {
+                let client = next_client;
+                next_client += 1;
+                if let Some(prev) = cur.insert(d, client) {
+                    old.insert(d, prev);
+                }
+                reg.rendezvous(client, d);
+            }
+            Op::StaleHeartbeat(d) => {
+                if let Some(&c) = old.get(&d) {
+                    ensure(
+                        reg.heartbeat(c, d).is_none(),
+                        format!("superseded client {c} of device {d} was heard"),
+                    )?;
+                }
+            }
+            Op::StaleReport(d) => {
+                if let Some(&c) = cur.get(&d) {
+                    let v = reg.report(c, d, round + 1);
+                    ensure(
+                        v != ReportVerdict::Accepted,
+                        format!("device {d} stale-round report accepted"),
+                    )?;
+                }
+            }
+            Op::Heartbeat(d) => {
+                if let Some(&c) = cur.get(&d) {
+                    try_heartbeat(&mut reg, c, d, round, &selection)?;
+                }
+            }
+            Op::Fetch(d) => {
+                if let Some(&c) = cur.get(&d) {
+                    try_fetch(&mut reg, c, d, round, &selection)?;
+                }
+            }
+            Op::Report(d) => {
+                if let Some(&c) = cur.get(&d) {
+                    try_report(
+                        &mut reg,
+                        c,
+                        d,
+                        round,
+                        &selection,
+                        &mut accepted,
+                        &mut accepted_this_round,
+                    )?;
+                }
+            }
+            Op::Complete(d) => {
+                if let Some(&c) = cur.get(&d) {
+                    try_heartbeat(&mut reg, c, d, round, &selection)?;
+                    try_fetch(&mut reg, c, d, round, &selection)?;
+                    try_report(
+                        &mut reg,
+                        c,
+                        d,
+                        round,
+                        &selection,
+                        &mut accepted,
+                        &mut accepted_this_round,
+                    )?;
+                }
+            }
+            Op::NextRound(mask) => {
+                let end = reg.finish_round();
+                ensure(
+                    end.reported == accepted_this_round,
+                    format!(
+                        "round {round}: {} accepted reports but {} counted at close",
+                        accepted_this_round, end.reported
+                    ),
+                )?;
+                accepted_this_round = 0;
+                round += 1;
+                selection = (0..DEVICES).filter(|d| mask & (1 << d) != 0).collect();
+                let sel_vec: Vec<usize> = selection.iter().copied().collect();
+                reg.begin_round(round, &sel_vec);
+                for (d, p) in reg.participants() {
+                    ensure(
+                        reg.clock().saturating_sub(p.last_seen) <= EXPIRY,
+                        format!("expired device {d} survived the round boundary"),
+                    )?;
+                }
+            }
+        }
+        phases_respect_selection(&reg, &selection)?;
+    }
+    Ok(())
+}
+
+#[test]
+fn registry_interleavings_preserve_report_invariants() {
+    let cfg = Config { cases: 1500, seed: 0x5EC, max_shrink: 200 };
+    forall(&cfg, &OpsGen, |ops| run_interleaving(ops));
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: store-level digest equivalence
+// ---------------------------------------------------------------------------
+
+const ROUNDS: usize = 10;
+const SNAPSHOT_EVERY: usize = 4;
+const FLEET_SIZE: usize = 6;
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("fedzero_svc_equiv").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Six devices across the cost families the slice codec must carry
+/// exactly: affine, quadratic, tabulated, power-law, plus a duplicated
+/// spec so class deduplication is exercised end to end.
+fn fleet() -> Vec<ManagedDevice> {
+    let affine = CostFn::Affine { fixed: 0.0, per_task: 1.0 };
+    let quad = CostFn::Quadratic { fixed: 0.5, a: 0.25, b: 0.5 };
+    let table = CostFn::from_table(&[(0, 0.0), (1, 1.5), (2, 2.5), (3, 4.5), (4, 5.0)]);
+    let sqrtish = CostFn::PowerLaw { fixed: 0.0, scale: 2.0, exponent: 0.6 };
+    vec![
+        ManagedDevice::abstract_resource(0, affine.clone(), 0, 4),
+        ManagedDevice::abstract_resource(1, affine, 0, 4),
+        ManagedDevice::abstract_resource(2, quad, 0, 5),
+        ManagedDevice::abstract_resource(3, table, 1, 4),
+        ManagedDevice::abstract_resource(4, sqrtish.clone(), 0, 6),
+        ManagedDevice::abstract_resource(5, sqrtish, 0, 6),
+    ]
+}
+
+fn cfg_for(seed: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        rounds: ROUNDS,
+        tasks_per_round: 8,
+        algo: "auto".to_string(),
+        participation: 0.8,
+        max_share: 1.0,
+        seed,
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn sim_cfg(seed: u64, churn: u32, miss: u32) -> SimClientsConfig {
+    SimClientsConfig {
+        seed,
+        churn_permille: churn,
+        miss_permille: miss,
+        ..SimClientsConfig::default()
+    }
+}
+
+fn service(seed: u64, churn: u32, miss: u32) -> LoopbackService {
+    loopback_service(
+        ServiceConfig::default(),
+        sim_cfg(seed, churn, miss),
+        (0..FLEET_SIZE).collect(),
+    )
+}
+
+fn new_stored<B: RoundBackend + BackendState>(
+    seed: u64,
+    dir: &Path,
+    backend: B,
+) -> Coordinator<B> {
+    let cfg = cfg_for(seed);
+    let mut c = Coordinator::new(cfg.clone(), fleet(), backend).unwrap();
+    KnobSet {
+        dynamics: Some(DynamicsConfig::mobile(FLEET_SIZE)),
+        ..KnobSet::default()
+    }
+    .apply_to(&mut c)
+    .unwrap();
+    let meta = Json::obj(vec![
+        ("snapshot_every", Json::Num(SNAPSHOT_EVERY as f64)),
+        ("cfg", snap::cfg_to_json(&cfg)),
+    ]);
+    let store = CampaignStore::create(dir, meta, c.snapshot_json()).unwrap();
+    c.attach_store(store).unwrap();
+    c
+}
+
+fn drive<B: RoundBackend + BackendState>(c: &mut Coordinator<B>, upto: usize) {
+    while c.rounds_run() < upto {
+        let _ = c.round_stored();
+    }
+}
+
+fn assert_entries_equal(ctx: &str, a: &[JournalEntry], b: &[JournalEntry]) {
+    assert_eq!(a.len(), b.len(), "{ctx}: campaign length");
+    for (ea, eb) in a.iter().zip(b) {
+        let at = format!("{ctx}, round {}", ea.round);
+        assert_eq!(ea.round, eb.round, "{at}: round index");
+        assert_eq!(ea.solver, eb.solver, "{at}: effective solver");
+        assert_eq!(ea.digest, eb.digest, "{at}: instance/schedule digest");
+        assert_eq!(ea.rng_after, eb.rng_after, "{at}: RNG state");
+        assert_eq!(
+            ea.row.energy_j.to_bits(),
+            eb.row.energy_j.to_bits(),
+            "{at}: energy"
+        );
+        assert_eq!(ea.row.participants, eb.row.participants, "{at}: participants");
+        assert_eq!(ea.row.tasks, eb.row.tasks, "{at}: tasks");
+    }
+    assert_eq!(campaign_digest(a), campaign_digest(b), "{ctx}: campaign digest");
+}
+
+/// The tentpole contract: a campaign served over the wire — churn and
+/// all — journals exactly what the in-process reference journals.
+#[test]
+fn loopback_campaign_digest_matches_in_process_reference() {
+    let seed = 0xD1;
+    let sim_dir = scratch("reference");
+    let svc_dir = scratch("loopback");
+
+    let mut sim = new_stored(seed, &sim_dir, SimBackend::new());
+    drive(&mut sim, ROUNDS);
+    let reference = CampaignStore::read(&sim_dir).unwrap().entries;
+
+    let mut svc = new_stored(seed, &svc_dir, service(seed, 400, 0));
+    drive(&mut svc, ROUNDS);
+    // The equivalence must hold *despite* real protocol traffic: clients
+    // actually churned and rejoined along the way.
+    assert!(
+        svc.backend().stats().counter("svc_rejoins") > 0,
+        "churn never fired — the equivalence test lost its teeth"
+    );
+    assert_eq!(svc.backend().stats().counter("svc_stragglers"), 0);
+    let served = CampaignStore::read(&svc_dir).unwrap().entries;
+
+    assert_entries_equal("loopback vs in-process", &reference, &served);
+    let _ = std::fs::remove_dir_all(&sim_dir);
+    let _ = std::fs::remove_dir_all(&svc_dir);
+}
+
+/// Kill a loopback campaign mid-run (with churn *and* hard stragglers
+/// forcing partial rounds) and resume it over a cold service — fresh
+/// registry, fresh tick clock, clients re-rendezvousing from scratch.
+/// The fleet's memoryless behavior makes the resumed journal
+/// bit-identical to the uninterrupted one.
+#[test]
+fn killed_loopback_campaign_resumes_to_clean_digest() {
+    let seed = 0xD2;
+    let (churn, miss) = (400, 150);
+    let clean_dir = scratch("kill_clean");
+    let crash_dir = scratch("kill_crash");
+
+    let mut clean = new_stored(seed, &clean_dir, service(seed, churn, miss));
+    drive(&mut clean, ROUNDS);
+    assert!(
+        clean.backend().stats().counter("svc_stragglers") > 0,
+        "no straggler fired — partial-round resume went untested"
+    );
+    let clean_entries = CampaignStore::read(&clean_dir).unwrap().entries;
+
+    {
+        let mut c = new_stored(seed, &crash_dir, service(seed, churn, miss));
+        drive(&mut c, 5);
+        // Dropping the coordinator IS the crash: the journal is fsync'd
+        // per round, nothing else is flushed.
+    }
+    let (store, contents) = CampaignStore::resume(&crash_dir).unwrap();
+    let cfg = snap::cfg_from_json(get(&contents.meta, "cfg").unwrap()).unwrap();
+    let mut resumed = Coordinator::restore(
+        cfg,
+        &contents.snapshot,
+        &contents.entries,
+        service(seed, churn, miss),
+        None,
+    )
+    .unwrap();
+    resumed.attach_store(store).unwrap();
+    drive(&mut resumed, ROUNDS);
+    let resumed_entries = CampaignStore::read(&crash_dir).unwrap().entries;
+
+    assert_entries_equal("kill/resume", &clean_entries, &resumed_entries);
+    let _ = std::fs::remove_dir_all(&clean_dir);
+    let _ = std::fs::remove_dir_all(&crash_dir);
+}
